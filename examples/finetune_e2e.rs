@@ -1,0 +1,108 @@
+//! End-to-end validation (DESIGN.md §6): fine-tune the ~100M-parameter
+//! model for a few hundred steps on the synthetic corpus through the
+//! FULL offload stack, in both ZeRO-Infinity-baseline and MemAscend
+//! modes, and record loss curves + throughput + peak memory.
+//!
+//!     make artifacts
+//!     cargo run --release --example finetune_e2e -- [model] [steps]
+//!
+//! model: tiny100m (default) | tiny25m | smoke; steps default 150.
+//! Results land in bench_out/e2e_<model>_<mode>.csv; the headline run
+//! recorded in EXPERIMENTS.md used `tiny100m 150` and `tiny25m 250`
+//! (Fig. 19 analog).
+
+use std::path::{Path, PathBuf};
+
+use memascend::config::{MemAscendFlags, TrainSpec};
+use memascend::runtime::Manifest;
+use memascend::train::{TrainOpts, Trainer};
+use memascend::util::human;
+
+fn run(
+    model: &str,
+    steps: usize,
+    flags: MemAscendFlags,
+) -> anyhow::Result<memascend::metrics::RunReport> {
+    let artifacts = PathBuf::from("artifacts").join(model);
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts/{model} missing — run `make artifacts`"
+    );
+    let manifest = Manifest::load(&artifacts.join("manifest.json"))?;
+    let storage = std::env::temp_dir().join(format!(
+        "ma-e2e-{model}-{}-{}",
+        flags.label(),
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&storage)?;
+    let spec = TrainSpec {
+        batch: manifest.config.batch,
+        seq: manifest.config.seq,
+        flags,
+        ..Default::default()
+    };
+    let opts = TrainOpts {
+        steps,
+        seed: 42,
+        log_every: 10,
+        loss_csv: Some(format!("bench_out/e2e_{model}_{}.csv", flags.label())),
+    };
+    let mut trainer = Trainer::new(&artifacts, &storage, spec, &opts)?;
+    let report = trainer.run(&opts)?;
+    std::fs::remove_dir_all(&storage).ok();
+    Ok(report)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("tiny100m");
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let both = args.iter().any(|a| a == "--both");
+
+    println!("== end-to-end fine-tuning: {model}, {steps} steps ==");
+    let ma = run(model, steps, MemAscendFlags::memascend())?;
+    summarize("memascend", &ma);
+
+    if both {
+        let zi = run(model, steps, MemAscendFlags::baseline())?;
+        summarize("zero-infinity", &zi);
+        let identical = zi
+            .steps
+            .iter()
+            .zip(&ma.steps)
+            .all(|(a, b)| a.loss.to_bits() == b.loss.to_bits());
+        println!("\nconvergence parity (Fig. 19): bit-identical = {identical}");
+        println!(
+            "throughput: MA {:.1} vs ZI {:.1} tokens/s ({:+.1}%)",
+            ma.tokens_per_sec(),
+            zi.tokens_per_sec(),
+            (ma.tokens_per_sec() / zi.tokens_per_sec() - 1.0) * 100.0
+        );
+        println!(
+            "peak host memory: MA {} vs ZI {}",
+            human::bytes(ma.peak_sysmem_bytes),
+            human::bytes(zi.peak_sysmem_bytes)
+        );
+    }
+    Ok(())
+}
+
+fn summarize(label: &str, r: &memascend::metrics::RunReport) {
+    let t_io: f64 = r.steps.iter().map(|s| s.io_secs).sum();
+    let t_all: f64 = r.steps.iter().map(|s| s.step_secs).sum();
+    let t_ovf: f64 = r.steps.iter().map(|s| s.overflow_check_secs).sum();
+    let t_opt: f64 = r.steps.iter().map(|s| s.optim_secs).sum();
+    println!("\n--- {label} ---");
+    println!("loss {:.4} -> {:.4}", r.steps[0].loss, r.mean_tail_loss(10));
+    println!("throughput {:.1} tokens/s", r.tokens_per_sec());
+    println!("peak host memory {}", human::bytes(r.peak_sysmem_bytes));
+    println!("SSD traffic/step {}", human::bytes(r.io_bytes_per_step));
+    println!(
+        "time split: io {:.1}% overflow {:.1}% optim {:.1}% compute {:.1}%",
+        t_io / t_all * 100.0,
+        t_ovf / t_all * 100.0,
+        t_opt / t_all * 100.0,
+        (t_all - t_io - t_ovf - t_opt) / t_all * 100.0
+    );
+    let _ = Path::new(".");
+}

@@ -1,0 +1,83 @@
+//! Memory planner: given a hardware budget, what can you train?
+//!
+//!     cargo run --release --example memory_planner -- [dram_gib] [hw]
+//!
+//! For every model preset, finds the maximum context length (batch 1)
+//! and the maximum batch size (ctx 4096) that fit the system-memory
+//! budget under ZeRO-Infinity vs MemAscend — the paper's §V-B/§V-C
+//! claims ("16,384 -> 131,072 tokens, batch 4 -> 32 under 128 GiB")
+//! as a planning tool.
+
+use memascend::accounting::sysmem::peak_sysmem;
+use memascend::config::hardware::HardwareSpec;
+use memascend::config::presets::PAPER_DENSE;
+use memascend::config::{MemAscendFlags, TrainSpec};
+use memascend::util::bench::Table;
+
+fn fits(model: &memascend::config::ModelSpec, spec: &TrainSpec, hw: &HardwareSpec, cap: f64) -> bool {
+    peak_sysmem(model, spec, hw).gib() <= cap
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cap: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(128.0);
+    let hw = HardwareSpec::by_name(args.get(1).map(String::as_str).unwrap_or("config1"))?;
+
+    println!("== memory planner: {cap} GiB system-memory budget on {} ==\n", hw.name);
+    let ctxs = [4096usize, 8192, 16384, 32768, 65536, 131072, 262144];
+    let batches = [1usize, 2, 4, 8, 16, 32, 64, 96];
+
+    let mut t = Table::new(vec![
+        "model",
+        "max ctx ZI",
+        "max ctx MA",
+        "max batch ZI",
+        "max batch MA",
+    ]);
+    for m in PAPER_DENSE {
+        let max_ctx = |flags: MemAscendFlags| {
+            ctxs.iter()
+                .rev()
+                .find(|&&c| {
+                    let s = TrainSpec {
+                        batch: 1,
+                        seq: c,
+                        ranks: 2,
+                        prefetch_depth: 1,
+                        flags,
+                        ..Default::default()
+                    };
+                    fits(m, &s, hw, cap)
+                })
+                .copied()
+        };
+        let max_batch = |flags: MemAscendFlags| {
+            batches
+                .iter()
+                .rev()
+                .find(|&&b| {
+                    let s = TrainSpec {
+                        batch: b,
+                        seq: 4096,
+                        ranks: 2,
+                        prefetch_depth: 1,
+                        flags,
+                        ..Default::default()
+                    };
+                    fits(m, &s, hw, cap)
+                })
+                .copied()
+        };
+        let fmt = |v: Option<usize>| v.map(|x| x.to_string()).unwrap_or_else(|| "none".into());
+        t.row(vec![
+            m.name.to_string(),
+            fmt(max_ctx(MemAscendFlags::baseline())),
+            fmt(max_ctx(MemAscendFlags::memascend())),
+            fmt(max_batch(MemAscendFlags::baseline())),
+            fmt(max_batch(MemAscendFlags::memascend())),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("paper §V-B/§V-C (Qwen2.5-7B @128 GiB): ctx 16,384 -> 131,072; batch 4 -> 32");
+    Ok(())
+}

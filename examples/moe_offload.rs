@@ -1,0 +1,63 @@
+//! MoE offloading demo (paper §VI-B-2e, Fig. 18): why the monolithic
+//! buffer pool collapses on sparse models, shown with the real pool
+//! constructors over Qwen3-30B-A3B's actual tensor inventory.
+//!
+//!     cargo run --release --example moe_offload
+
+use std::sync::Arc;
+
+use memascend::bufpool::{AdaptivePool, MonolithicPool, ParamBufferPool};
+use memascend::config::presets::QWEN3_30B_A3B;
+use memascend::dtype::DType;
+use memascend::pinned::{AlignedAllocator, MemoryTracker, Mode};
+use memascend::tensors;
+use memascend::util::human;
+
+fn main() {
+    let m = &QWEN3_30B_A3B;
+    println!(
+        "== {} — {:.1}B params, {} experts/layer, {} active ==\n",
+        m.name,
+        m.param_count() as f64 / 1e9,
+        m.n_experts,
+        m.experts_per_token
+    );
+
+    let inv = tensors::inventory(m);
+    let expert_elems = m.hidden * m.expert_intermediate;
+    let embed_elems = m.vocab * m.hidden;
+    println!(
+        "largest tensor (embedding): {} | one expert projection: {} ({}x smaller)",
+        human::bytes((embed_elems * 2) as u64),
+        human::bytes((expert_elems * 2) as u64),
+        embed_elems / expert_elems
+    );
+    println!(
+        "offloadable tensors per block: {} (dense models have ~7)\n",
+        inv.iter().filter(|t| t.layer == 0 && t.offloadable()).count()
+    );
+
+    let alloc = AlignedAllocator::new(Mode::Virtual, Arc::new(MemoryTracker::new()));
+    let mono = MonolithicPool::new(m, 1, DType::F16, &alloc);
+    let adap = AdaptivePool::new(m, 1, DType::F16, &alloc);
+    println!(
+        "monolithic pool (every slot embedding-sized): {}",
+        human::bytes(mono.stats().pool_bytes as u64)
+    );
+    println!(
+        "adaptive pool   (per-shape-class slots):      {}",
+        human::bytes(adap.stats().pool_bytes as u64)
+    );
+    println!(
+        "reduction: {:.1}% (paper Fig. 18: ~71.9% end-to-end)\n",
+        (1.0 - adap.stats().pool_bytes as f64 / mono.stats().pool_bytes as f64) * 100.0
+    );
+
+    println!("adaptive subpool layout:");
+    for (class, slot, n) in adap.layout() {
+        println!(
+            "  {class:?}: {n:>4} slots x {}",
+            human::bytes(slot as u64)
+        );
+    }
+}

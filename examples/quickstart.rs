@@ -1,0 +1,45 @@
+//! Quickstart: train the smoke model through the full SSD-offload
+//! stack and print a run report + memory ledger.
+//!
+//!     make artifacts
+//!     cargo run --release --example quickstart
+//!
+//! Everything a real run does happens here: fp16 weights + fp32
+//! optimizer states on the simulated SSD, layer-streamed PJRT forward/
+//! backward, fused overflow check, dynamic loss scaling, CPU AdamW.
+
+use std::path::Path;
+
+use memascend::config::{MemAscendFlags, TrainSpec};
+use memascend::train::{TrainOpts, Trainer};
+use memascend::util::human;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts/smoke");
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let storage = std::env::temp_dir().join(format!("ma-quickstart-{}", std::process::id()));
+    std::fs::create_dir_all(&storage)?;
+
+    let spec = TrainSpec {
+        batch: 2,
+        seq: 16,
+        flags: MemAscendFlags::memascend(),
+        init_loss_scale: 1024.0,
+        ..Default::default()
+    };
+    let opts = TrainOpts { steps: 30, seed: 42, log_every: 5, loss_csv: None };
+    let mut trainer = Trainer::new(artifacts, &storage, spec, &opts)?;
+    let report = trainer.run(&opts)?;
+
+    println!("\n=== quickstart report ===");
+    println!("loss: {:.4} -> {:.4}", report.steps[0].loss, report.final_loss());
+    println!("throughput: {:.0} tokens/s", report.tokens_per_sec());
+    println!("peak host memory: {}", human::bytes(report.peak_sysmem_bytes));
+    println!("SSD traffic/step: {}", human::bytes(report.io_bytes_per_step));
+    println!("\nmemory ledger:\n{}", trainer.engine.tracker.report());
+    std::fs::remove_dir_all(&storage).ok();
+    Ok(())
+}

@@ -1,0 +1,195 @@
+"""AOT export: lower every model stage + standalone kernels to HLO text.
+
+Interchange is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla_extension
+0.5.1 under the Rust `xla` crate rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --config smoke --out-dir ../artifacts
+    python -m compile.aot --all --out-dir ../artifacts
+
+Outputs, per config C:
+    artifacts/C/<stage>.hlo.txt     one module per stage
+    artifacts/C/manifest.json       shapes/dtypes/arg-order contract
+                                    consumed by rust `runtime::manifest`
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, ModelConfig
+from .kernels.adam import fused_adam_step
+from .kernels.overflow import fused_overflow_check
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def stage_signatures(cfg: ModelConfig):
+    """Argument/result signatures for every stage, in PJRT call order."""
+    b, s, h, v = cfg.batch, cfg.seq, cfg.hidden, cfg.vocab
+    bw = model.block_weight_shapes(cfg)
+    block_args = [("h", _spec((b, s, h)))] + [
+        (n, _spec(bw[n])) for n in model.BLOCK_WEIGHT_NAMES
+    ]
+    c = cfg.chunk
+    return {
+        "embed_fwd": {
+            "args": [("tokens", _spec((b, s), "i32")), ("table", _spec((v, h)))],
+            "results": [("h", _spec((b, s, h)))],
+        },
+        "block_fwd": {
+            "args": block_args,
+            "results": [("h_out", _spec((b, s, h)))],
+        },
+        "block_bwd": {
+            "args": block_args + [("d_out", _spec((b, s, h)))],
+            "results": [("d_h", _spec((b, s, h)))]
+            + [("d_" + n, _spec(bw[n])) for n in model.BLOCK_WEIGHT_NAMES],
+        },
+        "head_fwd_bwd": {
+            "args": [
+                ("h", _spec((b, s, h))),
+                ("final_norm", _spec((h,))),
+                ("w_head", _spec((h, v))),
+                ("labels", _spec((b, s), "i32")),
+                ("scale", _spec((1,))),
+            ],
+            "results": [
+                ("loss", _spec((1,))),
+                ("d_h", _spec((b, s, h))),
+                ("d_final_norm", _spec((h,))),
+                ("d_w_head", _spec((h, v))),
+            ],
+        },
+        "embed_bwd": {
+            "args": [("tokens", _spec((b, s), "i32")), ("d_h", _spec((b, s, h)))],
+            "results": [("d_table", _spec((v, h)))],
+        },
+        "adam_step": {
+            "args": [
+                ("bias_corr", _spec((2,))),
+                ("p", _spec((c,))),
+                ("g", _spec((c,))),
+                ("m", _spec((c,))),
+                ("v", _spec((c,))),
+            ],
+            "results": [("p", _spec((c,))), ("m", _spec((c,))), ("v", _spec((c,)))],
+        },
+        "overflow_check": {
+            "args": [("x", _spec((c,)))],
+            "results": [("flag", _spec((1,), "i32"))],
+        },
+    }
+
+
+def _as_shape(spec):
+    dt = {"f32": jnp.float32, "i32": jnp.int32}[spec["dtype"]]
+    return jax.ShapeDtypeStruct(tuple(spec["shape"]), dt)
+
+
+def stage_fns(cfg: ModelConfig):
+    """The callables behind each stage, matching stage_signatures order."""
+
+    def adam(bc, p, g, m, v):
+        return fused_adam_step(
+            p, g, m, v, bc,
+            lr=1.0e-3, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0,
+            block=min(cfg.chunk, 1 << 16),
+        )
+
+    # NOTE: adam hyper-params are baked trace-time; the Rust coordinator's
+    # native optimizer is the default path, and the HLO artifact is the
+    # parity/demo path (tests assert both agree for these constants).
+    return {
+        "embed_fwd": model.embed_fwd,
+        "block_fwd": functools.partial(model.block_fwd, cfg),
+        "block_bwd": functools.partial(model.block_bwd, cfg),
+        "head_fwd_bwd": functools.partial(model.head_fwd_bwd, cfg),
+        "embed_bwd": functools.partial(model.embed_bwd, cfg),
+        "adam_step": adam,
+        "overflow_check": lambda x: fused_overflow_check(
+            x, block=min(cfg.chunk, 1 << 16)
+        ),
+    }
+
+
+def export_config(cfg: ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    sigs = stage_signatures(cfg)
+    fns = stage_fns(cfg)
+    manifest = {
+        "config": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "hidden": cfg.hidden,
+            "intermediate": cfg.intermediate,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "kv_heads": cfg.kv_heads,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+            "chunk": cfg.chunk,
+            "param_count": cfg.param_count(),
+            "norm_eps": cfg.norm_eps,
+            "rope_theta": cfg.rope_theta,
+        },
+        "block_weight_names": list(model.BLOCK_WEIGHT_NAMES),
+        "adam": {"lr": 1.0e-3, "beta1": 0.9, "beta2": 0.999,
+                 "eps": 1e-8, "weight_decay": 0.0},
+        "stages": {},
+    }
+    for name, sig in sigs.items():
+        example = [_as_shape(s) for _, s in sig["args"]]
+        lowered = jax.jit(fns[name]).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["stages"][name] = {
+            "file": fname,
+            "args": [{"name": n, **s} for n, s in sig["args"]],
+            "results": [{"name": n, **s} for n, s in sig["results"]],
+        }
+        print(f"  [{cfg.name}] {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", choices=sorted(CONFIGS), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    names = sorted(CONFIGS) if args.all or not args.config else [args.config]
+    for name in names:
+        cfg = CONFIGS[name]
+        print(f"exporting {name} ...")
+        export_config(cfg, os.path.join(args.out_dir, name))
+    print("AOT export complete.")
+
+
+if __name__ == "__main__":
+    main()

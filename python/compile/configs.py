@@ -1,0 +1,68 @@
+"""Model/export configurations shared by the AOT pipeline and tests.
+
+Three runnable configs (executed on the CPU PJRT client by the Rust
+coordinator) plus the full-scale *inventory-only* architectures used by
+the accounting engine live on the Rust side (`config/presets.rs`); the
+two lists are kept consistent by `tests/test_aot.py`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    hidden: int
+    intermediate: int
+    layers: int
+    heads: int
+    kv_heads: int
+    seq: int          # export-time context length
+    batch: int        # export-time micro-batch per rank
+    norm_eps: float = 1e-6
+    rope_theta: float = 10000.0
+    # flat-buffer chunk sizes for the standalone adam/overflow artifacts
+    chunk: int = 1 << 16
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Total parameters (matches tensors::inventory on the Rust side)."""
+        h, f, v = self.hidden, self.intermediate, self.vocab
+        per_block = (
+            h * h + h * self.kv_dim + h * self.kv_dim + h * h  # q k v o
+            + 3 * h * f                                         # gate/up/down
+            + 2 * h                                             # two norms
+        )
+        return v * h + self.layers * per_block + h + h * v      # embed+final norm+head
+
+
+# smoke: integration-test scale — compiles in ms, runs anywhere.
+SMOKE = ModelConfig(
+    name="smoke", vocab=64, hidden=32, intermediate=64, layers=2,
+    heads=2, kv_heads=2, seq=16, batch=2, chunk=1 << 10,
+)
+
+# tiny-25m: convergence-curve scale (Fig. 19 reproduction).
+TINY25M = ModelConfig(
+    name="tiny25m", vocab=4096, hidden=384, intermediate=1024, layers=8,
+    heads=6, kv_heads=6, seq=128, batch=1, chunk=1 << 16,
+)
+
+# tiny-100m: the end-to-end validation model (~100M params).
+TINY100M = ModelConfig(
+    name="tiny100m", vocab=8192, hidden=768, intermediate=2048, layers=12,
+    heads=12, kv_heads=12, seq=128, batch=1, chunk=1 << 16,
+)
+
+CONFIGS = {c.name: c for c in (SMOKE, TINY25M, TINY100M)}

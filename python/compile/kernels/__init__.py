@@ -1,0 +1,27 @@
+"""L1 Pallas kernels for MemAscend's fused hot paths.
+
+Each kernel expresses one of the paper's fusion opportunities as a
+single-pass Pallas kernel (interpret=True so the AOT-lowered HLO runs
+on the CPU PJRT client):
+
+- ``overflow``       — fused IEEE-754 exponent-mask overflow check
+                       (paper Algorithm 1, replaces the isinf/isnan chain)
+- ``adam``           — fused AdamW step (DeepSpeed CPU-optimizer analog)
+- ``cross_entropy``  — fused softmax-CE loss + logit-gradient (Liger analog)
+- ``rmsnorm``        — fused RMSNorm forward (Liger analog)
+- ``ref``            — pure-jnp oracles for all of the above
+"""
+
+from .adam import fused_adam_step
+from .cross_entropy import cross_entropy_loss, fused_cross_entropy
+from .overflow import fused_overflow_check
+from .rmsnorm import fused_rmsnorm, rmsnorm
+
+__all__ = [
+    "fused_adam_step",
+    "cross_entropy_loss",
+    "fused_cross_entropy",
+    "fused_overflow_check",
+    "fused_rmsnorm",
+    "rmsnorm",
+]

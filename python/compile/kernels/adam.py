@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: fused Adam/AdamW step (DeepSpeed CPU-optimizer analog).
+
+ZeRO-Infinity runs the optimizer on the host: a fused C++/AVX kernel
+updates contiguous fp32 master parameters + momentum/variance against
+fp16 gradients.  This kernel is the same fusion expressed in Pallas:
+one pass reads (p, g, m, v) blocks from HBM into VMEM, applies the full
+AdamW update (bias-corrected, decoupled weight decay), and writes
+(p', m', v') back — no intermediate tensors ever materialize.
+
+Hyper-parameters ``lr/beta1/beta2/eps/weight_decay`` are trace-time
+constants (they are fixed for a training run); the *step-dependent*
+bias corrections are passed as a (2,)-element array so one compiled
+artifact serves every step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1 << 16
+
+
+def _adam_kernel(bc_ref, p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref, vo_ref,
+                 *, lr, beta1, beta2, eps, weight_decay):
+    p = p_ref[...]
+    g = g_ref[...]
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * (g * g)
+    # bc_ref = [1 - beta1^t, 1 - beta2^t]
+    m_hat = m / bc_ref[0]
+    v_hat = v / bc_ref[1]
+    update = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p
+    po_ref[...] = p - lr * update
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lr", "beta1", "beta2", "eps", "weight_decay", "block"),
+)
+def fused_adam_step(
+    p: jax.Array,
+    g: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    bias_corrections: jax.Array,
+    *,
+    lr: float = 1e-4,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    block: int = DEFAULT_BLOCK,
+):
+    """Fused AdamW over flat fp32 buffers. Returns (p', m', v').
+
+    ``bias_corrections`` is f32[2] = [1-beta1^t, 1-beta2^t] for step t.
+    Lengths must be a multiple of ``block`` (tail chunks are padded with
+    g=m=v=p=0, which the update maps to 0 — padding stays inert).
+    """
+    (n,) = p.shape
+    if n % block != 0:
+        raise ValueError(f"length {n} not a multiple of block {block}")
+    kernel = functools.partial(
+        _adam_kernel, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+        weight_decay=weight_decay,
+    )
+    grid = (n // block,)
+    blk = pl.BlockSpec((block,), lambda i: (i,))
+    scalar = pl.BlockSpec((2,), lambda i: (0,))
+    out = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[scalar, blk, blk, blk, blk],
+        out_specs=[blk, blk, blk],
+        out_shape=[out, out, out],
+        interpret=True,
+    )(bias_corrections, p, g, m, v)

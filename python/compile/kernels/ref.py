@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: pytest + hypothesis sweep
+shapes/dtypes and assert the Pallas kernels match these references
+(`test_kernels.py`).  They intentionally mirror the *baseline*
+formulations the paper describes (multi-op overflow chain, unfused
+Adam, unfused CE/RMSNorm) so the parity tests double as proof that
+fusion changes nothing numerically.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def overflow_check_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Baseline isinf/isnan chain (paper Fig. 3, steps 2-6)."""
+    a = jnp.abs(x)                     # step 2: abs temporary
+    inf_any = jnp.any(jnp.isinf(a))    # steps 2-3: bool tensor + reduce
+    nan_any = jnp.any(jnp.isnan(x))    # steps 4-5: bool tensor + reduce
+    return (inf_any | nan_any).astype(jnp.int32).reshape(1)
+
+
+def adam_step_ref(p, g, m, v, step, *, lr=1e-4, beta1=0.9, beta2=0.999,
+                  eps=1e-8, weight_decay=0.0):
+    """Textbook AdamW with decoupled weight decay (DeepSpeed semantics)."""
+    p = p.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m / (1.0 - beta1**step)
+    v_hat = v / (1.0 - beta2**step)
+    p = p - lr * (m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p)
+    return p, m, v
+
+
+def cross_entropy_ref(logits, labels):
+    """Unfused CE: materializes log-softmax and softmax separately."""
+    logits = logits.astype(jnp.float32)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - logits.max(-1, keepdims=True)), -1))
+    lse = lse + logits.max(-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = lse - picked
+    soft = jnp.exp(logits - logits.max(-1, keepdims=True))
+    soft = soft / soft.sum(-1, keepdims=True)
+    onehot = jnp.zeros_like(logits).at[jnp.arange(logits.shape[0]), labels].set(1.0)
+    return loss, soft - onehot
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    x = x.astype(jnp.float32)
+    r = 1.0 / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x * r * w

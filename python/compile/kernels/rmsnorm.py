@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: fused RMSNorm (Liger-Kernel analog).
+
+Baseline frameworks compute RMSNorm as square -> mean -> rsqrt ->
+multiply -> scale, materializing intermediates between kernel launches.
+The fused kernel keeps one row block in VMEM and emits the normalized,
+scaled output in a single pass.  A ``custom_vjp`` wrapper provides the
+analytic backward pass so L2 transformer blocks can use the fused
+forward inside ``jax.vjp`` (gradient-checkpoint recomputation included).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)  # (1, H)
+    r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    o_ref[...] = x * r * w_ref[...]
+
+
+def fused_rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Fused RMSNorm. x f32[T, H], w f32[H] -> f32[T, H]."""
+    t, h = x.shape
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    return fused_rmsnorm(x, w, eps)
+
+
+def _rms_fwd(x, w, eps):
+    return fused_rmsnorm(x, w, eps), (x, w)
+
+
+def _rms_bwd(eps, res, dy):
+    x, w = res
+    h = x.shape[-1]
+    r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    dyw = dy * w
+    # d/dx [x * r(x) * w]: product rule through r = (mean(x^2)+eps)^-1/2
+    dx = r * dyw - (r**3 / h) * x * jnp.sum(dyw * x, axis=-1, keepdims=True)
+    dw = jnp.sum(dy * x * r, axis=tuple(range(x.ndim - 1)))
+    return dx, dw
+
+
+rmsnorm.defvjp(_rms_fwd, _rms_bwd)

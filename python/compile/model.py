@@ -1,0 +1,146 @@
+"""L2: Llama-style decoder fwd/bwd in JAX, staged for layer-wise offload.
+
+The Rust coordinator streams one transformer block's weights at a time
+from the (simulated) SSD, exactly as ZeRO-Infinity does — so the model
+is exported **per stage** rather than as one monolithic module:
+
+    embed_fwd     tokens, embedding table          -> hidden states
+    block_fwd     hidden, block weights            -> hidden' (also used
+                  for gradient-checkpoint recomputation)
+    block_bwd     hidden, block weights, d_hidden' -> d_hidden, d_weights
+    head_fwd_bwd  hidden, final-norm w, head w,
+                  labels, loss-scale               -> loss, d_hidden,
+                                                      d_norm, d_head
+    embed_bwd     tokens, d_hidden                 -> d_table
+
+Each stage is jit-lowered once and serialized as HLO *text*
+(`aot.py`); the runtime executes stages through PJRT with no Python.
+
+Fused L1 kernels on the path: the LM head uses the Pallas fused
+softmax-CE (`kernels.cross_entropy`) through its custom_vjp, and block
+norms use the Pallas fused RMSNorm (`kernels.rmsnorm`), whose analytic
+backward is traced into `block_bwd`.
+
+Canonical per-block weight order (must match rust `tensors::BLOCK_ORDER`):
+    [attn_norm, wq, wk, wv, wo, ffn_norm, w_gate, w_up, w_down]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.cross_entropy import cross_entropy_loss
+from .kernels.rmsnorm import rmsnorm
+
+BLOCK_WEIGHT_NAMES = (
+    "attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate", "w_up", "w_down",
+)
+
+
+def block_weight_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    h, f, kv = cfg.hidden, cfg.intermediate, cfg.kv_dim
+    return {
+        "attn_norm": (h,),
+        "wq": (h, h),
+        "wk": (h, kv),
+        "wv": (h, kv),
+        "wo": (h, h),
+        "ffn_norm": (h,),
+        "w_gate": (h, f),
+        "w_up": (h, f),
+        "w_down": (f, h),
+    }
+
+
+def _rope(x: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding over [B, S, n, head_dim]."""
+    b, s, n, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]  # [S, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def block_fwd(cfg: ModelConfig, h, attn_norm, wq, wk, wv, wo,
+              ffn_norm, w_gate, w_up, w_down):
+    """One pre-norm decoder block: GQA causal attention + SwiGLU MLP."""
+    b, s, hd = h.shape
+    nh, nkv, dh = cfg.heads, cfg.kv_heads, cfg.head_dim
+
+    # --- attention ---
+    x = rmsnorm(h.reshape(-1, hd), attn_norm, cfg.norm_eps).reshape(b, s, hd)
+    q = (x @ wq).reshape(b, s, nh, dh)
+    k = (x @ wk).reshape(b, s, nkv, dh)
+    v = (x @ wv).reshape(b, s, nkv, dh)
+    q = _rope(q, cfg.rope_theta)
+    k = _rope(k, cfg.rope_theta)
+    if nkv != nh:  # grouped-query attention: broadcast kv heads
+        rep = nh // nkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqnd,bknd->bnqk", q, k) / jnp.sqrt(float(dh))
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(causal[None, None, :, :], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bnqk,bknd->bqnd", attn, v).reshape(b, s, hd)
+    h = h + ctx @ wo
+
+    # --- SwiGLU MLP ---
+    x = rmsnorm(h.reshape(-1, hd), ffn_norm, cfg.norm_eps).reshape(b, s, hd)
+    gated = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h + gated @ w_down
+
+
+def block_bwd(cfg: ModelConfig, h, *ws_and_dout):
+    """VJP of block_fwd: (h, ws..., d_out) -> (d_h, d_ws...)."""
+    *ws, dout = ws_and_dout
+    _, pullback = jax.vjp(lambda hh, *ww: block_fwd(cfg, hh, *ww), h, *ws)
+    return pullback(dout)
+
+
+def embed_fwd(tokens, table):
+    return table[tokens]
+
+
+def embed_bwd(cfg: ModelConfig, tokens, dh):
+    table_shape = (cfg.vocab, cfg.hidden)
+    flat_tok = tokens.reshape(-1)
+    flat_dh = dh.reshape(-1, cfg.hidden)
+    return jnp.zeros(table_shape, jnp.float32).at[flat_tok].add(flat_dh)
+
+
+def head_fwd_bwd(cfg: ModelConfig, h, norm_w, w_head, labels, scale):
+    """Final norm + LM head + fused CE, forward and backward in one stage.
+
+    Returns (mean unscaled loss[1], d_h, d_norm_w, d_w_head) where the
+    gradients carry the dynamic loss scale (``scale`` f32[1]) so fp16
+    gradient casts on the Rust side land in representable range.
+    """
+    def loss_fn(hh, nw, wh):
+        hn = rmsnorm(hh.reshape(-1, cfg.hidden), nw, cfg.norm_eps)
+        logits = hn @ wh                      # [B*S, V]
+        return cross_entropy_loss(logits, labels.reshape(-1))
+
+    loss, pullback = jax.vjp(loss_fn, h, norm_w, w_head)
+    dh, dnorm, dhead = pullback(scale[0])
+    return loss.reshape(1), dh, dnorm, dhead
+
+
+def full_forward_loss(cfg: ModelConfig, tokens, labels, params):
+    """Reference whole-model loss (used by python tests only).
+
+    ``params`` = (table, [block weight tuples...], final_norm, w_head).
+    """
+    table, blocks, final_norm, w_head = params
+    h = embed_fwd(tokens, table)
+    for ws in blocks:
+        h = block_fwd(cfg, h, *ws)
+    loss, *_ = head_fwd_bwd(
+        cfg, h, final_norm, w_head, labels, jnp.ones((1,), jnp.float32)
+    )
+    return loss[0]

@@ -1,0 +1,77 @@
+"""AOT export contract tests: manifest integrity + HLO text format."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.configs import CONFIGS, SMOKE
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "smoke")
+
+
+@pytest.fixture(scope="module")
+def smoke_artifacts(tmp_path_factory):
+    """Use the checked-out artifacts if present, else export fresh."""
+    if os.path.exists(os.path.join(ART, "manifest.json")):
+        return ART
+    out = str(tmp_path_factory.mktemp("art") / "smoke")
+    aot.export_config(SMOKE, out)
+    return out
+
+
+def test_signatures_cover_all_stages():
+    sigs = aot.stage_signatures(SMOKE)
+    fns = aot.stage_fns(SMOKE)
+    assert set(sigs) == set(fns) == {
+        "embed_fwd", "block_fwd", "block_bwd", "head_fwd_bwd",
+        "embed_bwd", "adam_step", "overflow_check",
+    }
+
+
+def test_block_bwd_signature_is_fwd_plus_cotangent():
+    sigs = aot.stage_signatures(SMOKE)
+    fwd = sigs["block_fwd"]["args"]
+    bwd = sigs["block_bwd"]["args"]
+    assert bwd[:-1] == fwd
+    assert bwd[-1][0] == "d_out"
+    assert [r["shape"] for r in
+            [dict(name=n, **s) for n, s in sigs["block_bwd"]["results"]]] == [
+        s["shape"] for _, s in fwd
+    ]
+
+
+def test_manifest_matches_signatures(smoke_artifacts):
+    with open(os.path.join(smoke_artifacts, "manifest.json")) as f:
+        man = json.load(f)
+    sigs = aot.stage_signatures(SMOKE)
+    assert set(man["stages"]) == set(sigs)
+    for name, st in man["stages"].items():
+        assert [a["name"] for a in st["args"]] == [n for n, _ in sigs[name]["args"]]
+        assert [a["shape"] for a in st["args"]] == [
+            s["shape"] for _, s in sigs[name]["args"]]
+        path = os.path.join(smoke_artifacts, st["file"])
+        assert os.path.exists(path)
+    assert man["config"]["param_count"] == SMOKE.param_count()
+    assert man["block_weight_names"] == list(model.BLOCK_WEIGHT_NAMES)
+
+
+def test_hlo_text_is_parseable_format(smoke_artifacts):
+    """HLO text (not proto): must start with 'HloModule' for the rust parser."""
+    with open(os.path.join(smoke_artifacts, "manifest.json")) as f:
+        man = json.load(f)
+    for st in man["stages"].values():
+        with open(os.path.join(smoke_artifacts, st["file"])) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule"), st["file"]
+
+
+def test_all_configs_have_consistent_chunking():
+    for cfg in CONFIGS.values():
+        assert cfg.chunk % min(cfg.chunk, 1 << 16) == 0
+        assert cfg.hidden % cfg.heads == 0
+        assert cfg.heads % cfg.kv_heads == 0
+        assert (cfg.hidden // cfg.heads) % 2 == 0  # RoPE needs even head_dim

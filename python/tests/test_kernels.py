@@ -1,0 +1,180 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/dtypes/special-value placements; every test
+asserts allclose (or exact equality for the boolean overflow verdict)
+against `compile.kernels.ref`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    cross_entropy_loss,
+    fused_adam_step,
+    fused_cross_entropy,
+    fused_overflow_check,
+    fused_rmsnorm,
+    rmsnorm,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- overflow
+
+@settings(**SETTINGS)
+@given(
+    blocks=st.integers(1, 8),
+    block=st.sampled_from([64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+    special=st.sampled_from([None, "inf", "-inf", "nan"]),
+)
+def test_overflow_matches_ref_f32(blocks, block, seed, special):
+    n = blocks * block
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    if special is not None:
+        pos = rng.integers(0, n)
+        x[pos] = {"inf": np.inf, "-inf": -np.inf, "nan": np.nan}[special]
+    xj = jnp.asarray(x)
+    got = int(fused_overflow_check(xj, block=block)[0])
+    want = int(ref.overflow_check_ref(xj)[0])
+    assert got == want == (0 if special is None else 1)
+
+
+@pytest.mark.parametrize("dtype,make", [
+    (jnp.float16, np.float16),
+    (jnp.bfloat16, None),
+])
+def test_overflow_half_precision(dtype, make):
+    x = jnp.zeros((256,), dtype).at[17].set(jnp.inf)
+    assert int(fused_overflow_check(x, block=64)[0]) == 1
+    x = jnp.zeros((256,), dtype).at[200].set(jnp.nan)
+    assert int(fused_overflow_check(x, block=64)[0]) == 1
+    x = jnp.full((256,), 2.5, dtype)
+    assert int(fused_overflow_check(x, block=64)[0]) == 0
+
+
+def test_overflow_rejects_misaligned_length():
+    with pytest.raises(ValueError):
+        fused_overflow_check(jnp.zeros((100,)), block=64)
+
+
+def test_overflow_extreme_finite_values_not_flagged():
+    # Largest finite f32: exponent is all-ones minus one — must NOT flag.
+    x = jnp.full((128,), np.finfo(np.float32).max, jnp.float32)
+    assert int(fused_overflow_check(x, block=64)[0]) == 0
+    x = jnp.full((128,), np.finfo(np.float32).tiny, jnp.float32)
+    assert int(fused_overflow_check(x, block=64)[0]) == 0
+
+
+# ---------------------------------------------------------------- adam
+
+@settings(**SETTINGS)
+@given(
+    n_blocks=st.integers(1, 4),
+    step=st.integers(1, 500),
+    seed=st.integers(0, 1000),
+    wd=st.sampled_from([0.0, 0.01, 0.1]),
+    lr=st.sampled_from([1e-4, 1e-3]),
+)
+def test_adam_matches_ref(n_blocks, step, seed, wd, lr):
+    n = n_blocks * 128
+    p, g, m = (_rand(seed + i, (n,)) for i in range(3))
+    v = jnp.abs(_rand(seed + 3, (n,)))
+    bc = jnp.array([1 - 0.9**step, 1 - 0.999**step], jnp.float32)
+    po, mo, vo = fused_adam_step(
+        p, g, m, v, bc, lr=lr, weight_decay=wd, block=128)
+    pr, mr, vr = ref.adam_step_ref(p, g, m, v, step, lr=lr, weight_decay=wd)
+    np.testing.assert_allclose(po, pr, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(mo, mr, rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(vo, vr, rtol=1e-6, atol=1e-8)
+
+
+def test_adam_zero_padding_is_inert():
+    """Tail-chunk padding contract: p=g=m=v=0 stays exactly 0."""
+    z = jnp.zeros((128,), jnp.float32)
+    bc = jnp.array([1 - 0.9, 1 - 0.999], jnp.float32)
+    po, mo, vo = fused_adam_step(z, z, z, z, bc, lr=1e-3,
+                                 weight_decay=0.01, block=128)
+    assert not po.any() and not mo.any() and not vo.any()
+
+
+# ---------------------------------------------------------------- cross entropy
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 16),
+    v=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 1000),
+    scale=st.sampled_from([1.0, 10.0]),
+)
+def test_cross_entropy_matches_ref(t, v, seed, scale):
+    logits = _rand(seed, (t, v), scale=scale)
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 1), (t,), 0, v)
+    lo, dl = fused_cross_entropy(logits, labels)
+    lr_, dr = ref.cross_entropy_ref(logits, labels)
+    np.testing.assert_allclose(lo, lr_, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(dl, dr, rtol=1e-4, atol=1e-5)
+
+
+def test_cross_entropy_vjp_grad():
+    logits = _rand(0, (8, 64))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (8,), 0, 64)
+    gk = jax.grad(lambda x: cross_entropy_loss(x, labels))(logits)
+    gr = jax.grad(
+        lambda x: jnp.mean(ref.cross_entropy_ref(x, labels)[0]))(logits)
+    np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-6)
+
+
+def test_cross_entropy_perfect_prediction_near_zero_loss():
+    v = 32
+    labels = jnp.arange(4) % v
+    logits = jnp.zeros((4, v)).at[jnp.arange(4), labels].set(50.0)
+    lo, _ = fused_cross_entropy(logits, labels)
+    assert float(jnp.max(lo)) < 1e-4
+
+
+# ---------------------------------------------------------------- rmsnorm
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 16),
+    h=st.sampled_from([16, 32, 96]),
+    seed=st.integers(0, 1000),
+)
+def test_rmsnorm_matches_ref(t, h, seed):
+    x = _rand(seed, (t, h))
+    w = _rand(seed + 1, (h,))
+    np.testing.assert_allclose(
+        fused_rmsnorm(x, w), ref.rmsnorm_ref(x, w), rtol=1e-5, atol=1e-6)
+
+
+def test_rmsnorm_custom_vjp_matches_autodiff():
+    x = _rand(3, (6, 32))
+    w = _rand(4, (32,))
+    f_fused = lambda x, w: jnp.sum(jnp.sin(rmsnorm(x, w)))
+    f_ref = lambda x, w: jnp.sum(jnp.sin(ref.rmsnorm_ref(x, w)))
+    g1 = jax.grad(f_fused, argnums=(0, 1))(x, w)
+    g2 = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(g1[0], g2[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g1[1], g2[1], rtol=1e-4, atol=1e-5)
+
+
+def test_rmsnorm_scale_invariance_property():
+    """RMSNorm(c*x) == RMSNorm(x) for c>0 (up to eps effects)."""
+    x = _rand(5, (4, 64), scale=3.0)
+    w = jnp.ones((64,))
+    a = fused_rmsnorm(x, w)
+    b = fused_rmsnorm(100.0 * x, w)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)

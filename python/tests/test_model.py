@@ -1,0 +1,153 @@
+"""L2 model correctness: shapes, gradients, invariants on the smoke config."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import SMOKE
+
+
+def _init_block(cfg, seed=0):
+    shapes = model.block_weight_shapes(cfg)
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(model.BLOCK_WEIGHT_NAMES))
+    ws = []
+    for k, name in zip(ks, model.BLOCK_WEIGHT_NAMES):
+        s = shapes[name]
+        if len(s) == 1:
+            ws.append(jnp.ones(s, jnp.float32))
+        else:
+            ws.append(jax.random.normal(k, s) * (0.4 / np.sqrt(s[0])))
+    return ws
+
+
+def _tokens(cfg, seed=0):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (cfg.batch, cfg.seq), 0, cfg.vocab)
+
+
+class TestBlock:
+    def test_fwd_shape(self):
+        cfg = SMOKE
+        h = jax.random.normal(jax.random.PRNGKey(1),
+                              (cfg.batch, cfg.seq, cfg.hidden))
+        out = model.block_fwd(cfg, h, *_init_block(cfg))
+        assert out.shape == h.shape
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_causality(self):
+        """Changing token t must not affect outputs at positions < t."""
+        cfg = SMOKE
+        h = jax.random.normal(jax.random.PRNGKey(1),
+                              (1, cfg.seq, cfg.hidden))
+        ws = _init_block(cfg)
+        base = model.block_fwd(cfg, h, *ws)
+        t = cfg.seq // 2
+        h2 = h.at[0, t:].set(jax.random.normal(jax.random.PRNGKey(2),
+                                               (cfg.seq - t, cfg.hidden)))
+        pert = model.block_fwd(cfg, h2, *ws)
+        np.testing.assert_allclose(base[0, :t], pert[0, :t], rtol=1e-5, atol=1e-6)
+        assert not np.allclose(base[0, t:], pert[0, t:])
+
+    def test_bwd_matches_autodiff(self):
+        cfg = SMOKE
+        h = jax.random.normal(jax.random.PRNGKey(1),
+                              (cfg.batch, cfg.seq, cfg.hidden))
+        ws = _init_block(cfg)
+        dout = jax.random.normal(jax.random.PRNGKey(2), h.shape)
+        grads = model.block_bwd(cfg, h, *ws, dout)
+        assert len(grads) == 1 + len(ws)
+        # finite-difference check on a scalar projection wrt h
+        f = lambda hh: jnp.vdot(model.block_fwd(cfg, hh, *ws), dout)
+        eps = 1e-3
+        d = jax.random.normal(jax.random.PRNGKey(3), h.shape)
+        fd = (f(h + eps * d) - f(h - eps * d)) / (2 * eps)
+        an = jnp.vdot(grads[0], d)
+        np.testing.assert_allclose(fd, an, rtol=2e-2, atol=1e-2)
+
+    def test_gqa_heads(self):
+        cfg = SMOKE
+        import dataclasses
+        gqa = dataclasses.replace(cfg, kv_heads=1)
+        h = jax.random.normal(jax.random.PRNGKey(1),
+                              (gqa.batch, gqa.seq, gqa.hidden))
+        out = model.block_fwd(gqa, h, *_init_block(gqa))
+        assert out.shape == h.shape
+
+
+class TestEmbedHead:
+    def test_embed_roundtrip_grad(self):
+        cfg = SMOKE
+        tok = _tokens(cfg)
+        table = jax.random.normal(jax.random.PRNGKey(0),
+                                  (cfg.vocab, cfg.hidden))
+        h = model.embed_fwd(tok, table)
+        assert h.shape == (cfg.batch, cfg.seq, cfg.hidden)
+        dh = jnp.ones_like(h)
+        dtable = model.embed_bwd(cfg, tok, dh)
+        # each token occurrence contributes its upstream gradient row
+        counts = np.zeros(cfg.vocab)
+        for t in np.asarray(tok).flatten():
+            counts[t] += 1
+        np.testing.assert_allclose(np.asarray(dtable)[:, 0], counts, atol=1e-5)
+
+    def test_head_loss_scale_propagates_to_grads_not_loss(self):
+        cfg = SMOKE
+        h = jax.random.normal(jax.random.PRNGKey(0),
+                              (cfg.batch, cfg.seq, cfg.hidden))
+        nw = jnp.ones((cfg.hidden,))
+        wh = jax.random.normal(jax.random.PRNGKey(1),
+                               (cfg.hidden, cfg.vocab)) * 0.05
+        lbl = _tokens(cfg, 7)
+        one = jnp.ones((1,), jnp.float32)
+        k = jnp.full((1,), 1024.0, jnp.float32)
+        l1, dh1, dn1, dw1 = model.head_fwd_bwd(cfg, h, nw, wh, lbl, one)
+        l2, dh2, dn2, dw2 = model.head_fwd_bwd(cfg, h, nw, wh, lbl, k)
+        np.testing.assert_allclose(l1, l2, rtol=1e-6)
+        np.testing.assert_allclose(dh2, 1024.0 * dh1, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(dw2, 1024.0 * dw1, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(dn2, 1024.0 * dn1, rtol=1e-4, atol=1e-6)
+
+    def test_uniform_logits_loss_is_log_vocab(self):
+        cfg = SMOKE
+        h = jnp.zeros((cfg.batch, cfg.seq, cfg.hidden))
+        nw = jnp.ones((cfg.hidden,))
+        wh = jnp.zeros((cfg.hidden, cfg.vocab))
+        lbl = _tokens(cfg, 3)
+        loss, *_ = model.head_fwd_bwd(
+            cfg, h, nw, wh, lbl, jnp.ones((1,), jnp.float32))
+        np.testing.assert_allclose(loss[0], np.log(cfg.vocab), rtol=1e-5)
+
+
+class TestFullModel:
+    def test_staged_equals_full_forward(self):
+        """Layer-streamed staging must equal the monolithic forward."""
+        cfg = SMOKE
+        tok = _tokens(cfg)
+        lbl = _tokens(cfg, 1)
+        table = jax.random.normal(jax.random.PRNGKey(0),
+                                  (cfg.vocab, cfg.hidden)) * 0.1
+        blocks = [_init_block(cfg, seed=i) for i in range(cfg.layers)]
+        nw = jnp.ones((cfg.hidden,))
+        wh = jax.random.normal(jax.random.PRNGKey(99),
+                               (cfg.hidden, cfg.vocab)) * 0.05
+        # staged (what the rust coordinator does)
+        h = model.embed_fwd(tok, table)
+        for ws in blocks:
+            h = model.block_fwd(cfg, h, *ws)
+        staged_loss, *_ = model.head_fwd_bwd(
+            cfg, h, nw, wh, lbl, jnp.ones((1,), jnp.float32))
+        # monolithic
+        full = model.full_forward_loss(cfg, tok, lbl, (table, blocks, nw, wh))
+        np.testing.assert_allclose(staged_loss[0], full, rtol=1e-5)
+
+    def test_param_count_formula(self):
+        cfg = SMOKE
+        shapes = model.block_weight_shapes(cfg)
+        per_block = sum(int(np.prod(s)) for s in shapes.values())
+        total = (cfg.vocab * cfg.hidden + cfg.layers * per_block
+                 + cfg.hidden + cfg.hidden * cfg.vocab)
+        assert total == cfg.param_count()

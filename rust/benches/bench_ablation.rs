@@ -1,0 +1,60 @@
+//! Ablation sweep (DESIGN.md §5): every combination of the four
+//! MemAscend components → peak sysmem + projected step time for
+//! Qwen2.5-7B, isolating each component's contribution (Fig. 8's
+//! narrative, quantified per flag).
+
+mod common;
+
+use memascend::accounting::perfmodel::{step_time, Calib};
+use memascend::accounting::sysmem::peak_sysmem;
+use memascend::config::hardware::CONFIG2;
+use memascend::config::presets::QWEN25_7B;
+use memascend::config::MemAscendFlags;
+use memascend::util::bench::Table;
+
+fn main() {
+    let calib = Calib::default();
+    let mut t = Table::new(vec![
+        "pool", "align", "fused", "nvme", "peak sysmem (GiB)", "step time (s)", "label",
+    ]);
+    let mut rows: Vec<(f64, f64, MemAscendFlags)> = MemAscendFlags::all_combinations()
+        .into_iter()
+        .map(|f| {
+            let s = common::eval_spec(f);
+            let mem = peak_sysmem(&QWEN25_7B, &s, &CONFIG2).peak_total as f64
+                / (1u64 << 30) as f64;
+            let st = step_time(&QWEN25_7B, &s, &CONFIG2, &calib).total();
+            (mem, st, f)
+        })
+        .collect();
+    rows.sort_by(|a, b| a.0.total_cmp(&b.0));
+    for (mem, st, f) in &rows {
+        t.row(vec![
+            u8::from(f.adaptive_pool).to_string(),
+            u8::from(f.alignment_free).to_string(),
+            u8::from(f.fused_overflow).to_string(),
+            u8::from(f.direct_nvme).to_string(),
+            format!("{mem:.2}"),
+            format!("{st:.2}"),
+            f.label(),
+        ]);
+    }
+    common::emit("ablation", "all 16 component combinations (Qwen2.5-7B, C2)", &t);
+
+    // single-component deltas vs baseline
+    let base_mem = rows
+        .iter()
+        .find(|(_, _, f)| *f == MemAscendFlags::baseline())
+        .unwrap()
+        .0;
+    println!("single-component memory savings vs baseline ({base_mem:.1} GiB):");
+    for (name, f) in [
+        ("adaptive_pool", MemAscendFlags { adaptive_pool: true, ..MemAscendFlags::baseline() }),
+        ("alignment_free", MemAscendFlags { alignment_free: true, ..MemAscendFlags::baseline() }),
+        ("fused_overflow", MemAscendFlags { fused_overflow: true, ..MemAscendFlags::baseline() }),
+        ("direct_nvme", MemAscendFlags { direct_nvme: true, ..MemAscendFlags::baseline() }),
+    ] {
+        let mem = rows.iter().find(|(_, _, g)| *g == f).unwrap().0;
+        println!("  {name:<16} -{:.1} GiB", base_mem - mem);
+    }
+}

@@ -1,0 +1,17 @@
+//! §Perf micro-bench: CPU AdamW per-element cost (feeds perfmodel's
+//! c_adam calibration).
+fn main() {
+    let n = 1 << 22;
+    let mut rng = memascend::util::rng::Xoshiro256::new(1);
+    let mut p: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut m = vec![0f32; n];
+    let mut v = vec![0f32; n];
+    let hp = memascend::optimizer::AdamParams::default();
+    let mut t = 0u64;
+    let s = memascend::util::bench::bench_n(2, 10, || {
+        t += 1;
+        memascend::optimizer::adam_step_f32(&mut p, &g, &mut m, &mut v, t, 1024.0, &hp, 1);
+    });
+    println!("adam 4Mi elems: {} ({:.2} ns/elem)", s, s.mean_secs() / n as f64 * 1e9);
+}

@@ -1,0 +1,15 @@
+fn main() {
+    let mut rng = memascend::util::rng::Xoshiro256::new(1);
+    let src: Vec<f32> = (0..(1<<22)).map(|_| rng.normal() as f32).collect();
+    let mut bytes = vec![0u8; src.len()*2];
+    memascend::dtype::f32s_to_f16_bytes(&src, &mut bytes);
+    let mut dst = vec![0f32; src.len()];
+    let s = memascend::util::bench::bench_n(2, 10, || {
+        memascend::dtype::f16_bytes_to_f32s(std::hint::black_box(&bytes), &mut dst);
+    });
+    println!("f16->f32 4Mi elems: {}", s);
+    let s2 = memascend::util::bench::bench_n(2, 10, || {
+        memascend::dtype::f32s_to_f16_bytes(std::hint::black_box(&src), &mut bytes);
+    });
+    println!("f32->f16 4Mi elems: {}", s2);
+}

@@ -1,0 +1,129 @@
+//! Fig. 12 — overflow-check latency: baseline chain vs fused, measured
+//! for real on this machine across buffer sizes, then projected to the
+//! paper's model sizes and both CPU configs (paper: avg 97% reduction).
+//! Fig. 13 — overflow-check memory overhead (2.25x spike vs none).
+//! Fig. 3  — tensor-lifetime timeline CSV during the baseline check.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use memascend::config::hardware::{CONFIG1, CONFIG2};
+use memascend::overflow::{baseline_overflow_check, fused_overflow_check};
+use memascend::pinned::{Cat, MemoryTracker};
+use memascend::util::bench::{bench_n, black_box, Table};
+use memascend::util::human;
+
+fn main() {
+    // ---------- real measurement across sizes (this machine) ----------
+    let sizes: &[usize] = &[1 << 20, 1 << 22, 1 << 24, 1 << 26];
+    let mut t = Table::new(vec![
+        "elements",
+        "baseline mean",
+        "fused mean",
+        "reduction %",
+    ]);
+    // per-element costs from the largest size (steady state)
+    let mut c_base = 0.0f64;
+    let mut c_fused = 0.0f64;
+    for &n in sizes {
+        let grads = vec![0.5f32; n];
+        let tracker = Arc::new(MemoryTracker::new());
+        let iters = if n >= 1 << 26 { 3 } else { 6 };
+        let sb = bench_n(1, iters, || {
+            black_box(baseline_overflow_check(black_box(&grads), &tracker));
+        });
+        let sf = bench_n(1, iters, || {
+            black_box(fused_overflow_check(black_box(&grads), 1));
+        });
+        let red = (1.0 - sf.mean_secs() / sb.mean_secs()) * 100.0;
+        c_base = sb.mean_secs() / n as f64;
+        c_fused = sf.mean_secs() / n as f64;
+        t.row(vec![
+            n.to_string(),
+            human::secs(sb.mean_secs()),
+            human::secs(sf.mean_secs()),
+            format!("{red:.1}"),
+        ]);
+    }
+    common::emit("fig12_local", "overflow check latency (measured, this CPU)", &t);
+
+    // ---------- projection to paper scale (Fig. 12a/b) ----------
+    // local single core ~= cpu_rel 0.5 of the paper's C1 reference core;
+    // the baseline torch chain is single-threaded, the fused check is
+    // OpenMP-parallel (~97% efficiency, paper §IV-D).
+    let mut tp = Table::new(vec![
+        "config",
+        "model params",
+        "baseline (ms)",
+        "fused (ms)",
+        "reduction %",
+        "paper",
+    ]);
+    let paper_c1_8b = "5507 ms baseline, ~97% cut";
+    for (hw, label) in [(&CONFIG1, "config1"), (&CONFIG2, "config2")] {
+        for p in [1.0e9, 8.0e9, 14.0e9, 32.0e9] {
+            let threads = (hw.cpu_threads as f64 * 0.25).max(1.0);
+            let base_ms = p * c_base / (hw.cpu_rel / 0.5) * 1e3;
+            let fused_ms =
+                p * c_fused / (hw.cpu_rel / 0.5) / (threads * 0.97) * 1e3;
+            tp.row(vec![
+                label.to_string(),
+                format!("{:.0}B", p / 1e9),
+                format!("{base_ms:.0}"),
+                format!("{fused_ms:.2}"),
+                format!("{:.1}", (1.0 - fused_ms / base_ms) * 100.0),
+                if p == 8.0e9 && label == "config1" {
+                    paper_c1_8b.to_string()
+                } else {
+                    String::new()
+                },
+            ]);
+        }
+    }
+    common::emit("fig12_projected", "overflow check latency (projected)", &tp);
+
+    // ---------- Fig. 13: memory overhead ----------
+    let n = 1 << 24; // 64 MiB flat buffer
+    let grads = vec![0.5f32; n];
+    let tracker = Arc::new(MemoryTracker::new());
+    tracker.alloc(Cat::GradFlat, (n * 4) as u64);
+    baseline_overflow_check(&grads, &tracker);
+    let base_overhead = tracker.peak(Cat::OverflowTemp);
+    let tracker2 = Arc::new(MemoryTracker::new());
+    tracker2.alloc(Cat::GradFlat, (n * 4) as u64);
+    fused_overflow_check(&grads, 1);
+    let fused_overhead = tracker2.peak(Cat::OverflowTemp);
+    let mut tm = Table::new(vec!["method", "flat buffer", "check overhead", "peak ratio"]);
+    tm.row(vec![
+        "zero-infinity".to_string(),
+        human::bytes((n * 4) as u64),
+        human::bytes(base_overhead),
+        format!("{:.2}x (paper: 2.25x)", tracker.peak_total() as f64 / (n as f64 * 4.0)),
+    ]);
+    tm.row(vec![
+        "memascend".to_string(),
+        human::bytes((n * 4) as u64),
+        human::bytes(fused_overhead),
+        "1.00x (paper: 1.0x)".to_string(),
+    ]);
+    common::emit("fig13", "overflow check memory overhead", &tm);
+
+    // ---------- Fig. 3: lifetime timeline ----------
+    let tl_tracker = Arc::new(MemoryTracker::with_timeline());
+    let small = vec![0.5f32; 1 << 16];
+    tl_tracker.alloc(Cat::GradFlat, (small.len() * 4) as u64);
+    baseline_overflow_check(&small, &tl_tracker);
+    let mut t3 = Table::new(vec!["event", "category", "delta (B)", "total after (B)"]);
+    for e in tl_tracker.timeline() {
+        t3.row(vec![
+            e.t.to_string(),
+            e.cat.name().to_string(),
+            e.delta.to_string(),
+            e.total_after.to_string(),
+        ]);
+    }
+    common::emit("fig3_timeline", "tensor lifetimes during the baseline check", &t3);
+    let _ = Duration::ZERO;
+}

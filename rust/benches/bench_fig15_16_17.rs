@@ -1,0 +1,146 @@
+//! Fig. 15 — end-to-end peak system memory across the four dense models
+//! (paper: avg −55.7%).
+//! Fig. 16 — peak memory vs context length, 4k→131k, 2 ranks
+//! (paper: −41.65% Llama8B … −49.48% Qwen32B; 128 GiB cap ⇒ 16k vs 131k).
+//! Fig. 17 — memory + projected throughput vs batch size at ctx 4096
+//! (paper: avg −42.8% memory; near-linear throughput scaling).
+//! Fig. 9/10 are the Qwen2.5-7B rows/columns of the same sweeps.
+
+mod common;
+
+use memascend::accounting::perfmodel::{step_time, Calib};
+use memascend::accounting::sysmem::peak_sysmem;
+use memascend::config::hardware::CONFIG1;
+use memascend::config::presets::PAPER_DENSE;
+use memascend::config::MemAscendFlags;
+use memascend::util::bench::Table;
+
+fn main() {
+    let paper_fig15: &[(&str, f64, f64)] = &[
+        ("llama3.1-8b", 91.06, 44.71),
+        ("qwen2.5-7b", 109.06, 43.67),
+        ("qwen2.5-14b", 174.5, 76.1),
+        ("qwen2.5-32b", 322.3, 143.6),
+    ];
+
+    // ---------- Fig. 15 ----------
+    let mut t = Table::new(vec![
+        "model",
+        "ZI paper",
+        "ZI measured",
+        "MA paper",
+        "MA measured",
+        "cut %",
+    ]);
+    let mut cuts = Vec::new();
+    for (name, zp, mp) in paper_fig15 {
+        let m = memascend::config::ModelSpec::by_name(name).unwrap();
+        let z = peak_sysmem(m, &common::eval_spec(MemAscendFlags::baseline()), &CONFIG1);
+        let a = peak_sysmem(m, &common::eval_spec(MemAscendFlags::memascend()), &CONFIG1);
+        let cut = (1.0 - a.peak_total as f64 / z.peak_total as f64) * 100.0;
+        cuts.push(cut);
+        t.row(vec![
+            name.to_string(),
+            format!("{zp:.1}"),
+            common::gib(z.peak_total),
+            format!("{mp:.1}"),
+            common::gib(a.peak_total),
+            format!("{cut:.1}"),
+        ]);
+    }
+    common::emit("fig15", "end-to-end peak system memory (GiB)", &t);
+    println!(
+        "avg cut {:.1}% (paper: 55.7%)",
+        cuts.iter().sum::<f64>() / cuts.len() as f64
+    );
+
+    // ---------- Fig. 16 (and Fig. 9 = qwen2.5-7b row) ----------
+    let ctxs: &[usize] = &[4096, 8192, 16384, 32768, 65536, 131072];
+    let mut t16 = Table::new(vec![
+        "model", "ctx", "ZI (GiB)", "MA (GiB)", "cut %", "fits 128GiB (ZI/MA)",
+    ]);
+    for m in PAPER_DENSE {
+        let mut reds = Vec::new();
+        for &c in ctxs {
+            let mut zi = common::eval_spec(MemAscendFlags::baseline());
+            zi.seq = c;
+            zi.batch = 1;
+            let mut ma = common::eval_spec(MemAscendFlags::memascend());
+            ma.seq = c;
+            ma.batch = 1;
+            let z = peak_sysmem(m, &zi, &CONFIG1);
+            let a = peak_sysmem(m, &ma, &CONFIG1);
+            let cut = (1.0 - a.peak_total as f64 / z.peak_total as f64) * 100.0;
+            reds.push(cut);
+            t16.row(vec![
+                m.name.to_string(),
+                c.to_string(),
+                common::gib(z.peak_total),
+                common::gib(a.peak_total),
+                format!("{cut:.1}"),
+                format!(
+                    "{}/{}",
+                    if z.gib() <= 128.0 { "y" } else { "n" },
+                    if a.gib() <= 128.0 { "y" } else { "n" }
+                ),
+            ]);
+        }
+        println!(
+            "{}: avg ctx-sweep cut {:.1}%",
+            m.name,
+            reds.iter().sum::<f64>() / reds.len() as f64
+        );
+    }
+    common::emit("fig16", "peak sysmem vs context (paper: -41.65%..-49.48%)", &t16);
+
+    // ---------- Fig. 17 (and Fig. 10 = qwen2.5-7b row) ----------
+    let batches: &[usize] = &[1, 2, 4, 8, 16, 32, 48];
+    let calib = Calib::default();
+    let mut t17 = Table::new(vec![
+        "model", "batch", "ZI (GiB)", "MA (GiB)", "MA tokens/s (proj)",
+    ]);
+    for m in PAPER_DENSE {
+        for &b in batches {
+            let mut zi = common::eval_spec(MemAscendFlags::baseline());
+            zi.batch = b;
+            let mut ma = common::eval_spec(MemAscendFlags::memascend());
+            ma.batch = b;
+            let z = peak_sysmem(m, &zi, &CONFIG1);
+            let a = peak_sysmem(m, &ma, &CONFIG1);
+            let st = step_time(m, &ma, &CONFIG1, &calib);
+            t17.row(vec![
+                m.name.to_string(),
+                b.to_string(),
+                common::gib(z.peak_total),
+                common::gib(a.peak_total),
+                format!("{:.0}", st.tokens_per_sec(&ma)),
+            ]);
+        }
+    }
+    common::emit(
+        "fig17",
+        "memory + throughput vs batch (paper: -42.8% avg memory, near-linear tput)",
+        &t17,
+    );
+
+    // paper Fig. 10 headline: under 128 GiB, ZI tops out at batch 4 vs
+    // MA at 32 for Qwen2.5-7B
+    let q7 = memascend::config::ModelSpec::by_name("qwen2.5-7b").unwrap();
+    let max_batch = |flags: MemAscendFlags| {
+        batches
+            .iter()
+            .rev()
+            .find(|&&b| {
+                let mut s = common::eval_spec(flags);
+                s.batch = b;
+                peak_sysmem(q7, &s, &CONFIG1).gib() <= 128.0
+            })
+            .copied()
+            .unwrap_or(0)
+    };
+    println!(
+        "max batch under 128 GiB: ZI={} MA={} (paper: 4 vs 32)",
+        max_batch(MemAscendFlags::baseline()),
+        max_batch(MemAscendFlags::memascend())
+    );
+}

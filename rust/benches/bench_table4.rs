@@ -1,0 +1,63 @@
+//! Table IV — end-to-end throughput improvement, ZeRO-Infinity →
+//! MemAscend, Configurations 1 & 2 (both with the direct engine, as in
+//! the paper — the fs baseline "is unstable and prone to hanging").
+//! Projection from the calibrated step-time model; the structure to
+//! match: gains positive everywhere, larger on the slower CPU (C2),
+//! larger at smaller batch.
+
+mod common;
+
+use memascend::accounting::perfmodel::{step_time, Calib};
+use memascend::config::hardware::{CONFIG1, CONFIG2};
+use memascend::config::{MemAscendFlags, TrainSpec};
+use memascend::util::bench::Table;
+
+fn main() {
+    // (model, batch C1, batch C2, paper C1 %, paper C2 %)
+    let rows: &[(&str, usize, usize, f64, f64)] = &[
+        ("llama3.1-8b", 8, 8, 6.97, 12.91),
+        ("llama3.1-8b", 80, 20, 2.72, 7.52),
+        ("qwen2.5-7b", 8, 8, 5.53, 14.02),
+        ("qwen2.5-7b", 64, 20, 3.73, 8.36),
+        ("qwen2.5-14b", 8, 4, 6.45, 18.86),
+        ("qwen2.5-14b", 64, 16, 3.28, 6.77),
+        ("qwen2.5-32b", 8, 4, 5.64, 18.43),
+        ("qwen2.5-32b", 48, 8, 2.89, 16.42),
+    ];
+    let calib = Calib::default();
+    let imp = |model: &str, batch: usize, hw| {
+        let m = memascend::config::ModelSpec::by_name(model).unwrap();
+        let mut zi_flags = MemAscendFlags::baseline();
+        zi_flags.direct_nvme = true; // both sides use the direct engine
+        let mk = |flags| TrainSpec {
+            batch,
+            seq: 4096,
+            ranks: 2,
+            prefetch_depth: 1,
+            flags,
+            ..Default::default()
+        };
+        let zi = step_time(m, &mk(zi_flags), hw, &calib).total();
+        let ma = step_time(m, &mk(MemAscendFlags::memascend()), hw, &calib).total();
+        (zi / ma - 1.0) * 100.0
+    };
+    let mut t = Table::new(vec![
+        "model",
+        "batch (C1/C2)",
+        "C1 paper %",
+        "C1 measured %",
+        "C2 paper %",
+        "C2 measured %",
+    ]);
+    for (model, b1, b2, p1, p2) in rows {
+        t.row(vec![
+            model.to_string(),
+            format!("{b1} / {b2}"),
+            format!("{p1:.2}"),
+            format!("{:.2}", imp(model, *b1, &CONFIG1)),
+            format!("{p2:.2}"),
+            format!("{:.2}", imp(model, *b2, &CONFIG2)),
+        ]);
+    }
+    common::emit("table4", "end-to-end throughput improvement ZI -> MA", &t);
+}

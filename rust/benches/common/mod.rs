@@ -1,0 +1,32 @@
+//! Shared bench scaffolding: paper-vs-measured table output + CSV dump.
+
+use memascend::util::bench::Table;
+
+pub const OUT_DIR: &str = "bench_out";
+
+pub fn emit(name: &str, title: &str, table: &Table) {
+    println!("\n=== {name}: {title} ===\n");
+    println!("{}", table.render());
+    let path = format!("{OUT_DIR}/{name}.csv");
+    if let Err(e) = table.write_csv(&path) {
+        eprintln!("warn: could not write {path}: {e}");
+    } else {
+        println!("[csv] {path}");
+    }
+}
+
+pub fn gib(bytes: u64) -> String {
+    format!("{:.2}", memascend::util::human::gib(bytes))
+}
+
+/// Standard Fig-8-style training spec (ctx 4096, batch 4/rank, 2 ranks).
+pub fn eval_spec(flags: memascend::config::MemAscendFlags) -> memascend::config::TrainSpec {
+    memascend::config::TrainSpec {
+        batch: 4,
+        seq: 4096,
+        ranks: 2,
+        prefetch_depth: 1,
+        flags,
+        ..Default::default()
+    }
+}

@@ -1,0 +1,216 @@
+//! GPU-memory model (Fig. 2, Table II's VRAM-OOM column).
+//!
+//! A closed-form working-set model of the residual memory the paper's
+//! Fig. 2 charts: weights/grads/optimizer (placement depends on the
+//! offload mode), activations (with/without gradient checkpointing and
+//! host offload), attention intermediates (with/without
+//! Flash-Attention), and head logits (with/without Liger's fused CE).
+//! Coefficients follow the standard transformer activation-memory
+//! derivation (Korthikanti et al.) specialized to SwiGLU blocks.
+
+use crate::config::{ModelSpec, TrainSpec};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    AllInGpu,
+    ZeroOffload,
+    ZeroInfinity,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct GpuMemOpts {
+    pub placement: Placement,
+    /// Gradient checkpointing enabled.
+    pub grad_ckpt: bool,
+    /// Liger-Kernel (fused CE — no materialized logits) + fused ops.
+    pub liger: bool,
+    /// Flash-Attention (no S×S score matrix).
+    pub flash: bool,
+    /// Offload checkpointed activations to host memory.
+    pub offloaded_gc: bool,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GpuMemBreakdown {
+    pub weights: u64,
+    pub grads: u64,
+    pub optimizer: u64,
+    pub activations: u64,
+    pub attn_intermediate: u64,
+    pub logits: u64,
+    pub workspace: u64,
+}
+
+impl GpuMemBreakdown {
+    pub fn total(&self) -> u64 {
+        self.weights
+            + self.grads
+            + self.optimizer
+            + self.activations
+            + self.attn_intermediate
+            + self.logits
+            + self.workspace
+    }
+
+    pub fn gib(&self) -> f64 {
+        crate::util::human::gib(self.total())
+    }
+}
+
+/// Per-GPU memory for one configuration.
+pub fn gpu_memory(spec: &ModelSpec, train: &TrainSpec, opts: &GpuMemOpts) -> GpuMemBreakdown {
+    let p = spec.param_count();
+    let (b, c) = (train.batch as u64, train.seq as u64);
+    let (l, h, v) = (spec.layers as u64, spec.hidden as u64, spec.vocab as u64);
+    let heads = spec.heads as u64;
+
+    let mut out = GpuMemBreakdown::default();
+
+    match opts.placement {
+        Placement::AllInGpu => {
+            out.weights = p * 2; // fp16 compute copy
+            out.grads = p * 2;
+            out.optimizer = p * 12; // fp32 master + m + v
+        }
+        Placement::ZeroOffload => {
+            out.weights = p * 2;
+            out.grads = p * 2;
+            out.optimizer = 0; // states live in host DRAM
+        }
+        Placement::ZeroInfinity => {
+            // streamed: only the working set of ~2 blocks + embeddings
+            let per_block: u64 = crate::tensors::inventory(spec)
+                .iter()
+                .filter(|t| t.layer == 0)
+                .map(|t| t.numel as u64 * 2)
+                .sum();
+            let embed = (spec.vocab * spec.hidden) as u64 * 2;
+            out.weights = 2 * per_block + 2 * embed;
+            out.grads = per_block; // one block's grads before offload
+            out.optimizer = 0;
+        }
+    }
+
+    // --- activations (fp16) ---
+    // Full storage per layer for a SwiGLU block ≈ (18h + 4f) per token
+    // (inputs of every matmul + norms + silu products), f = FFN width.
+    let f = if spec.is_moe() {
+        (spec.expert_intermediate * spec.experts_per_token) as u64
+    } else {
+        spec.intermediate as u64
+    };
+    let act_per_layer_token = 18 * h + 4 * f;
+    if opts.grad_ckpt {
+        // checkpoints: one h-vector per token per layer...
+        let ckpt = b * c * l * h * 2;
+        out.activations = if opts.offloaded_gc { 0 } else { ckpt };
+        // ...plus the recompute working set of a single layer
+        out.activations += b * c * act_per_layer_token * 2;
+    } else {
+        out.activations = b * c * l * act_per_layer_token * 2;
+    }
+
+    // --- attention intermediates ---
+    if !opts.flash {
+        // S×S score + softmax matrices per head (fp16, fwd+bwd copies)
+        let layers_holding = if opts.grad_ckpt { 1 } else { l };
+        out.attn_intermediate = 2 * b * heads * c * c * 2 * layers_holding;
+    }
+
+    // --- LM head logits ---
+    if !opts.liger {
+        // logits + softmax grad in fp32 (the tensor Liger never builds)
+        out.logits = 2 * b * c * v * 4;
+    }
+
+    // cuBLAS/cudnn workspace + allocator slack
+    out.workspace = 1 << 30;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{DENSE_1B, LLAMA31_8B};
+
+    fn train(b: usize, c: usize) -> TrainSpec {
+        TrainSpec { batch: b, seq: c, ..Default::default() }
+    }
+
+    fn opts(placement: Placement) -> GpuMemOpts {
+        GpuMemOpts {
+            placement,
+            grad_ckpt: true,
+            liger: true,
+            flash: true,
+            offloaded_gc: true,
+        }
+    }
+
+    #[test]
+    fn table2_oom_pattern_on_24gib_gpu() {
+        // All-in-GPU: 1B fits, 3B+ OOM (Table II)
+        let cap = 24.0;
+        let one_b = gpu_memory(&DENSE_1B, &train(4, 2048), &opts(Placement::AllInGpu));
+        assert!(one_b.gib() < cap, "1B all-in-gpu {} GiB", one_b.gib());
+        let eight_b =
+            gpu_memory(&LLAMA31_8B, &train(8, 4096), &opts(Placement::AllInGpu));
+        assert!(eight_b.gib() > cap, "8B all-in-gpu {} GiB", eight_b.gib());
+        // ZeRO-Infinity: 8B fits in VRAM (system memory is the limit)
+        let zi = gpu_memory(&LLAMA31_8B, &train(8, 4096), &opts(Placement::ZeroInfinity));
+        assert!(zi.gib() < cap, "8B zero-infinity {} GiB", zi.gib());
+    }
+
+    #[test]
+    fn fig2_each_optimization_reduces_memory() {
+        // ctx 32768: without flash the S^2 term dominates; without
+        // liger the logits dominate; without GC activations dominate.
+        let t = train(4, 32768);
+        let full = GpuMemOpts {
+            placement: Placement::ZeroInfinity,
+            grad_ckpt: false,
+            liger: false,
+            flash: false,
+            offloaded_gc: false,
+        };
+        let base = gpu_memory(&LLAMA31_8B, &t, &full).total();
+        let with_flash = gpu_memory(
+            &LLAMA31_8B,
+            &t,
+            &GpuMemOpts { flash: true, ..full },
+        )
+        .total();
+        let with_gc = gpu_memory(
+            &LLAMA31_8B,
+            &t,
+            &GpuMemOpts { flash: true, grad_ckpt: true, ..full },
+        )
+        .total();
+        let with_liger = gpu_memory(
+            &LLAMA31_8B,
+            &t,
+            &GpuMemOpts { flash: true, grad_ckpt: true, liger: true, ..full },
+        )
+        .total();
+        let with_ogc = gpu_memory(&LLAMA31_8B, &t, &opts(Placement::ZeroInfinity))
+            .total();
+        assert!(base > with_flash);
+        assert!(with_flash > with_gc);
+        assert!(with_gc > with_liger);
+        assert!(with_liger > with_ogc);
+    }
+
+    #[test]
+    fn long_context_without_flash_explodes() {
+        let t = train(4, 32768);
+        let no_flash = GpuMemOpts {
+            placement: Placement::ZeroInfinity,
+            grad_ckpt: true,
+            liger: true,
+            flash: false,
+            offloaded_gc: true,
+        };
+        let g = gpu_memory(&LLAMA31_8B, &t, &no_flash);
+        assert!(g.gib() > 80.0, "S^2 term should OOM any GPU: {}", g.gib());
+    }
+}

@@ -1,0 +1,17 @@
+//! Full-scale memory & performance accounting.
+//!
+//! Peak system memory for a 32B-parameter run is determined by
+//! *allocator and pool decisions over the tensor inventory*, not by the
+//! bytes themselves — so this engine executes the real pool
+//! constructors and the real pinned-allocation policies in Virtual
+//! mode (same logic, no backing pages) and reads the resulting ledger.
+//! That is how the paper's Tables II and Figures 2/4/8/9/10/15/16/17/
+//! 18/21 are regenerated inside a 35 GiB container.
+
+pub mod gpumem;
+pub mod perfmodel;
+pub mod sysmem;
+
+pub use gpumem::{gpu_memory, GpuMemOpts};
+pub use perfmodel::{step_time, StepTime};
+pub use sysmem::{peak_sysmem, SysMemBreakdown};

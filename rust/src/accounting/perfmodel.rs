@@ -1,0 +1,250 @@
+//! Step-time / throughput model (Tables IV & VI, Figs. 10/17/18 curves).
+//!
+//! Projects one training-iteration latency at paper scale from a
+//! component decomposition:
+//!
+//! `t_step = max(t_compute, t_param_io·(1-overlap)) + t_engine_tax
+//!           + t_overflow + max(t_optim_io, t_optim_cpu)`
+//!
+//! - compute follows the 8·P·T FLOP rule (fwd 2PT + bwd 4PT +
+//!   checkpoint recompute 2PT) over the hardware's GPU throughput;
+//! - parameter I/O streams fp16 weights twice per step (fwd + bwd),
+//!   overlap-centric execution hides most of it behind compute;
+//! - the engine tax charges per-tensor fixed costs (filesystem
+//!   metadata vs raw submission — the Fig. 14 constants);
+//! - overflow-check and CPU-Adam costs are per-element constants
+//!   *calibrated from this repo's measured benches* and scaled by the
+//!   target CPU's relative speed.
+
+use crate::config::{HardwareSpec, ModelSpec, TrainSpec};
+use crate::optimizer::StateDtype;
+use crate::ssd::DeviceModel;
+use crate::tensors;
+
+/// Calibration constants (seconds). Defaults reflect this container's
+/// measured values scaled to a Xeon-6780E-class core; benches may
+/// override with live measurements.
+#[derive(Debug, Clone)]
+pub struct Calib {
+    /// Baseline overflow chain, s/element at cpu_rel=1.
+    pub c_overflow_base: f64,
+    /// Fused overflow check, s/element at cpu_rel=1.
+    pub c_overflow_fused: f64,
+    /// CPU AdamW, s/element/thread at cpu_rel=1.
+    pub c_adam: f64,
+    /// H100 FLOP/s *achieved in SSD-offloaded fine-tuning* (not peak:
+    /// layer streaming, host round-trips, and checkpoint recompute keep
+    /// MFU low; calibrated so an 8B/ctx-4096/b-8 step on C1 lands near
+    /// the paper's ~41 s iteration, per its §III-C 13.36% claim).
+    pub gpu_flops: f64,
+    /// Fraction of parameter I/O hidden behind compute.
+    pub overlap: f64,
+}
+
+impl Default for Calib {
+    fn default() -> Self {
+        Self {
+            c_overflow_base: 0.69e-9, // paper: 5507 ms @ 8B params on C1
+            c_overflow_fused: 0.02e-9, // ~97% lower, parallel
+            c_adam: 1.2e-9,
+            gpu_flops: 120e12,
+            overlap: 0.85,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepTime {
+    pub compute: f64,
+    pub param_io_exposed: f64,
+    pub engine_tax: f64,
+    pub overflow: f64,
+    pub optim: f64,
+}
+
+impl StepTime {
+    pub fn total(&self) -> f64 {
+        self.compute + self.param_io_exposed + self.engine_tax + self.overflow + self.optim
+    }
+
+    pub fn tokens_per_sec(&self, train: &TrainSpec) -> f64 {
+        train.tokens_per_step() as f64 / self.total()
+    }
+}
+
+/// Project one training step on `hw`.
+pub fn step_time(
+    spec: &ModelSpec,
+    train: &TrainSpec,
+    hw: &HardwareSpec,
+    calib: &Calib,
+) -> StepTime {
+    let p = spec.param_count() as f64;
+    // MoE: only active experts compute, but ALL weights stream from SSD
+    let p_active = if spec.is_moe() {
+        let inv = tensors::inventory(spec);
+        let expert: f64 = inv
+            .iter()
+            .filter(|t| t.name.contains("experts"))
+            .map(|t| t.numel as f64)
+            .sum();
+        (p - expert)
+            + expert * spec.experts_per_token as f64 / spec.n_experts as f64
+    } else {
+        p
+    };
+    let tokens_per_gpu = (train.batch * train.seq) as f64;
+    let gpus = hw.gpus.max(1) as f64;
+
+    // --- compute ---
+    let flops = 8.0 * p_active * tokens_per_gpu;
+    let compute = flops / (calib.gpu_flops * hw.gpu_rel_flops.max(1e-3));
+
+    // --- parameter streaming I/O (fp16, read twice/step) ---
+    let param_bytes = 2.0 * p * 2.0;
+    let read_bw = hw.ssd_agg_read_gibs() * (1u64 << 30) as f64;
+    let param_io = param_bytes / read_bw / gpus.max(1.0);
+    let param_io_exposed = (param_io - compute * calib.overlap).max(0.0);
+
+    // --- per-tensor engine tax ---
+    let dm = DeviceModel::new(hw);
+    let n_offloadable = tensors::inventory(spec)
+        .iter()
+        .filter(|t| t.offloadable())
+        .count() as f64;
+    let sub = super::sysmem::subgroup_elems(spec);
+    let n_groups = (spec.param_count() as f64 / sub as f64).ceil();
+    let ops = n_offloadable * 2.0 + n_groups * 7.0;
+    let per_op = if train.flags.direct_nvme {
+        // submission cost only — data time is in param_io/optim_io
+        8e-6 * hw.ssds as f64
+    } else {
+        // filesystem metadata path (matches DeviceModel constants)
+        dm.fs_write_lat(0, false)
+    };
+    let engine_tax = ops * per_op / gpus;
+
+    // --- overflow check (CPU, once per step over the flat buffer) ---
+    let overflow = if train.precision.needs_overflow_check() {
+        let c = if train.flags.fused_overflow {
+            calib.c_overflow_fused
+        } else {
+            calib.c_overflow_base
+        };
+        p * c / hw.cpu_rel
+    } else {
+        0.0
+    };
+
+    // --- optimizer: state I/O overlapped with CPU update ---
+    let sb = match train.optim_dtype {
+        crate::dtype::DType::BF16 => StateDtype::BF16.bytes_per_elem() as f64,
+        _ => StateDtype::F32.bytes_per_elem() as f64,
+    };
+    let optim_read = p * 3.0 * sb;
+    let optim_write = p * (3.0 * sb + 2.0);
+    let write_bw = hw.ssd_agg_write_gibs() * (1u64 << 30) as f64;
+    let optim_io = optim_read / read_bw + optim_write / write_bw;
+    let threads = (hw.cpu_threads as f64 * 0.25).max(1.0); // OMP share
+    let optim_cpu = p * calib.c_adam / (hw.cpu_rel * threads);
+    let optim = optim_io.max(optim_cpu);
+
+    StepTime { compute, param_io_exposed, engine_tax, overflow, optim }
+}
+
+/// Total SSD I/O volume per iteration (Fig. 20), bytes.
+pub fn io_volume_per_step(spec: &ModelSpec, optim: StateDtype) -> u64 {
+    let p = spec.param_count();
+    let sb = optim.bytes_per_elem() as u64;
+    // fp16 weights read fwd+bwd, states read+write, fp16 writeback
+    p * 2 * 2 + p * 3 * sb * 2 + p * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::{CONFIG1, CONFIG2};
+    use crate::config::presets::{QWEN25_14B, QWEN25_7B};
+    use crate::config::MemAscendFlags;
+
+    fn spec(batch: usize, flags: MemAscendFlags) -> TrainSpec {
+        TrainSpec { batch, seq: 4096, ranks: 2, flags, ..Default::default() }
+    }
+
+    /// Table IV shape: MemAscend wins, more on the slower CPU, more at
+    /// small batch.
+    #[test]
+    fn table4_improvement_structure() {
+        let calib = Calib::default();
+        let imp = |hw: &HardwareSpec, batch: usize| {
+            // Table IV: both sides run the direct engine (fs baseline
+            // "is unstable and prone to hanging"); the delta is the
+            // fused overflow check + allocator effects
+            let mut zi_flags = MemAscendFlags::baseline();
+            zi_flags.direct_nvme = true;
+            let zi = step_time(&QWEN25_7B, &spec(batch, zi_flags), hw, &calib);
+            let ma =
+                step_time(&QWEN25_7B, &spec(batch, MemAscendFlags::memascend()), hw, &calib);
+            zi.total() / ma.total() - 1.0
+        };
+        let c1_small = imp(&CONFIG1, 8);
+        let c1_large = imp(&CONFIG1, 64);
+        let c2_small = imp(&CONFIG2, 8);
+        let c2_large = imp(&CONFIG2, 20);
+        assert!(c1_small > 0.0 && c2_small > 0.0);
+        assert!(c2_small > c1_small, "slower CPU gains more: {c2_small} vs {c1_small}");
+        assert!(c1_small > c1_large, "small batch gains more");
+        assert!(c2_small > c2_large);
+        // paper band: C1 2.7-7%, C2 6.8-18.9%
+        assert!((0.005..0.30).contains(&c1_small), "c1 {c1_small}");
+        assert!((0.02..0.60).contains(&c2_small), "c2 {c2_small}");
+    }
+
+    /// Table VI shape: bf16 optimizer helps everywhere, most at small
+    /// batch (I/O-bound regime).
+    #[test]
+    fn table6_bf16_optimizer_gains() {
+        let calib = Calib::default();
+        let imp = |hw: &HardwareSpec, batch: usize| {
+            let f32_t = step_time(
+                &QWEN25_14B,
+                &spec(batch, MemAscendFlags::memascend()),
+                hw,
+                &calib,
+            );
+            let mut tr = spec(batch, MemAscendFlags::memascend());
+            tr.optim_dtype = crate::dtype::DType::BF16;
+            let bf16_t = step_time(&QWEN25_14B, &tr, hw, &calib);
+            f32_t.total() / bf16_t.total() - 1.0
+        };
+        let small = imp(&CONFIG1, 8);
+        let large = imp(&CONFIG1, 64);
+        assert!(small > 0.05, "small-batch gain {small}");
+        assert!(small > large, "gain shrinks with batch: {small} vs {large}");
+    }
+
+    /// Fig. 10/17: throughput scales near-linearly with batch until
+    /// compute dominates.
+    #[test]
+    fn throughput_scales_with_batch() {
+        let calib = Calib::default();
+        let tp = |b: usize| {
+            let t = spec(b, MemAscendFlags::memascend());
+            step_time(&QWEN25_7B, &t, &CONFIG1, &calib).tokens_per_sec(&t)
+        };
+        let t1 = tp(1);
+        let t8 = tp(8);
+        let t32 = tp(32);
+        assert!(t8 > 4.0 * t1, "batch 8 speedup {}", t8 / t1);
+        assert!(t32 > t8);
+    }
+
+    /// Fig. 20: bf16 optimizer cuts I/O volume by >40%.
+    #[test]
+    fn io_volume_cut() {
+        let f = io_volume_per_step(&QWEN25_7B, StateDtype::F32) as f64;
+        let b = io_volume_per_step(&QWEN25_7B, StateDtype::BF16) as f64;
+        let cut = 1.0 - b / f;
+        assert!((0.35..0.55).contains(&cut), "cut {cut} (paper: 0.58 incl. metadata)");
+    }
+}

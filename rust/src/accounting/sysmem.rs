@@ -1,0 +1,311 @@
+//! Peak system-memory model (paper §V-A, Fig. 8's component breakdown).
+//!
+//! Executes the full allocation sequence of one training iteration
+//! with the configured policy allocator (caching-pow2 for
+//! ZeRO-Infinity, alignment-free for MemAscend) in Virtual mode:
+//!
+//! 1. gradient partition flat buffers (fp32, pinned, one per rank)
+//! 2. the parameter buffer pool (monolithic vs adaptive; one pinned
+//!    region, as both systems do)
+//! 3. optimizer-state fetch buffers + swap-out buffer (pinned,
+//!    subgroup-sized, double-buffered)
+//! 4. offloaded activation-checkpoint buffers (pinned, per rank ×
+//!    layer, Eq. 1)
+//! 5. resident small tensors + framework base
+//! 6. the overflow-check transient (baseline chain: 1.25× of the flat
+//!    buffer materialized and freed — the 2.25× total peak; fused: 0)
+
+use std::sync::Arc;
+
+use crate::bufpool::{AdaptivePool, MonolithicPool, ParamBufferPool};
+use crate::config::{HardwareSpec, ModelSpec, TrainSpec};
+use crate::pinned::{
+    AlignedAllocator, CachingAllocator, Cat, HostAllocator, MemoryTracker, Mode,
+};
+use crate::tensors;
+
+/// DeepSpeed-style optimizer subgroup: elements fetched per swap.
+pub fn subgroup_elems(spec: &ModelSpec) -> usize {
+    ((spec.param_count() as usize) / 8).clamp(50_000_000, 250_000_000)
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SysMemBreakdown {
+    pub label: String,
+    /// All in bytes.
+    pub grad_flat: u64,
+    pub param_pool: u64,
+    pub pinned_overhead: u64,
+    pub optim_buf: u64,
+    pub swap_buf: u64,
+    pub act_ckpt: u64,
+    pub overflow_spike: u64,
+    pub resident: u64,
+    pub peak_total: u64,
+}
+
+impl SysMemBreakdown {
+    pub fn gib(&self) -> f64 {
+        crate::util::human::gib(self.peak_total)
+    }
+
+    /// The theoretical minimum of Fig. 8: pool + grad flat only.
+    pub fn theoretical_min(&self) -> u64 {
+        self.param_pool + self.grad_flat
+    }
+}
+
+/// Compute the peak system-memory breakdown for one configuration.
+pub fn peak_sysmem(
+    spec: &ModelSpec,
+    train: &TrainSpec,
+    _hw: &HardwareSpec,
+) -> SysMemBreakdown {
+    let tracker = Arc::new(MemoryTracker::new());
+    let memascend_alloc = train.flags.alignment_free;
+    let alloc: Arc<dyn HostAllocator> = if memascend_alloc {
+        let a = AlignedAllocator::new(Mode::Virtual, tracker.clone());
+        Arc::new(a) as Arc<dyn HostAllocator>
+    } else {
+        let a = CachingAllocator::new(Mode::Virtual, tracker.clone());
+        Arc::new(a) as Arc<dyn HostAllocator>
+    };
+
+    let p_total = spec.param_count() as usize;
+    let ranks = train.ranks.max(1);
+    let mut held = Vec::new();
+
+    // 1. gradient partition flat buffers: fp32, one partition per rank
+    let per_rank = p_total.div_ceil(ranks);
+    for _ in 0..ranks {
+        held.push(alloc.alloc(per_rank * 4, Cat::GradFlat));
+    }
+
+    // 2. parameter buffer pool (full tensor sizes — partitioned reads
+    // shrink per-rank buffers but the node hosts all ranks, so totals
+    // match the unpartitioned pool; see §IV-B "per-process buffers
+    // shrink proportionally with the number of partitions")
+    let dtype = train.precision.compute_dtype();
+    let pool: Box<dyn ParamBufferPool> = if train.flags.adaptive_pool {
+        Box::new(AdaptivePool::new(spec, train.prefetch_depth, dtype, alloc.as_ref()))
+    } else {
+        Box::new(MonolithicPool::new(spec, train.prefetch_depth, dtype, alloc.as_ref()))
+    };
+    let pool_bytes = pool.stats().pool_bytes as u64;
+
+    // 3. optimizer subgroup buffers: double-buffered {master, m, v}
+    // fetches + fp32 swap-out staging
+    let sub = subgroup_elems(spec);
+    let state_bytes = train.optim_dtype.size();
+    for _ in 0..2 {
+        for _ in 0..3 {
+            held.push(alloc.alloc(sub * state_bytes, Cat::OptimBuf));
+        }
+    }
+    for _ in 0..2 {
+        held.push(alloc.alloc(sub * 4, Cat::SwapBuf));
+    }
+
+    // 4. offloaded activation checkpoints (Eq. 1): Ng × B × C × L × H ×
+    // 2 bytes, pinned per rank per layer
+    if train.offloaded_gc {
+        let per_layer = train.batch * train.seq * spec.hidden * 2;
+        for _ in 0..ranks {
+            for _ in 0..spec.layers {
+                held.push(alloc.alloc(per_layer, Cat::ActCkpt));
+            }
+        }
+    }
+
+    // 5. resident small tensors (norms/router master copies, fp32) +
+    // framework base
+    let resident_small: usize = tensors::inventory(spec)
+        .iter()
+        .filter(|t| !t.offloadable())
+        .map(|t| t.numel * 4)
+        .sum();
+    let framework_base = 512 << 20; // interpreter + CUDA ctx + loader
+    tracker.alloc(Cat::Resident, (resident_small + framework_base) as u64);
+
+    // 6. overflow-check transient at its worst moment (everything else
+    // live): baseline materializes abs copy (1.0x) + bool (0.25x)
+    let grad_flat_total = (per_rank * 4 * ranks) as u64;
+    if train.precision.needs_overflow_check() && !train.flags.fused_overflow {
+        let spike = grad_flat_total + grad_flat_total / 4;
+        tracker.alloc(Cat::OverflowTemp, spike);
+        tracker.free(Cat::OverflowTemp, spike);
+    }
+
+    let bd = SysMemBreakdown {
+        label: train.flags.label(),
+        grad_flat: tracker.peak(Cat::GradFlat),
+        param_pool: pool_bytes,
+        pinned_overhead: tracker.peak(Cat::PinnedOverhead),
+        optim_buf: tracker.peak(Cat::OptimBuf),
+        swap_buf: tracker.peak(Cat::SwapBuf),
+        act_ckpt: tracker.peak(Cat::ActCkpt),
+        overflow_spike: tracker.peak(Cat::OverflowTemp),
+        resident: tracker.peak(Cat::Resident),
+        peak_total: tracker.peak_total(),
+    };
+    drop(held);
+    drop(pool);
+    bd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::CONFIG1;
+    use crate::config::presets::{PAPER_DENSE, QWEN25_7B, QWEN3_30B_A3B};
+    use crate::config::MemAscendFlags;
+    use crate::util::human::GIB;
+
+    fn spec_fig8() -> TrainSpec {
+        TrainSpec {
+            batch: 4,
+            seq: 4096,
+            ranks: 2,
+            prefetch_depth: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig8_qwen7b_zero_infinity_vs_memascend() {
+        let mut zi = spec_fig8();
+        zi.flags = MemAscendFlags::baseline();
+        let mut ma = spec_fig8();
+        ma.flags = MemAscendFlags::memascend();
+        let b_zi = peak_sysmem(&QWEN25_7B, &zi, &CONFIG1);
+        let b_ma = peak_sysmem(&QWEN25_7B, &ma, &CONFIG1);
+        // paper: 109.04 -> 43.64 GiB (60% cut). Accept the shape:
+        // large cut, MA in the low-40s..50s, ZI ~90-120.
+        let zi_gib = b_zi.gib();
+        let ma_gib = b_ma.gib();
+        assert!((80.0..130.0).contains(&zi_gib), "ZI {zi_gib} GiB");
+        assert!((38.0..55.0).contains(&ma_gib), "MA {ma_gib} GiB");
+        let cut = 1.0 - ma_gib / zi_gib;
+        assert!(cut > 0.45, "cut {cut}");
+        // component sanity: grad flat identical across modes
+        assert_eq!(b_zi.grad_flat, b_ma.grad_flat);
+        // MA pinned overhead negligible vs ZI's
+        assert!(b_ma.pinned_overhead * 10 < b_zi.pinned_overhead);
+        // overflow spike only in ZI
+        assert!(b_zi.overflow_spike > b_zi.grad_flat);
+        assert_eq!(b_ma.overflow_spike, 0);
+    }
+
+    #[test]
+    fn average_cut_across_models_matches_paper() {
+        // paper Fig. 15: average 55.7% across the four dense models
+        let mut cuts = Vec::new();
+        for m in PAPER_DENSE {
+            let mut zi = spec_fig8();
+            zi.flags = MemAscendFlags::baseline();
+            let mut ma = spec_fig8();
+            ma.flags = MemAscendFlags::memascend();
+            let z = peak_sysmem(m, &zi, &CONFIG1).peak_total as f64;
+            let a = peak_sysmem(m, &ma, &CONFIG1).peak_total as f64;
+            cuts.push(1.0 - a / z);
+        }
+        let avg = cuts.iter().sum::<f64>() / cuts.len() as f64;
+        assert!(
+            (0.45..0.70).contains(&avg),
+            "avg cut {avg} vs paper 0.557 (cuts {cuts:?})"
+        );
+    }
+
+    #[test]
+    fn context_scaling_is_linear_for_memascend() {
+        // Fig. 9: MA scales ~ linearly in C; ZI scales faster (pow2)
+        let mut ma = spec_fig8();
+        ma.flags = MemAscendFlags::memascend();
+        ma.batch = 1;
+        let at = |c: usize| {
+            let mut t = ma.clone();
+            t.seq = c;
+            peak_sysmem(&QWEN25_7B, &t, &CONFIG1).peak_total as f64
+        };
+        let (a, b, c) = (at(4096), at(8192), at(16384));
+        let d1 = b - a;
+        let d2 = c - b;
+        // second difference ~= d1 doubling (act term linear in C)
+        assert!((d2 / d1 - 2.0).abs() < 0.2, "d1 {d1} d2 {d2}");
+    }
+
+    #[test]
+    fn moe_cut_is_larger_than_dense() {
+        // Fig. 18: ~71.9% cut for Qwen3-30B-A3B (embedding-sized slots
+        // for tiny expert tensors are maximally wasteful)
+        let mut zi = spec_fig8();
+        zi.flags = MemAscendFlags::baseline();
+        zi.batch = 1;
+        let mut ma = zi.clone();
+        ma.flags = MemAscendFlags::memascend();
+        let z = peak_sysmem(&QWEN3_30B_A3B, &zi, &CONFIG1).peak_total as f64;
+        let a = peak_sysmem(&QWEN3_30B_A3B, &ma, &CONFIG1).peak_total as f64;
+        let cut = 1.0 - a / z;
+        assert!(cut > 0.55, "MoE cut {cut}");
+    }
+
+    #[test]
+    fn bf16_mixed_precision_cut_is_smaller() {
+        // Fig. 21: bf16 has no overflow spike, so the MA advantage
+        // shrinks (paper: 25.19% vs 55.7%)
+        use crate::config::Precision;
+        let mk = |flags, prec| {
+            let mut t = spec_fig8();
+            t.flags = flags;
+            t.precision = prec;
+            peak_sysmem(&QWEN25_7B, &t, &CONFIG1).peak_total as f64
+        };
+        let cut_f16 = 1.0
+            - mk(MemAscendFlags::memascend(), Precision::MixedF16)
+                / mk(MemAscendFlags::baseline(), Precision::MixedF16);
+        let cut_bf16 = 1.0
+            - mk(MemAscendFlags::memascend(), Precision::MixedBF16)
+                / mk(MemAscendFlags::baseline(), Precision::MixedBF16);
+        assert!(cut_bf16 < cut_f16, "bf16 {cut_bf16} vs f16 {cut_f16}");
+        assert!(cut_bf16 > 0.10, "bf16 cut {cut_bf16}");
+    }
+
+    #[test]
+    fn theoretical_min_close_to_memascend() {
+        // Fig. 8: MA is within ~30-40% of pool+gradflat; ZI needs -72%
+        let mut ma = spec_fig8();
+        ma.flags = MemAscendFlags::memascend();
+        let b = peak_sysmem(&QWEN25_7B, &ma, &CONFIG1);
+        let margin = (b.peak_total - b.theoretical_min()) as f64
+            / b.peak_total as f64;
+        assert!(margin < 0.45, "margin {margin}");
+        let _ = GIB;
+    }
+
+    #[test]
+    fn ablation_single_components_each_help() {
+        let base = {
+            let mut t = spec_fig8();
+            t.flags = MemAscendFlags::baseline();
+            peak_sysmem(&QWEN25_7B, &t, &CONFIG1).peak_total
+        };
+        for i in 0..4 {
+            let mut f = MemAscendFlags::baseline();
+            match i {
+                0 => f.adaptive_pool = true,
+                1 => f.alignment_free = true,
+                2 => f.fused_overflow = true,
+                _ => f.direct_nvme = true,
+            }
+            let mut t = spec_fig8();
+            t.flags = f;
+            let v = peak_sysmem(&QWEN25_7B, &t, &CONFIG1).peak_total;
+            // direct_nvme does not change memory; others strictly help
+            if i == 3 {
+                assert_eq!(v, base);
+            } else {
+                assert!(v < base, "component {i} did not reduce memory");
+            }
+        }
+    }
+}

@@ -1,0 +1,364 @@
+//! MemAscend's adaptive buffer pool (§IV-B).
+//!
+//! One subpool per tensor shape class, each with exactly-sized slots:
+//! embedding-class slots hold vocab×hidden, ffn-class slots hold
+//! intermediate×hidden, kv/qo slots their projection sizes, expert
+//! slots the per-expert FFN size.  Subgroup counts follow the paper:
+//! {embed: 2, ffn: 3N, kv: 2N, qo: 2N} (+ MoE: 3·E·N expert slots),
+//! with N = prefetch depth.  Like the baseline — and like the paper's
+//! implementation — all subpools live in **one monolithic backing
+//! region** with a hashtable mapping lease keys to (offset, size)
+//! metadata, so multi-pool management adds no allocation overhead.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::ModelSpec;
+use crate::dtype::DType;
+use crate::pinned::{Cat, HostAllocator, HostRegion};
+use crate::tensors::{self, ShapeClass, TensorDesc};
+
+use super::{ParamBufferPool, PoolBuf, PoolStats};
+
+struct SubPool {
+    class: ShapeClass,
+    slot_bytes: usize,
+    /// Free slot offsets into the shared backing region.
+    free: Vec<usize>,
+    total_slots: usize,
+}
+
+struct State {
+    subpools: Vec<SubPool>,
+    /// lease key -> (subpool idx, offset, requested bytes)
+    in_use: HashMap<u64, (usize, usize, usize)>,
+    next_key: u64,
+    cur_requested: usize,
+    cur_capacity: usize,
+    stats: PoolStats,
+}
+
+pub struct AdaptivePool {
+    region: Mutex<HostRegion>,
+    state: Mutex<State>,
+    available: Condvar,
+}
+
+impl AdaptivePool {
+    pub fn new(
+        spec: &ModelSpec,
+        prefetch_depth: usize,
+        dtype: DType,
+        alloc: &dyn HostAllocator,
+    ) -> Self {
+        let n = prefetch_depth.max(1);
+        let class_sizes = tensors::class_max_elems(spec);
+        let class_counts: HashMap<ShapeClass, usize> =
+            tensors::class_counts_per_block(spec).into_iter().collect();
+
+        let mut subpools = Vec::new();
+        let mut offset = 0usize;
+        for (class, max_elems) in class_sizes {
+            let slot_bytes = max_elems * dtype.size();
+            let slots = match class {
+                // embedding + lm head are needed once each
+                ShapeClass::Embed => 2,
+                // per-block tensor count × blocks in flight
+                _ => class_counts.get(&class).copied().unwrap_or(0) * n,
+            };
+            if slots == 0 {
+                continue;
+            }
+            let free = (0..slots)
+                .rev()
+                .map(|i| offset + i * slot_bytes)
+                .collect();
+            subpools.push(SubPool { class, slot_bytes, free, total_slots: slots });
+            offset += slot_bytes * slots;
+        }
+        let total = offset;
+        let region = alloc.alloc(total, Cat::ParamPool);
+        Self {
+            region: Mutex::new(region),
+            state: Mutex::new(State {
+                subpools,
+                in_use: HashMap::new(),
+                next_key: 0,
+                cur_requested: 0,
+                cur_capacity: 0,
+                stats: PoolStats { pool_bytes: total, ..Default::default() },
+            }),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Subpool layout summary: (class, slot_bytes, slots).
+    pub fn layout(&self) -> Vec<(ShapeClass, usize, usize)> {
+        self.state
+            .lock()
+            .unwrap()
+            .subpools
+            .iter()
+            .map(|s| (s.class, s.slot_bytes, s.total_slots))
+            .collect()
+    }
+
+    fn subpool_for(st: &State, t: &TensorDesc) -> anyhow::Result<usize> {
+        let class = t.shape_class();
+        st.subpools
+            .iter()
+            .position(|s| s.class == class)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no subpool for class {:?} (tensor {})", class, t.name)
+            })
+    }
+
+    fn grab(&self, st: &mut State, idx: usize, requested: usize) -> PoolBuf {
+        let sp = &mut st.subpools[idx];
+        let offset = sp.free.pop().expect("checked non-empty");
+        let capacity = sp.slot_bytes;
+        let key = st.next_key;
+        st.next_key += 1;
+        st.in_use.insert(key, (idx, offset, requested));
+        st.cur_requested += requested;
+        st.cur_capacity += capacity;
+        st.stats.acquires += 1;
+        st.stats.peak_requested = st.stats.peak_requested.max(st.cur_requested);
+        st.stats.peak_capacity = st.stats.peak_capacity.max(st.cur_capacity);
+        PoolBuf { key, offset, capacity, requested }
+    }
+}
+
+impl ParamBufferPool for AdaptivePool {
+    fn acquire(&self, t: &TensorDesc, dtype: DType) -> anyhow::Result<PoolBuf> {
+        let requested = t.bytes(dtype);
+        let mut st = self.state.lock().unwrap();
+        let idx = Self::subpool_for(&st, t)?;
+        anyhow::ensure!(
+            requested <= st.subpools[idx].slot_bytes,
+            "tensor {} exceeds its class slot",
+            t.name
+        );
+        while st.subpools[idx].free.is_empty() {
+            st = self.available.wait(st).unwrap();
+        }
+        Ok(self.grab(&mut st, idx, requested))
+    }
+
+    fn try_acquire(
+        &self,
+        t: &TensorDesc,
+        dtype: DType,
+    ) -> anyhow::Result<Option<PoolBuf>> {
+        let requested = t.bytes(dtype);
+        let mut st = self.state.lock().unwrap();
+        let idx = Self::subpool_for(&st, t)?;
+        if st.subpools[idx].free.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(self.grab(&mut st, idx, requested)))
+    }
+
+    fn release(&self, buf: PoolBuf) {
+        let mut st = self.state.lock().unwrap();
+        let (idx, offset, requested) = st
+            .in_use
+            .remove(&buf.key)
+            .expect("release of unknown or double-released buffer");
+        let cap = st.subpools[idx].slot_bytes;
+        st.subpools[idx].free.push(offset);
+        st.cur_requested -= requested;
+        st.cur_capacity -= cap;
+        st.stats.releases += 1;
+        drop(st);
+        self.available.notify_all();
+    }
+
+    fn with_buf(&self, buf: &PoolBuf, f: &mut dyn FnMut(&mut [u8])) {
+        let mut region = self.region.lock().unwrap();
+        if region.is_virtual() {
+            f(&mut []);
+            return;
+        }
+        let slice = region.as_mut_slice();
+        f(&mut slice[buf.offset..buf.offset + buf.requested]);
+    }
+
+    fn stats(&self) -> PoolStats {
+        self.state.lock().unwrap().stats
+    }
+
+    fn label(&self) -> &'static str {
+        "adaptive"
+    }
+}
+
+pub fn build(
+    spec: &ModelSpec,
+    prefetch_depth: usize,
+    dtype: DType,
+    alloc: Arc<dyn HostAllocator>,
+) -> Arc<dyn ParamBufferPool> {
+    Arc::new(AdaptivePool::new(spec, prefetch_depth, dtype, alloc.as_ref()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bufpool::test_util::sample_tensors;
+    use crate::bufpool::MonolithicPool;
+    use crate::config::presets;
+    use crate::pinned::{AlignedAllocator, MemoryTracker, Mode};
+    use crate::prop_assert;
+    use crate::util::proptest::{check, Config};
+    use crate::util::rng::Xoshiro256;
+
+    fn valloc() -> Arc<AlignedAllocator> {
+        AlignedAllocator::new(Mode::Virtual, Arc::new(MemoryTracker::new()))
+    }
+
+    #[test]
+    fn subgroup_counts_match_paper() {
+        // paper §IV-B: counts {2, 3N, 2N, 2N} for embed/ffn/kv/qo
+        let pool = AdaptivePool::new(&presets::QWEN25_7B, 2, DType::F16, &valloc());
+        let layout: HashMap<ShapeClass, usize> = pool
+            .layout()
+            .into_iter()
+            .map(|(c, _, slots)| (c, slots))
+            .collect();
+        assert_eq!(layout[&ShapeClass::Embed], 2);
+        assert_eq!(layout[&ShapeClass::Ffn], 3 * 2);
+        assert_eq!(layout[&ShapeClass::Kv], 2 * 2);
+        assert_eq!(layout[&ShapeClass::Qo], 2 * 2);
+    }
+
+    #[test]
+    fn pool_is_dramatically_smaller_than_monolithic() {
+        // Fig. 11: avg 72.71% reduction
+        for spec in presets::PAPER_DENSE {
+            let mono =
+                MonolithicPool::new(spec, 2, DType::F16, &valloc());
+            let adap = AdaptivePool::new(spec, 2, DType::F16, &valloc());
+            let m = mono.stats().pool_bytes as f64;
+            let a = adap.stats().pool_bytes as f64;
+            let reduction = 1.0 - a / m;
+            assert!(
+                reduction > 0.5,
+                "{}: only {:.1}% reduction",
+                spec.name,
+                reduction * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn acquire_gets_exact_class_slot() {
+        let spec = &presets::QWEN25_7B;
+        let pool = AdaptivePool::new(spec, 2, DType::F16, &valloc());
+        let ts = sample_tensors(spec);
+        let ffn = ts.iter().find(|t| t.name.contains("w_gate")).unwrap();
+        let b = pool.acquire(ffn, DType::F16).unwrap();
+        assert_eq!(b.capacity, 18_944 * 3584 * 2);
+        assert_eq!(b.requested, b.capacity); // exact fit: zero waste
+        pool.release(b);
+    }
+
+    #[test]
+    fn moe_expert_class_exists() {
+        let spec = &presets::QWEN3_30B_A3B;
+        let pool = AdaptivePool::new(spec, 1, DType::F16, &valloc());
+        let layout: HashMap<ShapeClass, usize> = pool
+            .layout()
+            .into_iter()
+            .map(|(c, _, slots)| (c, slots))
+            .collect();
+        assert_eq!(layout[&ShapeClass::Expert], 3 * 128);
+        // expert slots are small — the pool must not size them to the
+        // embedding (the baseline's failure on MoE, Fig. 18)
+        let expert_slot = pool
+            .layout()
+            .iter()
+            .find(|(c, _, _)| *c == ShapeClass::Expert)
+            .unwrap()
+            .1;
+        assert_eq!(expert_slot, 2048 * 768 * 2);
+    }
+
+    #[test]
+    fn prop_no_overlap_and_exact_free() {
+        check("adaptive-pool", Config { cases: 32, ..Default::default() }, |rng, _| {
+            let spec = &presets::TINY100M;
+            let pool = AdaptivePool::new(spec, 2, DType::F16, &valloc());
+            let ts = sample_tensors(spec);
+            let mut held: Vec<PoolBuf> = Vec::new();
+            for _ in 0..200 {
+                if !held.is_empty() && rng.next_f64() < 0.5 {
+                    let i = rng.below(held.len());
+                    pool.release(held.swap_remove(i));
+                } else {
+                    let t = &ts[rng.below(ts.len())];
+                    if let Some(b) = pool.try_acquire(t, DType::F16).unwrap() {
+                        // overlap check against everything held
+                        for o in &held {
+                            let disjoint = b.offset + b.capacity <= o.offset
+                                || o.offset + o.capacity <= b.offset;
+                            prop_assert!(
+                                disjoint,
+                                "lease [{},{}) overlaps [{},{})",
+                                b.offset,
+                                b.offset + b.capacity,
+                                o.offset,
+                                o.offset + o.capacity
+                            );
+                        }
+                        held.push(b);
+                    }
+                }
+            }
+            let st = pool.stats();
+            prop_assert!(
+                st.acquires == st.releases + held.len() as u64,
+                "lease ledger drift"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn real_mode_data_roundtrip() {
+        let tracker = Arc::new(MemoryTracker::new());
+        let alloc = AlignedAllocator::new(Mode::Real, tracker);
+        let spec = &presets::SMOKE;
+        let pool = AdaptivePool::new(spec, 1, DType::F32, &alloc);
+        let ts = sample_tensors(spec);
+        let b = pool.acquire(&ts[0], DType::F32).unwrap();
+        pool.with_buf(&b, &mut |s| {
+            for (i, x) in s.iter_mut().enumerate() {
+                *x = (i % 251) as u8;
+            }
+        });
+        pool.with_buf(&b, &mut |s| {
+            assert!(s.iter().enumerate().all(|(i, &x)| x == (i % 251) as u8));
+        });
+        pool.release(b);
+    }
+
+    #[test]
+    fn blocking_acquire_wakes_on_release() {
+        let spec = &presets::SMOKE;
+        let pool = Arc::new(AdaptivePool::new(spec, 1, DType::F16, &valloc()));
+        let ts = sample_tensors(spec);
+        let embed = ts.iter().find(|t| t.name == "embed").unwrap().clone();
+        let b1 = pool.acquire(&embed, DType::F16).unwrap();
+        let b2 = pool.acquire(&embed, DType::F16).unwrap(); // 2 embed slots
+        let p2 = pool.clone();
+        let e2 = embed.clone();
+        let h = std::thread::spawn(move || p2.acquire(&e2, DType::F16).unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        pool.release(b1);
+        let b3 = h.join().unwrap();
+        pool.release(b2);
+        pool.release(b3);
+        let _ = Xoshiro256::new(0); // keep import used in cfg permutations
+    }
+}

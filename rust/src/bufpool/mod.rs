@@ -1,0 +1,94 @@
+//! Parameter buffer pools: prefetch staging between SSD and "GPU".
+//!
+//! The pool is where §III-A's fragmentation lives.  Both designs follow
+//! ZeRO-Infinity's underlying scheme — allocate **one monolithic pinned
+//! region** up front, then hand out logical sub-buffers tracked by a
+//! hashtable of metadata — but differ in how sub-buffers are sized:
+//!
+//! - [`monolithic::MonolithicPool`] (baseline): every buffer is sized
+//!   to the *largest* offloadable tensor (the embedding), so a kv
+//!   projection occupies an embedding-sized slot → ~70%+ internal
+//!   fragmentation.
+//! - [`adaptive::AdaptivePool`] (MemAscend §IV-B): one subpool per
+//!   shape class (embed / ffn / kv / qo / expert), each sized exactly,
+//!   with subgroup counts {2, 3N, 2N, 2N} for N blocks in flight.
+
+pub mod adaptive;
+pub mod monolithic;
+
+pub use adaptive::AdaptivePool;
+pub use monolithic::MonolithicPool;
+
+use crate::dtype::DType;
+use crate::tensors::TensorDesc;
+
+/// A leased sub-buffer: logical offset/len into the pool's monolithic
+/// backing region plus the hashtable key that tracks it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolBuf {
+    pub key: u64,
+    pub offset: usize,
+    /// Capacity of the slot (the fragmentation source when > requested).
+    pub capacity: usize,
+    /// Bytes actually requested for the tensor.
+    pub requested: usize,
+}
+
+/// Utilization snapshot for Fig. 11.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    /// Total bytes of the backing region (what the pool pins forever).
+    pub pool_bytes: usize,
+    /// Peak simultaneously-requested bytes (the "actual need").
+    pub peak_requested: usize,
+    /// Peak simultaneously-occupied slot capacity.
+    pub peak_capacity: usize,
+    pub acquires: u64,
+    pub releases: u64,
+}
+
+impl PoolStats {
+    /// Internal fragmentation = 1 - actual-need / pool-size
+    /// (paper §III-A: 13.05 GiB pool, 3.81 GiB needed -> 70.82%).
+    pub fn fragmentation(&self) -> f64 {
+        if self.pool_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.peak_requested as f64 / self.pool_bytes as f64
+    }
+}
+
+/// Common interface the swapper drives.
+pub trait ParamBufferPool: Send + Sync {
+    /// Lease a staging buffer for tensor `t` at transfer dtype `dtype`.
+    /// Blocks until a slot frees up (backpressure on the prefetcher).
+    fn acquire(&self, t: &TensorDesc, dtype: DType) -> anyhow::Result<PoolBuf>;
+
+    /// Non-blocking acquire (returns None when the class is exhausted).
+    fn try_acquire(&self, t: &TensorDesc, dtype: DType)
+        -> anyhow::Result<Option<PoolBuf>>;
+
+    fn release(&self, buf: PoolBuf);
+
+    /// Run `f` over the buffer's backing bytes (requested span).
+    /// Virtual-mode pools call `f` with an empty slice.
+    fn with_buf(&self, buf: &PoolBuf, f: &mut dyn FnMut(&mut [u8]));
+
+    fn stats(&self) -> PoolStats;
+
+    fn label(&self) -> &'static str;
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use crate::config::ModelSpec;
+    use crate::tensors::{inventory, TensorDesc};
+
+    /// The offloadable tensors of one block plus embed/head.
+    pub fn sample_tensors(spec: &ModelSpec) -> Vec<TensorDesc> {
+        inventory(spec)
+            .into_iter()
+            .filter(|t| t.offloadable())
+            .collect()
+    }
+}

@@ -1,0 +1,241 @@
+//! Baseline buffer pool: uniform slots sized to the largest tensor.
+//!
+//! Reproduces ZeRO-Infinity's parameter-swap buffer management: the
+//! pool holds `count` identical slots of `slot_bytes` each, where
+//! `slot_bytes` is the largest offloadable tensor's transfer size and
+//! `count` covers the embedding + N in-flight blocks' tensors.  Every
+//! acquire occupies a full slot regardless of the tensor's real size —
+//! the internal fragmentation of §III-A.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::ModelSpec;
+use crate::dtype::DType;
+use crate::pinned::{Cat, HostAllocator, HostRegion};
+use crate::tensors::{self, TensorDesc};
+
+use super::{ParamBufferPool, PoolBuf, PoolStats};
+
+struct State {
+    free_slots: Vec<usize>,
+    in_use: HashMap<u64, (usize, usize)>, // key -> (slot, requested)
+    next_key: u64,
+    cur_requested: usize,
+    cur_capacity: usize,
+    stats: PoolStats,
+}
+
+pub struct MonolithicPool {
+    slot_bytes: usize,
+    region: Mutex<HostRegion>,
+    state: Mutex<State>,
+    available: Condvar,
+}
+
+impl MonolithicPool {
+    /// `prefetch_depth` = N blocks in flight (paper's buffer-count
+    /// driver). Transfer dtype sizes the slots.
+    pub fn new(
+        spec: &ModelSpec,
+        prefetch_depth: usize,
+        dtype: DType,
+        alloc: &dyn HostAllocator,
+    ) -> Self {
+        let slot_bytes = tensors::largest_offloadable_elems(spec) * dtype.size();
+        let per_block: usize = tensors::class_counts_per_block(spec)
+            .iter()
+            .map(|(_, n)| n)
+            .sum();
+        // embedding + lm head + N blocks' offloadable tensors
+        let count = 2 + per_block * prefetch_depth.max(1);
+        let total = slot_bytes * count;
+        let region = alloc.alloc(total, Cat::ParamPool);
+        Self {
+            slot_bytes,
+            region: Mutex::new(region),
+            state: Mutex::new(State {
+                free_slots: (0..count).rev().collect(),
+                in_use: HashMap::new(),
+                next_key: 0,
+                cur_requested: 0,
+                cur_capacity: 0,
+                stats: PoolStats { pool_bytes: total, ..Default::default() },
+            }),
+            available: Condvar::new(),
+        }
+    }
+
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_bytes
+    }
+
+    fn grab(&self, st: &mut State, requested: usize) -> PoolBuf {
+        let slot = st.free_slots.pop().expect("checked non-empty");
+        let key = st.next_key;
+        st.next_key += 1;
+        st.in_use.insert(key, (slot, requested));
+        st.cur_requested += requested;
+        st.cur_capacity += self.slot_bytes;
+        st.stats.acquires += 1;
+        st.stats.peak_requested = st.stats.peak_requested.max(st.cur_requested);
+        st.stats.peak_capacity = st.stats.peak_capacity.max(st.cur_capacity);
+        PoolBuf {
+            key,
+            offset: slot * self.slot_bytes,
+            capacity: self.slot_bytes,
+            requested,
+        }
+    }
+}
+
+impl ParamBufferPool for MonolithicPool {
+    fn acquire(&self, t: &TensorDesc, dtype: DType) -> anyhow::Result<PoolBuf> {
+        let requested = t.bytes(dtype);
+        anyhow::ensure!(
+            requested <= self.slot_bytes,
+            "tensor {} ({} B) exceeds slot size {} B",
+            t.name,
+            requested,
+            self.slot_bytes
+        );
+        let mut st = self.state.lock().unwrap();
+        while st.free_slots.is_empty() {
+            st = self.available.wait(st).unwrap();
+        }
+        Ok(self.grab(&mut st, requested))
+    }
+
+    fn try_acquire(
+        &self,
+        t: &TensorDesc,
+        dtype: DType,
+    ) -> anyhow::Result<Option<PoolBuf>> {
+        let requested = t.bytes(dtype);
+        anyhow::ensure!(requested <= self.slot_bytes, "tensor too large for slot");
+        let mut st = self.state.lock().unwrap();
+        if st.free_slots.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(self.grab(&mut st, requested)))
+    }
+
+    fn release(&self, buf: PoolBuf) {
+        let mut st = self.state.lock().unwrap();
+        let (slot, requested) = st
+            .in_use
+            .remove(&buf.key)
+            .expect("release of unknown or double-released buffer");
+        st.free_slots.push(slot);
+        st.cur_requested -= requested;
+        st.cur_capacity -= self.slot_bytes;
+        st.stats.releases += 1;
+        drop(st);
+        self.available.notify_one();
+    }
+
+    fn with_buf(&self, buf: &PoolBuf, f: &mut dyn FnMut(&mut [u8])) {
+        let mut region = self.region.lock().unwrap();
+        if region.is_virtual() {
+            f(&mut []);
+            return;
+        }
+        let slice = region.as_mut_slice();
+        f(&mut slice[buf.offset..buf.offset + buf.requested]);
+    }
+
+    fn stats(&self) -> PoolStats {
+        self.state.lock().unwrap().stats
+    }
+
+    fn label(&self) -> &'static str {
+        "monolithic"
+    }
+}
+
+/// Convenience constructor matching the adaptive pool's signature.
+pub fn build(
+    spec: &ModelSpec,
+    prefetch_depth: usize,
+    dtype: DType,
+    alloc: Arc<dyn HostAllocator>,
+) -> Arc<dyn ParamBufferPool> {
+    Arc::new(MonolithicPool::new(spec, prefetch_depth, dtype, alloc.as_ref()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bufpool::test_util::sample_tensors;
+    use crate::config::presets;
+    use crate::pinned::{AlignedAllocator, MemoryTracker, Mode};
+
+    fn mk(spec: &ModelSpec, depth: usize) -> MonolithicPool {
+        let alloc =
+            AlignedAllocator::new(Mode::Virtual, Arc::new(MemoryTracker::new()));
+        MonolithicPool::new(spec, depth, DType::F16, &Arc::clone(&alloc))
+    }
+
+    #[test]
+    fn slots_sized_to_embedding() {
+        let pool = mk(&presets::QWEN25_7B, 2);
+        assert_eq!(pool.slot_bytes(), 152_064 * 3584 * 2);
+    }
+
+    #[test]
+    fn small_tensor_occupies_full_slot() {
+        let pool = mk(&presets::QWEN25_7B, 2);
+        let ts = sample_tensors(&presets::QWEN25_7B);
+        let kv = ts.iter().find(|t| t.name.contains("wk")).unwrap();
+        let buf = pool.acquire(kv, DType::F16).unwrap();
+        assert_eq!(buf.capacity, pool.slot_bytes());
+        assert!(buf.requested < buf.capacity / 10); // >90% slot waste
+        pool.release(buf);
+    }
+
+    #[test]
+    fn fragmentation_matches_paper_ballpark() {
+        // Walk one full forward pass's acquires with depth-2 prefetch;
+        // fragmentation should land in the paper's 70%+ range.
+        let spec = &presets::QWEN25_7B;
+        let pool = mk(spec, 2);
+        let ts = sample_tensors(spec);
+        // hold embedding + 2 blocks, then stream remaining blocks
+        let mut held: Vec<PoolBuf> = Vec::new();
+        for t in ts.iter().take(1 + 14) {
+            held.push(pool.acquire(t, DType::F16).unwrap());
+        }
+        for t in ts.iter().skip(15) {
+            let b = pool.acquire(t, DType::F16).unwrap();
+            pool.release(held.remove(1.min(held.len() - 1)));
+            held.push(b);
+        }
+        let frag = pool.stats().fragmentation();
+        assert!(frag > 0.55, "fragmentation {frag} unexpectedly low");
+    }
+
+    #[test]
+    fn exhaustion_blocks_try_acquire() {
+        let spec = &presets::SMOKE;
+        let pool = mk(spec, 1);
+        let ts = sample_tensors(spec);
+        let mut held = Vec::new();
+        while let Some(b) = pool.try_acquire(&ts[0], DType::F16).unwrap() {
+            held.push(b);
+        }
+        assert!(pool.try_acquire(&ts[0], DType::F16).unwrap().is_none());
+        pool.release(held.pop().unwrap());
+        assert!(pool.try_acquire(&ts[0], DType::F16).unwrap().is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "double-released")]
+    fn double_release_panics() {
+        let spec = &presets::SMOKE;
+        let pool = mk(spec, 1);
+        let ts = sample_tensors(spec);
+        let b = pool.acquire(&ts[0], DType::F16).unwrap();
+        pool.release(b);
+        pool.release(b);
+    }
+}

@@ -1,0 +1,233 @@
+//! In-process collectives — the "network" of Fig. 1.
+//!
+//! ZeRO-3 data parallelism needs exactly two primitives: **allgather**
+//! (assemble full parameters from per-rank partitions before compute)
+//! and **reduce-scatter** (sum gradients, leave each rank its own
+//! partition).  Ranks here are threads in one process, so the wire is a
+//! memcpy through a rendezvous slot; the partitioning math is identical
+//! to NCCL's.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Slot {
+    deposits: Vec<Option<Vec<f32>>>,
+    result: Option<Arc<Vec<f32>>>,
+    arrived: usize,
+    departed: usize,
+    generation: u64,
+}
+
+/// A rendezvous-based collective group of `n` ranks.
+pub struct Collective {
+    n: usize,
+    slot: Mutex<Slot>,
+    cv: Condvar,
+}
+
+impl Collective {
+    pub fn new(n: usize) -> Arc<Self> {
+        Arc::new(Self {
+            n,
+            slot: Mutex::new(Slot {
+                deposits: (0..n).map(|_| None).collect(),
+                result: None,
+                arrived: 0,
+                departed: 0,
+                generation: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.n
+    }
+
+    /// Generic rendezvous: every rank deposits its vector; the last
+    /// arrival computes `combine` over all deposits; everyone receives
+    /// the shared result.
+    fn rendezvous<F>(&self, rank: usize, data: Vec<f32>, combine: F) -> Arc<Vec<f32>>
+    where
+        F: FnOnce(Vec<Vec<f32>>) -> Vec<f32>,
+    {
+        let mut slot = self.slot.lock().unwrap();
+        let my_gen = slot.generation;
+        // wait for the previous round to fully drain
+        while slot.departed > 0 && slot.departed < self.n {
+            slot = self.cv.wait(slot).unwrap();
+        }
+        debug_assert!(slot.deposits[rank].is_none(), "rank {rank} double deposit");
+        slot.deposits[rank] = Some(data);
+        slot.arrived += 1;
+        if slot.arrived == self.n {
+            let deposits: Vec<Vec<f32>> =
+                slot.deposits.iter_mut().map(|d| d.take().unwrap()).collect();
+            slot.result = Some(Arc::new(combine(deposits)));
+            slot.arrived = 0;
+            slot.departed = 0;
+            slot.generation += 1;
+            self.cv.notify_all();
+        } else {
+            while slot.generation == my_gen {
+                slot = self.cv.wait(slot).unwrap();
+            }
+        }
+        let out = slot.result.as_ref().unwrap().clone();
+        slot.departed += 1;
+        if slot.departed == self.n {
+            slot.result = None;
+            slot.departed = 0;
+            self.cv.notify_all();
+        }
+        out
+    }
+
+    /// Allgather: concatenate per-rank partitions in rank order.
+    /// Partitions may have unequal length (last rank's remainder).
+    pub fn allgather(&self, rank: usize, partition: Vec<f32>) -> Vec<f32> {
+        if self.n == 1 {
+            return partition;
+        }
+        self.rendezvous(rank, partition, |parts| {
+            let mut out = Vec::with_capacity(parts.iter().map(Vec::len).sum());
+            for p in parts {
+                out.extend_from_slice(&p);
+            }
+            out
+        })
+        .to_vec()
+    }
+
+    /// Reduce-scatter with mean: sums full-length gradient vectors
+    /// element-wise, divides by rank count, returns this rank's
+    /// partition `[rank*chunk, min((rank+1)*chunk, n))`.
+    pub fn reduce_scatter_mean(&self, rank: usize, full: Vec<f32>) -> Vec<f32> {
+        let len = full.len();
+        let chunk = len.div_ceil(self.n);
+        if self.n == 1 {
+            return full;
+        }
+        let n_ranks = self.n as f32;
+        let summed = self.rendezvous(rank, full, move |parts| {
+            let mut acc = parts[0].clone();
+            for p in &parts[1..] {
+                for (a, b) in acc.iter_mut().zip(p) {
+                    *a += *b;
+                }
+            }
+            for a in acc.iter_mut() {
+                *a /= n_ranks;
+            }
+            acc
+        });
+        let lo = (rank * chunk).min(len);
+        let hi = ((rank + 1) * chunk).min(len);
+        summed[lo..hi].to_vec()
+    }
+
+    /// Barrier + scalar OR-reduce (used for the global overflow flag:
+    /// any rank overflowing skips the step on all ranks).
+    pub fn any_flag(&self, rank: usize, flag: bool) -> bool {
+        if self.n == 1 {
+            return flag;
+        }
+        let r = self.rendezvous(rank, vec![f32::from(u8::from(flag))], |parts| {
+            vec![parts.iter().map(|p| p[0]).sum::<f32>()]
+        });
+        r[0] > 0.0
+    }
+}
+
+/// Partition bounds for ZeRO-3: rank r owns [lo, hi) of a flat buffer.
+pub fn partition_bounds(len: usize, ranks: usize, rank: usize) -> (usize, usize) {
+    let chunk = len.div_ceil(ranks);
+    ((rank * chunk).min(len), ((rank + 1) * chunk).min(len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_bounds_cover() {
+        for len in [0usize, 1, 10, 101] {
+            for ranks in [1usize, 2, 3, 4] {
+                let mut total = 0;
+                for r in 0..ranks {
+                    let (lo, hi) = partition_bounds(len, ranks, r);
+                    assert!(lo <= hi);
+                    total += hi - lo;
+                }
+                assert_eq!(total, len);
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_concatenates_in_rank_order() {
+        let c = Collective::new(3);
+        let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let hs: Vec<_> = (0..3)
+                .map(|r| {
+                    let c = c.clone();
+                    s.spawn(move || c.allgather(r, vec![r as f32; 2]))
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for o in outs {
+            assert_eq!(o, vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_means_and_partitions() {
+        let c = Collective::new(2);
+        let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let hs: Vec<_> = (0..2)
+                .map(|r| {
+                    let c = c.clone();
+                    s.spawn(move || {
+                        let full = vec![(r + 1) as f32; 5]; // rank0: 1s, rank1: 2s
+                        c.reduce_scatter_mean(r, full)
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // mean = 1.5 everywhere; chunk = 3 -> rank0 gets 3, rank1 gets 2
+        assert_eq!(outs[0], vec![1.5; 3]);
+        assert_eq!(outs[1], vec![1.5; 2]);
+    }
+
+    #[test]
+    fn any_flag_ors_across_ranks() {
+        let c = Collective::new(3);
+        let outs: Vec<bool> = std::thread::scope(|s| {
+            let hs: Vec<_> = (0..3)
+                .map(|r| {
+                    let c = c.clone();
+                    s.spawn(move || c.any_flag(r, r == 1))
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(outs.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn repeated_rounds_do_not_deadlock() {
+        let c = Collective::new(2);
+        std::thread::scope(|s| {
+            for r in 0..2 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for round in 0..50 {
+                        let v = c.allgather(r, vec![round as f32]);
+                        assert_eq!(v.len(), 2);
+                    }
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,198 @@
+//! Hardware profiles (paper Table III + Table V) and derived bandwidths.
+//!
+//! The accounting + performance model scales component costs by these
+//! parameters; the *local* profile describes this container and is what
+//! real benches run under.
+
+/// One machine configuration.
+#[derive(Debug, Clone)]
+pub struct HardwareSpec {
+    pub name: &'static str,
+    pub cpu: &'static str,
+    /// DRAM capacity in GiB.
+    pub dram_gib: f64,
+    /// Peak DRAM bandwidth, GiB/s (from MT/s × channels × 8B).
+    pub dram_gibs: f64,
+    /// PCIe generation of the GPU/SSD links.
+    pub pcie_gen: u8,
+    pub gpus: usize,
+    pub vram_gib: f64,
+    /// Relative *achieved* GPU throughput in SSD-offloaded training
+    /// (C1's H100 = 1.0). Offloaded steps are far from peak MFU, so
+    /// slower cards lose less than their spec-sheet ratio suggests.
+    pub gpu_rel_flops: f64,
+    pub ssds: usize,
+    /// Per-SSD sustained sequential read/write, GiB/s.
+    pub ssd_read_gibs: f64,
+    pub ssd_write_gibs: f64,
+    /// Device-level 4KiB random access latency, microseconds.
+    pub ssd_lat_us: f64,
+    /// SLC/DRAM write-cache size per SSD, GiB (burst absorption).
+    pub ssd_cache_gib: f64,
+    /// Relative single-core CPU speed (Xeon 6780E core = 1.0) — scales
+    /// overflow-check/optimizer latency in projections.
+    pub cpu_rel: f64,
+    pub cpu_threads: usize,
+}
+
+impl HardwareSpec {
+    /// PCIe x16 practical bandwidth, GiB/s.
+    pub fn pcie_gibs(&self) -> f64 {
+        match self.pcie_gen {
+            3 => 12.0,
+            4 => 24.0,
+            5 => 48.0,
+            g => 6.0 * f64::from(g),
+        }
+    }
+
+    /// Aggregate SSD bandwidths across the array.
+    pub fn ssd_agg_read_gibs(&self) -> f64 {
+        self.ssd_read_gibs * self.ssds as f64
+    }
+
+    pub fn ssd_agg_write_gibs(&self) -> f64 {
+        self.ssd_write_gibs * self.ssds as f64
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<&'static HardwareSpec> {
+        ALL.iter().find(|h| h.name == name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown hardware profile '{name}' (available: {})",
+                ALL.iter().map(|h| h.name).collect::<Vec<_>>().join(", ")
+            )
+        }).copied()
+    }
+}
+
+/// Configuration 1 (Table III): Xeon 6780E, 1 TB DDR5-6400, PCIe5,
+/// 2×H100 PCIe, 1× DapuStor H5100 7.5 TB.
+pub static CONFIG1: HardwareSpec = HardwareSpec {
+    name: "config1",
+    cpu: "Intel Xeon 6780E",
+    dram_gib: 1024.0,
+    dram_gibs: 409.6, // 8ch × 6400 MT/s × 8 B
+    pcie_gen: 5,
+    gpus: 2,
+    vram_gib: 80.0,
+    gpu_rel_flops: 1.0,
+    ssds: 1,
+    ssd_read_gibs: 13.0,
+    ssd_write_gibs: 9.0,
+    ssd_lat_us: 60.0,
+    ssd_cache_gib: 24.0,
+    cpu_rel: 1.0,
+    cpu_threads: 288,
+};
+
+/// Configuration 2 (Table III): 2× EPYC 7282, 1 TB DDR4-3200, PCIe4,
+/// 1× A5000, 2× Phison AI100E.
+pub static CONFIG2: HardwareSpec = HardwareSpec {
+    name: "config2",
+    cpu: "2x AMD EPYC 7282",
+    dram_gib: 1024.0,
+    dram_gibs: 204.8,
+    pcie_gen: 4,
+    gpus: 1,
+    vram_gib: 24.0,
+    gpu_rel_flops: 0.5, // A5000, offload-achieved (not the ~0.11 peak ratio)
+    ssds: 2,
+    ssd_read_gibs: 6.8,
+    ssd_write_gibs: 5.2,
+    ssd_lat_us: 80.0,
+    ssd_cache_gib: 8.0,
+    cpu_rel: 0.45, // Zen2 2.8 GHz, AVX2-only vs AVX512 — paper: overflow
+    // check ~2.2x slower on C2 (Fig. 12)
+    cpu_threads: 64,
+};
+
+/// Configuration 3 (Table V, MoE): Xeon 8480+, 1 TB DDR5-4800, PCIe5,
+/// 2×H100 SXM5, 2× Samsung 980 Pro.
+pub static CONFIG3: HardwareSpec = HardwareSpec {
+    name: "config3",
+    cpu: "Intel Xeon 8480+",
+    dram_gib: 1024.0,
+    dram_gibs: 307.2,
+    pcie_gen: 5,
+    gpus: 2,
+    vram_gib: 80.0,
+    gpu_rel_flops: 1.1, // SXM5 w/ NVL
+    ssds: 2,
+    ssd_read_gibs: 6.5,
+    ssd_write_gibs: 4.6,
+    ssd_lat_us: 70.0,
+    ssd_cache_gib: 6.0,
+    cpu_rel: 0.9,
+    cpu_threads: 112,
+};
+
+/// The motivational-experiment machine (§III-E, Table II):
+/// 24 GiB GPU, 128 GiB system memory cap.
+pub static COMMODITY128: HardwareSpec = HardwareSpec {
+    name: "commodity128",
+    cpu: "commodity",
+    dram_gib: 128.0,
+    dram_gibs: 76.8,
+    pcie_gen: 4,
+    gpus: 1,
+    vram_gib: 24.0,
+    gpu_rel_flops: 0.4,
+    ssds: 1,
+    ssd_read_gibs: 7.0,
+    ssd_write_gibs: 5.0,
+    ssd_lat_us: 80.0,
+    ssd_cache_gib: 8.0,
+    cpu_rel: 0.5,
+    cpu_threads: 16,
+};
+
+/// This container (single core, tmpfs-backed storage): the profile real
+/// benches run under.
+pub static LOCAL: HardwareSpec = HardwareSpec {
+    name: "local",
+    cpu: "container (1 core)",
+    dram_gib: 35.0,
+    dram_gibs: 10.0,
+    pcie_gen: 3,
+    gpus: 0,
+    vram_gib: 0.0,
+    gpu_rel_flops: 0.0,
+    ssds: 1,
+    ssd_read_gibs: 1.5,
+    ssd_write_gibs: 1.0,
+    ssd_lat_us: 100.0,
+    ssd_cache_gib: 0.5,
+    cpu_rel: 0.5,
+    cpu_threads: 1,
+};
+
+pub static ALL: &[&HardwareSpec] =
+    &[&CONFIG1, &CONFIG2, &CONFIG3, &COMMODITY128, &LOCAL];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcie_bandwidth_by_gen() {
+        assert_eq!(CONFIG1.pcie_gibs(), 48.0);
+        assert_eq!(CONFIG2.pcie_gibs(), 24.0);
+    }
+
+    #[test]
+    fn config2_is_slower_cpu() {
+        assert!(CONFIG2.cpu_rel < CONFIG1.cpu_rel);
+    }
+
+    #[test]
+    fn aggregate_ssd_bandwidth() {
+        assert!(CONFIG2.ssd_agg_read_gibs() > CONFIG2.ssd_read_gibs);
+        assert_eq!(CONFIG1.ssd_agg_read_gibs(), CONFIG1.ssd_read_gibs);
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(HardwareSpec::by_name("config1").is_ok());
+        assert!(HardwareSpec::by_name("cray").is_err());
+    }
+}

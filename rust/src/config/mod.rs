@@ -1,0 +1,9 @@
+//! Configuration: model architectures, hardware profiles, training specs.
+
+pub mod hardware;
+pub mod presets;
+pub mod train;
+
+pub use hardware::HardwareSpec;
+pub use presets::ModelSpec;
+pub use train::{MemAscendFlags, Precision, TrainSpec};

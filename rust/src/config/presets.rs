@@ -1,0 +1,211 @@
+//! Model architecture specs.
+//!
+//! Full-scale architectures (used by the accounting engine to reproduce
+//! the paper's 7B–32B peak-memory numbers from their *exact* tensor
+//! shapes) plus the runnable tiny configs that mirror
+//! `python/compile/configs.py` (kept consistent by integration tests
+//! against the AOT manifest).
+
+/// Dense or MoE decoder architecture, enough to enumerate every
+/// parameter tensor with its exact shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub intermediate: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    /// MoE: experts per layer (0 = dense).
+    pub n_experts: usize,
+    /// MoE: per-expert FFN intermediate size.
+    pub expert_intermediate: usize,
+    /// MoE: experts activated per token (throughput model only).
+    pub experts_per_token: usize,
+    /// Whether embedding and lm_head share one tensor.
+    pub tie_embeddings: bool,
+}
+
+impl ModelSpec {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim()
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 0
+    }
+
+    /// Total parameter count (validated against known model sizes).
+    pub fn param_count(&self) -> u64 {
+        crate::tensors::inventory(self)
+            .iter()
+            .map(|t| t.numel as u64)
+            .sum()
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<&'static ModelSpec> {
+        ALL.iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown model '{name}' (available: {})",
+                    ALL.iter().map(|m| m.name).collect::<Vec<_>>().join(", ")
+                )
+            }).copied()
+    }
+}
+
+const fn dense(
+    name: &'static str,
+    vocab: usize,
+    hidden: usize,
+    intermediate: usize,
+    layers: usize,
+    heads: usize,
+    kv_heads: usize,
+) -> ModelSpec {
+    ModelSpec {
+        name,
+        vocab,
+        hidden,
+        intermediate,
+        layers,
+        heads,
+        kv_heads,
+        n_experts: 0,
+        expert_intermediate: 0,
+        experts_per_token: 0,
+        tie_embeddings: false,
+    }
+}
+
+/// Llama 3.1 8B (HF config: 128256 vocab, 4096 h, 14336 ffn, 32 L, GQA 8).
+pub static LLAMA31_8B: ModelSpec =
+    dense("llama3.1-8b", 128_256, 4096, 14_336, 32, 32, 8);
+
+/// Qwen2.5-7B (152064 vocab, 3584 h, 18944 ffn, 28 L, GQA 4).
+pub static QWEN25_7B: ModelSpec =
+    dense("qwen2.5-7b", 152_064, 3584, 18_944, 28, 28, 4);
+
+/// Qwen2.5-14B (152064 vocab, 5120 h, 13824 ffn, 48 L, GQA 8).
+pub static QWEN25_14B: ModelSpec =
+    dense("qwen2.5-14b", 152_064, 5120, 13_824, 48, 40, 8);
+
+/// Qwen2.5-32B (152064 vocab, 5120 h, 27648 ffn, 64 L, GQA 8).
+pub static QWEN25_32B: ModelSpec =
+    dense("qwen2.5-32b", 152_064, 5120, 27_648, 64, 40, 8);
+
+/// Qwen2.5-0.5B (used by the paper's convergence experiment, Fig. 19).
+pub static QWEN25_05B: ModelSpec =
+    dense("qwen2.5-0.5b", 151_936, 896, 4864, 24, 14, 2);
+
+/// Llama-3.2-1B-class model for the Table II motivational experiment
+/// (tied embeddings, like the real 1B checkpoint).
+pub static DENSE_1B: ModelSpec = ModelSpec {
+    name: "dense-1b",
+    vocab: 128_256,
+    hidden: 2048,
+    intermediate: 8192,
+    layers: 16,
+    heads: 32,
+    kv_heads: 8,
+    n_experts: 0,
+    expert_intermediate: 0,
+    experts_per_token: 0,
+    tie_embeddings: true,
+};
+
+/// Llama-3.2-3B-class model for the Table II motivational experiment.
+pub static DENSE_3B: ModelSpec = dense("dense-3b", 128_256, 3072, 8192, 28, 24, 8);
+
+/// Qwen3-30B-A3B: sparse MoE, 128 experts, 8 active, expert ffn 768.
+pub static QWEN3_30B_A3B: ModelSpec = ModelSpec {
+    name: "qwen3-30b-a3b",
+    vocab: 151_936,
+    hidden: 2048,
+    intermediate: 0, // MoE layers have no dense FFN
+    layers: 48,
+    heads: 32,
+    kv_heads: 4,
+    n_experts: 128,
+    expert_intermediate: 768,
+    experts_per_token: 8,
+    tie_embeddings: false,
+};
+
+// ---- runnable configs (must mirror python/compile/configs.py) ----
+
+pub static SMOKE: ModelSpec = dense("smoke", 64, 32, 64, 2, 2, 2);
+pub static TINY25M: ModelSpec = dense("tiny25m", 4096, 384, 1024, 8, 6, 6);
+pub static TINY100M: ModelSpec = dense("tiny100m", 8192, 768, 2048, 12, 12, 12);
+
+pub static ALL: &[&ModelSpec] = &[
+    &LLAMA31_8B,
+    &QWEN25_7B,
+    &QWEN25_14B,
+    &QWEN25_32B,
+    &QWEN25_05B,
+    &DENSE_1B,
+    &DENSE_3B,
+    &QWEN3_30B_A3B,
+    &SMOKE,
+    &TINY25M,
+    &TINY100M,
+];
+
+/// The four dense evaluation models of the paper's §VI.
+pub static PAPER_DENSE: &[&ModelSpec] =
+    &[&LLAMA31_8B, &QWEN25_7B, &QWEN25_14B, &QWEN25_32B];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_published_sizes() {
+        // within 5% of the nominal size (nominal names round down)
+        let cases: &[(&ModelSpec, f64)] = &[
+            (&LLAMA31_8B, 8.0e9),
+            (&QWEN25_7B, 7.6e9),
+            (&QWEN25_14B, 14.8e9),
+            (&QWEN25_32B, 32.8e9),
+            (&QWEN3_30B_A3B, 30.5e9),
+        ];
+        for (m, nominal) in cases {
+            let p = m.param_count() as f64;
+            let ratio = p / nominal;
+            assert!(
+                (0.90..1.10).contains(&ratio),
+                "{}: {:.2}B vs nominal {:.2}B",
+                m.name,
+                p / 1e9,
+                nominal / 1e9
+            );
+        }
+    }
+
+    #[test]
+    fn tiny100m_is_about_100m() {
+        let p = TINY100M.param_count() as f64;
+        assert!((8.0e7..1.3e8).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(ModelSpec::by_name("qwen2.5-7b").unwrap().hidden, 3584);
+        assert!(ModelSpec::by_name("gpt-5").is_err());
+    }
+
+    #[test]
+    fn gqa_dims_divide() {
+        for m in ALL {
+            assert_eq!(m.hidden % m.heads, 0, "{}", m.name);
+            assert_eq!(m.heads % m.kv_heads, 0, "{}", m.name);
+        }
+    }
+}

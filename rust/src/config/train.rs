@@ -1,0 +1,198 @@
+//! Training specification + the MemAscend component ablation flags.
+
+use crate::dtype::DType;
+
+/// Mixed-precision mode (paper §VI-B-3b: fp16 needs overflow checks,
+/// bf16 does not — which is exactly why fp16 shows the larger savings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// fp16 compute + fp32 master + dynamic loss scaling + overflow check.
+    MixedF16,
+    /// bf16 compute + fp32 master, no overflow check required.
+    MixedBF16,
+}
+
+impl Precision {
+    pub fn compute_dtype(self) -> DType {
+        match self {
+            Precision::MixedF16 => DType::F16,
+            Precision::MixedBF16 => DType::BF16,
+        }
+    }
+
+    pub fn needs_overflow_check(self) -> bool {
+        matches!(self, Precision::MixedF16)
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "fp16" | "f16" => Precision::MixedF16,
+            "bf16" => Precision::MixedBF16,
+            other => anyhow::bail!("unknown precision '{other}' (fp16|bf16)"),
+        })
+    }
+}
+
+/// The four MemAscend optimizations as independent toggles, enabling
+/// the ablation benches DESIGN.md calls out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemAscendFlags {
+    /// §IV-B adaptive buffer pool (vs largest-tensor monolithic pool).
+    pub adaptive_pool: bool,
+    /// §IV-C alignment-free pinned allocation (vs pow2 caching policy).
+    pub alignment_free: bool,
+    /// §IV-D fused overflow check (vs isinf/isnan chain).
+    pub fused_overflow: bool,
+    /// §IV-E direct NVMe engine (vs filesystem engine).
+    pub direct_nvme: bool,
+}
+
+impl MemAscendFlags {
+    pub const fn baseline() -> Self {
+        Self {
+            adaptive_pool: false,
+            alignment_free: false,
+            fused_overflow: false,
+            direct_nvme: false,
+        }
+    }
+
+    pub const fn memascend() -> Self {
+        Self {
+            adaptive_pool: true,
+            alignment_free: true,
+            fused_overflow: true,
+            direct_nvme: true,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        if *self == Self::baseline() {
+            return "zero-infinity".into();
+        }
+        if *self == Self::memascend() {
+            return "memascend".into();
+        }
+        let mut parts = vec![];
+        if self.adaptive_pool {
+            parts.push("pool");
+        }
+        if self.alignment_free {
+            parts.push("align");
+        }
+        if self.fused_overflow {
+            parts.push("fused");
+        }
+        if self.direct_nvme {
+            parts.push("nvme");
+        }
+        format!("ablation[{}]", parts.join("+"))
+    }
+
+    /// All 16 combinations, for the ablation sweep.
+    pub fn all_combinations() -> Vec<Self> {
+        (0..16u8)
+            .map(|m| Self {
+                adaptive_pool: m & 1 != 0,
+                alignment_free: m & 2 != 0,
+                fused_overflow: m & 4 != 0,
+                direct_nvme: m & 8 != 0,
+            })
+            .collect()
+    }
+}
+
+/// Everything that defines one training run.
+#[derive(Debug, Clone)]
+pub struct TrainSpec {
+    /// Micro-batch per rank.
+    pub batch: usize,
+    /// Context length in tokens.
+    pub seq: usize,
+    /// Data-parallel rank count (ZeRO-3 partitions).
+    pub ranks: usize,
+    pub precision: Precision,
+    /// Optimizer state dtype: F32 (baseline) or BF16 (§VI-B-3a).
+    pub optim_dtype: DType,
+    /// Transformer blocks kept in flight by the prefetcher (paper's N).
+    pub prefetch_depth: usize,
+    /// Offload activation checkpoints to host memory (Eq. 1).
+    pub offloaded_gc: bool,
+    /// Host byte budget for activation checkpoints; checkpoints beyond
+    /// it spill to the SSD (the SSDTrain integration, §II-B1).
+    /// `usize::MAX` = everything stays in host memory.
+    pub act_host_budget: usize,
+    pub flags: MemAscendFlags,
+    // optimizer hyper-parameters (must match artifacts' adam constants
+    // when the HLO adam path is used — see manifest "adam")
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    /// Initial dynamic loss scale (power of two).
+    pub init_loss_scale: f64,
+    /// Good steps before the scale doubles.
+    pub scale_growth_interval: usize,
+}
+
+impl Default for TrainSpec {
+    fn default() -> Self {
+        Self {
+            batch: 1,
+            seq: 128,
+            ranks: 1,
+            precision: Precision::MixedF16,
+            optim_dtype: DType::F32,
+            prefetch_depth: 2,
+            offloaded_gc: true,
+            act_host_budget: usize::MAX,
+            flags: MemAscendFlags::memascend(),
+            lr: 1.0e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            init_loss_scale: 65536.0,
+            scale_growth_interval: 100,
+        }
+    }
+}
+
+impl TrainSpec {
+    pub fn tokens_per_step(&self) -> usize {
+        self.batch * self.seq * self.ranks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_labels() {
+        assert_eq!(MemAscendFlags::baseline().label(), "zero-infinity");
+        assert_eq!(MemAscendFlags::memascend().label(), "memascend");
+        let mut f = MemAscendFlags::baseline();
+        f.fused_overflow = true;
+        assert_eq!(f.label(), "ablation[fused]");
+    }
+
+    #[test]
+    fn all_combinations_unique() {
+        let all = MemAscendFlags::all_combinations();
+        assert_eq!(all.len(), 16);
+        for (i, a) in all.iter().enumerate() {
+            for b in &all[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn precision_rules() {
+        assert!(Precision::MixedF16.needs_overflow_check());
+        assert!(!Precision::MixedBF16.needs_overflow_check());
+        assert_eq!(Precision::parse("bf16").unwrap(), Precision::MixedBF16);
+    }
+}

@@ -1,0 +1,336 @@
+//! CLI command implementations — the leader process's surface.
+//!
+//! Each subcommand is a thin orchestration over the library: parse
+//! flags, build specs, run, render tables.  `main.rs` dispatches here.
+
+use std::path::PathBuf;
+
+use crate::accounting::{self, sysmem};
+use crate::config::{HardwareSpec, MemAscendFlags, ModelSpec, Precision, TrainSpec};
+use crate::train::{TrainOpts, Trainer};
+use crate::util::bench::Table;
+use crate::util::cli::{Args, Command};
+use crate::util::human;
+
+pub fn commands() -> Vec<Command> {
+    vec![
+        Command::new("train", "run SSD-offloaded fine-tuning on a tiny model")
+            .opt("model", "smoke", "artifact config (smoke|tiny25m|tiny100m)")
+            .opt("steps", "20", "training steps")
+            .opt("mode", "memascend", "memascend|zero-infinity")
+            .opt("ranks", "1", "simulated data-parallel ranks")
+            .opt("optim", "f32", "optimizer state dtype (f32|bf16)")
+            .opt("precision", "fp16", "mixed precision (fp16|bf16)")
+            .opt("seed", "42", "init/data seed")
+            .opt("artifacts", "artifacts", "AOT artifacts root")
+            .opt("storage", "", "SSD-sim directory (default: temp)")
+            .opt("loss-csv", "", "write the loss curve CSV here")
+            .opt("log-every", "10", "progress cadence"),
+        Command::new("report-memory", "full-scale peak system-memory breakdown")
+            .opt("model", "qwen2.5-7b", "model preset")
+            .opt("ctx", "4096", "context length")
+            .opt("batch", "4", "micro-batch per rank")
+            .opt("ranks", "2", "data-parallel ranks")
+            .opt("hw", "config1", "hardware profile")
+            .opt("precision", "fp16", "fp16|bf16"),
+        Command::new("inventory", "print a model's parameter tensor inventory")
+            .opt("model", "qwen2.5-7b", "model preset"),
+        Command::new("perf-model", "projected step time / throughput at paper scale")
+            .opt("model", "qwen2.5-7b", "model preset")
+            .opt("ctx", "4096", "context length")
+            .opt("batch", "8", "micro-batch per rank")
+            .opt("ranks", "2", "ranks")
+            .opt("hw", "config1", "hardware profile")
+            .opt("mode", "memascend", "memascend|zero-infinity")
+            .opt("optim", "f32", "f32|bf16"),
+        Command::new("sweep-context", "peak-memory sweep over context lengths")
+            .opt("model", "qwen2.5-7b", "model preset")
+            .opt("batch", "1", "micro-batch per rank")
+            .opt("ranks", "2", "ranks")
+            .opt("hw", "config1", "hardware profile")
+            .opt("cap", "128", "system-memory cap in GiB"),
+        Command::new("sweep-batch", "peak-memory + throughput sweep over batch sizes")
+            .opt("model", "qwen2.5-7b", "model preset")
+            .opt("ctx", "4096", "context length")
+            .opt("ranks", "2", "ranks")
+            .opt("hw", "config1", "hardware profile")
+            .opt("cap", "128", "system-memory cap in GiB"),
+        Command::new("help", "list commands"),
+    ]
+}
+
+pub fn parse_mode(mode: &str) -> anyhow::Result<MemAscendFlags> {
+    Ok(match mode {
+        "memascend" | "ma" => MemAscendFlags::memascend(),
+        "zero-infinity" | "zi" | "baseline" => MemAscendFlags::baseline(),
+        other => anyhow::bail!("unknown mode '{other}' (memascend|zero-infinity)"),
+    })
+}
+
+pub fn train_spec_from_args(args: &Args, batch: usize, seq: usize) -> anyhow::Result<TrainSpec> {
+    Ok(TrainSpec {
+        batch,
+        seq,
+        ranks: args.get_usize("ranks", 1)?,
+        precision: Precision::parse(args.get_or("precision", "fp16"))?,
+        optim_dtype: crate::dtype::DType::parse(args.get_or("optim", "f32"))?,
+        flags: parse_mode(args.get_or("mode", "memascend"))?,
+        ..Default::default()
+    })
+}
+
+pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "smoke").to_string();
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts")).join(&model);
+    let storage = match args.get_or("storage", "") {
+        "" => std::env::temp_dir().join(format!("memascend-{}", std::process::id())),
+        s => PathBuf::from(s),
+    };
+    std::fs::create_dir_all(&storage)?;
+    // batch/seq come from the artifact manifest
+    let manifest =
+        crate::runtime::Manifest::load(&artifacts.join("manifest.json"))?;
+    let mut spec = train_spec_from_args(args, manifest.config.batch, manifest.config.seq)?;
+    if spec.precision == Precision::MixedBF16 {
+        spec.init_loss_scale = 1.0;
+    }
+    let opts = TrainOpts {
+        steps: args.get_usize("steps", 20)?,
+        seed: args.get_usize("seed", 42)? as u64,
+        log_every: args.get_usize("log-every", 10)?,
+        loss_csv: match args.get_or("loss-csv", "") {
+            "" => None,
+            p => Some(p.to_string()),
+        },
+    };
+    eprintln!(
+        "training {model} [{}] for {} steps (ranks={} precision={:?})",
+        spec.flags.label(),
+        opts.steps,
+        spec.ranks,
+        spec.precision
+    );
+    let mut trainer = Trainer::new(&artifacts, &storage, spec, &opts)?;
+    let report = trainer.run(&opts)?;
+    println!("=== run report ===");
+    println!("label            {}", report.label);
+    println!("final loss       {:.4}", report.final_loss());
+    println!("tokens/sec       {:.1}", report.tokens_per_sec());
+    println!("peak sysmem      {}", human::bytes(report.peak_sysmem_bytes));
+    println!("io bytes/step    {}", human::bytes(report.io_bytes_per_step));
+    println!("--- memory ledger ---\n{}", trainer.engine.tracker.report());
+    Ok(())
+}
+
+pub fn cmd_report_memory(args: &Args) -> anyhow::Result<()> {
+    let model = ModelSpec::by_name(args.get_or("model", "qwen2.5-7b"))?;
+    let hw = HardwareSpec::by_name(args.get_or("hw", "config1"))?;
+    let base = TrainSpec {
+        batch: args.get_usize("batch", 4)?,
+        seq: args.get_usize("ctx", 4096)?,
+        ranks: args.get_usize("ranks", 2)?,
+        precision: Precision::parse(args.get_or("precision", "fp16"))?,
+        prefetch_depth: 1,
+        ..Default::default()
+    };
+    let mut t = Table::new(vec![
+        "component", "zero-infinity", "memascend", "delta",
+    ]);
+    let mut zi = base.clone();
+    zi.flags = MemAscendFlags::baseline();
+    let mut ma = base;
+    ma.flags = MemAscendFlags::memascend();
+    let bz = sysmem::peak_sysmem(model, &zi, hw);
+    let bm = sysmem::peak_sysmem(model, &ma, hw);
+    let row = |t: &mut Table, name: &str, a: u64, b: u64| {
+        t.row(vec![
+            name.to_string(),
+            human::bytes(a),
+            human::bytes(b),
+            human::pct_delta(a as f64, b as f64),
+        ]);
+    };
+    row(&mut t, "param_pool", bz.param_pool, bm.param_pool);
+    row(&mut t, "pinned_overhead", bz.pinned_overhead, bm.pinned_overhead);
+    row(&mut t, "grad_flat", bz.grad_flat, bm.grad_flat);
+    row(&mut t, "overflow_spike", bz.overflow_spike, bm.overflow_spike);
+    row(&mut t, "optim+swap_buf", bz.optim_buf + bz.swap_buf, bm.optim_buf + bm.swap_buf);
+    row(&mut t, "act_ckpt", bz.act_ckpt, bm.act_ckpt);
+    row(&mut t, "resident", bz.resident, bm.resident);
+    row(&mut t, "PEAK TOTAL", bz.peak_total, bm.peak_total);
+    println!("peak system memory — {} on {}\n", model.name, hw.name);
+    println!("{}", t.render());
+    println!(
+        "theoretical minimum (pool + grad flat): {}",
+        human::bytes(bm.theoretical_min())
+    );
+    Ok(())
+}
+
+pub fn cmd_inventory(args: &Args) -> anyhow::Result<()> {
+    let model = ModelSpec::by_name(args.get_or("model", "qwen2.5-7b"))?;
+    let inv = crate::tensors::inventory(model);
+    let mut t = Table::new(vec!["tensor", "shape", "class", "fp16 bytes"]);
+    // layer 0 + non-layer tensors only (layers repeat)
+    for d in inv.iter().filter(|t| t.layer == 0 || t.layer == usize::MAX) {
+        t.row(vec![
+            d.name.clone(),
+            format!("{:?}", d.shape),
+            format!("{:?}", d.shape_class()),
+            human::bytes(d.bytes(crate::dtype::DType::F16) as u64),
+        ]);
+    }
+    println!(
+        "{} — {} tensors, {:.2}B params ({} layers; showing layer 0)\n",
+        model.name,
+        inv.len(),
+        model.param_count() as f64 / 1e9,
+        model.layers
+    );
+    println!("{}", t.render());
+    Ok(())
+}
+
+pub fn cmd_perf_model(args: &Args) -> anyhow::Result<()> {
+    let model = ModelSpec::by_name(args.get_or("model", "qwen2.5-7b"))?;
+    let hw = HardwareSpec::by_name(args.get_or("hw", "config1"))?;
+    let spec = TrainSpec {
+        batch: args.get_usize("batch", 8)?,
+        seq: args.get_usize("ctx", 4096)?,
+        ranks: args.get_usize("ranks", 2)?,
+        flags: parse_mode(args.get_or("mode", "memascend"))?,
+        optim_dtype: crate::dtype::DType::parse(args.get_or("optim", "f32"))?,
+        ..Default::default()
+    };
+    let calib = accounting::perfmodel::Calib::default();
+    let st = accounting::step_time(model, &spec, hw, &calib);
+    println!("projected step time — {} on {} [{}]", model.name, hw.name, spec.flags.label());
+    println!("  compute        {}", human::secs(st.compute));
+    println!("  exposed I/O    {}", human::secs(st.param_io_exposed));
+    println!("  engine tax     {}", human::secs(st.engine_tax));
+    println!("  overflow check {}", human::secs(st.overflow));
+    println!("  optimizer      {}", human::secs(st.optim));
+    println!("  TOTAL          {}", human::secs(st.total()));
+    println!("  throughput     {:.1} tokens/s", st.tokens_per_sec(&spec));
+    Ok(())
+}
+
+/// Context or batch sweep, ZI vs MA, with fit verdicts under a cap.
+pub fn cmd_sweep(args: &Args, over_context: bool) -> anyhow::Result<()> {
+    let model = ModelSpec::by_name(args.get_or("model", "qwen2.5-7b"))?;
+    let hw = HardwareSpec::by_name(args.get_or("hw", "config1"))?;
+    let cap = args.get_f64("cap", 128.0)?;
+    let calib = accounting::perfmodel::Calib::default();
+    let points: Vec<usize> = if over_context {
+        vec![4096, 8192, 16384, 32768, 65536, 131072]
+    } else {
+        vec![1, 2, 4, 8, 16, 32, 48, 64, 96]
+    };
+    let mut t = Table::new(vec![
+        if over_context { "ctx" } else { "batch" },
+        "ZI (GiB)",
+        "MA (GiB)",
+        "cut %",
+        "MA tokens/s (proj)",
+        "fits cap (ZI/MA)",
+    ]);
+    for p in points {
+        let mk = |flags| TrainSpec {
+            batch: if over_context { args.get_usize("batch", 1).unwrap_or(1) } else { p },
+            seq: if over_context { p } else { args.get_usize("ctx", 4096).unwrap_or(4096) },
+            ranks: args.get_usize("ranks", 2).unwrap_or(2),
+            prefetch_depth: 1,
+            flags,
+            ..Default::default()
+        };
+        let zi = sysmem::peak_sysmem(model, &mk(MemAscendFlags::baseline()), hw);
+        let ma_spec = mk(MemAscendFlags::memascend());
+        let ma = sysmem::peak_sysmem(model, &ma_spec, hw);
+        let st = accounting::step_time(model, &ma_spec, hw, &calib);
+        t.row(vec![
+            p.to_string(),
+            format!("{:.2}", zi.gib()),
+            format!("{:.2}", ma.gib()),
+            format!("{:.1}", (1.0 - ma.peak_total as f64 / zi.peak_total as f64) * 100.0),
+            format!("{:.0}", st.tokens_per_sec(&ma_spec)),
+            format!(
+                "{}/{}",
+                if zi.gib() <= cap { "y" } else { "n" },
+                if ma.gib() <= cap { "y" } else { "n" }
+            ),
+        ]);
+    }
+    println!(
+        "{} sweep — {} on {} (cap {cap} GiB)\n",
+        if over_context { "context" } else { "batch" },
+        model.name,
+        hw.name
+    );
+    println!("{}", t.render());
+    Ok(())
+}
+
+pub fn dispatch(cmd: &str, argv: &[String]) -> anyhow::Result<()> {
+    let cmds = commands();
+    let spec = cmds.iter().find(|c| c.name == cmd);
+    match (cmd, spec) {
+        ("help", _) | (_, None) => {
+            println!("memascend — SSD-offloaded LLM fine-tuning (paper reproduction)\n");
+            for c in &cmds {
+                println!("  {:<16} {}", c.name, c.about);
+            }
+            if spec.is_none() && cmd != "help" {
+                anyhow::bail!("unknown command '{cmd}'");
+            }
+            Ok(())
+        }
+        (_, Some(spec)) => {
+            let args = spec.parse(argv)?;
+            match cmd {
+                "train" => cmd_train(&args),
+                "report-memory" => cmd_report_memory(&args),
+                "inventory" => cmd_inventory(&args),
+                "perf-model" => cmd_perf_model(&args),
+                "sweep-context" => cmd_sweep(&args, true),
+                "sweep-batch" => cmd_sweep(&args, false),
+                _ => unreachable!(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(parse_mode("memascend").unwrap(), MemAscendFlags::memascend());
+        assert_eq!(parse_mode("zi").unwrap(), MemAscendFlags::baseline());
+        assert!(parse_mode("fast").is_err());
+    }
+
+    #[test]
+    fn inventory_command_runs() {
+        let cmds = commands();
+        let spec = cmds.iter().find(|c| c.name == "inventory").unwrap();
+        let args = spec.parse(&["--model".to_string(), "smoke".to_string()]).unwrap();
+        cmd_inventory(&args).unwrap();
+    }
+
+    #[test]
+    fn report_memory_command_runs() {
+        let cmds = commands();
+        let spec = cmds.iter().find(|c| c.name == "report-memory").unwrap();
+        let args = spec.parse(&[]).unwrap();
+        cmd_report_memory(&args).unwrap();
+    }
+
+    #[test]
+    fn perf_model_command_runs() {
+        let cmds = commands();
+        let spec = cmds.iter().find(|c| c.name == "perf-model").unwrap();
+        let args = spec.parse(&[]).unwrap();
+        cmd_perf_model(&args).unwrap();
+    }
+}

@@ -1,0 +1,163 @@
+//! Data types and precision conversion (the `half` crate analog).
+//!
+//! SSD offloading is precision-plumbing: fp16 compute weights + fp32
+//! masters on disk, fp16 gradients accumulated into an fp32 flat
+//! buffer, optionally bf16 optimizer states (paper §VI-B-3a).  This
+//! module owns the bit-exact conversions and the per-dtype byte math.
+
+pub mod f16;
+
+pub use f16::{bf16_to_f32, f16_to_f32, f16_to_f32_lut, f32_to_bf16, f32_to_f16};
+
+/// Storage dtypes that flow through the offload pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    BF16,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub const fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 | DType::BF16 => 2,
+            DType::U8 => 1,
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "f32" | "fp32" => DType::F32,
+            "f16" | "fp16" => DType::F16,
+            "bf16" => DType::BF16,
+            "i32" => DType::I32,
+            "u8" => DType::U8,
+            other => anyhow::bail!("unknown dtype '{other}'"),
+        })
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::I32 => "i32",
+            DType::U8 => "u8",
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Convert an f32 slice to packed f16 bytes (the "cast to fp16 gradient"
+/// step of mixed-precision training). Values outside fp16 range become
+/// ±inf — exactly the overflow the loss scaler must then detect.
+pub fn f32s_to_f16_bytes(src: &[f32], dst: &mut [u8]) {
+    assert_eq!(dst.len(), src.len() * 2);
+    for (i, &x) in src.iter().enumerate() {
+        let b = f32_to_f16(x).to_le_bytes();
+        dst[i * 2] = b[0];
+        dst[i * 2 + 1] = b[1];
+    }
+}
+
+pub fn f16_bytes_to_f32s(src: &[u8], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len() * 2);
+    // LUT decode (§Perf): the swap-in H2D-analog path runs this over
+    // every streamed weight, twice per step
+    for (i, x) in dst.iter_mut().enumerate() {
+        *x = f16_to_f32_lut(u16::from_le_bytes([src[i * 2], src[i * 2 + 1]]));
+    }
+}
+
+pub fn f32s_to_bf16_bytes(src: &[f32], dst: &mut [u8]) {
+    assert_eq!(dst.len(), src.len() * 2);
+    for (i, &x) in src.iter().enumerate() {
+        let b = f32_to_bf16(x).to_le_bytes();
+        dst[i * 2] = b[0];
+        dst[i * 2 + 1] = b[1];
+    }
+}
+
+pub fn bf16_bytes_to_f32s(src: &[u8], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len() * 2);
+    for (i, x) in dst.iter_mut().enumerate() {
+        *x = bf16_to_f32(u16::from_le_bytes([src[i * 2], src[i * 2 + 1]]));
+    }
+}
+
+/// View a f32 slice as raw little-endian bytes (zero-copy).
+pub fn f32s_as_bytes(src: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no invalid bit patterns and alignment of u8 is 1.
+    unsafe { std::slice::from_raw_parts(src.as_ptr().cast::<u8>(), src.len() * 4) }
+}
+
+pub fn f32s_as_bytes_mut(src: &mut [f32]) -> &mut [u8] {
+    // SAFETY: as above; exclusive borrow guarantees aliasing rules.
+    unsafe {
+        std::slice::from_raw_parts_mut(src.as_mut_ptr().cast::<u8>(), src.len() * 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::F16.size(), 2);
+        assert_eq!(DType::parse("bf16").unwrap(), DType::BF16);
+        assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn f16_bulk_roundtrip() {
+        let src = vec![0.0f32, 1.0, -2.5, 0.333251953125, 65504.0];
+        let mut bytes = vec![0u8; src.len() * 2];
+        f32s_to_f16_bytes(&src, &mut bytes);
+        let mut back = vec![0f32; src.len()];
+        f16_bytes_to_f32s(&bytes, &mut back);
+        // all values above are exactly representable in f16
+        assert_eq!(src, back);
+    }
+
+    #[test]
+    fn f16_overflow_becomes_inf() {
+        let src = vec![1e30f32, -1e30];
+        let mut bytes = vec![0u8; 4];
+        f32s_to_f16_bytes(&src, &mut bytes);
+        let mut back = vec![0f32; 2];
+        f16_bytes_to_f32s(&bytes, &mut back);
+        assert!(back[0].is_infinite() && back[0] > 0.0);
+        assert!(back[1].is_infinite() && back[1] < 0.0);
+    }
+
+    #[test]
+    fn bf16_preserves_range_loses_precision() {
+        let src = vec![1e30f32, 3.14159265f32];
+        let mut bytes = vec![0u8; 4];
+        f32s_to_bf16_bytes(&src, &mut bytes);
+        let mut back = vec![0f32; 2];
+        bf16_bytes_to_f32s(&bytes, &mut back);
+        assert!(back[0].is_finite(), "bf16 has f32 range");
+        assert!((back[1] - 3.14159265).abs() < 0.01);
+        assert_ne!(back[1], 3.14159265f32);
+    }
+
+    #[test]
+    fn byte_view_roundtrip() {
+        let mut v = vec![1.5f32, -2.25, 1e-7];
+        let orig = v.clone();
+        let bytes = f32s_as_bytes(&v).to_vec();
+        f32s_as_bytes_mut(&mut v).copy_from_slice(&bytes);
+        assert_eq!(v, orig);
+    }
+}

@@ -1,0 +1,29 @@
+//! # MemAscend — system-memory-optimized SSD-offloaded LLM fine-tuning
+//!
+//! Reproduction of *MemAscend: System Memory Optimization for
+//! SSD-Offloaded LLM Fine-Tuning* (Liaw & Chen, 2025) as a three-layer
+//! Rust + JAX + Pallas stack: Pallas kernels (L1) and a staged JAX
+//! transformer (L2) are AOT-lowered to HLO text at build time; the Rust
+//! coordinator (L3) — this crate — owns the training runtime: the
+//! ZeRO-Infinity-style offload engine, the four MemAscend
+//! optimizations, the PJRT executor, and the full benchmark suite.
+//!
+//! See DESIGN.md for the system inventory and the experiment index
+//! mapping every paper table/figure to a bench target.
+
+pub mod accounting;
+pub mod bufpool;
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod dtype;
+pub mod metrics;
+pub mod optimizer;
+pub mod overflow;
+pub mod pinned;
+pub mod ssd;
+pub mod tensors;
+pub mod offload;
+pub mod runtime;
+pub mod train;
+pub mod util;

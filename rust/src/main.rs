@@ -1,0 +1,14 @@
+//! memascend — leader entrypoint.
+//!
+//! `memascend <command> [flags]`; `memascend help` lists commands.
+
+fn main() {
+    memascend::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help").to_string();
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    if let Err(e) = memascend::coordinator::dispatch(&cmd, rest) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

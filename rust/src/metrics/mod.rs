@@ -1,0 +1,182 @@
+//! Run metrics: loss curves, throughput, and structured result dumps.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Append-oriented CSV logger (loss curves, sweep outputs).
+pub struct CsvLog {
+    file: std::fs::File,
+    cols: usize,
+}
+
+impl CsvLog {
+    pub fn create(path: &str, headers: &[&str]) -> anyhow::Result<Self> {
+        if let Some(dir) = Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", headers.join(","))?;
+        Ok(Self { file, cols: headers.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(values.len() == self.cols, "column count mismatch");
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) -> anyhow::Result<()> {
+        self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+}
+
+/// Per-step training record.
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub step: u64,
+    pub loss: f64,
+    pub loss_scale: f64,
+    pub overflowed: bool,
+    pub tokens: usize,
+    pub step_secs: f64,
+    /// Step-time decomposition for the perf model calibration.
+    pub compute_secs: f64,
+    pub io_secs: f64,
+    pub overflow_check_secs: f64,
+    pub optim_secs: f64,
+}
+
+/// Whole-run summary, dumped as JSON for EXPERIMENTS.md.
+#[derive(Debug, Default, Clone)]
+pub struct RunReport {
+    pub label: String,
+    pub model: String,
+    pub steps: Vec<StepMetrics>,
+    pub peak_sysmem_bytes: u64,
+    pub io_bytes_per_step: u64,
+}
+
+impl RunReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        let toks: usize = self.steps.iter().map(|s| s.tokens).sum();
+        let secs: f64 = self.steps.iter().map(|s| s.step_secs).sum();
+        if secs == 0.0 {
+            0.0
+        } else {
+            toks as f64 / secs
+        }
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.steps.last().map(|s| s.loss).unwrap_or(f64::NAN)
+    }
+
+    /// Mean loss over the last k effective (non-overflow) steps.
+    pub fn mean_tail_loss(&self, k: usize) -> f64 {
+        let tail: Vec<f64> = self
+            .steps
+            .iter()
+            .rev()
+            .filter(|s| !s.overflowed)
+            .take(k)
+            .map(|s| s.loss)
+            .collect();
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::from(self.label.clone())),
+            ("model", Json::from(self.model.clone())),
+            ("steps", Json::from(self.steps.len())),
+            ("final_loss", Json::from(self.final_loss())),
+            ("tokens_per_sec", Json::from(self.tokens_per_sec())),
+            ("peak_sysmem_bytes", Json::from(self.peak_sysmem_bytes)),
+            ("io_bytes_per_step", Json::from(self.io_bytes_per_step)),
+            (
+                "loss_curve",
+                Json::Arr(self.steps.iter().map(|s| Json::from(s.loss)).collect()),
+            ),
+        ])
+    }
+
+    pub fn write_json(&self, path: &str) -> anyhow::Result<()> {
+        if let Some(dir) = Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn write_loss_csv(&self, path: &str) -> anyhow::Result<()> {
+        let mut log = CsvLog::create(
+            path,
+            &["step", "loss", "loss_scale", "overflowed", "step_secs"],
+        )?;
+        for s in &self.steps {
+            log.row(&[
+                s.step.to_string(),
+                format!("{}", s.loss),
+                format!("{}", s.loss_scale),
+                u8::from(s.overflowed).to_string(),
+                format!("{}", s.step_secs),
+            ])?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(i: u64, loss: f64) -> StepMetrics {
+        StepMetrics {
+            step: i,
+            loss,
+            loss_scale: 1024.0,
+            overflowed: false,
+            tokens: 128,
+            step_secs: 0.5,
+            compute_secs: 0.3,
+            io_secs: 0.1,
+            overflow_check_secs: 0.05,
+            optim_secs: 0.05,
+        }
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut r = RunReport { label: "t".into(), ..Default::default() };
+        r.steps = vec![step(1, 5.0), step(2, 4.0)];
+        assert!((r.tokens_per_sec() - 256.0).abs() < 1e-9);
+        assert_eq!(r.final_loss(), 4.0);
+        assert!((r.mean_tail_loss(2) - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut r = RunReport { label: "x".into(), model: "smoke".into(), ..Default::default() };
+        r.steps = vec![step(1, 3.0)];
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("model").unwrap().as_str(), Some("smoke"));
+        assert_eq!(j.get("loss_curve").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn csv_log_writes() {
+        let p = std::env::temp_dir().join(format!("ma-csv-{}.csv", std::process::id()));
+        let mut log = CsvLog::create(p.to_str().unwrap(), &["a", "b"]).unwrap();
+        log.rowf(&[1.0, 2.0]).unwrap();
+        assert!(log.row(&["only-one".into()]).is_err());
+        drop(log);
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert!(content.starts_with("a,b\n1,2\n"));
+        std::fs::remove_file(&p).ok();
+    }
+}

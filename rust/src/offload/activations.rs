@@ -1,0 +1,92 @@
+//! Offloaded activation-checkpoint store (§V-B, Eq. 1).
+//!
+//! With gradient checkpointing, each transformer layer's *input* hidden
+//! state is the checkpoint; offloaded-GC moves it from GPU to pinned
+//! host memory (fp16) right after the layer runs and fetches it back
+//! just in time for recomputation in the backward pass.  Total host
+//! bytes = Ng·B·C·L·H·2 + pinned overhead — exactly Eq. 1, and exactly
+//! what limits context length once system memory is the bottleneck.
+
+use crate::dtype::{f16_bytes_to_f32s, f32s_to_f16_bytes};
+use crate::pinned::{Cat, HostAllocator, HostRegion};
+
+/// Host-side checkpoint slots for one rank's L layers.
+pub struct ActivationStore {
+    slots: Vec<HostRegion>,
+    elems_per_slot: usize,
+    /// Which slots currently hold a checkpoint (fwd sets, bwd takes).
+    occupied: Vec<bool>,
+}
+
+impl ActivationStore {
+    /// `elems` = B × C × H per checkpoint; one slot per layer.
+    pub fn new(layers: usize, elems: usize, alloc: &dyn HostAllocator) -> Self {
+        let slots = (0..layers)
+            .map(|_| alloc.alloc(elems * 2, Cat::ActCkpt))
+            .collect();
+        Self { slots, elems_per_slot: elems, occupied: vec![false; layers] }
+    }
+
+    /// Offload a checkpoint (f32 "GPU" tensor -> fp16 pinned host slot).
+    pub fn offload(&mut self, layer: usize, h: &[f32]) {
+        assert_eq!(h.len(), self.elems_per_slot);
+        assert!(!self.occupied[layer], "layer {layer} checkpoint overwritten");
+        f32s_to_f16_bytes(h, self.slots[layer].as_mut_slice());
+        self.occupied[layer] = true;
+    }
+
+    /// Fetch a checkpoint back for recomputation (host fp16 -> f32).
+    pub fn fetch(&mut self, layer: usize) -> Vec<f32> {
+        assert!(self.occupied[layer], "layer {layer} checkpoint missing");
+        let mut out = vec![0f32; self.elems_per_slot];
+        f16_bytes_to_f32s(self.slots[layer].as_slice(), &mut out);
+        self.occupied[layer] = false;
+        out
+    }
+
+    pub fn host_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.bytes_reserved).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pinned::{AlignedAllocator, CachingAllocator, MemoryTracker, Mode};
+    use std::sync::Arc;
+
+    #[test]
+    fn offload_fetch_roundtrip() {
+        let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
+        let mut store = ActivationStore::new(4, 256, &Arc::clone(&alloc));
+        let h: Vec<f32> = (0..256).map(|i| (i as f32) / 16.0).collect();
+        store.offload(2, &h);
+        let back = store.fetch(2);
+        // all values here are f16-exact
+        assert_eq!(back, h);
+    }
+
+    #[test]
+    #[should_panic(expected = "checkpoint missing")]
+    fn double_fetch_panics() {
+        let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
+        let mut store = ActivationStore::new(2, 16, &Arc::clone(&alloc));
+        store.offload(0, &[0.0; 16]);
+        store.fetch(0);
+        store.fetch(0);
+    }
+
+    #[test]
+    fn eq1_accounting_difference_between_allocators() {
+        // Eq. 1's P_m term: pow2 rounding on non-pow2 checkpoint sizes
+        let tr1 = Arc::new(MemoryTracker::new());
+        let a1 = CachingAllocator::new(Mode::Virtual, tr1.clone());
+        let elems = 5000; // 10'000 B -> pow2 16384
+        let _s1 = ActivationStore::new(8, elems, &Arc::clone(&a1));
+        let tr2 = Arc::new(MemoryTracker::new());
+        let a2 = AlignedAllocator::new(Mode::Virtual, tr2.clone());
+        let _s2 = ActivationStore::new(8, elems, &Arc::clone(&a2));
+        assert!(tr1.peak_total() > tr2.peak_total());
+        assert_eq!(tr2.current(Cat::ActCkpt), (8 * elems * 2) as u64);
+    }
+}

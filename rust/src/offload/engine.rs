@@ -1,0 +1,137 @@
+//! Component assembly: `MemAscendFlags` → concrete allocator, pool,
+//! NVMe engine, and overflow checker.
+//!
+//! This is the ablation axis: every flag combination yields a working
+//! engine, so benches can toggle one optimization at a time (DESIGN.md
+//! §ablations) and the trainer can run as pure ZeRO-Infinity, pure
+//! MemAscend, or anything between.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::bufpool::{AdaptivePool, MonolithicPool, ParamBufferPool};
+use crate::config::{ModelSpec, TrainSpec};
+use crate::overflow::{baseline_overflow_check, fused_overflow_check, Checker};
+use crate::pinned::{
+    AlignedAllocator, CachingAllocator, HostAllocator, MemoryTracker, Mode,
+};
+use crate::ssd::{DirectEngine, FsEngine, NvmeEngine};
+
+pub struct OffloadEngine {
+    pub tracker: Arc<MemoryTracker>,
+    pub alloc: Arc<dyn HostAllocator>,
+    pub pool: Arc<dyn ParamBufferPool>,
+    pub nvme: Arc<dyn NvmeEngine>,
+    pub checker: Checker,
+    pub threads: usize,
+}
+
+impl OffloadEngine {
+    /// Build a real (byte-moving) engine rooted at `storage_dir`.
+    pub fn new(
+        spec: &ModelSpec,
+        train: &TrainSpec,
+        storage_dir: &Path,
+    ) -> anyhow::Result<Self> {
+        let tracker = Arc::new(MemoryTracker::new());
+        let alloc: Arc<dyn HostAllocator> = if train.flags.alignment_free {
+            Arc::new(AlignedAllocator::new(Mode::Real, tracker.clone()))
+        } else {
+            Arc::new(CachingAllocator::new(Mode::Real, tracker.clone()))
+        };
+        let dtype = train.precision.compute_dtype();
+        let pool: Arc<dyn ParamBufferPool> = if train.flags.adaptive_pool {
+            Arc::new(AdaptivePool::new(spec, train.prefetch_depth, dtype, alloc.as_ref()))
+        } else {
+            Arc::new(MonolithicPool::new(spec, train.prefetch_depth, dtype, alloc.as_ref()))
+        };
+        // capacity: fp16 + fp32 master + m + v + slack, per device
+        let cap_bytes = (spec.param_count() as u64)
+            .saturating_mul(16)
+            .max(1 << 24)
+            + (64 << 20);
+        let devices = 2;
+        let nvme: Arc<dyn NvmeEngine> = if train.flags.direct_nvme {
+            Arc::new(DirectEngine::new(
+                &storage_dir.join("direct"),
+                devices,
+                cap_bytes / devices as u64,
+                1,
+            )?)
+        } else {
+            Arc::new(FsEngine::new(&storage_dir.join("fs"), devices, 512 << 10)?)
+        };
+        let checker = if train.flags.fused_overflow {
+            Checker::Fused
+        } else {
+            Checker::Baseline
+        };
+        Ok(Self {
+            tracker,
+            alloc,
+            pool,
+            nvme,
+            checker,
+            threads: crate::util::par::default_threads(),
+        })
+    }
+
+    /// Run the configured overflow check over a flat fp32 buffer.
+    pub fn check_overflow(&self, grads: &[f32]) -> bool {
+        match self.checker {
+            Checker::Fused => fused_overflow_check(grads, self.threads),
+            Checker::Baseline => baseline_overflow_check(grads, &self.tracker),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::SMOKE;
+    use crate::config::MemAscendFlags;
+
+    fn storage(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("ma-eng-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn all_sixteen_combinations_construct_and_roundtrip() {
+        for (i, flags) in MemAscendFlags::all_combinations().into_iter().enumerate() {
+            let train = TrainSpec { flags, ..Default::default() };
+            let dir = storage(&format!("c{i}"));
+            let eng = OffloadEngine::new(&SMOKE, &train, &dir).unwrap();
+            eng.nvme.write("probe", &[1, 2, 3, 4]).unwrap();
+            let mut out = [0u8; 4];
+            eng.nvme.read("probe", &mut out).unwrap();
+            assert_eq!(out, [1, 2, 3, 4]);
+            assert!(!eng.check_overflow(&[0.0, 1.0]));
+            assert!(eng.check_overflow(&[f32::NAN]));
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn labels_reflect_flags() {
+        let d = storage("lbl");
+        let zi = OffloadEngine::new(
+            &SMOKE,
+            &TrainSpec { flags: MemAscendFlags::baseline(), ..Default::default() },
+            &d,
+        )
+        .unwrap();
+        assert_eq!(zi.pool.label(), "monolithic");
+        assert_eq!(zi.nvme.label(), "fs-raid0");
+        let ma = OffloadEngine::new(
+            &SMOKE,
+            &TrainSpec { flags: MemAscendFlags::memascend(), ..Default::default() },
+            &d,
+        )
+        .unwrap();
+        assert_eq!(ma.pool.label(), "adaptive");
+        assert_eq!(ma.nvme.label(), "direct-nvme");
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -1,0 +1,148 @@
+//! The fp32 gradient partition flat buffer (§III-C).
+//!
+//! One contiguous fp32 block sized to the full partition, laid out in
+//! canonical tensor order; gradients arrive as fp16 (the GPU transport
+//! format — the cast is where overflow becomes ±inf) and are
+//! accumulated in fp32.  The buffer is pinned through the configured
+//! allocator, so its pow2-vs-exact overhead shows up in the ledger.
+
+use std::collections::HashMap;
+
+use crate::dtype::{f16_to_f32, f32_to_f16};
+use crate::pinned::{Cat, HostAllocator, HostRegion};
+use crate::tensors::TensorDesc;
+
+pub struct GradFlatBuffer {
+    /// Backing pinned region (kept alive for ledger correctness).
+    _region: HostRegion,
+    /// The fp32 accumulator (owned separately: HostRegion byte access
+    /// is awkward for f32 math; the region charges the ledger, this
+    /// holds the data — both are the same size).
+    data: Vec<f32>,
+    /// tensor name -> (offset, len) in elements.
+    layout: HashMap<String, (usize, usize)>,
+    len: usize,
+}
+
+impl GradFlatBuffer {
+    /// Build the layout from the canonical inventory order.
+    pub fn new(tensors: &[TensorDesc], alloc: &dyn HostAllocator) -> Self {
+        let mut layout = HashMap::new();
+        let mut off = 0usize;
+        for t in tensors {
+            layout.insert(t.name.clone(), (off, t.numel));
+            off += t.numel;
+        }
+        let region = alloc.alloc(off * 4, Cat::GradFlat);
+        Self { _region: region, data: vec![0f32; off], layout, len: off }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn span_of(&self, tensor: &str) -> Option<(usize, usize)> {
+        self.layout.get(tensor).copied()
+    }
+
+    pub fn grads_of(&self, tensor: &str) -> &[f32] {
+        let (off, len) = self.layout[tensor];
+        &self.data[off..off + len]
+    }
+
+    /// Accumulate a gradient that traveled as fp16 (values round-trip
+    /// f32→f16→f32: overflow becomes ±inf here, exactly as on a real
+    /// PCIe path).
+    pub fn accumulate_f16_transport(&mut self, tensor: &str, grads_f32: &[f32]) {
+        let (off, len) = self.layout[tensor];
+        assert_eq!(len, grads_f32.len(), "grad size mismatch for {tensor}");
+        for (dst, &g) in self.data[off..off + len].iter_mut().zip(grads_f32) {
+            *dst += f16_to_f32(f32_to_f16(g));
+        }
+    }
+
+    /// Accumulate at full fp32 (bf16 runs skip the f16 bottleneck; the
+    /// bf16 cast itself loses only mantissa, applied here).
+    pub fn accumulate_bf16_transport(&mut self, tensor: &str, grads_f32: &[f32]) {
+        use crate::dtype::{bf16_to_f32, f32_to_bf16};
+        let (off, len) = self.layout[tensor];
+        assert_eq!(len, grads_f32.len(), "grad size mismatch for {tensor}");
+        for (dst, &g) in self.data[off..off + len].iter_mut().zip(grads_f32) {
+            *dst += bf16_to_f32(f32_to_bf16(g));
+        }
+    }
+
+    pub fn zero(&mut self) {
+        self.data.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::SMOKE;
+    use crate::pinned::{AlignedAllocator, MemoryTracker, Mode};
+    use crate::tensors::inventory;
+    use std::sync::Arc;
+
+    fn mk() -> GradFlatBuffer {
+        let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
+        let inv = inventory(&SMOKE);
+        GradFlatBuffer::new(&inv, &Arc::clone(&alloc))
+    }
+
+    #[test]
+    fn layout_covers_all_params() {
+        let buf = mk();
+        let total: usize = inventory(&SMOKE).iter().map(|t| t.numel).sum();
+        assert_eq!(buf.len(), total);
+        assert_eq!(total as u64, SMOKE.param_count());
+    }
+
+    #[test]
+    fn spans_are_disjoint_and_ordered() {
+        let buf = mk();
+        let inv = inventory(&SMOKE);
+        let mut expect = 0usize;
+        for t in &inv {
+            let (off, len) = buf.span_of(&t.name).unwrap();
+            assert_eq!(off, expect);
+            assert_eq!(len, t.numel);
+            expect += len;
+        }
+    }
+
+    #[test]
+    fn f16_transport_creates_inf_on_overflow() {
+        let mut buf = mk();
+        let inv = inventory(&SMOKE);
+        let t = &inv[1]; // first block tensor
+        let mut grads = vec![0.5f32; t.numel];
+        grads[3] = 1e30; // beyond f16 range
+        buf.accumulate_f16_transport(&t.name, &grads);
+        let got = buf.grads_of(&t.name);
+        assert!(got[3].is_infinite());
+        assert_eq!(got[0], 0.5);
+    }
+
+    #[test]
+    fn accumulation_adds() {
+        let mut buf = mk();
+        let inv = inventory(&SMOKE);
+        let t = &inv[2];
+        let g = vec![1.0f32; t.numel];
+        buf.accumulate_f16_transport(&t.name, &g);
+        buf.accumulate_f16_transport(&t.name, &g);
+        assert!(buf.grads_of(&t.name).iter().all(|&x| x == 2.0));
+        buf.zero();
+        assert!(buf.grads_of(&t.name).iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,24 @@
+//! The offload engine: ZeRO-Infinity's data flow with MemAscend's
+//! four optimizations as switchable components (§IV).
+//!
+//! - [`partition`] — ZeRO-3 parameter partitioning across ranks
+//! - [`swapper`] — SSD→host prefetch pipeline over the buffer pool
+//! - [`gradbuf`] — the fp32 gradient partition flat buffer
+//! - [`scaler`] — DeepSpeed-semantics dynamic loss scaler
+//! - [`activations`] — offloaded activation-checkpoint store (Eq. 1)
+//! - [`engine`] — assembles allocator + pool + NVMe engine + checker
+//!   from `MemAscendFlags` (the ablation axis every bench sweeps)
+
+pub mod activations;
+pub mod engine;
+pub mod gradbuf;
+pub mod partition;
+pub mod scaler;
+pub mod spill;
+pub mod swapper;
+
+pub use engine::OffloadEngine;
+pub use gradbuf::GradFlatBuffer;
+pub use scaler::LossScaler;
+pub use spill::SpillingActivationStore;
+pub use swapper::Swapper;

@@ -1,0 +1,102 @@
+//! ZeRO-3 parameter partitioning (Fig. 1's P0(i)/G0(i)/O0(i) split).
+//!
+//! Every tensor's flat data is divided into `ranks` near-equal spans;
+//! rank r owns span r of every tensor, stores only that shard on its
+//! SSD region, and allgathers the full tensor before compute.
+
+use crate::collective::partition_bounds;
+use crate::tensors::TensorDesc;
+
+/// A rank's view of one tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shard {
+    pub tensor: String,
+    pub rank: usize,
+    /// Element span [lo, hi) within the flat tensor.
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    /// SSD key for this shard's fp16 copy.
+    pub fn key_fp16(&self) -> String {
+        format!("{}/r{}/fp16", self.tensor, self.rank)
+    }
+
+    /// SSD key prefix for optimizer states.
+    pub fn key_group(&self) -> String {
+        format!("{}/r{}", self.tensor, self.rank)
+    }
+}
+
+/// Shards of one tensor across all ranks.
+pub fn shards_of(t: &TensorDesc, ranks: usize) -> Vec<Shard> {
+    (0..ranks.max(1))
+        .map(|r| {
+            let (lo, hi) = partition_bounds(t.numel, ranks.max(1), r);
+            Shard { tensor: t.name.clone(), rank: r, lo, hi }
+        })
+        .collect()
+}
+
+/// Reassemble a full tensor from rank shards (the allgather result).
+pub fn assemble(shards: &[(Shard, Vec<f32>)]) -> Vec<f32> {
+    let mut parts: Vec<&(Shard, Vec<f32>)> = shards.iter().collect();
+    parts.sort_by_key(|(s, _)| s.lo);
+    let mut out = Vec::with_capacity(parts.iter().map(|(s, _)| s.len()).sum());
+    for (s, data) in parts {
+        assert_eq!(s.len(), data.len(), "shard data mismatch");
+        out.extend_from_slice(data);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::SMOKE;
+    use crate::tensors::inventory;
+
+    #[test]
+    fn shards_cover_exactly() {
+        for t in inventory(&SMOKE) {
+            for ranks in [1, 2, 3] {
+                let ss = shards_of(&t, ranks);
+                assert_eq!(ss.len(), ranks);
+                let total: usize = ss.iter().map(Shard::len).sum();
+                assert_eq!(total, t.numel, "{} ranks={ranks}", t.name);
+                for w in ss.windows(2) {
+                    assert_eq!(w[0].hi, w[1].lo);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn assemble_restores_order() {
+        let t = &inventory(&SMOKE)[1];
+        let data: Vec<f32> = (0..t.numel).map(|i| i as f32).collect();
+        let ss = shards_of(t, 3);
+        let mut pieces: Vec<(Shard, Vec<f32>)> = ss
+            .iter()
+            .map(|s| (s.clone(), data[s.lo..s.hi].to_vec()))
+            .collect();
+        pieces.reverse(); // out of order on purpose
+        assert_eq!(assemble(&pieces), data);
+    }
+
+    #[test]
+    fn keys_are_unique_per_rank() {
+        let t = &inventory(&SMOKE)[1];
+        let ss = shards_of(t, 2);
+        assert_ne!(ss[0].key_fp16(), ss[1].key_fp16());
+    }
+}

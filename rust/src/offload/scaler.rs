@@ -1,0 +1,116 @@
+//! Dynamic loss scaler — DeepSpeed/Apex semantics.
+//!
+//! fp16 gradients underflow without scaling and overflow with too much
+//! of it, so the scale adapts: halve on overflow (and skip the step),
+//! double after `growth_interval` consecutive clean steps.  The §III-C
+//! overflow check is what feeds `update`.
+
+#[derive(Debug, Clone)]
+pub struct LossScaler {
+    scale: f64,
+    growth_interval: usize,
+    good_steps: usize,
+    min_scale: f64,
+    max_scale: f64,
+    /// Counters for reporting.
+    pub overflows: u64,
+    pub growths: u64,
+}
+
+impl LossScaler {
+    pub fn new(init_scale: f64, growth_interval: usize) -> Self {
+        Self {
+            scale: init_scale,
+            growth_interval: growth_interval.max(1),
+            good_steps: 0,
+            min_scale: 1.0,
+            max_scale: 2f64.powi(24),
+            overflows: 0,
+            growths: 0,
+        }
+    }
+
+    /// Scaler for bf16 runs: fixed at 1.0 (no overflow checks needed).
+    pub fn disabled() -> Self {
+        let mut s = Self::new(1.0, usize::MAX);
+        s.max_scale = 1.0;
+        s
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Feed the overflow verdict for this step. Returns true if the
+    /// optimizer step should be SKIPPED.
+    pub fn update(&mut self, overflowed: bool) -> bool {
+        if overflowed {
+            self.overflows += 1;
+            self.good_steps = 0;
+            self.scale = (self.scale / 2.0).max(self.min_scale);
+            true
+        } else {
+            self.good_steps += 1;
+            if self.good_steps >= self.growth_interval && self.scale < self.max_scale {
+                self.scale = (self.scale * 2.0).min(self.max_scale);
+                self.good_steps = 0;
+                self.growths += 1;
+            }
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halves_on_overflow_and_skips() {
+        let mut s = LossScaler::new(65536.0, 100);
+        assert!(s.update(true));
+        assert_eq!(s.scale(), 32768.0);
+        assert!(s.update(true));
+        assert_eq!(s.scale(), 16384.0);
+    }
+
+    #[test]
+    fn grows_after_interval() {
+        let mut s = LossScaler::new(1024.0, 3);
+        assert!(!s.update(false));
+        assert!(!s.update(false));
+        assert_eq!(s.scale(), 1024.0);
+        assert!(!s.update(false));
+        assert_eq!(s.scale(), 2048.0);
+        assert_eq!(s.growths, 1);
+    }
+
+    #[test]
+    fn overflow_resets_growth_counter() {
+        let mut s = LossScaler::new(1024.0, 2);
+        s.update(false);
+        s.update(true); // reset
+        s.update(false);
+        assert_eq!(s.scale(), 512.0, "no growth yet");
+        s.update(false);
+        assert_eq!(s.scale(), 1024.0);
+    }
+
+    #[test]
+    fn floor_at_one() {
+        let mut s = LossScaler::new(2.0, 10);
+        s.update(true);
+        s.update(true);
+        s.update(true);
+        assert_eq!(s.scale(), 1.0);
+    }
+
+    #[test]
+    fn disabled_is_inert() {
+        let mut s = LossScaler::disabled();
+        for _ in 0..1000 {
+            s.update(false);
+        }
+        assert_eq!(s.scale(), 1.0);
+    }
+}

@@ -1,0 +1,255 @@
+//! CPU Adam/AdamW — the DeepSpeed host-optimizer analog.
+//!
+//! ZeRO-Infinity runs the optimizer on the CPU because its arithmetic
+//! intensity never justifies moving optimizer states over PCIe
+//! (§II-A).  This is the fused C++/AVX backend's Rust counterpart:
+//! contiguous flat buffers, a chunked parallel loop, bias correction
+//! and decoupled weight decay in one pass, with gradient unscaling
+//! (the dynamic-loss-scale divide) folded in so gradients are never
+//! rewritten.
+//!
+//! Two state layouts:
+//! - fp32 states (baseline): `m`, `v`, master `p` all f32.
+//! - bf16 states (§VI-B-3a "pure half-precision optimizer"): `m`, `v`,
+//!   and master `p` stored as bf16 (direct truncation from f32), halving
+//!   optimizer I/O volume — Fig. 20 / Table VI.
+
+pub mod states;
+
+pub use states::{OptimState, StateDtype};
+
+use crate::util::par;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdamParams {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+}
+
+impl Default for AdamParams {
+    fn default() -> Self {
+        Self { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+/// One fused AdamW step over f32 flat buffers.
+///
+/// `grads` are *scaled* by `grad_scale` (dynamic loss scaling); the
+/// unscale divide happens inline. `step` is 1-based.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_step_f32(
+    p: &mut [f32],
+    grads: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    step: u64,
+    grad_scale: f32,
+    hp: &AdamParams,
+    threads: usize,
+) {
+    let n = p.len();
+    assert!(grads.len() == n && m.len() == n && v.len() == n);
+    // fp32 arithmetic inside the loop — DeepSpeed's AVX backend
+    // semantics, and ~1.8x faster than the f64 path on this core
+    // (§Perf); bias corrections still come from f64 pow.
+    let bc1 = (1.0 - hp.beta1.powi(step as i32)) as f32;
+    let bc2 = (1.0 - hp.beta2.powi(step as i32)) as f32;
+    let inv_scale = 1.0f32 / grad_scale;
+    let (lr, b1, b2, eps, wd) = (
+        hp.lr as f32,
+        hp.beta1 as f32,
+        hp.beta2 as f32,
+        hp.eps as f32,
+        hp.weight_decay as f32,
+    );
+
+    // Chunked loop: each chunk updates its disjoint spans of all four
+    // buffers. Single pass, no temporaries (the fusion the paper's
+    // AVX backend performs).
+    let chunks = par::chunks(n, threads.max(1));
+    std::thread::scope(|scope| {
+        // SAFETY-free split: partition all slices identically.
+        let mut p_rest = p;
+        let mut m_rest = m;
+        let mut v_rest = v;
+        let mut handles = Vec::new();
+        let mut offset = 0usize;
+        for (s, e) in chunks {
+            let take = e - s;
+            let (p_c, pr) = p_rest.split_at_mut(take);
+            let (m_c, mr) = m_rest.split_at_mut(take);
+            let (v_c, vr) = v_rest.split_at_mut(take);
+            p_rest = pr;
+            m_rest = mr;
+            v_rest = vr;
+            let g_c = &grads[offset..offset + take];
+            offset += take;
+            handles.push(scope.spawn(move || {
+                for i in 0..p_c.len() {
+                    let g = g_c[i] * inv_scale;
+                    let mi = b1 * m_c[i] + (1.0 - b1) * g;
+                    let vi = b2 * v_c[i] + (1.0 - b2) * g * g;
+                    let m_hat = mi / bc1;
+                    let v_hat = vi / bc2;
+                    let pi = p_c[i];
+                    p_c[i] = pi - lr * (m_hat / (v_hat.sqrt() + eps) + wd * pi);
+                    m_c[i] = mi;
+                    v_c[i] = vi;
+                }
+            }));
+        }
+    });
+}
+
+/// AdamW step where `m`, `v`, and master `p` live as packed bf16
+/// (loaded to f32 per chunk, updated, truncated back). `p_bf16`,
+/// `m_bf16`, `v_bf16` are little-endian bf16 byte buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_step_bf16(
+    p_bf16: &mut [u8],
+    grads: &[f32],
+    m_bf16: &mut [u8],
+    v_bf16: &mut [u8],
+    step: u64,
+    grad_scale: f32,
+    hp: &AdamParams,
+    _threads: usize,
+) {
+    use crate::dtype::{bf16_to_f32, f32_to_bf16};
+    let n = grads.len();
+    assert!(p_bf16.len() == 2 * n && m_bf16.len() == 2 * n && v_bf16.len() == 2 * n);
+    let bc1 = 1.0 - hp.beta1.powi(step as i32);
+    let bc2 = 1.0 - hp.beta2.powi(step as i32);
+    let inv_scale = 1.0 / grad_scale as f64;
+    let rd = |b: &[u8], i: usize| bf16_to_f32(u16::from_le_bytes([b[2 * i], b[2 * i + 1]]));
+    for i in 0..n {
+        let g = grads[i] as f64 * inv_scale;
+        let mi = hp.beta1 * rd(m_bf16, i) as f64 + (1.0 - hp.beta1) * g;
+        let vi = hp.beta2 * rd(v_bf16, i) as f64 + (1.0 - hp.beta2) * g * g;
+        let m_hat = mi / bc1;
+        let v_hat = vi / bc2;
+        let pi = rd(p_bf16, i) as f64;
+        let pnew =
+            pi - hp.lr * (m_hat / (v_hat.sqrt() + hp.eps) + hp.weight_decay * pi);
+        p_bf16[2 * i..2 * i + 2].copy_from_slice(&f32_to_bf16(pnew as f32).to_le_bytes());
+        m_bf16[2 * i..2 * i + 2].copy_from_slice(&f32_to_bf16(mi as f32).to_le_bytes());
+        v_bf16[2 * i..2 * i + 2].copy_from_slice(&f32_to_bf16(vi as f32).to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scalar reference Adam (textbook form).
+    fn reference(
+        p: &mut Vec<f64>,
+        g: &[f64],
+        m: &mut Vec<f64>,
+        v: &mut Vec<f64>,
+        t: u64,
+        hp: &AdamParams,
+    ) {
+        for i in 0..p.len() {
+            m[i] = hp.beta1 * m[i] + (1.0 - hp.beta1) * g[i];
+            v[i] = hp.beta2 * v[i] + (1.0 - hp.beta2) * g[i] * g[i];
+            let mh = m[i] / (1.0 - hp.beta1.powi(t as i32));
+            let vh = v[i] / (1.0 - hp.beta2.powi(t as i32));
+            p[i] -= hp.lr * (mh / (vh.sqrt() + hp.eps) + hp.weight_decay * p[i]);
+        }
+    }
+
+    #[test]
+    fn matches_reference_over_steps() {
+        let hp = AdamParams { weight_decay: 0.01, ..Default::default() };
+        let n = 1000;
+        let mut rng = crate::util::rng::Xoshiro256::new(1);
+        let mut p: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut m = vec![0f32; n];
+        let mut v = vec![0f32; n];
+        let mut pr: Vec<f64> = p.iter().map(|&x| x as f64).collect();
+        let mut mr = vec![0f64; n];
+        let mut vr = vec![0f64; n];
+        for t in 1..=20 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let gr: Vec<f64> = g.iter().map(|&x| x as f64).collect();
+            adam_step_f32(&mut p, &g, &mut m, &mut v, t, 1.0, &hp, 1);
+            reference(&mut pr, &gr, &mut mr, &mut vr, t, &hp);
+        }
+        for i in 0..n {
+            assert!(
+                (p[i] as f64 - pr[i]).abs() < 1e-4,
+                "param {i}: {} vs {}",
+                p[i],
+                pr[i]
+            );
+        }
+    }
+
+    #[test]
+    fn grad_scale_is_unscaled() {
+        let hp = AdamParams::default();
+        let scale = 1024.0f32;
+        let mut p1 = vec![1.0f32; 8];
+        let (mut m1, mut v1) = (vec![0f32; 8], vec![0f32; 8]);
+        let mut p2 = vec![1.0f32; 8];
+        let (mut m2, mut v2) = (vec![0f32; 8], vec![0f32; 8]);
+        let g = vec![0.5f32; 8];
+        let g_scaled: Vec<f32> = g.iter().map(|x| x * scale).collect();
+        adam_step_f32(&mut p1, &g, &mut m1, &mut v1, 1, 1.0, &hp, 1);
+        adam_step_f32(&mut p2, &g_scaled, &mut m2, &mut v2, 1, scale, &hp, 1);
+        for i in 0..8 {
+            assert!((p1[i] - p2[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn multithreaded_matches_single() {
+        let hp = AdamParams::default();
+        let n = 10_007;
+        let mut rng = crate::util::rng::Xoshiro256::new(3);
+        let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let p0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut p1 = p0.clone();
+        let (mut m1, mut v1) = (vec![0f32; n], vec![0f32; n]);
+        let mut p4 = p0;
+        let (mut m4, mut v4) = (vec![0f32; n], vec![0f32; n]);
+        adam_step_f32(&mut p1, &g, &mut m1, &mut v1, 1, 1.0, &hp, 1);
+        adam_step_f32(&mut p4, &g, &mut m4, &mut v4, 1, 1.0, &hp, 4);
+        assert_eq!(p1, p4);
+        assert_eq!(m1, m4);
+    }
+
+    #[test]
+    fn bf16_states_approximate_f32() {
+        let hp = AdamParams::default();
+        let n = 256;
+        let mut rng = crate::util::rng::Xoshiro256::new(5);
+        let p0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut pf = p0.clone();
+        let (mut mf, mut vf) = (vec![0f32; n], vec![0f32; n]);
+        let mut pb = vec![0u8; 2 * n];
+        crate::dtype::f32s_to_bf16_bytes(&p0, &mut pb);
+        let (mut mb, mut vb) = (vec![0u8; 2 * n], vec![0u8; 2 * n]);
+        for t in 1..=10 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+            adam_step_f32(&mut pf, &g, &mut mf, &mut vf, t, 1.0, &hp, 1);
+            adam_step_bf16(&mut pb, &g, &mut mb, &mut vb, t, 1.0, &hp, 1);
+        }
+        let mut back = vec![0f32; n];
+        crate::dtype::bf16_bytes_to_f32s(&pb, &mut back);
+        for i in 0..n {
+            // bf16 has ~3 decimal digits: loose tolerance, but the
+            // trajectory must track
+            assert!(
+                (back[i] - pf[i]).abs() < 0.05,
+                "{i}: {} vs {}",
+                back[i],
+                pf[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Optimizer state residency: SSD-backed subgroup swapping.
+//!
+//! ZeRO-Infinity updates optimizer states in *subgroups*: for each
+//! contiguous span of parameters it reads (master, m, v) from SSD into
+//! pinned buffers, updates on CPU, and writes them back — so host
+//! memory holds only a subgroup at a time, not 12 bytes/param.  This
+//! module owns that loop and its I/O-volume accounting (Fig. 20).
+
+use crate::dtype::DType;
+use crate::ssd::NvmeEngine;
+
+/// Optimizer state storage precision (paper §VI-B-3a).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StateDtype {
+    F32,
+    BF16,
+}
+
+impl StateDtype {
+    pub fn dtype(self) -> DType {
+        match self {
+            StateDtype::F32 => DType::F32,
+            StateDtype::BF16 => DType::BF16,
+        }
+    }
+
+    pub fn bytes_per_elem(self) -> usize {
+        self.dtype().size()
+    }
+}
+
+/// Keys under which one flat group's states live on the SSD.
+pub fn state_keys(group: &str) -> [String; 3] {
+    [
+        format!("{group}/master"),
+        format!("{group}/adam_m"),
+        format!("{group}/adam_v"),
+    ]
+}
+
+/// SSD-resident optimizer state for one parameter group.
+pub struct OptimState {
+    pub group: String,
+    pub numel: usize,
+    pub dtype: StateDtype,
+}
+
+impl OptimState {
+    /// Initialize states on the SSD: master = initial params, m = v = 0.
+    pub fn init(
+        engine: &dyn NvmeEngine,
+        group: &str,
+        params_f32: &[f32],
+        dtype: StateDtype,
+    ) -> anyhow::Result<Self> {
+        let [k_p, k_m, k_v] = state_keys(group);
+        let n = params_f32.len();
+        match dtype {
+            StateDtype::F32 => {
+                engine.write(&k_p, crate::dtype::f32s_as_bytes(params_f32))?;
+                let zeros = vec![0u8; n * 4];
+                engine.write(&k_m, &zeros)?;
+                engine.write(&k_v, &zeros)?;
+            }
+            StateDtype::BF16 => {
+                let mut buf = vec![0u8; n * 2];
+                crate::dtype::f32s_to_bf16_bytes(params_f32, &mut buf);
+                engine.write(&k_p, &buf)?;
+                let zeros = vec![0u8; n * 2];
+                engine.write(&k_m, &zeros)?;
+                engine.write(&k_v, &zeros)?;
+            }
+        }
+        Ok(Self { group: group.to_string(), numel: n, dtype })
+    }
+
+    /// Bytes moved (read + write) by one full optimizer step over this
+    /// group, including the fp16 compute-weight writeback.
+    pub fn io_bytes_per_step(&self) -> u64 {
+        let s = self.dtype.bytes_per_elem() as u64;
+        let n = self.numel as u64;
+        // read master+m+v, write master+m+v, write fp16 compute copy
+        n * s * 6 + n * 2
+    }
+
+    /// Run one fused AdamW step with states streamed through `engine`.
+    /// `grads` are the group's fp32 (scaled) gradients; returns the
+    /// updated fp16 compute weights (LE bytes) written back to SSD.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        engine: &dyn NvmeEngine,
+        grads: &[f32],
+        step: u64,
+        grad_scale: f32,
+        hp: &super::AdamParams,
+        threads: usize,
+        fp16_key: &str,
+    ) -> anyhow::Result<Vec<u8>> {
+        anyhow::ensure!(grads.len() == self.numel, "grad size mismatch");
+        let [k_p, k_m, k_v] = state_keys(&self.group);
+        let n = self.numel;
+        let mut fp16 = vec![0u8; n * 2];
+        match self.dtype {
+            StateDtype::F32 => {
+                let mut p = vec![0f32; n];
+                let mut m = vec![0f32; n];
+                let mut v = vec![0f32; n];
+                engine.read(&k_p, crate::dtype::f32s_as_bytes_mut(&mut p))?;
+                engine.read(&k_m, crate::dtype::f32s_as_bytes_mut(&mut m))?;
+                engine.read(&k_v, crate::dtype::f32s_as_bytes_mut(&mut v))?;
+                super::adam_step_f32(&mut p, grads, &mut m, &mut v, step, grad_scale, hp, threads);
+                engine.write(&k_p, crate::dtype::f32s_as_bytes(&p))?;
+                engine.write(&k_m, crate::dtype::f32s_as_bytes(&m))?;
+                engine.write(&k_v, crate::dtype::f32s_as_bytes(&v))?;
+                crate::dtype::f32s_to_f16_bytes(&p, &mut fp16);
+            }
+            StateDtype::BF16 => {
+                let mut p = vec![0u8; n * 2];
+                let mut m = vec![0u8; n * 2];
+                let mut v = vec![0u8; n * 2];
+                engine.read(&k_p, &mut p)?;
+                engine.read(&k_m, &mut m)?;
+                engine.read(&k_v, &mut v)?;
+                super::adam_step_bf16(&mut p, grads, &mut m, &mut v, step, grad_scale, hp, threads);
+                engine.write(&k_p, &p)?;
+                engine.write(&k_m, &m)?;
+                engine.write(&k_v, &v)?;
+                // bf16 -> f32 -> f16 for the compute copy
+                let mut pf = vec![0f32; n];
+                crate::dtype::bf16_bytes_to_f32s(&p, &mut pf);
+                crate::dtype::f32s_to_f16_bytes(&pf, &mut fp16);
+            }
+        }
+        engine.write(fp16_key, &fp16)?;
+        Ok(fp16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::AdamParams;
+    use crate::ssd::DirectEngine;
+
+    fn engine(tag: &str) -> (DirectEngine, std::path::PathBuf) {
+        let dir =
+            std::env::temp_dir().join(format!("ma-opt-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        (DirectEngine::new(&dir, 1, 1 << 26, 1).unwrap(), dir)
+    }
+
+    #[test]
+    fn ssd_swapped_step_matches_in_memory() {
+        let (eng, dir) = engine("par");
+        let hp = AdamParams::default();
+        let n = 500;
+        let mut rng = crate::util::rng::Xoshiro256::new(2);
+        let p0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let st = OptimState::init(&eng, "g0", &p0, StateDtype::F32).unwrap();
+
+        // in-memory reference trajectory
+        let mut pr = p0.clone();
+        let (mut mr, mut vr) = (vec![0f32; n], vec![0f32; n]);
+        for t in 1..=5 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            crate::optimizer::adam_step_f32(&mut pr, &g, &mut mr, &mut vr, t, 1.0, &hp, 1);
+            st.step(&eng, &g, t, 1.0, &hp, 1, "g0/fp16").unwrap();
+        }
+        let mut p_ssd = vec![0f32; n];
+        eng.read("g0/master", crate::dtype::f32s_as_bytes_mut(&mut p_ssd)).unwrap();
+        for i in 0..n {
+            assert!((p_ssd[i] - pr[i]).abs() < 1e-6);
+        }
+        // fp16 compute copy exists and decodes near the master
+        let mut fp16 = vec![0u8; n * 2];
+        eng.read("g0/fp16", &mut fp16).unwrap();
+        let mut back = vec![0f32; n];
+        crate::dtype::f16_bytes_to_f32s(&fp16, &mut back);
+        for i in 0..n {
+            assert!((back[i] - pr[i]).abs() < 2e-3 * pr[i].abs().max(1.0));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bf16_io_volume_is_less_than_half_plus_const() {
+        // Fig. 20: bf16 optimizer cuts state I/O by 2x
+        let f32_state = OptimState {
+            group: "g".into(),
+            numel: 1_000_000,
+            dtype: StateDtype::F32,
+        };
+        let bf16_state = OptimState {
+            group: "g".into(),
+            numel: 1_000_000,
+            dtype: StateDtype::BF16,
+        };
+        let r = bf16_state.io_bytes_per_step() as f64
+            / f32_state.io_bytes_per_step() as f64;
+        assert!((0.5..0.6).contains(&r), "ratio {r}");
+    }
+
+    #[test]
+    fn state_keys_are_namespaced() {
+        let [p, m, v] = state_keys("layers.0.wq");
+        assert!(p.contains("master") && m.contains("adam_m") && v.contains("adam_v"));
+    }
+}

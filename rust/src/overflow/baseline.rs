@@ -1,0 +1,108 @@
+//! The ZeRO-Infinity overflow check, faithfully inefficient.
+//!
+//! PyTorch's path (paper Fig. 3): `isinf()` internally calls `abs()`
+//! which **duplicates the tensor**, then compares against +inf into a
+//! Boolean tensor, reduces with `any()`; `isnan()` produces another
+//! Boolean tensor and reduction.  Five passes, two materialized
+//! temporaries, and a 2.25× transient memory peak on the fp32 flat
+//! buffer (1× abs copy + 0.25× bool tensor), then a further 1.25×
+//! peak for the isnan bool tensor.
+//!
+//! Temporaries here are *real allocations* charged to the tracker so
+//! the Fig. 13 bench measures the spike, not a model of it.
+
+use std::sync::Arc;
+
+use crate::pinned::{Cat, MemoryTracker};
+
+/// Step 2-3: abs copy + isinf bool tensor + any reduce.
+/// Step 4-5: isnan bool tensor + any reduce.
+pub fn baseline_overflow_check(grads: &[f32], tracker: &Arc<MemoryTracker>) -> bool {
+    let n = grads.len();
+    let f32_bytes = (n * 4) as u64;
+    let bool_bytes = n as u64; // torch bool = 1 byte/elem
+
+    // ---- pass 1: abs() duplicates the tensor (the 1.0x copy) ----
+    tracker.alloc(Cat::OverflowTemp, f32_bytes);
+    let abs: Vec<f32> = grads.iter().map(|x| x.abs()).collect();
+
+    // ---- pass 2: isinf() -> bool tensor (the 0.25x) ----
+    tracker.alloc(Cat::OverflowTemp, bool_bytes);
+    let isinf: Vec<u8> = abs.iter().map(|x| u8::from(x.is_infinite())).collect();
+
+    // ---- pass 3: any() over the bool tensor ----
+    let inf_any = isinf.iter().any(|&b| b != 0);
+
+    // abs copy and isinf bool free before the isnan pass (Fig. 3:
+    // the second peak is lower, 1.25x)
+    drop(abs);
+    tracker.free(Cat::OverflowTemp, f32_bytes);
+    drop(isinf);
+    tracker.free(Cat::OverflowTemp, bool_bytes);
+
+    // ---- pass 4: isnan() -> bool tensor ----
+    tracker.alloc(Cat::OverflowTemp, bool_bytes);
+    let isnan: Vec<u8> = grads.iter().map(|x| u8::from(x.is_nan())).collect();
+
+    // ---- pass 5: any() ----
+    let nan_any = isnan.iter().any(|&b| b != 0);
+    drop(isnan);
+    tracker.free(Cat::OverflowTemp, bool_bytes);
+
+    inf_any || nan_any
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detects_all_specials() {
+        let tracker = Arc::new(MemoryTracker::new());
+        assert!(!baseline_overflow_check(&[1.0, -2.0, 0.0], &tracker));
+        assert!(baseline_overflow_check(&[1.0, f32::INFINITY], &tracker));
+        assert!(baseline_overflow_check(&[f32::NEG_INFINITY], &tracker));
+        assert!(baseline_overflow_check(&[0.0, f32::NAN], &tracker));
+    }
+
+    #[test]
+    fn memory_spike_is_2_25x() {
+        let n = 1_000_000usize;
+        let grads = vec![0.5f32; n];
+        let tracker = Arc::new(MemoryTracker::with_timeline());
+        // charge the flat buffer itself so the ratio is visible
+        tracker.alloc(Cat::GradFlat, (n * 4) as u64);
+        baseline_overflow_check(&grads, &tracker);
+        let flat = (n * 4) as u64;
+        let peak = tracker.peak_total();
+        // flat (1.0) + abs copy (1.0) + bool (0.25) = 2.25x
+        let ratio = peak as f64 / flat as f64;
+        assert!((2.24..2.26).contains(&ratio), "peak ratio {ratio}");
+        // after the check, transients are gone
+        assert_eq!(tracker.current(Cat::OverflowTemp), 0);
+    }
+
+    #[test]
+    fn timeline_shows_double_peak() {
+        let n = 1000usize;
+        let grads = vec![0.5f32; n];
+        let tracker = Arc::new(MemoryTracker::with_timeline());
+        tracker.alloc(Cat::GradFlat, (n * 4) as u64);
+        baseline_overflow_check(&grads, &tracker);
+        let tl = tracker.timeline();
+        // find the two local maxima of total_after
+        let totals: Vec<u64> = tl.iter().map(|e| e.total_after).collect();
+        let peak1 = *totals.iter().max().unwrap();
+        // second peak: max after the first drop below peak1
+        let first_peak_idx = totals.iter().position(|&t| t == peak1).unwrap();
+        let after_drop: Vec<u64> = totals[first_peak_idx..]
+            .iter()
+            .copied()
+            .skip_while(|&t| t == peak1)
+            .collect();
+        let peak2 = after_drop.iter().max().copied().unwrap_or(0);
+        let flat = (n * 4) as u64;
+        assert_eq!(peak1, flat * 9 / 4); // 2.25x
+        assert_eq!(peak2, flat * 5 / 4); // 1.25x
+    }
+}

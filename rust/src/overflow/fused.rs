@@ -1,0 +1,104 @@
+//! MemAscend's fused overflow check — paper Algorithm 1.
+//!
+//! IEEE-754: a float is Inf or NaN **iff its exponent field is all
+//! ones**.  So the check is: reinterpret bits, AND with the exponent
+//! mask, compare — one pass, no temporaries, embarrassingly parallel,
+//! with cooperative early exit across workers.
+//!
+//! This is the same computation as the L1 Pallas kernel
+//! (`python/compile/kernels/overflow.py`); integration tests assert the
+//! native path, the HLO-artifact path, and the baseline chain all
+//! return identical verdicts.
+
+use crate::util::par;
+
+const EXP_MASK_F32: u32 = 0x7F80_0000;
+const EXP_MASK_F16: u16 = 0x7C00;
+const EXP_MASK_BF16: u16 = 0x7F80;
+
+/// Tile size per early-exit poll. 64Ki elements = 256 KiB of f32 —
+/// large enough to amortize the atomic poll, small enough to exit fast.
+const TILE: usize = 1 << 16;
+
+#[inline]
+fn tile_has_overflow_f32(tile: &[f32]) -> bool {
+    // Branch-free inner loop: OR-accumulate the masked compare so the
+    // compiler can autovectorize; branch only once per tile.
+    let mut acc = false;
+    for &x in tile {
+        acc |= (x.to_bits() & EXP_MASK_F32) == EXP_MASK_F32;
+    }
+    acc
+}
+
+/// Fused single-pass check over an fp32 buffer.
+pub fn fused_overflow_check(grads: &[f32], threads: usize) -> bool {
+    par::par_any(grads, threads, TILE, tile_has_overflow_f32)
+}
+
+/// Fused check over packed IEEE binary16 values.
+pub fn fused_overflow_check_f16(bits: &[u16], threads: usize) -> bool {
+    par::par_any(bits, threads, TILE * 2, |tile| {
+        let mut acc = false;
+        for &b in tile {
+            acc |= (b & EXP_MASK_F16) == EXP_MASK_F16;
+        }
+        acc
+    })
+}
+
+/// Fused check over packed bfloat16 values.
+pub fn fused_overflow_check_bf16(bits: &[u16], threads: usize) -> bool {
+    par::par_any(bits, threads, TILE * 2, |tile| {
+        let mut acc = false;
+        for &b in tile {
+            acc |= (b & EXP_MASK_BF16) == EXP_MASK_BF16;
+        }
+        acc
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::{f32_to_bf16, f32_to_f16};
+
+    #[test]
+    fn exponent_mask_is_exact() {
+        // all-ones exponent <=> inf or nan, never a finite value
+        assert!(fused_overflow_check(&[f32::INFINITY], 1));
+        assert!(fused_overflow_check(&[f32::NEG_INFINITY], 1));
+        assert!(fused_overflow_check(&[f32::NAN], 1));
+        assert!(!fused_overflow_check(&[f32::MAX, f32::MIN_POSITIVE, -0.0], 1));
+    }
+
+    #[test]
+    fn finds_needle_in_any_position() {
+        for pos in [0usize, 1, TILE - 1, TILE, TILE + 1, 3 * TILE - 1] {
+            let mut v = vec![1.0f32; 3 * TILE];
+            v[pos] = f32::NAN;
+            assert!(fused_overflow_check(&v, 1), "pos {pos}");
+            assert!(fused_overflow_check(&v, 4), "pos {pos} (mt)");
+        }
+    }
+
+    #[test]
+    fn f16_bf16_variants() {
+        let inf16 = f32_to_f16(f32::INFINITY);
+        let one16 = f32_to_f16(1.0);
+        assert!(fused_overflow_check_f16(&[one16, inf16], 1));
+        assert!(!fused_overflow_check_f16(&[one16; 64], 1));
+
+        let nanb = f32_to_bf16(f32::NAN);
+        let oneb = f32_to_bf16(1.0);
+        assert!(fused_overflow_check_bf16(&[oneb, nanb], 1));
+        assert!(!fused_overflow_check_bf16(&[oneb; 64], 1));
+        // f16 max (65504) is finite in f16: must not flag
+        assert!(!fused_overflow_check_f16(&[f32_to_f16(65504.0)], 1));
+    }
+
+    #[test]
+    fn empty_buffer_is_clean() {
+        assert!(!fused_overflow_check(&[], 1));
+    }
+}

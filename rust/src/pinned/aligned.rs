@@ -1,0 +1,170 @@
+//! MemAscend's alignment-free pinned allocation (§IV-C).
+//!
+//! Real mode mirrors the paper's C++ extension: `posix_memalign` with
+//! 4096-byte alignment (the DMA requirement), size rounded only to the
+//! 4 KiB page boundary — not to a power of two — then "page-locked and
+//! registered" (a no-op here; the *policy* cost is what's measured),
+//! wrapped with a release hook that frees exactly once (the
+//! `torch::from_blob` custom-deleter lifecycle).  Freed memory returns
+//! to the OS immediately: these buffers are allocated once at init and
+//! live for the whole run, so caching buys nothing.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::{Cat, HostAllocator, HostRegion, MemoryTracker, Mode, RegionData};
+
+/// DMA-required alignment (NVMe + pinned-transfer friendly).
+pub const DMA_ALIGN: usize = 4096;
+
+pub fn round_page(bytes: usize) -> usize {
+    bytes.div_ceil(DMA_ALIGN) * DMA_ALIGN
+}
+
+pub struct AlignedAllocator {
+    mode: Mode,
+    tracker: Arc<MemoryTracker>,
+    reserved: Arc<AtomicUsize>,
+    requested: Arc<AtomicUsize>,
+}
+
+impl AlignedAllocator {
+    pub fn new(mode: Mode, tracker: Arc<MemoryTracker>) -> Arc<Self> {
+        Arc::new(Self {
+            mode,
+            tracker,
+            reserved: Arc::new(AtomicUsize::new(0)),
+            requested: Arc::new(AtomicUsize::new(0)),
+        })
+    }
+
+    fn alloc_impl(&self, bytes: usize, cat: Cat) -> HostRegion {
+        let reserved = round_page(bytes.max(1));
+        self.reserved.fetch_add(reserved, Ordering::Relaxed);
+        self.requested.fetch_add(bytes, Ordering::Relaxed);
+        self.tracker.alloc(cat, bytes as u64);
+        self.tracker
+            .alloc(Cat::PinnedOverhead, (reserved - bytes) as u64);
+
+        let data = match self.mode {
+            Mode::Virtual => RegionData::Virtual,
+            Mode::Real => {
+                let mut ptr: *mut libc::c_void = std::ptr::null_mut();
+                // SAFETY: standard posix_memalign call; checked result.
+                let rc = unsafe {
+                    libc::posix_memalign(&mut ptr, DMA_ALIGN, reserved)
+                };
+                assert_eq!(rc, 0, "posix_memalign failed for {reserved} bytes");
+                // zero-init (pinned buffers are staging space; make
+                // reads deterministic)
+                unsafe { std::ptr::write_bytes(ptr.cast::<u8>(), 0, reserved) };
+                RegionData::Aligned { ptr: ptr.cast::<u8>() }
+            }
+        };
+
+        let tracker = Arc::clone(&self.tracker);
+        let res_ctr = Arc::clone(&self.reserved);
+        let req_ctr = Arc::clone(&self.requested);
+        let req = bytes;
+        HostRegion {
+            data,
+            bytes_requested: bytes,
+            bytes_reserved: reserved,
+            cat,
+            release: Some(Box::new(move |data, reserved, cat| {
+                // exactly-once free via the region's Drop (refcount
+                // semantics are provided by Arc<HostRegion> users).
+                if let RegionData::Aligned { ptr } = data {
+                    // SAFETY: ptr came from posix_memalign above and is
+                    // freed exactly once (release is take()n).
+                    unsafe { libc::free(ptr.cast()) };
+                }
+                res_ctr.fetch_sub(reserved, Ordering::Relaxed);
+                req_ctr.fetch_sub(req, Ordering::Relaxed);
+                tracker.free(cat, req as u64);
+                tracker.free(Cat::PinnedOverhead, (reserved - req) as u64);
+            })),
+        }
+    }
+}
+
+impl HostAllocator for Arc<AlignedAllocator> {
+    fn alloc(&self, bytes: usize, cat: Cat) -> HostRegion {
+        self.alloc_impl(bytes, cat)
+    }
+
+    fn reserved_bytes(&self) -> usize {
+        self.reserved.load(Ordering::Relaxed)
+    }
+
+    fn requested_bytes(&self) -> usize {
+        self.requested.load(Ordering::Relaxed)
+    }
+
+    fn tracker(&self) -> &Arc<MemoryTracker> {
+        &self.tracker
+    }
+}
+
+// Convenience: allow calling alloc directly on AlignedAllocator too.
+impl AlignedAllocator {
+    pub fn alloc(&self, bytes: usize, cat: Cat) -> HostRegion {
+        self.alloc_impl(bytes, cat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::{check, Config};
+
+    #[test]
+    fn overhead_is_subpage() {
+        let a = AlignedAllocator::new(Mode::Virtual, Arc::new(MemoryTracker::new()));
+        // the paper's 2.1 GiB example: overhead < 4 KiB, not ~2 GiB
+        let r = a.alloc((21 << 30) / 10, Cat::GradFlat);
+        assert!(r.overhead() < DMA_ALIGN);
+    }
+
+    #[test]
+    fn real_alloc_is_dma_aligned_and_zeroed() {
+        let a = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
+        let mut r = a.alloc(10_000, Cat::Other);
+        let ptr = r.as_mut_slice().as_ptr() as usize;
+        assert_eq!(ptr % DMA_ALIGN, 0);
+        assert!(r.as_slice().iter().all(|&b| b == 0));
+        r.as_mut_slice()[0] = 7;
+        assert_eq!(r.as_slice()[0], 7);
+    }
+
+    #[test]
+    fn free_returns_to_os_ledger() {
+        let tracker = Arc::new(MemoryTracker::new());
+        let a = AlignedAllocator::new(Mode::Real, tracker.clone());
+        let r = a.alloc(1 << 20, Cat::OptimBuf);
+        assert!(Arc::clone(&a).reserved_bytes() >= 1 << 20);
+        drop(r);
+        assert_eq!(Arc::clone(&a).reserved_bytes(), 0);
+        assert_eq!(tracker.current_total(), 0);
+        assert!(tracker.peak_total() >= 1 << 20);
+    }
+
+    #[test]
+    fn prop_fragmentation_is_negligible() {
+        check("aligned-allocator", Config::default(), |rng, size| {
+            let a =
+                AlignedAllocator::new(Mode::Virtual, Arc::new(MemoryTracker::new()));
+            let mut live = Vec::new();
+            for _ in 0..rng.range(1, 30) {
+                let bytes = rng.range(1, size.max(2) * 4096);
+                let r = a.alloc(bytes, Cat::Other);
+                prop_assert!(r.overhead() < DMA_ALIGN, "overhead >= page");
+                live.push(r);
+            }
+            let frag = Arc::clone(&a).fragmentation();
+            prop_assert!(frag < 0.5, "fragmentation {frag} too high");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,219 @@
+//! PyTorch `CachingHostAllocator` policy reproduction (the baseline).
+//!
+//! Policy, per the PyTorch source the paper analyzes:
+//! 1. every request is rounded **up to the next power of two**;
+//! 2. freed blocks are *cached* in per-size free lists, not returned to
+//!    the OS (pinning/unpinning is expensive), so reserved memory is
+//!    monotone non-decreasing;
+//! 3. an allocation is served from the smallest cached block whose
+//!    rounded size matches, else fresh memory is pinned.
+//!
+//! For the huge, long-lived, exactly-sized buffers of SSD offloading,
+//! (1) turns into *permanent* internal fragmentation — the paper's
+//! §III-B: "aligning a 2.1 GiB request to 4 GiB needlessly wastes
+//! almost 2 GiB".
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{Cat, HostAllocator, HostRegion, MemoryTracker, Mode, RegionData};
+
+/// Requests below this are not rounded (matches the small-block slab
+/// behaviour; irrelevant for offload buffers but keeps policy honest).
+const MIN_ROUND: usize = 4096;
+
+pub fn round_pow2(bytes: usize) -> usize {
+    if bytes <= MIN_ROUND {
+        return MIN_ROUND;
+    }
+    bytes.next_power_of_two()
+}
+
+struct FreeLists {
+    /// rounded size -> number of cached blocks of that size.
+    lists: BTreeMap<usize, usize>,
+}
+
+pub struct CachingAllocator {
+    mode: Mode,
+    tracker: Arc<MemoryTracker>,
+    free: Mutex<FreeLists>,
+    reserved: AtomicUsize,
+    requested: AtomicUsize,
+    /// Fresh pins vs cache hits (reuse-rate metric).
+    pub fresh_allocs: AtomicUsize,
+    pub cache_hits: AtomicUsize,
+}
+
+impl CachingAllocator {
+    pub fn new(mode: Mode, tracker: Arc<MemoryTracker>) -> Arc<Self> {
+        Arc::new(Self {
+            mode,
+            tracker,
+            free: Mutex::new(FreeLists { lists: BTreeMap::new() }),
+            reserved: AtomicUsize::new(0),
+            requested: AtomicUsize::new(0),
+            fresh_allocs: AtomicUsize::new(0),
+            cache_hits: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn alloc_arc(self: &Arc<Self>, bytes: usize, cat: Cat) -> HostRegion {
+        let rounded = round_pow2(bytes);
+        let hit = {
+            let mut free = self.free.lock().unwrap();
+            match free.lists.get_mut(&rounded) {
+                Some(n) if *n > 0 => {
+                    *n -= 1;
+                    true
+                }
+                _ => false,
+            }
+        };
+        if hit {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.fresh_allocs.fetch_add(1, Ordering::Relaxed);
+            self.reserved.fetch_add(rounded, Ordering::Relaxed);
+            // Reserved growth is what the paper charges as pinned
+            // memory: the full rounded size, forever.
+            self.tracker.alloc(cat, bytes as u64);
+            self.tracker
+                .alloc(Cat::PinnedOverhead, (rounded - bytes) as u64);
+        }
+        self.requested.fetch_add(bytes, Ordering::Relaxed);
+
+        let data = match self.mode {
+            Mode::Virtual => RegionData::Virtual,
+            Mode::Real => RegionData::Real(vec![0u8; rounded].into_boxed_slice()),
+        };
+        let me = Arc::clone(self);
+        let req = bytes;
+        HostRegion {
+            data,
+            bytes_requested: bytes,
+            bytes_reserved: rounded,
+            cat,
+            release: Some(Box::new(move |_data, reserved, _cat| {
+                // Blocks go back to the cache — never to the OS.
+                me.requested.fetch_sub(req, Ordering::Relaxed);
+                let mut free = me.free.lock().unwrap();
+                *free.lists.entry(reserved).or_insert(0) += 1;
+            })),
+        }
+    }
+
+    /// Bytes sitting in the free cache (reserved, unused, unreturned).
+    pub fn cached_bytes(&self) -> usize {
+        let free = self.free.lock().unwrap();
+        free.lists.iter().map(|(sz, n)| sz * n).sum()
+    }
+}
+
+impl HostAllocator for Arc<CachingAllocator> {
+    fn alloc(&self, bytes: usize, cat: Cat) -> HostRegion {
+        self.alloc_arc(bytes, cat)
+    }
+
+    fn reserved_bytes(&self) -> usize {
+        self.reserved.load(Ordering::Relaxed)
+    }
+
+    fn requested_bytes(&self) -> usize {
+        self.requested.load(Ordering::Relaxed)
+    }
+
+    fn tracker(&self) -> &Arc<MemoryTracker> {
+        &self.tracker
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::{check, Config};
+
+    fn mk() -> Arc<CachingAllocator> {
+        CachingAllocator::new(Mode::Virtual, Arc::new(MemoryTracker::new()))
+    }
+
+    #[test]
+    fn pow2_rounding() {
+        assert_eq!(round_pow2(1), MIN_ROUND);
+        assert_eq!(round_pow2(4096), 4096);
+        assert_eq!(round_pow2(4097), 8192);
+        // the paper's example: 2.1 GiB -> 4 GiB
+        let gib = 1usize << 30;
+        assert_eq!(round_pow2(gib * 21 / 10), 4 * gib);
+    }
+
+    #[test]
+    fn paper_example_wastes_half() {
+        let a = mk();
+        let r = a.alloc_arc((21 << 30) / 10, Cat::GradFlat);
+        assert!(r.overhead() as f64 > 1.89 * (1u64 << 30) as f64);
+    }
+
+    #[test]
+    fn freed_blocks_are_cached_not_released() {
+        let a = mk();
+        let r = a.alloc_arc(10_000, Cat::Other);
+        let reserved = a.reserved_bytes();
+        drop(r);
+        assert_eq!(a.reserved_bytes(), reserved, "reserve is monotone");
+        assert_eq!(a.cached_bytes(), round_pow2(10_000));
+        // same-size realloc must hit the cache
+        let _r2 = a.alloc_arc(9_000, Cat::Other); // rounds to same bucket
+        assert_eq!(a.cache_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(a.reserved_bytes(), reserved);
+    }
+
+    #[test]
+    fn different_size_misses_cache() {
+        let a = mk();
+        drop(a.alloc_arc(10_000, Cat::Other)); // 16384 bucket
+        let _r = a.alloc_arc(20_000, Cat::Other); // 32768 bucket
+        assert_eq!(a.cache_hits.load(Ordering::Relaxed), 0);
+        assert_eq!(a.fresh_allocs.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn prop_reserved_geq_requested_and_pow2() {
+        check("caching-allocator", Config::default(), |rng, size| {
+            let a = mk();
+            let mut live = Vec::new();
+            for _ in 0..rng.range(1, 40) {
+                if !live.is_empty() && rng.next_f64() < 0.4 {
+                    let i = rng.below(live.len());
+                    live.swap_remove(i);
+                } else {
+                    let bytes = rng.range(1, size.max(2) * 1000);
+                    let r = a.alloc_arc(bytes, Cat::Other);
+                    prop_assert!(
+                        r.bytes_reserved >= r.bytes_requested,
+                        "reserved < requested"
+                    );
+                    prop_assert!(
+                        r.bytes_reserved.is_power_of_two()
+                            || r.bytes_reserved == MIN_ROUND,
+                        "not pow2: {}",
+                        r.bytes_reserved
+                    );
+                    live.push(r);
+                }
+                let live_req: usize = live.iter().map(|r| r.bytes_requested).sum();
+                prop_assert!(
+                    a.requested_bytes() == live_req,
+                    "requested ledger drift"
+                );
+                prop_assert!(
+                    a.reserved_bytes() >= live_req,
+                    "reserved below live requested"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,144 @@
+//! Pinned host memory: the allocation policies at the center of §III-B
+//! and §IV-C.
+//!
+//! CUDA pinned memory itself cannot exist here (no GPU); what the paper
+//! measures, though, is *policy* waste — PyTorch's CachingHostAllocator
+//! rounds every request to the next power of two and caches freed
+//! blocks, so a 2.1 GiB long-lived buffer reserves 4 GiB forever.  The
+//! policies are reproduced bit-for-bit over real host memory (or over
+//! pure accounting for full-scale models):
+//!
+//! - [`caching::CachingAllocator`] — pow2 rounding + size-bucket reuse
+//!   (the ZeRO-Infinity baseline behaviour).
+//! - [`aligned::AlignedAllocator`] — MemAscend's alignment-free path:
+//!   `posix_memalign(4096)` exact-size allocation, refcounted free
+//!   (the `cudaHostRegister`/`torch::from_blob` lifecycle analog).
+
+pub mod aligned;
+pub mod caching;
+pub mod tracker;
+
+pub use aligned::AlignedAllocator;
+pub use caching::CachingAllocator;
+pub use tracker::{Cat, MemoryTracker};
+
+use std::sync::Arc;
+
+/// Real allocations back tiny-model training; Virtual allocations run
+/// the identical policy logic while only charging the tracker — that is
+/// how 322 GiB peaks are measured inside a 35 GiB container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Real,
+    Virtual,
+}
+
+/// A pinned host region. `bytes_requested <= bytes_reserved`; the
+/// difference is the allocator-policy overhead the paper attacks.
+pub struct HostRegion {
+    pub(crate) data: RegionData,
+    pub bytes_requested: usize,
+    pub bytes_reserved: usize,
+    pub(crate) cat: Cat,
+    pub(crate) release: Option<Box<dyn FnOnce(RegionData, usize, Cat) + Send>>,
+}
+
+pub(crate) enum RegionData {
+    Real(Box<[u8]>),
+    /// posix_memalign'd pointer (freed via libc::free in release hook).
+    Aligned { ptr: *mut u8 },
+    Virtual,
+}
+
+// SAFETY: the Aligned pointer is uniquely owned by this region.
+unsafe impl Send for RegionData {}
+
+impl HostRegion {
+    /// Mutable view of the *requested* span (Real/Aligned modes only).
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        match &mut self.data {
+            RegionData::Real(b) => &mut b[..self.bytes_requested],
+            RegionData::Aligned { ptr } => unsafe {
+                std::slice::from_raw_parts_mut(*ptr, self.bytes_requested)
+            },
+            RegionData::Virtual => &mut [],
+        }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.data {
+            RegionData::Real(b) => &b[..self.bytes_requested],
+            RegionData::Aligned { ptr } => unsafe {
+                std::slice::from_raw_parts(*ptr, self.bytes_requested)
+            },
+            RegionData::Virtual => &[],
+        }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self.data, RegionData::Virtual)
+    }
+
+    /// Policy overhead of this allocation in bytes.
+    pub fn overhead(&self) -> usize {
+        self.bytes_reserved - self.bytes_requested
+    }
+}
+
+impl Drop for HostRegion {
+    fn drop(&mut self) {
+        if let Some(release) = self.release.take() {
+            let data = std::mem::replace(&mut self.data, RegionData::Virtual);
+            release(data, self.bytes_reserved, self.cat);
+        }
+    }
+}
+
+/// Common allocator interface for both policies.
+pub trait HostAllocator: Send + Sync {
+    /// Allocate `bytes` under category `cat`.
+    fn alloc(&self, bytes: usize, cat: Cat) -> HostRegion;
+
+    /// Total bytes currently reserved by the allocator (incl. cached
+    /// free blocks that the OS never got back — PyTorch semantics).
+    fn reserved_bytes(&self) -> usize;
+
+    /// Sum of currently-live requested bytes.
+    fn requested_bytes(&self) -> usize;
+
+    fn tracker(&self) -> &Arc<MemoryTracker>;
+
+    /// Reserved-but-not-requested fraction (internal fragmentation).
+    fn fragmentation(&self) -> f64 {
+        let res = self.reserved_bytes();
+        if res == 0 {
+            return 0.0;
+        }
+        1.0 - self.requested_bytes() as f64 / res as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_real_rw() {
+        let tracker = Arc::new(MemoryTracker::new());
+        let alloc = AlignedAllocator::new(Mode::Real, tracker);
+        let mut r = alloc.alloc(100, Cat::Other);
+        r.as_mut_slice()[99] = 42;
+        assert_eq!(r.as_slice()[99], 42);
+        assert!(!r.is_virtual());
+    }
+
+    #[test]
+    fn virtual_region_has_no_storage() {
+        let tracker = Arc::new(MemoryTracker::new());
+        let alloc = AlignedAllocator::new(Mode::Virtual, tracker);
+        let r = alloc.alloc(1 << 40, Cat::Other); // 1 TiB "allocated"
+        assert!(r.is_virtual());
+        assert_eq!(r.as_slice().len(), 0);
+        assert!(r.bytes_reserved >= 1 << 40);
+    }
+}

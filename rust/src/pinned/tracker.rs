@@ -1,0 +1,243 @@
+//! System-memory ledger: per-category current/peak accounting plus an
+//! event timeline (the instrument behind Figs. 3, 8, 13, 15, 16, 17).
+//!
+//! Every allocator, buffer pool, and engine charges its bytes here, in
+//! both *real* runs (tiny models, actual buffers) and *virtual* runs
+//! (full-scale accounting — same allocator logic, no backing pages).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Memory categories matching the paper's Fig. 8 breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Cat {
+    /// Parameter buffer pool (prefetch staging).
+    ParamPool,
+    /// Power-of-two / alignment overhead on pinned allocations.
+    PinnedOverhead,
+    /// fp32 gradient partition flat buffer.
+    GradFlat,
+    /// Transients of the overflow check (abs copy, bool tensors).
+    OverflowTemp,
+    /// Optimizer state fetch/update buffers.
+    OptimBuf,
+    /// Swap-out staging buffer.
+    SwapBuf,
+    /// Offloaded activation checkpoints (Eq. 1).
+    ActCkpt,
+    /// Small resident tensors (norms, router) + misc framework.
+    Resident,
+    Other,
+}
+
+impl Cat {
+    pub const ALL: [Cat; 9] = [
+        Cat::ParamPool,
+        Cat::PinnedOverhead,
+        Cat::GradFlat,
+        Cat::OverflowTemp,
+        Cat::OptimBuf,
+        Cat::SwapBuf,
+        Cat::ActCkpt,
+        Cat::Resident,
+        Cat::Other,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Cat::ParamPool => "param_pool",
+            Cat::PinnedOverhead => "pinned_overhead",
+            Cat::GradFlat => "grad_flat",
+            Cat::OverflowTemp => "overflow_temp",
+            Cat::OptimBuf => "optim_buf",
+            Cat::SwapBuf => "swap_buf",
+            Cat::ActCkpt => "act_ckpt",
+            Cat::Resident => "resident",
+            Cat::Other => "other",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Logical time (monotone event counter).
+    pub t: u64,
+    pub cat: Cat,
+    /// Signed delta in bytes (+alloc / -free).
+    pub delta: i64,
+    /// Global current total *after* this event.
+    pub total_after: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    current: BTreeMap<Cat, u64>,
+    peak: BTreeMap<Cat, u64>,
+    timeline: Vec<Event>,
+    record_timeline: bool,
+}
+
+/// Thread-safe memory ledger.
+pub struct MemoryTracker {
+    inner: Mutex<Inner>,
+    total: AtomicU64,
+    peak_total: AtomicU64,
+    clock: AtomicU64,
+}
+
+impl Default for MemoryTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemoryTracker {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner::default()),
+            total: AtomicU64::new(0),
+            peak_total: AtomicU64::new(0),
+            clock: AtomicU64::new(0),
+        }
+    }
+
+    /// Enable the event timeline (Fig. 3 reproduction); off by default
+    /// to keep long runs cheap.
+    pub fn with_timeline() -> Self {
+        let t = Self::new();
+        t.inner.lock().unwrap().record_timeline = true;
+        t
+    }
+
+    pub fn alloc(&self, cat: Cat, bytes: u64) {
+        self.apply(cat, bytes as i64);
+    }
+
+    pub fn free(&self, cat: Cat, bytes: u64) {
+        self.apply(cat, -(bytes as i64));
+    }
+
+    fn apply(&self, cat: Cat, delta: i64) {
+        let t = self.clock.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        let cur = inner.current.entry(cat).or_insert(0);
+        if delta >= 0 {
+            *cur += delta as u64;
+        } else {
+            let d = (-delta) as u64;
+            debug_assert!(*cur >= d, "free exceeds current for {:?}", cat);
+            *cur = cur.saturating_sub(d);
+        }
+        let cur_v = *cur;
+        let pk = inner.peak.entry(cat).or_insert(0);
+        *pk = (*pk).max(cur_v);
+
+        let new_total = if delta >= 0 {
+            self.total.fetch_add(delta as u64, Ordering::Relaxed) + delta as u64
+        } else {
+            let d = (-delta) as u64;
+            self.total.fetch_sub(d, Ordering::Relaxed) - d
+        };
+        self.peak_total.fetch_max(new_total, Ordering::Relaxed);
+        if inner.record_timeline {
+            inner.timeline.push(Event { t, cat, delta, total_after: new_total });
+        }
+    }
+
+    pub fn current_total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_total(&self) -> u64 {
+        self.peak_total.load(Ordering::Relaxed)
+    }
+
+    pub fn current(&self, cat: Cat) -> u64 {
+        *self.inner.lock().unwrap().current.get(&cat).unwrap_or(&0)
+    }
+
+    pub fn peak(&self, cat: Cat) -> u64 {
+        *self.inner.lock().unwrap().peak.get(&cat).unwrap_or(&0)
+    }
+
+    pub fn timeline(&self) -> Vec<Event> {
+        self.inner.lock().unwrap().timeline.clone()
+    }
+
+    /// Per-category peak snapshot (Fig. 8 bars).
+    pub fn peak_breakdown(&self) -> Vec<(Cat, u64)> {
+        let inner = self.inner.lock().unwrap();
+        Cat::ALL
+            .iter()
+            .filter_map(|c| inner.peak.get(c).map(|v| (*c, *v)))
+            .filter(|(_, v)| *v > 0)
+            .collect()
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (c, v) in self.peak_breakdown() {
+            s.push_str(&format!(
+                "  {:<16} peak {:>12}  current {:>12}\n",
+                c.name(),
+                crate::util::human::bytes(v),
+                crate::util::human::bytes(self.current(c)),
+            ));
+        }
+        s.push_str(&format!(
+            "  {:<16} peak {:>12}  current {:>12}\n",
+            "TOTAL",
+            crate::util::human::bytes(self.peak_total()),
+            crate::util::human::bytes(self.current_total()),
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_spike() {
+        let t = MemoryTracker::new();
+        t.alloc(Cat::GradFlat, 100);
+        t.alloc(Cat::OverflowTemp, 125); // 2.25x spike analog
+        t.free(Cat::OverflowTemp, 125);
+        assert_eq!(t.current_total(), 100);
+        assert_eq!(t.peak_total(), 225);
+        assert_eq!(t.peak(Cat::OverflowTemp), 125);
+        assert_eq!(t.current(Cat::OverflowTemp), 0);
+    }
+
+    #[test]
+    fn timeline_records_order() {
+        let t = MemoryTracker::with_timeline();
+        t.alloc(Cat::ParamPool, 10);
+        t.alloc(Cat::GradFlat, 20);
+        t.free(Cat::ParamPool, 10);
+        let tl = t.timeline();
+        assert_eq!(tl.len(), 3);
+        assert!(tl.windows(2).all(|w| w[0].t < w[1].t));
+        assert_eq!(tl[2].total_after, 20);
+    }
+
+    #[test]
+    fn concurrent_updates_balance() {
+        let t = std::sync::Arc::new(MemoryTracker::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let t = t.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        t.alloc(Cat::Other, 7);
+                        t.free(Cat::Other, 7);
+                    }
+                });
+            }
+        });
+        assert_eq!(t.current_total(), 0);
+        assert!(t.peak_total() >= 7);
+    }
+}

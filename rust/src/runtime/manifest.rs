@@ -1,0 +1,223 @@
+//! AOT manifest: the shape/dtype contract between `python/compile` and
+//! the Rust runtime (written by `aot.py`, one per exported config).
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub results: Vec<ArgSpec>,
+}
+
+/// Model hyper-parameters baked into the artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub intermediate: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub chunk: usize,
+    pub param_count: u64,
+}
+
+/// Adam constants baked into the `adam_step` artifact.
+#[derive(Debug, Clone)]
+pub struct AdamMeta {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelMeta,
+    pub adam: AdamMeta,
+    pub block_weight_names: Vec<String>,
+    pub stages: Vec<StageSpec>,
+}
+
+fn arg_from_json(j: &Json) -> anyhow::Result<ArgSpec> {
+    Ok(ArgSpec {
+        name: j.req("name")?.as_str().unwrap_or_default().to_string(),
+        shape: j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("shape not array"))?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect(),
+        dtype: j.req("dtype")?.as_str().unwrap_or("f32").to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let c = j.req("config")?;
+        let num = |k: &str| -> anyhow::Result<usize> {
+            c.req(k)?.as_usize().ok_or_else(|| anyhow::anyhow!("config.{k} not a number"))
+        };
+        let config = ModelMeta {
+            name: c.req("name")?.as_str().unwrap_or_default().to_string(),
+            vocab: num("vocab")?,
+            hidden: num("hidden")?,
+            intermediate: num("intermediate")?,
+            layers: num("layers")?,
+            heads: num("heads")?,
+            kv_heads: num("kv_heads")?,
+            seq: num("seq")?,
+            batch: num("batch")?,
+            chunk: num("chunk")?,
+            param_count: c.req("param_count")?.as_u64().unwrap_or(0),
+        };
+        let a = j.req("adam")?;
+        let anum = |k: &str| -> anyhow::Result<f64> {
+            a.req(k)?.as_f64().ok_or_else(|| anyhow::anyhow!("adam.{k} not a number"))
+        };
+        let adam = AdamMeta {
+            lr: anum("lr")?,
+            beta1: anum("beta1")?,
+            beta2: anum("beta2")?,
+            eps: anum("eps")?,
+            weight_decay: anum("weight_decay")?,
+        };
+        let block_weight_names = j
+            .req("block_weight_names")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("block_weight_names not array"))?
+            .iter()
+            .map(|v| v.as_str().unwrap_or_default().to_string())
+            .collect();
+        let mut stages = Vec::new();
+        for (name, st) in j
+            .req("stages")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("stages not object"))?
+        {
+            let args = st
+                .req("args")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("args not array"))?
+                .iter()
+                .map(arg_from_json)
+                .collect::<anyhow::Result<_>>()?;
+            let results = st
+                .req("results")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("results not array"))?
+                .iter()
+                .map(arg_from_json)
+                .collect::<anyhow::Result<_>>()?;
+            stages.push(StageSpec {
+                name: name.clone(),
+                file: st.req("file")?.as_str().unwrap_or_default().to_string(),
+                args,
+                results,
+            });
+        }
+        Ok(Self { config, adam, block_weight_names, stages })
+    }
+
+    pub fn stage(&self, name: &str) -> anyhow::Result<&StageSpec> {
+        self.stages.iter().find(|s| s.name == name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no stage '{name}' in manifest (have: {})",
+                self.stage_names().join(", ")
+            )
+        })
+    }
+
+    pub fn stage_names(&self) -> Vec<String> {
+        self.stages.iter().map(|s| s.name.clone()).collect()
+    }
+
+    /// The matching Rust-side ModelSpec preset, verified dimensionally.
+    pub fn model_spec(&self) -> anyhow::Result<&'static crate::config::ModelSpec> {
+        let spec = crate::config::ModelSpec::by_name(&self.config.name)?;
+        anyhow::ensure!(
+            spec.vocab == self.config.vocab
+                && spec.hidden == self.config.hidden
+                && spec.layers == self.config.layers
+                && spec.param_count() == self.config.param_count,
+            "manifest/preset divergence for '{}': re-run `make artifacts`",
+            self.config.name
+        );
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"name": "smoke", "vocab": 64, "hidden": 32,
+                 "intermediate": 64, "layers": 2, "heads": 2,
+                 "kv_heads": 2, "seq": 16, "batch": 2, "chunk": 1024,
+                 "param_count": 23680, "norm_eps": 1e-6,
+                 "rope_theta": 10000.0},
+      "adam": {"lr": 0.001, "beta1": 0.9, "beta2": 0.999,
+               "eps": 1e-8, "weight_decay": 0.0},
+      "block_weight_names": ["attn_norm", "wq"],
+      "stages": {
+        "embed_fwd": {
+          "file": "embed_fwd.hlo.txt",
+          "args": [{"name": "tokens", "shape": [2, 16], "dtype": "i32"},
+                    {"name": "table", "shape": [64, 32], "dtype": "f32"}],
+          "results": [{"name": "h", "shape": [2, 16, 32], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config.name, "smoke");
+        assert_eq!(m.config.hidden, 32);
+        let st = m.stage("embed_fwd").unwrap();
+        assert_eq!(st.args[0].dtype, "i32");
+        assert_eq!(st.args[0].numel(), 32);
+        assert_eq!(st.results[0].numel(), 2 * 16 * 32);
+        assert!(m.stage("nope").is_err());
+        assert!((m.adam.lr - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_spec_divergence_detected() {
+        // param_count 23680 is wrong for the smoke preset -> must error
+        let m = Manifest::parse(SAMPLE).unwrap();
+        if m.config.param_count != crate::config::presets::SMOKE.param_count() {
+            assert!(m.model_spec().is_err());
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute from Rust.
+//!
+//! The request path is Rust-only: `make artifacts` ran Python once to
+//! lower every L1/L2 stage to HLO *text* (xla_extension 0.5.1 rejects
+//! jax≥0.5's 64-bit-id serialized protos; the text parser reassigns
+//! ids).  Here each stage is parsed, compiled on the PJRT CPU client,
+//! cached, and invoked with `Literal` marshaling.
+
+pub mod manifest;
+
+pub use manifest::{ArgSpec, Manifest, StageSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Value {
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(v) => v.len(),
+            Value::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            Value::F32(v) => Ok(v),
+            Value::I32(_) => anyhow::bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> anyhow::Result<Vec<f32>> {
+        match self {
+            Value::F32(v) => Ok(v),
+            Value::I32(_) => anyhow::bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            Value::I32(v) => Ok(v),
+            Value::F32(_) => anyhow::bail!("expected i32 tensor, got f32"),
+        }
+    }
+}
+
+/// Compiled-stage cache over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest for one exported config directory
+    /// (`artifacts/<config>/`).
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            dir: artifacts_dir.to_path_buf(),
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(
+        &self,
+        stage: &str,
+    ) -> anyhow::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.lock().unwrap().get(stage) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.stage(stage)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {stage}: {e}"))?,
+        );
+        self.compiled.lock().unwrap().insert(stage.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every stage (pays all XLA compile time up front).
+    pub fn warmup(&self) -> anyhow::Result<()> {
+        for n in self.manifest.stage_names() {
+            self.executable(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a stage. `args` must match the manifest's arg order,
+    /// shapes, and dtypes; results come back in manifest result order.
+    pub fn run(&self, stage: &str, args: &[Value]) -> anyhow::Result<Vec<Value>> {
+        let spec = self.manifest.stage(stage)?.clone();
+        anyhow::ensure!(
+            args.len() == spec.args.len(),
+            "{stage}: expected {} args, got {}",
+            spec.args.len(),
+            args.len()
+        );
+        // Inputs go through caller-owned PjRtBuffers + execute_b: the
+        // crate's literal-taking execute() leaks every input device
+        // buffer at the C layer (xla_rs.cc `buffer.release()` without a
+        // matching free — ~50 MB/step at tiny25m scale), and the
+        // host-buffer path also skips one literal copy (§Perf).
+        let mut buffers = Vec::with_capacity(args.len());
+        for (a, s) in args.iter().zip(&spec.args) {
+            anyhow::ensure!(
+                a.len() == s.numel(),
+                "{stage}: arg '{}' expected {} elems, got {}",
+                s.name,
+                s.numel(),
+                a.len()
+            );
+            let buf = match (a, s.dtype.as_str()) {
+                (Value::F32(v), "f32") => self
+                    .client
+                    .buffer_from_host_buffer(v, &s.shape, None)
+                    .map_err(|e| anyhow::anyhow!("upload {}: {e}", s.name))?,
+                (Value::I32(v), "i32") => self
+                    .client
+                    .buffer_from_host_buffer(v, &s.shape, None)
+                    .map_err(|e| anyhow::anyhow!("upload {}: {e}", s.name))?,
+                _ => anyhow::bail!("{stage}: arg '{}' dtype mismatch", s.name),
+            };
+            buffers.push(buf);
+        }
+        let exe = self.executable(stage)?;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow::anyhow!("execute {stage}: {e}"))?;
+        drop(buffers); // device inputs freed eagerly
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {stage}: {e}"))?;
+        // stages are lowered with return_tuple=True
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {stage}: {e}"))?;
+        anyhow::ensure!(
+            parts.len() == spec.results.len(),
+            "{stage}: expected {} results, got {}",
+            spec.results.len(),
+            parts.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, r) in parts.into_iter().zip(&spec.results) {
+            let v = match r.dtype.as_str() {
+                "f32" => Value::F32(
+                    lit.to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("read {}: {e}", r.name))?,
+                ),
+                "i32" => Value::I32(
+                    lit.to_vec::<i32>()
+                        .map_err(|e| anyhow::anyhow!("read {}: {e}", r.name))?,
+                ),
+                other => anyhow::bail!("unsupported result dtype {other}"),
+            };
+            anyhow::ensure!(
+                v.len() == r.numel(),
+                "{stage}: result '{}' expected {} elems, got {}",
+                r.name,
+                r.numel(),
+                v.len()
+            );
+            out.push(v);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,166 @@
+//! Analytic NVMe device model — the physics behind Fig. 14's curves.
+//!
+//! Container-backed files cannot exhibit real NVMe behaviour (SLC-cache
+//! burst absorption, destaging to NAND, deep queues), so full-scale
+//! projections use this model, parameterized by a `HardwareSpec`:
+//!
+//! **Write path** (Fig. 14(a)/(b)):
+//! - *direct engine*: `t = t_submit + size / bw_eff(size)`, where
+//!   `bw_eff` starts at the cache-absorption rate for transfers that
+//!   fit the SLC/DRAM cache and converges to the sustained NAND rate as
+//!   the written volume grows — the paper's "decreasing trend in
+//!   MemAscend's write bandwidth".
+//! - *filesystem baseline*: adds a fixed host-side cost per operation
+//!   (path resolution + metadata + journaling + RAID merge) and a
+//!   per-extent allocation cost, so small writes are overhead-dominated
+//!   and bandwidth *rises* with size — "the contrasting shapes of the
+//!   two curves".
+//!
+//! **Read path** (Fig. 14(c)/(d)): both engines see NAND read rates;
+//! the filesystem adds lookup costs and *variance* (RAID-level merges),
+//! the direct path is flat.
+
+use crate::config::HardwareSpec;
+
+/// Cache-absorbed write speed multiplier over sustained NAND rate.
+const CACHE_BOOST: f64 = 4.0;
+/// Host-side submission cost for a raw AIO request, seconds.
+const T_SUBMIT: f64 = 8e-6;
+/// Filesystem fixed cost per write op: open + resolve + metadata.
+const T_FS_WRITE_OP: f64 = 650e-6;
+/// Filesystem fixed cost per read op.
+const T_FS_READ_OP: f64 = 120e-6;
+/// Journal/allocation cost per MiB of *newly allocated* space.
+const T_FS_ALLOC_PER_MIB: f64 = 35e-6;
+
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub hw: HardwareSpec,
+}
+
+impl DeviceModel {
+    pub fn new(hw: &HardwareSpec) -> Self {
+        Self { hw: hw.clone() }
+    }
+
+    fn gib(bytes: u64) -> f64 {
+        bytes as f64 / (1u64 << 30) as f64
+    }
+
+    /// Effective aggregate write bandwidth (GiB/s) for one transfer of
+    /// `bytes`, including SLC-cache absorption and destaging blend.
+    ///
+    /// Under a sustained benchmark the cache never fully drains between
+    /// transfers, so only a small fraction of the nominal SLC capacity
+    /// is available per op — modeled as an exponential decay of the
+    /// cache boost with transfer size (calibrated so the paper's 2 MiB
+    /// and 3.1 GB write latencies both land; see Fig. 14 bench).
+    pub fn write_bw_eff(&self, bytes: u64) -> f64 {
+        let sustained = self.hw.ssd_agg_write_gibs();
+        // steady-state usable cache: ~4% of nominal SLC capacity
+        let eff_cache = (self.hw.ssd_cache_gib * self.hw.ssds as f64 * 0.04).max(0.05);
+        let size = Self::gib(bytes);
+        let boost = 1.0 + (CACHE_BOOST - 1.0) * (-size / eff_cache).exp();
+        sustained * boost
+    }
+
+    /// Direct-engine write latency (seconds) for one tensor.
+    pub fn direct_write_lat(&self, bytes: u64) -> f64 {
+        let stripes = self.hw.ssds.max(1) as f64;
+        T_SUBMIT * stripes
+            + self.hw.ssd_lat_us * 1e-6
+            + Self::gib(bytes) / self.write_bw_eff(bytes)
+    }
+
+    /// Filesystem write latency (seconds); `fresh` = first allocation.
+    pub fn fs_write_lat(&self, bytes: u64, fresh: bool) -> f64 {
+        let alloc = if fresh {
+            T_FS_ALLOC_PER_MIB * (bytes as f64 / (1u64 << 20) as f64)
+        } else {
+            0.0
+        };
+        // the fs path throttles effective bandwidth (journaled writes,
+        // RAID merge on the critical path)
+        let bw = self.hw.ssd_agg_write_gibs() * 0.85;
+        T_FS_WRITE_OP + alloc + self.hw.ssd_lat_us * 1e-6 + Self::gib(bytes) / bw
+    }
+
+    pub fn direct_read_lat(&self, bytes: u64) -> f64 {
+        T_SUBMIT * self.hw.ssds.max(1) as f64
+            + self.hw.ssd_lat_us * 1e-6
+            + Self::gib(bytes) / self.hw.ssd_agg_read_gibs()
+    }
+
+    pub fn fs_read_lat(&self, bytes: u64) -> f64 {
+        T_FS_READ_OP
+            + self.hw.ssd_lat_us * 1e-6
+            + Self::gib(bytes) / (self.hw.ssd_agg_read_gibs() * 0.97)
+    }
+
+    /// Observed bandwidth (GiB/s) from a latency function.
+    pub fn bw_of(bytes: u64, lat: f64) -> f64 {
+        Self::gib(bytes) / lat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::CONFIG2;
+
+    fn model() -> DeviceModel {
+        DeviceModel::new(&CONFIG2)
+    }
+
+    #[test]
+    fn small_writes_direct_beats_fs_heavily() {
+        // paper: 2 MiB tensor, 988us (fs) vs 219us (direct) — 4.5x
+        let m = model();
+        let bytes = 2_097_152;
+        let fs = m.fs_write_lat(bytes, false);
+        let direct = m.direct_write_lat(bytes);
+        let speedup = fs / direct;
+        assert!(
+            (2.0..8.0).contains(&speedup),
+            "speedup {speedup} out of paper ballpark"
+        );
+    }
+
+    #[test]
+    fn large_writes_converge() {
+        // paper: 3.1 GB tensor, 304ms vs 266ms — ~1.14x
+        let m = model();
+        let bytes = 3_114_270_720;
+        let ratio = m.fs_write_lat(bytes, false) / m.direct_write_lat(bytes);
+        assert!((1.0..1.6).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn direct_write_bw_decreases_with_size() {
+        // SLC cache absorbs small bursts -> destaging dominates later
+        let m = model();
+        let small = DeviceModel::bw_of(1 << 24, m.direct_write_lat(1 << 24));
+        let large =
+            DeviceModel::bw_of(60 << 30, m.direct_write_lat(60u64 << 30));
+        assert!(small > large * 1.5, "small {small} vs large {large}");
+    }
+
+    #[test]
+    fn fs_write_bw_increases_with_size() {
+        let m = model();
+        let small = DeviceModel::bw_of(1 << 21, m.fs_write_lat(1 << 21, false));
+        let large = DeviceModel::bw_of(1 << 30, m.fs_write_lat(1 << 30, false));
+        assert!(large > small * 2.0, "small {small} vs large {large}");
+    }
+
+    #[test]
+    fn reads_are_comparable() {
+        // paper: "both methods achieve similar average read bandwidth"
+        let m = model();
+        let b = 1u64 << 28;
+        let fs = DeviceModel::bw_of(b, m.fs_read_lat(b));
+        let direct = DeviceModel::bw_of(b, m.direct_read_lat(b));
+        let ratio = direct / fs;
+        assert!((0.9..1.3).contains(&ratio), "ratio {ratio}");
+    }
+}

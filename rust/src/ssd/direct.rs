@@ -1,0 +1,360 @@
+//! MemAscend's direct NVMe engine (§IV-E).
+//!
+//! The paper bypasses the filesystem entirely: raw AIO requests go to
+//! the NVMe driver at logical block addresses handed out by a location
+//! allocator, with a tensor-location dictionary mapping tensor keys to
+//! (device, LBA, length) extents and requests divided among worker
+//! threads so the data is horizontally striped across SSDs ("striping
+//! in place of software RAID 0").  A shared offset counter guarantees
+//! extents never overlap; the cost of consulting it is "a simple shared
+//! memory integer operation that occurs only once per tensor".
+//!
+//! Here each device is one flat preallocated file standing in for
+//! `/dev/nvmeXn1` — all I/O is positional (`pread`/`pwrite`-style via
+//! `FileExt`) at 4 KiB-aligned LBAs, with **no** per-tensor file
+//! creation, path resolution, or metadata journaling on the data path.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+use std::time::Instant;
+
+use super::{IoSnapshot, IoStats, NvmeEngine};
+
+/// LBA granularity: NVMe logical block = 4 KiB here.
+pub const LBA_SIZE: usize = 4096;
+
+/// One stripe extent of a tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Extent {
+    pub dev: usize,
+    /// Byte offset on the device (LBA * LBA_SIZE).
+    pub offset: u64,
+    pub len: usize,
+}
+
+struct Device {
+    file: File,
+    /// The location allocator's shared offset counter (bump allocation,
+    /// LBA-aligned — the paper's "shared device information structure").
+    next_offset: AtomicU64,
+    capacity: u64,
+}
+
+pub struct DirectEngine {
+    devices: Vec<Device>,
+    /// Tensor location dictionary: key -> stripes + logical length.
+    dict: RwLock<HashMap<String, (Vec<Extent>, usize)>>,
+    /// Round-robin start device for striping fairness.
+    next_start: AtomicU64,
+    workers: usize,
+    stats: IoStats,
+    /// Serializes allocation of a *new* tensor (once per tensor).
+    alloc_lock: Mutex<()>,
+}
+
+impl DirectEngine {
+    /// `root/nvmeN.raw` are the flat device files of `capacity` bytes
+    /// each (created sparse). `workers` = I/O worker thread fanout.
+    pub fn new(
+        root: &Path,
+        devices: usize,
+        capacity: u64,
+        workers: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(devices >= 1 && workers >= 1);
+        std::fs::create_dir_all(root)?;
+        let devs = (0..devices)
+            .map(|i| {
+                let file = OpenOptions::new()
+                    .create(true)
+                    .read(true)
+                    .write(true)
+                    .truncate(false)
+                    .open(root.join(format!("nvme{i}.raw")))?;
+                file.set_len(capacity)?; // sparse preallocation
+                Ok(Device { file, next_offset: AtomicU64::new(0), capacity })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self {
+            devices: devs,
+            dict: RwLock::new(HashMap::new()),
+            next_start: AtomicU64::new(0),
+            workers,
+            stats: IoStats::default(),
+            alloc_lock: Mutex::new(()),
+        })
+    }
+
+    /// Allocate striped extents for a new tensor of `len` bytes:
+    /// split into `devices` near-equal LBA-aligned portions (the
+    /// paper's "dividing the data into equal portions").
+    fn allocate(&self, key: &str, len: usize) -> anyhow::Result<Vec<Extent>> {
+        let _guard = self.alloc_lock.lock().unwrap();
+        // double-check under the lock
+        if let Some((ext, stored)) = self.dict.read().unwrap().get(key) {
+            anyhow::ensure!(
+                *stored == len,
+                "direct: size change for '{key}' ({stored} -> {len}) unsupported"
+            );
+            return Ok(ext.clone());
+        }
+        let n = self.devices.len();
+        let start = self.next_start.fetch_add(1, Ordering::Relaxed) as usize;
+        let per = len.div_ceil(n);
+        let per_aligned = per.div_ceil(LBA_SIZE) * LBA_SIZE;
+        let mut extents = Vec::with_capacity(n);
+        let mut remaining = len;
+        for i in 0..n {
+            if remaining == 0 {
+                break;
+            }
+            let dev = (start + i) % n;
+            let this = per.min(remaining);
+            let off = self.devices[dev]
+                .next_offset
+                .fetch_add(per_aligned as u64, Ordering::Relaxed);
+            anyhow::ensure!(
+                off + per_aligned as u64 <= self.devices[dev].capacity,
+                "direct: device {dev} full"
+            );
+            extents.push(Extent { dev, offset: off, len: this });
+            remaining -= this;
+        }
+        self.dict
+            .write()
+            .unwrap()
+            .insert(key.to_string(), (extents.clone(), len));
+        Ok(extents)
+    }
+
+    fn lookup(&self, key: &str) -> Option<(Vec<Extent>, usize)> {
+        self.dict.read().unwrap().get(key).cloned()
+    }
+
+    /// Fan extents across worker threads (striping + multi-threading).
+    fn run_io<F>(&self, extents: &[Extent], f: F) -> anyhow::Result<()>
+    where
+        F: Fn(&Extent, usize) -> anyhow::Result<()> + Sync,
+    {
+        // byte offsets of each extent within the logical tensor
+        let mut starts = Vec::with_capacity(extents.len());
+        let mut acc = 0usize;
+        for e in extents {
+            starts.push(acc);
+            acc += e.len;
+        }
+        if self.workers <= 1 || extents.len() <= 1 {
+            for (e, s) in extents.iter().zip(&starts) {
+                f(e, *s)?;
+            }
+            return Ok(());
+        }
+        let errs: Vec<anyhow::Result<()>> =
+            crate::util::par::par_map(extents.len(), self.workers, |i| {
+                f(&extents[i], starts[i])
+            });
+        for r in errs {
+            r?;
+        }
+        Ok(())
+    }
+}
+
+impl NvmeEngine for DirectEngine {
+    fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        let extents = match self.lookup(key) {
+            Some((ext, stored)) => {
+                anyhow::ensure!(
+                    stored == data.len(),
+                    "direct: size change for '{key}' unsupported"
+                );
+                ext
+            }
+            None => self.allocate(key, data.len())?,
+        };
+        self.run_io(&extents, |e, logical| {
+            self.devices[e.dev]
+                .file
+                .write_all_at(&data[logical..logical + e.len], e.offset)?;
+            Ok(())
+        })?;
+        self.stats.record_write(data.len() as u64, t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
+    fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        let (extents, stored) = self
+            .lookup(key)
+            .ok_or_else(|| anyhow::anyhow!("direct: no tensor '{key}'"))?;
+        anyhow::ensure!(
+            stored == out.len(),
+            "direct: '{key}' stored {stored} B, requested {} B",
+            out.len()
+        );
+        // disjoint output slices per extent: split manually
+        let out_len = out.len() as u64;
+        let mut slices: Vec<&mut [u8]> = Vec::with_capacity(extents.len());
+        let mut rest = out;
+        for e in &extents {
+            let (head, tail) = rest.split_at_mut(e.len);
+            slices.push(head);
+            rest = tail;
+        }
+        let slices: Vec<Mutex<&mut [u8]>> = slices.into_iter().map(Mutex::new).collect();
+        self.run_io(&extents, |e, logical| {
+            // locate this extent's slice index by logical offset order
+            let idx = extents
+                .iter()
+                .scan(0usize, |acc, x| {
+                    let s = *acc;
+                    *acc += x.len;
+                    Some(s)
+                })
+                .position(|s| s == logical)
+                .expect("extent bookkeeping");
+            let mut guard = slices[idx].lock().unwrap();
+            self.devices[e.dev].file.read_exact_at(&mut guard, e.offset)?;
+            Ok(())
+        })?;
+        self.stats.record_read(out_len, t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
+    fn len_of(&self, key: &str) -> Option<usize> {
+        self.lookup(key).map(|(_, l)| l)
+    }
+
+    fn stats(&self) -> IoSnapshot {
+        self.stats.snapshot()
+    }
+
+    fn label(&self) -> &'static str {
+        "direct-nvme"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::{check, Config};
+
+    fn mk(tag: &str, devs: usize, workers: usize) -> (DirectEngine, std::path::PathBuf) {
+        let dir =
+            std::env::temp_dir().join(format!("ma-direct-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        (DirectEngine::new(&dir, devs, 1 << 26, workers).unwrap(), dir)
+    }
+
+    #[test]
+    fn striped_roundtrip() {
+        let (eng, dir) = mk("rt", 3, 1);
+        let data: Vec<u8> = (0..100_000).map(|i| (i % 253) as u8).collect();
+        eng.write("w", &data).unwrap();
+        let mut out = vec![0u8; data.len()];
+        eng.read("w", &mut out).unwrap();
+        assert_eq!(out, data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn extents_are_lba_aligned_and_disjoint() {
+        let (eng, dir) = mk("al", 2, 1);
+        for i in 0..10 {
+            eng.write(&format!("t{i}"), &vec![i as u8; 5000 + i * 977]).unwrap();
+        }
+        let dict = eng.dict.read().unwrap();
+        let mut per_dev: HashMap<usize, Vec<(u64, u64)>> = HashMap::new();
+        for (ext, _) in dict.values() {
+            for e in ext {
+                assert_eq!(e.offset % LBA_SIZE as u64, 0, "unaligned extent");
+                per_dev.entry(e.dev).or_default().push((
+                    e.offset,
+                    e.offset + e.len as u64,
+                ));
+            }
+        }
+        for (_, mut spans) in per_dev {
+            spans.sort_unstable();
+            for w in spans.windows(2) {
+                assert!(w[0].1 <= w[1].0, "overlapping extents {w:?}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn overwrite_reuses_extents() {
+        let (eng, dir) = mk("ow", 2, 1);
+        eng.write("t", &[1u8; 40_000]).unwrap();
+        let e1 = eng.lookup("t").unwrap().0;
+        eng.write("t", &[2u8; 40_000]).unwrap();
+        let e2 = eng.lookup("t").unwrap().0;
+        assert_eq!(e1, e2, "steady-state overwrite allocates nothing");
+        let mut out = vec![0u8; 40_000];
+        eng.read("t", &mut out).unwrap();
+        assert!(out.iter().all(|&b| b == 2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn size_change_rejected() {
+        let (eng, dir) = mk("sz", 1, 1);
+        eng.write("t", &[0u8; 1000]).unwrap();
+        assert!(eng.write("t", &[0u8; 2000]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn multiworker_matches_singleworker() {
+        let (e1, d1) = mk("w1", 3, 1);
+        let (e4, d4) = mk("w4", 3, 4);
+        let data: Vec<u8> = (0..300_000).map(|i| (i % 249) as u8).collect();
+        e1.write("t", &data).unwrap();
+        e4.write("t", &data).unwrap();
+        let mut o1 = vec![0u8; data.len()];
+        let mut o4 = vec![0u8; data.len()];
+        e1.read("t", &mut o1).unwrap();
+        e4.read("t", &mut o4).unwrap();
+        assert_eq!(o1, data);
+        assert_eq!(o4, data);
+        std::fs::remove_dir_all(&d1).ok();
+        std::fs::remove_dir_all(&d4).ok();
+    }
+
+    #[test]
+    fn prop_concurrent_tensors_never_overlap() {
+        check("direct-alloc", Config { cases: 16, ..Default::default() }, |rng, size| {
+            let (eng, dir) = mk(&format!("p{}", rng.next_u64()), 2, 2);
+            let keys: Vec<String> = (0..rng.range(2, 10))
+                .map(|i| format!("k{i}"))
+                .collect();
+            std::thread::scope(|s| {
+                for (i, k) in keys.iter().enumerate() {
+                    let eng = &eng;
+                    let n = 1000 + (i * 3779) % (size.max(2) * 64);
+                    s.spawn(move || {
+                        eng.write(k, &vec![(i % 255) as u8; n]).unwrap();
+                    });
+                }
+            });
+            for (i, k) in keys.iter().enumerate() {
+                let n = 1000 + (i * 3779) % (size.max(2) * 64);
+                let mut out = vec![0u8; n];
+                eng.read(k, &mut out).map_err(|e| e.to_string())?;
+                prop_assert!(
+                    out.iter().all(|&b| b == (i % 255) as u8),
+                    "tensor {k} corrupted by concurrent allocation"
+                );
+            }
+            std::fs::remove_dir_all(&dir).ok();
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,133 @@
+//! Fault-injecting engine wrapper — failure-injection testing.
+//!
+//! Wraps any `NvmeEngine` and fails a deterministic subset of
+//! operations (seeded), letting integration tests prove that I/O
+//! errors surface as `Err` through the swapper/optimizer/trainer
+//! instead of corrupting state or deadlocking the prefetch pipeline.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::rng::SplitMix64;
+
+use super::{IoSnapshot, NvmeEngine};
+
+pub struct FaultyEngine<E> {
+    inner: E,
+    /// Probability of failing each op, in 1/1024 units.
+    fail_per_1024: u64,
+    seed: u64,
+    op_counter: AtomicU64,
+    pub injected: AtomicU64,
+}
+
+impl<E: NvmeEngine> FaultyEngine<E> {
+    pub fn new(inner: E, fail_per_1024: u64, seed: u64) -> Self {
+        Self {
+            inner,
+            fail_per_1024,
+            seed,
+            op_counter: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    fn should_fail(&self) -> bool {
+        let op = self.op_counter.fetch_add(1, Ordering::Relaxed);
+        // deterministic per (seed, op index): reproducible failures
+        let mut rng = SplitMix64::new(self.seed ^ op.wrapping_mul(0x9E37_79B9));
+        let fail = rng.next_u64() % 1024 < self.fail_per_1024;
+        if fail {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fail
+    }
+}
+
+impl<E: NvmeEngine> NvmeEngine for FaultyEngine<E> {
+    fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
+        if self.should_fail() {
+            anyhow::bail!("injected write fault on '{key}'");
+        }
+        self.inner.write(key, data)
+    }
+
+    fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
+        if self.should_fail() {
+            anyhow::bail!("injected read fault on '{key}'");
+        }
+        self.inner.read(key, out)
+    }
+
+    fn len_of(&self, key: &str) -> Option<usize> {
+        self.inner.len_of(key)
+    }
+
+    fn stats(&self) -> IoSnapshot {
+        self.inner.stats()
+    }
+
+    fn label(&self) -> &'static str {
+        "faulty"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssd::DirectEngine;
+
+    fn mk(fail: u64) -> (FaultyEngine<DirectEngine>, std::path::PathBuf) {
+        let dir = std::env::temp_dir()
+            .join(format!("ma-faulty-{fail}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let inner = DirectEngine::new(&dir, 1, 1 << 22, 1).unwrap();
+        (FaultyEngine::new(inner, fail, 7), dir)
+    }
+
+    #[test]
+    fn zero_rate_never_fails() {
+        let (eng, dir) = mk(0);
+        for i in 0..50 {
+            eng.write(&format!("k{i}"), &[1u8; 128]).unwrap();
+        }
+        assert_eq!(eng.injected.load(Ordering::Relaxed), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn faults_are_deterministic_and_surface_as_errors() {
+        let (eng, dir) = mk(512); // ~50%
+        let results: Vec<bool> = (0..100)
+            .map(|i| eng.write(&format!("k{i}"), &[0u8; 64]).is_ok())
+            .collect();
+        let fails = results.iter().filter(|ok| !**ok).count();
+        assert!((20..80).contains(&fails), "{fails} fails");
+        // same seed -> same pattern
+        let (eng2, dir2) = mk(512);
+        let results2: Vec<bool> = (0..100)
+            .map(|i| eng2.write(&format!("k{i}"), &[0u8; 64]).is_ok())
+            .collect();
+        assert_eq!(results, results2);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
+    }
+
+    #[test]
+    fn successful_ops_still_roundtrip() {
+        let (eng, dir) = mk(300);
+        let mut stored = Vec::new();
+        for i in 0..50 {
+            let data = vec![i as u8; 256];
+            if eng.write(&format!("k{i}"), &data).is_ok() {
+                stored.push((format!("k{i}"), data));
+            }
+        }
+        for (k, want) in stored {
+            let mut out = vec![0u8; want.len()];
+            if eng.read(&k, &mut out).is_ok() {
+                assert_eq!(out, want);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,238 @@
+//! Filesystem-based SSD engine — the DeepNVMe/ZeRO-Infinity baseline.
+//!
+//! Each tensor is a separate file (paper §III-D: "each tensor is
+//! offloaded to a separate file, allowing file systems such as ext4 to
+//! manage storage allocation").  Multiple devices are emulated as
+//! directory roots joined in software RAID0: the tensor's bytes are
+//! striped across per-device segment files at `stripe` granularity,
+//! which is exactly what md-RAID0 + one-file-per-tensor does at block
+//! level.  Every call pays the filesystem taxes the paper measures:
+//! path resolution, open/create, metadata updates, and fsync-backed
+//! allocation-table writes.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::{IoSnapshot, IoStats, NvmeEngine};
+
+pub struct FsEngine {
+    devices: Vec<PathBuf>,
+    stripe: usize,
+    stats: IoStats,
+    /// Directory metadata mutex: ext4 serializes directory updates; the
+    /// journal file emulates its metadata/allocation writes.
+    meta: Mutex<()>,
+}
+
+impl FsEngine {
+    /// `root/devN/` stands in for each ext4-formatted SSD. `stripe` is
+    /// the RAID0 chunk size (md default 512 KiB).
+    pub fn new(root: &std::path::Path, devices: usize, stripe: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(devices >= 1 && stripe >= 4096);
+        let devs: Vec<PathBuf> = (0..devices).map(|i| root.join(format!("dev{i}"))).collect();
+        for d in &devs {
+            std::fs::create_dir_all(d)?;
+        }
+        Ok(Self { devices: devs, stripe, stats: IoStats::default(), meta: Mutex::new(()) })
+    }
+
+    fn seg_path(&self, key: &str, dev: usize) -> PathBuf {
+        // one file per tensor per device (its RAID0 member extent)
+        self.devices[dev].join(format!("{}.seg", sanitize(key)))
+    }
+
+    /// Append to the per-device allocation journal — the analog of
+    /// ext4's metadata/journal write on block allocation.
+    fn journal(&self, dev: usize, key: &str, len: usize) -> anyhow::Result<()> {
+        let _guard = self.meta.lock().unwrap();
+        let mut j = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.devices[dev].join("journal.meta"))?;
+        writeln!(j, "{key} {len}")?;
+        j.sync_data()?; // journaling is synchronous — the §III-D tax
+        Ok(())
+    }
+
+    /// Stripe layout: chunk c goes to device c % n at intra-file offset
+    /// (c / n) * stripe.
+    fn for_each_stripe(
+        &self,
+        total: usize,
+        mut f: impl FnMut(usize, usize, usize, usize) -> anyhow::Result<()>,
+    ) -> anyhow::Result<()> {
+        let n = self.devices.len();
+        let mut c = 0usize;
+        let mut off = 0usize;
+        while off < total {
+            let len = self.stripe.min(total - off);
+            let dev = c % n;
+            let dev_off = (c / n) * self.stripe;
+            f(dev, dev_off, off, len)?;
+            off += len;
+            c += 1;
+        }
+        Ok(())
+    }
+}
+
+fn sanitize(key: &str) -> String {
+    key.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '.' || c == '-' { c } else { '_' })
+        .collect()
+}
+
+impl NvmeEngine for FsEngine {
+    fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        let n = self.devices.len();
+        // open (or create) each member file — path resolution per call
+        let mut files: Vec<File> = (0..n)
+            .map(|d| {
+                OpenOptions::new()
+                    .create(true)
+                    .write(true)
+                    .truncate(false)
+                    .open(self.seg_path(key, d))
+                    .map_err(Into::into)
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let fresh = self.len_of(key) != Some(data.len());
+        self.for_each_stripe(data.len(), |dev, dev_off, off, len| {
+            files[dev].seek(SeekFrom::Start(dev_off as u64))?;
+            files[dev].write_all(&data[off..off + len])?;
+            Ok(())
+        })?;
+        for (d, f) in files.iter().enumerate() {
+            f.sync_data()?;
+            if fresh {
+                // block allocation changed -> metadata/journal update
+                self.journal(d, key, data.len())?;
+            }
+        }
+        // record logical length (the "file size" metadata)
+        {
+            let _guard = self.meta.lock().unwrap();
+            std::fs::write(
+                self.devices[0].join(format!("{}.len", sanitize(key))),
+                data.len().to_string(),
+            )?;
+        }
+        self.stats.record_write(data.len() as u64, t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
+    fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        let stored = self
+            .len_of(key)
+            .ok_or_else(|| anyhow::anyhow!("fs_engine: no tensor '{key}'"))?;
+        anyhow::ensure!(
+            stored == out.len(),
+            "fs_engine: '{key}' stored {stored} B, requested {} B",
+            out.len()
+        );
+        let n = self.devices.len();
+        let mut files: Vec<File> = (0..n)
+            .map(|d| File::open(self.seg_path(key, d)).map_err(Into::into))
+            .collect::<anyhow::Result<_>>()?;
+        self.for_each_stripe(out.len(), |dev, dev_off, off, len| {
+            files[dev].seek(SeekFrom::Start(dev_off as u64))?;
+            files[dev].read_exact(&mut out[off..off + len])?;
+            Ok(())
+        })?;
+        self.stats.record_read(out.len() as u64, t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
+    fn len_of(&self, key: &str) -> Option<usize> {
+        let p = self.devices[0].join(format!("{}.len", sanitize(key)));
+        std::fs::read_to_string(p).ok()?.trim().parse().ok()
+    }
+
+    fn stats(&self) -> IoSnapshot {
+        self.stats.snapshot()
+    }
+
+    fn label(&self) -> &'static str {
+        "fs-raid0"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ma-fs-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_across_stripes() {
+        let dir = tmpdir("rt");
+        let eng = FsEngine::new(&dir, 3, 4096).unwrap();
+        let data: Vec<u8> = (0..20_000).map(|i| (i % 251) as u8).collect();
+        eng.write("layers.0.wq/fp16", &data).unwrap();
+        let mut out = vec![0u8; data.len()];
+        eng.read("layers.0.wq/fp16", &mut out).unwrap();
+        assert_eq!(out, data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn overwrite_same_size_skips_journal_growth() {
+        let dir = tmpdir("ow");
+        let eng = FsEngine::new(&dir, 2, 4096).unwrap();
+        eng.write("t", &[1u8; 9000]).unwrap();
+        let j1 = std::fs::metadata(dir.join("dev0/journal.meta")).unwrap().len();
+        eng.write("t", &[2u8; 9000]).unwrap(); // steady-state overwrite
+        let j2 = std::fs::metadata(dir.join("dev0/journal.meta")).unwrap().len();
+        assert_eq!(j1, j2, "no re-allocation on same-size overwrite");
+        let mut out = vec![0u8; 9000];
+        eng.read("t", &mut out).unwrap();
+        assert!(out.iter().all(|&b| b == 2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_wrong_size_errors() {
+        let dir = tmpdir("sz");
+        let eng = FsEngine::new(&dir, 1, 4096).unwrap();
+        eng.write("t", &[0u8; 100]).unwrap();
+        let mut out = vec![0u8; 50];
+        assert!(eng.read("t", &mut out).is_err());
+        assert!(eng.read("missing", &mut out).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let dir = tmpdir("st");
+        let eng = FsEngine::new(&dir, 2, 4096).unwrap();
+        eng.write("a", &[0u8; 5000]).unwrap();
+        let mut out = vec![0u8; 5000];
+        eng.read("a", &mut out).unwrap();
+        let s = eng.stats();
+        assert_eq!(s.writes, 1);
+        assert_eq!(s.reads, 1);
+        assert_eq!(s.bytes_written, 5000);
+        assert_eq!(s.bytes_read, 5000);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn keys_with_slashes_are_sanitized() {
+        let dir = tmpdir("kx");
+        let eng = FsEngine::new(&dir, 1, 4096).unwrap();
+        eng.write("layers.0/wq::fp16", &[7u8; 64]).unwrap();
+        let mut out = vec![0u8; 64];
+        eng.read("layers.0/wq::fp16", &mut out).unwrap();
+        assert_eq!(out, [7u8; 64]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

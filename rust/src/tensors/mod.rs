@@ -1,0 +1,287 @@
+//! Parameter tensor inventory — the ground truth every subsystem shares.
+//!
+//! The paper's memory analysis is entirely shape-driven: the buffer
+//! pool fragments because the embedding tensor (vocab × hidden) dwarfs
+//! the per-block projections; the adaptive pool wins by grouping
+//! tensors into the four shape classes of §IV-B.  This module
+//! enumerates every parameter tensor of a `ModelSpec` with its exact
+//! shape, category, and shape class, in the canonical offload order the
+//! trainer and the accounting engine both walk.
+
+use crate::config::ModelSpec;
+use crate::dtype::DType;
+
+/// Semantic category (drives Fig. 11's pool sizing and Fig. 2's bars).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    Embedding,
+    LmHead,
+    AttnQ,
+    AttnK,
+    AttnV,
+    AttnO,
+    FfnGate,
+    FfnUp,
+    FfnDown,
+    Router,
+    ExpertGate,
+    ExpertUp,
+    ExpertDown,
+    Norm,
+}
+
+/// Buffer-pool shape class (paper §IV-B: "four pools are sufficient" for
+/// dense models — embedding-, feed-forward-, KV-, and QO-shaped; MoE
+/// adds an expert class; sub-2M-element tensors stay CPU-resident).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ShapeClass {
+    Embed,
+    Ffn,
+    Kv,
+    Qo,
+    Expert,
+    /// Small tensors (norms, routers): never offloaded to SSD
+    /// (paper §VI-B-1c: "<2M elements perform better in CPU memory").
+    Resident,
+}
+
+/// Paper threshold: tensors below this stay resident in system memory.
+pub const OFFLOAD_THRESHOLD_ELEMS: usize = 2_000_000;
+
+#[derive(Debug, Clone)]
+pub struct TensorDesc {
+    /// e.g. "layers.3.wq", "embed", "lm_head".
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub category: Category,
+    /// Layer index, or usize::MAX for embed/head/final norm.
+    pub layer: usize,
+    pub numel: usize,
+}
+
+impl TensorDesc {
+    fn new(name: String, shape: Vec<usize>, category: Category, layer: usize) -> Self {
+        let numel = shape.iter().product();
+        Self { name, shape, category, layer, numel }
+    }
+
+    pub fn bytes(&self, dtype: DType) -> usize {
+        self.numel * dtype.size()
+    }
+
+    pub fn shape_class(&self) -> ShapeClass {
+        match self.category {
+            Category::Embedding | Category::LmHead => ShapeClass::Embed,
+            Category::FfnGate | Category::FfnUp | Category::FfnDown => ShapeClass::Ffn,
+            Category::AttnK | Category::AttnV => ShapeClass::Kv,
+            Category::AttnQ | Category::AttnO => ShapeClass::Qo,
+            Category::ExpertGate | Category::ExpertUp | Category::ExpertDown => {
+                ShapeClass::Expert
+            }
+            Category::Norm | Category::Router => ShapeClass::Resident,
+        }
+    }
+
+    pub fn offloadable(&self) -> bool {
+        self.shape_class() != ShapeClass::Resident
+    }
+}
+
+/// Enumerate every parameter tensor in canonical offload order:
+/// embed, then each layer's weights in forward order, final norm, head.
+pub fn inventory(spec: &ModelSpec) -> Vec<TensorDesc> {
+    let (h, kv) = (spec.hidden, spec.kv_dim());
+    let mut out = Vec::new();
+    out.push(TensorDesc::new(
+        "embed".into(),
+        vec![spec.vocab, h],
+        Category::Embedding,
+        usize::MAX,
+    ));
+    for l in 0..spec.layers {
+        let p = |n: &str| format!("layers.{l}.{n}");
+        out.push(TensorDesc::new(p("attn_norm"), vec![h], Category::Norm, l));
+        out.push(TensorDesc::new(p("wq"), vec![h, h], Category::AttnQ, l));
+        out.push(TensorDesc::new(p("wk"), vec![h, kv], Category::AttnK, l));
+        out.push(TensorDesc::new(p("wv"), vec![h, kv], Category::AttnV, l));
+        out.push(TensorDesc::new(p("wo"), vec![h, h], Category::AttnO, l));
+        out.push(TensorDesc::new(p("ffn_norm"), vec![h], Category::Norm, l));
+        if spec.is_moe() {
+            let fe = spec.expert_intermediate;
+            out.push(TensorDesc::new(
+                p("router"),
+                vec![h, spec.n_experts],
+                Category::Router,
+                l,
+            ));
+            for e in 0..spec.n_experts {
+                let ep = |n: &str| format!("layers.{l}.experts.{e}.{n}");
+                out.push(TensorDesc::new(
+                    ep("w_gate"),
+                    vec![h, fe],
+                    Category::ExpertGate,
+                    l,
+                ));
+                out.push(TensorDesc::new(
+                    ep("w_up"),
+                    vec![h, fe],
+                    Category::ExpertUp,
+                    l,
+                ));
+                out.push(TensorDesc::new(
+                    ep("w_down"),
+                    vec![fe, h],
+                    Category::ExpertDown,
+                    l,
+                ));
+            }
+        } else {
+            let f = spec.intermediate;
+            out.push(TensorDesc::new(p("w_gate"), vec![h, f], Category::FfnGate, l));
+            out.push(TensorDesc::new(p("w_up"), vec![h, f], Category::FfnUp, l));
+            out.push(TensorDesc::new(p("w_down"), vec![f, h], Category::FfnDown, l));
+        }
+    }
+    out.push(TensorDesc::new(
+        "final_norm".into(),
+        vec![h],
+        Category::Norm,
+        usize::MAX,
+    ));
+    if !spec.tie_embeddings {
+        out.push(TensorDesc::new(
+            "lm_head".into(),
+            vec![h, spec.vocab],
+            Category::LmHead,
+            usize::MAX,
+        ));
+    }
+    out
+}
+
+/// Largest offloadable tensor size in elements — what the monolithic
+/// pool sizes *every* buffer to (the root of §III-A's fragmentation).
+pub fn largest_offloadable_elems(spec: &ModelSpec) -> usize {
+    inventory(spec)
+        .iter()
+        .filter(|t| t.offloadable())
+        .map(|t| t.numel)
+        .max()
+        .unwrap_or(0)
+}
+
+/// Per shape-class maximum element counts (what the adaptive pool sizes
+/// each subpool's buffers to).
+pub fn class_max_elems(spec: &ModelSpec) -> Vec<(ShapeClass, usize)> {
+    let mut map = std::collections::BTreeMap::new();
+    for t in inventory(spec) {
+        let c = t.shape_class();
+        if c == ShapeClass::Resident {
+            continue;
+        }
+        let e = map.entry(c).or_insert(0usize);
+        *e = (*e).max(t.numel);
+    }
+    map.into_iter().collect()
+}
+
+/// Offloadable tensors per transformer block, grouped by shape class —
+/// determines subgroup counts per in-flight block (paper: 3N ffn,
+/// 2N kv, 2N qo for dense; MoE: 3·E expert tensors per block).
+pub fn class_counts_per_block(spec: &ModelSpec) -> Vec<(ShapeClass, usize)> {
+    let mut map = std::collections::BTreeMap::new();
+    for t in inventory(spec) {
+        if t.layer != 0 {
+            continue; // one representative block
+        }
+        let c = t.shape_class();
+        if c == ShapeClass::Resident {
+            continue;
+        }
+        *map.entry(c).or_insert(0usize) += 1;
+    }
+    map.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn dense_inventory_structure() {
+        let inv = inventory(&presets::QWEN25_7B);
+        // embed + 28*(2 norms + 4 attn + 3 ffn) + final norm + head
+        assert_eq!(inv.len(), 1 + 28 * 9 + 2);
+        assert_eq!(inv[0].category, Category::Embedding);
+        assert_eq!(inv.last().unwrap().category, Category::LmHead);
+    }
+
+    #[test]
+    fn embedding_is_largest() {
+        for m in presets::PAPER_DENSE {
+            let largest = largest_offloadable_elems(m);
+            assert_eq!(largest, m.vocab * m.hidden, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn norms_are_resident() {
+        let inv = inventory(&presets::QWEN25_7B);
+        for t in &inv {
+            if t.category == Category::Norm {
+                assert_eq!(t.shape_class(), ShapeClass::Resident);
+            }
+        }
+    }
+
+    #[test]
+    fn qwen7b_class_counts_match_paper() {
+        // paper §IV-B: per-block subgroup counts 3 (ffn), 2 (kv), 2 (qo)
+        let counts: std::collections::BTreeMap<_, _> =
+            class_counts_per_block(&presets::QWEN25_7B).into_iter().collect();
+        assert_eq!(counts.get(&ShapeClass::Ffn), Some(&3));
+        assert_eq!(counts.get(&ShapeClass::Kv), Some(&2));
+        assert_eq!(counts.get(&ShapeClass::Qo), Some(&2));
+    }
+
+    #[test]
+    fn offload_threshold_is_a_benchmark_guideline_only() {
+        // The NVMe benches pick tensor sizes above this threshold
+        // (paper §VI-B-1c: "<2M elements perform better in CPU memory"),
+        // but pool classification is categorical: Qwen2.5-7B's GQA kv
+        // projection (3584 x 512 = 1.84M) still belongs to the Kv pool.
+        let inv = inventory(&presets::QWEN25_7B);
+        let kv_t = inv.iter().find(|t| t.category == Category::AttnK).unwrap();
+        assert!(kv_t.numel < OFFLOAD_THRESHOLD_ELEMS);
+        assert_eq!(kv_t.shape_class(), ShapeClass::Kv);
+    }
+
+    #[test]
+    fn moe_inventory_has_experts() {
+        let inv = inventory(&presets::QWEN3_30B_A3B);
+        let experts = inv
+            .iter()
+            .filter(|t| matches!(t.category, Category::ExpertGate))
+            .count();
+        assert_eq!(experts, 48 * 128);
+        // expert tensors are small (2048*768 = 1.57M < 2M) -> resident?
+        // MoE experts sit right at the boundary; shape-class logic must
+        // classify them consistently.
+        let e = inv.iter().find(|t| t.category == Category::ExpertGate).unwrap();
+        assert_eq!(e.numel, 2048 * 768);
+    }
+
+    #[test]
+    fn moe_param_count() {
+        let p = presets::QWEN3_30B_A3B.param_count();
+        assert!((29.0e9..32.0e9).contains(&(p as f64)), "{p}");
+    }
+
+    #[test]
+    fn bytes_scale_with_dtype() {
+        let inv = inventory(&presets::SMOKE);
+        let t = &inv[1];
+        assert_eq!(t.bytes(DType::F32), 2 * t.bytes(DType::F16));
+    }
+}

@@ -1,0 +1,18 @@
+//! The trainer: real SSD-offloaded fine-tuning on the PJRT runtime.
+//!
+//! This is the end-to-end validation path (DESIGN.md §6): every
+//! parameter lives on the simulated SSD (fp16 compute copy + fp32/bf16
+//! optimizer states), blocks stream through the buffer pool per layer,
+//! activations checkpoint to pinned host memory, gradients ride an
+//! fp16 transport into the fp32 flat buffer, the (fused or baseline)
+//! overflow check gates a dynamic loss scaler, and the CPU Adam swaps
+//! state subgroups through the NVMe engine — ZeRO-Infinity's full data
+//! flow, with MemAscend's optimizations toggleable per component.
+
+pub mod data;
+pub mod trainer;
+pub mod weights;
+
+pub use data::Corpus;
+pub use trainer::{TrainOpts, Trainer};
+pub use weights::init_weights;

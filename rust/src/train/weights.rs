@@ -1,0 +1,137 @@
+//! Weight initialization: populate the SSD with the model's fp16
+//! compute weights and optimizer states, and keep the small resident
+//! tensors (norms) in host memory.
+//!
+//! Deterministic by seed — the loss-parity test requires baseline and
+//! MemAscend runs to start from bit-identical weights.
+
+use std::collections::HashMap;
+
+use crate::config::ModelSpec;
+use crate::optimizer::{OptimState, StateDtype};
+use crate::ssd::NvmeEngine;
+use crate::tensors::{inventory, Category, TensorDesc};
+use crate::util::rng::Xoshiro256;
+
+/// Resident (never-offloaded) tensor with in-memory optimizer state.
+pub struct ResidentTensor {
+    pub desc: TensorDesc,
+    pub data: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+pub struct ModelState {
+    /// SSD-resident tensors' optimizer handles, in inventory order.
+    pub offloaded: Vec<OptimState>,
+    /// name -> resident tensor (norms).
+    pub resident: HashMap<String, ResidentTensor>,
+    /// Inventory in canonical order.
+    pub inv: Vec<TensorDesc>,
+}
+
+pub fn fp16_key(name: &str) -> String {
+    format!("{name}/fp16")
+}
+
+fn init_values(t: &TensorDesc, rng: &mut Xoshiro256) -> Vec<f32> {
+    match t.category {
+        Category::Norm => vec![1.0; t.numel],
+        Category::Embedding | Category::LmHead => {
+            let mut v = vec![0f32; t.numel];
+            rng.fill_normal(&mut v, 0.02);
+            v
+        }
+        _ => {
+            let fan_in = t.shape[0] as f32;
+            let mut v = vec![0f32; t.numel];
+            rng.fill_normal(&mut v, 0.5 / fan_in.sqrt());
+            v
+        }
+    }
+}
+
+/// Initialize all weights + optimizer states. Offloadable tensors land
+/// on the SSD (fp16 compute + states via `OptimState::init`); norms
+/// stay resident.
+pub fn init_weights(
+    spec: &ModelSpec,
+    engine: &dyn NvmeEngine,
+    state_dtype: StateDtype,
+    seed: u64,
+) -> anyhow::Result<ModelState> {
+    let inv = inventory(spec);
+    let mut offloaded = Vec::new();
+    let mut resident = HashMap::new();
+    let mut rng = Xoshiro256::new(seed);
+    for t in &inv {
+        let vals = init_values(t, &mut rng);
+        if t.offloadable() {
+            // fp16 compute copy on SSD
+            let mut bytes = vec![0u8; t.numel * 2];
+            crate::dtype::f32s_to_f16_bytes(&vals, &mut bytes);
+            engine.write(&fp16_key(&t.name), &bytes)?;
+            // master + m + v on SSD
+            offloaded.push(OptimState::init(engine, &t.name, &vals, state_dtype)?);
+        } else {
+            resident.insert(
+                t.name.clone(),
+                ResidentTensor {
+                    desc: t.clone(),
+                    m: vec![0.0; vals.len()],
+                    v: vec![0.0; vals.len()],
+                    data: vals,
+                },
+            );
+        }
+    }
+    Ok(ModelState { offloaded, resident, inv })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::SMOKE;
+    use crate::ssd::DirectEngine;
+
+    #[test]
+    fn init_populates_ssd_and_resident() {
+        let dir = std::env::temp_dir().join(format!("ma-wi-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let eng = DirectEngine::new(&dir, 1, 1 << 24, 1).unwrap();
+        let st = init_weights(&SMOKE, &eng, StateDtype::F32, 42).unwrap();
+        // every offloadable tensor present on SSD with the right size
+        for t in st.inv.iter().filter(|t| t.offloadable()) {
+            assert_eq!(eng.len_of(&fp16_key(&t.name)), Some(t.numel * 2), "{}", t.name);
+            assert_eq!(
+                eng.len_of(&format!("{}/master", t.name)),
+                Some(t.numel * 4)
+            );
+        }
+        // norms resident, initialized to ones
+        let norm = st.resident.get("layers.0.attn_norm").unwrap();
+        assert!(norm.data.iter().all(|&x| x == 1.0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let d1 = std::env::temp_dir().join(format!("ma-wd1-{}", std::process::id()));
+        let d2 = std::env::temp_dir().join(format!("ma-wd2-{}", std::process::id()));
+        std::fs::create_dir_all(&d1).unwrap();
+        std::fs::create_dir_all(&d2).unwrap();
+        let e1 = DirectEngine::new(&d1, 1, 1 << 24, 1).unwrap();
+        let e2 = DirectEngine::new(&d2, 2, 1 << 24, 1).unwrap(); // different striping!
+        init_weights(&SMOKE, &e1, StateDtype::F32, 7).unwrap();
+        init_weights(&SMOKE, &e2, StateDtype::F32, 7).unwrap();
+        let key = fp16_key("layers.1.wq");
+        let n = e1.len_of(&key).unwrap();
+        let mut a = vec![0u8; n];
+        let mut b = vec![0u8; n];
+        e1.read(&key, &mut a).unwrap();
+        e2.read(&key, &mut b).unwrap();
+        assert_eq!(a, b, "weights must not depend on engine layout");
+        std::fs::remove_dir_all(&d1).ok();
+        std::fs::remove_dir_all(&d2).ok();
+    }
+}

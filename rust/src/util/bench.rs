@@ -1,0 +1,196 @@
+//! Timing/bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries built on this:
+//! warmup, fixed-iteration or fixed-duration sampling, and robust
+//! statistics (mean/p50/p99/min).  Used both by benches/ and by the
+//! §Perf optimization loop.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let sum: Duration = samples.iter().sum();
+        let pick = |q: f64| samples[((n - 1) as f64 * q).round() as usize];
+        Stats {
+            iters: n,
+            mean: sum / n as u32,
+            p50: pick(0.50),
+            p99: pick(0.99),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    /// Throughput in units/s given per-iteration work.
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10.3?}  p50 {:>10.3?}  p99 {:>10.3?}  min {:>10.3?}  (n={})",
+            self.mean, self.p50, self.p99, self.min, self.iters
+        )
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to fill `budget`.
+pub fn bench<F: FnMut()>(warmup: usize, budget: Duration, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    // estimate cost with one timed call
+    let t0 = Instant::now();
+    f();
+    let est = t0.elapsed().max(Duration::from_nanos(100));
+    let mut samples = vec![est];
+    let target = (budget.as_secs_f64() / est.as_secs_f64()).clamp(1.0, 10_000.0) as usize;
+    for _ in 0..target {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Benchmark with a fixed number of iterations (for expensive bodies).
+pub fn bench_n<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Pretty table printer for paper-vs-measured rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Self { headers: headers.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        self.rows.push(cells.into_iter().map(Into::into).collect());
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(cols) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate().take(cols) {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&line(r));
+        }
+        out
+    }
+
+    /// Also dump as CSV for plotting.
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &String| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        };
+        let mut out = self.headers.iter().map(esc).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(
+            (1..=100).map(Duration::from_micros).collect(),
+        );
+        assert!(s.min <= s.p50 && s.p50 <= s.p99 && s.p99 <= s.max);
+        assert_eq!(s.iters, 100);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut acc = 0u64;
+        let s = bench(1, Duration::from_millis(5), || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.iters >= 2);
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new(vec!["model", "paper", "measured"]);
+        t.row(vec!["qwen7b", "109.04", "43.6"]);
+        let r = t.render();
+        assert!(r.contains("qwen7b"));
+        assert!(t.to_csv().starts_with("model,paper,measured\n"));
+    }
+}

@@ -1,0 +1,180 @@
+//! Minimal subcommand/flag CLI parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional args, with generated help text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_bool: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected number, got '{v}'")),
+        }
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some(""))
+    }
+}
+
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, args: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None, is_bool: true });
+        self
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.args
+            .push(ArgSpec { name, help, default: Some(default), is_bool: false });
+        self
+    }
+
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        for spec in &self.args {
+            if let Some(d) = spec.default {
+                out.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown flag --{key}\n\n{}", self.help())
+                    })?;
+                let value = if let Some(v) = inline {
+                    v
+                } else if spec.is_bool {
+                    "true".to_string()
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                        .clone()
+                };
+                out.values.insert(key, value);
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for a in &self.args {
+            let def = a
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<24} {}{}\n", a.name, a.help, def));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "train a model")
+            .opt("steps", "100", "number of steps")
+            .opt("model", "smoke", "model config")
+            .flag("memascend", "enable all MemAscend optimizations")
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&sv(&[])).unwrap();
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert_eq!(a.get("model"), Some("smoke"));
+        assert!(!a.get_bool("memascend"));
+    }
+
+    #[test]
+    fn parse_forms() {
+        let a = cmd()
+            .parse(&sv(&["--steps", "5", "--model=tiny25m", "--memascend", "pos"]))
+            .unwrap();
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 5);
+        assert_eq!(a.get("model"), Some("tiny25m"));
+        assert!(a.get_bool("memascend"));
+        assert_eq!(a.positionals, vec!["pos"]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cmd().parse(&sv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let a = cmd().parse(&sv(&["--steps", "1_000"])).unwrap();
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 1000);
+    }
+}

@@ -1,0 +1,64 @@
+//! Human-readable formatting helpers (byte sizes, rates, durations).
+
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+
+/// "13.05 GiB", "219.4 us", matching the units the paper reports.
+pub fn bytes(n: u64) -> String {
+    let f = n as f64;
+    if n >= GIB {
+        format!("{:.2} GiB", f / GIB as f64)
+    } else if n >= MIB {
+        format!("{:.2} MiB", f / MIB as f64)
+    } else if n >= KIB {
+        format!("{:.2} KiB", f / KIB as f64)
+    } else {
+        format!("{n} B")
+    }
+}
+
+pub fn gib(n: u64) -> f64 {
+    n as f64 / GIB as f64
+}
+
+pub fn rate(bytes_per_sec: f64) -> String {
+    if bytes_per_sec >= GIB as f64 {
+        format!("{:.2} GiB/s", bytes_per_sec / GIB as f64)
+    } else if bytes_per_sec >= MIB as f64 {
+        format!("{:.2} MiB/s", bytes_per_sec / MIB as f64)
+    } else {
+        format!("{:.2} KiB/s", bytes_per_sec / KIB as f64)
+    }
+}
+
+pub fn secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+/// Percent delta "(-55.7%)" with sign.
+pub fn pct_delta(base: f64, new: f64) -> String {
+    if base == 0.0 {
+        return "n/a".into();
+    }
+    format!("{:+.1}%", (new - base) / base * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(13 * GIB + 52 * MIB), "13.05 GiB");
+        assert_eq!(secs(0.0055), "5.500 ms");
+        assert_eq!(pct_delta(100.0, 44.3), "-55.7%");
+    }
+}

@@ -1,0 +1,15 @@
+//! Foundation utilities.
+//!
+//! Everything here replaces a crate that is unavailable in this offline
+//! environment (see DESIGN.md §3): `json` ≈ serde_json, `cli` ≈ clap,
+//! `par` ≈ rayon, `rng` ≈ rand, `bench` ≈ criterion, `proptest` ≈
+//! proptest, `human` ≈ humansize.
+
+pub mod bench;
+pub mod cli;
+pub mod human;
+pub mod json;
+pub mod logger;
+pub mod par;
+pub mod proptest;
+pub mod rng;

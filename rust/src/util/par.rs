@@ -1,0 +1,193 @@
+//! Chunked data-parallel helpers over std scoped threads (rayon analog).
+//!
+//! The fused overflow check and the CPU Adam step are "OpenMP-parallel
+//! tiled loops" in the paper; this module provides that shape.  Thread
+//! count defaults to available parallelism (1 in this container — the
+//! structure is still exercised and tested with forced thread counts).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `len` items into at most `threads` contiguous chunks of
+/// near-equal size. Returns (start, end) pairs; never returns empty chunks.
+pub fn chunks(len: usize, threads: usize) -> Vec<(usize, usize)> {
+    if len == 0 {
+        return vec![];
+    }
+    let t = threads.max(1).min(len);
+    let base = len / t;
+    let extra = len % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let sz = base + usize::from(i < extra);
+        out.push((start, start + sz));
+        start += sz;
+    }
+    out
+}
+
+/// Run `f(chunk_index, start..end slice)` over disjoint mutable chunks.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], threads: usize, chunk_hint: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let t = threads.max(1);
+    if t == 1 {
+        // fast path: no thread spawn cost on single-core machines
+        for (i, (s, e)) in chunks(n, chunk_div(n, chunk_hint)).into_iter().enumerate() {
+            f(i, s, &mut data[s..e]);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut offset = 0;
+        for (i, (s, e)) in chunks(n, t).into_iter().enumerate() {
+            let (head, tail) = rest.split_at_mut(e - offset);
+            rest = tail;
+            offset = e;
+            let fr = &f;
+            scope.spawn(move || fr(i, s, head));
+        }
+    });
+}
+
+fn chunk_div(n: usize, chunk_hint: usize) -> usize {
+    if chunk_hint == 0 {
+        1
+    } else {
+        n.div_ceil(chunk_hint)
+    }
+}
+
+/// Parallel any-reduction with cooperative early exit: each worker scans
+/// its chunk and polls the shared flag between tiles (paper Algorithm 1's
+/// "early exit from all threads").
+pub fn par_any<T: Sync, F>(data: &[T], threads: usize, tile: usize, pred: F) -> bool
+where
+    F: Fn(&[T]) -> bool + Sync,
+{
+    let found = AtomicBool::new(false);
+    let t = threads.max(1);
+    if t == 1 || data.len() < tile * 2 {
+        for tile_slice in data.chunks(tile.max(1)) {
+            if pred(tile_slice) {
+                return true;
+            }
+        }
+        return false;
+    }
+    std::thread::scope(|scope| {
+        for (s, e) in chunks(data.len(), t) {
+            let slice = &data[s..e];
+            let found = &found;
+            let pred = &pred;
+            scope.spawn(move || {
+                for tile_slice in slice.chunks(tile.max(1)) {
+                    if found.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    if pred(tile_slice) {
+                        found.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                }
+            });
+        }
+    });
+    found.load(Ordering::Relaxed)
+}
+
+/// Parallel map over indexed work items collecting results in order.
+pub fn par_map<R: Send, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    let t = threads.max(1);
+    if t == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..t.min(n) {
+            let next = &next;
+            let slots = &slots;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    return;
+                }
+                let r = f(i);
+                **slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_exactly() {
+        for len in [0usize, 1, 7, 64, 1000] {
+            for t in [1usize, 2, 3, 8, 64] {
+                let cs = chunks(len, t);
+                let mut pos = 0;
+                for (s, e) in &cs {
+                    assert_eq!(*s, pos);
+                    assert!(e > s);
+                    pos = *e;
+                }
+                assert_eq!(pos, len);
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_touches_all() {
+        for threads in [1, 4] {
+            let mut v = vec![0u32; 1003];
+            par_chunks_mut(&mut v, threads, 100, |_, start, slice| {
+                for (i, x) in slice.iter_mut().enumerate() {
+                    *x = (start + i) as u32;
+                }
+            });
+            assert!(v.iter().enumerate().all(|(i, &x)| x == i as u32));
+        }
+    }
+
+    #[test]
+    fn par_any_finds_needle() {
+        let mut v = vec![0.0f32; 10_000];
+        v[9_999] = f32::INFINITY;
+        for threads in [1, 4] {
+            assert!(par_any(&v, threads, 512, |s| s.iter().any(|x| x.is_infinite())));
+        }
+        v[9_999] = 1.0;
+        for threads in [1, 4] {
+            assert!(!par_any(&v, threads, 512, |s| s.iter().any(|x| x.is_infinite())));
+        }
+    }
+
+    #[test]
+    fn par_map_order() {
+        for threads in [1, 4] {
+            let r = par_map(100, threads, |i| i * i);
+            assert!(r.iter().enumerate().all(|(i, &x)| x == i * i));
+        }
+    }
+}

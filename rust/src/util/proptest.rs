@@ -1,0 +1,103 @@
+//! Randomized property-test driver (the proptest crate is unavailable
+//! offline — this is the in-repo analog, documented in DESIGN.md §3).
+//!
+//! A property is a closure over a seeded RNG; the driver runs it for N
+//! seeds and, on failure, retries the failing seed with progressively
+//! smaller `size` hints (shrinking-lite) to report the smallest
+//! reproduction it can find.  Deterministic: failures print the seed,
+//! and `PROPTEST_SEED` reruns a single case.
+
+use crate::util::rng::Xoshiro256;
+
+pub struct Config {
+    pub cases: usize,
+    pub start_seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, start_seed: 0x5EED, max_size: 1 << 12 }
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` seeds. `prop` returns
+/// `Err(description)` on property violation.
+pub fn check<F>(name: &str, cfg: Config, prop: F)
+where
+    F: Fn(&mut Xoshiro256, usize) -> Result<(), String>,
+{
+    if let Ok(seed) = std::env::var("PROPTEST_SEED") {
+        let seed: u64 = seed.parse().expect("PROPTEST_SEED must be u64");
+        let mut rng = Xoshiro256::new(seed);
+        if let Err(msg) = prop(&mut rng, cfg.max_size) {
+            panic!("[{name}] failed at PROPTEST_SEED={seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cfg.cases {
+        let seed = cfg.start_seed.wrapping_add(case as u64);
+        // size ramps up across cases so early failures are small
+        let size = (cfg.max_size * (case + 1)).div_ceil(cfg.cases).max(1);
+        let mut rng = Xoshiro256::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrinking-lite: replay the same seed at smaller sizes,
+            // report the smallest size that still fails.
+            let mut smallest = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Xoshiro256::new(seed);
+                match prop(&mut rng, s) {
+                    Err(m) => {
+                        smallest = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "[{name}] property failed (seed={seed}, size={}): {}\n\
+                 rerun with PROPTEST_SEED={seed}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Convenience: assert-like helper inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", Config::default(), |rng, size| {
+            let a = rng.below(size.max(1)) as u64;
+            let b = rng.below(size.max(1)) as u64;
+            prop_assert!(a + b == b + a, "never");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check("always-small", Config { cases: 50, ..Default::default() }, |rng, size| {
+            let v = rng.below(size.max(1));
+            prop_assert!(v < 100, "v={v} exceeded bound");
+            Ok(())
+        });
+    }
+}
