@@ -1,0 +1,302 @@
+//! §IV-A/§IV-E overlap bench: does the async multi-queue pipeline
+//! actually hide SSD time behind compute?
+//!
+//! Two experiments on the SMOKE preset, no PJRT artifacts needed (a
+//! calibrated spin stands in for kernel time so the I/O:compute ratio
+//! matches a balanced training step):
+//!
+//! 1. **Swapper**: sequential fetch→convert→compute per tensor vs the
+//!    windowed pipeline (depth in flight, out-of-order completion,
+//!    in-order delivery).
+//! 2. **Optimizer**: sequential read→Adam→write per group vs the
+//!    double-buffered swap — and a byte-for-byte comparison of every
+//!    stored state tensor proving the two paths are bit-identical.
+//!
+//! Results are reported through `StepMetrics::io_overlap_frac` — the
+//! same overlap accounting the trainer emits — and the acceptance bar
+//! is ≥ 30% of engine-busy I/O time hidden behind compute.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use memascend::bufpool::{AdaptivePool, ParamBufferPool};
+use memascend::config::presets::SMOKE;
+use memascend::dtype::{f16_bytes_to_f32s, f32s_to_f16_bytes, DType};
+use memascend::metrics::StepMetrics;
+use memascend::offload::{F32Scratch, Swapper};
+use memascend::optimizer::{
+    step_groups_pipelined, AdamParams, OptimState, StateDtype,
+};
+use memascend::pinned::{AlignedAllocator, MemoryTracker, Mode};
+use memascend::ssd::{AsyncEngine, DirectEngine, IoExecutor, NvmeEngine};
+use memascend::tensors::{inventory, TensorDesc};
+use memascend::util::bench::{black_box, Table};
+use memascend::util::rng::Xoshiro256;
+
+fn spin(d: Duration) {
+    let t0 = Instant::now();
+    let mut x = 0u64;
+    while t0.elapsed() < d {
+        x = black_box(x.wrapping_mul(6364136223846793005).wrapping_add(1));
+    }
+    black_box(x);
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("ma-pipe-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn io_busy_delta(
+    eng: &dyn NvmeEngine,
+    before: memascend::ssd::IoSnapshot,
+) -> f64 {
+    let after = eng.stats();
+    (after.read_ns + after.write_ns - before.read_ns - before.write_ns) as f64 / 1e9
+}
+
+/// Overlap report row from measured stall/busy time, phrased as the
+/// trainer's own `StepMetrics`.
+fn metrics(io_secs: f64, io_wait_secs: f64, step_secs: f64) -> StepMetrics {
+    StepMetrics {
+        step: 1,
+        loss: 0.0,
+        loss_scale: 1.0,
+        overflowed: false,
+        tokens: 0,
+        step_secs,
+        compute_secs: (step_secs - io_secs).max(0.0),
+        io_secs,
+        overflow_check_secs: 0.0,
+        optim_secs: 0.0,
+        io_wait_secs,
+    }
+}
+
+fn seed_engine(tag: &str) -> (Arc<DirectEngine>, Vec<TensorDesc>, std::path::PathBuf) {
+    let dir = tmp(tag);
+    let eng = Arc::new(DirectEngine::new(&dir, 2, 1 << 26, 2).unwrap());
+    let plan: Vec<TensorDesc> =
+        inventory(&SMOKE).into_iter().filter(|t| t.offloadable()).collect();
+    for (i, t) in plan.iter().enumerate() {
+        let vals = vec![i as f32 * 0.25 + 0.5; t.numel];
+        let mut bytes = vec![0u8; t.numel * 2];
+        f32s_to_f16_bytes(&vals, &mut bytes);
+        eng.write(&format!("{}/fp16", t.name), &bytes).unwrap();
+    }
+    (eng, plan, dir)
+}
+
+/// Per-tensor simulated kernel time: proportional to tensor size, at a
+/// rate calibrated so compute is the same order as SSD time.
+fn compute_time(t: &TensorDesc, ns_per_elem: f64) -> Duration {
+    Duration::from_nanos((t.numel as f64 * ns_per_elem) as u64)
+}
+
+fn swapper_experiment(table: &mut Table) -> (StepMetrics, f64) {
+    let (eng, plan, dir) = seed_engine("swap");
+    let passes = 6;
+
+    // calibrate spin rate off one sync sweep so compute ≈ I/O
+    let t0 = Instant::now();
+    let mut staging = vec![0u8; plan.iter().map(|t| t.numel).max().unwrap() * 2];
+    let mut scratch = vec![0f32; plan.iter().map(|t| t.numel).max().unwrap()];
+    for t in &plan {
+        let n = t.numel;
+        eng.read(&format!("{}/fp16", t.name), &mut staging[..n * 2]).unwrap();
+        f16_bytes_to_f32s(&staging[..n * 2], &mut scratch[..n]);
+    }
+    let sweep_io = t0.elapsed().as_secs_f64();
+    let total_elems: usize = plan.iter().map(|t| t.numel).sum();
+    let ns_per_elem = sweep_io * 1e9 / total_elems as f64;
+
+    // --- sequential: fetch, convert, compute, one tensor at a time ---
+    let io_before = eng.stats();
+    let t0 = Instant::now();
+    for _ in 0..passes {
+        for t in &plan {
+            let n = t.numel;
+            eng.read(&format!("{}/fp16", t.name), &mut staging[..n * 2]).unwrap();
+            f16_bytes_to_f32s(&staging[..n * 2], &mut scratch[..n]);
+            spin(compute_time(t, ns_per_elem));
+        }
+    }
+    let sync_wall = t0.elapsed().as_secs_f64();
+    let sync_io = io_busy_delta(eng.as_ref(), io_before);
+    let m_sync = metrics(sync_io, sync_io, sync_wall); // all I/O is stall
+
+    // --- pipelined: window of 4, shared executor, pooled scratch ---
+    let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
+    let pool: Arc<dyn ParamBufferPool> =
+        Arc::new(AdaptivePool::new(&SMOKE, 4, DType::F16, &alloc));
+    let exec = Arc::new(IoExecutor::new(4));
+    let f32_pool = Arc::new(F32Scratch::new());
+    let io_before = eng.stats();
+    let t0 = Instant::now();
+    let mut wait = 0.0;
+    for _ in 0..passes {
+        let mut sw = Swapper::start(
+            eng.clone(),
+            pool.clone(),
+            exec.clone(),
+            f32_pool.clone(),
+            plan.clone(),
+            |t| format!("{}/fp16", t.name),
+            4,
+        );
+        for t in &plan {
+            let f = sw.next().unwrap();
+            assert_eq!(f.desc.name, t.name, "plan order violated");
+            spin(compute_time(t, ns_per_elem));
+            f32_pool.put(f.data); // consumer recycles, like the trainer
+        }
+        wait += sw.wait_secs();
+    }
+    let async_wall = t0.elapsed().as_secs_f64();
+    let async_io = io_busy_delta(eng.as_ref(), io_before);
+    let m_async = metrics(async_io, wait, async_wall);
+
+    for (mode, m, wall) in
+        [("sequential", &m_sync, sync_wall), ("pipelined", &m_async, async_wall)]
+    {
+        table.row(vec![
+            format!("swapper/{mode}"),
+            format!("{wall:.3}"),
+            format!("{:.3}", m.io_secs),
+            format!("{:.3}", m.io_wait_secs),
+            format!("{:.3}", m.io_overlap_secs()),
+            format!("{:.1}%", m.io_overlap_frac() * 100.0),
+        ]);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    (m_async, sync_wall / async_wall)
+}
+
+fn optimizer_experiment(table: &mut Table) -> (StepMetrics, bool) {
+    let n_groups = 6usize;
+    let n = 120_000usize;
+    let hp = AdamParams { weight_decay: 0.01, ..Default::default() };
+    let dir_a = tmp("opt-seq");
+    let dir_b = tmp("opt-pipe");
+    let eng_a = DirectEngine::new(&dir_a, 2, 1 << 28, 2).unwrap();
+    let eng_b: Arc<dyn NvmeEngine> =
+        Arc::new(DirectEngine::new(&dir_b, 2, 1 << 28, 2).unwrap());
+    let mut rng = Xoshiro256::new(7);
+    let mut states_a = Vec::new();
+    let mut states_b = Vec::new();
+    for g in 0..n_groups {
+        let p0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        states_a
+            .push(OptimState::init(&eng_a, &format!("g{g}"), &p0, StateDtype::F32).unwrap());
+        states_b.push(
+            OptimState::init(eng_b.as_ref(), &format!("g{g}"), &p0, StateDtype::F32)
+                .unwrap(),
+        );
+    }
+    let grads: Vec<Vec<f32>> = (0..n_groups)
+        .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let steps = 5u64;
+
+    // --- sequential reference ---
+    let io_before = eng_a.stats();
+    let t0 = Instant::now();
+    for t in 1..=steps {
+        for (g, st) in states_a.iter().enumerate() {
+            st.step(&eng_a, &grads[g], t, 1.0, &hp, 1, &format!("g{g}/fp16")).unwrap();
+        }
+    }
+    let seq_wall = t0.elapsed().as_secs_f64();
+    let seq_io = io_busy_delta(&eng_a, io_before);
+    let m_seq = metrics(seq_io, seq_io, seq_wall);
+
+    // --- double-buffered pipeline ---
+    let aio = AsyncEngine::new(Arc::clone(&eng_b), 3);
+    let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    let keys: Vec<String> = (0..n_groups).map(|g| format!("g{g}/fp16")).collect();
+    let io_before = eng_b.stats();
+    let t0 = Instant::now();
+    let mut wait = 0.0;
+    for t in 1..=steps {
+        let stats =
+            step_groups_pipelined(&aio, &states_b, &grad_refs, &keys, t, 1.0, &hp, 1)
+                .unwrap();
+        wait += stats.wait_secs;
+    }
+    let pipe_wall = t0.elapsed().as_secs_f64();
+    let pipe_io = io_busy_delta(eng_b.as_ref(), io_before);
+    let m_pipe = metrics(pipe_io, wait, pipe_wall);
+
+    // --- bit-identity across every stored artifact ---
+    let mut identical = true;
+    for g in 0..n_groups {
+        for suffix in ["master", "adam_m", "adam_v", "fp16"] {
+            let key = format!("g{g}/{suffix}");
+            let len = eng_a.len_of(&key).unwrap();
+            let mut a = vec![0u8; len];
+            let mut b = vec![0u8; len];
+            eng_a.read(&key, &mut a).unwrap();
+            eng_b.read(&key, &mut b).unwrap();
+            if a != b {
+                identical = false;
+                eprintln!("MISMATCH at {key}");
+            }
+        }
+    }
+
+    for (mode, m, wall) in [
+        ("optimizer/sequential", &m_seq, seq_wall),
+        ("optimizer/double-buffered", &m_pipe, pipe_wall),
+    ] {
+        table.row(vec![
+            mode.to_string(),
+            format!("{wall:.3}"),
+            format!("{:.3}", m.io_secs),
+            format!("{:.3}", m.io_wait_secs),
+            format!("{:.3}", m.io_overlap_secs()),
+            format!("{:.1}%", m.io_overlap_frac() * 100.0),
+        ]);
+    }
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+    (m_pipe, identical)
+}
+
+fn main() {
+    let mut table = Table::new(vec![
+        "stage",
+        "wall (s)",
+        "engine io (s)",
+        "fg stall (s)",
+        "hidden (s)",
+        "hidden %",
+    ]);
+    let (m_swap, speedup) = swapper_experiment(&mut table);
+    let (m_opt, identical) = optimizer_experiment(&mut table);
+    common::emit(
+        "bench_pipeline",
+        "async multi-queue pipeline: I/O hidden behind compute",
+        &table,
+    );
+    // the acceptance bar is combined: swapper + optimizer together
+    // must hide ≥ 30% of all engine-busy I/O behind compute
+    let total_io = m_swap.io_secs + m_opt.io_secs;
+    let total_hidden = m_swap.io_overlap_secs() + m_opt.io_overlap_secs();
+    let combined = if total_io > 0.0 { total_hidden / total_io } else { 0.0 };
+    println!("swapper pipeline speedup over sequential: {speedup:.2}x");
+    println!(
+        "overlap: swapper {:.1}% / optimizer {:.1}% / combined {:.1}% of engine I/O hidden (target: combined ≥ 30%)",
+        m_swap.io_overlap_frac() * 100.0,
+        m_opt.io_overlap_frac() * 100.0,
+        combined * 100.0
+    );
+    println!("optimizer state bit-identity (sync vs async): {identical}");
+    let pass = combined >= 0.30 && identical;
+    println!("ACCEPTANCE: {}", if pass { "PASS" } else { "FAIL" });
+    if !pass {
+        std::process::exit(1);
+    }
+}

@@ -116,6 +116,12 @@ pub struct TrainSpec {
     pub optim_dtype: DType,
     /// Transformer blocks kept in flight by the prefetcher (paper's N).
     pub prefetch_depth: usize,
+    /// Worker threads of the shared async I/O queue (swapper fetch
+    /// window + double-buffered optimizer swap). `0` = fully
+    /// synchronous: single-worker fetches and the sequential
+    /// read→Adam→write optimizer loop (the overlap-ablation baseline —
+    /// numerically identical either way).
+    pub io_workers: usize,
     /// Offload activation checkpoints to host memory (Eq. 1).
     pub offloaded_gc: bool,
     /// Host byte budget for activation checkpoints; checkpoints beyond
@@ -145,6 +151,7 @@ impl Default for TrainSpec {
             precision: Precision::MixedF16,
             optim_dtype: DType::F32,
             prefetch_depth: 2,
+            io_workers: 2,
             offloaded_gc: true,
             act_host_budget: usize::MAX,
             flags: MemAscendFlags::memascend(),

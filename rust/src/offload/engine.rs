@@ -15,13 +15,17 @@ use crate::overflow::{baseline_overflow_check, fused_overflow_check, Checker};
 use crate::pinned::{
     AlignedAllocator, CachingAllocator, HostAllocator, MemoryTracker, Mode,
 };
-use crate::ssd::{DirectEngine, FsEngine, NvmeEngine};
+use crate::ssd::{AsyncEngine, DirectEngine, FsEngine, IoExecutor, NvmeEngine};
 
 pub struct OffloadEngine {
     pub tracker: Arc<MemoryTracker>,
     pub alloc: Arc<dyn HostAllocator>,
     pub pool: Arc<dyn ParamBufferPool>,
     pub nvme: Arc<dyn NvmeEngine>,
+    /// Shared async submission queue: swapper fetch window and
+    /// double-buffered optimizer swap ride this one executor (the
+    /// engines keep their own per-device queues underneath).
+    pub ioq: Arc<IoExecutor>,
     pub checker: Checker,
     pub threads: usize,
 }
@@ -66,14 +70,22 @@ impl OffloadEngine {
         } else {
             Checker::Baseline
         };
+        let ioq = Arc::new(IoExecutor::new(train.io_workers.max(1)));
         Ok(Self {
             tracker,
             alloc,
             pool,
             nvme,
+            ioq,
             checker,
             threads: crate::util::par::default_threads(),
         })
+    }
+
+    /// Async surface over the configured NVMe engine, sharing the
+    /// engine-wide submission queue.
+    pub fn async_io(&self) -> AsyncEngine {
+        AsyncEngine::with_executor(self.nvme.clone(), self.ioq.clone())
     }
 
     /// Run the configured overflow check over a flat fp32 buffer.

@@ -21,4 +21,4 @@ pub use engine::OffloadEngine;
 pub use gradbuf::GradFlatBuffer;
 pub use scaler::LossScaler;
 pub use spill::SpillingActivationStore;
-pub use swapper::Swapper;
+pub use swapper::{F32Scratch, Fetched, Swapper};

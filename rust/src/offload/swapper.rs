@@ -1,21 +1,126 @@
-//! Parameter swapper: the SSD→host→"GPU" prefetch pipeline (§IV-A).
+//! Parameter swapper: the SSD→host→"GPU" prefetch pipeline (§IV-A),
+//! rebuilt as a windowed async pipeline over the multi-queue layer.
 //!
-//! A worker thread walks the fetch plan (the layer-order tensor
-//! schedule): for each tensor it leases a staging buffer from the
-//! parameter pool (blocking when the pool is exhausted — that is the
-//! backpressure that bounds blocks in flight), reads the fp16 shard
-//! from the NVMe engine into the pinned buffer, upconverts to f32 (the
-//! H2D-transfer analog), releases the buffer, and hands the tensor to
-//! the compute thread through a bounded channel.
+//! The seed swapper was one worker thread fetching one tensor at a
+//! time — the compute thread could overlap with at most a single
+//! in-flight transfer.  Now the swapper keeps a *window* of `depth`
+//! fetches in flight on the shared [`IoExecutor`] and reorders
+//! completions back into plan order:
+//!
+//! ```text
+//!        plan (layer-order tensor schedule)
+//!          │ submit (window: `depth` in flight)
+//!          ▼
+//!  [ IoExecutor submission queue ] ──► worker: lease pool buffer
+//!          │                                   read fp16 from NVMe
+//!          │   out-of-order execution          upconvert → f32 scratch
+//!          ▼                                   release buffer
+//!  [ per-fetch completion handles ]
+//!          │ FIFO wait  (in-order delivery)
+//!          ▼
+//!  compute thread: `next()` → Fetched { desc, data }
+//!          │ after the kernel consumed the args
+//!          ▼
+//!  [`F32Scratch`] ◄── recycled f32 vectors (no per-tensor alloc)
+//! ```
+//!
+//! Backpressure is two-layer, as before: the parameter pool bounds
+//! bytes staged in pinned memory (workers block in `acquire`), and the
+//! window bounds ready-but-unconsumed tensors.  A blocked worker holds
+//! no buffer, so pool capacity can never deadlock the queue: if every
+//! worker is blocked in `acquire`, no buffer is held and an acquire
+//! must succeed.
 
-use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::Arc;
-use std::thread::JoinHandle;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::bufpool::ParamBufferPool;
 use crate::dtype::f16_bytes_to_f32s;
-use crate::ssd::NvmeEngine;
+use crate::ssd::{IoExecutor, IoHandle, NvmeEngine};
 use crate::tensors::TensorDesc;
+
+/// Recycling free-list of f32 vectors: the conversion scratch the
+/// pipeline delivers tensors in.  The trainer returns spent argument
+/// vectors after each kernel call, so steady-state training allocates
+/// no per-tensor `Vec<f32>` at all.
+pub struct F32Scratch {
+    free: Mutex<Vec<Vec<f32>>>,
+}
+
+impl F32Scratch {
+    /// Bounded by count *and* bytes so large activation buffers the
+    /// trainer reclaims can't hoard host memory (the resource this
+    /// whole system is trying to minimize).
+    const MAX_POOLED: usize = 64;
+    const MAX_POOLED_BYTES: usize = 64 << 20;
+    /// Vectors below this (elements) aren't worth a slot: without a
+    /// floor, tiny reclaimed args (e.g. the 1-element loss-scale vec
+    /// returned every step) would accumulate until they fill the
+    /// count bound and permanently disable recycling of real buffers.
+    const MIN_POOLED: usize = 64;
+
+    pub fn new() -> Self {
+        Self { free: Mutex::new(Vec::new()) }
+    }
+
+    /// Take a vector of exactly `n` elements (recycled when possible).
+    /// Best-fit: the smallest pooled allocation that holds `n`, so a
+    /// reclaimed activation-sized buffer isn't pinned by a small
+    /// weight fetch.
+    pub fn take(&self, n: usize) -> Vec<f32> {
+        let recycled = {
+            let mut free = self.free.lock().unwrap();
+            let mut best: Option<(usize, usize)> = None; // (index, capacity)
+            for (i, v) in free.iter().enumerate() {
+                let c = v.capacity();
+                let better = match best {
+                    None => true,
+                    Some((_, bc)) => c < bc,
+                };
+                if c >= n && better {
+                    best = Some((i, c));
+                }
+            }
+            best.map(|(i, _)| free.swap_remove(i))
+        };
+        match recycled {
+            Some(mut v) => {
+                v.clear();
+                v.resize(n, 0.0);
+                v
+            }
+            None => vec![0f32; n],
+        }
+    }
+
+    /// Return a spent vector to the free-list (dropped when the pool
+    /// is at its count or byte bound).
+    pub fn put(&self, v: Vec<f32>) {
+        if v.capacity() < Self::MIN_POOLED {
+            return;
+        }
+        let mut free = self.free.lock().unwrap();
+        let pooled_bytes: usize =
+            free.iter().map(|b| b.capacity() * 4).sum::<usize>();
+        if free.len() < Self::MAX_POOLED
+            && pooled_bytes + v.capacity() * 4 <= Self::MAX_POOLED_BYTES
+        {
+            free.push(v);
+        }
+    }
+
+    /// Vectors currently pooled (test/introspection hook).
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+impl Default for F32Scratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 /// One fetched tensor, ready for compute.
 pub struct Fetched {
@@ -23,81 +128,137 @@ pub struct Fetched {
     pub data: Vec<f32>,
 }
 
+/// Everything a fetch job needs; shared by value-cloned `Arc`.
+struct FetchCtx {
+    engine: Arc<dyn NvmeEngine>,
+    pool: Arc<dyn ParamBufferPool>,
+    exec: Arc<IoExecutor>,
+    scratch: Arc<F32Scratch>,
+    key_of: Box<dyn Fn(&TensorDesc) -> String + Send + Sync>,
+}
+
 pub struct Swapper {
-    rx: Receiver<anyhow::Result<Fetched>>,
-    handle: Option<JoinHandle<()>>,
+    ctx: Arc<FetchCtx>,
+    /// FIFO reorder window: front = next tensor in plan order.
+    inflight: VecDeque<IoHandle<Fetched>>,
+    /// Plan suffix not yet submitted.
+    pending: std::vec::IntoIter<TensorDesc>,
+    depth: usize,
+    /// Nanoseconds `next()` spent blocked on completions — the I/O
+    /// the pipeline could *not* hide behind compute.
+    wait_ns: u64,
 }
 
 impl Swapper {
-    /// Start prefetching `plan` in order. `key_of` maps a tensor to its
-    /// SSD key (rank shards use partition keys). `depth` bounds
-    /// ready-but-unconsumed tensors (channel) on top of the pool's own
-    /// in-flight bound.
+    /// Start prefetching `plan` in order on `exec`. `key_of` maps a
+    /// tensor to its SSD key (rank shards use partition keys). `depth`
+    /// is the pipeline window: fetches kept in flight ahead of
+    /// compute, on top of the pool's own in-flight bound.
     pub fn start(
         engine: Arc<dyn NvmeEngine>,
         pool: Arc<dyn ParamBufferPool>,
+        exec: Arc<IoExecutor>,
+        scratch: Arc<F32Scratch>,
         plan: Vec<TensorDesc>,
-        key_of: impl Fn(&TensorDesc) -> String + Send + 'static,
+        key_of: impl Fn(&TensorDesc) -> String + Send + Sync + 'static,
         depth: usize,
     ) -> Self {
-        let (tx, rx) = sync_channel(depth.max(1));
-        let handle = std::thread::spawn(move || {
-            for t in plan {
-                let result = (|| -> anyhow::Result<Fetched> {
-                    let key = key_of(&t);
-                    let n = engine
-                        .len_of(&key)
-                        .ok_or_else(|| anyhow::anyhow!("missing tensor '{key}'"))?
-                        / 2;
-                    let buf = pool.acquire(&t, crate::dtype::DType::F16)?;
-                    let mut staged_err = None;
-                    let mut data = vec![0f32; n];
-                    pool.with_buf(&buf, &mut |bytes| {
-                        if bytes.is_empty() {
-                            staged_err = Some(anyhow::anyhow!("virtual pool"));
-                            return;
-                        }
-                        if let Err(e) = engine.read(&key, &mut bytes[..n * 2]) {
-                            staged_err = Some(e);
-                            return;
-                        }
-                        f16_bytes_to_f32s(&bytes[..n * 2], &mut data);
-                    });
-                    pool.release(buf);
-                    if let Some(e) = staged_err {
-                        return Err(e);
-                    }
-                    Ok(Fetched { desc: t, data })
-                })();
-                let failed = result.is_err();
-                if tx.send(result).is_err() || failed {
-                    return; // consumer dropped or fetch failed
-                }
-            }
+        let ctx = Arc::new(FetchCtx {
+            engine,
+            pool,
+            exec,
+            scratch,
+            key_of: Box::new(key_of),
         });
-        Self { rx, handle: Some(handle) }
+        let mut sw = Self {
+            ctx,
+            inflight: VecDeque::new(),
+            pending: plan.into_iter(),
+            depth: depth.max(1),
+            wait_ns: 0,
+        };
+        sw.fill_window();
+        sw
     }
 
-    /// Blocking receive of the next tensor in plan order.
-    pub fn next(&self) -> anyhow::Result<Fetched> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("swapper thread terminated early"))?
+    fn fill_window(&mut self) {
+        while self.inflight.len() < self.depth {
+            let Some(t) = self.pending.next() else { break };
+            self.inflight.push_back(submit_fetch(&self.ctx, t));
+        }
+    }
+
+    /// Blocking receive of the next tensor in plan order.  Completions
+    /// arrive out of order on the executor; delivery is serialized by
+    /// waiting the window FIFO.
+    pub fn next(&mut self) -> anyhow::Result<Fetched> {
+        let handle = self
+            .inflight
+            .pop_front()
+            .ok_or_else(|| anyhow::anyhow!("swapper: plan exhausted"))?;
+        // keep `depth` fetches in flight while we wait on this one
+        self.fill_window();
+        let t0 = Instant::now();
+        let fetched = handle.wait();
+        self.wait_ns += t0.elapsed().as_nanos() as u64;
+        fetched
+    }
+
+    /// Tensors not yet delivered (in flight + unsubmitted).
+    pub fn remaining(&self) -> usize {
+        self.inflight.len() + self.pending.len()
+    }
+
+    /// Seconds the consumer spent stalled in [`Self::next`] — compare
+    /// against engine-side busy time to get the overlap ratio.
+    pub fn wait_secs(&self) -> f64 {
+        self.wait_ns as f64 / 1e9
     }
 }
 
-impl Drop for Swapper {
-    fn drop(&mut self) {
-        // drain so the worker unblocks, then join
-        while self.rx.try_recv().is_ok() {}
-        if let Some(h) = self.handle.take() {
-            // if the worker is blocked on send, receiving above freed
-            // it; if blocked on pool.acquire it will finish its plan
-            // only if buffers free — consumers must drain fully before
-            // dropping mid-plan (trainer always does).
-            let _ = h.join();
+// Dropping a `Swapper` mid-plan is safe without joining anything:
+// in-flight jobs own `Arc`s to everything they touch, release their
+// pool buffers themselves, and complete into slots nobody reads.
+
+fn submit_fetch(ctx: &Arc<FetchCtx>, t: TensorDesc) -> IoHandle<Fetched> {
+    let (completer, handle) = IoHandle::pair();
+    let job_ctx = Arc::clone(ctx);
+    ctx.exec.submit(move || {
+        let result = fetch_one(&job_ctx, &t).map(|data| Fetched { desc: t, data });
+        completer.complete(result);
+    });
+    handle
+}
+
+/// The per-tensor stage chain: lease pinned staging → NVMe read →
+/// f16→f32 upconvert into pooled scratch → release staging.
+fn fetch_one(ctx: &FetchCtx, t: &TensorDesc) -> anyhow::Result<Vec<f32>> {
+    let key = (ctx.key_of)(t);
+    let n = ctx
+        .engine
+        .len_of(&key)
+        .ok_or_else(|| anyhow::anyhow!("missing tensor '{key}'"))?
+        / 2;
+    let buf = ctx.pool.acquire(t, crate::dtype::DType::F16)?;
+    let mut staged_err = None;
+    let mut data = ctx.scratch.take(n);
+    ctx.pool.with_buf(&buf, &mut |bytes| {
+        if bytes.is_empty() {
+            staged_err = Some(anyhow::anyhow!("virtual pool"));
+            return;
         }
+        if let Err(e) = ctx.engine.read(&key, &mut bytes[..n * 2]) {
+            staged_err = Some(e);
+            return;
+        }
+        f16_bytes_to_f32s(&bytes[..n * 2], &mut data);
+    });
+    ctx.pool.release(buf);
+    if let Some(e) = staged_err {
+        ctx.scratch.put(data);
+        return Err(e);
     }
+    Ok(data)
 }
 
 #[cfg(test)]
@@ -107,34 +268,41 @@ mod tests {
     use crate::config::presets::SMOKE;
     use crate::dtype::f32s_to_f16_bytes;
     use crate::pinned::{AlignedAllocator, MemoryTracker, Mode};
-    use crate::ssd::DirectEngine;
+    use crate::ssd::{DirectEngine, FaultyEngine};
     use crate::tensors::inventory;
 
-    #[test]
-    fn prefetch_delivers_in_order_with_correct_data() {
-        let dir = std::env::temp_dir().join(format!("ma-swap-{}", std::process::id()));
+    fn seeded_engine(tag: &str) -> (Arc<DirectEngine>, Vec<TensorDesc>, std::path::PathBuf)
+    {
+        let dir = std::env::temp_dir()
+            .join(format!("ma-swap-{tag}-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let engine: Arc<dyn NvmeEngine> =
-            Arc::new(DirectEngine::new(&dir, 2, 1 << 24, 1).unwrap());
-        let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
-        let pool: Arc<dyn ParamBufferPool> =
-            Arc::new(AdaptivePool::new(&SMOKE, 2, crate::dtype::DType::F16, &alloc));
-
+        let engine = Arc::new(DirectEngine::new(&dir, 2, 1 << 24, 2).unwrap());
         let plan: Vec<_> = inventory(&SMOKE)
             .into_iter()
             .filter(|t| t.offloadable())
             .collect();
-        // seed the SSD with recognizable values per tensor
         for (i, t) in plan.iter().enumerate() {
             let vals = vec![i as f32 + 0.5; t.numel];
             let mut bytes = vec![0u8; t.numel * 2];
             f32s_to_f16_bytes(&vals, &mut bytes);
             engine.write(&format!("{}/fp16", t.name), &bytes).unwrap();
         }
+        (engine, plan, dir)
+    }
 
-        let sw = Swapper::start(
+    fn pool(depth: usize) -> Arc<dyn ParamBufferPool> {
+        let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
+        Arc::new(AdaptivePool::new(&SMOKE, depth, crate::dtype::DType::F16, &alloc))
+    }
+
+    #[test]
+    fn prefetch_delivers_in_order_with_correct_data() {
+        let (engine, plan, dir) = seeded_engine("order");
+        let mut sw = Swapper::start(
             engine,
-            pool,
+            pool(2),
+            Arc::new(IoExecutor::new(1)),
+            Arc::new(F32Scratch::new()),
             plan.clone(),
             |t| format!("{}/fp16", t.name),
             2,
@@ -143,6 +311,35 @@ mod tests {
             let got = sw.next().unwrap();
             assert_eq!(got.desc.name, want.name, "order violated");
             assert!(got.data.iter().all(|&x| x == i as f32 + 0.5));
+        }
+        assert_eq!(sw.remaining(), 0);
+        assert!(sw.next().is_err(), "exhausted plan must error");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn multiworker_window_preserves_plan_order() {
+        // 4 executor workers, deep window: completions race, delivery
+        // must still follow the plan with uncorrupted payloads.
+        let (engine, plan, dir) = seeded_engine("mw");
+        for depth in [1usize, 3, 8] {
+            let mut sw = Swapper::start(
+                engine.clone(),
+                pool(depth.max(2)),
+                Arc::new(IoExecutor::new(4)),
+                Arc::new(F32Scratch::new()),
+                plan.clone(),
+                |t| format!("{}/fp16", t.name),
+                depth,
+            );
+            for (i, want) in plan.iter().enumerate() {
+                let got = sw.next().unwrap();
+                assert_eq!(got.desc.name, want.name, "depth {depth}: order violated");
+                assert!(
+                    got.data.iter().all(|&x| x == i as f32 + 0.5),
+                    "depth {depth}: tensor {i} corrupted"
+                );
+            }
         }
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -153,16 +350,141 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let engine: Arc<dyn NvmeEngine> =
             Arc::new(DirectEngine::new(&dir, 1, 1 << 20, 1).unwrap());
-        let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
-        let pool: Arc<dyn ParamBufferPool> =
-            Arc::new(AdaptivePool::new(&SMOKE, 1, crate::dtype::DType::F16, &alloc));
         let plan: Vec<_> = inventory(&SMOKE)
             .into_iter()
             .filter(|t| t.offloadable())
             .take(1)
             .collect();
-        let sw = Swapper::start(engine, pool, plan, |t| format!("{}/fp16", t.name), 1);
+        let mut sw = Swapper::start(
+            engine,
+            pool(1),
+            Arc::new(IoExecutor::new(2)),
+            Arc::new(F32Scratch::new()),
+            plan,
+            |t| format!("{}/fp16", t.name),
+            1,
+        );
         assert!(sw.next().is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fault_injection_errors_surface_without_hanging() {
+        // every read fails (writes already done) — each next() must
+        // return Err promptly; dropping mid-plan must not deadlock.
+        let (engine, plan, dir) = seeded_engine("faulty");
+        let faulty: Arc<dyn NvmeEngine> = Arc::new(FaultyEngine::new(
+            ArcEngine(engine),
+            1024, // fail every op
+            11,
+        ));
+        let mut sw = Swapper::start(
+            faulty,
+            pool(2),
+            Arc::new(IoExecutor::new(4)),
+            Arc::new(F32Scratch::new()),
+            plan,
+            |t| format!("{}/fp16", t.name),
+            4,
+        );
+        assert!(sw.next().is_err());
+        drop(sw); // window still has in-flight fetches
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn partial_faults_deliver_good_prefix_then_error() {
+        let (engine, plan, dir) = seeded_engine("pf");
+        let faulty: Arc<dyn NvmeEngine> =
+            Arc::new(FaultyEngine::new(ArcEngine(engine), 200, 3));
+        let mut sw = Swapper::start(
+            faulty,
+            pool(2),
+            Arc::new(IoExecutor::new(2)),
+            Arc::new(F32Scratch::new()),
+            plan.clone(),
+            |t| format!("{}/fp16", t.name),
+            3,
+        );
+        // in-order delivery means results match the plan prefix until
+        // the first injected fault; data before it must be correct
+        for (i, want) in plan.iter().enumerate() {
+            match sw.next() {
+                Ok(got) => {
+                    assert_eq!(got.desc.name, want.name);
+                    assert!(got.data.iter().all(|&x| x == i as f32 + 0.5));
+                }
+                Err(_) => break,
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scratch_recycles_vectors() {
+        let s = F32Scratch::new();
+        let v = s.take(100);
+        let cap = v.capacity();
+        s.put(v);
+        assert_eq!(s.pooled(), 1);
+        let v2 = s.take(80); // fits in the recycled allocation
+        assert!(v2.capacity() >= cap.min(100));
+        assert_eq!(v2.len(), 80);
+        assert_eq!(s.pooled(), 0);
+    }
+
+    #[test]
+    fn scratch_best_fit_spares_large_buffers() {
+        let s = F32Scratch::new();
+        s.put(Vec::with_capacity(1_000_000)); // reclaimed activation
+        s.put(Vec::with_capacity(128)); // weight-sized scratch
+        let small = s.take(100);
+        assert!(
+            small.capacity() < 1_000_000,
+            "small request must not pin the activation-sized buffer"
+        );
+        assert_eq!(s.pooled(), 1);
+    }
+
+    #[test]
+    fn scratch_floor_rejects_tiny_vectors() {
+        let s = F32Scratch::new();
+        for _ in 0..100 {
+            s.put(vec![0f32; 1]); // the per-step loss-scale vec
+        }
+        assert_eq!(s.pooled(), 0, "tiny vectors must not occupy slots");
+        s.put(vec![0f32; 1024]);
+        assert_eq!(s.pooled(), 1);
+    }
+
+    #[test]
+    fn scratch_byte_bound_drops_excess() {
+        let s = F32Scratch::new();
+        // each 4 MiB; the 64 MiB byte bound admits at most 16
+        for _ in 0..20 {
+            s.put(Vec::with_capacity(1 << 20));
+        }
+        assert!(s.pooled() <= 16, "byte bound violated: {}", s.pooled());
+    }
+
+    /// `FaultyEngine` wraps a concrete engine by value; adapt an `Arc`.
+    struct ArcEngine(Arc<DirectEngine>);
+
+    impl NvmeEngine for ArcEngine {
+        fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
+            self.0.write(key, data)
+        }
+        fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
+            self.0.read(key, out)
+        }
+        fn len_of(&self, key: &str) -> Option<usize> {
+            self.0.len_of(key)
+        }
+        fn stats(&self) -> crate::ssd::IoSnapshot {
+            self.0.stats()
+        }
+        fn label(&self) -> &'static str {
+            "arc-direct"
+        }
     }
 }

@@ -16,7 +16,10 @@
 
 pub mod states;
 
-pub use states::{OptimState, StateDtype};
+pub use states::{
+    step_groups_pipelined, OptimState, PipelineStats, StateBufs, StateDtype,
+    StateFetch, StateScratch, StateWriteback,
+};
 
 use crate::util::par;
 

@@ -13,6 +13,13 @@
 //! `/dev/nvmeXn1` — all I/O is positional (`pread`/`pwrite`-style via
 //! `FileExt`) at 4 KiB-aligned LBAs, with **no** per-tensor file
 //! creation, path resolution, or metadata journaling on the data path.
+//!
+//! Striped transfers run on the async queue layer: every device owns a
+//! persistent [`IoExecutor`] (its submission queue — `workers` threads
+//! each), and a multi-extent read/write fans its extents out as one
+//! job per extent on the owning device's queue via [`io_scope`].
+//! Workers receive disjoint slices of the caller's buffer, so there is
+//! no locking on the data path and no per-call thread spawn.
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
@@ -22,6 +29,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
 use std::time::Instant;
 
+use super::queue::{io_scope, IoExecutor};
 use super::{IoSnapshot, IoStats, NvmeEngine};
 
 /// LBA granularity: NVMe logical block = 4 KiB here.
@@ -42,6 +50,8 @@ struct Device {
     /// LBA-aligned — the paper's "shared device information structure").
     next_offset: AtomicU64,
     capacity: u64,
+    /// Persistent per-device submission queue (the NVMe SQ analog).
+    queue: IoExecutor,
 }
 
 pub struct DirectEngine {
@@ -50,7 +60,6 @@ pub struct DirectEngine {
     dict: RwLock<HashMap<String, (Vec<Extent>, usize)>>,
     /// Round-robin start device for striping fairness.
     next_start: AtomicU64,
-    workers: usize,
     stats: IoStats,
     /// Serializes allocation of a *new* tensor (once per tensor).
     alloc_lock: Mutex<()>,
@@ -58,7 +67,8 @@ pub struct DirectEngine {
 
 impl DirectEngine {
     /// `root/nvmeN.raw` are the flat device files of `capacity` bytes
-    /// each (created sparse). `workers` = I/O worker thread fanout.
+    /// each (created sparse). `workers` = I/O worker threads *per
+    /// device queue* (persistent, not spawned per call).
     pub fn new(
         root: &Path,
         devices: usize,
@@ -76,14 +86,18 @@ impl DirectEngine {
                     .truncate(false)
                     .open(root.join(format!("nvme{i}.raw")))?;
                 file.set_len(capacity)?; // sparse preallocation
-                Ok(Device { file, next_offset: AtomicU64::new(0), capacity })
+                Ok(Device {
+                    file,
+                    next_offset: AtomicU64::new(0),
+                    capacity,
+                    queue: IoExecutor::new(workers),
+                })
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
         Ok(Self {
             devices: devs,
             dict: RwLock::new(HashMap::new()),
             next_start: AtomicU64::new(0),
-            workers,
             stats: IoStats::default(),
             alloc_lock: Mutex::new(()),
         })
@@ -134,34 +148,6 @@ impl DirectEngine {
     fn lookup(&self, key: &str) -> Option<(Vec<Extent>, usize)> {
         self.dict.read().unwrap().get(key).cloned()
     }
-
-    /// Fan extents across worker threads (striping + multi-threading).
-    fn run_io<F>(&self, extents: &[Extent], f: F) -> anyhow::Result<()>
-    where
-        F: Fn(&Extent, usize) -> anyhow::Result<()> + Sync,
-    {
-        // byte offsets of each extent within the logical tensor
-        let mut starts = Vec::with_capacity(extents.len());
-        let mut acc = 0usize;
-        for e in extents {
-            starts.push(acc);
-            acc += e.len;
-        }
-        if self.workers <= 1 || extents.len() <= 1 {
-            for (e, s) in extents.iter().zip(&starts) {
-                f(e, *s)?;
-            }
-            return Ok(());
-        }
-        let errs: Vec<anyhow::Result<()>> =
-            crate::util::par::par_map(extents.len(), self.workers, |i| {
-                f(&extents[i], starts[i])
-            });
-        for r in errs {
-            r?;
-        }
-        Ok(())
-    }
 }
 
 impl NvmeEngine for DirectEngine {
@@ -177,12 +163,26 @@ impl NvmeEngine for DirectEngine {
             }
             None => self.allocate(key, data.len())?,
         };
-        self.run_io(&extents, |e, logical| {
-            self.devices[e.dev]
-                .file
-                .write_all_at(&data[logical..logical + e.len], e.offset)?;
-            Ok(())
-        })?;
+        if extents.len() == 1 {
+            let e = &extents[0];
+            self.devices[e.dev].file.write_all_at(data, e.offset)?;
+        } else {
+            // one job per extent on its device's queue; the running
+            // logical offset is carried alongside, never recomputed
+            io_scope(|s| {
+                let mut logical = 0usize;
+                for e in &extents {
+                    let chunk = &data[logical..logical + e.len];
+                    logical += e.len;
+                    let dev = &self.devices[e.dev];
+                    s.submit(&dev.queue, move || {
+                        dev.file.write_all_at(chunk, e.offset)?;
+                        Ok(())
+                    });
+                }
+                Ok(())
+            })?;
+        }
         self.stats.record_write(data.len() as u64, t0.elapsed().as_nanos() as u64);
         Ok(())
     }
@@ -197,31 +197,32 @@ impl NvmeEngine for DirectEngine {
             "direct: '{key}' stored {stored} B, requested {} B",
             out.len()
         );
-        // disjoint output slices per extent: split manually
         let out_len = out.len() as u64;
-        let mut slices: Vec<&mut [u8]> = Vec::with_capacity(extents.len());
-        let mut rest = out;
-        for e in &extents {
-            let (head, tail) = rest.split_at_mut(e.len);
-            slices.push(head);
-            rest = tail;
+        if extents.len() == 1 {
+            let e = &extents[0];
+            self.devices[e.dev].file.read_exact_at(out, e.offset)?;
+        } else {
+            // split `out` into one disjoint slice per extent (extent
+            // order == logical order); each worker owns its slice
+            let mut parts: Vec<(&Extent, &mut [u8])> =
+                Vec::with_capacity(extents.len());
+            let mut rest = out;
+            for e in &extents {
+                let (head, tail) = rest.split_at_mut(e.len);
+                parts.push((e, head));
+                rest = tail;
+            }
+            io_scope(|s| {
+                for (e, slice) in parts {
+                    let dev = &self.devices[e.dev];
+                    s.submit(&dev.queue, move || {
+                        dev.file.read_exact_at(slice, e.offset)?;
+                        Ok(())
+                    });
+                }
+                Ok(())
+            })?;
         }
-        let slices: Vec<Mutex<&mut [u8]>> = slices.into_iter().map(Mutex::new).collect();
-        self.run_io(&extents, |e, logical| {
-            // locate this extent's slice index by logical offset order
-            let idx = extents
-                .iter()
-                .scan(0usize, |acc, x| {
-                    let s = *acc;
-                    *acc += x.len;
-                    Some(s)
-                })
-                .position(|s| s == logical)
-                .expect("extent bookkeeping");
-            let mut guard = slices[idx].lock().unwrap();
-            self.devices[e.dev].file.read_exact_at(&mut guard, e.offset)?;
-            Ok(())
-        })?;
         self.stats.record_read(out_len, t0.elapsed().as_nanos() as u64);
         Ok(())
     }

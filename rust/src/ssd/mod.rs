@@ -18,16 +18,24 @@
 //! [`device_model::DeviceModel`] supplies the *device physics* (queue
 //! latency, SLC-cache destaging) that container-backed files cannot
 //! exhibit, for full-scale projections (Fig. 14's curve shapes).
+//!
+//! [`queue`] is the async multi-queue layer both engines sit on: a
+//! submission/completion-queue executor with persistent per-device
+//! worker pools, plus [`queue::AsyncEngine`] — the `submit_read` /
+//! `submit_write` surface the swapper pipeline and the double-buffered
+//! optimizer swap are built from.
 
 pub mod device_model;
 pub mod faulty;
 pub mod direct;
 pub mod fs_engine;
+pub mod queue;
 
 pub use device_model::DeviceModel;
 pub use faulty::FaultyEngine;
 pub use direct::DirectEngine;
 pub use fs_engine::FsEngine;
+pub use queue::{io_scope, AsyncEngine, IoExecutor, IoHandle, IoScope};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -13,7 +13,16 @@
 //!    transport into the fp32 flat buffer;
 //! 4. overflow check (fused or baseline) gates the dynamic loss scaler;
 //! 5. CPU AdamW swaps optimizer-state subgroups through the engine and
-//!    writes fresh fp16 compute weights back to the SSD.
+//!    writes fresh fp16 compute weights back to the SSD — double-
+//!    buffered over the async queue when `TrainSpec::io_workers > 0`
+//!    (group k+1 prefetches while k computes and k-1's write-back
+//!    drains), sequential otherwise; both paths are bit-identical.
+//!
+//! Weight fetches ride the swapper's windowed pipeline; spent f32
+//! kernel arguments are recycled through the shared [`F32Scratch`]
+//! pool, and the step report carries `io_wait_secs` — the foreground
+//! I/O stall — next to the engine-busy `io_secs` so the overlap the
+//! pipeline wins is measurable (`StepMetrics::io_overlap_secs`).
 //!
 //! Data-parallel ranks are simulated round-robin on the single PJRT
 //! device: each rank's microbatch accumulates into the shared flat
@@ -29,7 +38,7 @@ use std::time::Instant;
 use crate::config::{ModelSpec, TrainSpec};
 use crate::metrics::{RunReport, StepMetrics};
 use crate::offload::SpillingActivationStore;
-use crate::offload::{GradFlatBuffer, LossScaler, OffloadEngine, Swapper};
+use crate::offload::{F32Scratch, GradFlatBuffer, LossScaler, OffloadEngine, Swapper};
 use crate::optimizer::{AdamParams, StateDtype};
 use crate::runtime::{Runtime, Value};
 use crate::tensors::TensorDesc;
@@ -64,6 +73,10 @@ pub struct Trainer {
     applied_steps: u64,
     /// Offloadable tensors in forward order (the swapper plan).
     fwd_plan: Vec<TensorDesc>,
+    /// Block weight result order, resolved from the manifest once.
+    block_names: Vec<String>,
+    /// Recycled f32 buffers shared with the swapper pipeline.
+    scratch: Arc<F32Scratch>,
 }
 
 impl Trainer {
@@ -104,6 +117,7 @@ impl Trainer {
         };
         let fwd_plan: Vec<TensorDesc> =
             state.inv.iter().filter(|t| t.offloadable()).cloned().collect();
+        let block_names = rt.manifest().block_weight_names.clone();
         Ok(Self {
             rt,
             engine,
@@ -116,6 +130,8 @@ impl Trainer {
             hp,
             applied_steps: 0,
             fwd_plan,
+            block_names,
+            scratch: Arc::new(F32Scratch::new()),
         })
     }
 
@@ -133,6 +149,7 @@ impl Trainer {
         let io_before = self.engine.nvme.stats();
         let scale = self.scaler.scale();
         let mut loss_sum = 0.0f64;
+        let mut io_wait_secs = 0.0f64;
         let ranks = self.train.ranks.max(1);
         let l = self.spec.layers;
         let (b, s, h) = (self.train.batch, self.train.seq, self.spec.hidden);
@@ -140,23 +157,20 @@ impl Trainer {
         for _rank in 0..ranks {
             let (tokens, labels) = self.corpus.next_batch(b, s);
 
-            // ---- forward (weights streamed by the swapper) ----
-            let sw = Swapper::start(
+            // ---- forward (weights streamed by the swapper pipeline) ----
+            let mut sw = Swapper::start(
                 self.engine.nvme.clone(),
                 self.engine.pool.clone(),
+                self.engine.ioq.clone(),
+                self.scratch.clone(),
                 self.fwd_plan.clone(),
                 |t| fp16_key(&t.name),
                 self.train.prefetch_depth.max(1),
             );
             let table = sw.next()?; // embed
-            let mut hbuf = self
-                .rt
-                .run(
-                    "embed_fwd",
-                    &[Value::I32(tokens.clone()), Value::F32(table.data)],
-                )?
-                .remove(0)
-                .into_f32()?;
+            let args = vec![Value::I32(tokens.clone()), Value::F32(table.data)];
+            let mut hbuf = self.rt.run("embed_fwd", &args)?.remove(0).into_f32()?;
+            self.reclaim(args);
 
             let mut ckpts = SpillingActivationStore::new(
                 l,
@@ -174,21 +188,20 @@ impl Trainer {
                 ckpts.offload(layer, &hbuf)?;
                 let args = self.block_args(layer, &mut ws, hbuf, None)?;
                 hbuf = self.rt.run("block_fwd", &args)?.remove(0).into_f32()?;
+                self.reclaim(args);
             }
 
             // ---- head: fused linear + CE, fwd+bwd ----
             let head = sw.next()?; // lm_head
-            let head_w = head.data;
-            let mut out = self.rt.run(
-                "head_fwd_bwd",
-                &[
-                    Value::F32(hbuf),
-                    Value::F32(self.resident("final_norm").to_vec()),
-                    Value::F32(head_w),
-                    Value::I32(labels.clone()),
-                    Value::F32(vec![scale as f32]),
-                ],
-            )?;
+            let args = vec![
+                Value::F32(hbuf),
+                Value::F32(self.resident("final_norm").to_vec()),
+                Value::F32(head.data),
+                Value::I32(labels.clone()),
+                Value::F32(vec![scale as f32]),
+            ];
+            let mut out = self.rt.run("head_fwd_bwd", &args)?;
+            self.reclaim(args);
             let loss = out.remove(0).into_f32()?[0] as f64;
             let mut dh = out.remove(0).into_f32()?;
             let d_final_norm = out.remove(0).into_f32()?;
@@ -196,6 +209,9 @@ impl Trainer {
             loss_sum += loss;
             self.accumulate("final_norm", &d_final_norm);
             self.accumulate("lm_head", &d_head);
+            self.scratch.put(d_final_norm);
+            self.scratch.put(d_head);
+            io_wait_secs += sw.wait_secs();
             drop(sw);
 
             // ---- backward: blocks in reverse, weights re-streamed ----
@@ -206,9 +222,11 @@ impl Trainer {
                 .rev()
                 .cloned()
                 .collect();
-            let swb = Swapper::start(
+            let mut swb = Swapper::start(
                 self.engine.nvme.clone(),
                 self.engine.pool.clone(),
+                self.engine.ioq.clone(),
+                self.scratch.clone(),
                 bwd_plan,
                 |t| fp16_key(&t.name),
                 self.train.prefetch_depth.max(1),
@@ -222,23 +240,31 @@ impl Trainer {
                 let h_in = ckpts.fetch(layer)?;
                 let args = self.block_args(layer, &mut ws, h_in, Some(dh))?;
                 let mut grads = self.rt.run("block_bwd", &args)?;
+                self.reclaim(args);
                 dh = grads.remove(0).into_f32()?;
-                // results follow BLOCK_WEIGHT_NAMES order
-                let names = self.rt.manifest().block_weight_names.clone();
-                for name in &names {
+                // results follow BLOCK_WEIGHT_NAMES order (resolved once
+                // at construction)
+                for name in &self.block_names {
                     let g = grads.remove(0).into_f32()?;
-                    self.accumulate(&format!("layers.{layer}.{name}"), &g);
+                    accumulate_into(
+                        &mut self.flat,
+                        self.train.precision,
+                        &format!("layers.{layer}.{name}"),
+                        &g,
+                    );
+                    self.scratch.put(g);
                 }
             }
+            io_wait_secs += swb.wait_secs();
             drop(swb);
 
             // ---- embedding backward ----
-            let d_table = self
-                .rt
-                .run("embed_bwd", &[Value::I32(tokens), Value::F32(dh)])?
-                .remove(0)
-                .into_f32()?;
+            let args = vec![Value::I32(tokens), Value::F32(dh)];
+            let mut out = self.rt.run("embed_bwd", &args)?;
+            self.reclaim(args);
+            let d_table = out.remove(0).into_f32()?;
             self.accumulate("embed", &d_table);
+            self.scratch.put(d_table);
         }
 
         // ---- overflow check over the fp32 flat buffer ----
@@ -253,21 +279,58 @@ impl Trainer {
             self.applied_steps += 1;
             let t = self.applied_steps;
             let unscale = (scale * ranks as f64) as f32;
-            for st in &self.state.offloaded {
-                let grads = self.flat.grads_of(&st.group);
-                st.step(
-                    self.engine.nvme.as_ref(),
-                    grads,
+            if self.train.io_workers > 0 {
+                // double-buffered swap: group k+1 streams in while Adam
+                // runs on k and k-1's write-back drains
+                let aio = self.engine.async_io();
+                let grads: Vec<&[f32]> = self
+                    .state
+                    .offloaded
+                    .iter()
+                    .map(|st| self.flat.grads_of(&st.group))
+                    .collect();
+                let keys: Vec<String> = self
+                    .state
+                    .offloaded
+                    .iter()
+                    .map(|st| fp16_key(&st.group))
+                    .collect();
+                let stats = crate::optimizer::step_groups_pipelined(
+                    &aio,
+                    &self.state.offloaded,
+                    &grads,
+                    &keys,
                     t,
                     unscale,
                     &self.hp,
                     self.engine.threads,
-                    &fp16_key(&st.group),
                 )?;
+                io_wait_secs += stats.wait_secs;
+            } else {
+                // sequential reference: every optimizer byte is
+                // foreground stall
+                let opt_io_before = self.engine.nvme.stats();
+                for st in &self.state.offloaded {
+                    let grads = self.flat.grads_of(&st.group);
+                    st.step(
+                        self.engine.nvme.as_ref(),
+                        grads,
+                        t,
+                        unscale,
+                        &self.hp,
+                        self.engine.threads,
+                        &fp16_key(&st.group),
+                    )?;
+                }
+                let opt_io_after = self.engine.nvme.stats();
+                io_wait_secs += (opt_io_after.read_ns + opt_io_after.write_ns
+                    - opt_io_before.read_ns
+                    - opt_io_before.write_ns) as f64
+                    / 1e9;
             }
             for rt_tensor in self.state.resident.values_mut() {
                 let (off, len) = self.flat.span_of(&rt_tensor.desc.name).unwrap();
-                let grads = &self.flat.as_slice()[off..off + len].to_vec();
+                let grads = &self.flat.as_slice()[off..off + len];
                 crate::optimizer::adam_step_f32(
                     &mut rt_tensor.data,
                     grads,
@@ -300,6 +363,7 @@ impl Trainer {
             io_secs,
             overflow_check_secs,
             optim_secs,
+            io_wait_secs,
         })
     }
 
@@ -336,12 +400,16 @@ impl Trainer {
     }
 
     fn accumulate(&mut self, tensor: &str, grads: &[f32]) {
-        match self.train.precision {
-            crate::config::Precision::MixedF16 => {
-                self.flat.accumulate_f16_transport(tensor, grads)
-            }
-            crate::config::Precision::MixedBF16 => {
-                self.flat.accumulate_bf16_transport(tensor, grads)
+        accumulate_into(&mut self.flat, self.train.precision, tensor, grads);
+    }
+
+    /// Return a kernel call's spent f32 argument buffers to the shared
+    /// scratch pool so the swapper reuses them (steady state: no
+    /// per-tensor allocation).
+    fn reclaim(&self, args: Vec<Value>) {
+        for v in args {
+            if let Value::F32(x) = v {
+                self.scratch.put(x);
             }
         }
     }
@@ -378,5 +446,20 @@ impl Trainer {
             report.write_loss_csv(path)?;
         }
         Ok(report)
+    }
+}
+
+/// Gradient accumulation over the flat buffer, free-standing so the
+/// backward loop can iterate `block_names` (shared borrow) while
+/// writing `flat` (mutable borrow) — disjoint fields of the trainer.
+fn accumulate_into(
+    flat: &mut GradFlatBuffer,
+    precision: crate::config::Precision,
+    tensor: &str,
+    grads: &[f32],
+) {
+    match precision {
+        crate::config::Precision::MixedF16 => flat.accumulate_f16_transport(tensor, grads),
+        crate::config::Precision::MixedBF16 => flat.accumulate_bf16_transport(tensor, grads),
     }
 }

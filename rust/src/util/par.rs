@@ -5,7 +5,7 @@
 //! count defaults to available parallelism (1 in this container — the
 //! structure is still exercised and tested with forced thread counts).
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -106,36 +106,9 @@ where
     found.load(Ordering::Relaxed)
 }
 
-/// Parallel map over indexed work items collecting results in order.
-pub fn par_map<R: Send, F>(n: usize, threads: usize, f: F) -> Vec<R>
-where
-    F: Fn(usize) -> R + Sync,
-{
-    let t = threads.max(1);
-    if t == 1 {
-        return (0..n).map(f).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
-        out.iter_mut().map(std::sync::Mutex::new).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..t.min(n) {
-            let next = &next;
-            let slots = &slots;
-            let f = &f;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    return;
-                }
-                let r = f(i);
-                **slots[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-    out.into_iter().map(|x| x.unwrap()).collect()
-}
+// NOTE: the old `par_map` (per-call scoped-thread fan-out) lived here;
+// I/O fan-out now goes through the persistent queues in
+// `crate::ssd::queue` instead, so only the compute-side helpers remain.
 
 #[cfg(test)]
 mod tests {
@@ -183,11 +156,4 @@ mod tests {
         }
     }
 
-    #[test]
-    fn par_map_order() {
-        for threads in [1, 4] {
-            let r = par_map(100, threads, |i| i * i);
-            assert!(r.iter().enumerate().all(|(i, &x)| x == i * i));
-        }
-    }
 }
