@@ -1,0 +1,130 @@
+//! Arena fragmentation + budget bench: the memory-trajectory tracker
+//! behind the unified pinned-memory arena.
+//!
+//! Emits `bench_out/BENCH_arena.json` with, per paper model, the
+//! monolithic-vs-adaptive pool demand (peak_requested vs pool_bytes,
+//! Fig. 11's axis) and the arena's own reserved/requested watermarks
+//! and fragmentation, plus two behavioural proofs future PRs can
+//! regress against:
+//!
+//! - budget enforcement: a cap below pool demand yields a structured
+//!   `ArenaError::BudgetExceeded`, never an abort;
+//! - shape-class recycling: rebuilding the same pool on a warm arena
+//!   pins zero fresh segments — every class region is recycled.
+
+mod common;
+
+use std::sync::Arc;
+
+use memascend::bufpool::{AdaptivePool, MonolithicPool, ParamBufferPool};
+use memascend::config::presets::{PAPER_DENSE, QWEN3_30B_A3B};
+use memascend::dtype::DType;
+use memascend::pinned::{
+    AlignedAllocator, ArenaConfig, Cat, MemoryTracker, Mode, PinnedArena,
+};
+use memascend::util::bench::Table;
+use memascend::util::json::Json;
+
+fn arena(budget: Option<usize>) -> Arc<PinnedArena> {
+    let alloc = AlignedAllocator::new(Mode::Virtual, Arc::new(MemoryTracker::new()));
+    PinnedArena::new(
+        Arc::new(alloc),
+        ArenaConfig { budget_bytes: budget, ..Default::default() },
+    )
+}
+
+fn main() {
+    let mut table = Table::new(vec![
+        "model",
+        "mono pool (GiB)",
+        "adaptive pool (GiB)",
+        "arena reserved (GiB)",
+        "peak requested (GiB)",
+        "peak frag %",
+    ]);
+    let mut models = Vec::new();
+    let all: Vec<_> = PAPER_DENSE.iter().copied().chain([&QWEN3_30B_A3B]).collect();
+    for m in &all {
+        // separate arenas so each pool's backing is measured clean
+        let mono = MonolithicPool::new(m, 1, DType::F16, &arena(None)).unwrap();
+        let mono_bytes = mono.stats().pool_bytes;
+        let a = arena(None);
+        let adap = AdaptivePool::new(m, 1, DType::F16, &a).unwrap();
+        let adap_bytes = adap.stats().pool_bytes;
+        let st = a.stats();
+        table.row(vec![
+            m.name.to_string(),
+            common::gib(mono_bytes as u64),
+            common::gib(adap_bytes as u64),
+            common::gib(st.reserved_bytes as u64),
+            common::gib(st.peak_requested as u64),
+            format!("{:.1}", st.peak_fragmentation() * 100.0),
+        ]);
+        models.push(Json::obj(vec![
+            ("model", Json::from(m.name)),
+            ("mono_pool_bytes", Json::from(mono_bytes)),
+            ("adaptive_pool_bytes", Json::from(adap_bytes)),
+            ("pool_reduction", Json::from(1.0 - adap_bytes as f64 / mono_bytes as f64)),
+            ("arena_reserved_bytes", Json::from(st.reserved_bytes)),
+            ("arena_peak_requested_bytes", Json::from(st.peak_requested)),
+            ("arena_peak_fragmentation", Json::from(st.peak_fragmentation())),
+        ]));
+    }
+
+    // --- budget enforcement: cap below demand → structured error ---
+    let q7 = PAPER_DENSE[0];
+    let need = {
+        let a = arena(None);
+        let p = AdaptivePool::new(q7, 1, DType::F16, &a).unwrap();
+        p.stats().pool_bytes
+    };
+    let capped = arena(Some(need / 2));
+    let refusal = AdaptivePool::new(q7, 1, DType::F16, &capped);
+    let budget_enforced = match &refusal {
+        Err(e) => e.to_string().contains("pinned budget exceeded"),
+        Ok(_) => false,
+    };
+    println!(
+        "budget: cap {} below demand {} -> structured refusal: {budget_enforced}",
+        need / 2,
+        need
+    );
+
+    // --- shape-class recycling on a warm arena ---
+    let warm = arena(None);
+    let p1 = AdaptivePool::new(q7, 1, DType::F16, &warm).unwrap();
+    drop(p1);
+    let fresh_before = warm.stats().fresh_segments;
+    let _p2 = AdaptivePool::new(q7, 1, DType::F16, &warm).unwrap();
+    let st = warm.stats();
+    let recycled_all = st.fresh_segments == fresh_before && st.recycled > 0;
+    println!(
+        "recycle: rebuild on warm arena pinned {} fresh segments ({} recycled leases)",
+        st.fresh_segments - fresh_before,
+        st.recycled
+    );
+    let param_wm = warm.watermark(Cat::ParamPool);
+    println!(
+        "warm-arena ParamPool watermark: charged {} B for requested {} B",
+        param_wm.charged, param_wm.requested
+    );
+
+    common::emit("arena", "unified pinned-memory arena: demand vs backing", &table);
+    std::fs::create_dir_all(common::OUT_DIR).ok();
+    let out = Json::obj(vec![
+        ("models", Json::Arr(models)),
+        ("budget_enforced", Json::from(budget_enforced)),
+        ("warm_rebuild_recycles_all", Json::from(recycled_all)),
+    ]);
+    let path = format!("{}/BENCH_arena.json", common::OUT_DIR);
+    match std::fs::write(&path, out.to_string()) {
+        Ok(()) => println!("[json] {path}"),
+        Err(e) => eprintln!("warn: could not write {path}: {e}"),
+    }
+
+    let pass = budget_enforced && recycled_all;
+    println!("ACCEPTANCE: {}", if pass { "PASS" } else { "FAIL" });
+    if !pass {
+        std::process::exit(1);
+    }
+}

@@ -10,8 +10,15 @@ use std::sync::Arc;
 use memascend::bufpool::{AdaptivePool, MonolithicPool, ParamBufferPool};
 use memascend::config::presets::{PAPER_DENSE, QWEN3_30B_A3B};
 use memascend::dtype::DType;
-use memascend::pinned::{AlignedAllocator, MemoryTracker, Mode};
+use memascend::pinned::{
+    AlignedAllocator, ArenaConfig, MemoryTracker, Mode, PinnedArena,
+};
 use memascend::util::bench::Table;
+
+fn arena() -> Arc<PinnedArena> {
+    let alloc = AlignedAllocator::new(Mode::Virtual, Arc::new(MemoryTracker::new()));
+    PinnedArena::new(Arc::new(alloc), ArenaConfig::default())
+}
 
 fn main() {
     let mut t = Table::new(vec![
@@ -23,9 +30,9 @@ fn main() {
     let mut reds = Vec::new();
     let all: Vec<_> = PAPER_DENSE.iter().copied().chain([&QWEN3_30B_A3B]).collect();
     for m in all {
-        let alloc = AlignedAllocator::new(Mode::Virtual, Arc::new(MemoryTracker::new()));
-        let mono = MonolithicPool::new(m, 1, DType::F16, &alloc);
-        let adap = AdaptivePool::new(m, 1, DType::F16, &alloc);
+        let a = arena();
+        let mono = MonolithicPool::new(m, 1, DType::F16, &a).unwrap();
+        let adap = AdaptivePool::new(m, 1, DType::F16, &a).unwrap();
         let mb = mono.stats().pool_bytes as u64;
         let ab = adap.stats().pool_bytes as u64;
         let red = (1.0 - ab as f64 / mb as f64) * 100.0;
@@ -46,19 +53,21 @@ fn main() {
     );
 
     // paper's anomaly: Qwen14B and Qwen32B identical under baseline
-    let alloc = AlignedAllocator::new(Mode::Virtual, Arc::new(MemoryTracker::new()));
+    let a = arena();
     let p14 = MonolithicPool::new(
         memascend::config::ModelSpec::by_name("qwen2.5-14b").unwrap(),
         1,
         DType::F16,
-        &alloc,
-    );
+        &a,
+    )
+    .unwrap();
     let p32 = MonolithicPool::new(
         memascend::config::ModelSpec::by_name("qwen2.5-32b").unwrap(),
         1,
         DType::F16,
-        &alloc,
-    );
+        &a,
+    )
+    .unwrap();
     println!(
         "qwen14b monolithic == qwen32b monolithic: {} (paper: identical, both bounded by the embedding)",
         p14.stats().pool_bytes == p32.stats().pool_bytes

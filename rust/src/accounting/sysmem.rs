@@ -1,12 +1,15 @@
 //! Peak system-memory model (paper §V-A, Fig. 8's component breakdown).
 //!
-//! Executes the full allocation sequence of one training iteration
-//! with the configured policy allocator (caching-pow2 for
-//! ZeRO-Infinity, alignment-free for MemAscend) in Virtual mode:
+//! Replays the full allocation sequence of one training iteration
+//! against the *real* [`PinnedArena`] (over the configured policy
+//! allocator — caching-pow2 for ZeRO-Infinity, alignment-free for
+//! MemAscend — in Virtual mode), not a parallel virtual model: the same
+//! lease calls the trainer makes, so the ledger peaks reported here are
+//! the arena's own watermarks, bit for bit:
 //!
 //! 1. gradient partition flat buffers (fp32, pinned, one per rank)
-//! 2. the parameter buffer pool (monolithic vs adaptive; one pinned
-//!    region, as both systems do)
+//! 2. the parameter buffer pool (monolithic vs adaptive, leased
+//!    through the arena exactly as `OffloadEngine` builds it)
 //! 3. optimizer-state fetch buffers + swap-out buffer (pinned,
 //!    subgroup-sized, double-buffered)
 //! 4. offloaded activation-checkpoint buffers (pinned, per rank ×
@@ -20,7 +23,8 @@ use std::sync::Arc;
 use crate::bufpool::{AdaptivePool, MonolithicPool, ParamBufferPool};
 use crate::config::{HardwareSpec, ModelSpec, TrainSpec};
 use crate::pinned::{
-    AlignedAllocator, CachingAllocator, Cat, HostAllocator, MemoryTracker, Mode,
+    AlignedAllocator, ArenaConfig, CachingAllocator, Cat, CatWatermark,
+    HostAllocator, MemoryTracker, Mode, PinnedArena,
 };
 use crate::tensors;
 
@@ -42,6 +46,9 @@ pub struct SysMemBreakdown {
     pub overflow_spike: u64,
     pub resident: u64,
     pub peak_total: u64,
+    /// The arena's own per-category watermarks for the replay — must
+    /// agree with the tracker-peak fields above bit for bit (tested).
+    pub arena_watermarks: Vec<(Cat, CatWatermark)>,
 }
 
 impl SysMemBreakdown {
@@ -55,7 +62,8 @@ impl SysMemBreakdown {
     }
 }
 
-/// Compute the peak system-memory breakdown for one configuration.
+/// Compute the peak system-memory breakdown for one configuration by
+/// replaying the iteration's leases against a Virtual-mode arena.
 pub fn peak_sysmem(
     spec: &ModelSpec,
     train: &TrainSpec,
@@ -70,6 +78,11 @@ pub fn peak_sysmem(
         let a = CachingAllocator::new(Mode::Virtual, tracker.clone());
         Arc::new(a) as Arc<dyn HostAllocator>
     };
+    // unbudgeted: this is the measurement of what a run *would* need
+    let arena = PinnedArena::new(alloc, ArenaConfig::default());
+    let uncapped = |r: Result<crate::pinned::Lease, crate::pinned::ArenaError>| {
+        r.expect("unbudgeted arena cannot refuse")
+    };
 
     let p_total = spec.param_count() as usize;
     let ranks = train.ranks.max(1);
@@ -78,7 +91,7 @@ pub fn peak_sysmem(
     // 1. gradient partition flat buffers: fp32, one partition per rank
     let per_rank = p_total.div_ceil(ranks);
     for _ in 0..ranks {
-        held.push(alloc.alloc(per_rank * 4, Cat::GradFlat));
+        held.push(uncapped(arena.lease(per_rank * 4, Cat::GradFlat)));
     }
 
     // 2. parameter buffer pool (full tensor sizes — partitioned reads
@@ -87,9 +100,15 @@ pub fn peak_sysmem(
     // shrink proportionally with the number of partitions")
     let dtype = train.precision.compute_dtype();
     let pool: Box<dyn ParamBufferPool> = if train.flags.adaptive_pool {
-        Box::new(AdaptivePool::new(spec, train.prefetch_depth, dtype, alloc.as_ref()))
+        Box::new(
+            AdaptivePool::new(spec, train.prefetch_depth, dtype, &arena)
+                .expect("unbudgeted arena cannot refuse"),
+        )
     } else {
-        Box::new(MonolithicPool::new(spec, train.prefetch_depth, dtype, alloc.as_ref()))
+        Box::new(
+            MonolithicPool::new(spec, train.prefetch_depth, dtype, &arena)
+                .expect("unbudgeted arena cannot refuse"),
+        )
     };
     let pool_bytes = pool.stats().pool_bytes as u64;
 
@@ -99,11 +118,11 @@ pub fn peak_sysmem(
     let state_bytes = train.optim_dtype.size();
     for _ in 0..2 {
         for _ in 0..3 {
-            held.push(alloc.alloc(sub * state_bytes, Cat::OptimBuf));
+            held.push(uncapped(arena.lease(sub * state_bytes, Cat::OptimBuf)));
         }
     }
     for _ in 0..2 {
-        held.push(alloc.alloc(sub * 4, Cat::SwapBuf));
+        held.push(uncapped(arena.lease(sub * 4, Cat::SwapBuf)));
     }
 
     // 4. offloaded activation checkpoints (Eq. 1): Ng × B × C × L × H ×
@@ -112,13 +131,14 @@ pub fn peak_sysmem(
         let per_layer = train.batch * train.seq * spec.hidden * 2;
         for _ in 0..ranks {
             for _ in 0..spec.layers {
-                held.push(alloc.alloc(per_layer, Cat::ActCkpt));
+                held.push(uncapped(arena.lease(per_layer, Cat::ActCkpt)));
             }
         }
     }
 
     // 5. resident small tensors (norms/router master copies, fp32) +
-    // framework base
+    // framework base — unpinned framework memory, charged straight to
+    // the ledger (not arena business)
     let resident_small: usize = tensors::inventory(spec)
         .iter()
         .filter(|t| !t.offloadable())
@@ -147,6 +167,7 @@ pub fn peak_sysmem(
         overflow_spike: tracker.peak(Cat::OverflowTemp),
         resident: tracker.peak(Cat::Resident),
         peak_total: tracker.peak_total(),
+        arena_watermarks: arena.watermarks(),
     };
     drop(held);
     drop(pool);
@@ -280,6 +301,36 @@ mod tests {
             / b.peak_total as f64;
         assert!(margin < 0.45, "margin {margin}");
         let _ = GIB;
+    }
+
+    #[test]
+    fn ledger_peaks_match_arena_watermarks_bit_for_bit() {
+        // the acceptance invariant of the arena refactor: the replay
+        // charges nothing behind the arena's back, so the tracker peaks
+        // reported per pinned category ARE the arena's watermarks
+        for flags in [MemAscendFlags::baseline(), MemAscendFlags::memascend()] {
+            let mut t = spec_fig8();
+            t.flags = flags;
+            let b = peak_sysmem(&QWEN25_7B, &t, &CONFIG1);
+            let by_cat: std::collections::BTreeMap<Cat, CatWatermark> =
+                b.arena_watermarks.iter().copied().collect();
+            for (cat, field) in [
+                (Cat::GradFlat, b.grad_flat),
+                (Cat::OptimBuf, b.optim_buf),
+                (Cat::SwapBuf, b.swap_buf),
+                (Cat::ActCkpt, b.act_ckpt),
+            ] {
+                assert_eq!(
+                    by_cat[&cat].charged_peak as u64, field,
+                    "{cat:?}: tracker peak diverged from arena watermark"
+                );
+            }
+            // the pool's own stats agree with the arena's leased demand
+            assert_eq!(
+                by_cat[&Cat::ParamPool].requested_peak as u64, b.param_pool,
+                "PoolStats.pool_bytes diverged from arena ParamPool demand"
+            );
+        }
     }
 
     #[test]

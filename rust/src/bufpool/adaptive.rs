@@ -5,17 +5,18 @@
 //! intermediate×hidden, kv/qo slots their projection sizes, expert
 //! slots the per-expert FFN size.  Subgroup counts follow the paper:
 //! {embed: 2, ffn: 3N, kv: 2N, qo: 2N} (+ MoE: 3·E·N expert slots),
-//! with N = prefetch depth.  Like the baseline — and like the paper's
-//! implementation — all subpools live in **one monolithic backing
-//! region** with a hashtable mapping lease keys to (offset, size)
-//! metadata, so multi-pool management adds no allocation overhead.
+//! with N = prefetch depth.  Each subpool's backing is its own
+//! exactly-sized [`PinnedArena`] lease — the "few shape-class regions
+//! per category" the arena is built around — so releasing the pool
+//! returns every class region for same-shape recycling, and buffer
+//! access only serializes within one class.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Condvar, Mutex};
 
 use crate::config::ModelSpec;
 use crate::dtype::DType;
-use crate::pinned::{Cat, HostAllocator, HostRegion};
+use crate::pinned::{Cat, Lease, PinnedArena};
 use crate::tensors::{self, ShapeClass, TensorDesc};
 
 use super::{ParamBufferPool, PoolBuf, PoolStats};
@@ -23,7 +24,7 @@ use super::{ParamBufferPool, PoolBuf, PoolStats};
 struct SubPool {
     class: ShapeClass,
     slot_bytes: usize,
-    /// Free slot offsets into the shared backing region.
+    /// Free slot offsets into this class's own lease.
     free: Vec<usize>,
     total_slots: usize,
 }
@@ -39,7 +40,8 @@ struct State {
 }
 
 pub struct AdaptivePool {
-    region: Mutex<HostRegion>,
+    /// One lease per subpool, parallel to `State::subpools`.
+    regions: Vec<Mutex<Lease>>,
     state: Mutex<State>,
     available: Condvar,
 }
@@ -49,15 +51,16 @@ impl AdaptivePool {
         spec: &ModelSpec,
         prefetch_depth: usize,
         dtype: DType,
-        alloc: &dyn HostAllocator,
-    ) -> Self {
+        arena: &PinnedArena,
+    ) -> anyhow::Result<Self> {
         let n = prefetch_depth.max(1);
         let class_sizes = tensors::class_max_elems(spec);
         let class_counts: HashMap<ShapeClass, usize> =
             tensors::class_counts_per_block(spec).into_iter().collect();
 
         let mut subpools = Vec::new();
-        let mut offset = 0usize;
+        let mut regions = Vec::new();
+        let mut total = 0usize;
         for (class, max_elems) in class_sizes {
             let slot_bytes = max_elems * dtype.size();
             let slots = match class {
@@ -69,17 +72,14 @@ impl AdaptivePool {
             if slots == 0 {
                 continue;
             }
-            let free = (0..slots)
-                .rev()
-                .map(|i| offset + i * slot_bytes)
-                .collect();
+            let class_bytes = slot_bytes * slots;
+            regions.push(Mutex::new(arena.lease(class_bytes, Cat::ParamPool)?));
+            let free = (0..slots).rev().map(|i| i * slot_bytes).collect();
             subpools.push(SubPool { class, slot_bytes, free, total_slots: slots });
-            offset += slot_bytes * slots;
+            total += class_bytes;
         }
-        let total = offset;
-        let region = alloc.alloc(total, Cat::ParamPool);
-        Self {
-            region: Mutex::new(region),
+        Ok(Self {
+            regions,
             state: Mutex::new(State {
                 subpools,
                 in_use: HashMap::new(),
@@ -89,7 +89,7 @@ impl AdaptivePool {
                 stats: PoolStats { pool_bytes: total, ..Default::default() },
             }),
             available: Condvar::new(),
-        }
+        })
     }
 
     /// Subpool layout summary: (class, slot_bytes, slots).
@@ -125,7 +125,7 @@ impl AdaptivePool {
         st.stats.acquires += 1;
         st.stats.peak_requested = st.stats.peak_requested.max(st.cur_requested);
         st.stats.peak_capacity = st.stats.peak_capacity.max(st.cur_capacity);
-        PoolBuf { key, offset, capacity, requested }
+        PoolBuf { key, class: idx, offset, capacity, requested }
     }
 }
 
@@ -175,7 +175,7 @@ impl ParamBufferPool for AdaptivePool {
     }
 
     fn with_buf(&self, buf: &PoolBuf, f: &mut dyn FnMut(&mut [u8])) {
-        let mut region = self.region.lock().unwrap();
+        let mut region = self.regions[buf.class].lock().unwrap();
         if region.is_virtual() {
             f(&mut []);
             return;
@@ -193,34 +193,26 @@ impl ParamBufferPool for AdaptivePool {
     }
 }
 
-pub fn build(
-    spec: &ModelSpec,
-    prefetch_depth: usize,
-    dtype: DType,
-    alloc: Arc<dyn HostAllocator>,
-) -> Arc<dyn ParamBufferPool> {
-    Arc::new(AdaptivePool::new(spec, prefetch_depth, dtype, alloc.as_ref()))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bufpool::test_util::sample_tensors;
+    use crate::bufpool::test_util::{sample_tensors, test_arena};
     use crate::bufpool::MonolithicPool;
     use crate::config::presets;
-    use crate::pinned::{AlignedAllocator, MemoryTracker, Mode};
+    use crate::pinned::Mode;
     use crate::prop_assert;
     use crate::util::proptest::{check, Config};
     use crate::util::rng::Xoshiro256;
+    use std::sync::Arc;
 
-    fn valloc() -> Arc<AlignedAllocator> {
-        AlignedAllocator::new(Mode::Virtual, Arc::new(MemoryTracker::new()))
+    fn mk(spec: &ModelSpec, depth: usize) -> AdaptivePool {
+        AdaptivePool::new(spec, depth, DType::F16, &test_arena(Mode::Virtual)).unwrap()
     }
 
     #[test]
     fn subgroup_counts_match_paper() {
         // paper §IV-B: counts {2, 3N, 2N, 2N} for embed/ffn/kv/qo
-        let pool = AdaptivePool::new(&presets::QWEN25_7B, 2, DType::F16, &valloc());
+        let pool = mk(&presets::QWEN25_7B, 2);
         let layout: HashMap<ShapeClass, usize> = pool
             .layout()
             .into_iter()
@@ -237,8 +229,9 @@ mod tests {
         // Fig. 11: avg 72.71% reduction
         for spec in presets::PAPER_DENSE {
             let mono =
-                MonolithicPool::new(spec, 2, DType::F16, &valloc());
-            let adap = AdaptivePool::new(spec, 2, DType::F16, &valloc());
+                MonolithicPool::new(spec, 2, DType::F16, &test_arena(Mode::Virtual))
+                    .unwrap();
+            let adap = mk(spec, 2);
             let m = mono.stats().pool_bytes as f64;
             let a = adap.stats().pool_bytes as f64;
             let reduction = 1.0 - a / m;
@@ -254,7 +247,7 @@ mod tests {
     #[test]
     fn acquire_gets_exact_class_slot() {
         let spec = &presets::QWEN25_7B;
-        let pool = AdaptivePool::new(spec, 2, DType::F16, &valloc());
+        let pool = mk(spec, 2);
         let ts = sample_tensors(spec);
         let ffn = ts.iter().find(|t| t.name.contains("w_gate")).unwrap();
         let b = pool.acquire(ffn, DType::F16).unwrap();
@@ -266,7 +259,7 @@ mod tests {
     #[test]
     fn moe_expert_class_exists() {
         let spec = &presets::QWEN3_30B_A3B;
-        let pool = AdaptivePool::new(spec, 1, DType::F16, &valloc());
+        let pool = mk(spec, 1);
         let layout: HashMap<ShapeClass, usize> = pool
             .layout()
             .into_iter()
@@ -285,10 +278,26 @@ mod tests {
     }
 
     #[test]
+    fn pool_bytes_equal_arena_leased_demand() {
+        // the "policy over the arena" invariant: every pool byte is an
+        // arena-leased byte, nothing more
+        let arena = test_arena(Mode::Virtual);
+        let pool =
+            AdaptivePool::new(&presets::QWEN25_7B, 2, DType::F16, &arena).unwrap();
+        assert_eq!(arena.stats().requested_bytes, pool.stats().pool_bytes);
+        assert_eq!(
+            arena.watermark(Cat::ParamPool).requested,
+            pool.stats().pool_bytes
+        );
+        drop(pool);
+        assert_eq!(arena.stats().requested_bytes, 0);
+    }
+
+    #[test]
     fn prop_no_overlap_and_exact_free() {
         check("adaptive-pool", Config { cases: 32, ..Default::default() }, |rng, _| {
             let spec = &presets::TINY100M;
-            let pool = AdaptivePool::new(spec, 2, DType::F16, &valloc());
+            let pool = mk(spec, 2);
             let ts = sample_tensors(spec);
             let mut held: Vec<PoolBuf> = Vec::new();
             for _ in 0..200 {
@@ -298,13 +307,15 @@ mod tests {
                 } else {
                     let t = &ts[rng.below(ts.len())];
                     if let Some(b) = pool.try_acquire(t, DType::F16).unwrap() {
-                        // overlap check against everything held
-                        for o in &held {
+                        // overlap check against everything held in the
+                        // same class lease
+                        for o in held.iter().filter(|o| o.class == b.class) {
                             let disjoint = b.offset + b.capacity <= o.offset
                                 || o.offset + o.capacity <= b.offset;
                             prop_assert!(
                                 disjoint,
-                                "lease [{},{}) overlaps [{},{})",
+                                "class {} lease [{},{}) overlaps [{},{})",
+                                b.class,
                                 b.offset,
                                 b.offset + b.capacity,
                                 o.offset,
@@ -326,10 +337,9 @@ mod tests {
 
     #[test]
     fn real_mode_data_roundtrip() {
-        let tracker = Arc::new(MemoryTracker::new());
-        let alloc = AlignedAllocator::new(Mode::Real, tracker);
+        let arena = test_arena(Mode::Real);
         let spec = &presets::SMOKE;
-        let pool = AdaptivePool::new(spec, 1, DType::F32, &alloc);
+        let pool = AdaptivePool::new(spec, 1, DType::F32, &arena).unwrap();
         let ts = sample_tensors(spec);
         let b = pool.acquire(&ts[0], DType::F32).unwrap();
         pool.with_buf(&b, &mut |s| {
@@ -346,7 +356,7 @@ mod tests {
     #[test]
     fn blocking_acquire_wakes_on_release() {
         let spec = &presets::SMOKE;
-        let pool = Arc::new(AdaptivePool::new(spec, 1, DType::F16, &valloc()));
+        let pool = Arc::new(mk(spec, 1));
         let ts = sample_tensors(spec);
         let embed = ts.iter().find(|t| t.name == "embed").unwrap().clone();
         let b1 = pool.acquire(&embed, DType::F16).unwrap();

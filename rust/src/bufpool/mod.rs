@@ -1,17 +1,25 @@
 //! Parameter buffer pools: prefetch staging between SSD and "GPU".
 //!
-//! The pool is where §III-A's fragmentation lives.  Both designs follow
-//! ZeRO-Infinity's underlying scheme — allocate **one monolithic pinned
-//! region** up front, then hand out logical sub-buffers tracked by a
-//! hashtable of metadata — but differ in how sub-buffers are sized:
+//! The pool is where §III-A's fragmentation lives.  Since the arena
+//! refactor, neither pool owns pinned memory: both are *sizing
+//! policies* over [`crate::pinned::PinnedArena`] leases, differing only
+//! in how slots are shaped:
 //!
-//! - [`monolithic::MonolithicPool`] (baseline): every buffer is sized
-//!   to the *largest* offloadable tensor (the embedding), so a kv
+//! - [`monolithic::MonolithicPool`] (baseline): one lease, every slot
+//!   sized to the *largest* offloadable tensor (the embedding), so a kv
 //!   projection occupies an embedding-sized slot → ~70%+ internal
-//!   fragmentation.
-//! - [`adaptive::AdaptivePool`] (MemAscend §IV-B): one subpool per
-//!   shape class (embed / ffn / kv / qo / expert), each sized exactly,
-//!   with subgroup counts {2, 3N, 2N, 2N} for N blocks in flight.
+//!   fragmentation.  This is ZeRO-Infinity's scheme: a monolithic
+//!   region plus a hashtable of sub-buffer metadata.
+//! - [`adaptive::AdaptivePool`] (MemAscend §IV-B): one exactly-sized
+//!   lease per shape class (embed / ffn / kv / qo / expert) with
+//!   subgroup counts {2, 3N, 2N, 2N} for N blocks in flight.  Because
+//!   each class is its own lease, releasing the pool hands each class
+//!   region back to the arena for same-shape recycling, and `with_buf`
+//!   only serializes within a class.
+//!
+//! Slot bookkeeping (free lists, blocking acquire, the lease-key
+//! hashtable) stays here; the bytes, the budget, and the
+//! overlap-freedom invariant live in the arena.
 
 pub mod adaptive;
 pub mod monolithic;
@@ -22,11 +30,15 @@ pub use monolithic::MonolithicPool;
 use crate::dtype::DType;
 use crate::tensors::TensorDesc;
 
-/// A leased sub-buffer: logical offset/len into the pool's monolithic
-/// backing region plus the hashtable key that tracks it.
+/// A leased sub-buffer: logical offset/len into one of the pool's
+/// arena leases plus the hashtable key that tracks it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PoolBuf {
     pub key: u64,
+    /// Which pool lease the buffer lives in (shape-class index for the
+    /// adaptive pool; always 0 for the monolithic pool).
+    pub class: usize,
+    /// Offset within that lease.
     pub offset: usize,
     /// Capacity of the slot (the fragmentation source when > requested).
     pub capacity: usize,
@@ -37,7 +49,7 @@ pub struct PoolBuf {
 /// Utilization snapshot for Fig. 11.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PoolStats {
-    /// Total bytes of the backing region (what the pool pins forever).
+    /// Total bytes of the backing leases (what the pool keeps pinned).
     pub pool_bytes: usize,
     /// Peak simultaneously-requested bytes (the "actual need").
     pub peak_requested: usize,
@@ -81,7 +93,12 @@ pub trait ParamBufferPool: Send + Sync {
 
 #[cfg(test)]
 pub(crate) mod test_util {
+    use std::sync::Arc;
+
     use crate::config::ModelSpec;
+    use crate::pinned::{
+        AlignedAllocator, ArenaConfig, MemoryTracker, Mode, PinnedArena,
+    };
     use crate::tensors::{inventory, TensorDesc};
 
     /// The offloadable tensors of one block plus embed/head.
@@ -90,5 +107,11 @@ pub(crate) mod test_util {
             .into_iter()
             .filter(|t| t.offloadable())
             .collect()
+    }
+
+    pub fn test_arena(mode: Mode) -> Arc<PinnedArena> {
+        let tracker = Arc::new(MemoryTracker::new());
+        let alloc = AlignedAllocator::new(mode, tracker);
+        PinnedArena::new(Arc::new(alloc), ArenaConfig::default())
     }
 }

@@ -5,14 +5,15 @@
 //! `slot_bytes` is the largest offloadable tensor's transfer size and
 //! `count` covers the embedding + N in-flight blocks' tensors.  Every
 //! acquire occupies a full slot regardless of the tensor's real size —
-//! the internal fragmentation of §III-A.
+//! the internal fragmentation of §III-A.  The backing bytes are one
+//! [`PinnedArena`] lease; the pool only does slot policy.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Condvar, Mutex};
 
 use crate::config::ModelSpec;
 use crate::dtype::DType;
-use crate::pinned::{Cat, HostAllocator, HostRegion};
+use crate::pinned::{Cat, Lease, PinnedArena};
 use crate::tensors::{self, TensorDesc};
 
 use super::{ParamBufferPool, PoolBuf, PoolStats};
@@ -28,20 +29,21 @@ struct State {
 
 pub struct MonolithicPool {
     slot_bytes: usize,
-    region: Mutex<HostRegion>,
+    region: Mutex<Lease>,
     state: Mutex<State>,
     available: Condvar,
 }
 
 impl MonolithicPool {
     /// `prefetch_depth` = N blocks in flight (paper's buffer-count
-    /// driver). Transfer dtype sizes the slots.
+    /// driver). Transfer dtype sizes the slots.  Fails only if the
+    /// arena refuses the backing lease (budget).
     pub fn new(
         spec: &ModelSpec,
         prefetch_depth: usize,
         dtype: DType,
-        alloc: &dyn HostAllocator,
-    ) -> Self {
+        arena: &PinnedArena,
+    ) -> anyhow::Result<Self> {
         let slot_bytes = tensors::largest_offloadable_elems(spec) * dtype.size();
         let per_block: usize = tensors::class_counts_per_block(spec)
             .iter()
@@ -50,8 +52,8 @@ impl MonolithicPool {
         // embedding + lm head + N blocks' offloadable tensors
         let count = 2 + per_block * prefetch_depth.max(1);
         let total = slot_bytes * count;
-        let region = alloc.alloc(total, Cat::ParamPool);
-        Self {
+        let region = arena.lease(total.max(1), Cat::ParamPool)?;
+        Ok(Self {
             slot_bytes,
             region: Mutex::new(region),
             state: Mutex::new(State {
@@ -63,7 +65,7 @@ impl MonolithicPool {
                 stats: PoolStats { pool_bytes: total, ..Default::default() },
             }),
             available: Condvar::new(),
-        }
+        })
     }
 
     pub fn slot_bytes(&self) -> usize {
@@ -82,6 +84,7 @@ impl MonolithicPool {
         st.stats.peak_capacity = st.stats.peak_capacity.max(st.cur_capacity);
         PoolBuf {
             key,
+            class: 0,
             offset: slot * self.slot_bytes,
             capacity: self.slot_bytes,
             requested,
@@ -153,27 +156,15 @@ impl ParamBufferPool for MonolithicPool {
     }
 }
 
-/// Convenience constructor matching the adaptive pool's signature.
-pub fn build(
-    spec: &ModelSpec,
-    prefetch_depth: usize,
-    dtype: DType,
-    alloc: Arc<dyn HostAllocator>,
-) -> Arc<dyn ParamBufferPool> {
-    Arc::new(MonolithicPool::new(spec, prefetch_depth, dtype, alloc.as_ref()))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bufpool::test_util::sample_tensors;
+    use crate::bufpool::test_util::{sample_tensors, test_arena};
     use crate::config::presets;
-    use crate::pinned::{AlignedAllocator, MemoryTracker, Mode};
+    use crate::pinned::Mode;
 
     fn mk(spec: &ModelSpec, depth: usize) -> MonolithicPool {
-        let alloc =
-            AlignedAllocator::new(Mode::Virtual, Arc::new(MemoryTracker::new()));
-        MonolithicPool::new(spec, depth, DType::F16, &Arc::clone(&alloc))
+        MonolithicPool::new(spec, depth, DType::F16, &test_arena(Mode::Virtual)).unwrap()
     }
 
     #[test]
@@ -237,5 +228,15 @@ mod tests {
         let b = pool.acquire(&ts[0], DType::F16).unwrap();
         pool.release(b);
         pool.release(b);
+    }
+
+    #[test]
+    fn dropping_the_pool_returns_its_lease() {
+        let arena = test_arena(Mode::Virtual);
+        let pool = MonolithicPool::new(&presets::SMOKE, 1, DType::F16, &arena).unwrap();
+        let bytes = pool.stats().pool_bytes;
+        assert_eq!(arena.stats().requested_bytes, bytes);
+        drop(pool);
+        assert_eq!(arena.stats().requested_bytes, 0);
     }
 }

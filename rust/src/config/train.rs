@@ -128,6 +128,14 @@ pub struct TrainSpec {
     /// it spill to the SSD (the SSDTrain integration, §II-B1).
     /// `usize::MAX` = everything stays in host memory.
     pub act_host_budget: usize,
+    /// Global pinned-memory budget enforced by the `PinnedArena` all
+    /// host buffers lease from; `None` = unbounded.  Exceeding it is a
+    /// structured error (or a graceful spill), never an abort.
+    pub pinned_budget_bytes: Option<usize>,
+    /// Cache FsEngine member fds (§III-D ablation: isolates the
+    /// path-resolution tax from the journal tax).  No effect with
+    /// `direct_nvme`.
+    pub fs_cached_fds: bool,
     pub flags: MemAscendFlags,
     // optimizer hyper-parameters (must match artifacts' adam constants
     // when the HLO adam path is used — see manifest "adam")
@@ -154,6 +162,8 @@ impl Default for TrainSpec {
             io_workers: 2,
             offloaded_gc: true,
             act_host_budget: usize::MAX,
+            pinned_budget_bytes: None,
+            fs_cached_fds: false,
             flags: MemAscendFlags::memascend(),
             lr: 1.0e-3,
             beta1: 0.9,

@@ -47,8 +47,9 @@ pub struct StepMetrics {
     pub overflow_check_secs: f64,
     pub optim_secs: f64,
     /// Seconds the compute thread actually stalled on I/O completions
-    /// (swapper `next()` + optimizer fetch/write-back waits). The gap
-    /// to `io_secs` is transfer time hidden behind compute.
+    /// (swapper `next()`, activation-spill fetches, and optimizer
+    /// fetch/write-back waits). The gap to `io_secs` is transfer time
+    /// hidden behind compute.
     pub io_wait_secs: f64,
 }
 
@@ -56,13 +57,10 @@ impl StepMetrics {
     /// Engine-busy I/O time that the async pipeline hid behind
     /// compute: `io_secs - io_wait_secs` (clamped at 0).
     ///
-    /// Caveat: `io_secs` sums *per-call* elapsed time, so when the
-    /// queue layer runs transfers concurrently it can exceed wall I/O
-    /// time (two overlapping 10 ms reads count 20 ms) — part of the
-    /// "hidden" time is then I/O-vs-I/O concurrency rather than
-    /// compute overlap.  Comparisons stay fair because the sequential
-    /// baseline is accounted identically; per-device busy-interval
-    /// tracking is a ROADMAP item.
+    /// `io_secs` is the engine's union-of-busy-intervals time
+    /// (`IoSnapshot::busy_ns`), so concurrent transfers are counted
+    /// once and the overlap metric is exact — overlapping I/O can
+    /// never be mistaken for compute overlap.
     pub fn io_overlap_secs(&self) -> f64 {
         (self.io_secs - self.io_wait_secs).max(0.0)
     }

@@ -6,13 +6,17 @@
 //! just in time for recomputation in the backward pass.  Total host
 //! bytes = Ng·B·C·L·H·2 + pinned overhead — exactly Eq. 1, and exactly
 //! what limits context length once system memory is the bottleneck.
+//! Slots are [`PinnedArena`] leases under `Cat::ActCkpt`, so they show
+//! up on the shared ledger and inside the global budget; see
+//! [`super::spill::SpillingActivationStore`] for the budget-capped
+//! variant that spills past-budget checkpoints to the SSD.
 
 use crate::dtype::{f16_bytes_to_f32s, f32s_to_f16_bytes};
-use crate::pinned::{Cat, HostAllocator, HostRegion};
+use crate::pinned::{Cat, Lease, PinnedArena};
 
 /// Host-side checkpoint slots for one rank's L layers.
 pub struct ActivationStore {
-    slots: Vec<HostRegion>,
+    slots: Vec<Lease>,
     elems_per_slot: usize,
     /// Which slots currently hold a checkpoint (fwd sets, bwd takes).
     occupied: Vec<bool>,
@@ -20,11 +24,11 @@ pub struct ActivationStore {
 
 impl ActivationStore {
     /// `elems` = B × C × H per checkpoint; one slot per layer.
-    pub fn new(layers: usize, elems: usize, alloc: &dyn HostAllocator) -> Self {
+    pub fn new(layers: usize, elems: usize, arena: &PinnedArena) -> anyhow::Result<Self> {
         let slots = (0..layers)
-            .map(|_| alloc.alloc(elems * 2, Cat::ActCkpt))
-            .collect();
-        Self { slots, elems_per_slot: elems, occupied: vec![false; layers] }
+            .map(|_| arena.lease(elems * 2, Cat::ActCkpt).map_err(Into::into))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self { slots, elems_per_slot: elems, occupied: vec![false; layers] })
     }
 
     /// Offload a checkpoint (f32 "GPU" tensor -> fp16 pinned host slot).
@@ -45,20 +49,23 @@ impl ActivationStore {
     }
 
     pub fn host_bytes(&self) -> usize {
-        self.slots.iter().map(|s| s.bytes_reserved).sum()
+        self.slots.iter().map(|s| s.bytes_padded()).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pinned::{AlignedAllocator, CachingAllocator, MemoryTracker, Mode};
+    use crate::bufpool::test_util::test_arena;
+    use crate::pinned::{
+        AlignedAllocator, ArenaConfig, CachingAllocator, MemoryTracker, Mode,
+        PinnedArena,
+    };
     use std::sync::Arc;
 
     #[test]
     fn offload_fetch_roundtrip() {
-        let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
-        let mut store = ActivationStore::new(4, 256, &Arc::clone(&alloc));
+        let mut store = ActivationStore::new(4, 256, &test_arena(Mode::Real)).unwrap();
         let h: Vec<f32> = (0..256).map(|i| (i as f32) / 16.0).collect();
         store.offload(2, &h);
         let back = store.fetch(2);
@@ -69,8 +76,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "checkpoint missing")]
     fn double_fetch_panics() {
-        let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
-        let mut store = ActivationStore::new(2, 16, &Arc::clone(&alloc));
+        let mut store = ActivationStore::new(2, 16, &test_arena(Mode::Real)).unwrap();
         store.offload(0, &[0.0; 16]);
         store.fetch(0);
         store.fetch(0);
@@ -79,14 +85,21 @@ mod tests {
     #[test]
     fn eq1_accounting_difference_between_allocators() {
         // Eq. 1's P_m term: pow2 rounding on non-pow2 checkpoint sizes
-        let tr1 = Arc::new(MemoryTracker::new());
-        let a1 = CachingAllocator::new(Mode::Virtual, tr1.clone());
         let elems = 5000; // 10'000 B -> pow2 16384
-        let _s1 = ActivationStore::new(8, elems, &Arc::clone(&a1));
+        let tr1 = Arc::new(MemoryTracker::new());
+        let a1 = PinnedArena::new(
+            Arc::new(CachingAllocator::new(Mode::Virtual, tr1.clone())),
+            ArenaConfig::default(),
+        );
+        let _s1 = ActivationStore::new(8, elems, &a1).unwrap();
         let tr2 = Arc::new(MemoryTracker::new());
-        let a2 = AlignedAllocator::new(Mode::Virtual, tr2.clone());
-        let _s2 = ActivationStore::new(8, elems, &Arc::clone(&a2));
+        let a2 = PinnedArena::new(
+            Arc::new(AlignedAllocator::new(Mode::Virtual, tr2.clone())),
+            ArenaConfig::default(),
+        );
+        let _s2 = ActivationStore::new(8, elems, &a2).unwrap();
         assert!(tr1.peak_total() > tr2.peak_total());
-        assert_eq!(tr2.current(Cat::ActCkpt), (8 * elems * 2) as u64);
+        // the arena pads each slot to the page, charged under ActCkpt
+        assert_eq!(tr2.current(Cat::ActCkpt), 8 * 12_288);
     }
 }

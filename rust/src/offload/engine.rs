@@ -1,10 +1,12 @@
-//! Component assembly: `MemAscendFlags` → concrete allocator, pool,
-//! NVMe engine, and overflow checker.
+//! Component assembly: `MemAscendFlags` → concrete allocator policy,
+//! pinned arena, pool, NVMe engine, and overflow checker.
 //!
 //! This is the ablation axis: every flag combination yields a working
 //! engine, so benches can toggle one optimization at a time (DESIGN.md
 //! §ablations) and the trainer can run as pure ZeRO-Infinity, pure
-//! MemAscend, or anything between.
+//! MemAscend, or anything between.  All host memory flows through one
+//! [`PinnedArena`] built over the flag-selected allocator policy —
+//! `TrainSpec::pinned_budget_bytes` makes its budget a run-level knob.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -13,18 +15,20 @@ use crate::bufpool::{AdaptivePool, MonolithicPool, ParamBufferPool};
 use crate::config::{ModelSpec, TrainSpec};
 use crate::overflow::{baseline_overflow_check, fused_overflow_check, Checker};
 use crate::pinned::{
-    AlignedAllocator, CachingAllocator, HostAllocator, MemoryTracker, Mode,
+    AlignedAllocator, ArenaConfig, CachingAllocator, HostAllocator, MemoryTracker,
+    Mode, PinnedArena,
 };
 use crate::ssd::{AsyncEngine, DirectEngine, FsEngine, IoExecutor, NvmeEngine};
 
 pub struct OffloadEngine {
     pub tracker: Arc<MemoryTracker>,
-    pub alloc: Arc<dyn HostAllocator>,
+    /// The one lease tier every host-memory consumer allocates from.
+    pub arena: Arc<PinnedArena>,
     pub pool: Arc<dyn ParamBufferPool>,
     pub nvme: Arc<dyn NvmeEngine>,
-    /// Shared async submission queue: swapper fetch window and
-    /// double-buffered optimizer swap ride this one executor (the
-    /// engines keep their own per-device queues underneath).
+    /// Shared async submission queue: swapper fetch window, activation
+    /// spill, and double-buffered optimizer swap ride this one executor
+    /// (the engines keep their own per-device queues underneath).
     pub ioq: Arc<IoExecutor>,
     pub checker: Checker,
     pub threads: usize,
@@ -43,11 +47,18 @@ impl OffloadEngine {
         } else {
             Arc::new(CachingAllocator::new(Mode::Real, tracker.clone()))
         };
+        let arena = PinnedArena::new(
+            alloc,
+            ArenaConfig {
+                budget_bytes: train.pinned_budget_bytes,
+                ..Default::default()
+            },
+        );
         let dtype = train.precision.compute_dtype();
         let pool: Arc<dyn ParamBufferPool> = if train.flags.adaptive_pool {
-            Arc::new(AdaptivePool::new(spec, train.prefetch_depth, dtype, alloc.as_ref()))
+            Arc::new(AdaptivePool::new(spec, train.prefetch_depth, dtype, &arena)?)
         } else {
-            Arc::new(MonolithicPool::new(spec, train.prefetch_depth, dtype, alloc.as_ref()))
+            Arc::new(MonolithicPool::new(spec, train.prefetch_depth, dtype, &arena)?)
         };
         // capacity: fp16 + fp32 master + m + v + slack, per device
         let cap_bytes = (spec.param_count() as u64)
@@ -63,7 +74,12 @@ impl OffloadEngine {
                 1,
             )?)
         } else {
-            Arc::new(FsEngine::new(&storage_dir.join("fs"), devices, 512 << 10)?)
+            Arc::new(FsEngine::with_fd_cache(
+                &storage_dir.join("fs"),
+                devices,
+                512 << 10,
+                train.fs_cached_fds,
+            )?)
         };
         let checker = if train.flags.fused_overflow {
             Checker::Fused
@@ -73,7 +89,7 @@ impl OffloadEngine {
         let ioq = Arc::new(IoExecutor::new(train.io_workers.max(1)));
         Ok(Self {
             tracker,
-            alloc,
+            arena,
             pool,
             nvme,
             ioq,
@@ -121,6 +137,11 @@ mod tests {
             assert_eq!(out, [1, 2, 3, 4]);
             assert!(!eng.check_overflow(&[0.0, 1.0]));
             assert!(eng.check_overflow(&[f32::NAN]));
+            // the pool's bytes are arena-leased, on the shared ledger
+            assert_eq!(
+                eng.arena.stats().requested_bytes,
+                eng.pool.stats().pool_bytes
+            );
             std::fs::remove_dir_all(&dir).ok();
         }
     }
@@ -144,6 +165,32 @@ mod tests {
         .unwrap();
         assert_eq!(ma.pool.label(), "adaptive");
         assert_eq!(ma.nvme.label(), "direct-nvme");
+        let cfd = OffloadEngine::new(
+            &SMOKE,
+            &TrainSpec {
+                flags: MemAscendFlags::baseline(),
+                fs_cached_fds: true,
+                ..Default::default()
+            },
+            &d,
+        )
+        .unwrap();
+        assert_eq!(cfd.nvme.label(), "fs-raid0-cachedfd");
         std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn pinned_budget_below_pool_demand_is_a_structured_error() {
+        let train = TrainSpec {
+            pinned_budget_bytes: Some(4096), // far below the pool's need
+            ..Default::default()
+        };
+        let dir = storage("budget");
+        let err = OffloadEngine::new(&SMOKE, &train, &dir).unwrap_err();
+        assert!(
+            err.to_string().contains("pinned budget exceeded"),
+            "unexpected error: {err}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

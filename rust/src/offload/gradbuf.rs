@@ -3,22 +3,22 @@
 //! One contiguous fp32 block sized to the full partition, laid out in
 //! canonical tensor order; gradients arrive as fp16 (the GPU transport
 //! format — the cast is where overflow becomes ±inf) and are
-//! accumulated in fp32.  The buffer is pinned through the configured
-//! allocator, so its pow2-vs-exact overhead shows up in the ledger.
+//! accumulated in fp32 **directly in the pinned lease**.  The seed
+//! implementation paired the pinned region with a same-sized `Vec<f32>`
+//! (region for the ledger, vector for the math) — 2× the partition in
+//! host memory; the arena lease's aligned f32 view removes the
+//! duplicate, so the buffer's footprint is exactly one partition.
 
 use std::collections::HashMap;
 
 use crate::dtype::{f16_to_f32, f32_to_f16};
-use crate::pinned::{Cat, HostAllocator, HostRegion};
+use crate::pinned::{Cat, Lease, PinnedArena};
 use crate::tensors::TensorDesc;
 
 pub struct GradFlatBuffer {
-    /// Backing pinned region (kept alive for ledger correctness).
-    _region: HostRegion,
-    /// The fp32 accumulator (owned separately: HostRegion byte access
-    /// is awkward for f32 math; the region charges the ledger, this
-    /// holds the data — both are the same size).
-    data: Vec<f32>,
+    /// The fp32 accumulator: one arena lease, page-aligned, viewed as
+    /// `[f32]` in place.
+    lease: Lease,
     /// tensor name -> (offset, len) in elements.
     layout: HashMap<String, (usize, usize)>,
     len: usize,
@@ -26,15 +26,20 @@ pub struct GradFlatBuffer {
 
 impl GradFlatBuffer {
     /// Build the layout from the canonical inventory order.
-    pub fn new(tensors: &[TensorDesc], alloc: &dyn HostAllocator) -> Self {
+    pub fn new(tensors: &[TensorDesc], arena: &PinnedArena) -> anyhow::Result<Self> {
         let mut layout = HashMap::new();
         let mut off = 0usize;
         for t in tensors {
             layout.insert(t.name.clone(), (off, t.numel));
             off += t.numel;
         }
-        let region = alloc.alloc(off * 4, Cat::GradFlat);
-        Self { _region: region, data: vec![0f32; off], layout, len: off }
+        let lease = arena.lease((off * 4).max(4), Cat::GradFlat)?;
+        anyhow::ensure!(
+            !lease.is_virtual() || off == 0,
+            "GradFlatBuffer needs a real-mode arena (virtual runs use \
+             accounting::sysmem instead)"
+        );
+        Ok(Self { lease, layout, len: off })
     }
 
     pub fn len(&self) -> usize {
@@ -46,7 +51,7 @@ impl GradFlatBuffer {
     }
 
     pub fn as_slice(&self) -> &[f32] {
-        &self.data
+        &self.lease.as_f32()[..self.len]
     }
 
     pub fn span_of(&self, tensor: &str) -> Option<(usize, usize)> {
@@ -55,7 +60,7 @@ impl GradFlatBuffer {
 
     pub fn grads_of(&self, tensor: &str) -> &[f32] {
         let (off, len) = self.layout[tensor];
-        &self.data[off..off + len]
+        &self.lease.as_f32()[off..off + len]
     }
 
     /// Accumulate a gradient that traveled as fp16 (values round-trip
@@ -64,7 +69,8 @@ impl GradFlatBuffer {
     pub fn accumulate_f16_transport(&mut self, tensor: &str, grads_f32: &[f32]) {
         let (off, len) = self.layout[tensor];
         assert_eq!(len, grads_f32.len(), "grad size mismatch for {tensor}");
-        for (dst, &g) in self.data[off..off + len].iter_mut().zip(grads_f32) {
+        let data = self.lease.as_f32_mut();
+        for (dst, &g) in data[off..off + len].iter_mut().zip(grads_f32) {
             *dst += f16_to_f32(f32_to_f16(g));
         }
     }
@@ -75,28 +81,28 @@ impl GradFlatBuffer {
         use crate::dtype::{bf16_to_f32, f32_to_bf16};
         let (off, len) = self.layout[tensor];
         assert_eq!(len, grads_f32.len(), "grad size mismatch for {tensor}");
-        for (dst, &g) in self.data[off..off + len].iter_mut().zip(grads_f32) {
+        let data = self.lease.as_f32_mut();
+        for (dst, &g) in data[off..off + len].iter_mut().zip(grads_f32) {
             *dst += bf16_to_f32(f32_to_bf16(g));
         }
     }
 
     pub fn zero(&mut self) {
-        self.data.fill(0.0);
+        let len = self.len;
+        self.lease.as_f32_mut()[..len].fill(0.0);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bufpool::test_util::test_arena;
     use crate::config::presets::SMOKE;
-    use crate::pinned::{AlignedAllocator, MemoryTracker, Mode};
+    use crate::pinned::Mode;
     use crate::tensors::inventory;
-    use std::sync::Arc;
 
     fn mk() -> GradFlatBuffer {
-        let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
-        let inv = inventory(&SMOKE);
-        GradFlatBuffer::new(&inv, &Arc::clone(&alloc))
+        GradFlatBuffer::new(&inventory(&SMOKE), &test_arena(Mode::Real)).unwrap()
     }
 
     #[test]
@@ -118,6 +124,32 @@ mod tests {
             assert_eq!(len, t.numel);
             expect += len;
         }
+    }
+
+    #[test]
+    fn single_allocation_no_duplicate_partition() {
+        // regression for the seed's 2× footprint: the whole buffer is
+        // one GradFlat charge of exactly the partition size (page
+        // rounded), with the math running in the leased bytes — the
+        // slice's base address *is* the lease.
+        let a = test_arena(Mode::Real);
+        let total: usize = inventory(&SMOKE).iter().map(|t| t.numel).sum();
+        let mut buf = GradFlatBuffer::new(&inventory(&SMOKE), &a).unwrap();
+        let charged = a.tracker().current(Cat::GradFlat) as usize;
+        assert!(charged >= total * 4, "lease smaller than the partition");
+        assert!(
+            charged < total * 4 + crate::pinned::arena::LEASE_ALIGN,
+            "GradFlat charge {} is more than one partition (+1 page): \
+             duplicate allocation?",
+            charged
+        );
+        assert_eq!(a.watermark(Cat::GradFlat).requested, total * 4);
+        // the accumulator writes land in the leased span itself
+        let inv = inventory(&SMOKE);
+        let t = &inv[0];
+        buf.accumulate_f16_transport(&t.name, &vec![1.0f32; t.numel]);
+        assert_eq!(buf.as_slice()[0], 1.0);
+        assert_eq!(buf.as_slice().as_ptr() as usize % 4096, 0, "not lease-backed");
     }
 
     #[test]

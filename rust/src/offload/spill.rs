@@ -3,127 +3,253 @@
 //! The paper positions activation offloading to SSD as complementary:
 //! "activation offloading techniques, such as those in SSDTrain, can
 //! potentially be integrated with model state offloading systems".
-//! This store implements that integration: checkpoints go to pinned
-//! host slots up to a byte budget; beyond it they *spill to the NVMe
-//! engine* (fp16), extending trainable context past what Eq. 1 lets
-//! host memory hold.  Fetch order is backward-pass order (LIFO-ish),
-//! so the spilled tail streams back just in time.
+//! This store implements that integration: checkpoints lease pinned
+//! host slots from the [`PinnedArena`] up to a byte budget; beyond it
+//! (or when the arena's own global budget refuses) they *spill to the
+//! NVMe engine* (fp16), extending trainable context past what Eq. 1
+//! lets host memory hold.
+//!
+//! Arena leases make the host tier elastic: fetching a host checkpoint
+//! drops its lease, so the slot is immediately reusable by a later
+//! offload (and by the next step, recycled through the arena's free
+//! extents) instead of being parked for the store's lifetime.
+//!
+//! Spill I/O rides the async queue:
+//!
+//! - offloads `submit_write` and return immediately — the forward pass
+//!   never blocks on a spill write;
+//! - fetches chain read-after-write on the executor and are *prefetched*
+//!   one layer ahead in backward order, so the spilled tail streams
+//!   back just in time;
+//! - every second the compute thread still blocks in [`Self::fetch`]
+//!   is recorded and surfaced via [`Self::wait_secs`], which the
+//!   trainer folds into `StepMetrics::io_wait_secs` (previously these
+//!   stalls were invisible to the metrics — a ROADMAP item).
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::dtype::{f16_bytes_to_f32s, f32s_to_f16_bytes};
-use crate::pinned::{Cat, HostAllocator, HostRegion};
-use crate::ssd::NvmeEngine;
+use crate::pinned::{Cat, Lease, PinnedArena};
+use crate::ssd::{AsyncEngine, IoHandle};
 
 enum Slot {
-    Host(HostRegion),
-    Ssd { key: String },
+    Empty,
+    Host(Lease),
+    /// Spilled; the write may still be in flight on the queue.
+    Ssd { key: String, pending_write: Option<IoHandle<Vec<u8>>> },
 }
 
 pub struct SpillingActivationStore {
     slots: Vec<Slot>,
-    occupied: Vec<bool>,
     elems: usize,
-    engine: Arc<dyn NvmeEngine>,
-    /// Bytes of host budget remaining at construction time.
+    bytes_per: usize,
+    /// Byte budget for live host (pinned) checkpoints.
+    host_budget: usize,
+    host_bytes_live: usize,
+    arena: Arc<PinnedArena>,
+    aio: AsyncEngine,
+    /// Checkpoints served from pinned host slots (cumulative).
     pub host_slots: usize,
+    /// Checkpoints spilled to the SSD (cumulative).
     pub spilled_slots: usize,
+    /// In-flight prefetched read for the next spilled fetch.
+    prefetched: Option<(usize, IoHandle<Vec<u8>>)>,
+    wait_ns: u64,
 }
 
 impl SpillingActivationStore {
-    /// `host_budget_bytes` caps pinned checkpoint memory; the rest of
-    /// the `layers` checkpoints live on the SSD.
+    /// `host_budget_bytes` caps pinned checkpoint memory; checkpoints
+    /// beyond it live on the SSD.  Nothing is pinned up front — slots
+    /// lease on offload and release on fetch.
     pub fn new(
         layers: usize,
         elems: usize,
         host_budget_bytes: usize,
-        alloc: &dyn HostAllocator,
-        engine: Arc<dyn NvmeEngine>,
+        arena: Arc<PinnedArena>,
+        aio: AsyncEngine,
     ) -> Self {
-        let bytes_per = elems * 2;
-        let host_slots = (host_budget_bytes / bytes_per.max(1)).min(layers);
-        let mut slots = Vec::with_capacity(layers);
-        for i in 0..layers {
-            if i < host_slots {
-                slots.push(Slot::Host(alloc.alloc(bytes_per, Cat::ActCkpt)));
-            } else {
-                slots.push(Slot::Ssd { key: format!("actckpt/{i}") });
-            }
-        }
         Self {
-            slots,
-            occupied: vec![false; layers],
+            slots: (0..layers).map(|_| Slot::Empty).collect(),
             elems,
-            engine,
-            host_slots,
-            spilled_slots: layers - host_slots,
+            bytes_per: elems * 2,
+            host_budget: host_budget_bytes,
+            host_bytes_live: 0,
+            arena,
+            aio,
+            host_slots: 0,
+            spilled_slots: 0,
+            prefetched: None,
+            wait_ns: 0,
         }
     }
 
     pub fn offload(&mut self, layer: usize, h: &[f32]) -> anyhow::Result<()> {
         assert_eq!(h.len(), self.elems);
-        anyhow::ensure!(!self.occupied[layer], "layer {layer} already checkpointed");
-        match &mut self.slots[layer] {
-            Slot::Host(region) => f32s_to_f16_bytes(h, region.as_mut_slice()),
-            Slot::Ssd { key } => {
-                let mut bytes = vec![0u8; h.len() * 2];
-                f32s_to_f16_bytes(h, &mut bytes);
-                self.engine.write(key, &bytes)?;
+        anyhow::ensure!(
+            matches!(self.slots[layer], Slot::Empty),
+            "layer {layer} already checkpointed"
+        );
+        if self.host_bytes_live + self.bytes_per <= self.host_budget {
+            // within the store budget; the arena may still refuse under
+            // its global cap — degrade to a spill, never abort
+            if let Ok(mut lease) = self.arena.lease(self.bytes_per, Cat::ActCkpt) {
+                f32s_to_f16_bytes(h, lease.as_mut_slice());
+                self.host_bytes_live += self.bytes_per;
+                self.host_slots += 1;
+                self.slots[layer] = Slot::Host(lease);
+                return Ok(());
             }
         }
-        self.occupied[layer] = true;
+        let key = format!("actckpt/{layer}");
+        let mut bytes = self.arena.take_bytes(self.bytes_per, Cat::ActCkpt);
+        f32s_to_f16_bytes(h, &mut bytes);
+        let write = self.aio.submit_write(key.clone(), bytes);
+        self.spilled_slots += 1;
+        self.slots[layer] = Slot::Ssd { key, pending_write: Some(write) };
         Ok(())
     }
 
     pub fn fetch(&mut self, layer: usize) -> anyhow::Result<Vec<f32>> {
-        anyhow::ensure!(self.occupied[layer], "layer {layer} checkpoint missing");
-        let mut out = vec![0f32; self.elems];
-        match &self.slots[layer] {
-            Slot::Host(region) => f16_bytes_to_f32s(region.as_slice(), &mut out),
-            Slot::Ssd { key } => {
-                let mut bytes = vec![0u8; self.elems * 2];
-                self.engine.read(key, &mut bytes)?;
+        anyhow::ensure!(
+            !matches!(self.slots[layer], Slot::Empty),
+            "layer {layer} checkpoint missing"
+        );
+        let slot = std::mem::replace(&mut self.slots[layer], Slot::Empty);
+        // compute-side f32 copy: drawn from the SwapBuf scratch tier —
+        // the pool the trainer reclaims spent kernel arguments into —
+        // so steady-state fetches recycle instead of allocating
+        let mut out = self.arena.take_f32(self.elems, Cat::SwapBuf);
+        match slot {
+            Slot::Empty => unreachable!("checked above"),
+            Slot::Host(lease) => {
+                f16_bytes_to_f32s(lease.as_slice(), &mut out);
+                self.host_bytes_live -= self.bytes_per;
+                // lease drops here: the host slot returns to the arena
+                // for reuse by a later offload
+            }
+            Slot::Ssd { key, pending_write } => {
+                let handle = match self.prefetched.take() {
+                    Some((l, h)) if l == layer => h,
+                    other => {
+                        self.prefetched = other;
+                        self.spawn_read(key, pending_write)
+                    }
+                };
+                let bytes = self.await_read(handle)?;
                 f16_bytes_to_f32s(&bytes, &mut out);
+                self.arena.put_bytes(bytes, Cat::ActCkpt);
             }
         }
-        self.occupied[layer] = false;
+        self.maybe_prefetch(layer);
         Ok(out)
+    }
+
+    /// Seconds the caller blocked inside [`Self::fetch`] waiting on
+    /// spill I/O (the stall the prefetch could not hide).
+    pub fn wait_secs(&self) -> f64 {
+        self.wait_ns as f64 / 1e9
+    }
+
+    /// Queue a read of `key`, chained after its pending write when one
+    /// is still in flight (read-after-write on the executor, off the
+    /// compute thread).
+    fn spawn_read(
+        &self,
+        key: String,
+        pending_write: Option<IoHandle<Vec<u8>>>,
+    ) -> IoHandle<Vec<u8>> {
+        let mut buf = self.arena.take_bytes(self.bytes_per, Cat::ActCkpt);
+        let (completer, handle) = IoHandle::pair();
+        let eng = Arc::clone(self.aio.engine());
+        let arena = Arc::clone(&self.arena);
+        self.aio.executor().submit(move || {
+            if let Some(w) = pending_write {
+                match w.wait() {
+                    Ok(spent) => arena.put_bytes(spent, Cat::ActCkpt),
+                    Err(e) => {
+                        completer.complete(Err(e));
+                        return;
+                    }
+                }
+            }
+            let res = eng.read(&key, &mut buf).map(move |()| buf);
+            completer.complete(res);
+        });
+        handle
+    }
+
+    fn await_read(&mut self, h: IoHandle<Vec<u8>>) -> anyhow::Result<Vec<u8>> {
+        let t0 = Instant::now();
+        let r = h.wait();
+        self.wait_ns += t0.elapsed().as_nanos() as u64;
+        r
+    }
+
+    /// Start streaming the next spilled checkpoint below `below` —
+    /// backward-pass fetch order is descending, so that is the one the
+    /// compute thread will want next.
+    fn maybe_prefetch(&mut self, below: usize) {
+        if self.prefetched.is_some() {
+            return;
+        }
+        for l in (0..below).rev() {
+            if !matches!(self.slots[l], Slot::Ssd { .. }) {
+                continue;
+            }
+            let slot = std::mem::replace(&mut self.slots[l], Slot::Empty);
+            let Slot::Ssd { key, pending_write } = slot else {
+                unreachable!("checked above")
+            };
+            let h = self.spawn_read(key.clone(), pending_write);
+            self.slots[l] = Slot::Ssd { key, pending_write: None };
+            self.prefetched = Some((l, h));
+            return;
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pinned::{AlignedAllocator, MemoryTracker, Mode};
-    use crate::ssd::DirectEngine;
+    use crate::bufpool::test_util::test_arena;
+    use crate::pinned::{AlignedAllocator, ArenaConfig, MemoryTracker, Mode};
+    use crate::ssd::{DirectEngine, NvmeEngine};
 
-    fn mk(budget: usize) -> (SpillingActivationStore, std::path::PathBuf, Arc<MemoryTracker>) {
-        let dir =
-            std::env::temp_dir().join(format!("ma-spill-{budget}-{}", std::process::id()));
+    fn mk(
+        budget: usize,
+    ) -> (SpillingActivationStore, std::path::PathBuf, Arc<MemoryTracker>, Arc<PinnedArena>)
+    {
+        let dir = std::env::temp_dir()
+            .join(format!("ma-spill-{budget}-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let engine: Arc<dyn NvmeEngine> =
             Arc::new(DirectEngine::new(&dir, 1, 1 << 24, 1).unwrap());
-        let tracker = Arc::new(MemoryTracker::new());
-        let alloc = AlignedAllocator::new(Mode::Real, tracker.clone());
+        let arena = test_arena(Mode::Real);
+        let tracker = Arc::clone(arena.tracker());
+        let aio = AsyncEngine::new(engine, 2);
         let store =
-            SpillingActivationStore::new(8, 1024, budget, &Arc::clone(&alloc), engine);
-        (store, dir, tracker)
+            SpillingActivationStore::new(8, 1024, budget, Arc::clone(&arena), aio);
+        (store, dir, tracker, arena)
     }
 
     #[test]
     fn splits_host_and_ssd_by_budget() {
-        // 1024 elems * 2B = 2 KiB/slot; budget 3 slots' worth (rounded
-        // up to pages by the allocator, budget math uses raw bytes)
-        let (store, dir, tracker) = mk(3 * 2048);
+        // 1024 elems * 2B = 2 KiB/slot; budget 3 slots' worth (leases
+        // are page-rounded by the arena, budget math uses raw bytes)
+        let (mut store, dir, tracker, _arena) = mk(3 * 2048);
+        for layer in 0..8 {
+            store.offload(layer, &vec![0.5f32; 1024]).unwrap();
+        }
         assert_eq!(store.host_slots, 3);
         assert_eq!(store.spilled_slots, 5);
-        assert!(tracker.peak(crate::pinned::Cat::ActCkpt) >= 3 * 2048);
+        assert!(tracker.peak(Cat::ActCkpt) >= 3 * 2048);
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn roundtrip_through_both_tiers() {
-        let (mut store, dir, _) = mk(2 * 2048);
+        let (mut store, dir, _, _) = mk(2 * 2048);
         for layer in 0..8 {
             // f16-exact values: integers below 2048
             let h: Vec<f32> = (0..1024).map(|i| (layer + i) as f32).collect();
@@ -134,25 +260,76 @@ mod tests {
             assert_eq!(h[0], layer as f32, "layer {layer}");
             assert_eq!(h[1023], (layer + 1023) as f32);
         }
+        // the prefetch window only ever held one in-flight read, and
+        // every stall was attributed
+        assert!(store.wait_secs() >= 0.0);
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn zero_budget_spills_everything() {
-        let (mut store, dir, tracker) = mk(0);
-        assert_eq!(store.host_slots, 0);
+        let (mut store, dir, tracker, arena) = mk(0);
         let h = vec![1.5f32; 1024];
         store.offload(0, &h).unwrap();
+        assert_eq!(store.host_slots, 0);
+        assert_eq!(store.spilled_slots, 1);
         assert_eq!(store.fetch(0).unwrap()[0], 1.5);
-        assert_eq!(tracker.peak(crate::pinned::Cat::ActCkpt), 0);
+        // no pinned checkpoint slot was ever leased; the only ActCkpt
+        // charge is recycled spill staging (bounded by two buffers)
+        assert_eq!(arena.watermark(Cat::ActCkpt).requested_peak, 0);
+        assert!(tracker.peak(Cat::ActCkpt) <= 2 * 2048);
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn double_offload_rejected() {
-        let (mut store, dir, _) = mk(1 << 20);
+        let (mut store, dir, _, _) = mk(1 << 20);
         store.offload(2, &vec![0.0; 1024]).unwrap();
         assert!(store.offload(2, &vec![0.0; 1024]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fetched_host_slot_is_reusable() {
+        // budget of exactly one slot: offload → fetch → offload again
+        // must land on the host both times, recycling the same lease
+        // through the arena
+        let (mut store, dir, _, arena) = mk(2048);
+        store.offload(0, &vec![1.0f32; 1024]).unwrap();
+        assert_eq!(store.host_slots, 1);
+        assert_eq!(store.fetch(0).unwrap()[0], 1.0);
+        store.offload(1, &vec![2.0f32; 1024]).unwrap();
+        assert_eq!(store.host_slots, 2, "freed budget not reused");
+        assert_eq!(store.spilled_slots, 0);
+        // one page of ActCkpt backing total: the second offload
+        // recycled the first slot's extent
+        assert_eq!(arena.watermark(Cat::ActCkpt).charged_peak, 4096);
+        assert_eq!(store.fetch(1).unwrap()[0], 2.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn arena_budget_refusal_degrades_to_spill() {
+        // the arena cap (not the store budget) is the limiter here
+        let dir = std::env::temp_dir().join(format!("ma-spill-cap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let engine: Arc<dyn NvmeEngine> =
+            Arc::new(DirectEngine::new(&dir, 1, 1 << 24, 1).unwrap());
+        let tracker = Arc::new(MemoryTracker::new());
+        let alloc = AlignedAllocator::new(Mode::Real, tracker);
+        let arena = PinnedArena::new(
+            Arc::new(alloc),
+            ArenaConfig { budget_bytes: Some(4096), ..Default::default() },
+        );
+        let aio = AsyncEngine::new(engine, 1);
+        let mut store =
+            SpillingActivationStore::new(4, 1024, usize::MAX, Arc::clone(&arena), aio);
+        store.offload(0, &vec![1.0f32; 1024]).unwrap(); // fills the 4 KiB cap
+        store.offload(1, &vec![2.0f32; 1024]).unwrap(); // must spill
+        assert_eq!(store.host_slots, 1);
+        assert_eq!(store.spilled_slots, 1);
+        assert_eq!(store.fetch(1).unwrap()[0], 2.0);
+        assert_eq!(store.fetch(0).unwrap()[0], 1.0);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -28,7 +28,10 @@
 //! drivers produce bit-identical state: same reads, same arithmetic,
 //! same writes, only reordered in time across distinct keys.
 
+use std::sync::Arc;
+
 use crate::dtype::DType;
+use crate::pinned::{Cat, PinnedArena};
 use crate::ssd::{AsyncEngine, IoHandle, NvmeEngine};
 
 /// Optimizer state storage precision (paper §VI-B-3a).
@@ -162,7 +165,7 @@ impl OptimState {
 
     /// Queue async reads for this group's (master, m, v), reusing
     /// buffers from `scratch` when available.
-    pub fn submit_fetch(&self, aio: &AsyncEngine, scratch: &mut StateScratch) -> StateFetch {
+    pub fn submit_fetch(&self, aio: &AsyncEngine, scratch: &StateScratch) -> StateFetch {
         let [k_p, k_m, k_v] = state_keys(&self.group);
         let n = self.numel;
         let inner = match self.dtype {
@@ -294,46 +297,46 @@ pub struct StateWriteback {
 impl StateWriteback {
     /// Drain all writes; buffers go back to `scratch` for the next
     /// generation.
-    pub fn wait(self, scratch: &mut StateScratch) -> anyhow::Result<()> {
+    pub fn wait(self, scratch: &StateScratch) -> anyhow::Result<()> {
         for h in self.f32s {
-            scratch.f32s.push(h.wait()?);
+            scratch.put_f32(h.wait()?);
         }
         for h in self.bytes {
-            scratch.bytes.push(h.wait()?);
+            scratch.put_bytes(h.wait()?);
         }
         Ok(())
     }
 }
 
-/// Free-lists reused across pipeline generations (two generations in
-/// steady state — the "double buffer").
-#[derive(Default)]
+/// Staging-buffer recycler for the double-buffered swap: a facade over
+/// the arena's scratch tier under `Cat::OptimBuf`, so the two
+/// generations of (master, m, v) buffers alive in steady state sit on
+/// the shared ledger and inside the pinned budget — and survive across
+/// steps (the arena pool outlives any one `step_groups_pipelined`
+/// call).
 pub struct StateScratch {
-    f32s: Vec<Vec<f32>>,
-    bytes: Vec<Vec<u8>>,
+    arena: Arc<PinnedArena>,
 }
 
 impl StateScratch {
-    fn take_f32(&mut self, n: usize) -> Vec<f32> {
-        match self.f32s.pop() {
-            Some(mut v) => {
-                v.clear();
-                v.resize(n, 0.0);
-                v
-            }
-            None => vec![0f32; n],
-        }
+    pub fn new(arena: Arc<PinnedArena>) -> Self {
+        Self { arena }
     }
 
-    fn take_bytes(&mut self, n: usize) -> Vec<u8> {
-        match self.bytes.pop() {
-            Some(mut v) => {
-                v.clear();
-                v.resize(n, 0);
-                v
-            }
-            None => vec![0u8; n],
-        }
+    fn take_f32(&self, n: usize) -> Vec<f32> {
+        self.arena.take_f32(n, Cat::OptimBuf)
+    }
+
+    fn take_bytes(&self, n: usize) -> Vec<u8> {
+        self.arena.take_bytes(n, Cat::OptimBuf)
+    }
+
+    fn put_f32(&self, v: Vec<f32>) {
+        self.arena.put_f32(v, Cat::OptimBuf)
+    }
+
+    fn put_bytes(&self, v: Vec<u8>) {
+        self.arena.put_bytes(v, Cat::OptimBuf)
     }
 }
 
@@ -348,9 +351,11 @@ pub struct PipelineStats {
 /// Double-buffered SSD-swapped AdamW over `groups`: while Adam runs on
 /// group k, group k+1's states stream in and group k-1's write-back
 /// drains.  `grads[i]` / `fp16_keys[i]` belong to `groups[i]`.
+/// Staging buffers lease-recycle through `arena` (`Cat::OptimBuf`).
 #[allow(clippy::too_many_arguments)]
 pub fn step_groups_pipelined(
     aio: &AsyncEngine,
+    arena: &Arc<PinnedArena>,
     groups: &[OptimState],
     grads: &[&[f32]],
     fp16_keys: &[String],
@@ -363,15 +368,15 @@ pub fn step_groups_pipelined(
         groups.len() == grads.len() && groups.len() == fp16_keys.len(),
         "groups/grads/keys length mismatch"
     );
-    let mut scratch = StateScratch::default();
+    let scratch = StateScratch::new(Arc::clone(arena));
     let mut stats = PipelineStats::default();
     let mut prev_wb: Option<StateWriteback> = None;
-    let mut next_fetch = groups.first().map(|g| g.submit_fetch(aio, &mut scratch));
+    let mut next_fetch = groups.first().map(|g| g.submit_fetch(aio, &scratch));
     for (k, st) in groups.iter().enumerate() {
         let fetch_k = next_fetch.take().expect("fetch scheduled for every group");
         // overlap: group k+1's reads start before we block on k's
         if let Some(nx) = groups.get(k + 1) {
-            next_fetch = Some(nx.submit_fetch(aio, &mut scratch));
+            next_fetch = Some(nx.submit_fetch(aio, &scratch));
         }
         let t0 = std::time::Instant::now();
         let mut bufs = fetch_k.wait()?;
@@ -384,14 +389,14 @@ pub fn step_groups_pipelined(
         // in-flight state memory to two generations
         if let Some(wb) = prev_wb.take() {
             let t0 = std::time::Instant::now();
-            wb.wait(&mut scratch)?;
+            wb.wait(&scratch)?;
             stats.wait_secs += t0.elapsed().as_secs_f64();
         }
         prev_wb = Some(st.submit_writeback(aio, bufs, fp16, &fp16_keys[k]));
     }
     if let Some(wb) = prev_wb {
         let t0 = std::time::Instant::now();
-        wb.wait(&mut scratch)?;
+        wb.wait(&scratch)?;
         stats.wait_secs += t0.elapsed().as_secs_f64();
     }
     Ok(stats)
@@ -400,7 +405,9 @@ pub fn step_groups_pipelined(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bufpool::test_util::test_arena;
     use crate::optimizer::AdamParams;
+    use crate::pinned::Mode;
     use crate::ssd::DirectEngine;
 
     fn engine(tag: &str) -> (DirectEngine, std::path::PathBuf) {
@@ -408,6 +415,10 @@ mod tests {
             std::env::temp_dir().join(format!("ma-opt-{tag}-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         (DirectEngine::new(&dir, 1, 1 << 26, 1).unwrap(), dir)
+    }
+
+    fn arena() -> Arc<PinnedArena> {
+        test_arena(Mode::Real)
     }
 
     #[test]
@@ -463,7 +474,6 @@ mod tests {
 
     #[test]
     fn pipelined_groups_bit_identical_to_sequential() {
-        use std::sync::Arc;
         for dtype in [StateDtype::F32, StateDtype::BF16] {
             let (eng_a, dir_a) = engine(&format!("seq-{dtype:?}"));
             let (eng_b, dir_b) = engine(&format!("pipe-{dtype:?}"));
@@ -481,6 +491,7 @@ mod tests {
             }
             let eng_b: Arc<dyn crate::ssd::NvmeEngine> = Arc::new(eng_b);
             let aio = AsyncEngine::new(Arc::clone(&eng_b), 3);
+            let arena = arena();
             for t in 1..=4u64 {
                 let grads: Vec<Vec<f32>> = sizes
                     .iter()
@@ -494,9 +505,15 @@ mod tests {
                 let keys: Vec<String> =
                     (0..sizes.len()).map(|g| format!("g{g}/fp16")).collect();
                 step_groups_pipelined(
-                    &aio, &states_b, &grad_refs, &keys, t, 2.0, &hp, 1,
+                    &aio, &arena, &states_b, &grad_refs, &keys, t, 2.0, &hp, 1,
                 )
                 .unwrap();
+            }
+            // staging buffers recycled through the arena between
+            // generations (and sit on its ledger while idle)
+            match dtype {
+                StateDtype::F32 => assert!(arena.pooled_f32(Cat::OptimBuf) > 0),
+                StateDtype::BF16 => assert!(arena.pooled_byte_vecs(Cat::OptimBuf) > 0),
             }
             // every stored artifact must match byte-for-byte
             for (g, n) in sizes.iter().enumerate() {
@@ -523,7 +540,6 @@ mod tests {
 
     #[test]
     fn pipelined_write_errors_surface() {
-        use std::sync::Arc;
         let (eng, dir) = engine("pipe-err");
         let hp = AdamParams::default();
         let st =
@@ -534,6 +550,7 @@ mod tests {
         let bad: &[f32] = &[0.0; 4];
         let r = step_groups_pipelined(
             &aio,
+            &arena(),
             std::slice::from_ref(&st),
             &[bad],
             &["g0/fp16".to_string()],

@@ -48,18 +48,7 @@ impl AlignedAllocator {
 
         let data = match self.mode {
             Mode::Virtual => RegionData::Virtual,
-            Mode::Real => {
-                let mut ptr: *mut libc::c_void = std::ptr::null_mut();
-                // SAFETY: standard posix_memalign call; checked result.
-                let rc = unsafe {
-                    libc::posix_memalign(&mut ptr, DMA_ALIGN, reserved)
-                };
-                assert_eq!(rc, 0, "posix_memalign failed for {reserved} bytes");
-                // zero-init (pinned buffers are staging space; make
-                // reads deterministic)
-                unsafe { std::ptr::write_bytes(ptr.cast::<u8>(), 0, reserved) };
-                RegionData::Aligned { ptr: ptr.cast::<u8>() }
-            }
+            Mode::Real => RegionData::Aligned { ptr: super::memalign_zeroed(reserved) },
         };
 
         let tracker = Arc::clone(&self.tracker);
@@ -91,6 +80,14 @@ impl AlignedAllocator {
 impl HostAllocator for Arc<AlignedAllocator> {
     fn alloc(&self, bytes: usize, cat: Cat) -> HostRegion {
         self.alloc_impl(bytes, cat)
+    }
+
+    fn reserve_size(&self, bytes: usize) -> usize {
+        round_page(bytes.max(1))
+    }
+
+    fn reclaimable(&self) -> bool {
+        true // frees return to the OS immediately (§IV-C)
     }
 
     fn reserved_bytes(&self) -> usize {

@@ -1,0 +1,1035 @@
+//! The unified pinned-memory arena: one budget-enforced lease tier
+//! under every host-memory consumer.
+//!
+//! MemAscend's §III-B diagnosis is that system-memory waste comes from
+//! *scattered, policy-blind* pinned allocation — five independent call
+//! sites each pinning its own buffers means no component ever sees
+//! global pressure.  The arena turns the paper's memory policy into an
+//! enforced invariant:
+//!
+//! ```text
+//!   bufpool  gradbuf  spill  swapper-scratch  optimizer-staging
+//!      │        │       │          │                │
+//!      └────────┴───────┴────┬─────┴────────────────┘
+//!                            ▼  lease(bytes, cat) / take_*/put_*
+//!                     [ PinnedArena ]──── budget cap, per-Cat
+//!                            │            watermarks, overlap-free
+//!                            ▼            offset/len leases
+//!                  HostAllocator policy (pow2-caching | aligned)
+//! ```
+//!
+//! Two tiers:
+//!
+//! - **Leases** ([`PinnedArena::lease`]): long-lived, exactly-placed
+//!   regions.  Each category owns a set of *segments* — exactly-sized
+//!   backing regions obtained from the policy allocator — and a lease
+//!   is an (offset, len) carve out of one, page-granular so every
+//!   lease is DMA-aligned and viewable as `&[f32]`.  Releasing a lease
+//!   (RAII `Drop`) returns its extent for reuse; repeated same-shape
+//!   leases therefore recycle the same backing pages (the shape-class
+//!   behaviour the adaptive pool relies on), and [`PinnedArena::trim`]
+//!   drops fully-idle segments back to the allocator.
+//! - **Scratch vectors** ([`PinnedArena::take_f32`] /
+//!   [`PinnedArena::put_f32`] and byte variants): the bounded
+//!   recycling pools behind the swapper's `F32Scratch` and the
+//!   optimizer's staging buffers.  Pooled (idle) bytes are charged to
+//!   the ledger and count against the budget; handing a vector out
+//!   un-charges it (it becomes transient compute memory the kernel
+//!   call owns).
+//!
+//! The budget is a cap on everything the arena holds reserved —
+//! segment bytes *including allocator-policy overhead* plus pooled
+//! scratch.  A lease that cannot fit first triggers an implicit trim;
+//! if that is not enough the caller gets a structured
+//! [`ArenaError::BudgetExceeded`], never an abort — callers degrade
+//! (e.g. the activation store spills to SSD).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use super::{Cat, HostAllocator, HostRegion, MemoryTracker};
+
+/// Carve granularity: every lease offset and padded length is a
+/// multiple of this, so leases inherit the segment base's DMA
+/// alignment (and f32 alignment) for free.
+pub const LEASE_ALIGN: usize = 4096;
+
+fn pad(bytes: usize) -> usize {
+    bytes.max(1).div_ceil(LEASE_ALIGN) * LEASE_ALIGN
+}
+
+/// Structured arena failures — returned, never panicked, so callers
+/// can degrade (spill, fall back, surface the error).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArenaError {
+    /// Granting the lease would push total reserved bytes past the cap
+    /// (after an implicit trim of idle segments and pooled scratch).
+    BudgetExceeded {
+        cat: Cat,
+        /// Bytes the caller asked for.
+        requested: usize,
+        /// Bytes a fresh backing region would reserve under the policy.
+        would_reserve: usize,
+        /// Bytes the arena currently holds reserved.
+        in_use: usize,
+        budget: usize,
+    },
+}
+
+impl fmt::Display for ArenaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArenaError::BudgetExceeded { cat, requested, would_reserve, in_use, budget } => {
+                write!(
+                    f,
+                    "pinned budget exceeded: lease of {requested} B ({would_reserve} B \
+                     reserved) under '{}' with {in_use} of {budget} B in use",
+                    cat.name()
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArenaError {}
+
+#[derive(Debug, Clone)]
+pub struct ArenaConfig {
+    /// Cap on total arena-reserved bytes (segments incl. policy
+    /// overhead + pooled scratch). `None` = unbounded.
+    pub budget_bytes: Option<usize>,
+    /// Scratch-pool bounds, per category: max vectors kept idle…
+    pub max_pooled_vecs: usize,
+    /// …max idle bytes…
+    pub max_pooled_vec_bytes: usize,
+    /// …and the floor below which a vector is not worth a slot
+    /// (without it, tiny returns — e.g. a 1-element loss-scale vec —
+    /// would fill the count bound and disable recycling of real
+    /// buffers).
+    pub min_pooled_vec_bytes: usize,
+}
+
+impl Default for ArenaConfig {
+    fn default() -> Self {
+        Self {
+            budget_bytes: None,
+            max_pooled_vecs: 64,
+            max_pooled_vec_bytes: 64 << 20,
+            min_pooled_vec_bytes: 256,
+        }
+    }
+}
+
+/// One exactly-sized backing region of a category.
+struct Segment {
+    /// Kept alive for the ledger + the release hook; never sliced
+    /// directly once `base` is taken (leases own disjoint views).
+    region: HostRegion,
+    base: *mut u8,
+    len: usize,
+    /// Sorted, coalesced free extents (offset, len).
+    free: Vec<(usize, usize)>,
+    live: usize,
+}
+
+// SAFETY: `base` points into `region`'s uniquely-owned allocation and
+// is only dereferenced through non-overlapping leases.
+unsafe impl Send for Segment {}
+
+#[derive(Default)]
+struct VecPool {
+    f32s: Vec<Vec<f32>>,
+    bytes: Vec<Vec<u8>>,
+    pooled_bytes: usize,
+}
+
+/// Per-category watermarks. `charged` mirrors what the arena put on
+/// the [`MemoryTracker`] ledger under this category (segment sizes +
+/// pooled scratch); `requested` is the live leased demand.  When the
+/// arena is the category's sole ledger client, `charged_peak` matches
+/// `MemoryTracker::peak(cat)` bit-for-bit — the invariant
+/// `accounting::sysmem` asserts.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CatWatermark {
+    pub charged: usize,
+    pub charged_peak: usize,
+    pub requested: usize,
+    pub requested_peak: usize,
+}
+
+/// Whole-arena utilization snapshot (Fig. 11-style reporting).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ArenaStats {
+    /// Bytes currently reserved (segments incl. policy overhead +
+    /// pooled scratch).
+    pub reserved_bytes: usize,
+    pub peak_reserved: usize,
+    /// Live leased bytes (the actual need).
+    pub requested_bytes: usize,
+    pub peak_requested: usize,
+    pub leases: u64,
+    pub releases: u64,
+    /// Leases served from an existing free extent (no fresh pin).
+    pub recycled: u64,
+    pub fresh_segments: u64,
+}
+
+impl ArenaStats {
+    /// 1 − actual-need / reserved (internal fragmentation right now).
+    pub fn fragmentation(&self) -> f64 {
+        if self.reserved_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.requested_bytes as f64 / self.reserved_bytes as f64
+    }
+
+    /// 1 − peak-need / peak-reserved.
+    pub fn peak_fragmentation(&self) -> f64 {
+        if self.peak_reserved == 0 {
+            return 0.0;
+        }
+        1.0 - self.peak_requested as f64 / self.peak_reserved as f64
+    }
+}
+
+#[derive(Default)]
+struct State {
+    /// Segment slots per category (index-stable: trim leaves `None`).
+    segments: BTreeMap<Cat, Vec<Option<Segment>>>,
+    pools: BTreeMap<Cat, VecPool>,
+    cats: BTreeMap<Cat, CatWatermark>,
+    stats: ArenaStats,
+}
+
+struct Inner {
+    alloc: Arc<dyn HostAllocator>,
+    tracker: Arc<MemoryTracker>,
+    cfg: ArenaConfig,
+    state: Mutex<State>,
+}
+
+/// The budget-enforced lease layer. Cheap to share as `Arc<PinnedArena>`.
+pub struct PinnedArena {
+    inner: Arc<Inner>,
+}
+
+/// RAII view of an (offset, len) span inside one arena segment.
+/// Dropping it returns the extent for reuse.
+pub struct Lease {
+    inner: Arc<Inner>,
+    cat: Cat,
+    seg: usize,
+    offset: usize,
+    padded: usize,
+    requested: usize,
+    /// Segment base (null in Virtual mode).
+    base: *mut u8,
+}
+
+// SAFETY: a lease has exclusive ownership of its [offset, offset+padded)
+// span — the extent allocator never hands out overlapping ranges — and
+// the backing segment outlives it (`inner` is kept alive and segments
+// with `live > 0` are never trimmed).  `&self` access is read-only.
+unsafe impl Send for Lease {}
+unsafe impl Sync for Lease {}
+
+impl Lease {
+    pub fn cat(&self) -> Cat {
+        self.cat
+    }
+
+    /// Bytes the caller asked for (the visible span).
+    pub fn bytes_requested(&self) -> usize {
+        self.requested
+    }
+
+    /// Page-padded bytes the lease occupies inside its segment.
+    pub fn bytes_padded(&self) -> usize {
+        self.padded
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        self.base.is_null()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        if self.base.is_null() {
+            return &[];
+        }
+        // SAFETY: see the Send/Sync justification above.
+        unsafe { std::slice::from_raw_parts(self.base.add(self.offset), self.requested) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        if self.base.is_null() {
+            return &mut [];
+        }
+        // SAFETY: exclusive (&mut self) access to an exclusive span.
+        unsafe { std::slice::from_raw_parts_mut(self.base.add(self.offset), self.requested) }
+    }
+
+    /// f32 view of the span (requires a multiple-of-4 request; the
+    /// 4096-aligned base + page-aligned offset guarantee alignment).
+    pub fn as_f32(&self) -> &[f32] {
+        if self.base.is_null() {
+            return &[];
+        }
+        debug_assert_eq!(self.requested % 4, 0, "f32 view of a non-f32-sized lease");
+        // SAFETY: aligned (base and offset are 4096-multiples), in
+        // bounds, exclusive span.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.base.add(self.offset).cast::<f32>(),
+                self.requested / 4,
+            )
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        if self.base.is_null() {
+            return &mut [];
+        }
+        debug_assert_eq!(self.requested % 4, 0, "f32 view of a non-f32-sized lease");
+        // SAFETY: as above, plus &mut self exclusivity.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.base.add(self.offset).cast::<f32>(),
+                self.requested / 4,
+            )
+        }
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock().unwrap();
+        {
+            let seg = st
+                .segments
+                .get_mut(&self.cat)
+                .and_then(|v| v[self.seg].as_mut())
+                .expect("lease outlived its segment");
+            seg.live -= 1;
+            insert_extent(&mut seg.free, self.offset, self.padded);
+        }
+        let cw = st.cats.get_mut(&self.cat).expect("category accounted");
+        cw.requested -= self.requested;
+        st.stats.requested_bytes -= self.requested;
+        st.stats.releases += 1;
+    }
+}
+
+/// Insert (off, len) into a sorted free list, coalescing neighbours.
+fn insert_extent(free: &mut Vec<(usize, usize)>, off: usize, len: usize) {
+    let i = free.partition_point(|&(o, _)| o < off);
+    free.insert(i, (off, len));
+    if i + 1 < free.len() && free[i].0 + free[i].1 == free[i + 1].0 {
+        let next = free.remove(i + 1);
+        free[i].1 += next.1;
+    }
+    if i > 0 && free[i - 1].0 + free[i - 1].1 == free[i].0 {
+        let cur = free.remove(i);
+        free[i - 1].1 += cur.1;
+    }
+}
+
+impl PinnedArena {
+    pub fn new(alloc: Arc<dyn HostAllocator>, cfg: ArenaConfig) -> Arc<Self> {
+        let tracker = Arc::clone(alloc.tracker());
+        Arc::new(Self {
+            inner: Arc::new(Inner { alloc, tracker, cfg, state: Mutex::new(State::default()) }),
+        })
+    }
+
+    /// Lease `bytes` under `cat`.  Served from a recycled extent when
+    /// one fits (best-fit), else from a fresh exactly-sized segment —
+    /// which is where the budget is enforced.
+    pub fn lease(&self, bytes: usize, cat: Cat) -> Result<Lease, ArenaError> {
+        let padded = pad(bytes);
+        let inner = &self.inner;
+        let mut st = inner.state.lock().unwrap();
+
+        // best-fit over this category's free extents
+        let mut best: Option<(usize, usize, usize)> = None; // (seg, ext, ext_len)
+        if let Some(segs) = st.segments.get(&cat) {
+            for (si, slot) in segs.iter().enumerate() {
+                let Some(seg) = slot else { continue };
+                for (ei, &(_, elen)) in seg.free.iter().enumerate() {
+                    if elen >= padded && best.is_none_or(|(_, _, bl)| elen < bl) {
+                        best = Some((si, ei, elen));
+                    }
+                }
+            }
+        }
+        if let Some((si, ei, _)) = best {
+            let (offset, base) = {
+                let seg = st.segments.get_mut(&cat).unwrap()[si]
+                    .as_mut()
+                    .expect("best-fit segment present");
+                let (eoff, elen) = seg.free[ei];
+                if elen == padded {
+                    seg.free.remove(ei);
+                } else {
+                    seg.free[ei] = (eoff + padded, elen - padded);
+                }
+                seg.live += 1;
+                (eoff, seg.base)
+            };
+            st.stats.recycled += 1;
+            note_lease(&mut st, cat, bytes);
+            return Ok(Lease {
+                inner: Arc::clone(inner),
+                cat,
+                seg: si,
+                offset,
+                padded,
+                requested: bytes,
+                base,
+            });
+        }
+
+        // fresh segment, exactly sized to this request
+        let would_reserve = inner.alloc.reserve_size(padded);
+        if let Some(budget) = inner.cfg.budget_bytes {
+            // a request that can never fit must not wipe warm caches
+            if would_reserve > budget {
+                return Err(ArenaError::BudgetExceeded {
+                    cat,
+                    requested: bytes,
+                    would_reserve,
+                    in_use: st.stats.reserved_bytes,
+                    budget,
+                });
+            }
+            if st.stats.reserved_bytes + would_reserve > budget {
+                // targeted: free idle capacity only until this fits
+                trim_until(inner, &mut st, budget - would_reserve);
+                if st.stats.reserved_bytes + would_reserve > budget {
+                    return Err(ArenaError::BudgetExceeded {
+                        cat,
+                        requested: bytes,
+                        would_reserve,
+                        in_use: st.stats.reserved_bytes,
+                        budget,
+                    });
+                }
+            }
+        }
+        let region = inner.alloc.alloc(padded, cat);
+        let base = region.raw_base();
+        let reserved = region.bytes_reserved;
+        let seg = Segment { region, base, len: padded, free: Vec::new(), live: 1 };
+        let segs = st.segments.entry(cat).or_default();
+        let si = match segs.iter().position(|s| s.is_none()) {
+            Some(i) => i,
+            None => {
+                segs.push(None);
+                segs.len() - 1
+            }
+        };
+        segs[si] = Some(seg);
+        st.stats.fresh_segments += 1;
+        st.stats.reserved_bytes += reserved;
+        st.stats.peak_reserved = st.stats.peak_reserved.max(st.stats.reserved_bytes);
+        {
+            let cw = st.cats.entry(cat).or_default();
+            cw.charged += padded;
+            cw.charged_peak = cw.charged_peak.max(cw.charged);
+        }
+        note_lease(&mut st, cat, bytes);
+        Ok(Lease {
+            inner: Arc::clone(inner),
+            cat,
+            seg: si,
+            offset: 0,
+            padded,
+            requested: bytes,
+            base,
+        })
+    }
+
+    /// Drop all idle capacity: fully-free segments go back to the
+    /// allocator (when the policy reclaims frees) and pooled scratch
+    /// vectors are released.
+    pub fn trim(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        trim_until(&self.inner, &mut st, 0);
+    }
+
+    // ---- scratch-vector tier -------------------------------------------
+
+    /// Take an f32 vector of exactly `n` elements, recycled best-fit
+    /// from the category's pool when possible.  Handing a vector out
+    /// un-charges it from the ledger (it becomes transient compute
+    /// memory until [`Self::put_f32`] returns it).
+    pub fn take_f32(&self, n: usize, cat: Cat) -> Vec<f32> {
+        let inner = &self.inner;
+        let mut st = inner.state.lock().unwrap();
+        let taken = {
+            let pool = st.pools.entry(cat).or_default();
+            let mut best: Option<(usize, usize)> = None; // (index, capacity)
+            for (i, v) in pool.f32s.iter().enumerate() {
+                let c = v.capacity();
+                if c >= n && best.is_none_or(|(_, bc)| c < bc) {
+                    best = Some((i, c));
+                }
+            }
+            best.map(|(i, c)| (pool.f32s.swap_remove(i), c * 4))
+        };
+        match taken {
+            Some((mut v, bytes)) => {
+                uncharge_pooled(inner, &mut st, cat, bytes);
+                drop(st);
+                v.clear();
+                v.resize(n, 0.0);
+                v
+            }
+            None => {
+                drop(st);
+                vec![0f32; n]
+            }
+        }
+    }
+
+    /// Return a spent f32 vector to the category's pool.  Dropped
+    /// (not pooled) when below the size floor, past the pool bounds,
+    /// or when pooling it would exceed the budget.
+    pub fn put_f32(&self, v: Vec<f32>, cat: Cat) {
+        let bytes = v.capacity() * 4;
+        let inner = &self.inner;
+        if bytes < inner.cfg.min_pooled_vec_bytes {
+            return;
+        }
+        let mut st = inner.state.lock().unwrap();
+        if !pool_admits(inner, &st, cat, bytes) {
+            return;
+        }
+        st.pools.entry(cat).or_default().f32s.push(v);
+        charge_pooled(inner, &mut st, cat, bytes);
+    }
+
+    /// [`Self::take_f32`] for byte buffers.
+    pub fn take_bytes(&self, n: usize, cat: Cat) -> Vec<u8> {
+        let inner = &self.inner;
+        let mut st = inner.state.lock().unwrap();
+        let taken = {
+            let pool = st.pools.entry(cat).or_default();
+            let mut best: Option<(usize, usize)> = None;
+            for (i, v) in pool.bytes.iter().enumerate() {
+                let c = v.capacity();
+                if c >= n && best.is_none_or(|(_, bc)| c < bc) {
+                    best = Some((i, c));
+                }
+            }
+            best.map(|(i, c)| (pool.bytes.swap_remove(i), c))
+        };
+        match taken {
+            Some((mut v, bytes)) => {
+                uncharge_pooled(inner, &mut st, cat, bytes);
+                drop(st);
+                v.clear();
+                v.resize(n, 0);
+                v
+            }
+            None => {
+                drop(st);
+                vec![0u8; n]
+            }
+        }
+    }
+
+    /// [`Self::put_f32`] for byte buffers.
+    pub fn put_bytes(&self, v: Vec<u8>, cat: Cat) {
+        let bytes = v.capacity();
+        let inner = &self.inner;
+        if bytes < inner.cfg.min_pooled_vec_bytes {
+            return;
+        }
+        let mut st = inner.state.lock().unwrap();
+        if !pool_admits(inner, &st, cat, bytes) {
+            return;
+        }
+        st.pools.entry(cat).or_default().bytes.push(v);
+        charge_pooled(inner, &mut st, cat, bytes);
+    }
+
+    /// Idle f32 vectors pooled under `cat` (test/introspection hook).
+    pub fn pooled_f32(&self, cat: Cat) -> usize {
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .pools
+            .get(&cat)
+            .map_or(0, |p| p.f32s.len())
+    }
+
+    /// Idle byte vectors pooled under `cat`.
+    pub fn pooled_byte_vecs(&self, cat: Cat) -> usize {
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .pools
+            .get(&cat)
+            .map_or(0, |p| p.bytes.len())
+    }
+
+    // ---- introspection -------------------------------------------------
+
+    pub fn stats(&self) -> ArenaStats {
+        self.inner.state.lock().unwrap().stats
+    }
+
+    pub fn watermark(&self, cat: Cat) -> CatWatermark {
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .cats
+            .get(&cat)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Per-category watermarks for every category the arena touched.
+    pub fn watermarks(&self) -> Vec<(Cat, CatWatermark)> {
+        let st = self.inner.state.lock().unwrap();
+        Cat::ALL
+            .iter()
+            .filter_map(|c| st.cats.get(c).map(|w| (*c, *w)))
+            .collect()
+    }
+
+    pub fn budget_bytes(&self) -> Option<usize> {
+        self.inner.cfg.budget_bytes
+    }
+
+    pub fn tracker(&self) -> &Arc<MemoryTracker> {
+        &self.inner.tracker
+    }
+}
+
+fn note_lease(st: &mut State, cat: Cat, bytes: usize) {
+    st.stats.leases += 1;
+    st.stats.requested_bytes += bytes;
+    st.stats.peak_requested = st.stats.peak_requested.max(st.stats.requested_bytes);
+    let cw = st.cats.entry(cat).or_default();
+    cw.requested += bytes;
+    cw.requested_peak = cw.requested_peak.max(cw.requested);
+}
+
+fn pool_admits(inner: &Inner, st: &State, cat: Cat, bytes: usize) -> bool {
+    if let Some(pool) = st.pools.get(&cat) {
+        if pool.f32s.len() + pool.bytes.len() >= inner.cfg.max_pooled_vecs
+            || pool.pooled_bytes + bytes > inner.cfg.max_pooled_vec_bytes
+        {
+            return false;
+        }
+    } else if bytes > inner.cfg.max_pooled_vec_bytes {
+        return false;
+    }
+    match inner.cfg.budget_bytes {
+        Some(budget) => st.stats.reserved_bytes + bytes <= budget,
+        None => true,
+    }
+}
+
+fn charge_pooled(inner: &Inner, st: &mut State, cat: Cat, bytes: usize) {
+    st.pools.get_mut(&cat).unwrap().pooled_bytes += bytes;
+    st.stats.reserved_bytes += bytes;
+    st.stats.peak_reserved = st.stats.peak_reserved.max(st.stats.reserved_bytes);
+    let cw = st.cats.entry(cat).or_default();
+    cw.charged += bytes;
+    cw.charged_peak = cw.charged_peak.max(cw.charged);
+    inner.tracker.alloc(cat, bytes as u64);
+}
+
+fn uncharge_pooled(inner: &Inner, st: &mut State, cat: Cat, bytes: usize) {
+    st.pools.get_mut(&cat).unwrap().pooled_bytes -= bytes;
+    st.stats.reserved_bytes -= bytes;
+    st.cats.get_mut(&cat).unwrap().charged -= bytes;
+    inner.tracker.free(cat, bytes as u64);
+}
+
+/// Free idle capacity until `reserved_bytes <= target`, stopping as
+/// soon as the target is met (pass 0 for a full trim).  Fully-idle
+/// segments go first — but only when the allocator actually reclaims
+/// frees; under the pow2-caching policy freed blocks would just move
+/// to the allocator's cache while staying on the ledger, so segments
+/// are kept and the arena's watermarks remain an exact ledger mirror
+/// (and the budget correctly reflects that the reserve is monotone
+/// there).  Pooled scratch vectors (arena-charged, always reversible)
+/// go second.
+fn trim_until(inner: &Inner, st: &mut State, target: usize) {
+    if inner.alloc.reclaimable() {
+        let seg_cats: Vec<Cat> = st.segments.keys().copied().collect();
+        for cat in seg_cats {
+            let n_slots = st.segments.get(&cat).map_or(0, |v| v.len());
+            for i in 0..n_slots {
+                if st.stats.reserved_bytes <= target {
+                    return;
+                }
+                let taken = {
+                    let slot = &mut st.segments.get_mut(&cat).unwrap()[i];
+                    if matches!(slot, Some(s) if s.live == 0) {
+                        slot.take()
+                    } else {
+                        None
+                    }
+                };
+                if let Some(seg) = taken {
+                    st.stats.reserved_bytes -= seg.region.bytes_reserved;
+                    st.cats.get_mut(&cat).unwrap().charged -= seg.len;
+                    // seg drops here: the region's release hook
+                    // un-charges the ledger
+                }
+            }
+        }
+    }
+    let pool_cats: Vec<Cat> = st.pools.keys().copied().collect();
+    for cat in pool_cats {
+        loop {
+            if st.stats.reserved_bytes <= target {
+                return;
+            }
+            // evict one vector at a time, largest first, so a small
+            // overshoot does not wipe a warm pool
+            let freed = {
+                let pool = st.pools.get_mut(&cat).unwrap();
+                let f = pool
+                    .f32s
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, v)| v.capacity())
+                    .map(|(i, v)| (i, v.capacity() * 4));
+                let b = pool
+                    .bytes
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, v)| v.capacity())
+                    .map(|(i, v)| (i, v.capacity()));
+                match (f, b) {
+                    (Some((i, fb)), Some((j, bb))) => {
+                        if fb >= bb {
+                            pool.f32s.swap_remove(i);
+                            fb
+                        } else {
+                            pool.bytes.swap_remove(j);
+                            bb
+                        }
+                    }
+                    (Some((i, fb)), None) => {
+                        pool.f32s.swap_remove(i);
+                        fb
+                    }
+                    (None, Some((j, bb))) => {
+                        pool.bytes.swap_remove(j);
+                        bb
+                    }
+                    (None, None) => break,
+                }
+            };
+            st.pools.get_mut(&cat).unwrap().pooled_bytes -= freed;
+            st.stats.reserved_bytes -= freed;
+            st.cats.get_mut(&cat).unwrap().charged -= freed;
+            inner.tracker.free(cat, freed as u64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pinned::{AlignedAllocator, CachingAllocator, Mode};
+    use crate::prop_assert;
+    use crate::util::proptest::{check, Config};
+
+    fn arena(mode: Mode, budget: Option<usize>) -> Arc<PinnedArena> {
+        let tracker = Arc::new(MemoryTracker::new());
+        let alloc = AlignedAllocator::new(mode, tracker);
+        PinnedArena::new(
+            Arc::new(alloc),
+            ArenaConfig { budget_bytes: budget, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn lease_roundtrip_and_release() {
+        let a = arena(Mode::Real, None);
+        let mut l = a.lease(10_000, Cat::GradFlat).unwrap();
+        assert_eq!(l.bytes_requested(), 10_000);
+        assert_eq!(l.as_slice().len(), 10_000);
+        l.as_mut_slice()[9_999] = 7;
+        assert_eq!(l.as_slice()[9_999], 7);
+        let st = a.stats();
+        assert_eq!(st.requested_bytes, 10_000);
+        assert_eq!(st.fresh_segments, 1);
+        drop(l);
+        let st = a.stats();
+        assert_eq!(st.requested_bytes, 0);
+        // the segment stays cached for recycling until trim
+        assert!(st.reserved_bytes >= 10_000);
+        a.trim();
+        assert_eq!(a.stats().reserved_bytes, 0);
+        assert_eq!(a.tracker().current_total(), 0);
+    }
+
+    #[test]
+    fn freed_extents_recycle_without_fresh_pins() {
+        let a = arena(Mode::Real, None);
+        let l1 = a.lease(8192, Cat::ParamPool).unwrap();
+        drop(l1);
+        let _l2 = a.lease(4096, Cat::ParamPool).unwrap();
+        let _l3 = a.lease(4096, Cat::ParamPool).unwrap();
+        let st = a.stats();
+        assert_eq!(st.fresh_segments, 1, "both re-leases must carve the freed segment");
+        assert_eq!(st.recycled, 2);
+    }
+
+    #[test]
+    fn f32_view_is_aligned_and_writable() {
+        let a = arena(Mode::Real, None);
+        let mut l = a.lease(1024 * 4, Cat::OptimBuf).unwrap();
+        assert_eq!(l.as_f32().len(), 1024);
+        assert_eq!(l.as_f32().as_ptr() as usize % 4, 0);
+        l.as_f32_mut()[1023] = 1.5;
+        assert_eq!(l.as_f32()[1023], 1.5);
+        // the raw-byte view sees the same memory
+        assert_eq!(&l.as_slice()[1023 * 4..1024 * 4], 1.5f32.to_le_bytes());
+    }
+
+    #[test]
+    fn budget_cap_returns_structured_error() {
+        let a = arena(Mode::Virtual, Some(1 << 20));
+        let l1 = a.lease(512 << 10, Cat::ActCkpt).unwrap();
+        let err = a.lease(1 << 20, Cat::ActCkpt).unwrap_err();
+        match err {
+            ArenaError::BudgetExceeded { cat, requested, budget, .. } => {
+                assert_eq!(cat, Cat::ActCkpt);
+                assert_eq!(requested, 1 << 20);
+                assert_eq!(budget, 1 << 20);
+            }
+        }
+        // releasing + implicit trim makes room again
+        drop(l1);
+        assert!(a.lease(1 << 20, Cat::ActCkpt).is_ok());
+    }
+
+    #[test]
+    fn budget_counts_policy_overhead_under_pow2_allocator() {
+        let tracker = Arc::new(MemoryTracker::new());
+        let alloc = CachingAllocator::new(Mode::Virtual, tracker);
+        let a = PinnedArena::new(
+            Arc::new(alloc),
+            ArenaConfig { budget_bytes: Some(3 << 20), ..Default::default() },
+        );
+        // 1.5 MiB request reserves 2 MiB under pow2; a second one would
+        // need 4 MiB total — over the 3 MiB cap.
+        let _l = a.lease((3 << 20) / 2, Cat::ParamPool).unwrap();
+        assert!(matches!(
+            a.lease((3 << 20) / 2, Cat::ParamPool),
+            Err(ArenaError::BudgetExceeded { .. })
+        ));
+    }
+
+    #[test]
+    fn pow2_policy_segments_survive_trim_keeping_ledger_mirror() {
+        // the caching policy's reserve is monotone: trimming must keep
+        // segments (freeing them would only move bytes into the
+        // allocator cache while the ledger stays charged — the
+        // watermark/ledger mirror would silently break)
+        let tracker = Arc::new(MemoryTracker::new());
+        let alloc = CachingAllocator::new(Mode::Virtual, tracker.clone());
+        let a = PinnedArena::new(Arc::new(alloc), ArenaConfig::default());
+        drop(a.lease(10_000, Cat::OptimBuf).unwrap());
+        a.trim();
+        assert!(a.stats().reserved_bytes > 0, "pow2 segment must be kept");
+        assert_eq!(
+            a.watermark(Cat::OptimBuf).charged as u64,
+            tracker.current(Cat::OptimBuf)
+        );
+        // a re-lease recycles the kept segment — no fresh pin, and the
+        // mirror still holds
+        let _l2 = a.lease(8_000, Cat::OptimBuf).unwrap();
+        assert_eq!(a.stats().fresh_segments, 1);
+        assert_eq!(
+            a.watermark(Cat::OptimBuf).charged as u64,
+            tracker.current(Cat::OptimBuf)
+        );
+    }
+
+    #[test]
+    fn watermarks_match_ledger_bit_for_bit() {
+        let a = arena(Mode::Virtual, None);
+        let l1 = a.lease(123_456, Cat::GradFlat).unwrap();
+        let l2 = a.lease(77_000, Cat::OptimBuf).unwrap();
+        let l3 = a.lease(50_000, Cat::GradFlat).unwrap();
+        drop(l3);
+        drop(l2);
+        for (cat, w) in a.watermarks() {
+            assert_eq!(
+                w.charged_peak as u64,
+                a.tracker().peak(cat),
+                "{cat:?} watermark diverged from the ledger"
+            );
+        }
+        drop(l1);
+    }
+
+    #[test]
+    fn concurrent_leases_never_overlap_in_memory() {
+        // byte-pattern proof: every thread writes its own tag through
+        // its lease and must read it back intact.
+        let a = arena(Mode::Real, None);
+        std::thread::scope(|s| {
+            for tag in 0..8u8 {
+                let a = Arc::clone(&a);
+                s.spawn(move || {
+                    for round in 0..50usize {
+                        let n = 1000 + (tag as usize * 977 + round * 131) % 9000;
+                        let mut l = a.lease(n, Cat::SwapBuf).unwrap();
+                        l.as_mut_slice().fill(tag);
+                        std::thread::yield_now();
+                        assert!(
+                            l.as_slice().iter().all(|&b| b == tag),
+                            "lease memory trampled by a concurrent lease"
+                        );
+                    }
+                });
+            }
+        });
+        assert_eq!(a.stats().requested_bytes, 0);
+    }
+
+    #[test]
+    fn prop_lease_release_matches_reference_model() {
+        check("pinned-arena", Config { cases: 48, ..Default::default() }, |rng, size| {
+            let budget = 64 * 4096;
+            let a = arena(Mode::Virtual, Some(budget));
+            // reference model: live (requested, padded) pairs
+            let mut live: Vec<(Lease, usize)> = Vec::new();
+            let mut model_requested = 0usize;
+            for _ in 0..120 {
+                if !live.is_empty() && rng.next_f64() < 0.45 {
+                    let i = rng.below(live.len());
+                    let (_, req) = live.swap_remove(i);
+                    model_requested -= req;
+                } else {
+                    let bytes = rng.range(1, (size.max(2) * 16).min(budget));
+                    match a.lease(bytes, Cat::Other) {
+                        Ok(l) => {
+                            live.push((l, bytes));
+                            model_requested += bytes;
+                        }
+                        Err(ArenaError::BudgetExceeded { .. }) => {
+                            // the refusal must be justified: even after
+                            // the implicit trim, reserved state plus the
+                            // new lease really exceeds the cap
+                            let reserved = a.stats().reserved_bytes;
+                            prop_assert!(
+                                reserved + pad(bytes) > budget,
+                                "budget refusal with only {reserved} B reserved \
+                                 (+{bytes} B) under {budget} B cap"
+                            );
+                        }
+                    }
+                }
+                let st = a.stats();
+                prop_assert!(
+                    st.requested_bytes == model_requested,
+                    "requested ledger drift: {} vs model {}",
+                    st.requested_bytes,
+                    model_requested
+                );
+                prop_assert!(
+                    st.reserved_bytes <= budget,
+                    "reserved {} exceeds budget {}",
+                    st.reserved_bytes,
+                    budget
+                );
+                prop_assert!(
+                    st.leases == st.releases + live.len() as u64,
+                    "lease/release count drift"
+                );
+                // no overlap between live leases (same-cat, same-segment
+                // spans must be disjoint)
+                for (i, (l1, _)) in live.iter().enumerate() {
+                    for (l2, _) in live.iter().skip(i + 1) {
+                        if l1.seg != l2.seg {
+                            continue;
+                        }
+                        let disjoint = l1.offset + l1.padded <= l2.offset
+                            || l2.offset + l2.padded <= l1.offset;
+                        prop_assert!(
+                            disjoint,
+                            "leases overlap: [{}, {}) vs [{}, {})",
+                            l1.offset,
+                            l1.offset + l1.padded,
+                            l2.offset,
+                            l2.offset + l2.padded
+                        );
+                    }
+                }
+            }
+            drop(live);
+            prop_assert!(a.stats().requested_bytes == 0, "leak after drop");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scratch_recycles_best_fit() {
+        let a = arena(Mode::Real, None);
+        let v = a.take_f32(100, Cat::SwapBuf);
+        a.put_f32(v, Cat::SwapBuf);
+        assert_eq!(a.pooled_f32(Cat::SwapBuf), 1);
+        // best-fit: a huge reclaimed buffer must not be pinned by a
+        // small request when a smaller one fits
+        a.put_f32(Vec::with_capacity(1_000_000), Cat::SwapBuf);
+        let small = a.take_f32(80, Cat::SwapBuf);
+        assert!(small.capacity() < 1_000_000);
+        assert_eq!(small.len(), 80);
+        assert_eq!(a.pooled_f32(Cat::SwapBuf), 1);
+    }
+
+    #[test]
+    fn scratch_floor_and_byte_bound() {
+        let a = arena(Mode::Real, None);
+        for _ in 0..100 {
+            a.put_f32(vec![0f32; 1], Cat::SwapBuf); // sub-floor: dropped
+        }
+        assert_eq!(a.pooled_f32(Cat::SwapBuf), 0);
+        // 4 MiB each against the 64 MiB per-cat byte bound: ≤ 16 kept
+        for _ in 0..20 {
+            a.put_f32(Vec::with_capacity(1 << 20), Cat::SwapBuf);
+        }
+        assert!(a.pooled_f32(Cat::SwapBuf) <= 16);
+    }
+
+    #[test]
+    fn scratch_pool_charges_ledger_and_respects_budget() {
+        let a = arena(Mode::Real, Some(1 << 20));
+        a.put_bytes(vec![0u8; 512 << 10], Cat::OptimBuf);
+        assert_eq!(a.tracker().current(Cat::OptimBuf), 512 << 10);
+        // pooling another 768 KiB would break the 1 MiB budget: dropped
+        a.put_bytes(vec![0u8; 768 << 10], Cat::OptimBuf);
+        assert_eq!(a.pooled_byte_vecs(Cat::OptimBuf), 1);
+        // taking the pooled vector un-charges it
+        let v = a.take_bytes(512 << 10, Cat::OptimBuf);
+        assert_eq!(a.tracker().current(Cat::OptimBuf), 0);
+        assert_eq!(v.len(), 512 << 10);
+    }
+
+    #[test]
+    fn virtual_mode_leases_have_no_storage() {
+        let a = arena(Mode::Virtual, None);
+        let mut l = a.lease(1 << 30, Cat::ParamPool).unwrap();
+        assert!(l.is_virtual());
+        assert!(l.as_slice().is_empty());
+        assert!(l.as_mut_slice().is_empty());
+        assert!(l.as_f32().is_empty());
+        assert_eq!(a.stats().requested_bytes, 1 << 30);
+    }
+}

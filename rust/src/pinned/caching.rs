@@ -86,7 +86,7 @@ impl CachingAllocator {
 
         let data = match self.mode {
             Mode::Virtual => RegionData::Virtual,
-            Mode::Real => RegionData::Real(vec![0u8; rounded].into_boxed_slice()),
+            Mode::Real => RegionData::Aligned { ptr: super::memalign_zeroed(rounded) },
         };
         let me = Arc::clone(self);
         let req = bytes;
@@ -95,8 +95,16 @@ impl CachingAllocator {
             bytes_requested: bytes,
             bytes_reserved: rounded,
             cat,
-            release: Some(Box::new(move |_data, reserved, _cat| {
-                // Blocks go back to the cache — never to the OS.
+            release: Some(Box::new(move |data, reserved, _cat| {
+                // The *policy* keeps the block cached — reserved stays
+                // monotone and the ledger never shrinks.  The backing
+                // pages themselves are returned (a cache hit re-pins
+                // fresh memory); only the accounting is PyTorch's.
+                if let RegionData::Aligned { ptr } = data {
+                    // SAFETY: ptr came from posix_memalign above and is
+                    // freed exactly once (release is take()n).
+                    unsafe { libc::free(ptr.cast()) };
+                }
                 me.requested.fetch_sub(req, Ordering::Relaxed);
                 let mut free = me.free.lock().unwrap();
                 *free.lists.entry(reserved).or_insert(0) += 1;
@@ -114,6 +122,16 @@ impl CachingAllocator {
 impl HostAllocator for Arc<CachingAllocator> {
     fn alloc(&self, bytes: usize, cat: Cat) -> HostRegion {
         self.alloc_arc(bytes, cat)
+    }
+
+    fn reserve_size(&self, bytes: usize) -> usize {
+        // worst case: no cached block matches and a fresh pow2 pin grows
+        // the reserve (a cache hit reserves nothing new).
+        round_pow2(bytes)
+    }
+
+    fn reclaimable(&self) -> bool {
+        false // freed blocks go to the cache, never back to the ledger
     }
 
     fn reserved_bytes(&self) -> usize {

@@ -1,5 +1,5 @@
 //! Pinned host memory: the allocation policies at the center of §III-B
-//! and §IV-C.
+//! and §IV-C, plus the unified arena every consumer leases from.
 //!
 //! CUDA pinned memory itself cannot exist here (no GPU); what the paper
 //! measures, though, is *policy* waste — PyTorch's CachingHostAllocator
@@ -13,12 +13,25 @@
 //! - [`aligned::AlignedAllocator`] — MemAscend's alignment-free path:
 //!   `posix_memalign(4096)` exact-size allocation, refcounted free
 //!   (the `cudaHostRegister`/`torch::from_blob` lifecycle analog).
+//!
+//! Layered on top sits [`arena::PinnedArena`] — the single
+//! budget-enforced lease tier this crate's host-memory consumers
+//! (buffer pools, gradient flat buffer, activation spill slots,
+//! swapper/optimizer scratch) allocate through.  The allocators above
+//! supply the *policy* (how a request is rounded and whether frees
+//! return to the OS); the arena supplies the *system invariant*: one
+//! global byte budget, per-category watermarks, offset/len leases that
+//! can never overlap, and exact fragmentation stats.  Direct
+//! [`HostAllocator::alloc`] calls are reserved to this module — every
+//! other subsystem goes through the arena.
 
 pub mod aligned;
+pub mod arena;
 pub mod caching;
 pub mod tracker;
 
 pub use aligned::AlignedAllocator;
+pub use arena::{ArenaConfig, ArenaError, ArenaStats, CatWatermark, Lease, PinnedArena};
 pub use caching::CachingAllocator;
 pub use tracker::{Cat, MemoryTracker};
 
@@ -44,8 +57,10 @@ pub struct HostRegion {
 }
 
 pub(crate) enum RegionData {
-    Real(Box<[u8]>),
-    /// posix_memalign'd pointer (freed via libc::free in release hook).
+    /// posix_memalign'd pointer (freed via libc::free in the release
+    /// hook).  Both allocators back real regions this way, so every
+    /// region base — and every page-aligned arena lease carved from
+    /// one — is DMA-aligned and safely viewable as `&[f32]`.
     Aligned { ptr: *mut u8 },
     Virtual,
 }
@@ -54,10 +69,9 @@ pub(crate) enum RegionData {
 unsafe impl Send for RegionData {}
 
 impl HostRegion {
-    /// Mutable view of the *requested* span (Real/Aligned modes only).
+    /// Mutable view of the *requested* span (Real mode only).
     pub fn as_mut_slice(&mut self) -> &mut [u8] {
         match &mut self.data {
-            RegionData::Real(b) => &mut b[..self.bytes_requested],
             RegionData::Aligned { ptr } => unsafe {
                 std::slice::from_raw_parts_mut(*ptr, self.bytes_requested)
             },
@@ -67,11 +81,20 @@ impl HostRegion {
 
     pub fn as_slice(&self) -> &[u8] {
         match &self.data {
-            RegionData::Real(b) => &b[..self.bytes_requested],
             RegionData::Aligned { ptr } => unsafe {
                 std::slice::from_raw_parts(*ptr, self.bytes_requested)
             },
             RegionData::Virtual => &[],
+        }
+    }
+
+    /// Raw base pointer (null in Virtual mode).  The arena carves
+    /// disjoint lease views from it without materializing a whole-region
+    /// `&mut` that would alias them.
+    pub(crate) fn raw_base(&self) -> *mut u8 {
+        match &self.data {
+            RegionData::Aligned { ptr } => *ptr,
+            RegionData::Virtual => std::ptr::null_mut(),
         }
     }
 
@@ -99,6 +122,17 @@ pub trait HostAllocator: Send + Sync {
     /// Allocate `bytes` under category `cat`.
     fn alloc(&self, bytes: usize, cat: Cat) -> HostRegion;
 
+    /// Worst-case bytes a fresh `alloc(bytes, _)` would reserve under
+    /// this policy (the arena's budget precheck).
+    fn reserve_size(&self, bytes: usize) -> usize;
+
+    /// Whether freeing a region actually returns its bytes to the OS
+    /// and the ledger.  False for the pow2-caching policy (freed
+    /// blocks are cached forever; the reserve is monotone), in which
+    /// case the arena never trims segments — keeping its watermarks
+    /// an exact mirror of the ledger.
+    fn reclaimable(&self) -> bool;
+
     /// Total bytes currently reserved by the allocator (incl. cached
     /// free blocks that the OS never got back — PyTorch semantics).
     fn reserved_bytes(&self) -> usize;
@@ -116,6 +150,19 @@ pub trait HostAllocator: Send + Sync {
         }
         1.0 - self.requested_bytes() as f64 / res as f64
     }
+}
+
+/// posix_memalign a zeroed, DMA-aligned block of `bytes` (shared by
+/// both allocators' Real mode).
+pub(crate) fn memalign_zeroed(bytes: usize) -> *mut u8 {
+    let mut ptr: *mut libc::c_void = std::ptr::null_mut();
+    // SAFETY: standard posix_memalign call; checked result.
+    let rc = unsafe { libc::posix_memalign(&mut ptr, aligned::DMA_ALIGN, bytes) };
+    assert_eq!(rc, 0, "posix_memalign failed for {bytes} bytes");
+    // zero-init (pinned buffers are staging space; make reads
+    // deterministic)
+    unsafe { std::ptr::write_bytes(ptr.cast::<u8>(), 0, bytes) };
+    ptr.cast()
 }
 
 #[cfg(test)]
@@ -140,5 +187,15 @@ mod tests {
         assert!(r.is_virtual());
         assert_eq!(r.as_slice().len(), 0);
         assert!(r.bytes_reserved >= 1 << 40);
+    }
+
+    #[test]
+    fn real_regions_are_dma_aligned_under_both_policies() {
+        let t = Arc::new(MemoryTracker::new());
+        let a = AlignedAllocator::new(Mode::Real, t.clone());
+        let c = CachingAllocator::new(Mode::Real, t);
+        for r in [a.alloc(100, Cat::Other), c.alloc_arc(100, Cat::Other)] {
+            assert_eq!(r.as_slice().as_ptr() as usize % aligned::DMA_ALIGN, 0);
+        }
     }
 }

@@ -153,6 +153,7 @@ impl DirectEngine {
 impl NvmeEngine for DirectEngine {
     fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
         let t0 = Instant::now();
+        let busy = self.stats.busy_guard();
         let extents = match self.lookup(key) {
             Some((ext, stored)) => {
                 anyhow::ensure!(
@@ -183,12 +184,14 @@ impl NvmeEngine for DirectEngine {
                 Ok(())
             })?;
         }
+        drop(busy);
         self.stats.record_write(data.len() as u64, t0.elapsed().as_nanos() as u64);
         Ok(())
     }
 
     fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
         let t0 = Instant::now();
+        let busy = self.stats.busy_guard();
         let (extents, stored) = self
             .lookup(key)
             .ok_or_else(|| anyhow::anyhow!("direct: no tensor '{key}'"))?;
@@ -223,6 +226,7 @@ impl NvmeEngine for DirectEngine {
                 Ok(())
             })?;
         }
+        drop(busy);
         self.stats.record_read(out_len, t0.elapsed().as_nanos() as u64);
         Ok(())
     }

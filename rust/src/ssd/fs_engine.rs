@@ -17,11 +17,12 @@
 //! §III-D taxes (open/create, journal fsync, length metadata) stay
 //! strictly serial, as ext4 keeps them.
 
+use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::os::unix::fs::FileExt;
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::queue::{io_scope, IoExecutor};
@@ -36,12 +37,38 @@ pub struct FsEngine {
     /// Directory metadata mutex: ext4 serializes directory updates; the
     /// journal file emulates its metadata/allocation writes.
     meta: Mutex<()>,
+    /// Optional member-fd cache (§III-D ablation): skips the per-call
+    /// open/create — the *path-resolution* tax — while the journal and
+    /// sync taxes stay.  `None` = the faithful baseline.
+    fd_cache: Option<Mutex<FdCache>>,
+}
+
+/// LRU-stamped fd cache: bounded so a paper-scale tensor population
+/// cannot exhaust the process fd limit, with least-recently-used
+/// eviction so a working set larger than the cap degrades gracefully
+/// instead of thrashing hot fds.
+#[derive(Default)]
+struct FdCache {
+    files: HashMap<PathBuf, (Arc<File>, u64)>,
+    clock: u64,
 }
 
 impl FsEngine {
     /// `root/devN/` stands in for each ext4-formatted SSD. `stripe` is
     /// the RAID0 chunk size (md default 512 KiB).
     pub fn new(root: &std::path::Path, devices: usize, stripe: usize) -> anyhow::Result<Self> {
+        Self::with_fd_cache(root, devices, stripe, false)
+    }
+
+    /// [`Self::new`], optionally caching member fds so the §III-D
+    /// ablation can separate the path-resolution tax from the journal
+    /// tax (`TrainSpec::fs_cached_fds`).
+    pub fn with_fd_cache(
+        root: &std::path::Path,
+        devices: usize,
+        stripe: usize,
+        cached_fds: bool,
+    ) -> anyhow::Result<Self> {
         anyhow::ensure!(devices >= 1 && stripe >= 4096);
         let devs: Vec<PathBuf> = (0..devices).map(|i| root.join(format!("dev{i}"))).collect();
         for d in &devs {
@@ -54,12 +81,85 @@ impl FsEngine {
             stripe,
             stats: IoStats::default(),
             meta: Mutex::new(()),
+            fd_cache: cached_fds.then(|| Mutex::new(FdCache::default())),
         })
     }
 
     fn seg_path(&self, key: &str, dev: usize) -> PathBuf {
         // one file per tensor per device (its RAID0 member extent)
         self.devices[dev].join(format!("{}.seg", sanitize(key)))
+    }
+
+    /// Bound on cached member fds (eviction is safe mid-transfer:
+    /// in-flight users hold their own `Arc`).
+    const FD_CACHE_CAP: usize = 512;
+
+    /// Open a member file for writing — through the fd cache when
+    /// enabled (cached fds are opened read+write so one handle serves
+    /// both directions).
+    fn open_rw(&self, key: &str, dev: usize) -> anyhow::Result<Arc<File>> {
+        let path = self.seg_path(key, dev);
+        if let Some(cache) = &self.fd_cache {
+            let mut c = cache.lock().unwrap();
+            c.clock += 1;
+            let now = c.clock;
+            if let Some((f, stamp)) = c.files.get_mut(&path) {
+                *stamp = now;
+                return Ok(Arc::clone(f));
+            }
+            let f = Arc::new(
+                OpenOptions::new()
+                    .create(true)
+                    .read(true)
+                    .write(true)
+                    .truncate(false)
+                    .open(&path)?,
+            );
+            if c.files.len() >= Self::FD_CACHE_CAP {
+                if let Some(victim) = c
+                    .files
+                    .iter()
+                    .min_by_key(|(_, (_, stamp))| *stamp)
+                    .map(|(p, _)| p.clone())
+                {
+                    c.files.remove(&victim);
+                }
+            }
+            c.files.insert(path, (Arc::clone(&f), now));
+            return Ok(f);
+        }
+        Ok(Arc::new(
+            OpenOptions::new()
+                .create(true)
+                .write(true)
+                .truncate(false)
+                .open(path)?,
+        ))
+    }
+
+    /// Open a member file for reading.  Serves from the fd cache when
+    /// the write path already populated it; a miss falls back to a
+    /// plain read-only open (uncached) so read failure semantics —
+    /// missing files error, nothing is created — match the baseline.
+    fn open_ro(&self, key: &str, dev: usize) -> anyhow::Result<Arc<File>> {
+        let path = self.seg_path(key, dev);
+        if let Some(cache) = &self.fd_cache {
+            let mut c = cache.lock().unwrap();
+            c.clock += 1;
+            let now = c.clock;
+            if let Some((f, stamp)) = c.files.get_mut(&path) {
+                *stamp = now;
+                return Ok(Arc::clone(f));
+            }
+        }
+        Ok(Arc::new(File::open(path)?))
+    }
+
+    /// Cached member fds (test/introspection hook).
+    pub fn cached_fds(&self) -> usize {
+        self.fd_cache
+            .as_ref()
+            .map_or(0, |c| c.lock().unwrap().files.len())
     }
 
     /// Append to the per-device allocation journal — the analog of
@@ -127,17 +227,12 @@ fn sanitize(key: &str) -> String {
 impl NvmeEngine for FsEngine {
     fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
         let t0 = Instant::now();
+        let busy = self.stats.busy_guard();
         let n = self.devices.len();
         // open (or create) each member file — path resolution per call
-        let files: Vec<File> = (0..n)
-            .map(|d| {
-                OpenOptions::new()
-                    .create(true)
-                    .write(true)
-                    .truncate(false)
-                    .open(self.seg_path(key, d))
-                    .map_err(Into::into)
-            })
+        // unless the fd cache absorbs it
+        let files: Vec<Arc<File>> = (0..n)
+            .map(|d| self.open_rw(key, d))
             .collect::<anyhow::Result<_>>()?;
         let fresh = self.len_of(key) != Some(data.len());
         // data path: member chunk lists issued concurrently (RAID0)
@@ -171,12 +266,14 @@ impl NvmeEngine for FsEngine {
                 data.len().to_string(),
             )?;
         }
+        drop(busy);
         self.stats.record_write(data.len() as u64, t0.elapsed().as_nanos() as u64);
         Ok(())
     }
 
     fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
         let t0 = Instant::now();
+        let busy = self.stats.busy_guard();
         let stored = self
             .len_of(key)
             .ok_or_else(|| anyhow::anyhow!("fs_engine: no tensor '{key}'"))?;
@@ -187,8 +284,8 @@ impl NvmeEngine for FsEngine {
         );
         let n = self.devices.len();
         let out_len = out.len() as u64;
-        let files: Vec<File> = (0..n)
-            .map(|d| File::open(self.seg_path(key, d)).map_err(Into::into))
+        let files: Vec<Arc<File>> = (0..n)
+            .map(|d| self.open_ro(key, d))
             .collect::<anyhow::Result<_>>()?;
         io_scope(|s| {
             for (d, chunks) in self.member_chunks_mut(out).into_iter().enumerate() {
@@ -205,6 +302,7 @@ impl NvmeEngine for FsEngine {
             }
             Ok(())
         })?;
+        drop(busy);
         self.stats.record_read(out_len, t0.elapsed().as_nanos() as u64);
         Ok(())
     }
@@ -219,7 +317,11 @@ impl NvmeEngine for FsEngine {
     }
 
     fn label(&self) -> &'static str {
-        "fs-raid0"
+        if self.fd_cache.is_some() {
+            "fs-raid0-cachedfd"
+        } else {
+            "fs-raid0"
+        }
     }
 }
 
@@ -283,6 +385,29 @@ mod tests {
         assert_eq!(s.reads, 1);
         assert_eq!(s.bytes_written, 5000);
         assert_eq!(s.bytes_read, 5000);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cached_fd_variant_roundtrips_and_reuses_handles() {
+        let dir = tmpdir("cfd");
+        let eng = FsEngine::with_fd_cache(&dir, 2, 4096, true).unwrap();
+        assert_eq!(eng.label(), "fs-raid0-cachedfd");
+        let data: Vec<u8> = (0..20_000).map(|i| (i % 241) as u8).collect();
+        eng.write("t", &data).unwrap();
+        let opened = eng.cached_fds();
+        assert_eq!(opened, 2, "one cached fd per member device");
+        // overwrite + read reuse the cached handles — no new opens
+        eng.write("t", &data).unwrap();
+        let mut out = vec![0u8; data.len()];
+        eng.read("t", &mut out).unwrap();
+        assert_eq!(out, data);
+        assert_eq!(eng.cached_fds(), opened);
+        // journal behaviour is unchanged: same-size overwrite adds none
+        let j1 = std::fs::metadata(dir.join("dev0/journal.meta")).unwrap().len();
+        eng.write("t", &data).unwrap();
+        let j2 = std::fs::metadata(dir.join("dev0/journal.meta")).unwrap().len();
+        assert_eq!(j1, j2);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -20,9 +20,13 @@
 //!
 //! Weight fetches ride the swapper's windowed pipeline; spent f32
 //! kernel arguments are recycled through the shared [`F32Scratch`]
-//! pool, and the step report carries `io_wait_secs` — the foreground
-//! I/O stall — next to the engine-busy `io_secs` so the overlap the
-//! pipeline wins is measurable (`StepMetrics::io_overlap_secs`).
+//! pool (arena-backed, like every other host buffer here — the
+//! gradient flat buffer, activation slots, and optimizer staging all
+//! lease from `engine.arena`).  The step report carries
+//! `io_wait_secs` — the foreground I/O stall, including activation
+//! spill fetches — next to the engine-busy `io_secs` (an exact
+//! union-of-busy-intervals measure) so the overlap the pipeline wins
+//! is measurable (`StepMetrics::io_overlap_secs`).
 //!
 //! Data-parallel ranks are simulated round-robin on the single PJRT
 //! device: each rank's microbatch accumulates into the shared flat
@@ -101,7 +105,7 @@ impl Trainer {
             _ => StateDtype::F32,
         };
         let state = init_weights(spec, engine.nvme.as_ref(), state_dtype, opts.seed)?;
-        let flat = GradFlatBuffer::new(&state.inv, engine.alloc.as_ref());
+        let flat = GradFlatBuffer::new(&state.inv, &engine.arena)?;
         let scaler = if train.precision.needs_overflow_check() {
             LossScaler::new(train.init_loss_scale, train.scale_growth_interval)
         } else {
@@ -118,6 +122,7 @@ impl Trainer {
         let fwd_plan: Vec<TensorDesc> =
             state.inv.iter().filter(|t| t.offloadable()).cloned().collect();
         let block_names = rt.manifest().block_weight_names.clone();
+        let scratch = Arc::new(F32Scratch::new(engine.arena.clone()));
         Ok(Self {
             rt,
             engine,
@@ -131,7 +136,7 @@ impl Trainer {
             applied_steps: 0,
             fwd_plan,
             block_names,
-            scratch: Arc::new(F32Scratch::new()),
+            scratch,
         })
     }
 
@@ -176,8 +181,8 @@ impl Trainer {
                 l,
                 b * s * h,
                 self.train.act_host_budget,
-                self.engine.alloc.as_ref(),
-                self.engine.nvme.clone(),
+                self.engine.arena.clone(),
+                self.engine.async_io(),
             );
             for layer in 0..l {
                 let mut ws: HashMap<String, Vec<f32>> = HashMap::new();
@@ -257,6 +262,9 @@ impl Trainer {
             }
             io_wait_secs += swb.wait_secs();
             drop(swb);
+            // spill-fetch stalls the prefetch could not hide (the rest
+            // of the spill I/O ran on the queue behind compute)
+            io_wait_secs += ckpts.wait_secs();
 
             // ---- embedding backward ----
             let args = vec![Value::I32(tokens), Value::F32(dh)];
@@ -297,6 +305,7 @@ impl Trainer {
                     .collect();
                 let stats = crate::optimizer::step_groups_pipelined(
                     &aio,
+                    &self.engine.arena,
                     &self.state.offloaded,
                     &grads,
                     &keys,
@@ -323,10 +332,9 @@ impl Trainer {
                     )?;
                 }
                 let opt_io_after = self.engine.nvme.stats();
-                io_wait_secs += (opt_io_after.read_ns + opt_io_after.write_ns
-                    - opt_io_before.read_ns
-                    - opt_io_before.write_ns) as f64
-                    / 1e9;
+                // sequential loop: every engine-busy second is stall
+                io_wait_secs +=
+                    (opt_io_after.busy_ns - opt_io_before.busy_ns) as f64 / 1e9;
             }
             for rt_tensor in self.state.resident.values_mut() {
                 let (off, len) = self.flat.span_of(&rt_tensor.desc.name).unwrap();
@@ -347,10 +355,9 @@ impl Trainer {
         self.flat.zero();
 
         let io_after = self.engine.nvme.stats();
-        let io_secs =
-            (io_after.read_ns + io_after.write_ns - io_before.read_ns - io_before.write_ns)
-                as f64
-                / 1e9;
+        // union-of-busy-intervals: exact engine-busy wall time even
+        // when the queue layer overlaps transfers
+        let io_secs = (io_after.busy_ns - io_before.busy_ns) as f64 / 1e9;
         let step_secs = t_step.elapsed().as_secs_f64();
         Ok(StepMetrics {
             step: step_idx,
