@@ -14,7 +14,16 @@ use memascend::config::{MemAscendFlags, TrainSpec};
 use memascend::util::bench::Table;
 
 fn spec(flags: MemAscendFlags, batch: usize, seq: usize) -> TrainSpec {
-    TrainSpec { batch, seq, ranks: 2, prefetch_depth: 1, flags, ..Default::default() }
+    // untiled optimizer staging: paper-parity memory model
+    TrainSpec {
+        batch,
+        seq,
+        ranks: 2,
+        prefetch_depth: 1,
+        optim_tile_bytes: 0,
+        flags,
+        ..Default::default()
+    }
 }
 
 fn main() {

@@ -36,6 +36,7 @@ use memascend::ssd::{AsyncEngine, DirectEngine, IoExecutor, NvmeEngine};
 use memascend::tensors::{inventory, TensorDesc};
 use memascend::util::bench::{black_box, Table};
 use memascend::util::rng::Xoshiro256;
+use memascend::util::stage::StageExecutor;
 
 fn arena() -> Arc<PinnedArena> {
     let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
@@ -82,7 +83,20 @@ fn metrics(io_secs: f64, io_wait_secs: f64, step_secs: f64) -> StepMetrics {
         overflow_check_secs: 0.0,
         optim_secs: 0.0,
         io_wait_secs,
+        optim_tiles: 0,
     }
+}
+
+/// Per-queue attribution: how much of the window's engine-busy time
+/// each NVMe device queue carried (union-of-intervals per queue).
+fn print_queue_busy(label: &str, eng: &dyn NvmeEngine, before: memascend::ssd::IoSnapshot) {
+    let after = eng.stats();
+    let mut parts = Vec::new();
+    for q in 0..after.queue_count.max(before.queue_count) {
+        let d = (after.queue_busy_ns[q] - before.queue_busy_ns[q]) as f64 / 1e9;
+        parts.push(format!("q{q} {d:.3}s"));
+    }
+    println!("  per-queue busy [{label}]: {}", parts.join("  "));
 }
 
 fn seed_engine(tag: &str) -> (Arc<DirectEngine>, Vec<TensorDesc>, std::path::PathBuf) {
@@ -137,11 +151,13 @@ fn swapper_experiment(table: &mut Table) -> (StepMetrics, f64) {
     let sync_io = io_busy_delta(eng.as_ref(), io_before);
     let m_sync = metrics(sync_io, sync_io, sync_wall); // all I/O is stall
 
-    // --- pipelined: window of 4, shared executor, arena-pooled scratch ---
+    // --- pipelined: window of 4, shared executor, arena-pooled scratch,
+    // --- upconvert chained onto the compute-side stage pool ---
     let a = arena();
     let pool: Arc<dyn ParamBufferPool> =
         Arc::new(AdaptivePool::new(&SMOKE, 4, DType::F16, &a).unwrap());
     let exec = Arc::new(IoExecutor::new(4));
+    let stage = Arc::new(StageExecutor::new(2));
     let f32_pool = Arc::new(F32Scratch::new(Arc::clone(&a)));
     let io_before = eng.stats();
     let t0 = Instant::now();
@@ -151,6 +167,7 @@ fn swapper_experiment(table: &mut Table) -> (StepMetrics, f64) {
             eng.clone(),
             pool.clone(),
             exec.clone(),
+            stage.clone(),
             f32_pool.clone(),
             plan.clone(),
             |t| format!("{}/fp16", t.name),
@@ -167,6 +184,7 @@ fn swapper_experiment(table: &mut Table) -> (StepMetrics, f64) {
     let async_wall = t0.elapsed().as_secs_f64();
     let async_io = io_busy_delta(eng.as_ref(), io_before);
     let m_async = metrics(async_io, wait, async_wall);
+    print_queue_busy("swapper/pipelined", eng.as_ref(), io_before);
 
     for (mode, m, wall) in
         [("sequential", &m_sync, sync_wall), ("pipelined", &m_async, async_wall)]
@@ -240,6 +258,7 @@ fn optimizer_experiment(table: &mut Table) -> (StepMetrics, bool) {
     let pipe_wall = t0.elapsed().as_secs_f64();
     let pipe_io = io_busy_delta(eng_b.as_ref(), io_before);
     let m_pipe = metrics(pipe_io, wait, pipe_wall);
+    print_queue_busy("optimizer/double-buffered", eng_b.as_ref(), io_before);
 
     // --- bit-identity across every stored artifact ---
     let mut identical = true;

@@ -69,6 +69,7 @@ fn main() {
         ranks: 1,
         prefetch_depth: 1,
         offloaded_gc: false,
+        optim_tile_bytes: 0, // paper-parity (untiled) memory model
         flags: MemAscendFlags::baseline(),
         ..Default::default()
     };

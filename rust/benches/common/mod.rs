@@ -20,12 +20,16 @@ pub fn gib(bytes: u64) -> String {
 }
 
 /// Standard Fig-8-style training spec (ctx 4096, batch 4/rank, 2 ranks).
+/// Paper parity: optimizer staging stays whole-subgroup (untiled) so
+/// the figure-replay numbers match the paper's memory model; the tiled
+/// pipeline's savings are measured separately by `bench_tiling`.
 pub fn eval_spec(flags: memascend::config::MemAscendFlags) -> memascend::config::TrainSpec {
     memascend::config::TrainSpec {
         batch: 4,
         seq: 4096,
         ranks: 2,
         prefetch_depth: 1,
+        optim_tile_bytes: 0,
         flags,
         ..Default::default()
     }

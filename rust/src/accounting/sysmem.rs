@@ -112,17 +112,41 @@ pub fn peak_sysmem(
     };
     let pool_bytes = pool.stats().pool_bytes as u64;
 
-    // 3. optimizer subgroup buffers: double-buffered {master, m, v}
-    // fetches + fp32 swap-out staging
+    // 3. optimizer staging.  Untiled (`optim_tile_bytes = 0`, the
+    // paper-parity baseline): double-buffered whole-subgroup
+    // {master, m, v} fetches + fp32 swap-out staging — the largest
+    // subgroup sets the peak.  Tiled: at any instant the staged-tile
+    // pipeline holds at most `depth` fetch generations (the tile under
+    // Adam counts against the refill window) plus `depth` write-back
+    // generations of 3 state tiles each, and `depth` fp16 windows —
+    // peak staging is O(tile_bytes × depth) regardless of subgroup
+    // size.
     let sub = subgroup_elems(spec);
     let state_bytes = train.optim_dtype.size();
-    for _ in 0..2 {
-        for _ in 0..3 {
-            held.push(uncapped(arena.lease(sub * state_bytes, Cat::OptimBuf)));
+    // the tiled path only engages with async I/O workers (the trainer's
+    // sequential io_workers = 0 path swaps whole subgroups regardless)
+    if train.optim_tile_bytes > 0 && train.io_workers > 0 {
+        let tile_elems = (train.optim_tile_bytes / state_bytes).max(1).min(sub);
+        let depth = crate::optimizer::TILE_PIPELINE_DEPTH;
+        for _ in 0..(2 * depth) {
+            for _ in 0..3 {
+                held.push(uncapped(
+                    arena.lease(tile_elems * state_bytes, Cat::OptimBuf),
+                ));
+            }
         }
-    }
-    for _ in 0..2 {
-        held.push(uncapped(arena.lease(sub * 4, Cat::SwapBuf)));
+        for _ in 0..depth {
+            held.push(uncapped(arena.lease(tile_elems * 2, Cat::SwapBuf)));
+        }
+    } else {
+        for _ in 0..2 {
+            for _ in 0..3 {
+                held.push(uncapped(arena.lease(sub * state_bytes, Cat::OptimBuf)));
+            }
+        }
+        for _ in 0..2 {
+            held.push(uncapped(arena.lease(sub * 4, Cat::SwapBuf)));
+        }
     }
 
     // 4. offloaded activation checkpoints (Eq. 1): Ng × B × C × L × H ×
@@ -188,6 +212,9 @@ mod tests {
             seq: 4096,
             ranks: 2,
             prefetch_depth: 1,
+            // paper parity: the figures model whole-subgroup optimizer
+            // staging; the tiled pipeline is measured separately below
+            optim_tile_bytes: 0,
             ..Default::default()
         }
     }
@@ -331,6 +358,37 @@ mod tests {
                 "PoolStats.pool_bytes diverged from arena ParamPool demand"
             );
         }
+    }
+
+    #[test]
+    fn tiled_optimizer_staging_is_flat_in_model_size() {
+        // the staged-tile pipeline's replay: optimizer staging is
+        // O(tile_bytes x depth), so it neither grows with the model
+        // nor depends on subgroup size — and the total peak drops
+        // below the untiled MemAscend baseline
+        let tile = 4 << 20;
+        let mk = |m: &'static ModelSpec, tile_bytes: usize| {
+            let mut t = spec_fig8();
+            t.flags = MemAscendFlags::memascend();
+            t.optim_tile_bytes = tile_bytes;
+            peak_sysmem(m, &t, &CONFIG1)
+        };
+        let small = mk(PAPER_DENSE[0], tile);
+        let large = mk(PAPER_DENSE[PAPER_DENSE.len() - 1], tile);
+        assert_eq!(
+            small.optim_buf, large.optim_buf,
+            "tiled staging must not scale with the model"
+        );
+        let depth = crate::optimizer::TILE_PIPELINE_DEPTH as u64;
+        assert!(
+            small.optim_buf <= 2 * depth * 3 * tile as u64,
+            "tiled staging {} exceeds the pipeline window",
+            small.optim_buf
+        );
+        // vs whole-subgroup double-buffering: strictly smaller peak
+        let untiled = mk(PAPER_DENSE[0], 0);
+        assert!(small.optim_buf < untiled.optim_buf / 4);
+        assert!(small.peak_total < untiled.peak_total);
     }
 
     #[test]

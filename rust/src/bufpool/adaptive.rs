@@ -175,13 +175,24 @@ impl ParamBufferPool for AdaptivePool {
     }
 
     fn with_buf(&self, buf: &PoolBuf, f: &mut dyn FnMut(&mut [u8])) {
-        let mut region = self.regions[buf.class].lock().unwrap();
-        if region.is_virtual() {
+        // lock only to read the class region's base — NOT for the
+        // closure: slots are disjoint carves handed out exactly once
+        // until release, so a device read into slot A and an upconvert
+        // out of slot B of the same class run concurrently (the whole
+        // point of the queue→stage fetch split)
+        let base = self.regions[buf.class].lock().unwrap().span_base();
+        if base.is_null() {
             f(&mut []);
             return;
         }
-        let slice = region.as_mut_slice();
-        f(&mut slice[buf.offset..buf.offset + buf.requested]);
+        // SAFETY: [offset, offset+requested) lies inside the slot this
+        // PoolBuf exclusively owns between acquire and release; slots
+        // within a class never overlap and the class lease outlives
+        // the pool, so this view aliases nothing live.
+        let slice = unsafe {
+            std::slice::from_raw_parts_mut(base.add(buf.offset), buf.requested)
+        };
+        f(slice);
     }
 
     fn stats(&self) -> PoolStats {

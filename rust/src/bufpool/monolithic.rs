@@ -138,13 +138,21 @@ impl ParamBufferPool for MonolithicPool {
     }
 
     fn with_buf(&self, buf: &PoolBuf, f: &mut dyn FnMut(&mut [u8])) {
-        let mut region = self.region.lock().unwrap();
-        if region.is_virtual() {
+        // lock only to read the region base — slots are disjoint
+        // carves, so concurrent with_buf calls on different slots
+        // (device read vs upconvert) proceed in parallel
+        let base = self.region.lock().unwrap().span_base();
+        if base.is_null() {
             f(&mut []);
             return;
         }
-        let slice = region.as_mut_slice();
-        f(&mut slice[buf.offset..buf.offset + buf.requested]);
+        // SAFETY: [offset, offset+requested) lies inside the slot this
+        // PoolBuf exclusively owns between acquire and release; slots
+        // never overlap and the pool lease outlives the pool.
+        let slice = unsafe {
+            std::slice::from_raw_parts_mut(base.add(buf.offset), buf.requested)
+        };
+        f(slice);
     }
 
     fn stats(&self) -> PoolStats {

@@ -122,6 +122,17 @@ pub struct TrainSpec {
     /// read→Adam→write optimizer loop (the overlap-ablation baseline —
     /// numerically identical either way).
     pub io_workers: usize,
+    /// Fixed-byte tile size for the optimizer-state swap: each group's
+    /// (master, m, v) streams are split into tiles of this many state
+    /// bytes and streamed through the four-stage fetch → upconvert →
+    /// Adam → downconvert/write-back pipeline, capping peak pinned
+    /// optimizer staging at `O(tile_bytes × depth)` *independent of
+    /// group size* (one embedding or MoE-expert group no longer sets
+    /// the high-water mark).  `0` = whole-group double-buffering — the
+    /// paper-parity baseline the Fig. 8/15 replays use.  All settings
+    /// are bit-identical in result.  Default ≈ one arena segment's
+    /// worth of staging.
+    pub optim_tile_bytes: usize,
     /// Offload activation checkpoints to host memory (Eq. 1).
     pub offloaded_gc: bool,
     /// Host byte budget for activation checkpoints; checkpoints beyond
@@ -160,6 +171,7 @@ impl Default for TrainSpec {
             optim_dtype: DType::F32,
             prefetch_depth: 2,
             io_workers: 2,
+            optim_tile_bytes: 4 << 20,
             offloaded_gc: true,
             act_host_budget: usize::MAX,
             pinned_budget_bytes: None,

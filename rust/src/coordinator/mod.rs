@@ -20,6 +20,11 @@ pub fn commands() -> Vec<Command> {
             .opt("mode", "memascend", "memascend|zero-infinity")
             .opt("ranks", "1", "simulated data-parallel ranks")
             .opt("optim", "f32", "optimizer state dtype (f32|bf16)")
+            .opt(
+                "optim-tile-bytes",
+                "4194304",
+                "optimizer tile size in state bytes (0 = whole-group swap)",
+            )
             .opt("precision", "fp16", "mixed precision (fp16|bf16)")
             .opt("seed", "42", "init/data seed")
             .opt("artifacts", "artifacts", "AOT artifacts root")
@@ -68,14 +73,17 @@ pub fn parse_mode(mode: &str) -> anyhow::Result<MemAscendFlags> {
 }
 
 pub fn train_spec_from_args(args: &Args, batch: usize, seq: usize) -> anyhow::Result<TrainSpec> {
+    let defaults = TrainSpec::default();
     Ok(TrainSpec {
         batch,
         seq,
         ranks: args.get_usize("ranks", 1)?,
         precision: Precision::parse(args.get_or("precision", "fp16"))?,
         optim_dtype: crate::dtype::DType::parse(args.get_or("optim", "f32"))?,
+        optim_tile_bytes: args
+            .get_usize("optim-tile-bytes", defaults.optim_tile_bytes)?,
         flags: parse_mode(args.get_or("mode", "memascend"))?,
-        ..Default::default()
+        ..defaults
     })
 }
 

@@ -68,6 +68,25 @@ pub fn f32s_to_f16_bytes(src: &[f32], dst: &mut [u8]) {
     }
 }
 
+/// [`f32s_to_f16_bytes`] over raw little-endian f32 bytes — the
+/// alignment-free view a byte buffer provides.  Same [`f32_to_f16`]
+/// per element, so outputs are bit-identical to the slice variant.
+pub fn f32_le_bytes_to_f16_bytes(src: &[u8], dst: &mut [u8]) {
+    assert_eq!(src.len() % 4, 0);
+    assert_eq!(dst.len() * 2, src.len());
+    for i in 0..src.len() / 4 {
+        let x = f32::from_le_bytes([
+            src[4 * i],
+            src[4 * i + 1],
+            src[4 * i + 2],
+            src[4 * i + 3],
+        ]);
+        let b = f32_to_f16(x).to_le_bytes();
+        dst[2 * i] = b[0];
+        dst[2 * i + 1] = b[1];
+    }
+}
+
 pub fn f16_bytes_to_f32s(src: &[u8], dst: &mut [f32]) {
     assert_eq!(src.len(), dst.len() * 2);
     // LUT decode (§Perf): the swap-in H2D-analog path runs this over
@@ -116,6 +135,18 @@ mod tests {
         assert_eq!(DType::F16.size(), 2);
         assert_eq!(DType::parse("bf16").unwrap(), DType::BF16);
         assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn le_bytes_f16_conversion_matches_slice_variant() {
+        // the alignment-free variant must be bit-identical — the tiled
+        // optimizer's downconvert rides it
+        let vals = [0.0f32, 1.5, -2.25, 65504.0, 1e-8, f32::INFINITY, -0.0];
+        let mut a = vec![0u8; vals.len() * 2];
+        let mut b = vec![0u8; vals.len() * 2];
+        f32s_to_f16_bytes(&vals, &mut a);
+        f32_le_bytes_to_f16_bytes(f32s_as_bytes(&vals), &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

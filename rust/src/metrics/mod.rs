@@ -51,6 +51,9 @@ pub struct StepMetrics {
     /// fetch/write-back waits). The gap to `io_secs` is transfer time
     /// hidden behind compute.
     pub io_wait_secs: f64,
+    /// Optimizer-state tiles streamed by the staged-tile pipeline this
+    /// step (0 when the whole-group or sequential path ran).
+    pub optim_tiles: u64,
 }
 
 impl StepMetrics {
@@ -175,6 +178,7 @@ mod tests {
             overflow_check_secs: 0.05,
             optim_secs: 0.05,
             io_wait_secs: 0.04,
+            optim_tiles: 0,
         }
     }
 

@@ -19,6 +19,7 @@ use crate::pinned::{
     Mode, PinnedArena,
 };
 use crate::ssd::{AsyncEngine, DirectEngine, FsEngine, IoExecutor, NvmeEngine};
+use crate::util::stage::StageExecutor;
 
 pub struct OffloadEngine {
     pub tracker: Arc<MemoryTracker>,
@@ -27,9 +28,12 @@ pub struct OffloadEngine {
     pub pool: Arc<dyn ParamBufferPool>,
     pub nvme: Arc<dyn NvmeEngine>,
     /// Shared async submission queue: swapper fetch window, activation
-    /// spill, and double-buffered optimizer swap ride this one executor
-    /// (the engines keep their own per-device queues underneath).
+    /// spill, and the optimizer swap ride this one executor (the
+    /// engines keep their own per-device queues underneath).
     pub ioq: Arc<IoExecutor>,
+    /// Compute-side stage pool: f16↔f32 conversions of the swapper and
+    /// the tiled optimizer run here, never on the NVMe queue workers.
+    pub stage: Arc<StageExecutor>,
     pub checker: Checker,
     pub threads: usize,
 }
@@ -87,14 +91,17 @@ impl OffloadEngine {
             Checker::Baseline
         };
         let ioq = Arc::new(IoExecutor::new(train.io_workers.max(1)));
+        let threads = crate::util::par::default_threads();
+        let stage = Arc::new(StageExecutor::new((threads / 2).clamp(1, 4)));
         Ok(Self {
             tracker,
             arena,
             pool,
             nvme,
             ioq,
+            stage,
             checker,
-            threads: crate::util::par::default_threads(),
+            threads,
         })
     }
 

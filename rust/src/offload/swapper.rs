@@ -1,20 +1,26 @@
 //! Parameter swapper: the SSD→host→"GPU" prefetch pipeline (§IV-A),
-//! rebuilt as a windowed async pipeline over the multi-queue layer.
+//! rebuilt as a windowed async pipeline over the multi-queue layer,
+//! with the f16→f32 upconvert split onto the compute-side stage pool.
 //!
 //! The seed swapper was one worker thread fetching one tensor at a
 //! time — the compute thread could overlap with at most a single
 //! in-flight transfer.  Now the swapper keeps a *window* of `depth`
 //! fetches in flight on the shared [`IoExecutor`] and reorders
-//! completions back into plan order:
+//! completions back into plan order; each fetch is itself two chained
+//! stages, so a queue worker is back on the device as soon as the
+//! bytes are staged instead of decoding them first (the PR-1 ROADMAP
+//! item, resolved):
 //!
 //! ```text
 //!        plan (layer-order tensor schedule)
 //!          │ submit (window: `depth` in flight)
 //!          ▼
 //!  [ IoExecutor submission queue ] ──► worker: lease pool buffer
-//!          │                                   read fp16 from NVMe
-//!          │   out-of-order execution          upconvert → f32 scratch
-//!          ▼                                   release buffer
+//!          │   out-of-order execution          read fp16 from NVMe
+//!          ▼                                   chain ↓
+//!  [ StageExecutor (compute pool) ] ──► worker: upconvert → f32 scratch
+//!          │                                    release pool buffer
+//!          ▼
 //!  [ per-fetch completion handles ]
 //!          │ FIFO wait  (in-order delivery)
 //!          ▼
@@ -26,20 +32,22 @@
 //!
 //! Backpressure is two-layer, as before: the parameter pool bounds
 //! bytes staged in pinned memory (workers block in `acquire`), and the
-//! window bounds ready-but-unconsumed tensors.  A blocked worker holds
-//! no buffer, so pool capacity can never deadlock the queue: if every
-//! worker is blocked in `acquire`, no buffer is held and an acquire
-//! must succeed.
+//! window bounds ready-but-unconsumed tensors.  A staged buffer now
+//! crosses the queue→stage boundary, but stage workers never block on
+//! the pool, so every held buffer is always on a path to release — a
+//! full pool can stall queue workers in `acquire`, never deadlock
+//! them.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::bufpool::ParamBufferPool;
+use crate::bufpool::{ParamBufferPool, PoolBuf};
 use crate::dtype::f16_bytes_to_f32s;
 use crate::pinned::{Cat, PinnedArena};
 use crate::ssd::{IoExecutor, IoHandle, NvmeEngine};
 use crate::tensors::TensorDesc;
+use crate::util::stage::StageExecutor;
 
 /// Recycling pool of f32 vectors: the conversion scratch the pipeline
 /// delivers tensors in.  A thin facade over the arena's scratch tier
@@ -90,6 +98,8 @@ struct FetchCtx {
     engine: Arc<dyn NvmeEngine>,
     pool: Arc<dyn ParamBufferPool>,
     exec: Arc<IoExecutor>,
+    /// Compute-side pool the upconvert stage chains onto.
+    stage: Arc<StageExecutor>,
     scratch: Arc<F32Scratch>,
     key_of: Box<dyn Fn(&TensorDesc) -> String + Send + Sync>,
 }
@@ -107,14 +117,18 @@ pub struct Swapper {
 }
 
 impl Swapper {
-    /// Start prefetching `plan` in order on `exec`. `key_of` maps a
-    /// tensor to its SSD key (rank shards use partition keys). `depth`
-    /// is the pipeline window: fetches kept in flight ahead of
-    /// compute, on top of the pool's own in-flight bound.
+    /// Start prefetching `plan` in order on `exec`, chaining each
+    /// fetch's f16→f32 upconvert onto `stage` (the compute-side pool).
+    /// `key_of` maps a tensor to its SSD key (rank shards use
+    /// partition keys). `depth` is the pipeline window: fetches kept
+    /// in flight ahead of compute, on top of the pool's own in-flight
+    /// bound.
+    #[allow(clippy::too_many_arguments)]
     pub fn start(
         engine: Arc<dyn NvmeEngine>,
         pool: Arc<dyn ParamBufferPool>,
         exec: Arc<IoExecutor>,
+        stage: Arc<StageExecutor>,
         scratch: Arc<F32Scratch>,
         plan: Vec<TensorDesc>,
         key_of: impl Fn(&TensorDesc) -> String + Send + Sync + 'static,
@@ -124,6 +138,7 @@ impl Swapper {
             engine,
             pool,
             exec,
+            stage,
             scratch,
             key_of: Box::new(key_of),
         });
@@ -181,15 +196,31 @@ fn submit_fetch(ctx: &Arc<FetchCtx>, t: TensorDesc) -> IoHandle<Fetched> {
     let (completer, handle) = IoHandle::pair();
     let job_ctx = Arc::clone(ctx);
     ctx.exec.submit(move || {
-        let result = fetch_one(&job_ctx, &t).map(|data| Fetched { desc: t, data });
-        completer.complete(result);
+        // stage 1 (NVMe queue): lease pinned staging + device read;
+        // the queue worker is free again the moment the bytes landed
+        let (buf, n) = match stage_read(&job_ctx, &t) {
+            Ok(staged) => staged,
+            Err(e) => {
+                completer.complete(Err(e));
+                return;
+            }
+        };
+        // stage 2 (compute pool): decode off the I/O path, so this
+        // upconvert overlaps the next tensor's device read
+        let conv_ctx = Arc::clone(&job_ctx);
+        job_ctx.stage.submit(move || {
+            let result =
+                upconvert(&conv_ctx, buf, n).map(|data| Fetched { desc: t, data });
+            completer.complete(result);
+        });
     });
     handle
 }
 
-/// The per-tensor stage chain: lease pinned staging → NVMe read →
-/// f16→f32 upconvert into pooled scratch → release staging.
-fn fetch_one(ctx: &FetchCtx, t: &TensorDesc) -> anyhow::Result<Vec<f32>> {
+/// Fetch stage 1: lease pinned staging from the pool and read the fp16
+/// bytes into it.  On success the buffer stays held for the upconvert
+/// stage; on error it is released here.
+fn stage_read(ctx: &FetchCtx, t: &TensorDesc) -> anyhow::Result<(PoolBuf, usize)> {
     let key = (ctx.key_of)(t);
     let n = ctx
         .engine
@@ -198,7 +229,6 @@ fn fetch_one(ctx: &FetchCtx, t: &TensorDesc) -> anyhow::Result<Vec<f32>> {
         / 2;
     let buf = ctx.pool.acquire(t, crate::dtype::DType::F16)?;
     let mut staged_err = None;
-    let mut data = ctx.scratch.take(n);
     ctx.pool.with_buf(&buf, &mut |bytes| {
         if bytes.is_empty() {
             staged_err = Some(anyhow::anyhow!("virtual pool"));
@@ -206,15 +236,23 @@ fn fetch_one(ctx: &FetchCtx, t: &TensorDesc) -> anyhow::Result<Vec<f32>> {
         }
         if let Err(e) = ctx.engine.read(&key, &mut bytes[..n * 2]) {
             staged_err = Some(e);
-            return;
         }
+    });
+    if let Some(e) = staged_err {
+        ctx.pool.release(buf);
+        return Err(e);
+    }
+    Ok((buf, n))
+}
+
+/// Fetch stage 2: f16→f32 upconvert from the staged pool buffer into
+/// pooled scratch, then release the staging back to the pool.
+fn upconvert(ctx: &FetchCtx, buf: PoolBuf, n: usize) -> anyhow::Result<Vec<f32>> {
+    let mut data = ctx.scratch.take(n);
+    ctx.pool.with_buf(&buf, &mut |bytes| {
         f16_bytes_to_f32s(&bytes[..n * 2], &mut data);
     });
     ctx.pool.release(buf);
-    if let Some(e) = staged_err {
-        ctx.scratch.put(data);
-        return Err(e);
-    }
     Ok(data)
 }
 
@@ -231,6 +269,10 @@ mod tests {
 
     fn scratch() -> Arc<F32Scratch> {
         Arc::new(F32Scratch::new(test_arena(Mode::Real)))
+    }
+
+    fn stage() -> Arc<StageExecutor> {
+        Arc::new(StageExecutor::new(2))
     }
 
     fn seeded_engine(tag: &str) -> (Arc<DirectEngine>, Vec<TensorDesc>, std::path::PathBuf)
@@ -266,6 +308,7 @@ mod tests {
             engine,
             pool(2),
             Arc::new(IoExecutor::new(1)),
+            stage(),
             scratch(),
             plan.clone(),
             |t| format!("{}/fp16", t.name),
@@ -291,6 +334,7 @@ mod tests {
                 engine.clone(),
                 pool(depth.max(2)),
                 Arc::new(IoExecutor::new(4)),
+                stage(),
                 scratch(),
                 plan.clone(),
                 |t| format!("{}/fp16", t.name),
@@ -323,6 +367,7 @@ mod tests {
             engine,
             pool(1),
             Arc::new(IoExecutor::new(2)),
+            stage(),
             scratch(),
             plan,
             |t| format!("{}/fp16", t.name),
@@ -346,6 +391,7 @@ mod tests {
             faulty,
             pool(2),
             Arc::new(IoExecutor::new(4)),
+            stage(),
             scratch(),
             plan,
             |t| format!("{}/fp16", t.name),
@@ -365,6 +411,7 @@ mod tests {
             faulty,
             pool(2),
             Arc::new(IoExecutor::new(2)),
+            stage(),
             scratch(),
             plan.clone(),
             |t| format!("{}/fp16", t.name),
@@ -411,6 +458,9 @@ mod tests {
         }
         fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
             self.0.read(key, out)
+        }
+        fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
+            self.0.write_at(key, offset, data)
         }
         fn len_of(&self, key: &str) -> Option<usize> {
             self.0.len_of(key)

@@ -13,12 +13,18 @@
 //! - bf16 states (§VI-B-3a "pure half-precision optimizer"): `m`, `v`,
 //!   and master `p` stored as bf16 (direct truncation from f32), halving
 //!   optimizer I/O volume — Fig. 20 / Table VI.
+//!
+//! Residency and streaming live in [`states`]: the sequential
+//! reference loop, the whole-group double-buffered swap, and the
+//! staged-tile pipeline (`step_groups_tiled`) that caps peak pinned
+//! DRAM at `O(tile_bytes × depth)` independent of group size.  All
+//! three drive the kernels below and are bit-identical.
 
 pub mod states;
 
 pub use states::{
-    step_groups_pipelined, OptimState, PipelineStats, StateBufs, StateDtype,
-    StateFetch, StateScratch, StateWriteback,
+    step_groups_pipelined, step_groups_tiled, OptimState, PipelineStats, StateBufs,
+    StateDtype, StateFetch, StateScratch, StateWriteback, TILE_PIPELINE_DEPTH,
 };
 
 use crate::util::par;

@@ -1,4 +1,4 @@
-//! Optimizer state residency: SSD-backed subgroup swapping.
+//! Optimizer state residency: SSD-backed subgroup swapping, tiled.
 //!
 //! ZeRO-Infinity updates optimizer states in *subgroups*: for each
 //! contiguous span of parameters it reads (master, m, v) from SSD into
@@ -6,33 +6,49 @@
 //! memory holds only a subgroup at a time, not 12 bytes/param.  This
 //! module owns that loop and its I/O-volume accounting (Fig. 20).
 //!
-//! Two drivers exist over the same arithmetic:
+//! Three drivers exist over the same arithmetic:
 //!
 //! - [`OptimState::step`] — the sequential reference: read m/v/master,
 //!   Adam, write back, one group at a time.  Every byte of I/O is
 //!   foreground stall.
 //! - [`step_groups_pipelined`] — the double-buffered swap: group k+1's
 //!   states are fetched over the async queue while Adam runs on group
-//!   k and group k-1's write-back drains.
+//!   k and group k-1's write-back drains.  Peak pinned bytes scale
+//!   with the *largest group* — one embedding or MoE-expert group sets
+//!   the high-water mark regardless of the budget.
+//! - [`step_groups_tiled`] — the staged-tile pipeline: every group's
+//!   m/v/master streams are split into fixed-byte tiles
+//!   (`TrainSpec::optim_tile_bytes`) and driven through four
+//!   overlapping stages, with the dtype conversions on a compute-side
+//!   [`StageExecutor`] instead of the NVMe queue workers:
 //!
 //! ```text
-//!   time ──►
-//!   fetch:    [g0] [g1]  [g2]  [g3]
-//!   adam:          [g0]  [g1]  [g2]  [g3]
-//!   write:               [g0]  [g1]  [g2]  [g3]
+//!   fetch (NVMe queue):   [t0] [t1] [t2] [t3]
+//!   adam  (caller):            [t0] [t1] [t2] [t3]
+//!   convert (stage pool):           [t0] [t1] [t2] [t3]
+//!   write (NVMe queue):              [t0]  [t1]  [t2]  [t3]
 //! ```
 //!
-//! At most two generations of (master, m, v) buffers are alive at a
-//! time — the bounded double-buffer that also flattens the peak-DRAM
-//! spike the paper attributes to optimizer bursts (§III-C).  Both
-//! drivers produce bit-identical state: same reads, same arithmetic,
-//! same writes, only reordered in time across distinct keys.
+//!   In-flight state lives in real [`PinnedArena`] leases
+//!   (`Cat::OptimBuf` for m/v/master tiles, `Cat::SwapBuf` for the
+//!   fp16 window), bounded by the fetch and write-back windows — peak
+//!   pinned optimizer memory is `O(tile_bytes × depth)`, *independent
+//!   of group size* (ZeRO-Infinity's subgroup semantics at fixed byte
+//!   granularity; SSDTrain's fixed-window overlapped transfers).
+//!
+//! All drivers produce bit-identical state: same bytes read, same
+//! elementwise arithmetic over disjoint windows, same bytes written,
+//! only reordered in time across distinct keys/ranges.  `tile_bytes =
+//! 0` falls back to the whole-group double-buffer.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::dtype::DType;
-use crate::pinned::{Cat, PinnedArena};
+use crate::pinned::{Cat, Lease, PinnedArena};
 use crate::ssd::{AsyncEngine, IoHandle, NvmeEngine};
+use crate::util::stage::StageExecutor;
 
 /// Optimizer state storage precision (paper §VI-B-3a).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -51,6 +67,22 @@ impl StateDtype {
 
     pub fn bytes_per_elem(self) -> usize {
         self.dtype().size()
+    }
+}
+
+/// Produce the fp16 compute window from an updated master window (its
+/// raw stored bytes: LE f32 or LE bf16).  **The** downconvert all
+/// drivers share — sequential, whole-group pipelined, tiled, and the
+/// tiled degradation paths — kept in one place so the bit-identity
+/// guarantee has a single implementation.
+fn master_to_fp16(dtype: StateDtype, master: &[u8], fp16: &mut [u8]) {
+    match dtype {
+        StateDtype::F32 => crate::dtype::f32_le_bytes_to_f16_bytes(master, fp16),
+        StateDtype::BF16 => {
+            let mut pf = vec![0f32; master.len() / 2];
+            crate::dtype::bf16_bytes_to_f32s(master, &mut pf);
+            crate::dtype::f32s_to_f16_bytes(&pf, fp16);
+        }
     }
 }
 
@@ -138,7 +170,7 @@ impl OptimState {
                 engine.write(&k_p, crate::dtype::f32s_as_bytes(&p))?;
                 engine.write(&k_m, crate::dtype::f32s_as_bytes(&m))?;
                 engine.write(&k_v, crate::dtype::f32s_as_bytes(&v))?;
-                crate::dtype::f32s_to_f16_bytes(&p, &mut fp16);
+                master_to_fp16(self.dtype, crate::dtype::f32s_as_bytes(&p), &mut fp16);
             }
             StateDtype::BF16 => {
                 let mut p = vec![0u8; n * 2];
@@ -151,10 +183,7 @@ impl OptimState {
                 engine.write(&k_p, &p)?;
                 engine.write(&k_m, &m)?;
                 engine.write(&k_v, &v)?;
-                // bf16 -> f32 -> f16 for the compute copy
-                let mut pf = vec![0f32; n];
-                crate::dtype::bf16_bytes_to_f32s(&p, &mut pf);
-                crate::dtype::f32s_to_f16_bytes(&pf, &mut fp16);
+                master_to_fp16(self.dtype, &p, &mut fp16);
             }
         }
         engine.write(fp16_key, &fp16)?;
@@ -210,7 +239,7 @@ impl OptimState {
                     self.group
                 );
                 super::adam_step_f32(p, grads, m, v, step, grad_scale, hp, threads);
-                crate::dtype::f32s_to_f16_bytes(p, fp16);
+                master_to_fp16(StateDtype::F32, crate::dtype::f32s_as_bytes(p), fp16);
             }
             StateBufs::Bf16 { p, m, v } => {
                 anyhow::ensure!(
@@ -219,9 +248,7 @@ impl OptimState {
                     self.group
                 );
                 super::adam_step_bf16(p, grads, m, v, step, grad_scale, hp, threads);
-                let mut pf = vec![0f32; n];
-                crate::dtype::bf16_bytes_to_f32s(p, &mut pf);
-                crate::dtype::f32s_to_f16_bytes(&pf, fp16);
+                master_to_fp16(StateDtype::BF16, p, fp16);
             }
         }
         Ok(())
@@ -346,6 +373,14 @@ pub struct PipelineStats {
     /// Seconds the driver thread blocked waiting on fetch/write-back
     /// completions (I/O *not* hidden behind the Adam compute).
     pub wait_secs: f64,
+    /// Tiles streamed by [`step_groups_tiled`] (0 for the whole-group
+    /// drivers).
+    pub tiles: u64,
+    /// Tiles the staged pipeline degraded to the synchronous unpinned
+    /// path because the arena refused a lease (pinned budget pressure
+    /// from other components).  Correctness is unaffected; a non-zero
+    /// count means the budget is too tight for the tile window.
+    pub degraded_tiles: u64,
 }
 
 /// Double-buffered SSD-swapped AdamW over `groups`: while Adam runs on
@@ -399,6 +434,371 @@ pub fn step_groups_pipelined(
         wb.wait(&scratch)?;
         stats.wait_secs += t0.elapsed().as_secs_f64();
     }
+    Ok(stats)
+}
+
+// ---------------------------------------------------------------------------
+// The staged-tile driver.
+
+/// Default tile-pipeline window: fetch generations kept in flight and
+/// write-back generations allowed to drain behind compute.
+pub const TILE_PIPELINE_DEPTH: usize = 2;
+
+/// One tile's in-flight fetch: three pinned leases filling off the
+/// NVMe queue.
+struct TileFetch {
+    g: usize,
+    start: usize,
+    cnt: usize,
+    p: IoHandle<Lease>,
+    m: IoHandle<Lease>,
+    v: IoHandle<Lease>,
+}
+
+/// One tile's in-flight write-back (m/v/master windows + the fp16
+/// compute window); waiting it drops the leases, recycling their
+/// extents.
+struct TileWriteback {
+    handles: Vec<IoHandle<Lease>>,
+}
+
+impl TileWriteback {
+    fn drain(self) -> anyhow::Result<()> {
+        for h in self.handles {
+            h.wait()?;
+        }
+        Ok(())
+    }
+}
+
+/// Queue one tile's three ranged reads into fresh pinned leases.  The
+/// only failure is a lease refusal (typed, so the driver can degrade
+/// instead of aborting mid-step); submission itself cannot fail.
+fn submit_tile_fetch(
+    aio: &AsyncEngine,
+    arena: &PinnedArena,
+    st: &OptimState,
+    g: usize,
+    start: usize,
+    cnt: usize,
+) -> Result<TileFetch, crate::pinned::ArenaError> {
+    let es = st.dtype.bytes_per_elem();
+    let [k_p, k_m, k_v] = state_keys(&st.group);
+    let off = start * es;
+    let len = cnt * es;
+    // leases are taken on the caller thread so a budget refusal
+    // surfaces synchronously as a structured error
+    let lp = arena.lease(len, Cat::OptimBuf)?;
+    let lm = arena.lease(len, Cat::OptimBuf)?;
+    let lv = arena.lease(len, Cat::OptimBuf)?;
+    Ok(TileFetch {
+        g,
+        start,
+        cnt,
+        p: aio.submit_read_at_lease(k_p, off, lp),
+        m: aio.submit_read_at_lease(k_m, off, lm),
+        v: aio.submit_read_at_lease(k_v, off, lv),
+    })
+}
+
+/// Budget-degraded path for one whole tile: fetch, Adam, downconvert,
+/// and write back synchronously through transient unpinned buffers —
+/// same kernels, same disjoint byte windows, so running a tile this
+/// way (even out of order relative to in-flight pipelined tiles) is
+/// bit-identical.  Slower, but the arena's "callers degrade, never
+/// abort" contract holds: budget pressure can never tear a step.
+#[allow(clippy::too_many_arguments)]
+fn step_tile_sync(
+    engine: &dyn NvmeEngine,
+    st: &OptimState,
+    grads: &[f32],
+    start: usize,
+    cnt: usize,
+    step: u64,
+    grad_scale: f32,
+    hp: &super::AdamParams,
+    threads: usize,
+    fp16_key: &str,
+) -> anyhow::Result<()> {
+    let es = st.dtype.bytes_per_elem();
+    let [k_p, k_m, k_v] = state_keys(&st.group);
+    let off = start * es;
+    let gslice = &grads[start..start + cnt];
+    let mut fp16 = vec![0u8; cnt * 2];
+    match st.dtype {
+        StateDtype::F32 => {
+            let mut p = vec![0f32; cnt];
+            let mut m = vec![0f32; cnt];
+            let mut v = vec![0f32; cnt];
+            engine.read_at(&k_p, off, crate::dtype::f32s_as_bytes_mut(&mut p))?;
+            engine.read_at(&k_m, off, crate::dtype::f32s_as_bytes_mut(&mut m))?;
+            engine.read_at(&k_v, off, crate::dtype::f32s_as_bytes_mut(&mut v))?;
+            super::adam_step_f32(&mut p, gslice, &mut m, &mut v, step, grad_scale, hp, threads);
+            engine.write_at(&k_p, off, crate::dtype::f32s_as_bytes(&p))?;
+            engine.write_at(&k_m, off, crate::dtype::f32s_as_bytes(&m))?;
+            engine.write_at(&k_v, off, crate::dtype::f32s_as_bytes(&v))?;
+            master_to_fp16(st.dtype, crate::dtype::f32s_as_bytes(&p), &mut fp16);
+        }
+        StateDtype::BF16 => {
+            let mut p = vec![0u8; cnt * 2];
+            let mut m = vec![0u8; cnt * 2];
+            let mut v = vec![0u8; cnt * 2];
+            engine.read_at(&k_p, off, &mut p)?;
+            engine.read_at(&k_m, off, &mut m)?;
+            engine.read_at(&k_v, off, &mut v)?;
+            super::adam_step_bf16(&mut p, gslice, &mut m, &mut v, step, grad_scale, hp, threads);
+            engine.write_at(&k_p, off, &p)?;
+            engine.write_at(&k_m, off, &m)?;
+            engine.write_at(&k_v, off, &v)?;
+            master_to_fp16(st.dtype, &p, &mut fp16);
+        }
+    }
+    engine.write_at(fp16_key, start * 2, &fp16)?;
+    Ok(())
+}
+
+/// [`step_tile_sync`]'s write-back half, for a tile whose states are
+/// already updated in leases but whose fp16 window lease was refused:
+/// downconvert into a transient buffer and write everything back
+/// synchronously (the leases drop on return, freeing their extents).
+fn writeback_tile_sync(
+    engine: &dyn NvmeEngine,
+    st: &OptimState,
+    p: Lease,
+    m: Lease,
+    v: Lease,
+    start: usize,
+    cnt: usize,
+    fp16_key: &str,
+) -> anyhow::Result<()> {
+    let es = st.dtype.bytes_per_elem();
+    let [k_p, k_m, k_v] = state_keys(&st.group);
+    let off = start * es;
+    let mut fp16 = vec![0u8; cnt * 2];
+    master_to_fp16(st.dtype, p.as_slice(), &mut fp16);
+    engine.write_at(&k_p, off, p.as_slice())?;
+    engine.write_at(&k_m, off, m.as_slice())?;
+    engine.write_at(&k_v, off, v.as_slice())?;
+    engine.write_at(fp16_key, start * 2, &fp16)?;
+    Ok(())
+}
+
+/// Queue tile downconvert + write-back: the fp16 conversion runs on
+/// the compute-side stage executor (not an NVMe queue worker, not the
+/// caller), then the stage job itself submits the four ranged writes.
+/// The only failure is the fp16 window's lease refusal (typed; the
+/// tile's state leases are handed back to the caller for the
+/// synchronous fallback).
+#[allow(clippy::too_many_arguments)]
+fn submit_tile_writeback(
+    aio: &AsyncEngine,
+    stage: &StageExecutor,
+    arena: &PinnedArena,
+    st: &OptimState,
+    p: Lease,
+    m: Lease,
+    v: Lease,
+    start: usize,
+    cnt: usize,
+    fp16_key: &str,
+) -> Result<IoHandle<TileWriteback>, (crate::pinned::ArenaError, Lease, Lease, Lease)> {
+    let mut fp16 = match arena.lease(cnt * 2, Cat::SwapBuf) {
+        Ok(l) => l,
+        Err(e) => return Err((e, p, m, v)),
+    };
+    let (completer, handle) = IoHandle::pair();
+    let aio = aio.clone();
+    let [k_p, k_m, k_v] = state_keys(&st.group);
+    let dtype = st.dtype;
+    let off = start * dtype.bytes_per_elem();
+    let fp16_off = start * 2;
+    let fp16_key = fp16_key.to_string();
+    stage.submit(move || {
+        // downconvert the updated master window into the fp16 compute
+        // window — the same shared conversion `OptimState::step` runs,
+        // over an elementwise-disjoint range
+        master_to_fp16(dtype, p.as_slice(), fp16.as_mut_slice());
+        let wb = TileWriteback {
+            handles: vec![
+                aio.submit_write_at_lease(k_p, off, p),
+                aio.submit_write_at_lease(k_m, off, m),
+                aio.submit_write_at_lease(k_v, off, v),
+                aio.submit_write_at_lease(fp16_key, fp16_off, fp16),
+            ],
+        };
+        completer.complete(Ok(wb));
+    });
+    Ok(handle)
+}
+
+/// Tile-granular four-stage AdamW over `groups`: fetch → upconvert →
+/// Adam → downconvert/write-back, overlapped across tiles of
+/// `tile_bytes` state bytes.  Peak pinned optimizer memory is bounded
+/// by the fetch window (`depth` tiles × 3 leases) plus the write-back
+/// window (`depth` tiles × 4 leases) — independent of group size,
+/// enforced through real arena leases.  Bit-identical to
+/// [`OptimState::step`] and [`step_groups_pipelined`]; `tile_bytes =
+/// 0` delegates to the whole-group double-buffer.
+///
+/// Real-mode arenas only (Virtual leases have no storage to stage
+/// tiles in).
+#[allow(clippy::too_many_arguments)]
+pub fn step_groups_tiled(
+    aio: &AsyncEngine,
+    stage: &StageExecutor,
+    arena: &Arc<PinnedArena>,
+    groups: &[OptimState],
+    grads: &[&[f32]],
+    fp16_keys: &[String],
+    step: u64,
+    grad_scale: f32,
+    hp: &super::AdamParams,
+    threads: usize,
+    tile_bytes: usize,
+    depth: usize,
+) -> anyhow::Result<PipelineStats> {
+    anyhow::ensure!(
+        groups.len() == grads.len() && groups.len() == fp16_keys.len(),
+        "groups/grads/keys length mismatch"
+    );
+    if tile_bytes == 0 {
+        return step_groups_pipelined(
+            aio, arena, groups, grads, fp16_keys, step, grad_scale, hp, threads,
+        );
+    }
+    // validate everything and reserve fp16 destinations before any
+    // tile is in flight — errors surface before a byte moves
+    for (g, st) in groups.iter().enumerate() {
+        anyhow::ensure!(
+            grads[g].len() == st.numel,
+            "grad size mismatch for '{}'",
+            st.group
+        );
+        aio.engine().reserve(&fp16_keys[g], st.numel * 2)?;
+    }
+    // fixed-byte tile plan across all groups, tails included
+    let mut plan: Vec<(usize, usize, usize)> = Vec::new();
+    for (g, st) in groups.iter().enumerate() {
+        let tile_elems = (tile_bytes / st.dtype.bytes_per_elem()).max(1);
+        let mut start = 0;
+        while start < st.numel {
+            let cnt = tile_elems.min(st.numel - start);
+            plan.push((g, start, cnt));
+            start += cnt;
+        }
+    }
+    let depth = depth.max(1);
+    let mut stats = PipelineStats { tiles: plan.len() as u64, ..Default::default() };
+    let mut next = 0usize;
+    let mut fetches: VecDeque<TileFetch> = VecDeque::new();
+    let mut wbs: VecDeque<IoHandle<TileWriteback>> = VecDeque::new();
+    loop {
+        // keep the fetch window full; a refused lease degrades that
+        // one tile to the synchronous unpinned path (disjoint windows
+        // make out-of-order completion safe) instead of aborting a
+        // step whose earlier tiles are already durable
+        while next < plan.len() && fetches.len() < depth {
+            let (g, s, c) = plan[next];
+            next += 1;
+            match submit_tile_fetch(aio, arena, &groups[g], g, s, c) {
+                Ok(tf) => fetches.push_back(tf),
+                Err(_budget) => {
+                    step_tile_sync(
+                        aio.engine().as_ref(),
+                        &groups[g],
+                        grads[g],
+                        s,
+                        c,
+                        step,
+                        grad_scale,
+                        hp,
+                        threads,
+                        &fp16_keys[g],
+                    )?;
+                    stats.degraded_tiles += 1;
+                }
+            }
+        }
+        let Some(tf) = fetches.pop_front() else { break };
+        let t0 = Instant::now();
+        let mut p = tf.p.wait()?;
+        let mut m = tf.m.wait()?;
+        let mut v = tf.v.wait()?;
+        stats.wait_secs += t0.elapsed().as_secs_f64();
+        let st = &groups[tf.g];
+        let gslice = &grads[tf.g][tf.start..tf.start + tf.cnt];
+        // Adam on the caller thread, overlapping the next tile's fetch
+        // and the previous tiles' conversion/write-back — the same
+        // kernels `step` runs, over an elementwise-disjoint window
+        match st.dtype {
+            StateDtype::F32 => super::adam_step_f32(
+                p.as_f32_mut(),
+                gslice,
+                m.as_f32_mut(),
+                v.as_f32_mut(),
+                step,
+                grad_scale,
+                hp,
+                threads,
+            ),
+            StateDtype::BF16 => super::adam_step_bf16(
+                p.as_mut_slice(),
+                gslice,
+                m.as_mut_slice(),
+                v.as_mut_slice(),
+                step,
+                grad_scale,
+                hp,
+                threads,
+            ),
+        }
+        // bound in-flight write-back generations before queueing ours
+        while wbs.len() >= depth {
+            let wb = wbs.pop_front().expect("non-empty window");
+            let t0 = Instant::now();
+            wb.wait()?.drain()?;
+            stats.wait_secs += t0.elapsed().as_secs_f64();
+        }
+        match submit_tile_writeback(
+            aio,
+            stage,
+            arena,
+            st,
+            p,
+            m,
+            v,
+            tf.start,
+            tf.cnt,
+            &fp16_keys[tf.g],
+        ) {
+            Ok(h) => wbs.push_back(h),
+            Err((_budget, p, m, v)) => {
+                // fp16 window refused: finish this tile synchronously
+                // from the leases we already hold
+                writeback_tile_sync(
+                    aio.engine().as_ref(),
+                    st,
+                    p,
+                    m,
+                    v,
+                    tf.start,
+                    tf.cnt,
+                    &fp16_keys[tf.g],
+                )?;
+                stats.degraded_tiles += 1;
+            }
+        }
+    }
+    while let Some(wb) = wbs.pop_front() {
+        let t0 = Instant::now();
+        wb.wait()?.drain()?;
+        stats.wait_secs += t0.elapsed().as_secs_f64();
+    }
+    // no fsync here: crash-consistency of a step is out of scope
+    // (training state is rebuilt on restart — see ROADMAP), so paying
+    // a per-step durability tax the whole-group paths don't pay would
+    // buy nothing.  Callers that do need durability (e.g. a future
+    // checkpoint path) get it explicitly via `NvmeEngine::flush`.
     Ok(stats)
 }
 
@@ -567,5 +967,368 @@ mod tests {
     fn state_keys_are_namespaced() {
         let [p, m, v] = state_keys("layers.0.wq");
         assert!(p.contains("master") && m.contains("adam_m") && v.contains("adam_v"));
+    }
+
+    // ---- staged-tile driver ------------------------------------------
+
+    /// Compare every stored artifact of two engines byte-for-byte.
+    fn assert_engines_identical(
+        a: &dyn crate::ssd::NvmeEngine,
+        b: &dyn crate::ssd::NvmeEngine,
+        sizes: &[usize],
+        es: usize,
+        ctx: &str,
+    ) {
+        for (g, n) in sizes.iter().enumerate() {
+            for (suffix, width) in
+                [("master", es), ("adam_m", es), ("adam_v", es), ("fp16", 2)]
+            {
+                let key = format!("g{g}/{suffix}");
+                let mut va = vec![0u8; n * width];
+                let mut vb = vec![0u8; n * width];
+                a.read(&key, &mut va).unwrap();
+                b.read(&key, &mut vb).unwrap();
+                assert_eq!(va, vb, "{ctx}: {key} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_bit_identical_to_sequential_and_pipelined() {
+        // covers: group smaller than one tile (64), exact tile
+        // multiples (512), and ragged tails (700/300/1100)
+        for dtype in [StateDtype::F32, StateDtype::BF16] {
+            let (eng_a, dir_a) = engine(&format!("tseq-{dtype:?}"));
+            let (eng_b, dir_b) = engine(&format!("tpipe-{dtype:?}"));
+            let (eng_c, dir_c) = engine(&format!("ttile-{dtype:?}"));
+            let hp = AdamParams { weight_decay: 0.01, ..Default::default() };
+            let mut rng = crate::util::rng::Xoshiro256::new(11);
+            let sizes = [64usize, 700, 300, 1100, 512];
+            let tile_bytes = 1024; // 256 f32 / 512 bf16 elems per tile
+            let mut states_a = Vec::new();
+            let mut states_b = Vec::new();
+            let mut states_c = Vec::new();
+            for (g, n) in sizes.iter().enumerate() {
+                let p0: Vec<f32> = (0..*n).map(|_| rng.normal() as f32).collect();
+                states_a
+                    .push(OptimState::init(&eng_a, &format!("g{g}"), &p0, dtype).unwrap());
+                states_b
+                    .push(OptimState::init(&eng_b, &format!("g{g}"), &p0, dtype).unwrap());
+                states_c
+                    .push(OptimState::init(&eng_c, &format!("g{g}"), &p0, dtype).unwrap());
+            }
+            let eng_b: Arc<dyn crate::ssd::NvmeEngine> = Arc::new(eng_b);
+            let eng_c: Arc<dyn crate::ssd::NvmeEngine> = Arc::new(eng_c);
+            let aio_b = AsyncEngine::new(Arc::clone(&eng_b), 3);
+            let aio_c = AsyncEngine::new(Arc::clone(&eng_c), 3);
+            let stage = StageExecutor::new(2);
+            let arena_b = arena();
+            let arena_c = arena();
+            let keys: Vec<String> =
+                (0..sizes.len()).map(|g| format!("g{g}/fp16")).collect();
+            for t in 1..=3u64 {
+                let grads: Vec<Vec<f32>> = sizes
+                    .iter()
+                    .map(|n| (0..*n).map(|_| rng.normal() as f32).collect())
+                    .collect();
+                for (g, st) in states_a.iter().enumerate() {
+                    st.step(&eng_a, &grads[g], t, 2.0, &hp, 1, &keys[g]).unwrap();
+                }
+                let grad_refs: Vec<&[f32]> =
+                    grads.iter().map(|g| g.as_slice()).collect();
+                step_groups_pipelined(
+                    &aio_b, &arena_b, &states_b, &grad_refs, &keys, t, 2.0, &hp, 1,
+                )
+                .unwrap();
+                let stats = step_groups_tiled(
+                    &aio_c,
+                    &stage,
+                    &arena_c,
+                    &states_c,
+                    &grad_refs,
+                    &keys,
+                    t,
+                    2.0,
+                    &hp,
+                    1,
+                    tile_bytes,
+                    TILE_PIPELINE_DEPTH,
+                )
+                .unwrap();
+                // one tile for the sub-tile group, ceil-div for tails
+                let es = dtype.bytes_per_elem();
+                let tile_elems = tile_bytes / es;
+                let want: usize =
+                    sizes.iter().map(|n| n.div_ceil(tile_elems)).sum();
+                assert_eq!(stats.tiles as usize, want, "{dtype:?} tile count");
+            }
+            let es = dtype.bytes_per_elem();
+            assert_engines_identical(
+                &eng_a,
+                eng_b.as_ref(),
+                &sizes,
+                es,
+                &format!("{dtype:?} pipelined"),
+            );
+            assert_engines_identical(
+                &eng_a,
+                eng_c.as_ref(),
+                &sizes,
+                es,
+                &format!("{dtype:?} tiled"),
+            );
+            // the staged tiles leased real pinned spans and returned
+            // every one of them
+            assert_eq!(arena_c.stats().requested_bytes, 0);
+            assert!(arena_c.stats().recycled > 0, "tile leases never recycled");
+            std::fs::remove_dir_all(&dir_a).ok();
+            std::fs::remove_dir_all(&dir_b).ok();
+            std::fs::remove_dir_all(&dir_c).ok();
+        }
+    }
+
+    #[test]
+    fn tile_zero_falls_back_to_whole_group_path() {
+        let (eng_a, dir_a) = engine("tz-seq");
+        let (eng_b, dir_b) = engine("tz-tile");
+        let hp = AdamParams::default();
+        let n = 900usize;
+        let p0 = vec![0.5f32; n];
+        let st_a = OptimState::init(&eng_a, "g0", &p0, StateDtype::F32).unwrap();
+        let st_b = OptimState::init(&eng_b, "g0", &p0, StateDtype::F32).unwrap();
+        let eng_b: Arc<dyn crate::ssd::NvmeEngine> = Arc::new(eng_b);
+        let aio = AsyncEngine::new(Arc::clone(&eng_b), 2);
+        let stage = StageExecutor::new(1);
+        let g = vec![0.25f32; n];
+        st_a.step(&eng_a, &g, 1, 1.0, &hp, 1, "g0/fp16").unwrap();
+        let stats = step_groups_tiled(
+            &aio,
+            &stage,
+            &arena(),
+            std::slice::from_ref(&st_b),
+            &[g.as_slice()],
+            &["g0/fp16".to_string()],
+            1,
+            1.0,
+            &hp,
+            1,
+            0, // tile_bytes = 0: whole-group double-buffer
+            TILE_PIPELINE_DEPTH,
+        )
+        .unwrap();
+        assert_eq!(stats.tiles, 0, "fallback path must not tile");
+        assert_engines_identical(&eng_a, eng_b.as_ref(), &[n], 4, "fallback");
+        // wrong-size grads still error cleanly out of the tiled driver
+        let bad: &[f32] = &[0.0; 4];
+        assert!(step_groups_tiled(
+            &aio,
+            &stage,
+            &arena(),
+            std::slice::from_ref(&st_b),
+            &[bad],
+            &["g0/fp16".to_string()],
+            2,
+            1.0,
+            &hp,
+            1,
+            4096,
+            TILE_PIPELINE_DEPTH,
+        )
+        .is_err());
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn tiled_peak_pinned_capped_independent_of_group_size() {
+        // the tentpole claim: a group ~100x the tile updates under a
+        // pinned budget a whole-group fetch could never satisfy, and
+        // stays bit-identical to the sequential reference
+        let (eng_a, dir_a) = engine("cap-seq");
+        let (eng_b, dir_b) = engine("cap-tile");
+        let hp = AdamParams::default();
+        let n = 400_000usize; // 1.6 MiB per f32 stream, 4.8 MiB per fetch
+        let tile_bytes = 16 << 10;
+        let budget = 512 << 10;
+        let mut rng = crate::util::rng::Xoshiro256::new(4);
+        let p0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let st_a = OptimState::init(&eng_a, "g0", &p0, StateDtype::F32).unwrap();
+        let st_b = OptimState::init(&eng_b, "g0", &p0, StateDtype::F32).unwrap();
+        let eng_b: Arc<dyn crate::ssd::NvmeEngine> = Arc::new(eng_b);
+        let aio = AsyncEngine::new(Arc::clone(&eng_b), 3);
+        let stage = StageExecutor::new(2);
+        let tracker = Arc::new(crate::pinned::MemoryTracker::new());
+        let capped = PinnedArena::new(
+            Arc::new(crate::pinned::AlignedAllocator::new(Mode::Real, tracker)),
+            crate::pinned::ArenaConfig {
+                budget_bytes: Some(budget),
+                ..Default::default()
+            },
+        );
+        for t in 1..=2u64 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            st_a.step(&eng_a, &g, t, 1.0, &hp, 1, "g0/fp16").unwrap();
+            step_groups_tiled(
+                &aio,
+                &stage,
+                &capped,
+                std::slice::from_ref(&st_b),
+                &[g.as_slice()],
+                &["g0/fp16".to_string()],
+                t,
+                1.0,
+                &hp,
+                1,
+                tile_bytes,
+                TILE_PIPELINE_DEPTH,
+            )
+            .unwrap();
+        }
+        let st = capped.stats();
+        assert!(
+            st.peak_reserved <= budget,
+            "peak pinned {} exceeded the {budget} B budget",
+            st.peak_reserved
+        );
+        // the whole-group working set (3 x 1.6 MiB) never materialized
+        assert!(
+            capped.watermark(Cat::OptimBuf).charged_peak <= budget,
+            "optimizer staging outgrew the budget"
+        );
+        assert_engines_identical(&eng_a, eng_b.as_ref(), &[n], 4, "capped tiled");
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn tiled_degrades_to_sync_tiles_under_impossible_budget() {
+        // a budget below one padded tile refuses every lease: the
+        // driver must degrade each tile to the unpinned synchronous
+        // path — never abort — and stay bit-identical
+        let (eng_a, dir_a) = engine("deg-seq");
+        let (eng_b, dir_b) = engine("deg-tile");
+        let hp = AdamParams::default();
+        let n = 5000usize;
+        let tile_bytes = 4096usize;
+        let mut rng = crate::util::rng::Xoshiro256::new(6);
+        let p0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let st_a = OptimState::init(&eng_a, "g0", &p0, StateDtype::F32).unwrap();
+        let st_b = OptimState::init(&eng_b, "g0", &p0, StateDtype::F32).unwrap();
+        let eng_b: Arc<dyn crate::ssd::NvmeEngine> = Arc::new(eng_b);
+        let aio = AsyncEngine::new(Arc::clone(&eng_b), 2);
+        let stage = StageExecutor::new(1);
+        let tracker = Arc::new(crate::pinned::MemoryTracker::new());
+        let starved = PinnedArena::new(
+            Arc::new(crate::pinned::AlignedAllocator::new(Mode::Real, tracker)),
+            crate::pinned::ArenaConfig {
+                budget_bytes: Some(1024), // below one padded tile
+                ..Default::default()
+            },
+        );
+        for t in 1..=2u64 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            st_a.step(&eng_a, &g, t, 1.0, &hp, 1, "g0/fp16").unwrap();
+            let stats = step_groups_tiled(
+                &aio,
+                &stage,
+                &starved,
+                std::slice::from_ref(&st_b),
+                &[g.as_slice()],
+                &["g0/fp16".to_string()],
+                t,
+                1.0,
+                &hp,
+                1,
+                tile_bytes,
+                TILE_PIPELINE_DEPTH,
+            )
+            .unwrap();
+            assert_eq!(
+                stats.degraded_tiles, stats.tiles,
+                "every tile must have degraded, none aborted"
+            );
+        }
+        assert_eq!(starved.stats().requested_bytes, 0);
+        assert_engines_identical(&eng_a, eng_b.as_ref(), &[n], 4, "degraded tiled");
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn prop_tiled_matches_step_across_random_group_shapes() {
+        use crate::prop_assert;
+        use crate::util::proptest::{check, Config};
+        check("optim-tiled", Config { cases: 10, ..Default::default() }, |rng, size| {
+            let dtype = if rng.next_u64() % 2 == 0 {
+                StateDtype::F32
+            } else {
+                StateDtype::BF16
+            };
+            let case = rng.next_u64();
+            let (eng_a, dir_a) = engine(&format!("pa{case}"));
+            let (eng_b, dir_b) = engine(&format!("pb{case}"));
+            let hp = AdamParams { weight_decay: 0.005, ..Default::default() };
+            let n_groups = rng.range(1, 4);
+            let sizes: Vec<usize> = (0..n_groups)
+                .map(|_| rng.range(1, (size * 4).max(3)))
+                .collect();
+            // deliberately odd tile sizes: unaligned ranged I/O + tails
+            let tile_bytes = [256usize, 1000, 4096, 16384][rng.below(4)];
+            let mut states_a = Vec::new();
+            let mut states_b = Vec::new();
+            for (g, n) in sizes.iter().enumerate() {
+                let p0: Vec<f32> = (0..*n).map(|_| rng.normal() as f32).collect();
+                states_a.push(
+                    OptimState::init(&eng_a, &format!("g{g}"), &p0, dtype)
+                        .map_err(|e| e.to_string())?,
+                );
+                states_b.push(
+                    OptimState::init(&eng_b, &format!("g{g}"), &p0, dtype)
+                        .map_err(|e| e.to_string())?,
+                );
+            }
+            let eng_b: Arc<dyn crate::ssd::NvmeEngine> = Arc::new(eng_b);
+            let aio = AsyncEngine::new(Arc::clone(&eng_b), 2);
+            let stage = StageExecutor::new(1);
+            let tile_arena = arena();
+            let keys: Vec<String> =
+                (0..sizes.len()).map(|g| format!("g{g}/fp16")).collect();
+            for t in 1..=2u64 {
+                let grads: Vec<Vec<f32>> = sizes
+                    .iter()
+                    .map(|n| (0..*n).map(|_| rng.normal() as f32).collect())
+                    .collect();
+                for (g, st) in states_a.iter().enumerate() {
+                    st.step(&eng_a, &grads[g], t, 2.0, &hp, 1, &keys[g])
+                        .map_err(|e| e.to_string())?;
+                }
+                let grad_refs: Vec<&[f32]> =
+                    grads.iter().map(|g| g.as_slice()).collect();
+                step_groups_tiled(
+                    &aio, &stage, &tile_arena, &states_b, &grad_refs, &keys, t, 2.0,
+                    &hp, 1, tile_bytes, 2,
+                )
+                .map_err(|e| e.to_string())?;
+            }
+            let es = dtype.bytes_per_elem();
+            for (g, n) in sizes.iter().enumerate() {
+                for (suffix, width) in
+                    [("master", es), ("adam_m", es), ("adam_v", es), ("fp16", 2)]
+                {
+                    let key = format!("g{g}/{suffix}");
+                    let mut a = vec![0u8; n * width];
+                    let mut b = vec![0u8; n * width];
+                    eng_a.read(&key, &mut a).map_err(|e| e.to_string())?;
+                    eng_b.read(&key, &mut b).map_err(|e| e.to_string())?;
+                    prop_assert!(
+                        a == b,
+                        "{dtype:?} tile={tile_bytes} {key} diverged (n={n})"
+                    );
+                }
+            }
+            std::fs::remove_dir_all(&dir_a).ok();
+            std::fs::remove_dir_all(&dir_b).ok();
+            Ok(())
+        });
     }
 }

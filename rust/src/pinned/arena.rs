@@ -8,13 +8,13 @@
 //! enforced invariant:
 //!
 //! ```text
-//!   bufpool  gradbuf  spill  swapper-scratch  optimizer-staging
+//!   bufpool  gradbuf  spill  swapper-scratch  optimizer-tiles
 //!      │        │       │          │                │
 //!      └────────┴───────┴────┬─────┴────────────────┘
 //!                            ▼  lease(bytes, cat) / take_*/put_*
-//!                     [ PinnedArena ]──── budget cap, per-Cat
-//!                            │            watermarks, overlap-free
-//!                            ▼            offset/len leases
+//!                     [ PinnedArena ]──── per-Cat sharded state,
+//!                            │            atomic global budget,
+//!                            ▼            overlap-free offset/len leases
 //!                  HostAllocator policy (pow2-caching | aligned)
 //! ```
 //!
@@ -25,10 +25,9 @@
 //!   backing regions obtained from the policy allocator — and a lease
 //!   is an (offset, len) carve out of one, page-granular so every
 //!   lease is DMA-aligned and viewable as `&[f32]`.  Releasing a lease
-//!   (RAII `Drop`) returns its extent for reuse; repeated same-shape
-//!   leases therefore recycle the same backing pages (the shape-class
-//!   behaviour the adaptive pool relies on), and [`PinnedArena::trim`]
-//!   drops fully-idle segments back to the allocator.
+//!   (RAII `Drop`) returns its extent for reuse, and
+//!   [`PinnedArena::trim`] drops fully-idle segments back to the
+//!   allocator.
 //! - **Scratch vectors** ([`PinnedArena::take_f32`] /
 //!   [`PinnedArena::put_f32`] and byte variants): the bounded
 //!   recycling pools behind the swapper's `F32Scratch` and the
@@ -37,6 +36,23 @@
 //!   un-charges it (it becomes transient compute memory the kernel
 //!   call owns).
 //!
+//! Concurrency: all mutable state is **sharded per category** — one
+//! lock per [`Cat`], so tile-heavy optimizer lease traffic never
+//! contends with the swapper's scratch recycling or the activation
+//! store's slot churn.  The cross-category invariants (global budget,
+//! whole-arena stats) live on atomics; the budget is enforced by a
+//! compare-and-swap reservation, so the cap can never be exceeded even
+//! under concurrent leases from different shards.
+//!
+//! Extent recycling is **size-class bucketed**: each shard indexes its
+//! free extents by power-of-two class, so a mixed stream of tile and
+//! tail leases finds a fitting extent in O(log) instead of scanning
+//! every segment — and near-best-fit is preserved (the smallest
+//! fitting extent of the first non-empty class is taken, splitting the
+//! remainder back into its class).  [`ArenaStats::recycled`] /
+//! [`ArenaStats::recycle_misses`] count free-list hits vs fresh
+//! segment pins.
+//!
 //! The budget is a cap on everything the arena holds reserved —
 //! segment bytes *including allocator-policy overhead* plus pooled
 //! scratch.  A lease that cannot fit first triggers an implicit trim;
@@ -44,8 +60,9 @@
 //! [`ArenaError::BudgetExceeded`], never an abort — callers degrade
 //! (e.g. the activation store spills to SSD).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::{Cat, HostAllocator, HostRegion, MemoryTracker};
@@ -55,8 +72,27 @@ use super::{Cat, HostAllocator, HostRegion, MemoryTracker};
 /// alignment (and f32 alignment) for free.
 pub const LEASE_ALIGN: usize = 4096;
 
+const N_CATS: usize = Cat::ALL.len();
+
+/// Shard index of a category: `Cat` is unit-only and `Cat::ALL` is in
+/// declaration order, so the discriminant *is* the index (constant
+/// time on the hot lease/release path).
+fn cat_index(cat: Cat) -> usize {
+    let i = cat as usize;
+    debug_assert_eq!(Cat::ALL[i], cat, "Cat::ALL out of declaration order");
+    i
+}
+
 fn pad(bytes: usize) -> usize {
     bytes.max(1).div_ceil(LEASE_ALIGN) * LEASE_ALIGN
+}
+
+/// Size class of an extent: floor(log2(len)).  Extents in class `c`
+/// have lengths in `[2^c, 2^(c+1))`, so any extent in a class above a
+/// request's class is guaranteed to fit.
+fn class_of(len: usize) -> u32 {
+    debug_assert!(len > 0);
+    usize::BITS - 1 - len.leading_zeros()
 }
 
 /// Structured arena failures — returned, never panicked, so callers
@@ -128,8 +164,9 @@ struct Segment {
     region: HostRegion,
     base: *mut u8,
     len: usize,
-    /// Sorted, coalesced free extents (offset, len).
-    free: Vec<(usize, usize)>,
+    /// Free extents, offset -> len (coalesced; mirrored in the shard's
+    /// size-class buckets).
+    free: BTreeMap<usize, usize>,
     live: usize,
 }
 
@@ -170,8 +207,12 @@ pub struct ArenaStats {
     pub peak_requested: usize,
     pub leases: u64,
     pub releases: u64,
-    /// Leases served from an existing free extent (no fresh pin).
+    /// Free-list hits: leases served from a recycled extent (no fresh
+    /// pin).
     pub recycled: u64,
+    /// Free-list misses: lease attempts no bucketed extent could serve
+    /// (they pinned a fresh segment, or were refused by the budget).
+    pub recycle_misses: u64,
     pub fresh_segments: u64,
 }
 
@@ -191,22 +232,185 @@ impl ArenaStats {
         }
         1.0 - self.peak_requested as f64 / self.peak_reserved as f64
     }
+
+    /// Fraction of leases served from the free list.
+    pub fn recycle_hit_rate(&self) -> f64 {
+        let total = self.recycled + self.recycle_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.recycled as f64 / total as f64
+    }
 }
 
-#[derive(Default)]
-struct State {
-    /// Segment slots per category (index-stable: trim leaves `None`).
-    segments: BTreeMap<Cat, Vec<Option<Segment>>>,
-    pools: BTreeMap<Cat, VecPool>,
-    cats: BTreeMap<Cat, CatWatermark>,
-    stats: ArenaStats,
+/// Size-class index over free extents: class -> ordered
+/// (padded len, segment, offset) candidates.
+type Buckets = BTreeMap<u32, BTreeSet<(usize, usize, usize)>>;
+
+/// All mutable state of one category, behind its own lock.
+struct CatShard {
+    cat: Cat,
+    /// Segment slots (index-stable: trim leaves `None`).
+    segments: Vec<Option<Segment>>,
+    buckets: Buckets,
+    pool: VecPool,
+    wm: CatWatermark,
+    /// Whether this category ever held arena state (gates
+    /// [`PinnedArena::watermarks`], which reports touched cats only).
+    touched: bool,
+}
+
+impl CatShard {
+    fn new(cat: Cat) -> Self {
+        Self {
+            cat,
+            segments: Vec::new(),
+            buckets: BTreeMap::new(),
+            pool: VecPool::default(),
+            wm: CatWatermark::default(),
+            touched: false,
+        }
+    }
+}
+
+fn bucket_insert(shard: &mut CatShard, len: usize, seg: usize, off: usize) {
+    shard.buckets.entry(class_of(len)).or_default().insert((len, seg, off));
+}
+
+fn bucket_remove(shard: &mut CatShard, len: usize, seg: usize, off: usize) {
+    let cls = class_of(len);
+    if let Some(set) = shard.buckets.get_mut(&cls) {
+        set.remove(&(len, seg, off));
+        if set.is_empty() {
+            shard.buckets.remove(&cls);
+        }
+    }
+}
+
+/// Return extent `[off, off+len)` of segment `seg_idx` to the free
+/// state, coalescing with adjacent free extents (bucket entries of
+/// merged neighbours are replaced by the merged extent's).
+fn insert_free_extent(shard: &mut CatShard, seg_idx: usize, off: usize, len: usize) {
+    let mut off = off;
+    let mut len = len;
+    let (pred, succ) = {
+        let seg = shard.segments[seg_idx].as_ref().expect("segment present");
+        let pred = seg.free.range(..off).next_back().map(|(&o, &l)| (o, l));
+        let succ = seg.free.range(off..).next().map(|(&o, &l)| (o, l));
+        (pred, succ)
+    };
+    if let Some((po, pl)) = pred {
+        if po + pl == off {
+            shard.segments[seg_idx].as_mut().unwrap().free.remove(&po);
+            bucket_remove(shard, pl, seg_idx, po);
+            off = po;
+            len += pl;
+        }
+    }
+    if let Some((so, sl)) = succ {
+        if off + len == so {
+            shard.segments[seg_idx].as_mut().unwrap().free.remove(&so);
+            bucket_remove(shard, sl, seg_idx, so);
+            len += sl;
+        }
+    }
+    shard.segments[seg_idx].as_mut().unwrap().free.insert(off, len);
+    bucket_insert(shard, len, seg_idx, off);
+}
+
+/// Take a free extent that fits `padded` bytes via the size-class
+/// buckets: smallest fitting extent of the request's own class, else
+/// the smallest extent of the next non-empty class up.  Splits the
+/// remainder back into its class.  Returns (segment, offset).
+fn take_fit(shard: &mut CatShard, padded: usize) -> Option<(usize, usize)> {
+    let want = class_of(padded);
+    let mut found: Option<(usize, usize, usize)> = None; // (len, seg, off)
+    for (&cls, set) in shard.buckets.range(want..) {
+        let cand = if cls == want {
+            // same class: lengths straddle `padded`; take the smallest
+            // that still fits
+            set.range((padded, 0, 0)..).next()
+        } else {
+            // higher class: everything fits; smallest is best-fit
+            set.iter().next()
+        };
+        if let Some(&(len, seg, off)) = cand {
+            found = Some((len, seg, off));
+            break;
+        }
+    }
+    let (elen, seg_idx, eoff) = found?;
+    bucket_remove(shard, elen, seg_idx, eoff);
+    {
+        let seg = shard.segments[seg_idx].as_mut().expect("bucketed segment present");
+        seg.free.remove(&eoff);
+        seg.live += 1;
+    }
+    if elen > padded {
+        // the remainder cannot touch another free extent (it was part
+        // of one coalesced extent), so no coalescing pass is needed
+        shard.segments[seg_idx]
+            .as_mut()
+            .unwrap()
+            .free
+            .insert(eoff + padded, elen - padded);
+        bucket_insert(shard, elen - padded, seg_idx, eoff + padded);
+    }
+    Some((seg_idx, eoff))
 }
 
 struct Inner {
     alloc: Arc<dyn HostAllocator>,
     tracker: Arc<MemoryTracker>,
     cfg: ArenaConfig,
-    state: Mutex<State>,
+    /// Global reserve ledger: the budget is enforced here by CAS
+    /// reservation, so shards never serialize on each other.
+    reserved: AtomicUsize,
+    peak_reserved: AtomicUsize,
+    requested: AtomicUsize,
+    peak_requested: AtomicUsize,
+    leases: AtomicU64,
+    releases: AtomicU64,
+    recycled: AtomicU64,
+    recycle_misses: AtomicU64,
+    fresh_segments: AtomicU64,
+    shards: [Mutex<CatShard>; N_CATS],
+}
+
+impl Inner {
+    fn shard(&self, cat: Cat) -> &Mutex<CatShard> {
+        &self.shards[cat_index(cat)]
+    }
+
+    /// Atomically reserve `bytes` against the budget; false when the
+    /// cap would be exceeded (caller trims and retries, or refuses).
+    fn try_reserve(&self, bytes: usize) -> bool {
+        loop {
+            let cur = self.reserved.load(Ordering::Relaxed);
+            if let Some(budget) = self.cfg.budget_bytes {
+                if cur + bytes > budget {
+                    return false;
+                }
+            }
+            if self
+                .reserved
+                .compare_exchange(cur, cur + bytes, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.peak_reserved.fetch_max(cur + bytes, Ordering::Relaxed);
+                return true;
+            }
+        }
+    }
+
+    fn note_lease(&self, shard: &mut CatShard, bytes: usize) {
+        shard.touched = true;
+        self.leases.fetch_add(1, Ordering::Relaxed);
+        let now = self.requested.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak_requested.fetch_max(now, Ordering::Relaxed);
+        shard.wm.requested += bytes;
+        shard.wm.requested_peak = shard.wm.requested_peak.max(shard.wm.requested);
+    }
 }
 
 /// The budget-enforced lease layer. Cheap to share as `Arc<PinnedArena>`.
@@ -269,6 +473,22 @@ impl Lease {
         unsafe { std::slice::from_raw_parts_mut(self.base.add(self.offset), self.requested) }
     }
 
+    /// Raw base of the leased span (null in Virtual mode), for owners
+    /// that carve the span into *disjoint* sub-buffers with their own
+    /// exclusivity discipline (the parameter pools' slot free-lists).
+    /// Deliberately not a `&mut` borrow: concurrent writers of
+    /// disjoint sub-ranges must not require aliasing whole-span
+    /// borrows.  Every write through it must stay inside a sub-range
+    /// the caller exclusively owns.
+    pub(crate) fn span_base(&self) -> *mut u8 {
+        if self.base.is_null() {
+            return std::ptr::null_mut();
+        }
+        // SAFETY: offset is in bounds of the segment (established at
+        // lease time); only pointer arithmetic happens here.
+        unsafe { self.base.add(self.offset) }
+    }
+
     /// f32 view of the span (requires a multiple-of-4 request; the
     /// 4096-aligned base + page-aligned offset guarantee alignment).
     pub fn as_f32(&self) -> &[f32] {
@@ -303,34 +523,18 @@ impl Lease {
 
 impl Drop for Lease {
     fn drop(&mut self) {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut shard = self.inner.shards[cat_index(self.cat)].lock().unwrap();
         {
-            let seg = st
-                .segments
-                .get_mut(&self.cat)
-                .and_then(|v| v[self.seg].as_mut())
+            let seg = shard.segments[self.seg]
+                .as_mut()
                 .expect("lease outlived its segment");
             seg.live -= 1;
-            insert_extent(&mut seg.free, self.offset, self.padded);
         }
-        let cw = st.cats.get_mut(&self.cat).expect("category accounted");
-        cw.requested -= self.requested;
-        st.stats.requested_bytes -= self.requested;
-        st.stats.releases += 1;
-    }
-}
-
-/// Insert (off, len) into a sorted free list, coalescing neighbours.
-fn insert_extent(free: &mut Vec<(usize, usize)>, off: usize, len: usize) {
-    let i = free.partition_point(|&(o, _)| o < off);
-    free.insert(i, (off, len));
-    if i + 1 < free.len() && free[i].0 + free[i].1 == free[i + 1].0 {
-        let next = free.remove(i + 1);
-        free[i].1 += next.1;
-    }
-    if i > 0 && free[i - 1].0 + free[i - 1].1 == free[i].0 {
-        let cur = free.remove(i);
-        free[i - 1].1 += cur.1;
+        insert_free_extent(&mut shard, self.seg, self.offset, self.padded);
+        shard.wm.requested -= self.requested;
+        drop(shard);
+        self.inner.requested.fetch_sub(self.requested, Ordering::Relaxed);
+        self.inner.releases.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -338,58 +542,53 @@ impl PinnedArena {
     pub fn new(alloc: Arc<dyn HostAllocator>, cfg: ArenaConfig) -> Arc<Self> {
         let tracker = Arc::clone(alloc.tracker());
         Arc::new(Self {
-            inner: Arc::new(Inner { alloc, tracker, cfg, state: Mutex::new(State::default()) }),
+            inner: Arc::new(Inner {
+                alloc,
+                tracker,
+                cfg,
+                reserved: AtomicUsize::new(0),
+                peak_reserved: AtomicUsize::new(0),
+                requested: AtomicUsize::new(0),
+                peak_requested: AtomicUsize::new(0),
+                leases: AtomicU64::new(0),
+                releases: AtomicU64::new(0),
+                recycled: AtomicU64::new(0),
+                recycle_misses: AtomicU64::new(0),
+                fresh_segments: AtomicU64::new(0),
+                shards: std::array::from_fn(|i| Mutex::new(CatShard::new(Cat::ALL[i]))),
+            }),
         })
     }
 
-    /// Lease `bytes` under `cat`.  Served from a recycled extent when
-    /// one fits (best-fit), else from a fresh exactly-sized segment —
-    /// which is where the budget is enforced.
+    /// Lease `bytes` under `cat`.  Served from the category's bucketed
+    /// free list when an extent fits, else from a fresh exactly-sized
+    /// segment — which is where the budget is enforced (atomic CAS
+    /// reservation; only the category's own shard lock is held).
     pub fn lease(&self, bytes: usize, cat: Cat) -> Result<Lease, ArenaError> {
         let padded = pad(bytes);
         let inner = &self.inner;
-        let mut st = inner.state.lock().unwrap();
 
-        // best-fit over this category's free extents
-        let mut best: Option<(usize, usize, usize)> = None; // (seg, ext, ext_len)
-        if let Some(segs) = st.segments.get(&cat) {
-            for (si, slot) in segs.iter().enumerate() {
-                let Some(seg) = slot else { continue };
-                for (ei, &(_, elen)) in seg.free.iter().enumerate() {
-                    if elen >= padded && best.is_none_or(|(_, _, bl)| elen < bl) {
-                        best = Some((si, ei, elen));
-                    }
-                }
+        // fast path: bucketed recycle inside this category's shard
+        {
+            let mut shard = inner.shard(cat).lock().unwrap();
+            if let Some((seg, offset)) = take_fit(&mut shard, padded) {
+                let base = shard.segments[seg].as_ref().unwrap().base;
+                inner.recycled.fetch_add(1, Ordering::Relaxed);
+                inner.note_lease(&mut shard, bytes);
+                return Ok(Lease {
+                    inner: Arc::clone(inner),
+                    cat,
+                    seg,
+                    offset,
+                    padded,
+                    requested: bytes,
+                    base,
+                });
             }
         }
-        if let Some((si, ei, _)) = best {
-            let (offset, base) = {
-                let seg = st.segments.get_mut(&cat).unwrap()[si]
-                    .as_mut()
-                    .expect("best-fit segment present");
-                let (eoff, elen) = seg.free[ei];
-                if elen == padded {
-                    seg.free.remove(ei);
-                } else {
-                    seg.free[ei] = (eoff + padded, elen - padded);
-                }
-                seg.live += 1;
-                (eoff, seg.base)
-            };
-            st.stats.recycled += 1;
-            note_lease(&mut st, cat, bytes);
-            return Ok(Lease {
-                inner: Arc::clone(inner),
-                cat,
-                seg: si,
-                offset,
-                padded,
-                requested: bytes,
-                base,
-            });
-        }
 
-        // fresh segment, exactly sized to this request
+        // miss: fresh segment, exactly sized to this request
+        inner.recycle_misses.fetch_add(1, Ordering::Relaxed);
         let would_reserve = inner.alloc.reserve_size(padded);
         if let Some(budget) = inner.cfg.budget_bytes {
             // a request that can never fit must not wipe warm caches
@@ -398,46 +597,56 @@ impl PinnedArena {
                     cat,
                     requested: bytes,
                     would_reserve,
-                    in_use: st.stats.reserved_bytes,
+                    in_use: inner.reserved.load(Ordering::Relaxed),
                     budget,
                 });
             }
-            if st.stats.reserved_bytes + would_reserve > budget {
-                // targeted: free idle capacity only until this fits
-                trim_until(inner, &mut st, budget - would_reserve);
-                if st.stats.reserved_bytes + would_reserve > budget {
-                    return Err(ArenaError::BudgetExceeded {
-                        cat,
-                        requested: bytes,
-                        would_reserve,
-                        in_use: st.stats.reserved_bytes,
-                        budget,
-                    });
-                }
+        }
+        if !inner.try_reserve(would_reserve) {
+            let budget = inner.cfg.budget_bytes.expect("reserve only fails under a budget");
+            // targeted: free idle capacity only until this fits
+            trim_until(inner, budget.saturating_sub(would_reserve));
+            if !inner.try_reserve(would_reserve) {
+                return Err(ArenaError::BudgetExceeded {
+                    cat,
+                    requested: bytes,
+                    would_reserve,
+                    in_use: inner.reserved.load(Ordering::Relaxed),
+                    budget,
+                });
             }
         }
+        // the pin itself runs outside every lock
         let region = inner.alloc.alloc(padded, cat);
+        let actual = region.bytes_reserved;
+        // `reserve_size` is the policy's declared worst case and the
+        // budget CAS reserved exactly that; an allocator reserving
+        // *more* than its own prediction would silently pierce the cap,
+        // so that is a policy bug, not something to book after the fact
+        assert!(
+            actual <= would_reserve,
+            "allocator reserved {actual} B for a {padded} B segment, above its \
+             own reserve_size prediction of {would_reserve} B"
+        );
+        if actual < would_reserve {
+            inner.reserved.fetch_sub(would_reserve - actual, Ordering::Relaxed);
+        }
         let base = region.raw_base();
-        let reserved = region.bytes_reserved;
-        let seg = Segment { region, base, len: padded, free: Vec::new(), live: 1 };
-        let segs = st.segments.entry(cat).or_default();
-        let si = match segs.iter().position(|s| s.is_none()) {
+        inner.fresh_segments.fetch_add(1, Ordering::Relaxed);
+
+        let mut shard = inner.shard(cat).lock().unwrap();
+        let seg = Segment { region, base, len: padded, free: BTreeMap::new(), live: 1 };
+        let si = match shard.segments.iter().position(|s| s.is_none()) {
             Some(i) => i,
             None => {
-                segs.push(None);
-                segs.len() - 1
+                shard.segments.push(None);
+                shard.segments.len() - 1
             }
         };
-        segs[si] = Some(seg);
-        st.stats.fresh_segments += 1;
-        st.stats.reserved_bytes += reserved;
-        st.stats.peak_reserved = st.stats.peak_reserved.max(st.stats.reserved_bytes);
-        {
-            let cw = st.cats.entry(cat).or_default();
-            cw.charged += padded;
-            cw.charged_peak = cw.charged_peak.max(cw.charged);
-        }
-        note_lease(&mut st, cat, bytes);
+        shard.segments[si] = Some(seg);
+        shard.wm.charged += padded;
+        shard.wm.charged_peak = shard.wm.charged_peak.max(shard.wm.charged);
+        inner.note_lease(&mut shard, bytes);
         Ok(Lease {
             inner: Arc::clone(inner),
             cat,
@@ -453,8 +662,7 @@ impl PinnedArena {
     /// allocator (when the policy reclaims frees) and pooled scratch
     /// vectors are released.
     pub fn trim(&self) {
-        let mut st = self.inner.state.lock().unwrap();
-        trim_until(&self.inner, &mut st, 0);
+        trim_until(&self.inner, 0);
     }
 
     // ---- scratch-vector tier -------------------------------------------
@@ -465,9 +673,9 @@ impl PinnedArena {
     /// memory until [`Self::put_f32`] returns it).
     pub fn take_f32(&self, n: usize, cat: Cat) -> Vec<f32> {
         let inner = &self.inner;
-        let mut st = inner.state.lock().unwrap();
+        let mut shard = inner.shard(cat).lock().unwrap();
         let taken = {
-            let pool = st.pools.entry(cat).or_default();
+            let pool = &mut shard.pool;
             let mut best: Option<(usize, usize)> = None; // (index, capacity)
             for (i, v) in pool.f32s.iter().enumerate() {
                 let c = v.capacity();
@@ -479,14 +687,14 @@ impl PinnedArena {
         };
         match taken {
             Some((mut v, bytes)) => {
-                uncharge_pooled(inner, &mut st, cat, bytes);
-                drop(st);
+                uncharge_pooled(inner, &mut shard, bytes);
+                drop(shard);
                 v.clear();
                 v.resize(n, 0.0);
                 v
             }
             None => {
-                drop(st);
+                drop(shard);
                 vec![0f32; n]
             }
         }
@@ -501,20 +709,20 @@ impl PinnedArena {
         if bytes < inner.cfg.min_pooled_vec_bytes {
             return;
         }
-        let mut st = inner.state.lock().unwrap();
-        if !pool_admits(inner, &st, cat, bytes) {
-            return;
+        let mut shard = inner.shard(cat).lock().unwrap();
+        if !pool_admits(inner, &shard, bytes) || !inner.try_reserve(bytes) {
+            return; // bounds or budget: the vector is simply dropped
         }
-        st.pools.entry(cat).or_default().f32s.push(v);
-        charge_pooled(inner, &mut st, cat, bytes);
+        shard.pool.f32s.push(v);
+        charge_pooled(inner, &mut shard, bytes);
     }
 
     /// [`Self::take_f32`] for byte buffers.
     pub fn take_bytes(&self, n: usize, cat: Cat) -> Vec<u8> {
         let inner = &self.inner;
-        let mut st = inner.state.lock().unwrap();
+        let mut shard = inner.shard(cat).lock().unwrap();
         let taken = {
-            let pool = st.pools.entry(cat).or_default();
+            let pool = &mut shard.pool;
             let mut best: Option<(usize, usize)> = None;
             for (i, v) in pool.bytes.iter().enumerate() {
                 let c = v.capacity();
@@ -526,14 +734,14 @@ impl PinnedArena {
         };
         match taken {
             Some((mut v, bytes)) => {
-                uncharge_pooled(inner, &mut st, cat, bytes);
-                drop(st);
+                uncharge_pooled(inner, &mut shard, bytes);
+                drop(shard);
                 v.clear();
                 v.resize(n, 0);
                 v
             }
             None => {
-                drop(st);
+                drop(shard);
                 vec![0u8; n]
             }
         }
@@ -546,59 +754,53 @@ impl PinnedArena {
         if bytes < inner.cfg.min_pooled_vec_bytes {
             return;
         }
-        let mut st = inner.state.lock().unwrap();
-        if !pool_admits(inner, &st, cat, bytes) {
+        let mut shard = inner.shard(cat).lock().unwrap();
+        if !pool_admits(inner, &shard, bytes) || !inner.try_reserve(bytes) {
             return;
         }
-        st.pools.entry(cat).or_default().bytes.push(v);
-        charge_pooled(inner, &mut st, cat, bytes);
+        shard.pool.bytes.push(v);
+        charge_pooled(inner, &mut shard, bytes);
     }
 
     /// Idle f32 vectors pooled under `cat` (test/introspection hook).
     pub fn pooled_f32(&self, cat: Cat) -> usize {
-        self.inner
-            .state
-            .lock()
-            .unwrap()
-            .pools
-            .get(&cat)
-            .map_or(0, |p| p.f32s.len())
+        self.inner.shard(cat).lock().unwrap().pool.f32s.len()
     }
 
     /// Idle byte vectors pooled under `cat`.
     pub fn pooled_byte_vecs(&self, cat: Cat) -> usize {
-        self.inner
-            .state
-            .lock()
-            .unwrap()
-            .pools
-            .get(&cat)
-            .map_or(0, |p| p.bytes.len())
+        self.inner.shard(cat).lock().unwrap().pool.bytes.len()
     }
 
     // ---- introspection -------------------------------------------------
 
     pub fn stats(&self) -> ArenaStats {
-        self.inner.state.lock().unwrap().stats
+        let inner = &self.inner;
+        ArenaStats {
+            reserved_bytes: inner.reserved.load(Ordering::Relaxed),
+            peak_reserved: inner.peak_reserved.load(Ordering::Relaxed),
+            requested_bytes: inner.requested.load(Ordering::Relaxed),
+            peak_requested: inner.peak_requested.load(Ordering::Relaxed),
+            leases: inner.leases.load(Ordering::Relaxed),
+            releases: inner.releases.load(Ordering::Relaxed),
+            recycled: inner.recycled.load(Ordering::Relaxed),
+            recycle_misses: inner.recycle_misses.load(Ordering::Relaxed),
+            fresh_segments: inner.fresh_segments.load(Ordering::Relaxed),
+        }
     }
 
     pub fn watermark(&self, cat: Cat) -> CatWatermark {
-        self.inner
-            .state
-            .lock()
-            .unwrap()
-            .cats
-            .get(&cat)
-            .copied()
-            .unwrap_or_default()
+        self.inner.shard(cat).lock().unwrap().wm
     }
 
     /// Per-category watermarks for every category the arena touched.
     pub fn watermarks(&self) -> Vec<(Cat, CatWatermark)> {
-        let st = self.inner.state.lock().unwrap();
         Cat::ALL
             .iter()
-            .filter_map(|c| st.cats.get(c).map(|w| (*c, *w)))
+            .filter_map(|c| {
+                let shard = self.inner.shard(*c).lock().unwrap();
+                shard.touched.then_some((*c, shard.wm))
+            })
             .collect()
     }
 
@@ -611,93 +813,82 @@ impl PinnedArena {
     }
 }
 
-fn note_lease(st: &mut State, cat: Cat, bytes: usize) {
-    st.stats.leases += 1;
-    st.stats.requested_bytes += bytes;
-    st.stats.peak_requested = st.stats.peak_requested.max(st.stats.requested_bytes);
-    let cw = st.cats.entry(cat).or_default();
-    cw.requested += bytes;
-    cw.requested_peak = cw.requested_peak.max(cw.requested);
+/// Per-cat pool bounds (count + idle bytes).  The budget itself is
+/// enforced separately by the caller's `try_reserve`.
+fn pool_admits(inner: &Inner, shard: &CatShard, bytes: usize) -> bool {
+    let pool = &shard.pool;
+    pool.f32s.len() + pool.bytes.len() < inner.cfg.max_pooled_vecs
+        && pool.pooled_bytes + bytes <= inner.cfg.max_pooled_vec_bytes
 }
 
-fn pool_admits(inner: &Inner, st: &State, cat: Cat, bytes: usize) -> bool {
-    if let Some(pool) = st.pools.get(&cat) {
-        if pool.f32s.len() + pool.bytes.len() >= inner.cfg.max_pooled_vecs
-            || pool.pooled_bytes + bytes > inner.cfg.max_pooled_vec_bytes
-        {
-            return false;
-        }
-    } else if bytes > inner.cfg.max_pooled_vec_bytes {
-        return false;
-    }
-    match inner.cfg.budget_bytes {
-        Some(budget) => st.stats.reserved_bytes + bytes <= budget,
-        None => true,
-    }
+/// Book a freshly-pooled vector (budget already reserved by the
+/// caller's `try_reserve`).
+fn charge_pooled(inner: &Inner, shard: &mut CatShard, bytes: usize) {
+    shard.touched = true;
+    shard.pool.pooled_bytes += bytes;
+    shard.wm.charged += bytes;
+    shard.wm.charged_peak = shard.wm.charged_peak.max(shard.wm.charged);
+    inner.tracker.alloc(shard.cat, bytes as u64);
 }
 
-fn charge_pooled(inner: &Inner, st: &mut State, cat: Cat, bytes: usize) {
-    st.pools.get_mut(&cat).unwrap().pooled_bytes += bytes;
-    st.stats.reserved_bytes += bytes;
-    st.stats.peak_reserved = st.stats.peak_reserved.max(st.stats.reserved_bytes);
-    let cw = st.cats.entry(cat).or_default();
-    cw.charged += bytes;
-    cw.charged_peak = cw.charged_peak.max(cw.charged);
-    inner.tracker.alloc(cat, bytes as u64);
+fn uncharge_pooled(inner: &Inner, shard: &mut CatShard, bytes: usize) {
+    shard.pool.pooled_bytes -= bytes;
+    shard.wm.charged -= bytes;
+    inner.tracker.free(shard.cat, bytes as u64);
+    inner.reserved.fetch_sub(bytes, Ordering::Relaxed);
 }
 
-fn uncharge_pooled(inner: &Inner, st: &mut State, cat: Cat, bytes: usize) {
-    st.pools.get_mut(&cat).unwrap().pooled_bytes -= bytes;
-    st.stats.reserved_bytes -= bytes;
-    st.cats.get_mut(&cat).unwrap().charged -= bytes;
-    inner.tracker.free(cat, bytes as u64);
-}
-
-/// Free idle capacity until `reserved_bytes <= target`, stopping as
-/// soon as the target is met (pass 0 for a full trim).  Fully-idle
-/// segments go first — but only when the allocator actually reclaims
-/// frees; under the pow2-caching policy freed blocks would just move
-/// to the allocator's cache while staying on the ledger, so segments
-/// are kept and the arena's watermarks remain an exact ledger mirror
-/// (and the budget correctly reflects that the reserve is monotone
-/// there).  Pooled scratch vectors (arena-charged, always reversible)
-/// go second.
-fn trim_until(inner: &Inner, st: &mut State, target: usize) {
+/// Free idle capacity until `reserved <= target`, stopping as soon as
+/// the target is met (pass 0 for a full trim).  Fully-idle segments go
+/// first — but only when the allocator actually reclaims frees; under
+/// the pow2-caching policy freed blocks would just move to the
+/// allocator's cache while staying on the ledger, so segments are kept
+/// and the arena's watermarks remain an exact ledger mirror (and the
+/// budget correctly reflects that the reserve is monotone there).
+/// Pooled scratch vectors (arena-charged, always reversible) go
+/// second.  Shard locks are taken one category at a time — callers
+/// hold no shard lock while trimming.
+fn trim_until(inner: &Inner, target: usize) {
     if inner.alloc.reclaimable() {
-        let seg_cats: Vec<Cat> = st.segments.keys().copied().collect();
-        for cat in seg_cats {
-            let n_slots = st.segments.get(&cat).map_or(0, |v| v.len());
-            for i in 0..n_slots {
-                if st.stats.reserved_bytes <= target {
+        for shard_mx in &inner.shards {
+            if inner.reserved.load(Ordering::Relaxed) <= target {
+                return;
+            }
+            let mut shard = shard_mx.lock().unwrap();
+            for i in 0..shard.segments.len() {
+                if inner.reserved.load(Ordering::Relaxed) <= target {
                     return;
                 }
-                let taken = {
-                    let slot = &mut st.segments.get_mut(&cat).unwrap()[i];
-                    if matches!(slot, Some(s) if s.live == 0) {
-                        slot.take()
-                    } else {
-                        None
-                    }
-                };
-                if let Some(seg) = taken {
-                    st.stats.reserved_bytes -= seg.region.bytes_reserved;
-                    st.cats.get_mut(&cat).unwrap().charged -= seg.len;
-                    // seg drops here: the region's release hook
-                    // un-charges the ledger
+                let idle = matches!(&shard.segments[i], Some(s) if s.live == 0);
+                if !idle {
+                    continue;
                 }
+                let seg = shard.segments[i].take().expect("idle segment present");
+                let frees: Vec<(usize, usize)> =
+                    seg.free.iter().map(|(&o, &l)| (o, l)).collect();
+                for (o, l) in frees {
+                    bucket_remove(&mut shard, l, i, o);
+                }
+                inner.reserved.fetch_sub(seg.region.bytes_reserved, Ordering::Relaxed);
+                shard.wm.charged -= seg.len;
+                // seg drops here: the region's release hook un-charges
+                // the ledger
             }
         }
     }
-    let pool_cats: Vec<Cat> = st.pools.keys().copied().collect();
-    for cat in pool_cats {
+    for shard_mx in &inner.shards {
+        if inner.reserved.load(Ordering::Relaxed) <= target {
+            return;
+        }
+        let mut shard = shard_mx.lock().unwrap();
         loop {
-            if st.stats.reserved_bytes <= target {
+            if inner.reserved.load(Ordering::Relaxed) <= target {
                 return;
             }
             // evict one vector at a time, largest first, so a small
             // overshoot does not wipe a warm pool
             let freed = {
-                let pool = st.pools.get_mut(&cat).unwrap();
+                let pool = &mut shard.pool;
                 let f = pool
                     .f32s
                     .iter()
@@ -731,10 +922,7 @@ fn trim_until(inner: &Inner, st: &mut State, target: usize) {
                     (None, None) => break,
                 }
             };
-            st.pools.get_mut(&cat).unwrap().pooled_bytes -= freed;
-            st.stats.reserved_bytes -= freed;
-            st.cats.get_mut(&cat).unwrap().charged -= freed;
-            inner.tracker.free(cat, freed as u64);
+            uncharge_pooled(inner, &mut shard, freed);
         }
     }
 }
@@ -786,6 +974,66 @@ mod tests {
         let st = a.stats();
         assert_eq!(st.fresh_segments, 1, "both re-leases must carve the freed segment");
         assert_eq!(st.recycled, 2);
+        assert_eq!(st.recycle_misses, 1, "only the first lease missed the free list");
+    }
+
+    #[test]
+    fn size_class_buckets_serve_mixed_tile_and_tail_leases() {
+        // tile-pipeline shape: one big freed region, then a mixed
+        // stream of tile + tail sizes — every one must hit the free
+        // list (no fresh pins), across classes
+        let a = arena(Mode::Real, None);
+        drop(a.lease(1 << 20, Cat::OptimBuf).unwrap());
+        let sizes = [64 << 10, 17_000, 64 << 10, 4096, 120_000, 300, 64 << 10];
+        let mut live = Vec::new();
+        for (i, n) in sizes.iter().enumerate() {
+            live.push(a.lease(*n, Cat::OptimBuf).unwrap());
+            if i % 3 == 2 {
+                live.remove(0); // interleave releases
+            }
+        }
+        let st = a.stats();
+        assert_eq!(st.fresh_segments, 1, "bucketed free list missed");
+        assert_eq!(st.recycle_misses, 1);
+        assert_eq!(st.recycled, sizes.len() as u64);
+        assert!(st.recycle_hit_rate() > 0.8);
+        drop(live);
+        // coalescing restored one whole free extent: a full-size lease
+        // still fits without a fresh pin
+        let _big = a.lease(1 << 20, Cat::OptimBuf).unwrap();
+        assert_eq!(a.stats().fresh_segments, 1, "coalescing failed");
+    }
+
+    #[test]
+    fn shards_keep_categories_independent_under_concurrency() {
+        // different categories on different threads: stats must stay
+        // exact (the global ledger is atomic, shards never share locks)
+        let a = arena(Mode::Real, None);
+        let cats = [Cat::ParamPool, Cat::OptimBuf, Cat::SwapBuf, Cat::GradFlat];
+        std::thread::scope(|s| {
+            for (t, cat) in cats.into_iter().enumerate() {
+                let a = Arc::clone(&a);
+                s.spawn(move || {
+                    for round in 0..60usize {
+                        let n = 2048 + (t * 977 + round * 131) % 9000;
+                        let mut l = a.lease(n, cat).unwrap();
+                        l.as_mut_slice().fill(t as u8);
+                        assert!(l.as_slice().iter().all(|&b| b == t as u8));
+                        drop(l);
+                        let v = a.take_f32(n / 4, cat);
+                        a.put_f32(v, cat);
+                    }
+                });
+            }
+        });
+        let st = a.stats();
+        assert_eq!(st.requested_bytes, 0);
+        assert_eq!(st.leases, st.releases);
+        assert_eq!(st.leases, (cats.len() * 60) as u64);
+        for cat in cats {
+            let wm = a.watermark(cat);
+            assert_eq!(wm.requested, 0, "{cat:?} leaked requested bytes");
+        }
     }
 
     #[test]
@@ -952,6 +1200,12 @@ mod tests {
                 prop_assert!(
                     st.leases == st.releases + live.len() as u64,
                     "lease/release count drift"
+                );
+                // every granted lease was a free-list hit or a miss
+                // (misses also count budget-refused attempts)
+                prop_assert!(
+                    st.recycled + st.recycle_misses >= st.leases,
+                    "hit/miss counters lost a lease"
                 );
                 // no overlap between live leases (same-cat, same-segment
                 // spans must be disjoint)

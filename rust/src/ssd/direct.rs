@@ -148,6 +148,37 @@ impl DirectEngine {
     fn lookup(&self, key: &str) -> Option<(Vec<Extent>, usize)> {
         self.dict.read().unwrap().get(key).cloned()
     }
+
+    /// Map logical byte window `[offset, offset+len)` onto the tensor's
+    /// extents: (extent, device byte offset, part length) per touched
+    /// extent, in logical order.  Extents are stored in logical order,
+    /// so this is one forward walk.
+    fn window_parts(
+        extents: &[Extent],
+        offset: usize,
+        len: usize,
+    ) -> Vec<(Extent, u64, usize)> {
+        let mut parts = Vec::new();
+        let mut logical = 0usize;
+        let end = offset + len;
+        for e in extents {
+            let e_start = logical;
+            let e_end = logical + e.len;
+            logical = e_end;
+            if e_end <= offset {
+                continue;
+            }
+            if e_start >= end {
+                break;
+            }
+            let lo = offset.max(e_start);
+            let hi = end.min(e_end);
+            if lo < hi {
+                parts.push((*e, e.offset + (lo - e_start) as u64, hi - lo));
+            }
+        }
+        parts
+    }
 }
 
 impl NvmeEngine for DirectEngine {
@@ -166,6 +197,7 @@ impl NvmeEngine for DirectEngine {
         };
         if extents.len() == 1 {
             let e = &extents[0];
+            let _q = self.stats.queue_guard(e.dev);
             self.devices[e.dev].file.write_all_at(data, e.offset)?;
         } else {
             // one job per extent on its device's queue; the running
@@ -176,7 +208,10 @@ impl NvmeEngine for DirectEngine {
                     let chunk = &data[logical..logical + e.len];
                     logical += e.len;
                     let dev = &self.devices[e.dev];
+                    let stats = &self.stats;
+                    let dev_idx = e.dev;
                     s.submit(&dev.queue, move || {
+                        let _q = stats.queue_guard(dev_idx);
                         dev.file.write_all_at(chunk, e.offset)?;
                         Ok(())
                     });
@@ -203,6 +238,7 @@ impl NvmeEngine for DirectEngine {
         let out_len = out.len() as u64;
         if extents.len() == 1 {
             let e = &extents[0];
+            let _q = self.stats.queue_guard(e.dev);
             self.devices[e.dev].file.read_exact_at(out, e.offset)?;
         } else {
             // split `out` into one disjoint slice per extent (extent
@@ -218,7 +254,10 @@ impl NvmeEngine for DirectEngine {
             io_scope(|s| {
                 for (e, slice) in parts {
                     let dev = &self.devices[e.dev];
+                    let stats = &self.stats;
+                    let dev_idx = e.dev;
                     s.submit(&dev.queue, move || {
+                        let _q = stats.queue_guard(dev_idx);
                         dev.file.read_exact_at(slice, e.offset)?;
                         Ok(())
                     });
@@ -229,6 +268,104 @@ impl NvmeEngine for DirectEngine {
         drop(busy);
         self.stats.record_read(out_len, t0.elapsed().as_nanos() as u64);
         Ok(())
+    }
+
+    fn read_at(&self, key: &str, offset: usize, out: &mut [u8]) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        let busy = self.stats.busy_guard();
+        let (extents, stored) = self
+            .lookup(key)
+            .ok_or_else(|| anyhow::anyhow!("direct: no tensor '{key}'"))?;
+        anyhow::ensure!(
+            offset + out.len() <= stored,
+            "direct: ranged read past '{key}' ({offset}+{} > {stored})",
+            out.len()
+        );
+        let out_len = out.len() as u64;
+        let parts = Self::window_parts(&extents, offset, out.len());
+        if let [(e, dev_off, _)] = parts[..] {
+            // common case: a tile inside one extent — positional read,
+            // no fan-out
+            let _q = self.stats.queue_guard(e.dev);
+            self.devices[e.dev].file.read_exact_at(out, dev_off)?;
+        } else {
+            let mut slices: Vec<(Extent, u64, &mut [u8])> =
+                Vec::with_capacity(parts.len());
+            let mut rest = out;
+            for (e, dev_off, len) in parts {
+                let (head, tail) = rest.split_at_mut(len);
+                slices.push((e, dev_off, head));
+                rest = tail;
+            }
+            io_scope(|s| {
+                for (e, dev_off, slice) in slices {
+                    let dev = &self.devices[e.dev];
+                    let stats = &self.stats;
+                    s.submit(&dev.queue, move || {
+                        let _q = stats.queue_guard(e.dev);
+                        dev.file.read_exact_at(slice, dev_off)?;
+                        Ok(())
+                    });
+                }
+                Ok(())
+            })?;
+        }
+        drop(busy);
+        self.stats.record_read(out_len, t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
+    fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        let busy = self.stats.busy_guard();
+        let (extents, stored) = self
+            .lookup(key)
+            .ok_or_else(|| anyhow::anyhow!("direct: no tensor '{key}'"))?;
+        anyhow::ensure!(
+            offset + data.len() <= stored,
+            "direct: ranged write past '{key}' ({offset}+{} > {stored})",
+            data.len()
+        );
+        let parts = Self::window_parts(&extents, offset, data.len());
+        if let [(e, dev_off, _)] = parts[..] {
+            let _q = self.stats.queue_guard(e.dev);
+            self.devices[e.dev].file.write_all_at(data, dev_off)?;
+        } else {
+            io_scope(|s| {
+                let mut logical = 0usize;
+                for (e, dev_off, len) in parts {
+                    let chunk = &data[logical..logical + len];
+                    logical += len;
+                    let dev = &self.devices[e.dev];
+                    let stats = &self.stats;
+                    s.submit(&dev.queue, move || {
+                        let _q = stats.queue_guard(e.dev);
+                        dev.file.write_all_at(chunk, dev_off)?;
+                        Ok(())
+                    });
+                }
+                Ok(())
+            })?;
+        }
+        drop(busy);
+        self.stats.record_write(data.len() as u64, t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
+    fn reserve(&self, key: &str, len: usize) -> anyhow::Result<()> {
+        // allocation without data movement: the location allocator
+        // hands out the extents, the sparse device files read back
+        // zeros until tiles land
+        match self.lookup(key) {
+            Some((_, stored)) => {
+                anyhow::ensure!(
+                    stored == len,
+                    "direct: reserve size change for '{key}' ({stored} -> {len}) unsupported"
+                );
+                Ok(())
+            }
+            None => self.allocate(key, len).map(|_| ()),
+        }
     }
 
     fn len_of(&self, key: &str) -> Option<usize> {

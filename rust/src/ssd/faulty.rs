@@ -58,6 +58,30 @@ impl<E: NvmeEngine> NvmeEngine for FaultyEngine<E> {
         self.inner.read(key, out)
     }
 
+    fn read_at(&self, key: &str, offset: usize, out: &mut [u8]) -> anyhow::Result<()> {
+        if self.should_fail() {
+            anyhow::bail!("injected ranged-read fault on '{key}'");
+        }
+        self.inner.read_at(key, offset, out)
+    }
+
+    fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
+        if self.should_fail() {
+            anyhow::bail!("injected ranged-write fault on '{key}'");
+        }
+        self.inner.write_at(key, offset, data)
+    }
+
+    fn reserve(&self, key: &str, len: usize) -> anyhow::Result<()> {
+        // allocation, not a data transfer: forwarded without injection
+        // so fault tests target the tile pipeline's data path
+        self.inner.reserve(key, len)
+    }
+
+    fn flush(&self, key: &str) -> anyhow::Result<()> {
+        self.inner.flush(key)
+    }
+
     fn len_of(&self, key: &str) -> Option<usize> {
         self.inner.len_of(key)
     }

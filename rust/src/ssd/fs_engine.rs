@@ -193,6 +193,34 @@ impl FsEngine {
         per_dev
     }
 
+    /// Stripe parts overlapped by logical window `[offset, offset+len)`:
+    /// (device, device byte offset, window-relative range) per touched
+    /// chunk, in logical order.
+    fn window_parts(
+        &self,
+        offset: usize,
+        len: usize,
+    ) -> Vec<(usize, u64, std::ops::Range<usize>)> {
+        let n = self.devices.len();
+        let end = offset + len;
+        let mut parts = Vec::new();
+        let mut c = offset / self.stripe;
+        while c * self.stripe < end {
+            let cs = c * self.stripe;
+            let lo = offset.max(cs);
+            let hi = end.min(cs + self.stripe);
+            if lo < hi {
+                parts.push((
+                    c % n,
+                    ((c / n) * self.stripe + (lo - cs)) as u64,
+                    lo - offset..hi - offset,
+                ));
+            }
+            c += 1;
+        }
+        parts
+    }
+
     /// [`Self::member_chunks`] for a destination buffer: disjoint
     /// mutable chunk slices grouped per member device.
     fn member_chunks_mut<'d>(
@@ -242,7 +270,9 @@ impl NvmeEngine for FsEngine {
                     continue;
                 }
                 let file = &files[d];
+                let stats = &self.stats;
                 s.submit(&self.queues[d], move || {
+                    let _q = stats.queue_guard(d);
                     for (dev_off, chunk) in chunks {
                         file.write_all_at(chunk, dev_off)?;
                     }
@@ -293,7 +323,9 @@ impl NvmeEngine for FsEngine {
                     continue;
                 }
                 let file = &files[d];
+                let stats = &self.stats;
                 s.submit(&self.queues[d], move || {
+                    let _q = stats.queue_guard(d);
                     for (dev_off, chunk) in chunks {
                         file.read_exact_at(chunk, dev_off)?;
                     }
@@ -304,6 +336,111 @@ impl NvmeEngine for FsEngine {
         })?;
         drop(busy);
         self.stats.record_read(out_len, t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
+    fn read_at(&self, key: &str, offset: usize, out: &mut [u8]) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        let busy = self.stats.busy_guard();
+        let stored = self
+            .len_of(key)
+            .ok_or_else(|| anyhow::anyhow!("fs_engine: no tensor '{key}'"))?;
+        anyhow::ensure!(
+            offset + out.len() <= stored,
+            "fs_engine: ranged read past '{key}' ({offset}+{} > {stored})",
+            out.len()
+        );
+        let out_len = out.len() as u64;
+        // serial member preads on the caller thread: a tile touches one
+        // or two stripe chunks, not worth the fan-out
+        let mut opened: HashMap<usize, Arc<File>> = HashMap::new();
+        for (d, dev_off, range) in self.window_parts(offset, out.len()) {
+            let file = match opened.get(&d) {
+                Some(f) => Arc::clone(f),
+                None => {
+                    let f = self.open_ro(key, d)?;
+                    opened.insert(d, Arc::clone(&f));
+                    f
+                }
+            };
+            let _q = self.stats.queue_guard(d);
+            file.read_exact_at(&mut out[range], dev_off)?;
+        }
+        drop(busy);
+        self.stats.record_read(out_len, t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
+    fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        let busy = self.stats.busy_guard();
+        let stored = self
+            .len_of(key)
+            .ok_or_else(|| anyhow::anyhow!("fs_engine: no tensor '{key}'"))?;
+        anyhow::ensure!(
+            offset + data.len() <= stored,
+            "fs_engine: ranged write past '{key}' ({offset}+{} > {stored})",
+            data.len()
+        );
+        let mut opened: HashMap<usize, Arc<File>> = HashMap::new();
+        for (d, dev_off, range) in self.window_parts(offset, data.len()) {
+            let file = match opened.get(&d) {
+                Some(f) => Arc::clone(f),
+                None => {
+                    let f = self.open_rw(key, d)?;
+                    opened.insert(d, Arc::clone(&f));
+                    f
+                }
+            };
+            let _q = self.stats.queue_guard(d);
+            file.write_all_at(&data[range], dev_off)?;
+        }
+        // in-place rewrite: length and allocation are unchanged, so no
+        // journal append — and no per-tile sync either (syncing every
+        // tile would multiply the fsync tax by the tile count); callers
+        // needing durability take one explicit `flush` per key
+        drop(busy);
+        self.stats.record_write(data.len() as u64, t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
+    fn flush(&self, key: &str) -> anyhow::Result<()> {
+        if self.len_of(key).is_none() {
+            return Ok(());
+        }
+        for d in 0..self.devices.len() {
+            self.open_ro(key, d)?.sync_data()?;
+        }
+        Ok(())
+    }
+
+    fn reserve(&self, key: &str, len: usize) -> anyhow::Result<()> {
+        if let Some(stored) = self.len_of(key) {
+            anyhow::ensure!(
+                stored == len,
+                "fs_engine: reserve size change for '{key}' ({stored} -> {len}) unsupported"
+            );
+            return Ok(());
+        }
+        // allocate member files sparsely (set_len) and pay the same
+        // metadata taxes a fresh write pays: journal + length record
+        let n = self.devices.len();
+        let mut member_len = vec![0u64; n];
+        for (d, dev_off, range) in self.window_parts(0, len) {
+            member_len[d] = member_len[d].max(dev_off + range.len() as u64);
+        }
+        for d in 0..n {
+            let f = self.open_rw(key, d)?;
+            f.set_len(member_len[d])?;
+            self.journal(d, key, len)?;
+        }
+        {
+            let _guard = self.meta.lock().unwrap();
+            std::fs::write(
+                self.devices[0].join(format!("{}.len", sanitize(key))),
+                len.to_string(),
+            )?;
+        }
         Ok(())
     }
 

@@ -53,7 +53,43 @@ struct BusyState {
     active: u32,
     epoch: Option<Instant>,
     busy_ns: u64,
+    /// Whether this window was ever opened (distinguishes an idle
+    /// per-queue slot from one whose transfers were just very short).
+    used: bool,
 }
+
+impl BusyState {
+    fn open(&mut self) {
+        if self.active == 0 {
+            self.epoch = Some(Instant::now());
+        }
+        self.active += 1;
+        self.used = true;
+    }
+
+    fn close(&mut self) {
+        self.active -= 1;
+        if self.active == 0 {
+            if let Some(t0) = self.epoch.take() {
+                self.busy_ns += t0.elapsed().as_nanos() as u64;
+            }
+        }
+    }
+
+    /// Busy union including the currently-open window, so deltas taken
+    /// mid-flight are still monotone and exact.
+    fn total_ns(&self) -> u64 {
+        self.busy_ns
+            + self
+                .epoch
+                .map(|t0| t0.elapsed().as_nanos() as u64)
+                .unwrap_or(0)
+    }
+}
+
+/// Most per-queue busy slots a snapshot carries (keeps [`IoSnapshot`]
+/// `Copy`); engines here run 2-3 device queues.
+pub const MAX_QUEUES: usize = 8;
 
 /// I/O statistics common to both engines.
 #[derive(Debug, Default)]
@@ -67,6 +103,11 @@ pub struct IoStats {
     pub read_ns: AtomicU64,
     pub write_ns: AtomicU64,
     busy: Mutex<BusyState>,
+    /// Per-queue (per NVMe device / RAID member) busy unions, indexed
+    /// by the queue id the engine hands to [`IoStats::queue_guard`].
+    /// One lock *per queue*: jobs on independent device queues never
+    /// contend here (the whole point of the multi-queue layer).
+    queues: [Mutex<BusyState>; MAX_QUEUES],
 }
 
 /// RAII marker for one in-flight engine call; closing the last one
@@ -77,12 +118,22 @@ pub struct BusyGuard<'a> {
 
 impl Drop for BusyGuard<'_> {
     fn drop(&mut self) {
-        let mut b = self.stats.busy.lock().unwrap();
-        b.active -= 1;
-        if b.active == 0 {
-            if let Some(t0) = b.epoch.take() {
-                b.busy_ns += t0.elapsed().as_nanos() as u64;
-            }
+        self.stats.busy.lock().unwrap().close();
+    }
+}
+
+/// RAII marker for one in-flight transfer on a specific device queue;
+/// the per-queue analog of [`BusyGuard`], so overlap wins can be
+/// attributed to individual NVMe queues.
+pub struct QueueBusyGuard<'a> {
+    stats: &'a IoStats,
+    queue: usize,
+}
+
+impl Drop for QueueBusyGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(q) = self.stats.queues.get(self.queue) {
+            q.lock().unwrap().close();
         }
     }
 }
@@ -90,13 +141,19 @@ impl Drop for BusyGuard<'_> {
 impl IoStats {
     /// Mark one transfer in flight for the guard's lifetime.
     pub fn busy_guard(&self) -> BusyGuard<'_> {
-        let mut b = self.busy.lock().unwrap();
-        if b.active == 0 {
-            b.epoch = Some(Instant::now());
-        }
-        b.active += 1;
-        drop(b);
+        self.busy.lock().unwrap().open();
         BusyGuard { stats: self }
+    }
+
+    /// Mark one transfer in flight on device queue `queue`.  Queues
+    /// past [`MAX_QUEUES`] are still unioned into the engine-wide
+    /// window by the caller's [`Self::busy_guard`], just not broken
+    /// out per queue.
+    pub fn queue_guard(&self, queue: usize) -> QueueBusyGuard<'_> {
+        if let Some(q) = self.queues.get(queue) {
+            q.lock().unwrap().open();
+        }
+        QueueBusyGuard { stats: self, queue }
     }
 
     pub fn record_read(&self, bytes: u64, ns: u64) {
@@ -112,15 +169,16 @@ impl IoStats {
     }
 
     pub fn snapshot(&self) -> IoSnapshot {
-        let busy_ns = {
-            let b = self.busy.lock().unwrap();
-            // include the open window so deltas taken mid-flight are
-            // still monotone and exact
-            b.busy_ns
-                + b.epoch
-                    .map(|t0| t0.elapsed().as_nanos() as u64)
-                    .unwrap_or(0)
-        };
+        let busy_ns = self.busy.lock().unwrap().total_ns();
+        let mut queue_busy_ns = [0u64; MAX_QUEUES];
+        let mut queue_count = 0;
+        for (i, q) in self.queues.iter().enumerate() {
+            let b = q.lock().unwrap();
+            if b.used {
+                queue_busy_ns[i] = b.total_ns();
+                queue_count = i + 1;
+            }
+        }
         IoSnapshot {
             reads: self.reads.load(Ordering::Relaxed),
             writes: self.writes.load(Ordering::Relaxed),
@@ -129,6 +187,8 @@ impl IoStats {
             read_ns: self.read_ns.load(Ordering::Relaxed),
             write_ns: self.write_ns.load(Ordering::Relaxed),
             busy_ns,
+            queue_busy_ns,
+            queue_count,
         }
     }
 }
@@ -143,6 +203,11 @@ pub struct IoSnapshot {
     pub write_ns: u64,
     /// Union-of-intervals engine-busy time (never exceeds wall time).
     pub busy_ns: u64,
+    /// Per-queue busy unions (device `q` of the direct engine, RAID
+    /// member `q` of the fs engine); slots `>= queue_count` are zero.
+    pub queue_busy_ns: [u64; MAX_QUEUES],
+    /// Queues that ever went busy (`<= MAX_QUEUES`).
+    pub queue_count: usize,
 }
 
 impl IoSnapshot {
@@ -164,6 +229,14 @@ impl IoSnapshot {
         self.busy_ns as f64 / 1e9
     }
 
+    /// Busy union of one device queue in seconds (0 for unused slots).
+    pub fn queue_busy_secs(&self, queue: usize) -> f64 {
+        if queue >= MAX_QUEUES {
+            return 0.0;
+        }
+        self.queue_busy_ns[queue] as f64 / 1e9
+    }
+
     pub fn total_bytes(&self) -> u64 {
         self.bytes_read + self.bytes_written
     }
@@ -171,12 +244,76 @@ impl IoSnapshot {
 
 /// The interface the swapper / optimizer drive. Implementations must be
 /// safe to call from multiple worker threads.
+///
+/// The ranged surface (`read_at`/`write_at`/`reserve`) exists for the
+/// tiled optimizer pipeline: a tensor's value is fixed-length once
+/// written (or reserved), and tiles address disjoint byte windows of it
+/// concurrently — **concurrent `read_at`/`write_at` calls on disjoint
+/// ranges of one key must not interfere**.  `read_at`/`reserve` have
+/// whole-value defaults that honour that contract (reads don't
+/// interfere; reserve is a one-time full write); `write_at` is a
+/// *required* method precisely because the obvious whole-value
+/// read-modify-write default would lose concurrent disjoint updates.
 pub trait NvmeEngine: Send + Sync {
     /// Write `data` under `key`, overwriting any previous contents.
     fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()>;
 
     /// Read the full value of `key` into `out` (must match stored len).
     fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()>;
+
+    /// Read `out.len()` bytes of `key`'s value starting at byte
+    /// `offset`.
+    fn read_at(&self, key: &str, offset: usize, out: &mut [u8]) -> anyhow::Result<()> {
+        let stored = self
+            .len_of(key)
+            .ok_or_else(|| anyhow::anyhow!("{}: no tensor '{key}'", self.label()))?;
+        anyhow::ensure!(
+            offset + out.len() <= stored,
+            "{}: ranged read past '{key}' ({offset}+{} > {stored})",
+            self.label(),
+            out.len()
+        );
+        let mut tmp = vec![0u8; stored];
+        self.read(key, &mut tmp)?;
+        out.copy_from_slice(&tmp[offset..offset + out.len()]);
+        Ok(())
+    }
+
+    /// Write `data` into `key`'s value at byte `offset`, leaving the
+    /// stored length unchanged.  The key must already exist (write the
+    /// full value once, or [`Self::reserve`] it).  Implementations
+    /// must patch the addressed bytes in place — never read-modify-
+    /// write the whole value, which would clobber concurrent disjoint
+    /// tiles.
+    fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()>;
+
+    /// Make any buffered ranged writes to `key` durable (the fsync
+    /// analog).  Default is a no-op — correct for engines whose
+    /// writes are already synchronous or whose durability is out of
+    /// scope (the direct engine's raw device files).  `write_at` never
+    /// syncs per tile; callers that need a durability point (e.g. a
+    /// checkpoint path — the training loop does not, state is rebuilt
+    /// on restart) call this once per key.
+    fn flush(&self, _key: &str) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Ensure `key` exists with exactly `len` stored bytes so ranged
+    /// writes can target it — allocating storage without moving data
+    /// where the engine supports it (fresh contents are zero).
+    fn reserve(&self, key: &str, len: usize) -> anyhow::Result<()> {
+        match self.len_of(key) {
+            Some(stored) => {
+                anyhow::ensure!(
+                    stored == len,
+                    "{}: reserve size change for '{key}' ({stored} -> {len}) unsupported",
+                    self.label()
+                );
+                Ok(())
+            }
+            None => self.write(key, &vec![0u8; len]),
+        }
+    }
 
     /// Stored length of `key`, if present.
     fn len_of(&self, key: &str) -> Option<usize>;
@@ -235,6 +372,91 @@ mod tests {
         let s = eng.stats();
         assert!(s.busy_ns > 0);
         assert!(s.busy_ns <= s.read_ns + s.write_ns);
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn ranged_io_roundtrips_on_both_engines() {
+        let tmp = std::env::temp_dir().join(format!("ma-ssdrg-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        for eng in engines(&tmp) {
+            // reserve-then-tile: the tiled optimizer's write pattern
+            let n = 40_000usize;
+            eng.reserve("t", n).unwrap();
+            assert_eq!(eng.len_of("t"), Some(n));
+            eng.reserve("t", n).unwrap(); // idempotent
+            assert!(eng.reserve("t", n + 1).is_err(), "size change must error");
+            let want: Vec<u8> = (0..n).map(|i| (i % 251) as u8).collect();
+            // non-aligned tile windows covering the whole value
+            let tile = 7177usize;
+            let mut off = 0;
+            while off < n {
+                let len = tile.min(n - off);
+                eng.write_at("t", off, &want[off..off + len]).unwrap();
+                off += len;
+            }
+            // one durability point per key after the tile writes
+            eng.flush("t").unwrap();
+            eng.flush("absent-key").unwrap(); // flush of nothing is a no-op
+            let mut full = vec![0u8; n];
+            eng.read("t", &mut full).unwrap();
+            assert_eq!(full, want, "{}: tiled writes diverged", eng.label());
+            // ranged reads at awkward offsets, including spans that
+            // cross stripe/extent boundaries
+            for (off, len) in [(0usize, 1usize), (4095, 2), (12_288, 9000), (n - 3, 3)] {
+                let mut out = vec![0u8; len];
+                eng.read_at("t", off, &mut out).unwrap();
+                assert_eq!(out, &want[off..off + len], "{} @{off}+{len}", eng.label());
+            }
+            // out-of-bounds and missing keys surface as errors
+            let mut out = vec![0u8; 8];
+            assert!(eng.read_at("t", n - 4, &mut out).is_err());
+            assert!(eng.write_at("t", n - 4, &[0u8; 8]).is_err());
+            assert!(eng.read_at("missing", 0, &mut out).is_err());
+            assert!(eng.write_at("missing", 0, &[0u8; 8]).is_err());
+        }
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn per_queue_busy_tracks_each_device() {
+        let stats = IoStats::default();
+        {
+            let _g = stats.busy_guard();
+            let _q0 = stats.queue_guard(0);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        {
+            let _g = stats.busy_guard();
+            let _q1 = stats.queue_guard(1);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let s = stats.snapshot();
+        assert_eq!(s.queue_count, 2);
+        assert!(s.queue_busy_ns[0] > 0 && s.queue_busy_ns[1] > 0);
+        // per-queue unions partition the work here (disjoint windows),
+        // so each is below the engine-wide union
+        assert!(s.queue_busy_ns[0] <= s.busy_ns);
+        assert!(s.queue_busy_ns[1] <= s.busy_ns);
+        assert!(s.queue_busy_secs(0) > 0.0);
+        assert_eq!(s.queue_busy_secs(MAX_QUEUES + 1), 0.0);
+        // ids past the cap are ignored per-queue, not crashed on
+        let _far = stats.queue_guard(MAX_QUEUES + 3);
+    }
+
+    #[test]
+    fn direct_engine_attributes_busy_to_device_queues() {
+        let tmp = std::env::temp_dir().join(format!("ma-qbusy-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        let eng = DirectEngine::new(&tmp, 2, 1 << 24, 1).unwrap();
+        // striped across both devices -> both queues go busy
+        eng.write("t", &vec![7u8; 64_000]).unwrap();
+        let mut out = vec![0u8; 64_000];
+        eng.read("t", &mut out).unwrap();
+        let s = eng.stats();
+        assert_eq!(s.queue_count, 2);
+        assert!(s.queue_busy_ns[0] > 0, "device 0 never went busy");
+        assert!(s.queue_busy_ns[1] > 0, "device 1 never went busy");
         std::fs::remove_dir_all(&tmp).ok();
     }
 

@@ -30,12 +30,28 @@
 //! - [`AsyncEngine`] — `submit_read`/`submit_write` returning
 //!   [`IoHandle`]s, layering an async surface over any [`NvmeEngine`]
 //!   while the sync trait calls keep working unchanged.
+//!
+//! The queue workers are *transfer* workers only.  Under the staged-
+//! tile model, dtype conversion never runs here: a fetch job completes
+//! as soon as the bytes are staged, and the upconvert/downconvert
+//! stages run on the compute-side [`crate::util::stage::StageExecutor`]
+//! so decode of tile *k* overlaps the device read of tile *k+1*.  Tile
+//! transfers ride the ranged surface
+//! ([`AsyncEngine::submit_read_at_lease`] /
+//! [`AsyncEngine::submit_write_at_lease`]): the buffer is a pinned
+//! [`Lease`] from the [`crate::pinned::PinnedArena`] — not a pooled
+//! `Vec` — so every byte a tile keeps in flight is on the arena ledger
+//! and inside the pinned budget, and the lease travels through the
+//! handle back to the caller (or drops, releasing its extent, if the
+//! pipeline is torn down mid-flight).
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::AssertUnwindSafe;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+use crate::pinned::Lease;
 
 use super::NvmeEngine;
 
@@ -64,6 +80,14 @@ pub struct IoExecutor {
 
 impl IoExecutor {
     pub fn new(workers: usize) -> Self {
+        Self::with_thread_prefix(workers, "ma-ioq")
+    }
+
+    /// [`Self::new`] with a custom worker-thread name prefix — the
+    /// same pool also serves as the compute-side
+    /// [`crate::util::stage::StageExecutor`], which only differs in
+    /// what runs on it.
+    pub fn with_thread_prefix(workers: usize, prefix: &str) -> Self {
         let workers = workers.max(1);
         let shared = Arc::new(QueueShared {
             sq: Mutex::new(Sq { tasks: VecDeque::new(), shutdown: false }),
@@ -73,9 +97,9 @@ impl IoExecutor {
             .map(|i| {
                 let sh = Arc::clone(&shared);
                 std::thread::Builder::new()
-                    .name(format!("ma-ioq-{i}"))
+                    .name(format!("{prefix}-{i}"))
                     .spawn(move || worker_loop(sh))
-                    .expect("spawn i/o worker")
+                    .expect("spawn pool worker")
             })
             .collect();
         Self { shared, workers: handles }
@@ -102,7 +126,17 @@ impl Drop for IoExecutor {
     fn drop(&mut self) {
         self.shared.sq.lock().unwrap().shutdown = true;
         self.shared.cv.notify_all();
+        let me = std::thread::current().id();
         for h in self.workers.drain(..) {
+            // the last owner of the executor can be one of its own
+            // workers (an in-flight job dropping its context Arc);
+            // joining self would deadlock that worker forever, so the
+            // current thread is detached instead — it exits on its own
+            // once it observes `shutdown` (its queue is already drained
+            // or being drained by this very loop's siblings)
+            if h.thread().id() == me {
+                continue;
+            }
             let _ = h.join();
         }
     }
@@ -403,6 +437,41 @@ impl AsyncEngine {
         });
         handle
     }
+
+    /// Async ranged read of one tile: fill the pinned lease from byte
+    /// `offset` of `key`'s value.  The lease comes back through the
+    /// handle; dropped handles drop the lease, releasing its extent.
+    pub fn submit_read_at_lease(
+        &self,
+        key: String,
+        offset: usize,
+        mut buf: Lease,
+    ) -> IoHandle<Lease> {
+        let (completer, handle) = IoHandle::pair();
+        let eng = Arc::clone(&self.inner);
+        self.exec.submit(move || {
+            let res = eng.read_at(&key, offset, buf.as_mut_slice());
+            completer.complete(res.map(move |()| buf));
+        });
+        handle
+    }
+
+    /// Async ranged write of one tile from a pinned lease into byte
+    /// `offset` of `key`'s (already reserved) value.
+    pub fn submit_write_at_lease(
+        &self,
+        key: String,
+        offset: usize,
+        buf: Lease,
+    ) -> IoHandle<Lease> {
+        let (completer, handle) = IoHandle::pair();
+        let eng = Arc::clone(&self.inner);
+        self.exec.submit(move || {
+            let res = eng.write_at(&key, offset, buf.as_slice());
+            completer.complete(res.map(move |()| buf));
+        });
+        handle
+    }
 }
 
 impl NvmeEngine for AsyncEngine {
@@ -412,6 +481,22 @@ impl NvmeEngine for AsyncEngine {
 
     fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
         self.inner.read(key, out)
+    }
+
+    fn read_at(&self, key: &str, offset: usize, out: &mut [u8]) -> anyhow::Result<()> {
+        self.inner.read_at(key, offset, out)
+    }
+
+    fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
+        self.inner.write_at(key, offset, data)
+    }
+
+    fn flush(&self, key: &str) -> anyhow::Result<()> {
+        self.inner.flush(key)
+    }
+
+    fn reserve(&self, key: &str, len: usize) -> anyhow::Result<()> {
+        self.inner.reserve(key, len)
     }
 
     fn len_of(&self, key: &str) -> Option<usize> {
@@ -493,6 +578,24 @@ mod tests {
     }
 
     #[test]
+    fn dropping_last_executor_ref_from_its_own_worker_does_not_deadlock() {
+        // an in-flight job can hold the last Arc to its executor (the
+        // swapper's FetchCtx shape); dropping it runs IoExecutor::drop
+        // on a worker thread, which must not join itself
+        let exec = Arc::new(IoExecutor::new(1));
+        let exec2 = Arc::clone(&exec);
+        let (completer, handle): (_, IoHandle<u32>) = IoHandle::pair();
+        exec.submit(move || {
+            // let main's ref drop first so ours is the final one
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            drop(exec2); // Drop runs here, on this worker
+            completer.complete(Ok(7)); // reached only if Drop returned
+        });
+        drop(exec);
+        assert_eq!(handle.wait().unwrap(), 7);
+    }
+
+    #[test]
     fn completion_abandonment_is_an_error_not_a_hang() {
         let (completer, handle): (_, IoHandle<u32>) = IoHandle::pair();
         drop(completer);
@@ -545,6 +648,59 @@ mod tests {
         let mut out = vec![0u8; 4096];
         aio.read("k0", &mut out).unwrap();
         assert!(out.iter().all(|&b| b == 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lease_tile_reads_and_writes_roundtrip() {
+        use crate::bufpool::test_util::test_arena;
+        use crate::pinned::{Cat, Mode};
+
+        let dir = std::env::temp_dir().join(format!("ma-aiol-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let inner: Arc<dyn NvmeEngine> =
+            Arc::new(DirectEngine::new(&dir, 2, 1 << 24, 1).unwrap());
+        let aio = AsyncEngine::new(Arc::clone(&inner), 3);
+        let arena = test_arena(Mode::Real);
+
+        let n = 50_000usize;
+        let tile = 9001usize; // deliberately unaligned tiles
+        aio.reserve("t", n).unwrap();
+        // write the value tile-by-tile from pinned leases
+        let mut writes = Vec::new();
+        let mut off = 0;
+        while off < n {
+            let len = tile.min(n - off);
+            let mut l = arena.lease(len, Cat::OptimBuf).unwrap();
+            for (i, b) in l.as_mut_slice().iter_mut().enumerate() {
+                *b = ((off + i) % 253) as u8;
+            }
+            writes.push(aio.submit_write_at_lease("t".into(), off, l));
+            off += len;
+        }
+        for h in writes {
+            h.wait().unwrap(); // lease returns, then drops -> extent recycles
+        }
+        // read it back tile-by-tile through leases, out of order
+        let mut reads = Vec::new();
+        let mut off = 0;
+        while off < n {
+            let len = tile.min(n - off);
+            let l = arena.lease(len, Cat::OptimBuf).unwrap();
+            reads.push((off, aio.submit_read_at_lease("t".into(), off, l)));
+            off += len;
+        }
+        for (off, h) in reads.into_iter().rev() {
+            let l = h.wait().unwrap();
+            assert!(
+                l.as_slice()
+                    .iter()
+                    .enumerate()
+                    .all(|(i, &b)| b == ((off + i) % 253) as u8),
+                "tile @{off} corrupted"
+            );
+        }
+        assert_eq!(arena.stats().requested_bytes, 0, "all leases returned");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -13,10 +13,12 @@
 //!    transport into the fp32 flat buffer;
 //! 4. overflow check (fused or baseline) gates the dynamic loss scaler;
 //! 5. CPU AdamW swaps optimizer-state subgroups through the engine and
-//!    writes fresh fp16 compute weights back to the SSD — double-
-//!    buffered over the async queue when `TrainSpec::io_workers > 0`
-//!    (group k+1 prefetches while k computes and k-1's write-back
-//!    drains), sequential otherwise; both paths are bit-identical.
+//!    writes fresh fp16 compute weights back to the SSD — when
+//!    `TrainSpec::io_workers > 0`, via the staged-tile pipeline
+//!    (`TrainSpec::optim_tile_bytes` fixed-byte tiles, conversions on
+//!    the compute-side stage pool, peak pinned staging independent of
+//!    group size) or the whole-group double-buffer when the tile knob
+//!    is 0; sequential otherwise.  All paths are bit-identical.
 //!
 //! Weight fetches ride the swapper's windowed pipeline; spent f32
 //! kernel arguments are recycled through the shared [`F32Scratch`]
@@ -167,6 +169,7 @@ impl Trainer {
                 self.engine.nvme.clone(),
                 self.engine.pool.clone(),
                 self.engine.ioq.clone(),
+                self.engine.stage.clone(),
                 self.scratch.clone(),
                 self.fwd_plan.clone(),
                 |t| fp16_key(&t.name),
@@ -231,6 +234,7 @@ impl Trainer {
                 self.engine.nvme.clone(),
                 self.engine.pool.clone(),
                 self.engine.ioq.clone(),
+                self.engine.stage.clone(),
                 self.scratch.clone(),
                 bwd_plan,
                 |t| fp16_key(&t.name),
@@ -283,13 +287,16 @@ impl Trainer {
 
         // ---- optimizer: SSD-swapped AdamW per tensor group ----
         let t_opt = Instant::now();
+        let mut optim_tiles = 0u64;
         if !skip {
             self.applied_steps += 1;
             let t = self.applied_steps;
             let unscale = (scale * ranks as f64) as f32;
             if self.train.io_workers > 0 {
-                // double-buffered swap: group k+1 streams in while Adam
-                // runs on k and k-1's write-back drains
+                // staged-tile pipeline (fixed-byte tiles, conversions
+                // on the compute-side stage pool, peak pinned staging
+                // independent of group size); optim_tile_bytes = 0
+                // degrades to the whole-group double-buffer inside
                 let aio = self.engine.async_io();
                 let grads: Vec<&[f32]> = self
                     .state
@@ -303,8 +310,9 @@ impl Trainer {
                     .iter()
                     .map(|st| fp16_key(&st.group))
                     .collect();
-                let stats = crate::optimizer::step_groups_pipelined(
+                let stats = crate::optimizer::step_groups_tiled(
                     &aio,
+                    &self.engine.stage,
                     &self.engine.arena,
                     &self.state.offloaded,
                     &grads,
@@ -313,8 +321,11 @@ impl Trainer {
                     unscale,
                     &self.hp,
                     self.engine.threads,
+                    self.train.optim_tile_bytes,
+                    crate::optimizer::TILE_PIPELINE_DEPTH,
                 )?;
                 io_wait_secs += stats.wait_secs;
+                optim_tiles = stats.tiles;
             } else {
                 // sequential reference: every optimizer byte is
                 // foreground stall
@@ -371,6 +382,7 @@ impl Trainer {
             overflow_check_secs,
             optim_secs,
             io_wait_secs,
+            optim_tiles,
         })
     }
 

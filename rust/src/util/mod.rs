@@ -13,3 +13,4 @@ pub mod logger;
 pub mod par;
 pub mod proptest;
 pub mod rng;
+pub mod stage;

@@ -1,0 +1,94 @@
+//! Compute-side stage executor: the conversion half of the staged-tile
+//! pipelines.
+//!
+//! The NVMe queue workers ([`crate::ssd::IoExecutor`]) exist to keep
+//! the devices saturated; running dtype conversion on them serializes
+//! decode *behind* the next read on the same queue — the back-to-back
+//! read+upconvert the PR-1 ROADMAP item called out.  This pool is the
+//! other half of the split: a small set of persistent compute workers
+//! that CPU-bound stage jobs (f16→f32 upconvert, f32→f16 downconvert,
+//! bf16 repacks) run on, so decode of tile *k* overlaps the device read
+//! of tile *k+1*:
+//!
+//! ```text
+//!   NVMe queue:   [read k] [read k+1] [write k]  [read k+2] …
+//!   stage pool:            [decode k] [decode k+1] …
+//!   caller:                            [Adam k] …
+//! ```
+//!
+//! Mechanically it *is* an [`IoExecutor`] (same FIFO, same per-job
+//! panic containment, same drain-on-drop) under different thread names
+//! — the type exists so the two pools can never be confused at a call
+//! site: a `StageExecutor` argument always means "compute work, off
+//! the I/O path".  Completion plumbing is the caller's business —
+//! stage jobs typically close over a [`crate::ssd::IoHandle`]
+//! completer and chain follow-up submissions (e.g. the tile
+//! write-back) themselves.
+
+use crate::ssd::IoExecutor;
+
+/// Persistent compute-worker pool for conversion/packing stages.
+pub struct StageExecutor {
+    pool: IoExecutor,
+}
+
+impl StageExecutor {
+    pub fn new(workers: usize) -> Self {
+        Self { pool: IoExecutor::with_thread_prefix(workers, "ma-stage") }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.pool.worker_count()
+    }
+
+    /// Enqueue an owned job; returns immediately.  A panicking job is
+    /// contained (queued jobs behind it still run; any completer it
+    /// owned drops to "abandoned" instead of hanging its waiter).
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.pool.submit(job)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn runs_all_jobs_before_drop() {
+        let exec = StageExecutor::new(3);
+        let n = Arc::new(AtomicUsize::new(0));
+        for _ in 0..200 {
+            let n = Arc::clone(&n);
+            exec.submit(move || {
+                n.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(exec); // drains the queue + joins workers
+        assert_eq!(n.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_worker() {
+        let exec = StageExecutor::new(1); // one worker: a dead worker stalls the queue
+        exec.submit(|| panic!("stage job panic"));
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        exec.submit(move || {
+            d.fetch_add(1, Ordering::Relaxed);
+        });
+        drop(exec);
+        assert_eq!(done.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn jobs_can_chain_completions_across_pools() {
+        // the staged-tile shape: an I/O-side completer resolved from a
+        // stage job, like downconvert chaining into write-back
+        let exec = StageExecutor::new(2);
+        let (completer, handle) = crate::ssd::IoHandle::<u32>::pair();
+        exec.submit(move || completer.complete(Ok(41 + 1)));
+        assert_eq!(handle.wait().unwrap(), 42);
+    }
+}
