@@ -84,6 +84,7 @@ fn metrics(io_secs: f64, io_wait_secs: f64, step_secs: f64) -> StepMetrics {
         optim_secs: 0.0,
         io_wait_secs,
         optim_tiles: 0,
+        host_copy_bytes: 0,
     }
 }
 
@@ -177,7 +178,7 @@ fn swapper_experiment(table: &mut Table) -> (StepMetrics, f64) {
             let f = sw.next().unwrap();
             assert_eq!(f.desc.name, t.name, "plan order violated");
             spin(compute_time(t, ns_per_elem));
-            f32_pool.put(f.data); // consumer recycles, like the trainer
+            f32_pool.put_buf(f.data); // consumer recycles, like the trainer
         }
         wait += sw.wait_secs();
     }

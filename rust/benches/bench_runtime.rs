@@ -1,0 +1,226 @@
+//! Zero-copy PJRT boundary bench: does the weight path really upload
+//! straight out of pinned lease memory, and is the lease-backed path
+//! bit-identical to the owned-Vec path?
+//!
+//! Streams the full SMOKE offloadable plan (embed, 7 weights × layers,
+//! lm_head) through the swapper pipeline twice — once with a healthy
+//! scratch arena (fetches arrive as lease views) and once with a
+//! starved one (every fetch degrades to an owned vector, the seed's
+//! copy chain) — building per-tensor stage argument lists exactly the
+//! way the trainer does and folding a checksum over the *exact slices
+//! the PJRT client would upload* (`ValueRef::as_f32`, validated by
+//! `check_args`).  Gates (all deterministic, they set the exit code):
+//!
+//! 1. `host_copy_bytes == 0` on the lease-backed weight path;
+//! 2. the degraded path meters exactly the bytes it staged (the
+//!    savings bar: what the seed copied per pass);
+//! 3. the two paths' upload bytes are bit-identical;
+//! 4. resident-norm arguments borrow storage in place (pointer
+//!    equality — the old per-block `.to_vec()` is gone).
+//!
+//! Emits `bench_out/BENCH_runtime.json`.  Wall-clock per pass is
+//! report-only (timing is nondeterministic on shared runners).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use memascend::bufpool::{AdaptivePool, ParamBufferPool};
+use memascend::config::presets::SMOKE;
+use memascend::dtype::{f32s_to_f16_bytes, DType};
+use memascend::metrics::HostCopyMeter;
+use memascend::offload::{F32Scratch, Swapper};
+use memascend::pinned::{
+    AlignedAllocator, ArenaConfig, MemoryTracker, Mode, PinnedArena,
+};
+use memascend::runtime::{check_args, ArgSpec, StageSpec, ValueRef};
+use memascend::ssd::{DirectEngine, IoExecutor, NvmeEngine};
+use memascend::tensors::{inventory, TensorDesc};
+use memascend::train::weights::ResidentTensor;
+use memascend::util::bench::Table;
+use memascend::util::json::Json;
+use memascend::util::stage::StageExecutor;
+
+const PASSES: usize = 2;
+
+fn arena(budget: Option<usize>) -> Arc<PinnedArena> {
+    let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
+    PinnedArena::new(Arc::new(alloc), ArenaConfig { budget_bytes: budget, ..Default::default() })
+}
+
+fn checksum(acc: u64, s: &[f32]) -> u64 {
+    s.iter().fold(acc, |h, x| {
+        h.wrapping_mul(0x100000001b3).wrapping_add(x.to_bits() as u64)
+    })
+}
+
+struct PassResult {
+    copies: u64,
+    sum: u64,
+    bytes: u64,
+    views: usize,
+    secs: f64,
+}
+
+/// One full plan stream: fetch every tensor, validate it against its
+/// stage spec, and checksum the exact upload slice.
+fn stream_pass(
+    engine: &Arc<DirectEngine>,
+    plan: &[TensorDesc],
+    starve_scratch: bool,
+) -> PassResult {
+    let pool_arena = arena(None);
+    let pool: Arc<dyn ParamBufferPool> =
+        Arc::new(AdaptivePool::new(&SMOKE, 4, DType::F16, &pool_arena).unwrap());
+    // a 1 KiB budget refuses every lease: the pre-redesign copy chain
+    let scratch_arena = arena(starve_scratch.then_some(1024));
+    let scratch = Arc::new(F32Scratch::with_meter(scratch_arena, HostCopyMeter::new()));
+    let exec = Arc::new(IoExecutor::new(4));
+    let stage = Arc::new(StageExecutor::new(2));
+
+    let mut sum = 0u64;
+    let mut bytes = 0u64;
+    let mut views = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..PASSES {
+        let eng: Arc<dyn NvmeEngine> = Arc::clone(engine);
+        let mut sw = Swapper::start(
+            eng,
+            pool.clone(),
+            exec.clone(),
+            stage.clone(),
+            scratch.clone(),
+            plan.to_vec(),
+            |t| format!("{}/fp16", t.name),
+            4,
+        );
+        for t in plan {
+            let f = sw.next().unwrap();
+            assert_eq!(f.desc.name, t.name, "plan order violated");
+            // the trainer's argument-building step, per tensor
+            let spec = StageSpec {
+                name: "upload".into(),
+                file: String::new(),
+                args: vec![ArgSpec {
+                    name: t.name.clone(),
+                    shape: t.shape.clone(),
+                    dtype: "f32".into(),
+                }],
+                results: vec![],
+            };
+            let args = [f.data.as_value()];
+            check_args("upload", &spec, &args).unwrap();
+            // the exact slice buffer_from_host_buffer would consume
+            let slice = args[0].as_f32().unwrap();
+            sum = checksum(sum, slice);
+            bytes += slice.len() as u64 * 4;
+            views += usize::from(f.data.is_view());
+            scratch.put_buf(f.data);
+        }
+    }
+    PassResult {
+        copies: scratch.meter().bytes(),
+        sum,
+        bytes,
+        views,
+        secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+fn main() {
+    // seeded engine shared by both passes: identical bytes on disk
+    let dir = std::env::temp_dir().join(format!("ma-rtbench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let engine = Arc::new(DirectEngine::new(&dir, 2, 1 << 24, 2).unwrap());
+    let plan: Vec<TensorDesc> =
+        inventory(&SMOKE).into_iter().filter(|t| t.offloadable()).collect();
+    let mut rng = memascend::util::rng::Xoshiro256::new(29);
+    for t in &plan {
+        let vals: Vec<f32> = (0..t.numel).map(|_| rng.normal() as f32).collect();
+        let mut bytes = vec![0u8; t.numel * 2];
+        f32s_to_f16_bytes(&vals, &mut bytes);
+        engine.write(&format!("{}/fp16", t.name), &bytes).unwrap();
+    }
+
+    let lease = stream_pass(&engine, &plan, false);
+    let degraded = stream_pass(&engine, &plan, true);
+    std::fs::remove_dir_all(&dir).ok();
+
+    // resident-norm arguments: ResidentTensor::value (the trainer's
+    // resident_arg path) must alias the resident storage itself — the
+    // seed staged a .to_vec() copy per block pass
+    let norm_desc = inventory(&SMOKE)
+        .into_iter()
+        .find(|t| !t.offloadable())
+        .expect("SMOKE has resident norms");
+    let resident = ResidentTensor {
+        data: vec![1.0f32; norm_desc.numel],
+        m: vec![0.0; norm_desc.numel],
+        v: vec![0.0; norm_desc.numel],
+        desc: norm_desc,
+    };
+    let arg: ValueRef = resident.value();
+    let resident_zero_copy =
+        std::ptr::eq(arg.as_f32().unwrap().as_ptr(), resident.data.as_ptr());
+    let resident_legacy_bytes =
+        (SMOKE.layers * 2 + 1) * SMOKE.hidden * 4 * PASSES; // norms per pass
+
+    let mut table = Table::new(vec![
+        "path",
+        "fetches",
+        "lease views",
+        "upload bytes",
+        "host_copy_bytes",
+        "secs",
+    ]);
+    for (name, r) in [("lease-backed", &lease), ("degraded (seed chain)", &degraded)] {
+        table.row(vec![
+            name.to_string(),
+            format!("{}", plan.len() * PASSES),
+            format!("{}", r.views),
+            format!("{}", r.bytes),
+            format!("{}", r.copies),
+            format!("{:.4}", r.secs),
+        ]);
+    }
+    common::emit("runtime", "zero-copy PJRT boundary: staging copies per path", &table);
+
+    let identical = lease.sum == degraded.sum;
+    let zero_copy = lease.copies == 0 && lease.views == plan.len() * PASSES;
+    let degraded_metered = degraded.copies == degraded.bytes && degraded.views == 0;
+    println!(
+        "weight path: {} upload bytes/pass, lease path copies {} B, \
+         degraded path copies {} B (the per-pass saving)",
+        lease.bytes / PASSES as u64,
+        lease.copies,
+        degraded.copies / PASSES as u64,
+    );
+    println!("byte-identity lease vs owned: {identical}");
+    println!("resident-norm borrow is zero-copy: {resident_zero_copy}");
+
+    std::fs::create_dir_all(common::OUT_DIR).ok();
+    let out = Json::obj(vec![
+        ("tensors_per_pass", Json::from(plan.len())),
+        ("passes", Json::from(PASSES)),
+        ("upload_bytes", Json::from(lease.bytes)),
+        ("host_copy_bytes_lease", Json::from(lease.copies)),
+        ("host_copy_bytes_degraded", Json::from(degraded.copies)),
+        ("byte_identical", Json::from(identical)),
+        ("resident_borrow_zero_copy", Json::from(resident_zero_copy)),
+        ("resident_legacy_bytes", Json::from(resident_legacy_bytes)),
+        ("lease_secs", Json::from(lease.secs)),
+        ("degraded_secs", Json::from(degraded.secs)),
+    ]);
+    let path = format!("{}/BENCH_runtime.json", common::OUT_DIR);
+    match std::fs::write(&path, out.to_string()) {
+        Ok(()) => println!("[json] {path}"),
+        Err(e) => eprintln!("warn: could not write {path}: {e}"),
+    }
+
+    let pass = zero_copy && degraded_metered && identical && resident_zero_copy;
+    println!("ACCEPTANCE: {}", if pass { "PASS" } else { "FAIL" });
+    if !pass {
+        std::process::exit(1);
+    }
+}

@@ -17,6 +17,18 @@
 //! 5. resident small tensors + framework base
 //! 6. the overflow-check transient (baseline chain: 1.25× of the flat
 //!    buffer materialized and freed — the 2.25× total peak; fused: 0)
+//!
+//! Known modeling gap (PR 4): the zero-copy boundary moved two more
+//! consumers onto pinned leases that this replay does not yet charge —
+//! the swapper/spill f32 *delivery* views (`Cat::SwapBuf`, up to
+//! `prefetch_depth` + in-kernel tensors live at once) and the
+//! whole-group optimizer's fp16 compute window (`Cat::OptimBuf`, two
+//! generations × subgroup × 2 B).  Figures replayed here keep paper
+//! parity (the paper's model predates both), but a
+//! `pinned_budget_bytes` sized *from this model* undercounts real
+//! pinned demand and can force the boundary into owned-tier
+//! degradation (`StepMetrics::host_copy_bytes` > 0) — watch that
+//! counter when budgeting; see the ROADMAP open item.
 
 use std::sync::Arc;
 

@@ -2,8 +2,38 @@
 
 use std::io::Write;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::util::json::Json;
+
+/// Shared counter of fp32 bytes staged through *owned heap buffers* on
+/// the way to the PJRT boundary — the copy chain the lease-backed
+/// [`crate::runtime::TensorBuf`] views exist to eliminate.
+///
+/// Producers (the swapper's upconvert, the activation stores' fetch
+/// decode, any `.to_vec()` staging) charge it whenever a tensor is
+/// staged outside a pinned lease; the trainer snapshots it per step
+/// into [`StepMetrics::host_copy_bytes`].  Cloning shares the counter,
+/// so one meter can span the swapper, the spill store, and the trainer.
+#[derive(Clone, Debug, Default)]
+pub struct HostCopyMeter(Arc<AtomicU64>);
+
+impl HostCopyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge `bytes` of heap-staged tensor data.
+    pub fn add(&self, bytes: usize) {
+        self.0.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Monotone total since construction.
+    pub fn bytes(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
 
 /// Append-oriented CSV logger (loss curves, sweep outputs).
 pub struct CsvLog {
@@ -54,6 +84,13 @@ pub struct StepMetrics {
     /// Optimizer-state tiles streamed by the staged-tile pipeline this
     /// step (0 when the whole-group or sequential path ran).
     pub optim_tiles: u64,
+    /// fp32 bytes staged through owned heap buffers at the PJRT
+    /// boundary this step (see [`HostCopyMeter`]).  0 means every
+    /// weight/activation argument uploaded straight from pinned lease
+    /// memory — the zero-copy invariant `bench_runtime` gates on; a
+    /// non-zero count means the arena budget forced owned-vector
+    /// degradation somewhere.
+    pub host_copy_bytes: u64,
 }
 
 impl StepMetrics {
@@ -179,7 +216,18 @@ mod tests {
             optim_secs: 0.05,
             io_wait_secs: 0.04,
             optim_tiles: 0,
+            host_copy_bytes: 0,
         }
+    }
+
+    #[test]
+    fn host_copy_meter_is_shared_by_clones() {
+        let m = HostCopyMeter::new();
+        let m2 = m.clone();
+        m.add(100);
+        m2.add(28);
+        assert_eq!(m.bytes(), 128);
+        assert_eq!(m2.bytes(), 128);
     }
 
     #[test]

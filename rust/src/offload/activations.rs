@@ -41,11 +41,22 @@ impl ActivationStore {
 
     /// Fetch a checkpoint back for recomputation (host fp16 -> f32).
     pub fn fetch(&mut self, layer: usize) -> Vec<f32> {
-        assert!(self.occupied[layer], "layer {layer} checkpoint missing");
         let mut out = vec![0f32; self.elems_per_slot];
-        f16_bytes_to_f32s(self.slots[layer].as_slice(), &mut out);
-        self.occupied[layer] = false;
+        self.fetch_into(layer, &mut out);
         out
+    }
+
+    /// [`Self::fetch`] decoding into a caller-provided destination —
+    /// typically a pinned lease's f32 view, so the recomputation
+    /// argument is staged once, in upload-ready memory, with no owned
+    /// intermediate (the zero-copy boundary's consumption pattern; see
+    /// [`super::spill::SpillingActivationStore::fetch`] for the
+    /// budget-elastic store the trainer uses).
+    pub fn fetch_into(&mut self, layer: usize, out: &mut [f32]) {
+        assert!(self.occupied[layer], "layer {layer} checkpoint missing");
+        assert_eq!(out.len(), self.elems_per_slot);
+        f16_bytes_to_f32s(self.slots[layer].as_slice(), out);
+        self.occupied[layer] = false;
     }
 
     pub fn host_bytes(&self) -> usize {
@@ -71,6 +82,20 @@ mod tests {
         let back = store.fetch(2);
         // all values here are f16-exact
         assert_eq!(back, h);
+    }
+
+    #[test]
+    fn fetch_into_decodes_into_a_lease_view() {
+        // the zero-copy consumption pattern: decode straight into a
+        // pinned lease, freeze, upload the view
+        let arena = test_arena(Mode::Real);
+        let mut store = ActivationStore::new(2, 128, &arena).unwrap();
+        let h: Vec<f32> = (0..128).map(|i| i as f32).collect();
+        store.offload(1, &h);
+        let mut dst = arena.lease(128 * 4, crate::pinned::Cat::SwapBuf).unwrap();
+        store.fetch_into(1, dst.as_f32_mut());
+        let view = crate::runtime::TensorBuf::from_lease(dst).unwrap();
+        assert_eq!(view.as_f32(), h.as_slice());
     }
 
     #[test]

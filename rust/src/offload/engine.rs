@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use crate::bufpool::{AdaptivePool, MonolithicPool, ParamBufferPool};
 use crate::config::{ModelSpec, TrainSpec};
+use crate::metrics::HostCopyMeter;
 use crate::overflow::{baseline_overflow_check, fused_overflow_check, Checker};
 use crate::pinned::{
     AlignedAllocator, ArenaConfig, CachingAllocator, HostAllocator, MemoryTracker,
@@ -36,6 +37,11 @@ pub struct OffloadEngine {
     pub stage: Arc<StageExecutor>,
     pub checker: Checker,
     pub threads: usize,
+    /// Engine-wide boundary copy counter: every component that stages
+    /// fp32 tensors in owned heap memory on the way to PJRT (swapper
+    /// fallback, spill-store fallback) charges this one meter, so the
+    /// trainer's per-step `host_copy_bytes` covers the whole engine.
+    pub copy_meter: HostCopyMeter,
 }
 
 impl OffloadEngine {
@@ -102,6 +108,7 @@ impl OffloadEngine {
             stage,
             checker,
             threads,
+            copy_meter: HostCopyMeter::new(),
         })
     }
 

@@ -13,6 +13,7 @@ use std::collections::HashMap;
 
 use crate::dtype::{f16_to_f32, f32_to_f16};
 use crate::pinned::{Cat, Lease, PinnedArena};
+use crate::runtime::ValueRef;
 use crate::tensors::TensorDesc;
 
 pub struct GradFlatBuffer {
@@ -61,6 +62,19 @@ impl GradFlatBuffer {
     pub fn grads_of(&self, tensor: &str) -> &[f32] {
         let (off, len) = self.layout[tensor];
         &self.lease.as_f32()[off..off + len]
+    }
+
+    /// One tensor's grad span as a PJRT argument — borrows the pinned
+    /// lease region itself, so uploading a gradient (e.g. to an
+    /// HLO-side optimizer kernel) stages zero copies.
+    pub fn value_of(&self, tensor: &str) -> ValueRef<'_> {
+        ValueRef::F32(self.grads_of(tensor))
+    }
+
+    /// The whole fp32 partition as one argument (same lease bytes the
+    /// overflow check scans).
+    pub fn as_value(&self) -> ValueRef<'_> {
+        ValueRef::F32(self.as_slice())
     }
 
     /// Accumulate a gradient that traveled as fp16 (values round-trip
@@ -163,6 +177,23 @@ mod tests {
         let got = buf.grads_of(&t.name);
         assert!(got[3].is_infinite());
         assert_eq!(got[0], 0.5);
+    }
+
+    #[test]
+    fn value_refs_borrow_the_lease_without_copying() {
+        let mut buf = mk();
+        let inv = inventory(&SMOKE);
+        let t = &inv[1];
+        buf.accumulate_f16_transport(&t.name, &vec![0.25f32; t.numel]);
+        // zero-copy proof: the argument's base pointer IS the lease span
+        let arg = buf.value_of(&t.name);
+        let arg_slice = arg.as_f32().unwrap();
+        assert_eq!(arg_slice.as_ptr(), buf.grads_of(&t.name).as_ptr());
+        assert_eq!(arg_slice.len(), t.numel);
+        assert!(arg_slice.iter().all(|&x| x == 0.25));
+        let whole = buf.as_value();
+        assert_eq!(whole.len(), buf.len());
+        assert_eq!(whole.as_f32().unwrap().as_ptr(), buf.as_slice().as_ptr());
     }
 
     #[test]

@@ -30,7 +30,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::dtype::{f16_bytes_to_f32s, f32s_to_f16_bytes};
+use crate::metrics::HostCopyMeter;
 use crate::pinned::{Cat, Lease, PinnedArena};
+use crate::runtime::{F32Staging, TensorBuf};
 use crate::ssd::{AsyncEngine, IoHandle};
 
 enum Slot {
@@ -56,6 +58,9 @@ pub struct SpillingActivationStore {
     /// In-flight prefetched read for the next spilled fetch.
     prefetched: Option<(usize, IoHandle<Vec<u8>>)>,
     wait_ns: u64,
+    /// Charged when a fetch decode has to stage in an owned vector
+    /// instead of a pinned lease.
+    meter: HostCopyMeter,
 }
 
 impl SpillingActivationStore {
@@ -68,6 +73,7 @@ impl SpillingActivationStore {
         host_budget_bytes: usize,
         arena: Arc<PinnedArena>,
         aio: AsyncEngine,
+        meter: HostCopyMeter,
     ) -> Self {
         Self {
             slots: (0..layers).map(|_| Slot::Empty).collect(),
@@ -81,6 +87,7 @@ impl SpillingActivationStore {
             spilled_slots: 0,
             prefetched: None,
             wait_ns: 0,
+            meter,
         }
     }
 
@@ -110,20 +117,27 @@ impl SpillingActivationStore {
         Ok(())
     }
 
-    pub fn fetch(&mut self, layer: usize) -> anyhow::Result<Vec<f32>> {
+    /// Fetch a checkpoint back for recomputation.  The f16→f32 decode
+    /// lands in a fresh pinned `SwapBuf` lease frozen into a read-only
+    /// [`TensorBuf`] view — the recomputation kernel's `h` argument
+    /// uploads those bytes verbatim, no further staging copy.  A
+    /// refused lease degrades to an owned scratch vector (charged to
+    /// the copy meter); data is bit-identical either way.
+    pub fn fetch(&mut self, layer: usize) -> anyhow::Result<TensorBuf> {
         anyhow::ensure!(
             !matches!(self.slots[layer], Slot::Empty),
             "layer {layer} checkpoint missing"
         );
         let slot = std::mem::replace(&mut self.slots[layer], Slot::Empty);
-        // compute-side f32 copy: drawn from the SwapBuf scratch tier —
-        // the pool the trainer reclaims spent kernel arguments into —
-        // so steady-state fetches recycle instead of allocating
-        let mut out = self.arena.take_f32(self.elems, Cat::SwapBuf);
+        // the shared lease-else-owned policy, under `Cat::SwapBuf` —
+        // the scratch tier the trainer reclaims spent buffers into, so
+        // even the degraded path recycles instead of allocating
+        let mut dst =
+            F32Staging::take(&self.arena, Cat::SwapBuf, self.elems, &self.meter);
         match slot {
             Slot::Empty => unreachable!("checked above"),
             Slot::Host(lease) => {
-                f16_bytes_to_f32s(lease.as_slice(), &mut out);
+                f16_bytes_to_f32s(lease.as_slice(), dst.as_mut_slice());
                 self.host_bytes_live -= self.bytes_per;
                 // lease drops here: the host slot returns to the arena
                 // for reuse by a later offload
@@ -137,12 +151,12 @@ impl SpillingActivationStore {
                     }
                 };
                 let bytes = self.await_read(handle)?;
-                f16_bytes_to_f32s(&bytes, &mut out);
+                f16_bytes_to_f32s(&bytes, dst.as_mut_slice());
                 self.arena.put_bytes(bytes, Cat::ActCkpt);
             }
         }
         self.maybe_prefetch(layer);
-        Ok(out)
+        Ok(dst.freeze())
     }
 
     /// Seconds the caller blocked inside [`Self::fetch`] waiting on
@@ -228,8 +242,14 @@ mod tests {
         let arena = test_arena(Mode::Real);
         let tracker = Arc::clone(arena.tracker());
         let aio = AsyncEngine::new(engine, 2);
-        let store =
-            SpillingActivationStore::new(8, 1024, budget, Arc::clone(&arena), aio);
+        let store = SpillingActivationStore::new(
+            8,
+            1024,
+            budget,
+            Arc::clone(&arena),
+            aio,
+            HostCopyMeter::new(),
+        );
         (store, dir, tracker, arena)
     }
 
@@ -257,9 +277,12 @@ mod tests {
         }
         for layer in (0..8).rev() {
             let h = store.fetch(layer).unwrap();
+            assert!(h.is_view(), "layer {layer}: fetch not lease-backed");
+            let h = h.as_f32();
             assert_eq!(h[0], layer as f32, "layer {layer}");
             assert_eq!(h[1023], (layer + 1023) as f32);
         }
+        assert_eq!(store.meter.bytes(), 0, "zero-copy fetches charged the meter");
         // the prefetch window only ever held one in-flight read, and
         // every stall was attributed
         assert!(store.wait_secs() >= 0.0);
@@ -273,7 +296,7 @@ mod tests {
         store.offload(0, &h).unwrap();
         assert_eq!(store.host_slots, 0);
         assert_eq!(store.spilled_slots, 1);
-        assert_eq!(store.fetch(0).unwrap()[0], 1.5);
+        assert_eq!(store.fetch(0).unwrap().as_f32()[0], 1.5);
         // no pinned checkpoint slot was ever leased; the only ActCkpt
         // charge is recycled spill staging (bounded by two buffers)
         assert_eq!(arena.watermark(Cat::ActCkpt).requested_peak, 0);
@@ -297,14 +320,14 @@ mod tests {
         let (mut store, dir, _, arena) = mk(2048);
         store.offload(0, &vec![1.0f32; 1024]).unwrap();
         assert_eq!(store.host_slots, 1);
-        assert_eq!(store.fetch(0).unwrap()[0], 1.0);
+        assert_eq!(store.fetch(0).unwrap().as_f32()[0], 1.0);
         store.offload(1, &vec![2.0f32; 1024]).unwrap();
         assert_eq!(store.host_slots, 2, "freed budget not reused");
         assert_eq!(store.spilled_slots, 0);
         // one page of ActCkpt backing total: the second offload
         // recycled the first slot's extent
         assert_eq!(arena.watermark(Cat::ActCkpt).charged_peak, 4096);
-        assert_eq!(store.fetch(1).unwrap()[0], 2.0);
+        assert_eq!(store.fetch(1).unwrap().as_f32()[0], 2.0);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -322,14 +345,24 @@ mod tests {
             ArenaConfig { budget_bytes: Some(4096), ..Default::default() },
         );
         let aio = AsyncEngine::new(engine, 1);
-        let mut store =
-            SpillingActivationStore::new(4, 1024, usize::MAX, Arc::clone(&arena), aio);
+        let meter = HostCopyMeter::new();
+        let mut store = SpillingActivationStore::new(
+            4,
+            1024,
+            usize::MAX,
+            Arc::clone(&arena),
+            aio,
+            meter.clone(),
+        );
         store.offload(0, &vec![1.0f32; 1024]).unwrap(); // fills the 4 KiB cap
         store.offload(1, &vec![2.0f32; 1024]).unwrap(); // must spill
         assert_eq!(store.host_slots, 1);
         assert_eq!(store.spilled_slots, 1);
-        assert_eq!(store.fetch(1).unwrap()[0], 2.0);
-        assert_eq!(store.fetch(0).unwrap()[0], 1.0);
+        assert_eq!(store.fetch(1).unwrap().as_f32()[0], 2.0);
+        assert_eq!(store.fetch(0).unwrap().as_f32()[0], 1.0);
+        // the 4 KiB cap also refuses the f32 decode leases: both
+        // fetches degraded to owned staging, and both were metered
+        assert_eq!(meter.bytes(), 2 * 1024 * 4);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

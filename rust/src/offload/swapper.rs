@@ -18,17 +18,27 @@
 //!  [ IoExecutor submission queue ] ──► worker: lease pool buffer
 //!          │   out-of-order execution          read fp16 from NVMe
 //!          ▼                                   chain ↓
-//!  [ StageExecutor (compute pool) ] ──► worker: upconvert → f32 scratch
-//!          │                                    release pool buffer
-//!          ▼
+//!  [ StageExecutor (compute pool) ] ──► worker: upconvert → pinned
+//!          │                                    SwapBuf lease, freeze;
+//!          ▼                                    release pool buffer
 //!  [ per-fetch completion handles ]
 //!          │ FIFO wait  (in-order delivery)
 //!          ▼
-//!  compute thread: `next()` → Fetched { desc, data }
-//!          │ after the kernel consumed the args
+//!  compute thread: `next()` → Fetched { desc, data: TensorBuf }
+//!          │ TensorBuf::as_value() uploads the lease bytes verbatim
 //!          ▼
-//!  [`F32Scratch`] ◄── recycled f32 vectors (no per-tensor alloc)
+//!  [ PJRT `Runtime::run` ] — zero fp32 host-to-host copies; dropping
+//!          the view recycles the lease extent in the arena
 //! ```
+//!
+//! Delivery is **lease-backed**: the f16→f32 upconvert decodes
+//! straight into a pinned [`PinnedArena`] lease, which freezes into a
+//! shared read-only [`TensorBuf`] view — the very bytes
+//! `Runtime::run` uploads.  Only when the arena refuses the lease
+//! (budget pressure, Virtual mode) does the fetch degrade to an owned
+//! scratch vector, charging the staged bytes to the shared
+//! [`HostCopyMeter`] (surfaced as `StepMetrics::host_copy_bytes`);
+//! data is bit-identical either way.
 //!
 //! Backpressure is two-layer, as before: the parameter pool bounds
 //! bytes staged in pinned memory (workers block in `acquire`), and the
@@ -44,25 +54,41 @@ use std::time::Instant;
 
 use crate::bufpool::{ParamBufferPool, PoolBuf};
 use crate::dtype::f16_bytes_to_f32s;
+use crate::metrics::HostCopyMeter;
 use crate::pinned::{Cat, PinnedArena};
+use crate::runtime::{F32Staging, TensorBuf};
 use crate::ssd::{IoExecutor, IoHandle, NvmeEngine};
 use crate::tensors::TensorDesc;
 use crate::util::stage::StageExecutor;
 
-/// Recycling pool of f32 vectors: the conversion scratch the pipeline
-/// delivers tensors in.  A thin facade over the arena's scratch tier
-/// (`Cat::SwapBuf`), so the pool's idle bytes sit on the shared ledger,
-/// count against the pinned budget, and follow the arena's best-fit /
-/// size-floor / byte-bound policy.  The trainer returns spent argument
-/// vectors after each kernel call, so steady-state training allocates
-/// no per-tensor `Vec<f32>` at all.
+/// The swapper's staging tier: vends pinned `Cat::SwapBuf` leases for
+/// zero-copy delivery, and recycles owned f32 vectors for everything
+/// that must stay heap-backed (PJRT result buffers, budget-degraded
+/// fetches).  Both tiers ride the arena, so idle bytes sit on the
+/// shared ledger and inside the pinned budget; the [`HostCopyMeter`]
+/// records every byte the owned tier stages on the boundary path.
 pub struct F32Scratch {
     arena: Arc<PinnedArena>,
+    meter: HostCopyMeter,
 }
 
 impl F32Scratch {
     pub fn new(arena: Arc<PinnedArena>) -> Self {
-        Self { arena }
+        Self::with_meter(arena, HostCopyMeter::new())
+    }
+
+    /// Share an existing copy meter (the engine-wide one, so swapper,
+    /// spill store, and trainer report into one counter).
+    pub fn with_meter(arena: Arc<PinnedArena>, meter: HostCopyMeter) -> Self {
+        Self { arena, meter }
+    }
+
+    /// Take an `n`-element staging destination: a pinned lease when
+    /// the arena grants one (zero-copy tier), else an owned scratch
+    /// vector charged to the meter — [`F32Staging::take`]'s shared
+    /// degradation policy under `Cat::SwapBuf`.
+    pub fn take_staging(&self, n: usize) -> F32Staging {
+        F32Staging::take(&self.arena, Cat::SwapBuf, n, &self.meter)
     }
 
     /// Take a vector of exactly `n` elements (recycled best-fit when
@@ -77,6 +103,21 @@ impl F32Scratch {
         self.arena.put_f32(v, Cat::SwapBuf)
     }
 
+    /// Recycle a spent tensor: owned vectors return to the pool; lease
+    /// views simply drop, releasing their extent back to the arena's
+    /// free list (same recycling, different tier).
+    pub fn put_buf(&self, buf: TensorBuf) {
+        if let TensorBuf::F32(v) = buf {
+            self.put(v);
+        }
+    }
+
+    /// The boundary copy counter this scratch charges on degraded
+    /// (owned-tier) staging.
+    pub fn meter(&self) -> &HostCopyMeter {
+        &self.meter
+    }
+
     /// Vectors currently pooled (test/introspection hook).
     pub fn pooled(&self) -> usize {
         self.arena.pooled_f32(Cat::SwapBuf)
@@ -87,10 +128,11 @@ impl F32Scratch {
     }
 }
 
-/// One fetched tensor, ready for compute.
+/// One fetched tensor, ready for compute: a lease-backed view on the
+/// zero-copy path, an owned vector when the arena degraded the fetch.
 pub struct Fetched {
     pub desc: TensorDesc,
-    pub data: Vec<f32>,
+    pub data: TensorBuf,
 }
 
 /// Everything a fetch job needs; shared by value-cloned `Arc`.
@@ -245,15 +287,18 @@ fn stage_read(ctx: &FetchCtx, t: &TensorDesc) -> anyhow::Result<(PoolBuf, usize)
     Ok((buf, n))
 }
 
-/// Fetch stage 2: f16→f32 upconvert from the staged pool buffer into
-/// pooled scratch, then release the staging back to the pool.
-fn upconvert(ctx: &FetchCtx, buf: PoolBuf, n: usize) -> anyhow::Result<Vec<f32>> {
-    let mut data = ctx.scratch.take(n);
+/// Fetch stage 2: f16→f32 upconvert from the staged pool buffer
+/// straight into a pinned `SwapBuf` lease (frozen into a read-only
+/// view — the upload source), then release the staging back to the
+/// pool.  A refused lease degrades to an owned scratch vector, charged
+/// to the copy meter: bit-identical data, one extra heap staging hop.
+fn upconvert(ctx: &FetchCtx, buf: PoolBuf, n: usize) -> anyhow::Result<TensorBuf> {
+    let mut dst = ctx.scratch.take_staging(n);
     ctx.pool.with_buf(&buf, &mut |bytes| {
-        f16_bytes_to_f32s(&bytes[..n * 2], &mut data);
+        f16_bytes_to_f32s(&bytes[..n * 2], dst.as_mut_slice());
     });
     ctx.pool.release(buf);
-    Ok(data)
+    Ok(dst.freeze())
 }
 
 #[cfg(test)]
@@ -317,7 +362,8 @@ mod tests {
         for (i, want) in plan.iter().enumerate() {
             let got = sw.next().unwrap();
             assert_eq!(got.desc.name, want.name, "order violated");
-            assert!(got.data.iter().all(|&x| x == i as f32 + 0.5));
+            assert!(got.data.is_view(), "fetch not lease-backed");
+            assert!(got.data.as_f32().iter().all(|&x| x == i as f32 + 0.5));
         }
         assert_eq!(sw.remaining(), 0);
         assert!(sw.next().is_err(), "exhausted plan must error");
@@ -344,7 +390,7 @@ mod tests {
                 let got = sw.next().unwrap();
                 assert_eq!(got.desc.name, want.name, "depth {depth}: order violated");
                 assert!(
-                    got.data.iter().all(|&x| x == i as f32 + 0.5),
+                    got.data.as_f32().iter().all(|&x| x == i as f32 + 0.5),
                     "depth {depth}: tensor {i} corrupted"
                 );
             }
@@ -423,11 +469,72 @@ mod tests {
             match sw.next() {
                 Ok(got) => {
                     assert_eq!(got.desc.name, want.name);
-                    assert!(got.data.iter().all(|&x| x == i as f32 + 0.5));
+                    assert!(got.data.as_f32().iter().all(|&x| x == i as f32 + 0.5));
                 }
                 Err(_) => break,
             }
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lease_backed_fetches_count_zero_copies_and_recycle_extents() {
+        let (engine, plan, dir) = seeded_engine("zc");
+        let s = scratch();
+        let mut sw = Swapper::start(
+            engine,
+            pool(2),
+            Arc::new(IoExecutor::new(2)),
+            stage(),
+            Arc::clone(&s),
+            plan.clone(),
+            |t| format!("{}/fp16", t.name),
+            2,
+        );
+        for _ in 0..plan.len() {
+            let got = sw.next().unwrap();
+            assert!(got.data.is_view());
+            s.put_buf(got.data); // drops the view: extent recycles
+        }
+        assert_eq!(s.meter().bytes(), 0, "zero-copy path charged the meter");
+        let st = s.arena().stats();
+        assert_eq!(st.requested_bytes, 0, "fetch leases leaked");
+        assert!(st.recycled > 0, "fetch leases never recycled");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn starved_arena_degrades_to_owned_vectors_and_meters_the_copies() {
+        use crate::pinned::{AlignedAllocator, ArenaConfig, MemoryTracker, PinnedArena};
+        let (engine, plan, dir) = seeded_engine("deg");
+        // the *scratch* arena is starved (1 KiB budget refuses every
+        // lease); the pool keeps its own unbounded arena so staging
+        // still works
+        let starved = PinnedArena::new(
+            Arc::new(AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()))),
+            ArenaConfig { budget_bytes: Some(1024), ..Default::default() },
+        );
+        let s = Arc::new(F32Scratch::new(starved));
+        let mut sw = Swapper::start(
+            engine,
+            pool(2),
+            Arc::new(IoExecutor::new(2)),
+            stage(),
+            Arc::clone(&s),
+            plan.clone(),
+            |t| format!("{}/fp16", t.name),
+            2,
+        );
+        let mut expect_bytes = 0u64;
+        for (i, t) in plan.iter().enumerate() {
+            let got = sw.next().unwrap();
+            assert!(!got.data.is_view(), "starved arena still granted a lease");
+            // bit-identical payload on the degraded path
+            assert!(got.data.as_f32().iter().all(|&x| x == i as f32 + 0.5));
+            expect_bytes += t.numel as u64 * 4;
+            s.put_buf(got.data);
+        }
+        assert_eq!(s.meter().bytes(), expect_bytes, "copy accounting diverged");
         std::fs::remove_dir_all(&dir).ok();
     }
 

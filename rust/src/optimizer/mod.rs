@@ -23,8 +23,9 @@
 pub mod states;
 
 pub use states::{
-    step_groups_pipelined, step_groups_tiled, OptimState, PipelineStats, StateBufs,
-    StateDtype, StateFetch, StateScratch, StateWriteback, TILE_PIPELINE_DEPTH,
+    flush_groups, step_groups_pipelined, step_groups_tiled, Fp16Staging, OptimState,
+    PipelineStats, StateBufs, StateDtype, StateFetch, StateScratch, StateWriteback,
+    TILE_PIPELINE_DEPTH,
 };
 
 use crate::util::par;

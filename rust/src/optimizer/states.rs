@@ -213,8 +213,9 @@ impl OptimState {
     }
 
     /// Run the AdamW arithmetic on fetched buffers in place and
-    /// produce the fp16 compute copy into `fp16` — the exact same
-    /// kernels [`Self::step`] uses, so the trajectories are
+    /// produce the fp16 compute copy into `fp16` (exactly `numel * 2`
+    /// bytes — a pinned lease's span or an owned vector) — the exact
+    /// same kernels [`Self::step`] uses, so the trajectories are
     /// bit-identical.
     #[allow(clippy::too_many_arguments)]
     pub fn compute(
@@ -225,12 +226,16 @@ impl OptimState {
         grad_scale: f32,
         hp: &super::AdamParams,
         threads: usize,
-        fp16: &mut Vec<u8>,
+        fp16: &mut [u8],
     ) -> anyhow::Result<()> {
         anyhow::ensure!(grads.len() == self.numel, "grad size mismatch");
         let n = self.numel;
-        fp16.clear();
-        fp16.resize(n * 2, 0);
+        anyhow::ensure!(
+            fp16.len() == n * 2,
+            "fp16 window holds {} bytes, expected {}",
+            fp16.len(),
+            n * 2
+        );
         match bufs {
             StateBufs::F32 { p, m, v } => {
                 anyhow::ensure!(
@@ -255,16 +260,18 @@ impl OptimState {
     }
 
     /// Queue async write-back of the updated states plus the fp16
-    /// compute copy; buffers return to scratch when the handles drain.
+    /// compute copy; vector buffers return to scratch when the handles
+    /// drain, lease windows drop back to the arena.
     pub fn submit_writeback(
         &self,
         aio: &AsyncEngine,
         bufs: StateBufs,
-        fp16: Vec<u8>,
+        fp16: Fp16Staging,
         fp16_key: &str,
     ) -> StateWriteback {
         let [k_p, k_m, k_v] = state_keys(&self.group);
-        let mut wb = StateWriteback { f32s: Vec::new(), bytes: Vec::new() };
+        let mut wb =
+            StateWriteback { f32s: Vec::new(), bytes: Vec::new(), leases: Vec::new() };
         match bufs {
             StateBufs::F32 { p, m, v } => {
                 wb.f32s.push(aio.submit_write_f32(k_p, p));
@@ -277,8 +284,47 @@ impl OptimState {
                 wb.bytes.push(aio.submit_write(k_v, v));
             }
         }
-        wb.bytes.push(aio.submit_write(fp16_key.to_string(), fp16));
+        match fp16 {
+            // lease tier: a ranged write over the (reserved) full span,
+            // straight out of pinned memory
+            Fp16Staging::Lease(l) => {
+                wb.leases.push(aio.submit_write_at_lease(fp16_key.to_string(), 0, l))
+            }
+            Fp16Staging::Owned(v) => {
+                wb.bytes.push(aio.submit_write(fp16_key.to_string(), v))
+            }
+        }
         wb
+    }
+}
+
+/// fp16 compute-window staging for the whole-group drivers: a pinned
+/// lease (view tier — written back with a ranged lease write) when the
+/// arena grants one, an owned scratch vector otherwise.  The
+/// optimizer-side analog of the boundary's `F32Staging`.
+pub enum Fp16Staging {
+    Lease(Lease),
+    Owned(Vec<u8>),
+}
+
+impl Fp16Staging {
+    /// The byte-tier lease-else-owned policy in one place (mirrors
+    /// `runtime::F32Staging::take`): a pinned `Cat::OptimBuf` lease
+    /// when the arena grants one, else owned scratch.  Unmetered by
+    /// design — this is optimizer-side fp16 staging, not an fp32 copy
+    /// on the PJRT boundary path that `host_copy_bytes` accounts.
+    pub fn take(scratch: &StateScratch, bytes: usize) -> Self {
+        match scratch.lease(bytes) {
+            Some(l) => Fp16Staging::Lease(l),
+            None => Fp16Staging::Owned(scratch.take_bytes(bytes)),
+        }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        match self {
+            Fp16Staging::Lease(l) => l.as_mut_slice(),
+            Fp16Staging::Owned(v) => v,
+        }
     }
 }
 
@@ -319,17 +365,22 @@ impl StateFetch {
 pub struct StateWriteback {
     f32s: Vec<IoHandle<Vec<f32>>>,
     bytes: Vec<IoHandle<Vec<u8>>>,
+    leases: Vec<IoHandle<Lease>>,
 }
 
 impl StateWriteback {
-    /// Drain all writes; buffers go back to `scratch` for the next
-    /// generation.
+    /// Drain all writes; vector buffers go back to `scratch` for the
+    /// next generation, lease windows drop (their extents recycle in
+    /// the arena).
     pub fn wait(self, scratch: &StateScratch) -> anyhow::Result<()> {
         for h in self.f32s {
             scratch.put_f32(h.wait()?);
         }
         for h in self.bytes {
             scratch.put_bytes(h.wait()?);
+        }
+        for h in self.leases {
+            h.wait()?;
         }
         Ok(())
     }
@@ -348,6 +399,15 @@ pub struct StateScratch {
 impl StateScratch {
     pub fn new(arena: Arc<PinnedArena>) -> Self {
         Self { arena }
+    }
+
+    /// Vend a pinned view-tier buffer: lease `bytes` under
+    /// `Cat::OptimBuf`.  `None` under budget refusal or a Virtual-mode
+    /// arena — callers degrade to the owned vector tier below, exactly
+    /// like the swapper's scratch.
+    pub fn lease(&self, bytes: usize) -> Option<Lease> {
+        let l = self.arena.lease(bytes, Cat::OptimBuf).ok()?;
+        (!l.is_virtual()).then_some(l)
     }
 
     fn take_f32(&self, n: usize) -> Vec<f32> {
@@ -403,6 +463,16 @@ pub fn step_groups_pipelined(
         groups.len() == grads.len() && groups.len() == fp16_keys.len(),
         "groups/grads/keys length mismatch"
     );
+    // validate up front, and make sure every fp16 destination exists
+    // so the lease tier's ranged writes have a span to land in
+    for (g, st) in groups.iter().enumerate() {
+        anyhow::ensure!(
+            grads[g].len() == st.numel,
+            "grad size mismatch for '{}'",
+            st.group
+        );
+        aio.engine().reserve(&fp16_keys[g], st.numel * 2)?;
+    }
     let scratch = StateScratch::new(Arc::clone(arena));
     let mut stats = PipelineStats::default();
     let mut prev_wb: Option<StateWriteback> = None;
@@ -417,9 +487,10 @@ pub fn step_groups_pipelined(
         let mut bufs = fetch_k.wait()?;
         stats.wait_secs += t0.elapsed().as_secs_f64();
         // Adam on the caller thread, overlapping k+1's fetch and
-        // k-1's write-back
-        let mut fp16 = scratch.take_bytes(0);
-        st.compute(&mut bufs, grads[k], step, grad_scale, hp, threads, &mut fp16)?;
+        // k-1's write-back.  The fp16 compute window prefers the
+        // pinned view tier; budget refusal degrades to owned scratch.
+        let mut fp16 = Fp16Staging::take(&scratch, st.numel * 2);
+        st.compute(&mut bufs, grads[k], step, grad_scale, hp, threads, fp16.as_mut_slice())?;
         // drain k-1's write generation before queueing k's: bounds
         // in-flight state memory to two generations
         if let Some(wb) = prev_wb.take() {
@@ -802,6 +873,31 @@ pub fn step_groups_tiled(
     Ok(stats)
 }
 
+/// One explicit durability point over every SSD artifact the optimizer
+/// owns: flush each group's master/m/v streams plus its fp16 compute
+/// copy.  Ranged tile writes deliberately never fsync per step (the
+/// training loop pays no per-step durability tax; state is rebuilt on
+/// restart) — this is where those buffered writes reach a defined
+/// durable state.  The trainer's drain/shutdown path calls it once;
+/// checkpoint-style callers can call it per key boundary.
+pub fn flush_groups(
+    engine: &dyn NvmeEngine,
+    groups: &[OptimState],
+    fp16_keys: &[String],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        groups.len() == fp16_keys.len(),
+        "groups/keys length mismatch"
+    );
+    for (st, fk) in groups.iter().zip(fp16_keys) {
+        for k in state_keys(&st.group) {
+            engine.flush(&k)?;
+        }
+        engine.flush(fk)?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -967,6 +1063,111 @@ mod tests {
     fn state_keys_are_namespaced() {
         let [p, m, v] = state_keys("layers.0.wq");
         assert!(p.contains("master") && m.contains("adam_m") && v.contains("adam_v"));
+    }
+
+    #[test]
+    fn pipelined_fp16_window_rides_the_lease_tier() {
+        // with an unbounded real arena the fp16 compute copy must stage
+        // in pinned leases (requested bytes return to 0, extents
+        // recycle) — not owned vectors
+        let (eng, dir) = engine("fp16-lease");
+        let hp = AdamParams::default();
+        let n = 2048usize;
+        let st = OptimState::init(&eng, "g0", &vec![0.5f32; n], StateDtype::F32).unwrap();
+        let eng: Arc<dyn crate::ssd::NvmeEngine> = Arc::new(eng);
+        let aio = AsyncEngine::new(eng, 2);
+        let a = arena();
+        let g = vec![0.1f32; n];
+        step_groups_pipelined(
+            &aio,
+            &a,
+            std::slice::from_ref(&st),
+            &[g.as_slice()],
+            &["g0/fp16".to_string()],
+            1,
+            1.0,
+            &hp,
+            1,
+        )
+        .unwrap();
+        let stats = a.stats();
+        assert_eq!(stats.requested_bytes, 0, "fp16 window lease leaked");
+        assert!(stats.leases >= 1, "fp16 window never leased");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Engine wrapper recording which keys were flushed.
+    struct FlushSpy {
+        inner: DirectEngine,
+        flushed: std::sync::Mutex<Vec<String>>,
+        fail_on: Option<String>,
+    }
+
+    impl crate::ssd::NvmeEngine for FlushSpy {
+        fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
+            self.inner.write(key, data)
+        }
+        fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
+            self.inner.read(key, out)
+        }
+        fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
+            self.inner.write_at(key, offset, data)
+        }
+        fn flush(&self, key: &str) -> anyhow::Result<()> {
+            if self.fail_on.as_deref() == Some(key) {
+                anyhow::bail!("injected flush failure on {key}");
+            }
+            self.flushed.lock().unwrap().push(key.to_string());
+            self.inner.flush(key)
+        }
+        fn len_of(&self, key: &str) -> Option<usize> {
+            self.inner.len_of(key)
+        }
+        fn stats(&self) -> crate::ssd::IoSnapshot {
+            self.inner.stats()
+        }
+        fn label(&self) -> &'static str {
+            "flush-spy"
+        }
+    }
+
+    #[test]
+    fn flush_groups_hits_every_state_and_fp16_key_once() {
+        let (eng, dir) = engine("flush");
+        let spy = FlushSpy { inner: eng, flushed: Default::default(), fail_on: None };
+        let groups = vec![
+            OptimState { group: "g0".into(), numel: 8, dtype: StateDtype::F32 },
+            OptimState { group: "g1".into(), numel: 8, dtype: StateDtype::BF16 },
+        ];
+        let keys = vec!["g0/fp16".to_string(), "g1/fp16".to_string()];
+        flush_groups(&spy, &groups, &keys).unwrap();
+        let mut flushed = spy.flushed.lock().unwrap().clone();
+        flushed.sort();
+        assert_eq!(
+            flushed,
+            vec![
+                "g0/adam_m", "g0/adam_v", "g0/fp16", "g0/master", "g1/adam_m",
+                "g1/adam_v", "g1/fp16", "g1/master",
+            ]
+        );
+        // length mismatch is a structured error
+        assert!(flush_groups(&spy, &groups, &keys[..1]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flush_errors_surface_out_of_the_drain_path() {
+        let (eng, dir) = engine("flush-err");
+        let spy = FlushSpy {
+            inner: eng,
+            flushed: Default::default(),
+            fail_on: Some("g0/adam_v".into()),
+        };
+        let groups =
+            vec![OptimState { group: "g0".into(), numel: 8, dtype: StateDtype::F32 }];
+        let err = flush_groups(&spy, &groups, &["g0/fp16".to_string()]).unwrap_err();
+        assert!(err.to_string().contains("injected flush failure"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     // ---- staged-tile driver ------------------------------------------

@@ -519,6 +519,28 @@ impl Lease {
             )
         }
     }
+
+    /// f32 elements the span holds (0 in Virtual mode).
+    pub fn len_f32(&self) -> usize {
+        if self.base.is_null() {
+            return 0;
+        }
+        self.requested / 4
+    }
+
+    /// Freeze the lease into a shared **read-only** handle.
+    ///
+    /// This is the fill-then-freeze contract of the zero-copy PJRT
+    /// boundary: a producer fills the span through `as_f32_mut`
+    /// (unique ownership), then freezes it so any number of
+    /// [`crate::runtime::TensorBuf`] views can alias disjoint or
+    /// overlapping sub-ranges concurrently.  Mutation is impossible
+    /// while views exist — `as_mut_slice`/`as_f32_mut` need `&mut
+    /// Lease`, which an `Arc` only yields back to a sole owner — and
+    /// the extent returns to the free list when the last clone drops.
+    pub fn into_shared(self) -> Arc<Lease> {
+        Arc::new(self)
+    }
 }
 
 impl Drop for Lease {
@@ -1274,6 +1296,37 @@ mod tests {
         let v = a.take_bytes(512 << 10, Cat::OptimBuf);
         assert_eq!(a.tracker().current(Cat::OptimBuf), 0);
         assert_eq!(v.len(), 512 << 10);
+    }
+
+    #[test]
+    fn shared_lease_views_read_concurrently_and_recycle_on_last_drop() {
+        // the zero-copy boundary's aliasing model: fill exclusively,
+        // freeze, fan out read-only clones across threads, and only the
+        // last drop returns the extent
+        let a = arena(Mode::Real, None);
+        let mut l = a.lease(4096 * 4, Cat::SwapBuf).unwrap();
+        for (i, x) in l.as_f32_mut().iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let shared = l.into_shared();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let view = Arc::clone(&shared);
+                s.spawn(move || {
+                    assert!(view.as_f32().iter().enumerate().all(|(i, &x)| x == i as f32));
+                });
+            }
+        });
+        assert_eq!(shared.len_f32(), 4096);
+        let clone = Arc::clone(&shared);
+        drop(shared);
+        // still leased while any clone lives
+        assert_eq!(a.stats().requested_bytes, 4096 * 4);
+        drop(clone);
+        assert_eq!(a.stats().requested_bytes, 0);
+        // and the freed extent recycles without a fresh pin
+        let _l2 = a.lease(4096 * 4, Cat::SwapBuf).unwrap();
+        assert_eq!(a.stats().fresh_segments, 1);
     }
 
     #[test]

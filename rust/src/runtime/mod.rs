@@ -1,58 +1,119 @@
-//! PJRT runtime: load AOT artifacts, compile once, execute from Rust.
+//! PJRT runtime: load AOT artifacts, compile once, execute from Rust —
+//! with a **zero-copy host-tensor boundary**.
 //!
 //! The request path is Rust-only: `make artifacts` ran Python once to
 //! lower every L1/L2 stage to HLO *text* (xla_extension 0.5.1 rejects
 //! jax≥0.5's 64-bit-id serialized protos; the text parser reassigns
 //! ids).  Here each stage is parsed, compiled on the PJRT CPU client,
 //! cached, and invoked with `Literal` marshaling.
+//!
+//! ## The zero-copy boundary contract
+//!
+//! [`Runtime::run`] takes `&[ValueRef]` — borrowed typed slices — and
+//! hands each slice to `buffer_from_host_buffer` verbatim.  Nothing
+//! here copies, moves, or re-stages argument data:
+//!
+//! - a [`TensorBuf::View`] argument resolves into **pinned lease
+//!   memory** (a swapper fetch, an activation checkpoint, the gradient
+//!   flat buffer), so the fp16→f32 decode destination *is* the upload
+//!   source — zero fp32 host-to-host copies between NVMe fetch and
+//!   PJRT upload;
+//! - an owned `Vec` argument uploads from its heap storage just the
+//!   same; the two paths are bit-identical because the client consumes
+//!   the identical slice either way ([`check_args`] is the shared
+//!   validation, `bench_runtime` and the value-layer proptests prove
+//!   the identity).
+//!
+//! **Mutation rules:** arguments are borrowed for the duration of
+//! `run` only — PJRT reads each slice during its upload call and never
+//! retains the borrow.  A lease backing a view is frozen read-only by
+//! construction (`Lease::into_shared`): writers need `&mut Lease`,
+//! which `Arc` denies while any view exists, so no component can
+//! mutate staging out from under an in-flight upload.  Results come
+//! back as owned [`Value`]s (the literal download allocates); callers
+//! that want a result landed in lease memory pass destinations to
+//! [`Runtime::run_into`].
+//!
+//! Per-call overhead: the stage spec is *borrowed* from the manifest
+//! (no per-call clone), and the executable-cache lock is taken before
+//! the upload loop, never inside it.
 
 pub mod manifest;
+mod value;
 
 pub use manifest::{ArgSpec, Manifest, StageSpec};
+pub use value::{F32Staging, F32View, TensorBuf, Value, ValueRef};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-/// A host-side tensor crossing the PJRT boundary.
-#[derive(Debug, Clone)]
-pub enum Value {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
+/// Validate `args` against a stage spec: arity, per-argument element
+/// count, and dtype — exactly the checks [`Runtime::run`] applies
+/// before any upload.  Public because it *is* the boundary's
+/// data-plane contract: the PJRT client consumes each [`ValueRef`]'s
+/// slice verbatim after this passes, so two argument lists that pass
+/// and dereference to bit-identical slices produce bit-identical stage
+/// executions (the property `bench_runtime` and the value-layer
+/// proptests gate on).
+pub fn check_args(stage: &str, spec: &StageSpec, args: &[ValueRef]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        args.len() == spec.args.len(),
+        "{stage}: expected {} args, got {}",
+        spec.args.len(),
+        args.len()
+    );
+    for (a, s) in args.iter().zip(&spec.args) {
+        anyhow::ensure!(
+            a.len() == s.numel(),
+            "{stage}: arg '{}' expected {} elems, got {}",
+            s.name,
+            s.numel(),
+            a.len()
+        );
+        anyhow::ensure!(
+            a.dtype() == s.dtype,
+            "{stage}: arg '{}' dtype mismatch (spec {}, got {})",
+            s.name,
+            s.dtype,
+            a.dtype()
+        );
+    }
+    Ok(())
 }
 
-impl Value {
-    pub fn len(&self) -> usize {
-        match self {
-            Value::F32(v) => v.len(),
-            Value::I32(v) => v.len(),
+/// Validate caller-provided result destinations for
+/// [`Runtime::run_into`]: either no destinations at all, or one slot
+/// per result, with every redirected slot f32-typed and exactly sized.
+pub fn check_dests(
+    stage: &str,
+    spec: &StageSpec,
+    dests: &[Option<&mut [f32]>],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        dests.is_empty() || dests.len() == spec.results.len(),
+        "{stage}: {} result destinations for {} results",
+        dests.len(),
+        spec.results.len()
+    );
+    for (d, r) in dests.iter().zip(&spec.results) {
+        if let Some(dst) = d {
+            anyhow::ensure!(
+                r.dtype == "f32",
+                "{stage}: result '{}' is {}, only f32 results can be redirected",
+                r.name,
+                r.dtype
+            );
+            anyhow::ensure!(
+                dst.len() == r.numel(),
+                "{stage}: result '{}' destination holds {} elems, expected {}",
+                r.name,
+                dst.len(),
+                r.numel()
+            );
         }
     }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
-        match self {
-            Value::F32(v) => Ok(v),
-            Value::I32(_) => anyhow::bail!("expected f32 tensor, got i32"),
-        }
-    }
-
-    pub fn into_f32(self) -> anyhow::Result<Vec<f32>> {
-        match self {
-            Value::F32(v) => Ok(v),
-            Value::I32(_) => anyhow::bail!("expected f32 tensor, got i32"),
-        }
-    }
-
-    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
-        match self {
-            Value::I32(v) => Ok(v),
-            Value::F32(_) => anyhow::bail!("expected i32 tensor, got f32"),
-        }
-    }
+    Ok(())
 }
 
 /// Compiled-stage cache over one PJRT client.
@@ -113,16 +174,37 @@ impl Runtime {
         Ok(())
     }
 
-    /// Execute a stage. `args` must match the manifest's arg order,
-    /// shapes, and dtypes; results come back in manifest result order.
-    pub fn run(&self, stage: &str, args: &[Value]) -> anyhow::Result<Vec<Value>> {
-        let spec = self.manifest.stage(stage)?.clone();
-        anyhow::ensure!(
-            args.len() == spec.args.len(),
-            "{stage}: expected {} args, got {}",
-            spec.args.len(),
-            args.len()
-        );
+    /// Execute a stage.  `args` must match the manifest's arg order,
+    /// shapes, and dtypes; each argument's slice uploads verbatim (see
+    /// the module docs for the zero-copy contract).  Results come back
+    /// owned, in manifest result order.
+    pub fn run(&self, stage: &str, args: &[ValueRef]) -> anyhow::Result<Vec<Value>> {
+        self.run_into(stage, args, &mut [])
+    }
+
+    /// [`Self::run`] with optional caller-provided f32 result
+    /// destinations — typically lease views, so a result lands in
+    /// pinned memory ready for the next upload.  `dests` is empty (all
+    /// results owned) or one slot per result; a `Some(dst)` slot gets
+    /// the result copied into `dst` and an empty placeholder
+    /// (`Value::F32(vec![])`) in the returned vector.  All-or-nothing:
+    /// destinations are written only after *every* result downloaded
+    /// and validated, so on `Err` the caller's staging is untouched.
+    pub fn run_into(
+        &self,
+        stage: &str,
+        args: &[ValueRef],
+        dests: &mut [Option<&mut [f32]>],
+    ) -> anyhow::Result<Vec<Value>> {
+        // spec is borrowed from the manifest — no per-call clone — and
+        // all validation runs before a single byte moves
+        let spec = self.manifest.stage(stage)?;
+        check_args(stage, spec, args)?;
+        check_dests(stage, spec, dests)?;
+        // resolve the executable (and pay any compile + cache-lock
+        // cost) before the upload loop, so the lock is never held
+        // while host buffers stream to the device
+        let exe = self.executable(stage)?;
         // Inputs go through caller-owned PjRtBuffers + execute_b: the
         // crate's literal-taking execute() leaks every input device
         // buffer at the C layer (xla_rs.cc `buffer.release()` without a
@@ -130,27 +212,13 @@ impl Runtime {
         // host-buffer path also skips one literal copy (§Perf).
         let mut buffers = Vec::with_capacity(args.len());
         for (a, s) in args.iter().zip(&spec.args) {
-            anyhow::ensure!(
-                a.len() == s.numel(),
-                "{stage}: arg '{}' expected {} elems, got {}",
-                s.name,
-                s.numel(),
-                a.len()
-            );
-            let buf = match (a, s.dtype.as_str()) {
-                (Value::F32(v), "f32") => self
-                    .client
-                    .buffer_from_host_buffer(v, &s.shape, None)
-                    .map_err(|e| anyhow::anyhow!("upload {}: {e}", s.name))?,
-                (Value::I32(v), "i32") => self
-                    .client
-                    .buffer_from_host_buffer(v, &s.shape, None)
-                    .map_err(|e| anyhow::anyhow!("upload {}: {e}", s.name))?,
-                _ => anyhow::bail!("{stage}: arg '{}' dtype mismatch", s.name),
-            };
+            let buf = match *a {
+                ValueRef::F32(v) => self.client.buffer_from_host_buffer(v, &s.shape, None),
+                ValueRef::I32(v) => self.client.buffer_from_host_buffer(v, &s.shape, None),
+            }
+            .map_err(|e| anyhow::anyhow!("upload {}: {e}", s.name))?;
             buffers.push(buf);
         }
-        let exe = self.executable(stage)?;
         let result = exe
             .execute_b::<xla::PjRtBuffer>(&buffers)
             .map_err(|e| anyhow::anyhow!("execute {stage}: {e}"))?;
@@ -190,6 +258,163 @@ impl Runtime {
             );
             out.push(v);
         }
+        // every result downloaded and validated — only now touch the
+        // caller's destinations, so an error above never leaves a
+        // lease half-updated with mixed-generation bytes
+        for (i, d) in dests.iter_mut().enumerate() {
+            if let Some(dst) = d {
+                let owned = std::mem::replace(&mut out[i], Value::F32(Vec::new()));
+                let v = owned.into_f32().expect("check_dests admits f32 results only");
+                dst.copy_from_slice(&v);
+            }
+        }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bufpool::test_util::test_arena;
+    use crate::pinned::{Cat, Mode};
+    use crate::prop_assert;
+    use crate::util::proptest::{check, Config};
+
+    fn spec_of(shapes: &[(&str, Vec<usize>, &str)]) -> StageSpec {
+        StageSpec {
+            name: "stage".into(),
+            file: String::new(),
+            args: shapes
+                .iter()
+                .map(|(n, s, d)| ArgSpec {
+                    name: n.to_string(),
+                    shape: s.clone(),
+                    dtype: d.to_string(),
+                })
+                .collect(),
+            results: vec![
+                ArgSpec { name: "r0".into(), shape: vec![4], dtype: "f32".into() },
+                ArgSpec { name: "r1".into(), shape: vec![2], dtype: "i32".into() },
+            ],
+        }
+    }
+
+    #[test]
+    fn check_args_accepts_matching_and_rejects_mismatches() {
+        let spec = spec_of(&[("x", vec![2, 3], "f32"), ("ids", vec![4], "i32")]);
+        let x = vec![0.5f32; 6];
+        let ids = vec![1i32; 4];
+        let good = [ValueRef::F32(&x), ValueRef::I32(&ids)];
+        check_args("stage", &spec, &good).unwrap();
+        // arity
+        assert!(check_args("stage", &spec, &good[..1]).is_err());
+        // numel
+        let short = vec![0.5f32; 5];
+        assert!(check_args("stage", &spec, &[ValueRef::F32(&short), ValueRef::I32(&ids)])
+            .is_err());
+        // dtype
+        let as_f32 = vec![0.5f32; 4];
+        assert!(check_args("stage", &spec, &[ValueRef::F32(&x), ValueRef::F32(&as_f32)])
+            .is_err());
+    }
+
+    #[test]
+    fn check_dests_validates_arity_dtype_and_len() {
+        let spec = spec_of(&[("x", vec![1], "f32")]);
+        let mut a = [0f32; 4];
+        let mut b = [0f32; 3];
+        check_dests("stage", &spec, &[]).unwrap();
+        check_dests("stage", &spec, &[Some(&mut a), None]).unwrap();
+        // arity: one slot for two results
+        {
+            let mut a = [0f32; 4];
+            assert!(check_dests("stage", &spec, &[Some(&mut a)]).is_err());
+        }
+        // wrong length
+        assert!(check_dests("stage", &spec, &[Some(&mut b), None]).is_err());
+        // i32 result cannot be redirected
+        {
+            let mut a = [0f32; 4];
+            let mut c = [0f32; 2];
+            assert!(check_dests("stage", &spec, &[Some(&mut a), Some(&mut c)]).is_err());
+        }
+    }
+
+    #[test]
+    fn prop_lease_views_and_owned_args_are_bit_identical_at_the_boundary() {
+        // The upload loop consumes exactly `ValueRef::as_f32()` — so
+        // two argument lists that pass `check_args` and dereference to
+        // equal bits are indistinguishable to the PJRT client, and the
+        // stage outputs are bit-identical.  This proptest drives ragged
+        // shapes and aliased views of one lease through that seam.
+        check("runtime-zero-copy", Config { cases: 40, ..Default::default() }, |rng, size| {
+            let n_args = rng.range(1, 6);
+            let lens: Vec<usize> =
+                (0..n_args).map(|_| rng.range(1, (size * 8).max(2))).collect();
+            let total: usize = lens.iter().sum();
+            let arena = test_arena(Mode::Real);
+            let mut lease = arena
+                .lease(total * 4, Cat::SwapBuf)
+                .map_err(|e| e.to_string())?;
+            let vals: Vec<f32> = (0..total)
+                .map(|_| {
+                    // include non-finite bit patterns: identity must be
+                    // bitwise, not numeric
+                    match rng.below(16) {
+                        0 => f32::NAN,
+                        1 => f32::INFINITY,
+                        _ => rng.normal() as f32,
+                    }
+                })
+                .collect();
+            lease.as_f32_mut().copy_from_slice(&vals);
+            let shared = lease.into_shared();
+
+            let mut off = 0usize;
+            let mut owned: Vec<Value> = Vec::new();
+            let mut views: Vec<TensorBuf> = Vec::new();
+            let mut spec_args = Vec::new();
+            for (i, &len) in lens.iter().enumerate() {
+                // occasionally alias an earlier window instead of
+                // advancing (many views, one lease; overlap allowed)
+                let my_off = if i > 0 && rng.next_f64() < 0.25 {
+                    rng.below(total - len + 1)
+                } else {
+                    let o = off;
+                    off += len;
+                    o
+                };
+                owned.push(Value::F32(vals[my_off..my_off + len].to_vec()));
+                views.push(
+                    TensorBuf::view(&shared, my_off, len).map_err(|e| e.to_string())?,
+                );
+                spec_args.push(ArgSpec {
+                    name: format!("a{i}"),
+                    shape: vec![len],
+                    dtype: "f32".into(),
+                });
+            }
+            let spec = StageSpec {
+                name: "stage".into(),
+                file: String::new(),
+                args: spec_args,
+                results: vec![],
+            };
+            let owned_refs: Vec<ValueRef> = owned.iter().map(Value::as_value).collect();
+            let view_refs: Vec<ValueRef> =
+                views.iter().map(TensorBuf::as_value).collect();
+            check_args("stage", &spec, &owned_refs).map_err(|e| e.to_string())?;
+            check_args("stage", &spec, &view_refs).map_err(|e| e.to_string())?;
+            for (i, (o, v)) in owned_refs.iter().zip(&view_refs).enumerate() {
+                let ob = o.as_f32().map_err(|e| e.to_string())?;
+                let vb = v.as_f32().map_err(|e| e.to_string())?;
+                prop_assert!(ob.len() == vb.len(), "arg {i} length diverged");
+                prop_assert!(
+                    ob.iter().zip(vb).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "arg {i}: lease view bytes diverged from owned"
+                );
+            }
+            Ok(())
+        });
     }
 }

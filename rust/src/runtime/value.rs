@@ -1,0 +1,419 @@
+//! Host-tensor types at the PJRT boundary.
+//!
+//! Three tiers, from owning to borrowing:
+//!
+//! - [`Value`] — an owned tensor (`Vec`-backed).  The *result* type:
+//!   PJRT literal downloads materialize as owned vectors, and small
+//!   caller-built tensors (token batches, the loss-scale scalar) stay
+//!   owned too.
+//! - [`TensorBuf`] — an owned tensor **or** a shared read-only view
+//!   into a [`PinnedArena`](crate::pinned::PinnedArena) lease
+//!   ([`F32View`]: `Arc<Lease>` + element offset/len, so one lease can
+//!   back many tensor views).  The *storage* type producers hand to
+//!   consumers: a swapper fetch, an activation-checkpoint fetch, a
+//!   scratch buffer.
+//! - [`ValueRef`] — a borrowed typed slice.  The *argument* type:
+//!   [`Runtime::run`](super::Runtime::run) takes `&[ValueRef]` and
+//!   uploads each slice verbatim, so an argument that resolves into
+//!   lease memory crosses the boundary with **zero fp32 host-to-host
+//!   copies** between NVMe fetch and PJRT upload.
+//!
+//! ## Aliasing contract
+//!
+//! Who may mutate a lease while views exist: **nobody**.  A producer
+//! fills a lease through `&mut Lease` (unique ownership), then freezes
+//! it with [`Lease::into_shared`]; every [`F32View`] holds an
+//! `Arc<Lease>` and only ever takes `&Lease`, so the type system makes
+//! writes impossible until the last view drops and the extent returns
+//! to the arena.  Views of one lease may overlap freely — they are all
+//! read-only.
+//!
+//! Producers that cannot get a lease (budget refusal, Virtual-mode
+//! arena) degrade to the owned tier and charge the staged bytes to a
+//! [`HostCopyMeter`](crate::metrics::HostCopyMeter) — bit-identical
+//! data, just not zero-copy, surfaced per step as
+//! `StepMetrics::host_copy_bytes`.
+
+use std::sync::Arc;
+
+use crate::metrics::HostCopyMeter;
+use crate::pinned::{Cat, Lease, PinnedArena};
+
+/// An owned host-side tensor crossing the PJRT boundary (results, and
+/// caller-built inputs).
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Value {
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(v) => v.len(),
+            Value::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            Value::F32(v) => Ok(v),
+            Value::I32(_) => anyhow::bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> anyhow::Result<Vec<f32>> {
+        match self {
+            Value::F32(v) => Ok(v),
+            Value::I32(_) => anyhow::bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            Value::I32(v) => Ok(v),
+            Value::F32(_) => anyhow::bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// Borrow as a stage argument.
+    pub fn as_value(&self) -> ValueRef<'_> {
+        match self {
+            Value::F32(v) => ValueRef::F32(v),
+            Value::I32(v) => ValueRef::I32(v),
+        }
+    }
+}
+
+/// A borrowed stage argument: the typed slice the PJRT client uploads
+/// verbatim.  `Copy`, so argument lists are cheap to build and rebuild.
+#[derive(Debug, Clone, Copy)]
+pub enum ValueRef<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl ValueRef<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            ValueRef::F32(v) => v.len(),
+            ValueRef::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Manifest dtype string this argument satisfies.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            ValueRef::F32(_) => "f32",
+            ValueRef::I32(_) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            ValueRef::F32(v) => Ok(v),
+            ValueRef::I32(_) => anyhow::bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            ValueRef::I32(v) => Ok(v),
+            ValueRef::F32(_) => anyhow::bail!("expected i32 tensor, got f32"),
+        }
+    }
+}
+
+impl<'a> From<&'a Value> for ValueRef<'a> {
+    fn from(v: &'a Value) -> Self {
+        v.as_value()
+    }
+}
+
+impl<'a> From<&'a TensorBuf> for ValueRef<'a> {
+    fn from(b: &'a TensorBuf) -> Self {
+        b.as_value()
+    }
+}
+
+/// A shared read-only f32 window into one pinned lease: `[off, off +
+/// len)` in elements.  Cloning shares the lease; the extent recycles
+/// when the last clone drops.
+#[derive(Clone)]
+pub struct F32View {
+    lease: Arc<Lease>,
+    off: usize,
+    len: usize,
+}
+
+impl F32View {
+    /// View `len` elements of `lease` starting at element `off`.
+    /// Errors on a *short lease* (window past the leased span), on a
+    /// non-f32-sized lease, and on Virtual-mode leases (no storage to
+    /// view) — the same construction-time checks as
+    /// [`TensorBuf::from_lease`], so a bad lease never reaches
+    /// `Lease::as_f32`.
+    pub fn new(lease: &Arc<Lease>, off: usize, len: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            !lease.is_virtual(),
+            "cannot view a Virtual-mode lease (no backing storage)"
+        );
+        anyhow::ensure!(
+            lease.bytes_requested() % 4 == 0,
+            "f32 view over a lease of {} bytes (not a multiple of 4)",
+            lease.bytes_requested()
+        );
+        let avail = lease.len_f32();
+        anyhow::ensure!(
+            off.checked_add(len).is_some_and(|end| end <= avail),
+            "short lease: f32 view [{off}, {off}+{len}) exceeds the {avail}-element span"
+        );
+        Ok(Self { lease: Arc::clone(lease), off, len })
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        &self.lease.as_f32()[self.off..self.off + self.len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::fmt::Debug for F32View {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "F32View {{ off: {}, len: {} }}", self.off, self.len)
+    }
+}
+
+/// Lease-aware host f32 tensor: what producers hand to the consumer
+/// that builds a stage's argument list.  Either tier resolves to the
+/// same bytes through [`Self::as_value`]; only the `View` tier is
+/// zero-copy.  Deliberately f32-only: the pipeline's i32 tensors
+/// (token/label batches) are tiny caller-built vectors that stay
+/// [`Value`]/[`ValueRef::I32`] — giving them a lease tier would add a
+/// variant no producer constructs.
+#[derive(Debug, Clone)]
+pub enum TensorBuf {
+    F32(Vec<f32>),
+    View(F32View),
+}
+
+impl TensorBuf {
+    /// Freeze a whole (filled) lease into a view-backed tensor.  The
+    /// lease must be real and f32-sized.
+    pub fn from_lease(lease: Lease) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            !lease.is_virtual(),
+            "cannot view a Virtual-mode lease (no backing storage)"
+        );
+        anyhow::ensure!(
+            lease.bytes_requested() % 4 == 0,
+            "f32 tensor over a lease of {} bytes (not a multiple of 4)",
+            lease.bytes_requested()
+        );
+        let shared = lease.into_shared();
+        let len = shared.len_f32();
+        Ok(TensorBuf::View(F32View { lease: shared, off: 0, len }))
+    }
+
+    /// View a window of an already-shared lease (one lease, many
+    /// tensors).
+    pub fn view(lease: &Arc<Lease>, off: usize, len: usize) -> anyhow::Result<Self> {
+        Ok(TensorBuf::View(F32View::new(lease, off, len)?))
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorBuf::F32(v) => v.len(),
+            TensorBuf::View(w) => w.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether this tensor is a zero-copy lease view.
+    pub fn is_view(&self) -> bool {
+        matches!(self, TensorBuf::View(_))
+    }
+
+    /// Borrow as a stage argument — the boundary crossing itself.
+    pub fn as_value(&self) -> ValueRef<'_> {
+        match self {
+            TensorBuf::F32(v) => ValueRef::F32(v),
+            TensorBuf::View(w) => ValueRef::F32(w.as_f32()),
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            TensorBuf::F32(v) => v,
+            TensorBuf::View(w) => w.as_f32(),
+        }
+    }
+}
+
+impl From<Vec<f32>> for TensorBuf {
+    fn from(v: Vec<f32>) -> Self {
+        TensorBuf::F32(v)
+    }
+}
+
+/// Fill-then-freeze staging destination for producers that decode into
+/// either a pinned lease (the zero-copy path) or an owned fallback
+/// vector (budget refusal / Virtual arena — the caller charges the
+/// meter).  Both tiers expose the same `&mut [f32]` while filling and
+/// freeze into a [`TensorBuf`] when done.
+pub enum F32Staging {
+    Lease(Lease),
+    Owned(Vec<f32>),
+}
+
+impl F32Staging {
+    /// Take an `n`-element staging destination from `arena` under
+    /// `cat`: a pinned lease when the arena grants one (the zero-copy
+    /// tier), else an owned scratch vector with the staged bytes
+    /// charged to `meter`.  *The* lease-else-owned degradation policy
+    /// — every f32 producer (swapper upconvert, activation fetch)
+    /// takes its destination here so the policy cannot drift between
+    /// call sites.
+    pub fn take(
+        arena: &PinnedArena,
+        cat: Cat,
+        n: usize,
+        meter: &HostCopyMeter,
+    ) -> Self {
+        match arena.lease(n * 4, cat) {
+            Ok(l) if !l.is_virtual() => F32Staging::Lease(l),
+            _ => {
+                meter.add(n * 4);
+                F32Staging::Owned(arena.take_f32(n, cat))
+            }
+        }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        match self {
+            F32Staging::Lease(l) => l.as_f32_mut(),
+            F32Staging::Owned(v) => v,
+        }
+    }
+
+    pub fn freeze(self) -> TensorBuf {
+        match self {
+            F32Staging::Lease(l) => {
+                TensorBuf::from_lease(l).expect("staging lease is real and f32-sized")
+            }
+            F32Staging::Owned(v) => TensorBuf::F32(v),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bufpool::test_util::test_arena;
+    use crate::pinned::{Cat, Mode};
+
+    #[test]
+    fn owned_and_view_tensors_resolve_to_identical_args() {
+        let a = test_arena(Mode::Real);
+        let mut l = a.lease(16 * 4, Cat::SwapBuf).unwrap();
+        for (i, x) in l.as_f32_mut().iter_mut().enumerate() {
+            *x = i as f32 * 0.5;
+        }
+        let owned = TensorBuf::F32((0..16).map(|i| i as f32 * 0.5).collect());
+        let view = TensorBuf::from_lease(l).unwrap();
+        assert!(view.is_view() && !owned.is_view());
+        let (a1, a2) = (owned.as_value(), view.as_value());
+        assert_eq!(a1.dtype(), "f32");
+        assert_eq!(a1.len(), a2.len());
+        assert_eq!(a1.as_f32().unwrap(), a2.as_f32().unwrap());
+        assert_eq!(owned.as_f32(), view.as_f32());
+    }
+
+    #[test]
+    fn one_lease_backs_many_views_including_aliased_ones() {
+        let a = test_arena(Mode::Real);
+        let mut l = a.lease(32 * 4, Cat::SwapBuf).unwrap();
+        for (i, x) in l.as_f32_mut().iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let shared = l.into_shared();
+        let head = TensorBuf::view(&shared, 0, 8).unwrap();
+        let tail = TensorBuf::view(&shared, 24, 8).unwrap();
+        let alias = TensorBuf::view(&shared, 4, 8).unwrap(); // overlaps head
+        assert_eq!(head.as_f32()[7], 7.0);
+        assert_eq!(tail.as_f32()[0], 24.0);
+        assert_eq!(alias.as_f32()[0], 4.0);
+        drop(shared);
+        // views keep the lease alive after the original Arc drops
+        assert_eq!(head.as_f32()[0], 0.0);
+        drop((head, tail, alias));
+        assert_eq!(a.stats().requested_bytes, 0, "extent not released");
+    }
+
+    #[test]
+    fn short_lease_and_virtual_lease_are_typed_errors() {
+        let a = test_arena(Mode::Real);
+        let shared = a.lease(8 * 4, Cat::SwapBuf).unwrap().into_shared();
+        let err = TensorBuf::view(&shared, 4, 8).unwrap_err();
+        assert!(err.to_string().contains("short lease"), "{err}");
+        assert!(TensorBuf::view(&shared, usize::MAX, 2).is_err(), "offset overflow");
+        // non-f32-sized leases are rejected at construction, matching
+        // from_lease (never deferred to Lease::as_f32)
+        let odd = a.lease(10, Cat::SwapBuf).unwrap().into_shared();
+        assert!(TensorBuf::view(&odd, 0, 1).is_err(), "odd-sized lease accepted");
+        let v = test_arena(Mode::Virtual);
+        let vl = v.lease(64, Cat::SwapBuf).unwrap();
+        assert!(TensorBuf::from_lease(vl).to_err_string().contains("Virtual"));
+    }
+
+    #[test]
+    fn dtype_mismatch_surfaces_through_valueref() {
+        let t = Value::I32(vec![1, 2, 3]);
+        assert!(t.as_value().as_f32().is_err());
+        assert_eq!(t.as_value().dtype(), "i32");
+        assert_eq!(t.as_value().as_i32().unwrap(), &[1, 2, 3]);
+        assert!(ValueRef::F32(&[1.0]).as_i32().is_err());
+    }
+
+    #[test]
+    fn staging_freezes_into_the_matching_tier() {
+        let a = test_arena(Mode::Real);
+        let mut s = F32Staging::Lease(a.lease(4 * 4, Cat::SwapBuf).unwrap());
+        s.as_mut_slice().copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let b = s.freeze();
+        assert!(b.is_view());
+        assert_eq!(b.as_f32(), &[1.0, 2.0, 3.0, 4.0]);
+        let mut s = F32Staging::Owned(vec![0.0; 2]);
+        s.as_mut_slice()[1] = 9.0;
+        let b = s.freeze();
+        assert!(!b.is_view());
+        assert_eq!(b.as_f32(), &[0.0, 9.0]);
+    }
+
+    trait ToErrString {
+        fn to_err_string(self) -> String;
+    }
+
+    impl<T> ToErrString for anyhow::Result<T> {
+        fn to_err_string(self) -> String {
+            self.err().map(|e| e.to_string()).unwrap_or_default()
+        }
+    }
+}

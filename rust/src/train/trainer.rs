@@ -20,11 +20,17 @@
 //!    group size) or the whole-group double-buffer when the tile knob
 //!    is 0; sequential otherwise.  All paths are bit-identical.
 //!
-//! Weight fetches ride the swapper's windowed pipeline; spent f32
-//! kernel arguments are recycled through the shared [`F32Scratch`]
-//! pool (arena-backed, like every other host buffer here — the
-//! gradient flat buffer, activation slots, and optimizer staging all
-//! lease from `engine.arena`).  The step report carries
+//! Weight fetches ride the swapper's windowed pipeline and arrive as
+//! **lease-backed views** ([`TensorBuf`]): the f16→f32 decode lands in
+//! pinned arena memory, the argument list borrows those bytes
+//! ([`ValueRef`]), and `Runtime::run` uploads them verbatim — zero
+//! fp32 host-to-host copies between NVMe fetch and PJRT upload, for
+//! streamed weights, resident norms (borrowed in place, no
+//! `.to_vec()`), and recomputation checkpoints alike.  Owned vectors
+//! appear only where PJRT *produces* them (stage results) or where the
+//! arena budget degrades a fetch — those staged bytes are counted in
+//! `StepMetrics::host_copy_bytes` (0 in steady state) — and recycle
+//! through the shared [`F32Scratch`] pool.  The step report carries
 //! `io_wait_secs` — the foreground I/O stall, including activation
 //! spill fetches — next to the engine-busy `io_secs` (an exact
 //! union-of-busy-intervals measure) so the overlap the pipeline wins
@@ -46,7 +52,7 @@ use crate::metrics::{RunReport, StepMetrics};
 use crate::offload::SpillingActivationStore;
 use crate::offload::{F32Scratch, GradFlatBuffer, LossScaler, OffloadEngine, Swapper};
 use crate::optimizer::{AdamParams, StateDtype};
-use crate::runtime::{Runtime, Value};
+use crate::runtime::{Runtime, TensorBuf, ValueRef};
 use crate::tensors::TensorDesc;
 use crate::train::data::Corpus;
 use crate::train::weights::{fp16_key, init_weights, ModelState};
@@ -124,7 +130,10 @@ impl Trainer {
         let fwd_plan: Vec<TensorDesc> =
             state.inv.iter().filter(|t| t.offloadable()).cloned().collect();
         let block_names = rt.manifest().block_weight_names.clone();
-        let scratch = Arc::new(F32Scratch::new(engine.arena.clone()));
+        let scratch = Arc::new(F32Scratch::with_meter(
+            engine.arena.clone(),
+            engine.copy_meter.clone(),
+        ));
         Ok(Self {
             rt,
             engine,
@@ -146,14 +155,17 @@ impl Trainer {
         &self.rt
     }
 
-    fn resident(&self, name: &str) -> &[f32] {
-        &self.state.resident[name].data
+    /// Borrow a resident tensor as a stage argument — no staging copy
+    /// (the seed's `.to_vec()` per block per pass is gone).
+    fn resident_arg(&self, name: &str) -> ValueRef<'_> {
+        self.state.resident[name].value()
     }
 
     /// One full training step over all (simulated) ranks.
     pub fn step(&mut self, step_idx: u64) -> anyhow::Result<StepMetrics> {
         let t_step = Instant::now();
         let io_before = self.engine.nvme.stats();
+        let copies_before = self.engine.copy_meter.bytes();
         let scale = self.scaler.scale();
         let mut loss_sum = 0.0f64;
         let mut io_wait_secs = 0.0f64;
@@ -175,10 +187,10 @@ impl Trainer {
                 |t| fp16_key(&t.name),
                 self.train.prefetch_depth.max(1),
             );
-            let table = sw.next()?; // embed
-            let args = vec![Value::I32(tokens.clone()), Value::F32(table.data)];
+            let table = sw.next()?; // embed — a lease-backed view
+            let args = [ValueRef::I32(&tokens), table.data.as_value()];
             let mut hbuf = self.rt.run("embed_fwd", &args)?.remove(0).into_f32()?;
-            self.reclaim(args);
+            self.scratch.put_buf(table.data);
 
             let mut ckpts = SpillingActivationStore::new(
                 l,
@@ -186,30 +198,37 @@ impl Trainer {
                 self.train.act_host_budget,
                 self.engine.arena.clone(),
                 self.engine.async_io(),
+                self.engine.copy_meter.clone(),
             );
             for layer in 0..l {
-                let mut ws: HashMap<String, Vec<f32>> = HashMap::new();
+                let mut ws: HashMap<String, TensorBuf> = HashMap::new();
                 for _ in 0..7 {
                     let f = sw.next()?;
                     ws.insert(f.desc.name.clone(), f.data);
                 }
                 ckpts.offload(layer, &hbuf)?;
-                let args = self.block_args(layer, &mut ws, hbuf, None)?;
-                hbuf = self.rt.run("block_fwd", &args)?.remove(0).into_f32()?;
-                self.reclaim(args);
+                let args = self.block_args(layer, &ws, &hbuf, None)?;
+                let out = self.rt.run("block_fwd", &args)?.remove(0).into_f32()?;
+                drop(args);
+                self.scratch.put(std::mem::replace(&mut hbuf, out));
+                for w in ws.into_values() {
+                    self.scratch.put_buf(w); // views drop (extent recycles)
+                }
             }
 
             // ---- head: fused linear + CE, fwd+bwd ----
             let head = sw.next()?; // lm_head
-            let args = vec![
-                Value::F32(hbuf),
-                Value::F32(self.resident("final_norm").to_vec()),
-                Value::F32(head.data),
-                Value::I32(labels.clone()),
-                Value::F32(vec![scale as f32]),
+            let scale_arg = [scale as f32];
+            let args = [
+                ValueRef::F32(&hbuf),
+                self.resident_arg("final_norm"),
+                head.data.as_value(),
+                ValueRef::I32(&labels),
+                ValueRef::F32(&scale_arg),
             ];
             let mut out = self.rt.run("head_fwd_bwd", &args)?;
-            self.reclaim(args);
+            self.scratch.put_buf(head.data);
+            self.scratch.put(hbuf);
             let loss = out.remove(0).into_f32()?[0] as f64;
             let mut dh = out.remove(0).into_f32()?;
             let d_final_norm = out.remove(0).into_f32()?;
@@ -241,16 +260,18 @@ impl Trainer {
                 self.train.prefetch_depth.max(1),
             );
             for layer in (0..l).rev() {
-                let mut ws: HashMap<String, Vec<f32>> = HashMap::new();
+                let mut ws: HashMap<String, TensorBuf> = HashMap::new();
                 for _ in 0..7 {
                     let f = swb.next()?;
                     ws.insert(f.desc.name.clone(), f.data);
                 }
-                let h_in = ckpts.fetch(layer)?;
-                let args = self.block_args(layer, &mut ws, h_in, Some(dh))?;
+                let h_in = ckpts.fetch(layer)?; // lease-backed view
+                let args = self.block_args(layer, &ws, h_in.as_f32(), Some(&dh))?;
                 let mut grads = self.rt.run("block_bwd", &args)?;
-                self.reclaim(args);
-                dh = grads.remove(0).into_f32()?;
+                drop(args);
+                self.scratch.put_buf(h_in);
+                self.scratch
+                    .put(std::mem::replace(&mut dh, grads.remove(0).into_f32()?));
                 // results follow BLOCK_WEIGHT_NAMES order (resolved once
                 // at construction)
                 for name in &self.block_names {
@@ -263,6 +284,9 @@ impl Trainer {
                     );
                     self.scratch.put(g);
                 }
+                for w in ws.into_values() {
+                    self.scratch.put_buf(w);
+                }
             }
             io_wait_secs += swb.wait_secs();
             drop(swb);
@@ -271,9 +295,9 @@ impl Trainer {
             io_wait_secs += ckpts.wait_secs();
 
             // ---- embedding backward ----
-            let args = vec![Value::I32(tokens), Value::F32(dh)];
+            let args = [ValueRef::I32(&tokens), ValueRef::F32(&dh)];
             let mut out = self.rt.run("embed_bwd", &args)?;
-            self.reclaim(args);
+            self.scratch.put(dh);
             let d_table = out.remove(0).into_f32()?;
             self.accumulate("embed", &d_table);
             self.scratch.put(d_table);
@@ -383,37 +407,42 @@ impl Trainer {
             optim_secs,
             io_wait_secs,
             optim_tiles,
+            host_copy_bytes: self.engine.copy_meter.bytes() - copies_before,
         })
     }
 
-    fn block_args(
-        &self,
+    /// Build one block stage's argument list entirely from borrows:
+    /// the hidden state, the fetched weight views (lease bytes upload
+    /// verbatim — zero fp32 copies on the hot path), and the resident
+    /// norms in place.
+    fn block_args<'a>(
+        &'a self,
         layer: usize,
-        ws: &mut HashMap<String, Vec<f32>>,
-        h: Vec<f32>,
-        d_out: Option<Vec<f32>>,
-    ) -> anyhow::Result<Vec<Value>> {
+        ws: &'a HashMap<String, TensorBuf>,
+        h: &'a [f32],
+        d_out: Option<&'a [f32]>,
+    ) -> anyhow::Result<Vec<ValueRef<'a>>> {
         let p = |n: &str| format!("layers.{layer}.{n}");
-        // consume the fetched weights — no second copy on the hot path
-        // (§Perf: saves a full per-layer weight memcpy per pass)
-        let mut get = |n: &str| -> anyhow::Result<Vec<f32>> {
-            ws.remove(&p(n))
-                .ok_or_else(|| anyhow::anyhow!("missing weight {}", p(n)))
+        let w = |n: &str| -> anyhow::Result<ValueRef<'a>> {
+            Ok(ws
+                .get(&p(n))
+                .ok_or_else(|| anyhow::anyhow!("missing weight {}", p(n)))?
+                .as_value())
         };
         let mut args = vec![
-            Value::F32(h),
-            Value::F32(self.resident(&p("attn_norm")).to_vec()),
-            Value::F32(get("wq")?),
-            Value::F32(get("wk")?),
-            Value::F32(get("wv")?),
-            Value::F32(get("wo")?),
-            Value::F32(self.resident(&p("ffn_norm")).to_vec()),
-            Value::F32(get("w_gate")?),
-            Value::F32(get("w_up")?),
-            Value::F32(get("w_down")?),
+            ValueRef::F32(h),
+            self.resident_arg(&p("attn_norm")),
+            w("wq")?,
+            w("wk")?,
+            w("wv")?,
+            w("wo")?,
+            self.resident_arg(&p("ffn_norm")),
+            w("w_gate")?,
+            w("w_up")?,
+            w("w_down")?,
         ];
         if let Some(d) = d_out {
-            args.push(Value::F32(d));
+            args.push(ValueRef::F32(d));
         }
         Ok(args)
     }
@@ -422,15 +451,21 @@ impl Trainer {
         accumulate_into(&mut self.flat, self.train.precision, tensor, grads);
     }
 
-    /// Return a kernel call's spent f32 argument buffers to the shared
-    /// scratch pool so the swapper reuses them (steady state: no
-    /// per-tensor allocation).
-    fn reclaim(&self, args: Vec<Value>) {
-        for v in args {
-            if let Value::F32(x) = v {
-                self.scratch.put(x);
-            }
-        }
+    /// Drain/shutdown durability point: flush every optimizer-state
+    /// stream (master/m/v) and fp16 compute copy via
+    /// [`crate::ssd::NvmeEngine::flush`].  Ranged tile writes never
+    /// fsync per step (state is rebuilt on restart), so this is where
+    /// buffered optimizer-state writes reach a defined durable state;
+    /// [`Self::run`] calls it after the last step, and embedders can
+    /// call it directly on shutdown or before a checkpoint.
+    pub fn drain(&self) -> anyhow::Result<()> {
+        let keys: Vec<String> =
+            self.state.offloaded.iter().map(|st| fp16_key(&st.group)).collect();
+        crate::optimizer::flush_groups(
+            self.engine.nvme.as_ref(),
+            &self.state.offloaded,
+            &keys,
+        )
     }
 
     /// Run `opts.steps` steps, returning the full report.
@@ -464,6 +499,17 @@ impl Trainer {
         if let Some(path) = &opts.loss_csv {
             report.write_loss_csv(path)?;
         }
+        // one explicit durability point after the run's buffered
+        // ranged writes (the per-step loop pays no durability tax).
+        // The report is assembled — and the loss CSV written — first,
+        // so a flush failure loses durability, not the completed run's
+        // metrics on disk.
+        self.drain().map_err(|e| {
+            e.context(format!(
+                "optimizer-state drain failed after {} completed steps",
+                opts.steps
+            ))
+        })?;
         Ok(report)
     }
 }

@@ -9,6 +9,7 @@ use std::collections::HashMap;
 
 use crate::config::ModelSpec;
 use crate::optimizer::{OptimState, StateDtype};
+use crate::runtime::ValueRef;
 use crate::ssd::NvmeEngine;
 use crate::tensors::{inventory, Category, TensorDesc};
 use crate::util::rng::Xoshiro256;
@@ -19,6 +20,15 @@ pub struct ResidentTensor {
     pub data: Vec<f32>,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
+}
+
+impl ResidentTensor {
+    /// Borrow the resident fp32 data as a PJRT argument — the
+    /// replacement for the seed's per-call `.to_vec()` staging copy
+    /// (one full norm-tensor memcpy per block per pass).
+    pub fn value(&self) -> ValueRef<'_> {
+        ValueRef::F32(&self.data)
+    }
 }
 
 pub struct ModelState {
@@ -111,6 +121,10 @@ mod tests {
         // norms resident, initialized to ones
         let norm = st.resident.get("layers.0.attn_norm").unwrap();
         assert!(norm.data.iter().all(|&x| x == 1.0));
+        // the argument view borrows the resident storage itself
+        let arg = norm.value();
+        assert_eq!(arg.as_f32().unwrap().as_ptr(), norm.data.as_ptr());
+        assert_eq!(arg.len(), norm.data.len());
         std::fs::remove_dir_all(&dir).ok();
     }
 

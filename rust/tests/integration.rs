@@ -5,7 +5,7 @@
 use std::path::{Path, PathBuf};
 
 use memascend::config::{MemAscendFlags, Precision, TrainSpec};
-use memascend::runtime::{Runtime, Value};
+use memascend::runtime::{Runtime, TensorBuf, ValueRef};
 use memascend::train::{TrainOpts, Trainer};
 
 
@@ -163,7 +163,7 @@ fn hlo_overflow_kernel_matches_native() {
     let chunk = rt.manifest().config.chunk;
     let mut clean = vec![0.5f32; chunk];
     let flag = rt
-        .run("overflow_check", &[Value::F32(clean.clone())])
+        .run("overflow_check", &[ValueRef::F32(&clean)])
         .unwrap()[0]
         .as_i32()
         .unwrap()[0];
@@ -173,7 +173,7 @@ fn hlo_overflow_kernel_matches_native() {
     for special in [f32::INFINITY, f32::NEG_INFINITY, f32::NAN] {
         clean[chunk / 2] = special;
         let flag = rt
-            .run("overflow_check", &[Value::F32(clean.clone())])
+            .run("overflow_check", &[ValueRef::F32(&clean)])
             .unwrap()[0]
             .as_i32()
             .unwrap()[0];
@@ -210,11 +210,11 @@ fn hlo_adam_kernel_matches_native() {
         .run(
             "adam_step",
             &[
-                Value::F32(bc),
-                Value::F32(p.clone()),
-                Value::F32(g.clone()),
-                Value::F32(m.clone()),
-                Value::F32(v.clone()),
+                ValueRef::F32(&bc),
+                ValueRef::F32(&p),
+                ValueRef::F32(&g),
+                ValueRef::F32(&m),
+                ValueRef::F32(&v),
             ],
         )
         .unwrap();
@@ -238,19 +238,74 @@ fn runtime_rejects_bad_args() {
     // wrong arity
     assert!(rt.run("embed_fwd", &[]).is_err());
     // wrong shape
-    let r = rt.run(
-        "embed_fwd",
-        &[Value::I32(vec![0; 3]), Value::F32(vec![0.0; 64 * 32])],
-    );
+    let short = vec![0i32; 3];
+    let table = vec![0.0f32; 64 * 32];
+    let r = rt.run("embed_fwd", &[ValueRef::I32(&short), ValueRef::F32(&table)]);
     assert!(r.is_err());
     // wrong dtype
-    let r = rt.run(
-        "embed_fwd",
-        &[Value::F32(vec![0.0; 32]), Value::F32(vec![0.0; 64 * 32])],
-    );
+    let toks_f32 = vec![0.0f32; 32];
+    let r = rt.run("embed_fwd", &[ValueRef::F32(&toks_f32), ValueRef::F32(&table)]);
     assert!(r.is_err());
     // unknown stage
     assert!(rt.run("nope", &[]).is_err());
+}
+
+#[test]
+fn lease_backed_args_run_bit_identical_to_owned() {
+    require_artifacts!();
+    // The tentpole's end-to-end claim through the *real* PJRT path:
+    // uploading from pinned lease memory produces the same bits as
+    // uploading from an owned Vec.
+    use memascend::pinned::{
+        AlignedAllocator, ArenaConfig, Cat, MemoryTracker, Mode, PinnedArena,
+    };
+    use std::sync::Arc;
+    let rt = Runtime::load(&artifacts()).unwrap();
+    let chunk = rt.manifest().config.chunk;
+    let arena = PinnedArena::new(
+        Arc::new(AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()))),
+        ArenaConfig::default(),
+    );
+    let mut rng = memascend::util::rng::Xoshiro256::new(23);
+    let vals: Vec<f32> = (0..chunk).map(|_| rng.normal() as f32).collect();
+    let mut lease = arena.lease(chunk * 4, Cat::SwapBuf).unwrap();
+    lease.as_f32_mut().copy_from_slice(&vals);
+    let view = TensorBuf::from_lease(lease).unwrap();
+    let owned = rt.run("overflow_check", &[ValueRef::F32(&vals)]).unwrap();
+    let leased = rt.run("overflow_check", &[view.as_value()]).unwrap();
+    assert_eq!(owned[0].as_i32().unwrap(), leased[0].as_i32().unwrap());
+    // and a run_into destination receives the adam result in place
+    let am = rt.manifest().adam.clone();
+    let t = 2u64;
+    let bc = vec![
+        1.0 - (am.beta1 as f32).powi(t as i32),
+        1.0 - (am.beta2 as f32).powi(t as i32),
+    ];
+    let g: Vec<f32> = (0..chunk).map(|_| rng.normal() as f32).collect();
+    let m = vec![0.1f32; chunk];
+    let v = vec![0.2f32; chunk];
+    let args = [
+        ValueRef::F32(&bc),
+        view.as_value(),
+        ValueRef::F32(&g),
+        ValueRef::F32(&m),
+        ValueRef::F32(&v),
+    ];
+    let owned_out = rt.run("adam_step", &args).unwrap();
+    let n_results = rt.manifest().stage("adam_step").unwrap().results.len();
+    let mut dst = arena.lease(chunk * 4, Cat::SwapBuf).unwrap();
+    {
+        let mut dests: Vec<Option<&mut [f32]>> = (0..n_results).map(|_| None).collect();
+        dests[0] = Some(dst.as_f32_mut());
+        let redirected = rt.run_into("adam_step", &args, &mut dests).unwrap();
+        assert!(redirected[0].as_f32().unwrap().is_empty(), "placeholder expected");
+    }
+    let want = owned_out[0].as_f32().unwrap();
+    let got = dst.as_f32();
+    assert_eq!(want.len(), got.len());
+    for i in 0..want.len() {
+        assert_eq!(want[i].to_bits(), got[i].to_bits(), "elem {i} diverged");
+    }
 }
 
 #[test]

@@ -8,6 +8,13 @@
 //! message, which is exactly where artifact-requiring integration
 //! tests already bail.  Substitute a real `xla-rs` checkout via the
 //! `xla` path dependency in `../Cargo.toml` to execute staged HLO.
+//!
+//! The surface mirrors the runtime's zero-copy boundary contract:
+//! [`PjRtClient::buffer_from_host_buffer`] *borrows* its host slice
+//! for the duration of the call only — the runtime may (and does)
+//! point it straight into pinned-arena lease memory, so an
+//! implementation must never retain the borrow or require an owned
+//! buffer.
 
 use std::fmt;
 
@@ -40,6 +47,9 @@ impl PjRtClient {
         unavailable()
     }
 
+    /// Upload a host tensor.  `_data` is borrowed for this call only —
+    /// callers upload straight out of pinned lease memory, so the
+    /// slice must be consumed (copied/DMA'd) before returning.
     pub fn buffer_from_host_buffer<T>(
         &self,
         _data: &[T],
