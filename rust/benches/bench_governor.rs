@@ -1,0 +1,448 @@
+//! Pressure-adaptive governor + super-group coalescing bench.
+//!
+//! Two experiments, mirroring the two halves of the governor PR:
+//!
+//! 1. **Coalescing / submission count** — the SMOKE model's offloadable
+//!    tensor inventory (many sub-tile tensors) driven through one
+//!    optimizer step by (a) the per-tensor-group tiled driver and (b)
+//!    the coalesced super-group driver, counting NVMe submissions
+//!    (`IoSnapshot::ops` delta).  Acceptance bar (deterministic,
+//!    CI-gated): coalescing cuts per-step submissions by ≥ 2× and every
+//!    stored artifact stays byte-identical to the sequential
+//!    `OptimState::step` reference.
+//! 2. **Governor convergence under a fixed pinned budget** — one group
+//!    whose static tile window cannot fit the budget next to the
+//!    boundary's delivery views.  Static config degrades tiles every
+//!    step, forever; the governed run shrinks the windows until
+//!    `degraded_tiles == 0` and `host_copy_bytes == 0`, and stays
+//!    there.  Acceptance bars
+//!    (deterministic, CI-gated): the static run shows pressure, the
+//!    governed run converges within the step budget, peak pinned
+//!    reservation stays within the arena budget, and both runs remain
+//!    byte-identical to the sequential reference.  Wall-clock stall
+//!    seconds are printed and stored in the JSON but are report-only
+//!    (timing-sensitive on shared runners).
+//!
+//! Emits `bench_out/BENCH_governor.json`.
+
+mod common;
+
+use std::sync::Arc;
+
+use memascend::config::presets::SMOKE;
+use memascend::metrics::HostCopyMeter;
+use memascend::optimizer::{
+    step_groups_tiled, AdamParams, CoalescedOptim, OptimState, StateDtype,
+};
+use memascend::pinned::{
+    AlignedAllocator, ArenaConfig, Cat, MemoryTracker, Mode, PinnedArena,
+};
+use memascend::runtime::F32Staging;
+use memascend::ssd::{AsyncEngine, DirectEngine, NvmeEngine};
+use memascend::tensors::inventory;
+use memascend::train::{GovernorConfig, GovernorSample, PipelineGovernor, PipelineTuning};
+use memascend::util::bench::Table;
+use memascend::util::json::Json;
+use memascend::util::rng::Xoshiro256;
+use memascend::util::stage::StageExecutor;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("ma-gov-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn arena() -> Arc<PinnedArena> {
+    PinnedArena::new(
+        Arc::new(AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()))),
+        ArenaConfig::default(),
+    )
+}
+
+/// Seed one engine with per-tensor optimizer groups + fp16 keys for
+/// the SMOKE inventory, deterministically.
+fn seed_groups(eng: &dyn NvmeEngine, sizes: &[usize], seed: u64) -> Vec<OptimState> {
+    let mut rng = Xoshiro256::new(seed);
+    let mut states = Vec::new();
+    for (g, n) in sizes.iter().enumerate() {
+        let p0: Vec<f32> = (0..*n).map(|_| rng.normal() as f32).collect();
+        states.push(OptimState::init(eng, &format!("g{g}"), &p0, StateDtype::F32).unwrap());
+        let mut fp16 = vec![0u8; n * 2];
+        memascend::dtype::f32s_to_f16_bytes(&p0, &mut fp16);
+        eng.write(&format!("g{g}/fp16"), &fp16).unwrap();
+    }
+    states
+}
+
+struct CoalesceResult {
+    members: usize,
+    per_group_ops: u64,
+    coalesced_ops: u64,
+    identical: bool,
+}
+
+/// Experiment 1: submission counts, per-tensor groups vs super-groups,
+/// on the SMOKE model's many-small-tensor inventory.
+fn run_coalesce() -> CoalesceResult {
+    // the trainer's real group shapes: every offloadable SMOKE tensor
+    let sizes: Vec<usize> = inventory(&SMOKE)
+        .into_iter()
+        .filter(|t| t.offloadable())
+        .map(|t| t.numel)
+        .collect();
+    let steps = 2u64;
+    let tile = 64 << 10;
+    let hp = AdamParams { weight_decay: 0.01, ..Default::default() };
+
+    let dir_seq = tmp("co-seq");
+    let dir_grp = tmp("co-grp");
+    let dir_coa = tmp("co-coa");
+    let eng_seq = DirectEngine::new(&dir_seq, 2, 1 << 26, 1).unwrap();
+    let eng_grp: Arc<dyn NvmeEngine> =
+        Arc::new(DirectEngine::new(&dir_grp, 2, 1 << 26, 1).unwrap());
+    let eng_coa: Arc<dyn NvmeEngine> =
+        Arc::new(DirectEngine::new(&dir_coa, 2, 1 << 26, 1).unwrap());
+    let states_seq = seed_groups(&eng_seq, &sizes, 42);
+    let states_grp = seed_groups(eng_grp.as_ref(), &sizes, 42);
+    let states_coa = seed_groups(eng_coa.as_ref(), &sizes, 42);
+    let aio_grp = AsyncEngine::new(Arc::clone(&eng_grp), 3);
+    let aio_coa = AsyncEngine::new(Arc::clone(&eng_coa), 3);
+    let stage = StageExecutor::new(2);
+    let co = CoalescedOptim::build(eng_coa.as_ref(), &states_coa, 1 << 20).unwrap();
+    let keys: Vec<String> = (0..sizes.len()).map(|g| format!("g{g}/fp16")).collect();
+    let arena_grp = arena();
+    let arena_coa = arena();
+
+    let mut rng = Xoshiro256::new(7);
+    let mut per_group_ops = 0u64;
+    let mut coalesced_ops = 0u64;
+    for t in 1..=steps {
+        let grads: Vec<Vec<f32>> = sizes
+            .iter()
+            .map(|n| (0..*n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        for (g, st) in states_seq.iter().enumerate() {
+            st.step(&eng_seq, &grads[g], t, 2.0, &hp, 1, &keys[g]).unwrap();
+        }
+        let before = eng_grp.stats().ops();
+        step_groups_tiled(
+            &aio_grp, &stage, &arena_grp, &states_grp, &grad_refs, &keys, t, 2.0, &hp,
+            1, tile, 2,
+        )
+        .unwrap();
+        per_group_ops += eng_grp.stats().ops() - before;
+        let before = eng_coa.stats().ops();
+        co.step_tiled(
+            &aio_coa, &stage, &arena_coa, &grad_refs, &keys, t, 2.0, &hp, 1, tile, 2,
+        )
+        .unwrap();
+        coalesced_ops += eng_coa.stats().ops() - before;
+    }
+
+    // byte-identity of every member artifact against the sequential
+    // reference, for both drivers
+    let mut identical = true;
+    for (g, n) in sizes.iter().enumerate() {
+        for suffix in ["master", "adam_m", "adam_v"] {
+            let key = format!("g{g}/{suffix}");
+            let mut a = vec![0u8; n * 4];
+            let mut b = vec![0u8; n * 4];
+            let mut c = vec![0u8; n * 4];
+            eng_seq.read(&key, &mut a).unwrap();
+            eng_grp.read(&key, &mut b).unwrap();
+            co.read_member_state(eng_coa.as_ref(), g, suffix, &mut c).unwrap();
+            if a != b || a != c {
+                identical = false;
+                eprintln!("MISMATCH at {key}");
+            }
+        }
+        let key = format!("g{g}/fp16");
+        let mut a = vec![0u8; n * 2];
+        let mut c = vec![0u8; n * 2];
+        eng_seq.read(&key, &mut a).unwrap();
+        eng_coa.read(&key, &mut c).unwrap();
+        if a != c {
+            identical = false;
+            eprintln!("MISMATCH at {key}");
+        }
+    }
+    std::fs::remove_dir_all(&dir_seq).ok();
+    std::fs::remove_dir_all(&dir_grp).ok();
+    std::fs::remove_dir_all(&dir_coa).ok();
+    CoalesceResult {
+        members: sizes.len(),
+        per_group_ops: per_group_ops / steps,
+        coalesced_ops: coalesced_ops / steps,
+        identical,
+    }
+}
+
+struct BudgetRun {
+    pressured_steps: usize,
+    /// First step after which no pressure ever returned (`None` =
+    /// pressured through the end).
+    clean_at: Option<usize>,
+    final_tuning: PipelineTuning,
+    peak_reserved: usize,
+    wait_secs: f64,
+}
+
+const GOV_STEPS: u64 = 24;
+const BUDGET: usize = 1 << 20; // 1 MiB pinned for optimizer + delivery
+const GROUP_ELEMS: usize = 200_000; // 800 KiB per f32 stream
+const VIEW_ELEMS: usize = 24 << 10; // one 96 KiB delivery view per slot
+
+/// One run of experiment 2: `governed = false` pins the static tuning
+/// forever (today's behavior), `true` lets the governor retune.
+fn run_budget(tag: &str, governed: bool) -> (BudgetRun, Vec<u8>, Vec<u8>) {
+    let dir = tmp(tag);
+    let eng: Arc<dyn NvmeEngine> =
+        Arc::new(DirectEngine::new(&dir, 1, 1 << 26, 1).unwrap());
+    let mut rng = Xoshiro256::new(3);
+    let p0: Vec<f32> = (0..GROUP_ELEMS).map(|_| rng.normal() as f32).collect();
+    let st = OptimState::init(eng.as_ref(), "g0", &p0, StateDtype::F32).unwrap();
+    let aio = AsyncEngine::new(Arc::clone(&eng), 2);
+    let stage = StageExecutor::new(1);
+    let hp = AdamParams::default();
+    let arena = PinnedArena::new(
+        Arc::new(AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()))),
+        ArenaConfig { budget_bytes: Some(BUDGET), ..Default::default() },
+    );
+    let meter = HostCopyMeter::new();
+    let cfg = GovernorConfig {
+        min_tile_bytes: 8 << 10,
+        max_tile_bytes: 1 << 20,
+        ..Default::default()
+    };
+    // the static operating point: 512 KiB tiles × depth 2 needs up to
+    // 7 MiB of pinned window next to a 1 MiB budget
+    let start = PipelineTuning {
+        optim_tile_bytes: 512 << 10,
+        tile_depth: 2,
+        prefetch_depth: 4,
+    };
+    let mut gov = PipelineGovernor::new(cfg, start);
+    let mut tuning = gov.tuning();
+    let mut pressured_steps = 0usize;
+    let mut steps_to_clean: Option<usize> = None;
+    let mut clean_streak = 0usize;
+    let mut wait_secs = 0.0f64;
+    for t in 1..=GOV_STEPS {
+        // the boundary's concurrent delivery views, one per prefetch
+        // slot, held across the optimizer phase
+        let copies_before = meter.bytes();
+        let views: Vec<F32Staging> = (0..tuning.prefetch_depth)
+            .map(|_| F32Staging::take(&arena, Cat::SwapBuf, VIEW_ELEMS, &meter))
+            .collect();
+        let g: Vec<f32> = (0..GROUP_ELEMS).map(|_| rng.normal() as f32).collect();
+        let stats = step_groups_tiled(
+            &aio,
+            &stage,
+            &arena,
+            std::slice::from_ref(&st),
+            &[g.as_slice()],
+            &["g0/fp16".to_string()],
+            t,
+            1.0,
+            &hp,
+            1,
+            tuning.optim_tile_bytes,
+            tuning.tile_depth,
+        )
+        .unwrap();
+        drop(views);
+        wait_secs += stats.wait_secs;
+        let host_copy = meter.bytes() - copies_before;
+        if host_copy > 0 || stats.degraded_tiles > 0 {
+            pressured_steps += 1;
+            clean_streak = 0;
+        } else {
+            clean_streak += 1;
+            if clean_streak == 1 && steps_to_clean.is_none() {
+                steps_to_clean = Some(t as usize);
+            }
+        }
+        if clean_streak == 0 {
+            steps_to_clean = None; // pressure returned: not converged yet
+        }
+        if governed {
+            let a = arena.stats();
+            tuning = gov.observe(&GovernorSample {
+                host_copy_bytes: host_copy,
+                degraded_tiles: stats.degraded_tiles,
+                io_wait_secs: stats.wait_secs,
+                io_busy_secs: 0.0,
+                step_secs: 1.0,
+                arena_reserved: a.reserved_bytes,
+                arena_budget: Some(BUDGET),
+            });
+        }
+    }
+    // final states for the cross-run identity check
+    let mut master = vec![0u8; GROUP_ELEMS * 4];
+    eng.read("g0/master", &mut master).unwrap();
+    let mut fp16 = vec![0u8; GROUP_ELEMS * 2];
+    eng.read("g0/fp16", &mut fp16).unwrap();
+    let peak = arena.stats().peak_reserved;
+    std::fs::remove_dir_all(&dir).ok();
+    (
+        BudgetRun {
+            pressured_steps,
+            clean_at: steps_to_clean,
+            final_tuning: tuning,
+            peak_reserved: peak,
+            wait_secs,
+        },
+        master,
+        fp16,
+    )
+}
+
+fn main() {
+    // ---- experiment 1: coalescing vs per-tensor submissions ----
+    let co = run_coalesce();
+    let reduction = co.per_group_ops as f64 / co.coalesced_ops.max(1) as f64;
+    let mut t1 = Table::new(vec![
+        "members",
+        "per-group subs/step",
+        "coalesced subs/step",
+        "reduction",
+        "byte-identical",
+    ]);
+    t1.row(vec![
+        co.members.to_string(),
+        co.per_group_ops.to_string(),
+        co.coalesced_ops.to_string(),
+        format!("{reduction:.2}x"),
+        co.identical.to_string(),
+    ]);
+    common::emit(
+        "bench_governor_coalesce",
+        "super-group coalescing: NVMe submissions per optimizer step (SMOKE inventory)",
+        &t1,
+    );
+
+    // ---- experiment 2: static vs governed under a 1 MiB budget ----
+    let (stat, stat_master, stat_fp16) = run_budget("static", false);
+    let (gov, gov_master, gov_fp16) = run_budget("governed", true);
+    // sequential reference for identity: same grads, same seed
+    let dir = tmp("ref");
+    let eng = DirectEngine::new(&dir, 1, 1 << 26, 1).unwrap();
+    let mut rng = Xoshiro256::new(3);
+    let p0: Vec<f32> = (0..GROUP_ELEMS).map(|_| rng.normal() as f32).collect();
+    let st = OptimState::init(&eng, "g0", &p0, StateDtype::F32).unwrap();
+    let hp = AdamParams::default();
+    for t in 1..=GOV_STEPS {
+        let g: Vec<f32> = (0..GROUP_ELEMS).map(|_| rng.normal() as f32).collect();
+        st.step(&eng, &g, t, 1.0, &hp, 1, "g0/fp16").unwrap();
+    }
+    let mut ref_master = vec![0u8; GROUP_ELEMS * 4];
+    eng.read("g0/master", &mut ref_master).unwrap();
+    let mut ref_fp16 = vec![0u8; GROUP_ELEMS * 2];
+    eng.read("g0/fp16", &mut ref_fp16).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    let identical = stat_master == ref_master
+        && gov_master == ref_master
+        && stat_fp16 == ref_fp16
+        && gov_fp16 == ref_fp16;
+
+    let mut t2 = Table::new(vec![
+        "run",
+        "pressured steps",
+        "converged at step",
+        "final tile (KiB)",
+        "final depth",
+        "final prefetch",
+        "peak reserved (KiB)",
+        "stall secs (report-only)",
+    ]);
+    t2.row(vec![
+        "static".into(),
+        format!("{}/{GOV_STEPS}", stat.pressured_steps),
+        "-".into(),
+        (stat.final_tuning.optim_tile_bytes >> 10).to_string(),
+        stat.final_tuning.tile_depth.to_string(),
+        stat.final_tuning.prefetch_depth.to_string(),
+        (stat.peak_reserved >> 10).to_string(),
+        format!("{:.3}", stat.wait_secs),
+    ]);
+    t2.row(vec![
+        "governed".into(),
+        format!("{}/{GOV_STEPS}", gov.pressured_steps),
+        gov.clean_at
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| "never".into()),
+        (gov.final_tuning.optim_tile_bytes >> 10).to_string(),
+        gov.final_tuning.tile_depth.to_string(),
+        gov.final_tuning.prefetch_depth.to_string(),
+        (gov.peak_reserved >> 10).to_string(),
+        format!("{:.3}", gov.wait_secs),
+    ]);
+    common::emit(
+        "bench_governor_budget",
+        "pipeline governor under a fixed 1 MiB pinned budget",
+        &t2,
+    );
+
+    // ---- acceptance ----
+    let submissions_halved = reduction >= 2.0;
+    let static_pressured = stat.pressured_steps == GOV_STEPS as usize;
+    let governed_converged = gov.clean_at.is_some();
+    let budget_held = gov.peak_reserved <= BUDGET;
+    println!(
+        "submissions: {} -> {} per step ({reduction:.2}x, target >= 2x): {}",
+        co.per_group_ops, co.coalesced_ops, submissions_halved
+    );
+    println!(
+        "static run pressured every step: {static_pressured}; governed converged: \
+         {governed_converged} (at step {:?}, final tuning {:?})",
+        gov.clean_at, gov.final_tuning
+    );
+    println!("governed peak reserved {} <= budget {}: {budget_held}", gov.peak_reserved, BUDGET);
+    println!("byte-identity (static & governed & coalesced vs sequential): {}", co.identical && identical);
+    println!(
+        "LATENCY (report-only): static stall {:.3}s vs governed stall {:.3}s",
+        stat.wait_secs, gov.wait_secs
+    );
+
+    std::fs::create_dir_all(common::OUT_DIR).ok();
+    let out = Json::obj(vec![
+        ("members", Json::from(co.members)),
+        ("per_group_submissions_per_step", Json::from(co.per_group_ops)),
+        ("coalesced_submissions_per_step", Json::from(co.coalesced_ops)),
+        ("submission_reduction", Json::from(reduction)),
+        ("coalesced_byte_identical", Json::from(co.identical)),
+        ("budget_bytes", Json::from(BUDGET)),
+        ("static_pressured_steps", Json::from(stat.pressured_steps)),
+        ("governed_pressured_steps", Json::from(gov.pressured_steps)),
+        (
+            "governed_converged_at_step",
+            Json::from(gov.clean_at.unwrap_or(0)),
+        ),
+        ("governed_final_tile_bytes", Json::from(gov.final_tuning.optim_tile_bytes)),
+        ("governed_final_tile_depth", Json::from(gov.final_tuning.tile_depth)),
+        ("governed_final_prefetch_depth", Json::from(gov.final_tuning.prefetch_depth)),
+        ("static_peak_reserved", Json::from(stat.peak_reserved)),
+        ("governed_peak_reserved", Json::from(gov.peak_reserved)),
+        ("static_stall_secs", Json::from(stat.wait_secs)),
+        ("governed_stall_secs", Json::from(gov.wait_secs)),
+        ("runs_byte_identical", Json::from(identical)),
+    ]);
+    let path = format!("{}/BENCH_governor.json", common::OUT_DIR);
+    match std::fs::write(&path, out.to_string()) {
+        Ok(()) => println!("[json] {path}"),
+        Err(e) => eprintln!("warn: could not write {path}: {e}"),
+    }
+
+    let pass = submissions_halved
+        && co.identical
+        && static_pressured
+        && governed_converged
+        && budget_held
+        && identical;
+    println!("ACCEPTANCE: {}", if pass { "PASS" } else { "FAIL" });
+    if !pass {
+        std::process::exit(1);
+    }
+}

@@ -84,6 +84,11 @@ fn metrics(io_secs: f64, io_wait_secs: f64, step_secs: f64) -> StepMetrics {
         optim_secs: 0.0,
         io_wait_secs,
         optim_tiles: 0,
+        degraded_tiles: 0,
+        nvme_submissions: 0,
+        optim_tile_bytes: 0,
+        tile_depth: 0,
+        prefetch_depth: 0,
         host_copy_bytes: 0,
     }
 }

@@ -133,6 +133,27 @@ pub struct TrainSpec {
     /// are bit-identical in result.  Default ≈ one arena segment's
     /// worth of staging.
     pub optim_tile_bytes: usize,
+    /// Tile-pipeline window: fetch and write-back generations the
+    /// staged-tile optimizer keeps in flight (the former
+    /// `TILE_PIPELINE_DEPTH` constant, now a spec knob the governor
+    /// may retune).  Clamped to ≥ 1.
+    pub optim_tile_depth: usize,
+    /// Coalesce the per-tensor optimizer groups into super-group
+    /// streams of at most this many state bytes each before tiling
+    /// (`optimizer::CoalescedOptim`): one long contiguous ranged
+    /// submission per tile instead of ≥ 7 submissions per tensor.
+    /// Only engages on the tiled path (`io_workers > 0` and
+    /// `optim_tile_bytes > 0`).  `0` = off (per-tensor groups, today's
+    /// layout).  Bit-identical either way.
+    pub optim_coalesce_bytes: usize,
+    /// Enable the pressure-adaptive pipeline governor
+    /// (`train::PipelineGovernor`): retunes `optim_tile_bytes`,
+    /// `optim_tile_depth`, and `prefetch_depth` each step from
+    /// observed arena pressure (`host_copy_bytes`, `degraded_tiles`)
+    /// and stall/busy ratios.  `false` = the static knobs above are
+    /// used verbatim forever — today's behavior, byte for byte (the
+    /// paper-parity figure specs keep it off).
+    pub governor: bool,
     /// Offload activation checkpoints to host memory (Eq. 1).
     pub offloaded_gc: bool,
     /// Host byte budget for activation checkpoints; checkpoints beyond
@@ -172,6 +193,9 @@ impl Default for TrainSpec {
             prefetch_depth: 2,
             io_workers: 2,
             optim_tile_bytes: 4 << 20,
+            optim_tile_depth: 2,
+            optim_coalesce_bytes: 0,
+            governor: false,
             offloaded_gc: true,
             act_host_budget: usize::MAX,
             pinned_budget_bytes: None,

@@ -25,6 +25,20 @@ pub fn commands() -> Vec<Command> {
                 "4194304",
                 "optimizer tile size in state bytes (0 = whole-group swap)",
             )
+            .opt(
+                "optim-tile-depth",
+                "2",
+                "tile-pipeline window: fetch/write-back generations in flight",
+            )
+            .opt(
+                "optim-coalesce-bytes",
+                "0",
+                "coalesce per-tensor optimizer groups into super-groups of this many state bytes (0 = off)",
+            )
+            .flag(
+                "governor",
+                "enable the pressure-adaptive pipeline governor (retunes tile size/depth and prefetch depth per step)",
+            )
             .opt("precision", "fp16", "mixed precision (fp16|bf16)")
             .opt("seed", "42", "init/data seed")
             .opt("artifacts", "artifacts", "AOT artifacts root")
@@ -82,6 +96,11 @@ pub fn train_spec_from_args(args: &Args, batch: usize, seq: usize) -> anyhow::Re
         optim_dtype: crate::dtype::DType::parse(args.get_or("optim", "f32"))?,
         optim_tile_bytes: args
             .get_usize("optim-tile-bytes", defaults.optim_tile_bytes)?,
+        optim_tile_depth: args
+            .get_usize("optim-tile-depth", defaults.optim_tile_depth)?,
+        optim_coalesce_bytes: args
+            .get_usize("optim-coalesce-bytes", defaults.optim_coalesce_bytes)?,
+        governor: args.get_bool("governor"),
         flags: parse_mode(args.get_or("mode", "memascend"))?,
         ..defaults
     })

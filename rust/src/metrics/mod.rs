@@ -84,6 +84,24 @@ pub struct StepMetrics {
     /// Optimizer-state tiles streamed by the staged-tile pipeline this
     /// step (0 when the whole-group or sequential path ran).
     pub optim_tiles: u64,
+    /// Tiles the staged pipeline degraded to the synchronous unpinned
+    /// path under budget pressure this step.  Non-zero is the
+    /// governor's primary shrink signal: the pinned budget is too
+    /// tight for the current tile window.
+    pub degraded_tiles: u64,
+    /// NVMe submissions (read + write calls) issued this step — the
+    /// counter the optimizer's group-coalescing pass drives down:
+    /// same bytes, far fewer per-tensor submissions.
+    pub nvme_submissions: u64,
+    /// Optimizer tile size actually used this step (the governed
+    /// value; equals `TrainSpec::optim_tile_bytes` with the governor
+    /// off).
+    pub optim_tile_bytes: usize,
+    /// Tile-pipeline depth actually used this step (fetch and
+    /// write-back generations in flight).
+    pub tile_depth: usize,
+    /// Swapper prefetch window actually used this step.
+    pub prefetch_depth: usize,
     /// fp32 bytes staged through owned heap buffers at the PJRT
     /// boundary this step (see [`HostCopyMeter`]).  0 means every
     /// weight/activation argument uploaded straight from pinned lease
@@ -216,6 +234,11 @@ mod tests {
             optim_secs: 0.05,
             io_wait_secs: 0.04,
             optim_tiles: 0,
+            degraded_tiles: 0,
+            nvme_submissions: 0,
+            optim_tile_bytes: 0,
+            tile_depth: 0,
+            prefetch_depth: 0,
             host_copy_bytes: 0,
         }
     }

@@ -5,11 +5,13 @@
 //! - [`swapper`] — SSD→host prefetch pipeline over the buffer pool
 //! - [`gradbuf`] — the fp32 gradient partition flat buffer
 //! - [`scaler`] — DeepSpeed-semantics dynamic loss scaler
-//! - [`activations`] — offloaded activation-checkpoint store (Eq. 1)
+//! - [`spill`] — the offloaded activation-checkpoint store (Eq. 1):
+//!   pinned host slots up to a byte budget, SSD spill beyond it
+//!   (`host_budget = ∞` is the fully-host degenerate case — the old
+//!   separate non-spilling store is gone)
 //! - [`engine`] — assembles allocator + pool + NVMe engine + checker
 //!   from `MemAscendFlags` (the ablation axis every bench sweeps)
 
-pub mod activations;
 pub mod engine;
 pub mod gradbuf;
 pub mod partition;

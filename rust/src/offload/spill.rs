@@ -64,6 +64,20 @@ pub struct SpillingActivationStore {
 }
 
 impl SpillingActivationStore {
+    /// The `host_budget = ∞` degenerate case: every checkpoint stays
+    /// in pinned host memory (modulo the arena's own global budget) —
+    /// what the deleted non-spilling `ActivationStore` used to be.
+    /// One store, one code path; the budget is the only difference.
+    pub fn unbounded(
+        layers: usize,
+        elems: usize,
+        arena: Arc<PinnedArena>,
+        aio: AsyncEngine,
+        meter: HostCopyMeter,
+    ) -> Self {
+        Self::new(layers, elems, usize::MAX, arena, aio, meter)
+    }
+
     /// `host_budget_bytes` caps pinned checkpoint memory; checkpoints
     /// beyond it live on the SSD.  Nothing is pinned up front — slots
     /// lease on offload and release on fetch.
@@ -124,20 +138,35 @@ impl SpillingActivationStore {
     /// refused lease degrades to an owned scratch vector (charged to
     /// the copy meter); data is bit-identical either way.
     pub fn fetch(&mut self, layer: usize) -> anyhow::Result<TensorBuf> {
-        anyhow::ensure!(
-            !matches!(self.slots[layer], Slot::Empty),
-            "layer {layer} checkpoint missing"
-        );
-        let slot = std::mem::replace(&mut self.slots[layer], Slot::Empty);
         // the shared lease-else-owned policy, under `Cat::SwapBuf` —
         // the scratch tier the trainer reclaims spent buffers into, so
         // even the degraded path recycles instead of allocating
         let mut dst =
             F32Staging::take(&self.arena, Cat::SwapBuf, self.elems, &self.meter);
+        self.fetch_into(layer, dst.as_mut_slice())?;
+        Ok(dst.freeze())
+    }
+
+    /// [`Self::fetch`] decoding into a caller-provided destination —
+    /// typically a pinned lease's f32 view, so the recomputation
+    /// argument is staged once, in upload-ready memory, with no owned
+    /// intermediate (the zero-copy boundary's consumption pattern).
+    pub fn fetch_into(&mut self, layer: usize, out: &mut [f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            out.len() == self.elems,
+            "layer {layer} destination holds {} elems, expected {}",
+            out.len(),
+            self.elems
+        );
+        anyhow::ensure!(
+            !matches!(self.slots[layer], Slot::Empty),
+            "layer {layer} checkpoint missing"
+        );
+        let slot = std::mem::replace(&mut self.slots[layer], Slot::Empty);
         match slot {
             Slot::Empty => unreachable!("checked above"),
             Slot::Host(lease) => {
-                f16_bytes_to_f32s(lease.as_slice(), dst.as_mut_slice());
+                f16_bytes_to_f32s(lease.as_slice(), out);
                 self.host_bytes_live -= self.bytes_per;
                 // lease drops here: the host slot returns to the arena
                 // for reuse by a later offload
@@ -151,12 +180,12 @@ impl SpillingActivationStore {
                     }
                 };
                 let bytes = self.await_read(handle)?;
-                f16_bytes_to_f32s(&bytes, dst.as_mut_slice());
+                f16_bytes_to_f32s(&bytes, out);
                 self.arena.put_bytes(bytes, Cat::ActCkpt);
             }
         }
         self.maybe_prefetch(layer);
-        Ok(dst.freeze())
+        Ok(())
     }
 
     /// Seconds the caller blocked inside [`Self::fetch`] waiting on
@@ -302,6 +331,98 @@ mod tests {
         assert_eq!(arena.watermark(Cat::ActCkpt).requested_peak, 0);
         assert!(tracker.peak(Cat::ActCkpt) <= 2 * 2048);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unbounded_store_is_the_old_activation_store() {
+        // the host_budget = ∞ degenerate case: everything stays in
+        // pinned host slots, nothing spills, f16-exact roundtrip
+        let (_, dir, tracker, arena) = mk(0); // engine/arena plumbing only
+        let engine: Arc<dyn NvmeEngine> =
+            Arc::new(DirectEngine::new(&dir.join("unb"), 1, 1 << 24, 1).unwrap());
+        let aio = AsyncEngine::new(engine, 1);
+        let mut store = SpillingActivationStore::unbounded(
+            4,
+            256,
+            Arc::clone(&arena),
+            aio,
+            HostCopyMeter::new(),
+        );
+        let h: Vec<f32> = (0..256).map(|i| (i as f32) / 16.0).collect();
+        store.offload(2, &h).unwrap();
+        assert_eq!(store.host_slots, 1);
+        assert_eq!(store.spilled_slots, 0);
+        let back = store.fetch(2).unwrap();
+        assert_eq!(back.as_f32(), h.as_slice());
+        // a second fetch of the same layer is a structured error
+        assert!(store.fetch(2).is_err());
+        let _ = tracker;
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fetch_into_decodes_into_a_lease_view() {
+        // the zero-copy consumption pattern: decode straight into a
+        // pinned lease, freeze, upload the view
+        let (mut store, dir, _, arena) = mk(1 << 20);
+        let h: Vec<f32> = (0..1024).map(|i| i as f32).collect();
+        store.offload(1, &h).unwrap();
+        let mut dst = arena.lease(1024 * 4, crate::pinned::Cat::SwapBuf).unwrap();
+        store.fetch_into(1, dst.as_f32_mut()).unwrap();
+        let view = crate::runtime::TensorBuf::from_lease(dst).unwrap();
+        assert_eq!(view.as_f32(), h.as_slice());
+        // wrong-size destinations error before touching the slot
+        store.offload(2, &h).unwrap();
+        let mut short = vec![0f32; 8];
+        assert!(store.fetch_into(2, &mut short).is_err());
+        assert!(store.fetch_into(2, &mut vec![0f32; 1024]).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn eq1_accounting_difference_between_allocators() {
+        // Eq. 1's P_m term: pow2 rounding on non-pow2 checkpoint
+        // sizes — ported from the deleted non-spilling store; the
+        // unbounded spilling store leases the same per-layer slots
+        let elems = 5000; // 10'000 B -> pow2 16384
+        let mk_arena = |caching: bool| {
+            let tr = Arc::new(MemoryTracker::new());
+            let alloc: Arc<dyn crate::pinned::HostAllocator> = if caching {
+                Arc::new(crate::pinned::CachingAllocator::new(Mode::Real, tr.clone()))
+            } else {
+                Arc::new(AlignedAllocator::new(Mode::Real, tr.clone()))
+            };
+            (PinnedArena::new(alloc, ArenaConfig::default()), tr)
+        };
+        let mut peaks = Vec::new();
+        for caching in [true, false] {
+            let dir = std::env::temp_dir()
+                .join(format!("ma-spill-eq1-{caching}-{}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let engine: Arc<dyn NvmeEngine> =
+                Arc::new(DirectEngine::new(&dir, 1, 1 << 24, 1).unwrap());
+            let (arena, tracker) = mk_arena(caching);
+            let aio = AsyncEngine::new(engine, 1);
+            let mut store = SpillingActivationStore::unbounded(
+                8,
+                elems,
+                Arc::clone(&arena),
+                aio,
+                HostCopyMeter::new(),
+            );
+            let h = vec![0.5f32; elems];
+            for layer in 0..8 {
+                store.offload(layer, &h).unwrap();
+            }
+            assert_eq!(store.host_slots, 8, "unbounded store must not spill");
+            // the pow2 excess lands under Cat::PinnedOverhead, so the
+            // policies differ in total, not in the ActCkpt charge
+            peaks.push(tracker.peak_total());
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        // pow2 caching policy rounds each slot up; alignment-free does
+        // not — the accounting difference Fig. 8 measures
+        assert!(peaks[0] > peaks[1], "caching {} vs aligned {}", peaks[0], peaks[1]);
     }
 
     #[test]

@@ -1,0 +1,1244 @@
+//! Optimizer super-group coalescing: many small per-tensor state
+//! streams, one long contiguous ranged-I/O stream each.
+//!
+//! The trainer's parameter groups are per-tensor, and most of them are
+//! small — at SMOKE scale a group is a few KiB, at paper scale a
+//! norm-adjacent projection is still far below one tile.  Driving
+//! [`super::step_groups_tiled`] over per-tensor groups therefore pays
+//! the *minimum* submission tax per tensor: at least 3 ranged reads,
+//! 3 ranged writes, and 1 fp16 write, no matter how small the tensor
+//! is.  SSDTrain-style pipelines win by keeping transfers long and
+//! rate-matched; tiny tensors defeat that.
+//!
+//! The coalescer fixes the layout, not the math:
+//!
+//! - [`CoalescedLayout::plan`] concatenates the members *in inventory
+//!   order* into a bounded number of logical **super-groups** of at
+//!   most `target_bytes` state bytes each (a member larger than the
+//!   target gets its own super-group).  The key → (super-group,
+//!   element offset) mapping is a pure function of the member list and
+//!   is **persisted** on the engine under [`LAYOUT_KEY`], so a restart
+//!   against the same storage maps identically — and a diverging
+//!   inventory is a structured error, never silent relocation.
+//! - [`CoalescedOptim::build`] gathers each member's existing
+//!   (master, m, v) streams into the super-group streams with ranged
+//!   writes, once, at construction.
+//! - [`CoalescedOptim::step_tiled`] then drives the same four-stage
+//!   tile pipeline as `step_groups_tiled` over the super-group
+//!   streams: tiles span member boundaries, so one 4 MiB tile that
+//!   covers fifty small tensors costs 6 ranged submissions where the
+//!   per-group driver paid 350.  Adam runs per member overlap inside
+//!   the tile (the kernels are elementwise, so the trajectory is
+//!   bit-identical to [`super::OptimState::step`] per member), and the
+//!   fp16 compute window downconverts once per tile and *scatters* to
+//!   the per-member `{name}/fp16` keys the swapper reads — one shared
+//!   pinned lease backing many ranged view writes
+//!   ([`AsyncEngine::submit_write_at_lease_view`]) — so the rest of
+//!   the system (swapper plan, weight keys, benches) is untouched.
+//!
+//! Budget pressure degrades exactly like the per-group tile driver: a
+//! refused fetch lease runs that one tile synchronously through
+//! unpinned buffers, a refused fp16 window finishes the tile's
+//! write-back synchronously from the leases already held — counted in
+//! [`PipelineStats::degraded_tiles`], never an abort, and bit-identical
+//! either way.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::pinned::{Cat, Lease, PinnedArena};
+use crate::ssd::{AsyncEngine, IoHandle, NvmeEngine};
+use crate::util::json::Json;
+use crate::util::stage::StageExecutor;
+
+use super::states::{master_to_fp16, state_keys};
+use super::{AdamParams, OptimState, PipelineStats, StateDtype};
+
+/// Engine key the coalesced layout is persisted under.
+pub const LAYOUT_KEY: &str = "optim/coalesce/layout";
+
+/// SSD stream namespace of one super-group.
+pub fn super_group_name(idx: usize) -> String {
+    format!("optim/sg{idx}")
+}
+
+/// One member tensor's place in the coalesced layout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemberSpan {
+    /// The member's original group name (its fp16 key stays
+    /// `{name}/fp16`).
+    pub name: String,
+    pub numel: usize,
+    /// Which super-group the member lives in.
+    pub super_idx: usize,
+    /// Element offset of the member inside its super-group.
+    pub offset: usize,
+}
+
+/// The stable key → (super-group, offset) mapping: a pure function of
+/// the member list, persisted per run under [`LAYOUT_KEY`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoalescedLayout {
+    pub dtype: StateDtype,
+    /// Members in input (inventory) order; offsets ascend within each
+    /// super-group.
+    pub members: Vec<MemberSpan>,
+    /// Element count of each super-group.
+    pub super_numels: Vec<usize>,
+}
+
+impl CoalescedLayout {
+    /// Deterministic first-fit-in-order packing: walk the members in
+    /// the given order, close the current super-group when adding the
+    /// next member would push it past `target_bytes` of state bytes.
+    /// A member larger than the target gets a super-group of its own;
+    /// order is never permuted, so the mapping is reproducible from
+    /// the member list alone.
+    pub fn plan(
+        members: &[(String, usize)],
+        dtype: StateDtype,
+        target_bytes: usize,
+    ) -> Self {
+        let es = dtype.bytes_per_elem();
+        let target = target_bytes.max(1);
+        let mut super_numels = Vec::new();
+        let mut spans = Vec::new();
+        let mut cur = 0usize;
+        for (name, numel) in members {
+            if cur > 0 && (cur + numel) * es > target {
+                super_numels.push(cur);
+                cur = 0;
+            }
+            spans.push(MemberSpan {
+                name: name.clone(),
+                numel: *numel,
+                super_idx: super_numels.len(),
+                offset: cur,
+            });
+            cur += numel;
+        }
+        if cur > 0 {
+            super_numels.push(cur);
+        }
+        Self { dtype, members: spans, super_numels }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "dtype",
+                Json::from(match self.dtype {
+                    StateDtype::F32 => "f32".to_string(),
+                    StateDtype::BF16 => "bf16".to_string(),
+                }),
+            ),
+            (
+                "supers",
+                Json::Arr(self.super_numels.iter().map(|&n| Json::from(n)).collect()),
+            ),
+            (
+                "members",
+                Json::Arr(
+                    self.members
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("name", Json::from(m.name.clone())),
+                                ("numel", Json::from(m.numel)),
+                                ("super", Json::from(m.super_idx)),
+                                ("offset", Json::from(m.offset)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let dtype = match j.req("dtype")?.as_str() {
+            Some("f32") => StateDtype::F32,
+            Some("bf16") => StateDtype::BF16,
+            other => anyhow::bail!("coalesce layout: bad dtype {other:?}"),
+        };
+        let supers = j
+            .req("supers")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("coalesce layout: supers not an array"))?
+            .iter()
+            .map(|n| {
+                n.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("coalesce layout: bad super numel"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let members = j
+            .req("members")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("coalesce layout: members not an array"))?
+            .iter()
+            .map(|m| {
+                let field = |k: &str| -> anyhow::Result<usize> {
+                    m.req(k)?
+                        .as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("coalesce layout: bad member {k}"))
+                };
+                Ok(MemberSpan {
+                    name: m
+                        .req("name")?
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("coalesce layout: bad member name"))?
+                        .to_string(),
+                    numel: field("numel")?,
+                    super_idx: field("super")?,
+                    offset: field("offset")?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self { dtype, members, super_numels: supers })
+    }
+
+    /// (super-group, element offset, numel) of `name`, if a member.
+    pub fn span_of(&self, name: &str) -> Option<(usize, usize, usize)> {
+        self.members
+            .iter()
+            .find(|m| m.name == name)
+            .map(|m| (m.super_idx, m.offset, m.numel))
+    }
+}
+
+/// Super-group optimizer state: the coalesced layout plus one
+/// [`OptimState`] per super-group stream on the SSD.
+pub struct CoalescedOptim {
+    pub layout: CoalescedLayout,
+    pub supers: Vec<OptimState>,
+    /// Member-index range of each super-group (members are assigned in
+    /// order, so each super-group owns a contiguous slice).
+    super_members: Vec<Range<usize>>,
+}
+
+impl CoalescedOptim {
+    /// Build the super-group streams from per-member states already
+    /// initialized on `engine`: compute the layout (or verify the one
+    /// persisted under [`LAYOUT_KEY`] against it), reserve the
+    /// super-group streams, and gather each member's (master, m, v)
+    /// into them with ranged writes.  Member streams are authoritative
+    /// at build time — the trainer (re)initializes them immediately
+    /// before building.
+    pub fn build(
+        engine: &dyn NvmeEngine,
+        groups: &[OptimState],
+        target_bytes: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!groups.is_empty(), "nothing to coalesce");
+        let dtype = groups[0].dtype;
+        anyhow::ensure!(
+            groups.iter().all(|g| g.dtype == dtype),
+            "mixed state dtypes cannot share a coalesced layout"
+        );
+        let members: Vec<(String, usize)> =
+            groups.iter().map(|g| (g.group.clone(), g.numel)).collect();
+        let layout = CoalescedLayout::plan(&members, dtype, target_bytes);
+        // persist the mapping (and the target that produced it) once;
+        // a pre-existing layout must agree bit for bit, so a run
+        // restarted against the same storage addresses the same
+        // offsets — divergence is a structured error that names the
+        // knob actually responsible
+        match engine.len_of(LAYOUT_KEY) {
+            Some(len) => {
+                let mut stored = vec![0u8; len];
+                engine.read(LAYOUT_KEY, &mut stored)?;
+                let parsed = Json::parse(std::str::from_utf8(&stored)?)
+                    .map_err(|e| anyhow::anyhow!("coalesce layout unreadable: {e:?}"))?;
+                let stored_target = parsed
+                    .req("target_bytes")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("coalesce layout: bad target_bytes"))?;
+                anyhow::ensure!(
+                    stored_target == target_bytes,
+                    "coalesce target changed ({stored_target} -> {target_bytes} state \
+                     bytes); keep optim_coalesce_bytes stable for this storage, or \
+                     clear '{LAYOUT_KEY}' to re-lay the super-groups"
+                );
+                let stored = CoalescedLayout::from_json(parsed.req("layout")?)?;
+                anyhow::ensure!(
+                    stored == layout,
+                    "persisted coalesce layout diverged from the member inventory"
+                );
+            }
+            None => {
+                let blob = Json::obj(vec![
+                    ("target_bytes", Json::from(target_bytes)),
+                    ("layout", layout.to_json()),
+                ]);
+                engine.write(LAYOUT_KEY, blob.to_string().as_bytes())?;
+            }
+        }
+        let es = dtype.bytes_per_elem();
+        let supers: Vec<OptimState> = layout
+            .super_numels
+            .iter()
+            .enumerate()
+            .map(|(i, &numel)| OptimState { group: super_group_name(i), numel, dtype })
+            .collect();
+        for st in &supers {
+            for k in state_keys(&st.group) {
+                engine.reserve(&k, st.numel * es)?;
+            }
+        }
+        for (g, span) in groups.iter().zip(&layout.members) {
+            let src = state_keys(&g.group);
+            let dst = state_keys(&super_group_name(span.super_idx));
+            let mut buf = vec![0u8; g.numel * es];
+            for (s, d) in src.iter().zip(&dst) {
+                engine.read(s, &mut buf)?;
+                engine.write_at(d, span.offset * es, &buf)?;
+            }
+        }
+        let mut super_members = vec![0..0; supers.len()];
+        for (mi, span) in layout.members.iter().enumerate() {
+            let r = &mut super_members[span.super_idx];
+            if r.start == r.end {
+                *r = mi..mi + 1;
+            } else {
+                r.end = mi + 1;
+            }
+        }
+        Ok(Self { layout, supers, super_members })
+    }
+
+    /// Member overlaps of the tile `[start, start+cnt)` of super-group
+    /// `g`: `(member index, overlap start, overlap end)` in super-group
+    /// element coordinates.
+    fn overlaps(&self, g: usize, start: usize, cnt: usize) -> Vec<(usize, usize, usize)> {
+        let end = start + cnt;
+        let mut out = Vec::new();
+        for mi in self.super_members[g].clone() {
+            let span = &self.layout.members[mi];
+            if span.offset >= end {
+                break;
+            }
+            let s = span.offset.max(start);
+            let e = (span.offset + span.numel).min(end);
+            if s < e {
+                out.push((mi, s, e));
+            }
+        }
+        out
+    }
+
+    /// Ranged read of one member's state stream (`master`, `adam_m`,
+    /// or `adam_v`) out of its super-group — the per-member view the
+    /// bit-identity tests and external checkpoint readers use.
+    pub fn read_member_state(
+        &self,
+        engine: &dyn NvmeEngine,
+        member: usize,
+        suffix: &str,
+        out: &mut [u8],
+    ) -> anyhow::Result<()> {
+        let span = &self.layout.members[member];
+        let es = self.layout.dtype.bytes_per_elem();
+        anyhow::ensure!(out.len() == span.numel * es, "member read size mismatch");
+        let key = format!("{}/{suffix}", super_group_name(span.super_idx));
+        engine.read_at(&key, span.offset * es, out)
+    }
+
+    /// One explicit durability point over every coalesced artifact:
+    /// each super-group's three state streams plus every member's fp16
+    /// compute copy (the coalesced analog of
+    /// [`super::flush_groups`]).
+    pub fn flush(
+        &self,
+        engine: &dyn NvmeEngine,
+        fp16_keys: &[String],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            fp16_keys.len() == self.layout.members.len(),
+            "members/keys length mismatch"
+        );
+        for st in &self.supers {
+            for k in state_keys(&st.group) {
+                engine.flush(&k)?;
+            }
+        }
+        for k in fp16_keys {
+            engine.flush(k)?;
+        }
+        Ok(())
+    }
+
+    /// Tile-granular four-stage AdamW over the super-group streams —
+    /// the same fetch → Adam → downconvert/write-back pipeline as
+    /// [`super::step_groups_tiled`], but tiles run long contiguous
+    /// ranges that span member boundaries.  `grads[i]` /
+    /// `fp16_keys[i]` belong to `layout.members[i]`.  Bit-identical to
+    /// the per-group drivers; submission count per step is
+    /// `O(super-group bytes / tile_bytes)` instead of `O(members)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_tiled(
+        &self,
+        aio: &AsyncEngine,
+        stage: &StageExecutor,
+        arena: &Arc<PinnedArena>,
+        grads: &[&[f32]],
+        fp16_keys: &[String],
+        step: u64,
+        grad_scale: f32,
+        hp: &AdamParams,
+        threads: usize,
+        tile_bytes: usize,
+        depth: usize,
+    ) -> anyhow::Result<PipelineStats> {
+        anyhow::ensure!(tile_bytes > 0, "coalesced driver requires a tile size");
+        anyhow::ensure!(
+            grads.len() == self.layout.members.len()
+                && fp16_keys.len() == self.layout.members.len(),
+            "members/grads/keys length mismatch"
+        );
+        for (span, g) in self.layout.members.iter().zip(grads) {
+            anyhow::ensure!(
+                g.len() == span.numel,
+                "grad size mismatch for '{}'",
+                span.name
+            );
+        }
+        for (span, key) in self.layout.members.iter().zip(fp16_keys) {
+            aio.engine().reserve(key, span.numel * 2)?;
+        }
+        let dtype = self.layout.dtype;
+        let es = dtype.bytes_per_elem();
+        // fixed-byte tile plan across all super-groups, tails included
+        let tile_elems = (tile_bytes / es).max(1);
+        let mut plan: Vec<(usize, usize, usize)> = Vec::new();
+        for (g, st) in self.supers.iter().enumerate() {
+            let mut start = 0;
+            while start < st.numel {
+                let cnt = tile_elems.min(st.numel - start);
+                plan.push((g, start, cnt));
+                start += cnt;
+            }
+        }
+        let depth = depth.max(1);
+        let mut stats = PipelineStats { tiles: plan.len() as u64, ..Default::default() };
+        let mut next = 0usize;
+        let mut fetches: VecDeque<TileFetch> = VecDeque::new();
+        let mut wbs: VecDeque<IoHandle<CoalescedWriteback>> = VecDeque::new();
+        loop {
+            // keep the fetch window full; a refused lease degrades that
+            // one tile to the synchronous unpinned path
+            while next < plan.len() && fetches.len() < depth {
+                let (g, s, c) = plan[next];
+                next += 1;
+                match self.submit_tile_fetch(aio, arena, g, s, c) {
+                    Ok(tf) => fetches.push_back(tf),
+                    Err(_budget) => {
+                        self.step_tile_sync(
+                            aio.engine().as_ref(),
+                            g,
+                            s,
+                            c,
+                            grads,
+                            step,
+                            grad_scale,
+                            hp,
+                            threads,
+                            fp16_keys,
+                        )?;
+                        stats.degraded_tiles += 1;
+                    }
+                }
+            }
+            let Some(tf) = fetches.pop_front() else { break };
+            let t0 = Instant::now();
+            let mut p = tf.p.wait()?;
+            let mut m = tf.m.wait()?;
+            let mut v = tf.v.wait()?;
+            stats.wait_secs += t0.elapsed().as_secs_f64();
+            // Adam per member overlap: elementwise kernels over
+            // disjoint sub-windows — the exact arithmetic the
+            // per-group drivers run, just batched into one tile
+            for (mi, s, e) in self.overlaps(tf.g, tf.start, tf.cnt) {
+                let span = &self.layout.members[mi];
+                let gs = &grads[mi][s - span.offset..e - span.offset];
+                let (ts, te) = (s - tf.start, e - tf.start);
+                match dtype {
+                    StateDtype::F32 => super::adam_step_f32(
+                        &mut p.as_f32_mut()[ts..te],
+                        gs,
+                        &mut m.as_f32_mut()[ts..te],
+                        &mut v.as_f32_mut()[ts..te],
+                        step,
+                        grad_scale,
+                        hp,
+                        threads,
+                    ),
+                    StateDtype::BF16 => super::adam_step_bf16(
+                        &mut p.as_mut_slice()[2 * ts..2 * te],
+                        gs,
+                        &mut m.as_mut_slice()[2 * ts..2 * te],
+                        &mut v.as_mut_slice()[2 * ts..2 * te],
+                        step,
+                        grad_scale,
+                        hp,
+                        threads,
+                    ),
+                }
+            }
+            while wbs.len() >= depth {
+                let wb = wbs.pop_front().expect("non-empty window");
+                let t0 = Instant::now();
+                wb.wait()?.drain()?;
+                stats.wait_secs += t0.elapsed().as_secs_f64();
+            }
+            match self.submit_tile_writeback(
+                aio, stage, arena, tf.g, tf.start, tf.cnt, p, m, v, fp16_keys,
+            ) {
+                Ok(h) => wbs.push_back(h),
+                Err((_budget, p, m, v)) => {
+                    self.writeback_tile_sync(
+                        aio.engine().as_ref(),
+                        tf.g,
+                        tf.start,
+                        tf.cnt,
+                        p,
+                        m,
+                        v,
+                        fp16_keys,
+                    )?;
+                    stats.degraded_tiles += 1;
+                }
+            }
+        }
+        while let Some(wb) = wbs.pop_front() {
+            let t0 = Instant::now();
+            wb.wait()?.drain()?;
+            stats.wait_secs += t0.elapsed().as_secs_f64();
+        }
+        Ok(stats)
+    }
+
+    fn submit_tile_fetch(
+        &self,
+        aio: &AsyncEngine,
+        arena: &PinnedArena,
+        g: usize,
+        start: usize,
+        cnt: usize,
+    ) -> Result<TileFetch, crate::pinned::ArenaError> {
+        let es = self.layout.dtype.bytes_per_elem();
+        let [k_p, k_m, k_v] = state_keys(&self.supers[g].group);
+        let off = start * es;
+        let len = cnt * es;
+        let lp = arena.lease(len, Cat::OptimBuf)?;
+        let lm = arena.lease(len, Cat::OptimBuf)?;
+        let lv = arena.lease(len, Cat::OptimBuf)?;
+        Ok(TileFetch {
+            g,
+            start,
+            cnt,
+            p: aio.submit_read_at_lease(k_p, off, lp),
+            m: aio.submit_read_at_lease(k_m, off, lm),
+            v: aio.submit_read_at_lease(k_v, off, lv),
+        })
+    }
+
+    /// Queue tile downconvert + write-back: the fp16 conversion runs
+    /// once over the whole tile on the stage executor, then the stage
+    /// job submits the three super-group ranged writes plus one ranged
+    /// *view* write per member overlap, all sharing the frozen fp16
+    /// lease.
+    #[allow(clippy::too_many_arguments)]
+    fn submit_tile_writeback(
+        &self,
+        aio: &AsyncEngine,
+        stage: &StageExecutor,
+        arena: &PinnedArena,
+        g: usize,
+        start: usize,
+        cnt: usize,
+        p: Lease,
+        m: Lease,
+        v: Lease,
+        fp16_keys: &[String],
+    ) -> Result<IoHandle<CoalescedWriteback>, (crate::pinned::ArenaError, Lease, Lease, Lease)>
+    {
+        let mut fp16 = match arena.lease(cnt * 2, Cat::SwapBuf) {
+            Ok(l) => l,
+            Err(e) => return Err((e, p, m, v)),
+        };
+        // (member fp16 key, member-side byte offset, tile-side byte
+        // offset, byte length) per overlap — owned, so the stage job
+        // borrows nothing
+        let scatter: Vec<(String, usize, usize, usize)> = self
+            .overlaps(g, start, cnt)
+            .into_iter()
+            .map(|(mi, s, e)| {
+                let span = &self.layout.members[mi];
+                (
+                    fp16_keys[mi].clone(),
+                    (s - span.offset) * 2,
+                    (s - start) * 2,
+                    (e - s) * 2,
+                )
+            })
+            .collect();
+        let (completer, handle) = IoHandle::pair();
+        let aio = aio.clone();
+        let [k_p, k_m, k_v] = state_keys(&self.supers[g].group);
+        let dtype = self.layout.dtype;
+        let off = start * dtype.bytes_per_elem();
+        stage.submit(move || {
+            master_to_fp16(dtype, p.as_slice(), fp16.as_mut_slice());
+            let shared = fp16.into_shared();
+            let mut wb = CoalescedWriteback {
+                leases: vec![
+                    aio.submit_write_at_lease(k_p, off, p),
+                    aio.submit_write_at_lease(k_m, off, m),
+                    aio.submit_write_at_lease(k_v, off, v),
+                ],
+                views: Vec::new(),
+            };
+            for (key, dst_off, src_off, len) in scatter {
+                wb.views.push(aio.submit_write_at_lease_view(
+                    key,
+                    dst_off,
+                    Arc::clone(&shared),
+                    src_off,
+                    len,
+                ));
+            }
+            completer.complete(Ok(wb));
+        });
+        Ok(handle)
+    }
+
+    /// Budget-degraded path for one whole tile: fetch, Adam per member
+    /// overlap, downconvert, and write back synchronously through
+    /// transient unpinned buffers — same kernels, same disjoint byte
+    /// windows, bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn step_tile_sync(
+        &self,
+        engine: &dyn NvmeEngine,
+        g: usize,
+        start: usize,
+        cnt: usize,
+        grads: &[&[f32]],
+        step: u64,
+        grad_scale: f32,
+        hp: &AdamParams,
+        threads: usize,
+        fp16_keys: &[String],
+    ) -> anyhow::Result<()> {
+        let dtype = self.layout.dtype;
+        let es = dtype.bytes_per_elem();
+        let [k_p, k_m, k_v] = state_keys(&self.supers[g].group);
+        let off = start * es;
+        let mut fp16 = vec![0u8; cnt * 2];
+        match dtype {
+            StateDtype::F32 => {
+                // typed buffers, read in place — same shape as the
+                // per-group driver's sync path, no bounce copies
+                let mut p = vec![0f32; cnt];
+                let mut m = vec![0f32; cnt];
+                let mut v = vec![0f32; cnt];
+                engine.read_at(&k_p, off, crate::dtype::f32s_as_bytes_mut(&mut p))?;
+                engine.read_at(&k_m, off, crate::dtype::f32s_as_bytes_mut(&mut m))?;
+                engine.read_at(&k_v, off, crate::dtype::f32s_as_bytes_mut(&mut v))?;
+                for (mi, s, e) in self.overlaps(g, start, cnt) {
+                    let span = &self.layout.members[mi];
+                    let gs = &grads[mi][s - span.offset..e - span.offset];
+                    let (ts, te) = (s - start, e - start);
+                    super::adam_step_f32(
+                        &mut p[ts..te],
+                        gs,
+                        &mut m[ts..te],
+                        &mut v[ts..te],
+                        step,
+                        grad_scale,
+                        hp,
+                        threads,
+                    );
+                }
+                engine.write_at(&k_p, off, crate::dtype::f32s_as_bytes(&p))?;
+                engine.write_at(&k_m, off, crate::dtype::f32s_as_bytes(&m))?;
+                engine.write_at(&k_v, off, crate::dtype::f32s_as_bytes(&v))?;
+                master_to_fp16(dtype, crate::dtype::f32s_as_bytes(&p), &mut fp16);
+            }
+            StateDtype::BF16 => {
+                let mut p = vec![0u8; cnt * 2];
+                let mut m = vec![0u8; cnt * 2];
+                let mut v = vec![0u8; cnt * 2];
+                engine.read_at(&k_p, off, &mut p)?;
+                engine.read_at(&k_m, off, &mut m)?;
+                engine.read_at(&k_v, off, &mut v)?;
+                for (mi, s, e) in self.overlaps(g, start, cnt) {
+                    let span = &self.layout.members[mi];
+                    let gs = &grads[mi][s - span.offset..e - span.offset];
+                    let (ts, te) = (s - start, e - start);
+                    super::adam_step_bf16(
+                        &mut p[2 * ts..2 * te],
+                        gs,
+                        &mut m[2 * ts..2 * te],
+                        &mut v[2 * ts..2 * te],
+                        step,
+                        grad_scale,
+                        hp,
+                        threads,
+                    );
+                }
+                engine.write_at(&k_p, off, &p)?;
+                engine.write_at(&k_m, off, &m)?;
+                engine.write_at(&k_v, off, &v)?;
+                master_to_fp16(dtype, &p, &mut fp16);
+            }
+        }
+        for (mi, s, e) in self.overlaps(g, start, cnt) {
+            let span = &self.layout.members[mi];
+            engine.write_at(
+                &fp16_keys[mi],
+                (s - span.offset) * 2,
+                &fp16[(s - start) * 2..(e - start) * 2],
+            )?;
+        }
+        Ok(())
+    }
+
+    /// [`Self::step_tile_sync`]'s write-back half, for a tile whose
+    /// states are already updated in leases but whose fp16 window
+    /// lease was refused.
+    #[allow(clippy::too_many_arguments)]
+    fn writeback_tile_sync(
+        &self,
+        engine: &dyn NvmeEngine,
+        g: usize,
+        start: usize,
+        cnt: usize,
+        p: Lease,
+        m: Lease,
+        v: Lease,
+        fp16_keys: &[String],
+    ) -> anyhow::Result<()> {
+        let dtype = self.layout.dtype;
+        let es = dtype.bytes_per_elem();
+        let [k_p, k_m, k_v] = state_keys(&self.supers[g].group);
+        let off = start * es;
+        let mut fp16 = vec![0u8; cnt * 2];
+        master_to_fp16(dtype, p.as_slice(), &mut fp16);
+        engine.write_at(&k_p, off, p.as_slice())?;
+        engine.write_at(&k_m, off, m.as_slice())?;
+        engine.write_at(&k_v, off, v.as_slice())?;
+        for (mi, s, e) in self.overlaps(g, start, cnt) {
+            let span = &self.layout.members[mi];
+            engine.write_at(
+                &fp16_keys[mi],
+                (s - span.offset) * 2,
+                &fp16[(s - start) * 2..(e - start) * 2],
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// One tile's in-flight fetch off the super-group streams.
+struct TileFetch {
+    g: usize,
+    start: usize,
+    cnt: usize,
+    p: IoHandle<Lease>,
+    m: IoHandle<Lease>,
+    v: IoHandle<Lease>,
+}
+
+/// One tile's in-flight write-back: three super-group ranged writes
+/// plus the fp16 scatter's shared-lease view writes.
+struct CoalescedWriteback {
+    leases: Vec<IoHandle<Lease>>,
+    views: Vec<IoHandle<Arc<Lease>>>,
+}
+
+impl CoalescedWriteback {
+    fn drain(self) -> anyhow::Result<()> {
+        for h in self.leases {
+            h.wait()?;
+        }
+        for h in self.views {
+            h.wait()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bufpool::test_util::test_arena;
+    use crate::pinned::Mode;
+    use crate::ssd::DirectEngine;
+
+    fn engine(tag: &str) -> (DirectEngine, std::path::PathBuf) {
+        let dir =
+            std::env::temp_dir().join(format!("ma-coal-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        (DirectEngine::new(&dir, 2, 1 << 26, 1).unwrap(), dir)
+    }
+
+    fn arena() -> Arc<PinnedArena> {
+        test_arena(Mode::Real)
+    }
+
+    fn init_groups(
+        eng: &dyn NvmeEngine,
+        sizes: &[usize],
+        dtype: StateDtype,
+        rng: &mut crate::util::rng::Xoshiro256,
+    ) -> (Vec<OptimState>, Vec<Vec<f32>>) {
+        let mut states = Vec::new();
+        let mut inits = Vec::new();
+        for (g, n) in sizes.iter().enumerate() {
+            let p0: Vec<f32> = (0..*n).map(|_| rng.normal() as f32).collect();
+            states.push(OptimState::init(eng, &format!("g{g}"), &p0, dtype).unwrap());
+            // fp16 compute keys exist per member, as the trainer's
+            // init_weights guarantees
+            let mut fp16 = vec![0u8; n * 2];
+            crate::dtype::f32s_to_f16_bytes(&p0, &mut fp16);
+            eng.write(&format!("g{g}/fp16"), &fp16).unwrap();
+            inits.push(p0);
+        }
+        (states, inits)
+    }
+
+    #[test]
+    fn plan_is_deterministic_bounded_and_order_preserving() {
+        let members: Vec<(String, usize)> = [120usize, 4000, 8, 900, 1, 2048, 77]
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (format!("t{i}"), *n))
+            .collect();
+        for dtype in [StateDtype::F32, StateDtype::BF16] {
+            let es = dtype.bytes_per_elem();
+            let target = 4096usize;
+            let a = CoalescedLayout::plan(&members, dtype, target);
+            let b = CoalescedLayout::plan(&members, dtype, target);
+            assert_eq!(a, b, "plan must be a pure function of the member list");
+            // every member mapped, in order, with ascending offsets
+            assert_eq!(a.members.len(), members.len());
+            let mut expect_super = 0;
+            let mut expect_off = 0;
+            for (span, (name, numel)) in a.members.iter().zip(&members) {
+                assert_eq!(&span.name, name);
+                assert_eq!(span.numel, *numel);
+                if span.super_idx != expect_super {
+                    assert_eq!(span.super_idx, expect_super + 1, "supers must ascend");
+                    expect_super = span.super_idx;
+                    expect_off = 0;
+                }
+                assert_eq!(span.offset, expect_off);
+                expect_off += span.numel;
+            }
+            // no super-group exceeds the target unless a single member
+            // does; sizes agree with the member spans
+            for (g, &numel) in a.super_numels.iter().enumerate() {
+                let members_in: Vec<_> =
+                    a.members.iter().filter(|m| m.super_idx == g).collect();
+                assert_eq!(members_in.iter().map(|m| m.numel).sum::<usize>(), numel);
+                assert!(
+                    numel * es <= target || members_in.len() == 1,
+                    "super {g} overflows the target with multiple members"
+                );
+            }
+            // coalescing actually bounded the group count
+            assert!(a.super_numels.len() < members.len());
+            // json round-trip is exact
+            let rt = CoalescedLayout::from_json(
+                &Json::parse(&a.to_json().to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(rt, a);
+            assert_eq!(a.span_of("t1"), Some((a.members[1].super_idx, a.members[1].offset, 4000)));
+            assert_eq!(a.span_of("absent"), None);
+        }
+    }
+
+    #[test]
+    fn coalesced_bit_identical_to_sequential_and_per_group_tiled() {
+        // sizes cover: sub-tile members, ragged tails, an exact
+        // multiple, and a member larger than the whole target
+        let sizes = [5usize, 700, 64, 300, 1100, 17, 512, 2048];
+        for dtype in [StateDtype::F32, StateDtype::BF16] {
+            let (eng_a, dir_a) = engine(&format!("id-seq-{dtype:?}"));
+            let (eng_b, dir_b) = engine(&format!("id-tile-{dtype:?}"));
+            let (eng_c, dir_c) = engine(&format!("id-coal-{dtype:?}"));
+            let hp = AdamParams { weight_decay: 0.01, ..Default::default() };
+            let mut rng = crate::util::rng::Xoshiro256::new(31);
+            let (states_a, _) = init_groups(&eng_a, &sizes, dtype, &mut rng);
+            let mut rng = crate::util::rng::Xoshiro256::new(31);
+            let (states_b, _) = init_groups(&eng_b, &sizes, dtype, &mut rng);
+            let mut rng = crate::util::rng::Xoshiro256::new(31);
+            let (states_c, _) = init_groups(&eng_c, &sizes, dtype, &mut rng);
+            let eng_b: Arc<dyn NvmeEngine> = Arc::new(eng_b);
+            let eng_c: Arc<dyn NvmeEngine> = Arc::new(eng_c);
+            let aio_b = AsyncEngine::new(Arc::clone(&eng_b), 3);
+            let aio_c = AsyncEngine::new(Arc::clone(&eng_c), 3);
+            let stage = StageExecutor::new(2);
+            let arena_b = arena();
+            let arena_c = arena();
+            // super-groups of ~4 KiB state bytes, tiles of 1 KiB: tiles
+            // span member boundaries and members span tiles
+            let co = CoalescedOptim::build(eng_c.as_ref(), &states_c, 4096).unwrap();
+            assert!(co.supers.len() < sizes.len(), "nothing coalesced");
+            let keys: Vec<String> =
+                (0..sizes.len()).map(|g| format!("g{g}/fp16")).collect();
+            for t in 1..=3u64 {
+                let grads: Vec<Vec<f32>> = sizes
+                    .iter()
+                    .map(|n| (0..*n).map(|_| rng.normal() as f32).collect())
+                    .collect();
+                let grad_refs: Vec<&[f32]> =
+                    grads.iter().map(|g| g.as_slice()).collect();
+                for (g, st) in states_a.iter().enumerate() {
+                    st.step(&eng_a, &grads[g], t, 2.0, &hp, 1, &keys[g]).unwrap();
+                }
+                super::super::step_groups_tiled(
+                    &aio_b, &stage, &arena_b, &states_b, &grad_refs, &keys, t, 2.0,
+                    &hp, 1, 1024, 2,
+                )
+                .unwrap();
+                let stats = co
+                    .step_tiled(
+                        &aio_c, &stage, &arena_c, &grad_refs, &keys, t, 2.0, &hp, 1,
+                        1024, 2,
+                    )
+                    .unwrap();
+                assert_eq!(stats.degraded_tiles, 0);
+                // tile count follows the *super* streams, not members
+                let es = dtype.bytes_per_elem();
+                let tile_elems = 1024 / es;
+                let want: usize = co
+                    .layout
+                    .super_numels
+                    .iter()
+                    .map(|n| n.div_ceil(tile_elems))
+                    .sum();
+                assert_eq!(stats.tiles as usize, want);
+            }
+            // every member's state + fp16 identical across all drivers
+            let es = dtype.bytes_per_elem();
+            for (g, n) in sizes.iter().enumerate() {
+                for suffix in ["master", "adam_m", "adam_v"] {
+                    let key = format!("g{g}/{suffix}");
+                    let mut a = vec![0u8; n * es];
+                    let mut b = vec![0u8; n * es];
+                    let mut c = vec![0u8; n * es];
+                    eng_a.read(&key, &mut a).unwrap();
+                    eng_b.read(&key, &mut b).unwrap();
+                    co.read_member_state(eng_c.as_ref(), g, suffix, &mut c).unwrap();
+                    assert_eq!(a, b, "{dtype:?} per-group tiled {key} diverged");
+                    assert_eq!(a, c, "{dtype:?} coalesced {key} diverged");
+                }
+                let key = format!("g{g}/fp16");
+                let mut a = vec![0u8; n * 2];
+                let mut c = vec![0u8; n * 2];
+                eng_a.read(&key, &mut a).unwrap();
+                eng_c.read(&key, &mut c).unwrap();
+                assert_eq!(a, c, "{dtype:?} coalesced {key} diverged");
+            }
+            // all tile leases returned to the arena
+            assert_eq!(arena_c.stats().requested_bytes, 0);
+            std::fs::remove_dir_all(&dir_a).ok();
+            std::fs::remove_dir_all(&dir_b).ok();
+            std::fs::remove_dir_all(&dir_c).ok();
+        }
+    }
+
+    #[test]
+    fn coalescing_reduces_per_step_submissions_on_many_small_tensors() {
+        // 48 sub-tile tensors: per-group tiling pays >= 7 submissions
+        // per tensor, the coalesced stream pays ~6 per tile + 1 fp16
+        // scatter per member
+        let sizes: Vec<usize> = (0..48).map(|i| 64 + (i % 7) * 96).collect();
+        let (eng_b, dir_b) = engine("sub-group");
+        let (eng_c, dir_c) = engine("sub-coal");
+        let hp = AdamParams::default();
+        let mut rng = crate::util::rng::Xoshiro256::new(5);
+        let (states_b, _) = init_groups(&eng_b, &sizes, StateDtype::F32, &mut rng);
+        let mut rng = crate::util::rng::Xoshiro256::new(5);
+        let (states_c, _) = init_groups(&eng_c, &sizes, StateDtype::F32, &mut rng);
+        let eng_b: Arc<dyn NvmeEngine> = Arc::new(eng_b);
+        let eng_c: Arc<dyn NvmeEngine> = Arc::new(eng_c);
+        let aio_b = AsyncEngine::new(Arc::clone(&eng_b), 3);
+        let aio_c = AsyncEngine::new(Arc::clone(&eng_c), 3);
+        let stage = StageExecutor::new(2);
+        let co = CoalescedOptim::build(eng_c.as_ref(), &states_c, 256 << 10).unwrap();
+        let keys: Vec<String> = (0..sizes.len()).map(|g| format!("g{g}/fp16")).collect();
+        let grads: Vec<Vec<f32>> = sizes
+            .iter()
+            .map(|n| (0..*n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let tile = 64 << 10;
+        let before_b = eng_b.stats().ops();
+        super::super::step_groups_tiled(
+            &aio_b,
+            &stage,
+            &arena(),
+            &states_b,
+            &grad_refs,
+            &keys,
+            1,
+            1.0,
+            &hp,
+            1,
+            tile,
+            2,
+        )
+        .unwrap();
+        let per_group_ops = eng_b.stats().ops() - before_b;
+        let before_c = eng_c.stats().ops();
+        co.step_tiled(
+            &aio_c,
+            &stage,
+            &arena(),
+            &grad_refs,
+            &keys,
+            1,
+            1.0,
+            &hp,
+            1,
+            tile,
+            2,
+        )
+        .unwrap();
+        let coalesced_ops = eng_c.stats().ops() - before_c;
+        assert!(
+            coalesced_ops * 2 <= per_group_ops,
+            "coalescing saved too little: {coalesced_ops} vs {per_group_ops} submissions"
+        );
+    std::fs::remove_dir_all(&dir_b).ok();
+        std::fs::remove_dir_all(&dir_c).ok();
+    }
+
+    #[test]
+    fn layout_persists_and_rebuild_maps_identically() {
+        let sizes = [100usize, 50, 800, 3];
+        let (eng, dir) = engine("persist");
+        let mut rng = crate::util::rng::Xoshiro256::new(9);
+        let (states, _) = init_groups(&eng, &sizes, StateDtype::F32, &mut rng);
+        let co1 = CoalescedOptim::build(&eng, &states, 2048).unwrap();
+        assert!(eng.len_of(LAYOUT_KEY).is_some(), "layout never persisted");
+        // a rebuild against the same storage loads + verifies the
+        // persisted mapping and lands on identical offsets (restart
+        // determinism)
+        let co2 = CoalescedOptim::build(&eng, &states, 2048).unwrap();
+        assert_eq!(co1.layout, co2.layout);
+        // a fresh engine with the same member inventory maps the same
+        let (eng2, dir2) = engine("persist2");
+        let mut rng = crate::util::rng::Xoshiro256::new(9);
+        let (states2, _) = init_groups(&eng2, &sizes, StateDtype::F32, &mut rng);
+        let co3 = CoalescedOptim::build(&eng2, &states2, 2048).unwrap();
+        assert_eq!(co1.layout, co3.layout);
+        // a diverging inventory against persisted state is a
+        // structured error, not silent relocation
+        let bad = vec![
+            OptimState { group: "g0".into(), numel: 100, dtype: StateDtype::F32 },
+            OptimState { group: "gX".into(), numel: 50, dtype: StateDtype::F32 },
+        ];
+        assert!(CoalescedOptim::build(&eng, &bad, 2048).is_err());
+        // a changed coalesce target is its own structured error,
+        // naming the knob responsible rather than blaming the inventory
+        let err = CoalescedOptim::build(&eng, &states, 4096).unwrap_err();
+        assert!(
+            err.to_string().contains("coalesce target changed"),
+            "unexpected error: {err}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
+    }
+
+    #[test]
+    fn degraded_tiles_under_impossible_budget_stay_identical() {
+        let sizes = [400usize, 2500, 31];
+        let (eng_a, dir_a) = engine("deg-seq");
+        let (eng_c, dir_c) = engine("deg-coal");
+        let hp = AdamParams::default();
+        let mut rng = crate::util::rng::Xoshiro256::new(13);
+        let (states_a, _) = init_groups(&eng_a, &sizes, StateDtype::F32, &mut rng);
+        let mut rng = crate::util::rng::Xoshiro256::new(13);
+        let (states_c, _) = init_groups(&eng_c, &sizes, StateDtype::F32, &mut rng);
+        let eng_c: Arc<dyn NvmeEngine> = Arc::new(eng_c);
+        let aio = AsyncEngine::new(Arc::clone(&eng_c), 2);
+        let stage = StageExecutor::new(1);
+        let co = CoalescedOptim::build(eng_c.as_ref(), &states_c, 8192).unwrap();
+        let tracker = Arc::new(crate::pinned::MemoryTracker::new());
+        let starved = PinnedArena::new(
+            Arc::new(crate::pinned::AlignedAllocator::new(Mode::Real, tracker)),
+            crate::pinned::ArenaConfig {
+                budget_bytes: Some(512),
+                ..Default::default()
+            },
+        );
+        let keys: Vec<String> = (0..sizes.len()).map(|g| format!("g{g}/fp16")).collect();
+        for t in 1..=2u64 {
+            let grads: Vec<Vec<f32>> = sizes
+                .iter()
+                .map(|n| (0..*n).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            for (g, st) in states_a.iter().enumerate() {
+                st.step(&eng_a, &grads[g], t, 1.0, &hp, 1, &keys[g]).unwrap();
+            }
+            let stats = co
+                .step_tiled(
+                    &aio, &stage, &starved, &grad_refs, &keys, t, 1.0, &hp, 1, 4096, 2,
+                )
+                .unwrap();
+            assert_eq!(
+                stats.degraded_tiles, stats.tiles,
+                "every tile must have degraded, none aborted"
+            );
+        }
+        for (g, n) in sizes.iter().enumerate() {
+            for suffix in ["master", "adam_m", "adam_v"] {
+                let mut a = vec![0u8; n * 4];
+                let mut c = vec![0u8; n * 4];
+                eng_a.read(&format!("g{g}/{suffix}"), &mut a).unwrap();
+                co.read_member_state(eng_c.as_ref(), g, suffix, &mut c).unwrap();
+                assert_eq!(a, c, "degraded coalesced g{g}/{suffix} diverged");
+            }
+            let mut a = vec![0u8; n * 2];
+            let mut c = vec![0u8; n * 2];
+            eng_a.read(&format!("g{g}/fp16"), &mut a).unwrap();
+            eng_c.read(&format!("g{g}/fp16"), &mut c).unwrap();
+            assert_eq!(a, c, "degraded coalesced g{g}/fp16 diverged");
+        }
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_c).ok();
+    }
+
+    #[test]
+    fn structured_errors_for_bad_inputs() {
+        let (eng, dir) = engine("errs");
+        let mut rng = crate::util::rng::Xoshiro256::new(3);
+        let (states, _) = init_groups(&eng, &[64, 64], StateDtype::F32, &mut rng);
+        let eng: Arc<dyn NvmeEngine> = Arc::new(eng);
+        let co = CoalescedOptim::build(eng.as_ref(), &states, 4096).unwrap();
+        let aio = AsyncEngine::new(Arc::clone(&eng), 1);
+        let stage = StageExecutor::new(1);
+        let hp = AdamParams::default();
+        let good = vec![0.0f32; 64];
+        let bad = vec![0.0f32; 7];
+        let keys = vec!["g0/fp16".to_string(), "g1/fp16".to_string()];
+        // wrong grad size
+        assert!(co
+            .step_tiled(
+                &aio,
+                &stage,
+                &arena(),
+                &[good.as_slice(), bad.as_slice()],
+                &keys,
+                1,
+                1.0,
+                &hp,
+                1,
+                1024,
+                2
+            )
+            .is_err());
+        // tile_bytes = 0 is a caller bug on this driver
+        assert!(co
+            .step_tiled(
+                &aio,
+                &stage,
+                &arena(),
+                &[good.as_slice(), good.as_slice()],
+                &keys,
+                1,
+                1.0,
+                &hp,
+                1,
+                0,
+                2
+            )
+            .is_err());
+        // empty build + mixed dtypes
+        assert!(CoalescedOptim::build(eng.as_ref(), &[], 1024).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prop_coalesced_matches_step_across_random_shapes() {
+        use crate::prop_assert;
+        use crate::util::proptest::{check, Config};
+        check("optim-coalesced", Config { cases: 8, ..Default::default() }, |rng, size| {
+            let dtype = if rng.next_u64() % 2 == 0 {
+                StateDtype::F32
+            } else {
+                StateDtype::BF16
+            };
+            let case = rng.next_u64();
+            let (eng_a, dir_a) = engine(&format!("pa{case}"));
+            let (eng_c, dir_c) = engine(&format!("pc{case}"));
+            let hp = AdamParams { weight_decay: 0.005, ..Default::default() };
+            let n_groups = rng.range(1, 6);
+            let sizes: Vec<usize> = (0..n_groups)
+                .map(|_| rng.range(1, (size * 4).max(3)))
+                .collect();
+            let target = [512usize, 2048, 16384][rng.below(3)];
+            let tile = [256usize, 1000, 4096][rng.below(3)];
+            let seed = rng.next_u64();
+            let mut ra = crate::util::rng::Xoshiro256::new(seed);
+            let (states_a, _) = init_groups(&eng_a, &sizes, dtype, &mut ra);
+            let mut rc = crate::util::rng::Xoshiro256::new(seed);
+            let (states_c, _) = init_groups(&eng_c, &sizes, dtype, &mut rc);
+            let eng_c: Arc<dyn NvmeEngine> = Arc::new(eng_c);
+            let aio = AsyncEngine::new(Arc::clone(&eng_c), 2);
+            let stage = StageExecutor::new(1);
+            let co = CoalescedOptim::build(eng_c.as_ref(), &states_c, target)
+                .map_err(|e| e.to_string())?;
+            let keys: Vec<String> =
+                (0..sizes.len()).map(|g| format!("g{g}/fp16")).collect();
+            for t in 1..=2u64 {
+                let grads: Vec<Vec<f32>> = sizes
+                    .iter()
+                    .map(|n| (0..*n).map(|_| rng.normal() as f32).collect())
+                    .collect();
+                let grad_refs: Vec<&[f32]> =
+                    grads.iter().map(|g| g.as_slice()).collect();
+                for (g, st) in states_a.iter().enumerate() {
+                    st.step(&eng_a, &grads[g], t, 2.0, &hp, 1, &keys[g])
+                        .map_err(|e| e.to_string())?;
+                }
+                co.step_tiled(
+                    &aio, &stage, &arena(), &grad_refs, &keys, t, 2.0, &hp, 1, tile, 2,
+                )
+                .map_err(|e| e.to_string())?;
+            }
+            let es = dtype.bytes_per_elem();
+            for (g, n) in sizes.iter().enumerate() {
+                for suffix in ["master", "adam_m", "adam_v"] {
+                    let mut a = vec![0u8; n * es];
+                    let mut c = vec![0u8; n * es];
+                    eng_a
+                        .read(&format!("g{g}/{suffix}"), &mut a)
+                        .map_err(|e| e.to_string())?;
+                    co.read_member_state(eng_c.as_ref(), g, suffix, &mut c)
+                        .map_err(|e| e.to_string())?;
+                    prop_assert!(
+                        a == c,
+                        "{dtype:?} target={target} tile={tile} g{g}/{suffix} diverged (n={n})"
+                    );
+                }
+                let mut a = vec![0u8; n * 2];
+                let mut c = vec![0u8; n * 2];
+                eng_a.read(&format!("g{g}/fp16"), &mut a).map_err(|e| e.to_string())?;
+                eng_c.read(&format!("g{g}/fp16"), &mut c).map_err(|e| e.to_string())?;
+                prop_assert!(a == c, "{dtype:?} g{g}/fp16 diverged (n={n})");
+            }
+            std::fs::remove_dir_all(&dir_a).ok();
+            std::fs::remove_dir_all(&dir_c).ok();
+            Ok(())
+        });
+    }
+}

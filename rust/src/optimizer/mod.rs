@@ -15,17 +15,31 @@
 //!   optimizer I/O volume — Fig. 20 / Table VI.
 //!
 //! Residency and streaming live in [`states`]: the sequential
-//! reference loop, the whole-group double-buffered swap, and the
-//! staged-tile pipeline (`step_groups_tiled`) that caps peak pinned
-//! DRAM at `O(tile_bytes × depth)` independent of group size.  All
-//! three drive the kernels below and are bit-identical.
+//! reference loop, the whole-group double-buffered swap (its fetch
+//! staging rides pinned `Cat::OptimBuf` leases, degrading to owned
+//! vectors under budget refusal), and the staged-tile pipeline
+//! (`step_groups_tiled`) that caps peak pinned DRAM at `O(tile_bytes ×
+//! depth)` independent of group size.  [`coalesce`] adds the layout
+//! layer above them: many small per-tensor groups concatenate into a
+//! bounded number of *super-groups* (a stable, persisted key →
+//! (super-group, offset) mapping), so the tile pipeline drives long
+//! contiguous ranged I/O instead of one sub-tile submission burst per
+//! tensor — the per-step NVMe submission count drops from
+//! `O(members)` to `O(state bytes / tile_bytes)` plus one fp16
+//! scatter write per member.  All drivers produce bit-identical state.
+//!
+//! The tile size and pipeline depth these drivers take are *policy*
+//! inputs: static from `TrainSpec` by default, retuned each step by
+//! [`crate::train::PipelineGovernor`] when the governor is enabled.
 
+pub mod coalesce;
 pub mod states;
 
+pub use coalesce::{CoalescedLayout, CoalescedOptim, MemberSpan};
 pub use states::{
     flush_groups, step_groups_pipelined, step_groups_tiled, Fp16Staging, OptimState,
-    PipelineStats, StateBufs, StateDtype, StateFetch, StateScratch, StateWriteback,
-    TILE_PIPELINE_DEPTH,
+    PipelineStats, StateBuf, StateBufs, StateDtype, StateFetch, StateScratch,
+    StateWriteback, TILE_PIPELINE_DEPTH,
 };
 
 use crate::util::par;

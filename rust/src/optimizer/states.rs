@@ -75,7 +75,7 @@ impl StateDtype {
 /// drivers share — sequential, whole-group pipelined, tiled, and the
 /// tiled degradation paths — kept in one place so the bit-identity
 /// guarantee has a single implementation.
-fn master_to_fp16(dtype: StateDtype, master: &[u8], fp16: &mut [u8]) {
+pub(super) fn master_to_fp16(dtype: StateDtype, master: &[u8], fp16: &mut [u8]) {
     match dtype {
         StateDtype::F32 => crate::dtype::f32_le_bytes_to_f16_bytes(master, fp16),
         StateDtype::BF16 => {
@@ -192,24 +192,38 @@ impl OptimState {
 
     // ---- split-phase surface for the double-buffered driver ----
 
-    /// Queue async reads for this group's (master, m, v), reusing
-    /// buffers from `scratch` when available.
+    /// Queue async reads for this group's (master, m, v).  Each stream
+    /// stages in a pinned `Cat::OptimBuf` lease when the arena grants
+    /// one — so whole-group fetch staging sits on the pinned ledger and
+    /// inside the budget, exactly like the tile driver's windows — and
+    /// degrades to a recycled owned vector otherwise (bit-identical
+    /// data either way, never an abort).
     pub fn submit_fetch(&self, aio: &AsyncEngine, scratch: &StateScratch) -> StateFetch {
         let [k_p, k_m, k_v] = state_keys(&self.group);
         let n = self.numel;
-        let inner = match self.dtype {
-            StateDtype::F32 => StateFetchInner::F32([
-                aio.submit_read_f32(k_p, scratch.take_f32(n)),
-                aio.submit_read_f32(k_m, scratch.take_f32(n)),
-                aio.submit_read_f32(k_v, scratch.take_f32(n)),
-            ]),
-            StateDtype::BF16 => StateFetchInner::Bf16([
-                aio.submit_read(k_p, scratch.take_bytes(n * 2)),
-                aio.submit_read(k_m, scratch.take_bytes(n * 2)),
-                aio.submit_read(k_v, scratch.take_bytes(n * 2)),
-            ]),
+        let bytes = n * self.dtype.bytes_per_elem();
+        let stream = |key: String| -> StateBufHandle {
+            match scratch.lease(bytes) {
+                // lease tier: a ranged read over the full span fills
+                // the pinned window in place
+                Some(l) => StateBufHandle::Lease(aio.submit_read_at_lease(key, 0, l)),
+                // owned tier: recycled scratch vector, typed by dtype
+                None => match self.dtype {
+                    StateDtype::F32 => {
+                        StateBufHandle::F32(aio.submit_read_f32(key, scratch.take_f32(n)))
+                    }
+                    StateDtype::BF16 => {
+                        StateBufHandle::Bytes(aio.submit_read(key, scratch.take_bytes(bytes)))
+                    }
+                },
+            }
         };
-        StateFetch { inner }
+        StateFetch {
+            dtype: self.dtype,
+            p: stream(k_p),
+            m: stream(k_m),
+            v: stream(k_v),
+        }
     }
 
     /// Run the AdamW arithmetic on fetched buffers in place and
@@ -236,26 +250,40 @@ impl OptimState {
             fp16.len(),
             n * 2
         );
-        match bufs {
-            StateBufs::F32 { p, m, v } => {
-                anyhow::ensure!(
-                    p.len() == n && m.len() == n && v.len() == n,
-                    "state buffer size mismatch for '{}'",
-                    self.group
+        anyhow::ensure!(bufs.dtype == self.dtype, "state dtype mismatch for '{}'", self.group);
+        let want = n * self.dtype.bytes_per_elem();
+        anyhow::ensure!(
+            bufs.p.byte_len() == want && bufs.m.byte_len() == want && bufs.v.byte_len() == want,
+            "state buffer size mismatch for '{}'",
+            self.group
+        );
+        match self.dtype {
+            StateDtype::F32 => {
+                super::adam_step_f32(
+                    bufs.p.as_f32_mut(),
+                    grads,
+                    bufs.m.as_f32_mut(),
+                    bufs.v.as_f32_mut(),
+                    step,
+                    grad_scale,
+                    hp,
+                    threads,
                 );
-                super::adam_step_f32(p, grads, m, v, step, grad_scale, hp, threads);
-                master_to_fp16(StateDtype::F32, crate::dtype::f32s_as_bytes(p), fp16);
             }
-            StateBufs::Bf16 { p, m, v } => {
-                anyhow::ensure!(
-                    p.len() == n * 2 && m.len() == n * 2 && v.len() == n * 2,
-                    "state buffer size mismatch for '{}'",
-                    self.group
+            StateDtype::BF16 => {
+                super::adam_step_bf16(
+                    bufs.p.as_bytes_mut(),
+                    grads,
+                    bufs.m.as_bytes_mut(),
+                    bufs.v.as_bytes_mut(),
+                    step,
+                    grad_scale,
+                    hp,
+                    threads,
                 );
-                super::adam_step_bf16(p, grads, m, v, step, grad_scale, hp, threads);
-                master_to_fp16(StateDtype::BF16, p, fp16);
             }
         }
+        master_to_fp16(self.dtype, bufs.p.as_bytes(), fp16);
         Ok(())
     }
 
@@ -272,16 +300,13 @@ impl OptimState {
         let [k_p, k_m, k_v] = state_keys(&self.group);
         let mut wb =
             StateWriteback { f32s: Vec::new(), bytes: Vec::new(), leases: Vec::new() };
-        match bufs {
-            StateBufs::F32 { p, m, v } => {
-                wb.f32s.push(aio.submit_write_f32(k_p, p));
-                wb.f32s.push(aio.submit_write_f32(k_m, m));
-                wb.f32s.push(aio.submit_write_f32(k_v, v));
-            }
-            StateBufs::Bf16 { p, m, v } => {
-                wb.bytes.push(aio.submit_write(k_p, p));
-                wb.bytes.push(aio.submit_write(k_m, m));
-                wb.bytes.push(aio.submit_write(k_v, v));
+        for (key, buf) in [(k_p, bufs.p), (k_m, bufs.m), (k_v, bufs.v)] {
+            match buf {
+                // lease tier: a ranged write over the full span,
+                // straight out of the pinned window
+                StateBuf::Lease(l) => wb.leases.push(aio.submit_write_at_lease(key, 0, l)),
+                StateBuf::F32(v) => wb.f32s.push(aio.submit_write_f32(key, v)),
+                StateBuf::Bytes(v) => wb.bytes.push(aio.submit_write(key, v)),
             }
         }
         match fp16 {
@@ -328,36 +353,89 @@ impl Fp16Staging {
     }
 }
 
-/// One group's state buffers, typed by storage precision.
-pub enum StateBufs {
-    F32 { p: Vec<f32>, m: Vec<f32>, v: Vec<f32> },
-    Bf16 { p: Vec<u8>, m: Vec<u8>, v: Vec<u8> },
+/// One staged whole-group state stream (master, m, or v): a pinned
+/// `Cat::OptimBuf` lease on the budget-ledgered tier, a recycled owned
+/// vector (typed by storage dtype) when the arena degraded the fetch.
+pub enum StateBuf {
+    Lease(Lease),
+    F32(Vec<f32>),
+    Bytes(Vec<u8>),
 }
 
-enum StateFetchInner {
-    F32([IoHandle<Vec<f32>>; 3]),
-    Bf16([IoHandle<Vec<u8>>; 3]),
+impl StateBuf {
+    fn byte_len(&self) -> usize {
+        match self {
+            StateBuf::Lease(l) => l.as_slice().len(),
+            StateBuf::F32(v) => v.len() * 4,
+            StateBuf::Bytes(v) => v.len(),
+        }
+    }
+
+    fn as_bytes(&self) -> &[u8] {
+        match self {
+            StateBuf::Lease(l) => l.as_slice(),
+            StateBuf::F32(v) => crate::dtype::f32s_as_bytes(v),
+            StateBuf::Bytes(v) => v,
+        }
+    }
+
+    fn as_bytes_mut(&mut self) -> &mut [u8] {
+        match self {
+            StateBuf::Lease(l) => l.as_mut_slice(),
+            StateBuf::F32(v) => crate::dtype::f32s_as_bytes_mut(v),
+            StateBuf::Bytes(v) => v,
+        }
+    }
+
+    fn as_f32_mut(&mut self) -> &mut [f32] {
+        match self {
+            StateBuf::Lease(l) => l.as_f32_mut(),
+            StateBuf::F32(v) => v,
+            StateBuf::Bytes(_) => unreachable!("bf16 stream driven through the f32 kernel"),
+        }
+    }
+}
+
+/// One group's staged state buffers (master, m, v).
+pub struct StateBufs {
+    dtype: StateDtype,
+    p: StateBuf,
+    m: StateBuf,
+    v: StateBuf,
+}
+
+enum StateBufHandle {
+    Lease(IoHandle<Lease>),
+    F32(IoHandle<Vec<f32>>),
+    Bytes(IoHandle<Vec<u8>>),
+}
+
+impl StateBufHandle {
+    fn wait(self) -> anyhow::Result<StateBuf> {
+        Ok(match self {
+            StateBufHandle::Lease(h) => StateBuf::Lease(h.wait()?),
+            StateBufHandle::F32(h) => StateBuf::F32(h.wait()?),
+            StateBufHandle::Bytes(h) => StateBuf::Bytes(h.wait()?),
+        })
+    }
 }
 
 /// In-flight prefetch of one group's three state tensors.
 pub struct StateFetch {
-    inner: StateFetchInner,
+    dtype: StateDtype,
+    p: StateBufHandle,
+    m: StateBufHandle,
+    v: StateBufHandle,
 }
 
 impl StateFetch {
     pub fn wait(self) -> anyhow::Result<StateBufs> {
-        match self.inner {
-            StateFetchInner::F32([hp, hm, hv]) => Ok(StateBufs::F32 {
-                p: hp.wait()?,
-                m: hm.wait()?,
-                v: hv.wait()?,
-            }),
-            StateFetchInner::Bf16([hp, hm, hv]) => Ok(StateBufs::Bf16 {
-                p: hp.wait()?,
-                m: hm.wait()?,
-                v: hv.wait()?,
-            }),
-        }
+        Ok(StateBufs {
+            dtype: self.dtype,
+            p: self.p.wait()?,
+            m: self.m.wait()?,
+            v: self.v.wait()?,
+        })
     }
 }
 
@@ -386,11 +464,12 @@ impl StateWriteback {
     }
 }
 
-/// Staging-buffer recycler for the double-buffered swap: a facade over
-/// the arena's scratch tier under `Cat::OptimBuf`, so the two
-/// generations of (master, m, v) buffers alive in steady state sit on
-/// the shared ledger and inside the pinned budget — and survive across
-/// steps (the arena pool outlives any one `step_groups_pipelined`
+/// Staging tier for the double-buffered swap, under `Cat::OptimBuf`:
+/// vends pinned leases first (the two generations of (master, m, v)
+/// windows alive in steady state are then real ledgered pinned bytes
+/// inside the budget, like the tile driver's windows) and recycled
+/// owned vectors on refusal — and survives across steps (the arena
+/// pool and free extents outlive any one `step_groups_pipelined`
 /// call).
 pub struct StateScratch {
     arena: Arc<PinnedArena>,
@@ -1005,12 +1084,18 @@ mod tests {
                 )
                 .unwrap();
             }
-            // staging buffers recycled through the arena between
-            // generations (and sit on its ledger while idle)
-            match dtype {
-                StateDtype::F32 => assert!(arena.pooled_f32(Cat::OptimBuf) > 0),
-                StateDtype::BF16 => assert!(arena.pooled_byte_vecs(Cat::OptimBuf) > 0),
-            }
+            // fetch staging rode pinned leases (every byte on the
+            // ledger while staged), every lease returned, and extents
+            // recycled across generations — no owned vectors needed
+            let st = arena.stats();
+            assert_eq!(st.requested_bytes, 0, "{dtype:?}: staging leases leaked");
+            assert!(st.leases > 0, "{dtype:?}: fetch staging never leased");
+            assert!(st.recycled > 0, "{dtype:?}: staging extents never recycled");
+            assert_eq!(
+                arena.pooled_f32(Cat::OptimBuf) + arena.pooled_byte_vecs(Cat::OptimBuf),
+                0,
+                "{dtype:?}: unbounded arena degraded staging to owned vectors"
+            );
             // every stored artifact must match byte-for-byte
             for (g, n) in sizes.iter().enumerate() {
                 let es = dtype.bytes_per_elem();
@@ -1029,6 +1114,66 @@ mod tests {
                 eng_b.read(&key, &mut b).unwrap();
                 assert_eq!(a, b, "{dtype:?} {key} diverged");
             }
+            std::fs::remove_dir_all(&dir_a).ok();
+            std::fs::remove_dir_all(&dir_b).ok();
+        }
+    }
+
+    #[test]
+    fn whole_group_staging_degrades_to_owned_under_budget_and_stays_identical() {
+        // a starved arena refuses every fetch-staging lease: the
+        // whole-group driver must fall back to recycled owned vectors,
+        // never abort, and the trajectory stays bit-identical
+        for dtype in [StateDtype::F32, StateDtype::BF16] {
+            let (eng_a, dir_a) = engine(&format!("degwg-seq-{dtype:?}"));
+            let (eng_b, dir_b) = engine(&format!("degwg-pipe-{dtype:?}"));
+            let hp = AdamParams { weight_decay: 0.01, ..Default::default() };
+            let mut rng = crate::util::rng::Xoshiro256::new(21);
+            let n = 900usize;
+            let p0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let st_a = OptimState::init(&eng_a, "g0", &p0, dtype).unwrap();
+            let st_b = OptimState::init(&eng_b, "g0", &p0, dtype).unwrap();
+            let eng_b: Arc<dyn crate::ssd::NvmeEngine> = Arc::new(eng_b);
+            let aio = AsyncEngine::new(Arc::clone(&eng_b), 2);
+            let tracker = Arc::new(crate::pinned::MemoryTracker::new());
+            // below one page-padded lease (n*es rounds up to >= 4096),
+            // but big enough that the owned fallback vectors can still
+            // pool-recycle through the arena afterwards
+            let starved = PinnedArena::new(
+                Arc::new(crate::pinned::AlignedAllocator::new(Mode::Real, tracker)),
+                crate::pinned::ArenaConfig {
+                    budget_bytes: Some(4000),
+                    ..Default::default()
+                },
+            );
+            for t in 1..=3u64 {
+                let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                st_a.step(&eng_a, &g, t, 1.0, &hp, 1, "g0/fp16").unwrap();
+                step_groups_pipelined(
+                    &aio,
+                    &starved,
+                    std::slice::from_ref(&st_b),
+                    &[g.as_slice()],
+                    &["g0/fp16".to_string()],
+                    t,
+                    1.0,
+                    &hp,
+                    1,
+                )
+                .unwrap();
+            }
+            // the owned tier recycled its vectors through the arena pool
+            let pooled = starved.pooled_f32(Cat::OptimBuf)
+                + starved.pooled_byte_vecs(Cat::OptimBuf);
+            assert!(pooled > 0, "{dtype:?}: degraded staging never pooled");
+            let es = dtype.bytes_per_elem();
+            assert_engines_identical(
+                &eng_a,
+                eng_b.as_ref(),
+                &[n],
+                es,
+                &format!("{dtype:?} degraded whole-group"),
+            );
             std::fs::remove_dir_all(&dir_a).ok();
             std::fs::remove_dir_all(&dir_b).ok();
         }

@@ -240,6 +240,15 @@ impl IoSnapshot {
     pub fn total_bytes(&self) -> u64 {
         self.bytes_read + self.bytes_written
     }
+
+    /// Total NVMe submissions (read + write calls reaching the
+    /// engine).  Deltas of this counter are the per-step submission
+    /// count the optimizer's group-coalescing pass exists to reduce:
+    /// many small per-tensor transfers and few long ranged ones move
+    /// the same bytes but very different submission counts.
+    pub fn ops(&self) -> u64 {
+        self.reads + self.writes
+    }
 }
 
 /// The interface the swapper / optimizer drive. Implementations must be

@@ -456,6 +456,37 @@ impl AsyncEngine {
         handle
     }
 
+    /// Async ranged write of a *sub-range* of a shared pinned lease
+    /// into byte `offset` of `key`'s (already reserved) value: bytes
+    /// `src_off .. src_off + len` of `buf` land at `offset`.  One
+    /// frozen lease can back many concurrent ranged writes to
+    /// different keys — the coalesced optimizer's fp16 scatter, where
+    /// a single tile's downconvert window fans out to every member
+    /// tensor's compute-weight stream it overlaps.
+    pub fn submit_write_at_lease_view(
+        &self,
+        key: String,
+        offset: usize,
+        buf: Arc<Lease>,
+        src_off: usize,
+        len: usize,
+    ) -> IoHandle<Arc<Lease>> {
+        let (completer, handle) = IoHandle::pair();
+        let eng = Arc::clone(&self.inner);
+        self.exec.submit(move || {
+            let res = if src_off + len <= buf.as_slice().len() {
+                eng.write_at(&key, offset, &buf.as_slice()[src_off..src_off + len])
+            } else {
+                Err(anyhow::anyhow!(
+                    "lease-view write past the lease ({src_off}+{len} > {})",
+                    buf.as_slice().len()
+                ))
+            };
+            completer.complete(res.map(move |()| buf));
+        });
+        handle
+    }
+
     /// Async ranged write of one tile from a pinned lease into byte
     /// `offset` of `key`'s (already reserved) value.
     pub fn submit_write_at_lease(
@@ -701,6 +732,62 @@ mod tests {
             );
         }
         assert_eq!(arena.stats().requested_bytes, 0, "all leases returned");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shared_lease_view_writes_scatter_one_lease_to_many_keys() {
+        use crate::bufpool::test_util::test_arena;
+        use crate::pinned::{Cat, Mode};
+
+        let dir = std::env::temp_dir().join(format!("ma-aiov-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let inner: Arc<dyn NvmeEngine> =
+            Arc::new(DirectEngine::new(&dir, 2, 1 << 24, 1).unwrap());
+        let aio = AsyncEngine::new(Arc::clone(&inner), 3);
+        let arena = test_arena(Mode::Real);
+
+        // one frozen lease holds 3 members' worth of bytes; each member
+        // key receives its sub-range at its own destination offset
+        let spans = [(0usize, 100usize), (100, 57), (157, 99)];
+        let total = 256usize;
+        let mut l = arena.lease(total, Cat::SwapBuf).unwrap();
+        for (i, b) in l.as_mut_slice().iter_mut().enumerate() {
+            *b = (i % 251) as u8;
+        }
+        let shared = l.into_shared();
+        let mut handles = Vec::new();
+        for (m, (src, len)) in spans.iter().enumerate() {
+            let key = format!("m{m}");
+            aio.reserve(&key, len + 8).unwrap();
+            handles.push(aio.submit_write_at_lease_view(
+                key,
+                8, // member-side destination offset
+                Arc::clone(&shared),
+                *src,
+                *len,
+            ));
+        }
+        for h in handles {
+            h.wait().unwrap();
+        }
+        drop(shared);
+        for (m, (src, len)) in spans.iter().enumerate() {
+            let mut out = vec![0u8; *len];
+            aio.read_at(&format!("m{m}"), 8, &mut out).unwrap();
+            assert!(
+                out.iter().enumerate().all(|(i, &b)| b == ((src + i) % 251) as u8),
+                "member {m} corrupted"
+            );
+        }
+        // an out-of-lease view surfaces as an error, not UB or a hang
+        let l = arena.lease(16, Cat::SwapBuf).unwrap().into_shared();
+        aio.reserve("big", 64).unwrap();
+        assert!(aio
+            .submit_write_at_lease_view("big".into(), 0, l, 8, 16)
+            .wait()
+            .is_err());
+        assert_eq!(arena.stats().requested_bytes, 0, "leases leaked");
         std::fs::remove_dir_all(&dir).ok();
     }
 

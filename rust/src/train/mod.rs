@@ -8,11 +8,26 @@
 //! overflow check gates a dynamic loss scaler, and the CPU Adam swaps
 //! state subgroups through the NVMe engine — ZeRO-Infinity's full data
 //! flow, with MemAscend's optimizations toggleable per component.
+//!
+//! The pipeline's window knobs (optimizer tile size, tile-pipeline
+//! depth, swapper prefetch depth) are owned by a [`PipelineTuning`]:
+//! static from `TrainSpec` by default, retuned once per step by the
+//! pressure-adaptive [`PipelineGovernor`] ([`governor`]) when
+//! `TrainSpec::governor` is set — shrinking windows when the pinned
+//! arena degrades the zero-copy or tiled paths
+//! (`host_copy_bytes`/`degraded_tiles` > 0), deepening them when the
+//! step stalls on I/O with idle queues.  With
+//! `TrainSpec::optim_coalesce_bytes` set, the per-tensor optimizer
+//! groups coalesce into super-group streams
+//! ([`crate::optimizer::CoalescedOptim`]) so each tile drives one long
+//! ranged submission instead of a per-tensor burst.
 
 pub mod data;
+pub mod governor;
 pub mod trainer;
 pub mod weights;
 
 pub use data::Corpus;
+pub use governor::{GovernorConfig, GovernorSample, GovernorStats, PipelineGovernor, PipelineTuning};
 pub use trainer::{TrainOpts, Trainer};
 pub use weights::init_weights;

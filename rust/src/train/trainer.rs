@@ -18,7 +18,22 @@
 //!    (`TrainSpec::optim_tile_bytes` fixed-byte tiles, conversions on
 //!    the compute-side stage pool, peak pinned staging independent of
 //!    group size) or the whole-group double-buffer when the tile knob
-//!    is 0; sequential otherwise.  All paths are bit-identical.
+//!    is 0; sequential otherwise.  With
+//!    `TrainSpec::optim_coalesce_bytes` set, the per-tensor groups
+//!    coalesce into super-group streams first
+//!    ([`crate::optimizer::CoalescedOptim`]) so each tile is one long
+//!    ranged submission instead of a per-tensor burst.  All paths are
+//!    bit-identical.
+//!
+//! The pipeline's window knobs — optimizer tile size, tile depth, and
+//! the swapper's prefetch depth — live in a [`PipelineTuning`]: the
+//! spec's static values by default, retuned after every step by the
+//! pressure-adaptive [`PipelineGovernor`] when `TrainSpec::governor`
+//! is on (shrink on `host_copy_bytes`/`degraded_tiles` pressure, grow
+//! on stalls with idle queues and budget headroom — see
+//! [`super::governor`]).  Since every retune only resizes disjoint-
+//! range I/O windows, governed and static runs are bit-identical in
+//! results; only speed and pinned footprint differ.
 //!
 //! Weight fetches ride the swapper's windowed pipeline and arrive as
 //! **lease-backed views** ([`TensorBuf`]): the f16→f32 decode lands in
@@ -51,10 +66,11 @@ use crate::config::{ModelSpec, TrainSpec};
 use crate::metrics::{RunReport, StepMetrics};
 use crate::offload::SpillingActivationStore;
 use crate::offload::{F32Scratch, GradFlatBuffer, LossScaler, OffloadEngine, Swapper};
-use crate::optimizer::{AdamParams, StateDtype};
+use crate::optimizer::{AdamParams, CoalescedOptim, StateDtype};
 use crate::runtime::{Runtime, TensorBuf, ValueRef};
 use crate::tensors::TensorDesc;
 use crate::train::data::Corpus;
+use crate::train::governor::{GovernorConfig, GovernorSample, PipelineGovernor, PipelineTuning};
 use crate::train::weights::{fp16_key, init_weights, ModelState};
 
 #[derive(Debug, Clone)]
@@ -89,6 +105,16 @@ pub struct Trainer {
     block_names: Vec<String>,
     /// Recycled f32 buffers shared with the swapper pipeline.
     scratch: Arc<F32Scratch>,
+    /// The pipeline window knobs this step runs with: the spec's
+    /// static values, or the governor's latest retune.
+    tuning: PipelineTuning,
+    /// Pressure-adaptive retuning loop (`TrainSpec::governor`); only
+    /// engages on the tiled optimizer path.
+    governor: Option<PipelineGovernor>,
+    /// Super-group coalesced optimizer streams
+    /// (`TrainSpec::optim_coalesce_bytes`); `None` = per-tensor
+    /// groups, today's layout.
+    coalesced: Option<CoalescedOptim>,
 }
 
 impl Trainer {
@@ -134,6 +160,43 @@ impl Trainer {
             engine.arena.clone(),
             engine.copy_meter.clone(),
         ));
+        // the governor and the coalescer both ride the staged-tile
+        // optimizer; neither engages on the whole-group or sequential
+        // paths (the paper-parity configurations stay byte-identical)
+        let tiled = train.io_workers > 0 && train.optim_tile_bytes > 0;
+        let tuning = PipelineTuning {
+            optim_tile_bytes: train.optim_tile_bytes,
+            tile_depth: train.optim_tile_depth.max(1),
+            prefetch_depth: train.prefetch_depth.max(1),
+        };
+        let governor = (train.governor && tiled).then(|| {
+            // widen the default bounds to include the spec's starting
+            // point, so enabling the governor never silently rewrites
+            // a configured knob — adaptation starts exactly where the
+            // static configuration would have run
+            let d = GovernorConfig::default();
+            let cfg = GovernorConfig {
+                min_tile_bytes: d.min_tile_bytes.min(tuning.optim_tile_bytes),
+                max_tile_bytes: d.max_tile_bytes.max(tuning.optim_tile_bytes),
+                max_tile_depth: d.max_tile_depth.max(tuning.tile_depth),
+                max_prefetch_depth: d.max_prefetch_depth.max(tuning.prefetch_depth),
+                ..d
+            };
+            PipelineGovernor::new(cfg, tuning)
+        });
+        debug_assert!(
+            governor.as_ref().map_or(tuning, |g| g.tuning()) == tuning,
+            "governor bounds must admit the spec's starting point"
+        );
+        let coalesced = (tiled && train.optim_coalesce_bytes > 0)
+            .then(|| {
+                CoalescedOptim::build(
+                    engine.nvme.as_ref(),
+                    &state.offloaded,
+                    train.optim_coalesce_bytes,
+                )
+            })
+            .transpose()?;
         Ok(Self {
             rt,
             engine,
@@ -148,7 +211,16 @@ impl Trainer {
             fwd_plan,
             block_names,
             scratch,
+            tuning,
+            governor,
+            coalesced,
         })
+    }
+
+    /// The pipeline window knobs the next step will run with (the
+    /// governor's latest retune, or the spec's static values).
+    pub fn tuning(&self) -> PipelineTuning {
+        self.tuning
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -185,7 +257,7 @@ impl Trainer {
                 self.scratch.clone(),
                 self.fwd_plan.clone(),
                 |t| fp16_key(&t.name),
-                self.train.prefetch_depth.max(1),
+                self.tuning.prefetch_depth,
             );
             let table = sw.next()?; // embed — a lease-backed view
             let args = [ValueRef::I32(&tokens), table.data.as_value()];
@@ -257,7 +329,7 @@ impl Trainer {
                 self.scratch.clone(),
                 bwd_plan,
                 |t| fp16_key(&t.name),
-                self.train.prefetch_depth.max(1),
+                self.tuning.prefetch_depth,
             );
             for layer in (0..l).rev() {
                 let mut ws: HashMap<String, TensorBuf> = HashMap::new();
@@ -312,6 +384,7 @@ impl Trainer {
         // ---- optimizer: SSD-swapped AdamW per tensor group ----
         let t_opt = Instant::now();
         let mut optim_tiles = 0u64;
+        let mut degraded_tiles = 0u64;
         if !skip {
             self.applied_steps += 1;
             let t = self.applied_steps;
@@ -319,8 +392,11 @@ impl Trainer {
             if self.train.io_workers > 0 {
                 // staged-tile pipeline (fixed-byte tiles, conversions
                 // on the compute-side stage pool, peak pinned staging
-                // independent of group size); optim_tile_bytes = 0
-                // degrades to the whole-group double-buffer inside
+                // independent of group size), over coalesced
+                // super-group streams when configured; tile size and
+                // depth come from the governed tuning.
+                // optim_tile_bytes = 0 degrades to the whole-group
+                // double-buffer inside
                 let aio = self.engine.async_io();
                 let grads: Vec<&[f32]> = self
                     .state
@@ -334,22 +410,39 @@ impl Trainer {
                     .iter()
                     .map(|st| fp16_key(&st.group))
                     .collect();
-                let stats = crate::optimizer::step_groups_tiled(
-                    &aio,
-                    &self.engine.stage,
-                    &self.engine.arena,
-                    &self.state.offloaded,
-                    &grads,
-                    &keys,
-                    t,
-                    unscale,
-                    &self.hp,
-                    self.engine.threads,
-                    self.train.optim_tile_bytes,
-                    crate::optimizer::TILE_PIPELINE_DEPTH,
-                )?;
+                let stats = if let Some(co) = &self.coalesced {
+                    co.step_tiled(
+                        &aio,
+                        &self.engine.stage,
+                        &self.engine.arena,
+                        &grads,
+                        &keys,
+                        t,
+                        unscale,
+                        &self.hp,
+                        self.engine.threads,
+                        self.tuning.optim_tile_bytes,
+                        self.tuning.tile_depth,
+                    )?
+                } else {
+                    crate::optimizer::step_groups_tiled(
+                        &aio,
+                        &self.engine.stage,
+                        &self.engine.arena,
+                        &self.state.offloaded,
+                        &grads,
+                        &keys,
+                        t,
+                        unscale,
+                        &self.hp,
+                        self.engine.threads,
+                        self.tuning.optim_tile_bytes,
+                        self.tuning.tile_depth,
+                    )?
+                };
                 io_wait_secs += stats.wait_secs;
                 optim_tiles = stats.tiles;
+                degraded_tiles = stats.degraded_tiles;
             } else {
                 // sequential reference: every optimizer byte is
                 // foreground stall
@@ -394,7 +487,7 @@ impl Trainer {
         // when the queue layer overlaps transfers
         let io_secs = (io_after.busy_ns - io_before.busy_ns) as f64 / 1e9;
         let step_secs = t_step.elapsed().as_secs_f64();
-        Ok(StepMetrics {
+        let m = StepMetrics {
             step: step_idx,
             loss: loss_sum / ranks as f64,
             loss_scale: scale,
@@ -407,8 +500,28 @@ impl Trainer {
             optim_secs,
             io_wait_secs,
             optim_tiles,
+            degraded_tiles,
+            nvme_submissions: io_after.ops() - io_before.ops(),
+            optim_tile_bytes: self.tuning.optim_tile_bytes,
+            tile_depth: self.tuning.tile_depth,
+            prefetch_depth: self.tuning.prefetch_depth,
             host_copy_bytes: self.engine.copy_meter.bytes() - copies_before,
-        })
+        };
+        // close the feedback loop: the governor sees exactly what the
+        // step report says, plus the arena's reserved/budget state
+        if let Some(gov) = &mut self.governor {
+            let arena_stats = self.engine.arena.stats();
+            self.tuning = gov.observe(&GovernorSample {
+                host_copy_bytes: m.host_copy_bytes,
+                degraded_tiles: m.degraded_tiles,
+                io_wait_secs: m.io_wait_secs,
+                io_busy_secs: m.io_secs,
+                step_secs: m.step_secs,
+                arena_reserved: arena_stats.reserved_bytes,
+                arena_budget: self.engine.arena.budget_bytes(),
+            });
+        }
+        Ok(m)
     }
 
     /// Build one block stage's argument list entirely from borrows:
@@ -461,11 +574,15 @@ impl Trainer {
     pub fn drain(&self) -> anyhow::Result<()> {
         let keys: Vec<String> =
             self.state.offloaded.iter().map(|st| fp16_key(&st.group)).collect();
-        crate::optimizer::flush_groups(
-            self.engine.nvme.as_ref(),
-            &self.state.offloaded,
-            &keys,
-        )
+        match &self.coalesced {
+            // coalesced runs: state lives in the super-group streams
+            Some(co) => co.flush(self.engine.nvme.as_ref(), &keys),
+            None => crate::optimizer::flush_groups(
+                self.engine.nvme.as_ref(),
+                &self.state.offloaded,
+                &keys,
+            ),
+        }
     }
 
     /// Run `opts.steps` steps, returning the full report.
