@@ -90,6 +90,9 @@ fn metrics(io_secs: f64, io_wait_secs: f64, step_secs: f64) -> StepMetrics {
         tile_depth: 0,
         prefetch_depth: 0,
         host_copy_bytes: 0,
+        ckpt_secs: 0.0,
+        io_retries: 0,
+        journal_epoch: 0,
     }
 }
 

@@ -1,0 +1,413 @@
+//! Checkpoint/recovery bench: cadence overhead + crash recovery.
+//!
+//! Three experiments over the journaled checkpoint subsystem, all at
+//! the optimizer + journal level (no AOT artifacts needed, so the full
+//! bench runs on plain CI runners):
+//!
+//! 1. **Cadence overhead (report-only)** — the same step sequence run
+//!    with checkpointing off and with a commit every k steps.  A
+//!    checkpoint is flush barriers + one journal record, not a data
+//!    copy, so the tax should be a small fraction of step time; the
+//!    fraction is printed and stored in the JSON but not gated
+//!    (wall-clock on shared runners is noisy).
+//! 2. **Recovery bit-identity (CI-gated)** — run to step N/2 under
+//!    injected transient faults (absorbed by the bounded retry layer),
+//!    flush, commit, drop every handle, reopen the storage root cold,
+//!    replay the journal, rebuild the optimizer handles from metadata
+//!    alone, and continue to step N.  Every stored stream
+//!    (master/m/v/fp16) must be byte-identical to an uninterrupted
+//!    fault-free run.
+//! 3. **Torn-commit rollback (CI-gated)** — tear the newest journal
+//!    slot with same-length garbage; a cold reload must fall back to
+//!    the previous epoch and its key set must still validate.
+//!
+//! Emits `bench_out/BENCH_recovery.json`.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use memascend::ckpt::{CkptState, Journal};
+use memascend::optimizer::states::state_keys;
+use memascend::optimizer::{
+    flush_groups, step_groups_tiled, AdamParams, OptimState, StateDtype,
+};
+use memascend::pinned::{
+    AlignedAllocator, ArenaConfig, MemoryTracker, Mode, PinnedArena,
+};
+use memascend::ssd::{
+    AsyncEngine, DirectEngine, FaultyEngine, NvmeEngine, OpMask, RetryEngine,
+    RetryPolicy,
+};
+use memascend::util::bench::Table;
+use memascend::util::json::Json;
+use memascend::util::rng::Xoshiro256;
+use memascend::util::stage::StageExecutor;
+
+const SIZES: [usize; 3] = [200_000, 120_000, 60_000];
+const TILE_BYTES: usize = 64 << 10;
+const DEPTH: usize = 2;
+const STEPS: u64 = 12;
+const CKPT_EVERY: u64 = 2;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("ma-brec-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn arena() -> Arc<PinnedArena> {
+    PinnedArena::new(
+        Arc::new(AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()))),
+        ArenaConfig::default(),
+    )
+}
+
+fn direct(dir: &std::path::Path) -> Arc<DirectEngine> {
+    Arc::new(DirectEngine::new(dir, 2, 1 << 26, 1).unwrap())
+}
+
+/// Deterministic per-step gradients so every leg sees the same data.
+fn grads_for(step: u64) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::new(0xB0B ^ step);
+    SIZES
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+fn init_states(engine: &dyn NvmeEngine) -> Vec<OptimState> {
+    let mut rng = Xoshiro256::new(17);
+    SIZES
+        .iter()
+        .enumerate()
+        .map(|(g, &n)| {
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            OptimState::init(engine, &format!("g{g}"), &vals, StateDtype::F32).unwrap()
+        })
+        .collect()
+}
+
+fn fp16_keys(states: &[OptimState]) -> Vec<String> {
+    states.iter().map(|s| format!("{}/fp16", s.group)).collect()
+}
+
+fn one_step(
+    aio: &AsyncEngine,
+    stage: &StageExecutor,
+    arena: &Arc<PinnedArena>,
+    states: &[OptimState],
+    t: u64,
+) {
+    let hp = AdamParams { weight_decay: 0.01, ..Default::default() };
+    let grads = grads_for(t);
+    let gr: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    step_groups_tiled(
+        aio,
+        stage,
+        arena,
+        states,
+        &gr,
+        &fp16_keys(states),
+        t,
+        1.0,
+        &hp,
+        1,
+        TILE_BYTES,
+        DEPTH,
+    )
+    .unwrap();
+}
+
+/// Journal record naming every stored key of `states`.
+fn ckpt_state(epoch: u64, steps_done: u64, engine: &dyn NvmeEngine, states: &[OptimState]) -> CkptState {
+    let mut keys = Vec::new();
+    for st in states {
+        for k in state_keys(&st.group) {
+            keys.push((k.clone(), engine.len_of(&k).unwrap()));
+        }
+        let fk = format!("{}/fp16", st.group);
+        let len = engine.len_of(&fk).unwrap();
+        keys.push((fk, len));
+    }
+    CkptState {
+        epoch,
+        steps_done,
+        applied_steps: steps_done,
+        seed: 17,
+        model: "bench-recovery".into(),
+        dtype: "f32".into(),
+        corpus_rng: [1, 2, 3, 4],
+        scale: 1.0,
+        good_steps: 0,
+        overflows: 0,
+        growths: 0,
+        tile_bytes: TILE_BYTES,
+        tile_depth: DEPTH,
+        prefetch_depth: 1,
+        keys,
+        layout_digest: None,
+    }
+}
+
+/// All stored streams of every group, for identity checks.
+fn all_bytes(engine: &dyn NvmeEngine) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    for (g, &n) in SIZES.iter().enumerate() {
+        for (key, width) in [
+            (format!("g{g}/master"), 4usize),
+            (format!("g{g}/adam_m"), 4),
+            (format!("g{g}/adam_v"), 4),
+            (format!("g{g}/fp16"), 2),
+        ] {
+            let mut buf = vec![0u8; n * width];
+            engine.read(&key, &mut buf).unwrap();
+            out.push(buf);
+        }
+    }
+    out
+}
+
+struct CadenceRun {
+    step_secs: f64,
+    ckpt_secs: f64,
+    epochs: u64,
+}
+
+/// Experiment 1: N steps, checkpointing every `interval` steps
+/// (0 = off), timed.
+fn run_cadence(tag: &str, interval: u64) -> CadenceRun {
+    let dir = tmp(tag);
+    let eng: Arc<dyn NvmeEngine> = direct(&dir);
+    let states = init_states(eng.as_ref());
+    let aio = AsyncEngine::new(eng.clone(), 2);
+    let stage = StageExecutor::new(2);
+    let arena = arena();
+    let journal = Journal::new(eng.clone());
+    let mut step_secs = 0.0;
+    let mut ckpt_secs = 0.0;
+    let mut epochs = 0u64;
+    for t in 1..=STEPS {
+        let t0 = Instant::now();
+        one_step(&aio, &stage, &arena, &states, t);
+        step_secs += t0.elapsed().as_secs_f64();
+        if interval > 0 && t % interval == 0 {
+            let t0 = Instant::now();
+            flush_groups(eng.as_ref(), &states, &fp16_keys(&states)).unwrap();
+            epochs += 1;
+            journal.commit(&ckpt_state(epochs, t, eng.as_ref(), &states)).unwrap();
+            ckpt_secs += t0.elapsed().as_secs_f64();
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    CadenceRun { step_secs, ckpt_secs, epochs }
+}
+
+struct RecoveryResult {
+    identical: bool,
+    injected: u64,
+    retries: u64,
+    resumed_epoch: u64,
+}
+
+/// Experiment 2: kill-and-restart under transient faults vs an
+/// uninterrupted fault-free reference.
+fn run_recovery() -> RecoveryResult {
+    // uninterrupted reference
+    let dir_ref = tmp("rec-ref");
+    let eng_ref: Arc<dyn NvmeEngine> = direct(&dir_ref);
+    let st_ref = init_states(eng_ref.as_ref());
+    {
+        let aio = AsyncEngine::new(eng_ref.clone(), 2);
+        let stage = StageExecutor::new(2);
+        let arena = arena();
+        for t in 1..=STEPS {
+            one_step(&aio, &stage, &arena, &st_ref, t);
+        }
+    }
+    flush_groups(eng_ref.as_ref(), &st_ref, &fp16_keys(&st_ref)).unwrap();
+
+    // interrupted run, first half under transient faults absorbed by
+    // the retry layer (every distinct op fails once)
+    let half = STEPS / 2;
+    let dir = tmp("rec-live");
+    let (injected, retries) = {
+        let inner = direct(&dir);
+        let faulty = Arc::new(FaultyEngine::transient(inner, 1, OpMask::ALL));
+        let eng: Arc<dyn NvmeEngine> =
+            Arc::new(RetryEngine::new(faulty.clone(), RetryPolicy::attempts(3)));
+        let states = init_states(eng.as_ref());
+        let aio = AsyncEngine::new(eng.clone(), 2);
+        let stage = StageExecutor::new(2);
+        let arena = arena();
+        for t in 1..=half {
+            one_step(&aio, &stage, &arena, &states, t);
+        }
+        flush_groups(eng.as_ref(), &states, &fp16_keys(&states)).unwrap();
+        Journal::new(eng.clone())
+            .commit(&ckpt_state(1, half, eng.as_ref(), &states))
+            .unwrap();
+        (
+            faulty.injected.load(std::sync::atomic::Ordering::Relaxed),
+            eng.stats().retries,
+        )
+        // every handle drops here: kill -9 right after the commit
+    };
+
+    // cold restart: replay the journal, rebuild handles from metadata
+    // alone (no gather, no re-init), continue to STEPS
+    let eng2: Arc<dyn NvmeEngine> = direct(&dir);
+    let ck = Journal::new(eng2.clone()).load().expect("journal survives restart");
+    ck.validate_keys(eng2.as_ref()).unwrap();
+    let resumed: Vec<OptimState> = SIZES
+        .iter()
+        .enumerate()
+        .map(|(g, &n)| OptimState {
+            group: format!("g{g}"),
+            numel: n,
+            dtype: StateDtype::F32,
+        })
+        .collect();
+    {
+        let aio = AsyncEngine::new(eng2.clone(), 2);
+        let stage = StageExecutor::new(2);
+        let arena = arena();
+        for t in (ck.steps_done + 1)..=STEPS {
+            one_step(&aio, &stage, &arena, &resumed, t);
+        }
+    }
+    flush_groups(eng2.as_ref(), &resumed, &fp16_keys(&resumed)).unwrap();
+
+    let identical = all_bytes(eng_ref.as_ref()) == all_bytes(eng2.as_ref());
+    std::fs::remove_dir_all(&dir_ref).ok();
+    std::fs::remove_dir_all(&dir).ok();
+    RecoveryResult { identical, injected, retries, resumed_epoch: ck.epoch }
+}
+
+/// Experiment 3: torn newest slot rolls back to the previous epoch.
+fn run_torn() -> bool {
+    let dir = tmp("torn");
+    {
+        let eng: Arc<dyn NvmeEngine> = direct(&dir);
+        let states = init_states(eng.as_ref());
+        let aio = AsyncEngine::new(eng.clone(), 2);
+        let stage = StageExecutor::new(2);
+        let arena = arena();
+        one_step(&aio, &stage, &arena, &states, 1);
+        flush_groups(eng.as_ref(), &states, &fp16_keys(&states)).unwrap();
+        let journal = Journal::new(eng.clone());
+        journal.commit(&ckpt_state(1, 1, eng.as_ref(), &states)).unwrap();
+        journal.commit(&ckpt_state(2, 2, eng.as_ref(), &states)).unwrap();
+        // epoch 2 is even -> slot A holds the newest record
+        let slot = memascend::ckpt::journal::SLOT_A;
+        let len = eng.len_of(slot).unwrap();
+        eng.write(slot, &vec![0xA5u8; len]).unwrap();
+    }
+    let eng2: Arc<dyn NvmeEngine> = direct(&dir);
+    let ck = Journal::new(eng2.clone()).load();
+    let ok = match ck {
+        Some(ck) => ck.epoch == 1 && ck.validate_keys(eng2.as_ref()).is_ok(),
+        None => false,
+    };
+    std::fs::remove_dir_all(&dir).ok();
+    ok
+}
+
+fn main() {
+    // ---- experiment 1: cadence overhead (report-only) ----
+    let off = run_cadence("cad-off", 0);
+    let on = run_cadence("cad-on", CKPT_EVERY);
+    let frac = on.ckpt_secs / (on.step_secs + on.ckpt_secs).max(1e-12);
+    let mut t1 = Table::new(vec![
+        "run",
+        "steps",
+        "epochs",
+        "step secs",
+        "ckpt secs",
+        "ckpt fraction",
+    ]);
+    t1.row(vec![
+        "interval 0".into(),
+        STEPS.to_string(),
+        off.epochs.to_string(),
+        format!("{:.3}", off.step_secs),
+        format!("{:.3}", off.ckpt_secs),
+        "-".into(),
+    ]);
+    t1.row(vec![
+        format!("interval {CKPT_EVERY}"),
+        STEPS.to_string(),
+        on.epochs.to_string(),
+        format!("{:.3}", on.step_secs),
+        format!("{:.3}", on.ckpt_secs),
+        format!("{:.1}%", frac * 100.0),
+    ]);
+    common::emit(
+        "bench_recovery_cadence",
+        "checkpoint cadence overhead (flush barriers + journal commit, report-only)",
+        &t1,
+    );
+
+    // ---- experiments 2 and 3: recovery + torn commit (CI-gated) ----
+    let rec = run_recovery();
+    let torn_ok = run_torn();
+    let mut t2 = Table::new(vec![
+        "check",
+        "result",
+        "detail",
+    ]);
+    t2.row(vec![
+        "kill-and-restart bit-identity".into(),
+        rec.identical.to_string(),
+        format!(
+            "resumed at epoch {}, {} faults injected, {} retries absorbed",
+            rec.resumed_epoch, rec.injected, rec.retries
+        ),
+    ]);
+    t2.row(vec![
+        "torn-commit rollback".into(),
+        torn_ok.to_string(),
+        "newest slot torn -> previous epoch loads and validates".into(),
+    ]);
+    common::emit(
+        "bench_recovery_crash",
+        "crash recovery under transient faults (CI-gated)",
+        &t2,
+    );
+
+    std::fs::create_dir_all(common::OUT_DIR).ok();
+    let out = Json::obj(vec![
+        ("steps", Json::from(STEPS)),
+        ("ckpt_interval", Json::from(CKPT_EVERY)),
+        ("epochs_committed", Json::from(on.epochs)),
+        ("step_secs_interval0", Json::from(off.step_secs)),
+        ("step_secs_interval_k", Json::from(on.step_secs)),
+        ("ckpt_secs", Json::from(on.ckpt_secs)),
+        ("ckpt_fraction", Json::from(frac)),
+        ("faults_injected", Json::from(rec.injected)),
+        ("retries_absorbed", Json::from(rec.retries)),
+        ("recovery_bit_identical", Json::from(rec.identical)),
+        ("torn_commit_rolls_back", Json::from(torn_ok)),
+    ]);
+    let path = format!("{}/BENCH_recovery.json", common::OUT_DIR);
+    match std::fs::write(&path, out.to_string()) {
+        Ok(()) => println!("[json] {path}"),
+        Err(e) => eprintln!("warn: could not write {path}: {e}"),
+    }
+
+    println!(
+        "LATENCY (report-only): checkpoint tax {:.1}% of wall clock at interval {CKPT_EVERY}",
+        frac * 100.0
+    );
+    println!(
+        "recovery bit-identical: {} ({} faults injected, {} retries)",
+        rec.identical, rec.injected, rec.retries
+    );
+    println!("torn-commit rollback: {torn_ok}");
+    let pass = rec.identical && rec.injected > 0 && torn_ok;
+    println!("ACCEPTANCE: {}", if pass { "PASS" } else { "FAIL" });
+    if !pass {
+        std::process::exit(1);
+    }
+}

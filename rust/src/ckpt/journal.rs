@@ -1,0 +1,519 @@
+//! The epoch journal: a dual-slot, checksummed superblock over two
+//! engine keys that makes checkpoint commits atomic.
+//!
+//! A checkpoint epoch is *committed* by writing one [`CkptState`]
+//! record into the slot for that epoch ([`SLOT_A`] for even epochs,
+//! [`SLOT_B`] for odd) and flushing it.  The previous epoch's record
+//! lives in the *other* slot and is never touched by the commit, so a
+//! torn or lost slot write can only invalidate the epoch being
+//! committed — [`Journal::load`] parses both slots, discards any whose
+//! magic/length/checksum fail, and returns the highest valid epoch.
+//! Rollback on a torn commit is therefore not a recovery procedure;
+//! it is what load does anyway.
+//!
+//! Records are fixed-capacity (first write rounds up to the next
+//! 4 KiB; later commits reuse the stored length) because engine keys
+//! are fixed-length once written, and zero-padded past the payload.
+//! All multi-byte header fields are little-endian; `u64` values inside
+//! the JSON payload that can exceed 2^53 (RNG state, seeds, digests)
+//! are hex strings, since the JSON number type is an `f64`.
+//!
+//! The **dirty marker** ([`DIRTY_KEY`]) records the epoch whose on-SSD
+//! state the trainer is about to overwrite in place: it is written and
+//! flushed once per epoch, before the first post-commit optimizer
+//! write-back.  Live state keys *are* the checkpoint (a commit is a
+//! barrier, not a copy), so once they are dirtied the committed epoch
+//! is no longer bit-recoverable — resume checks
+//! `dirty_epoch >= journal epoch` and fails with a structured error
+//! instead of silently continuing from divergent state.
+
+use std::sync::Arc;
+
+use crate::ssd::NvmeEngine;
+use crate::util::json::Json;
+
+/// Slot key for even-numbered epochs.
+pub const SLOT_A: &str = "ckpt/journal/a";
+/// Slot key for odd-numbered epochs.
+pub const SLOT_B: &str = "ckpt/journal/b";
+/// Dirty marker: the epoch whose committed state has since been
+/// overwritten in place (8 bytes, little-endian).
+pub const DIRTY_KEY: &str = "ckpt/journal/dirty";
+
+/// Record magic ("MACKPTJ1" as little-endian bytes).
+const MAGIC: u64 = u64::from_le_bytes(*b"MACKPTJ1");
+/// magic + epoch + payload_len + checksum, all u64 LE.
+const HEADER: usize = 32;
+/// Slot capacity granularity.
+const SLOT_ALIGN: usize = 4096;
+/// Headroom over the first payload, so later epochs whose numbers grow
+/// a few digits still fit the fixed-capacity slot.
+const SLOT_SLACK: usize = 2048;
+
+/// FNV-1a 64-bit — the journal's payload checksum and the layout
+/// digest hash.  Not cryptographic; it detects torn writes and stale
+/// blobs, which is all the journal needs.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn hex(v: u64) -> Json {
+    Json::from(format!("{v:016x}"))
+}
+
+fn req_hex(j: &Json, key: &str) -> anyhow::Result<u64> {
+    let s = j
+        .req(key)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("journal: field '{key}' not a hex string"))?;
+    u64::from_str_radix(s, 16)
+        .map_err(|e| anyhow::anyhow!("journal: field '{key}' bad hex: {e}"))
+}
+
+fn req_usize(j: &Json, key: &str) -> anyhow::Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("journal: field '{key}' not a number"))
+}
+
+/// Everything one committed epoch pins down: which step the on-SSD key
+/// set is consistent at, plus the host-side cursors (data-loader RNG,
+/// loss scaler, step counters, pipeline tuning) needed to continue the
+/// run bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptState {
+    /// Commit sequence number, starting at 1.
+    pub epoch: u64,
+    /// Steps completed when this epoch was committed.
+    pub steps_done: u64,
+    /// Optimizer steps actually applied (`<= steps_done`: overflow
+    /// steps are skipped).
+    pub applied_steps: u64,
+    /// The run's weight-init / data seed (resume must match it).
+    pub seed: u64,
+    /// Model spec name, to refuse resuming against foreign storage.
+    pub model: String,
+    /// Optimizer state dtype label ("f32" | "bf16").
+    pub dtype: String,
+    /// Data-loader cursor: the corpus RNG state.
+    pub corpus_rng: [u64; 4],
+    /// Loss-scaler dynamic state ([`crate::offload::LossScaler`]).
+    pub scale: f64,
+    pub good_steps: usize,
+    pub overflows: u64,
+    pub growths: u64,
+    /// Pipeline tuning in effect at commit (the governed knobs).
+    pub tile_bytes: usize,
+    pub tile_depth: usize,
+    pub prefetch_depth: usize,
+    /// Every on-SSD key this epoch is consistent over, with its stored
+    /// length — resume validates each against `len_of`.
+    pub keys: Vec<(String, usize)>,
+    /// FNV-1a digest of the persisted coalesce-layout blob
+    /// ([`crate::optimizer::coalesce::LAYOUT_KEY`]); `None` for
+    /// uncoalesced runs.
+    pub layout_digest: Option<u64>,
+}
+
+impl CkptState {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", hex(self.epoch)),
+            ("steps_done", hex(self.steps_done)),
+            ("applied_steps", hex(self.applied_steps)),
+            ("seed", hex(self.seed)),
+            ("model", Json::from(self.model.clone())),
+            ("dtype", Json::from(self.dtype.clone())),
+            (
+                "corpus_rng",
+                Json::Arr(self.corpus_rng.iter().map(|&v| hex(v)).collect()),
+            ),
+            ("scale", Json::from(self.scale)),
+            ("good_steps", Json::from(self.good_steps)),
+            ("overflows", hex(self.overflows)),
+            ("growths", hex(self.growths)),
+            ("tile_bytes", Json::from(self.tile_bytes)),
+            ("tile_depth", Json::from(self.tile_depth)),
+            ("prefetch_depth", Json::from(self.prefetch_depth)),
+            (
+                "keys",
+                Json::Arr(
+                    self.keys
+                        .iter()
+                        .map(|(k, l)| {
+                            Json::obj(vec![
+                                ("key", Json::from(k.clone())),
+                                ("len", Json::from(*l)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "layout_digest",
+                match self.layout_digest {
+                    Some(d) => hex(d),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let rng_arr = j
+            .req("corpus_rng")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("journal: corpus_rng not an array"))?;
+        anyhow::ensure!(rng_arr.len() == 4, "journal: corpus_rng must have 4 words");
+        let mut corpus_rng = [0u64; 4];
+        for (i, v) in rng_arr.iter().enumerate() {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("journal: corpus_rng[{i}] not hex"))?;
+            corpus_rng[i] = u64::from_str_radix(s, 16)
+                .map_err(|e| anyhow::anyhow!("journal: corpus_rng[{i}] bad hex: {e}"))?;
+        }
+        let keys = j
+            .req("keys")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("journal: keys not an array"))?
+            .iter()
+            .map(|e| {
+                let k = e
+                    .req("key")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("journal: bad key name"))?
+                    .to_string();
+                let l = req_usize(e, "len")?;
+                Ok((k, l))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let layout_digest = match j.get("layout_digest") {
+            None | Some(Json::Null) => None,
+            Some(_) => Some(req_hex(j, "layout_digest")?),
+        };
+        Ok(Self {
+            epoch: req_hex(j, "epoch")?,
+            steps_done: req_hex(j, "steps_done")?,
+            applied_steps: req_hex(j, "applied_steps")?,
+            seed: req_hex(j, "seed")?,
+            model: j
+                .req("model")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("journal: bad model"))?
+                .to_string(),
+            dtype: j
+                .req("dtype")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("journal: bad dtype"))?
+                .to_string(),
+            corpus_rng,
+            scale: j
+                .req("scale")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("journal: bad scale"))?,
+            good_steps: req_usize(j, "good_steps")?,
+            overflows: req_hex(j, "overflows")?,
+            growths: req_hex(j, "growths")?,
+            tile_bytes: req_usize(j, "tile_bytes")?,
+            tile_depth: req_usize(j, "tile_depth")?,
+            prefetch_depth: req_usize(j, "prefetch_depth")?,
+            keys,
+            layout_digest,
+        })
+    }
+
+    /// Validate every journaled key against the engine's current
+    /// inventory — the first line of defence against resuming over
+    /// foreign or truncated storage.
+    pub fn validate_keys(&self, engine: &dyn NvmeEngine) -> anyhow::Result<()> {
+        for (key, len) in &self.keys {
+            match engine.len_of(key) {
+                Some(stored) => anyhow::ensure!(
+                    stored == *len,
+                    "checkpoint epoch {} expects '{key}' at {len} bytes, storage \
+                     has {stored}",
+                    self.epoch
+                ),
+                None => anyhow::bail!(
+                    "checkpoint epoch {} references '{key}' which is missing from \
+                     storage",
+                    self.epoch
+                ),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Handle on the dual-slot journal of one storage root.
+pub struct Journal {
+    engine: Arc<dyn NvmeEngine>,
+}
+
+impl Journal {
+    pub fn new(engine: Arc<dyn NvmeEngine>) -> Self {
+        Self { engine }
+    }
+
+    fn slot_key(epoch: u64) -> &'static str {
+        if epoch % 2 == 0 {
+            SLOT_A
+        } else {
+            SLOT_B
+        }
+    }
+
+    /// Commit `state` as the newest epoch: one checksummed record into
+    /// this epoch's slot, then a flush barrier on the slot.  The
+    /// caller must have flushed every data key listed in `state.keys`
+    /// *before* calling — a visible journal record always describes
+    /// already-durable data.  On error the previous epoch's slot is
+    /// untouched and [`Self::load`] still returns it.
+    pub fn commit(&self, state: &CkptState) -> anyhow::Result<()> {
+        let payload = state.to_json().to_string().into_bytes();
+        let mut rec = Vec::with_capacity(HEADER + payload.len());
+        rec.extend_from_slice(&MAGIC.to_le_bytes());
+        rec.extend_from_slice(&state.epoch.to_le_bytes());
+        rec.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        rec.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        rec.extend_from_slice(&payload);
+        let key = Self::slot_key(state.epoch);
+        let cap = match self.engine.len_of(key) {
+            Some(cap) => {
+                anyhow::ensure!(
+                    rec.len() <= cap,
+                    "journal record ({} bytes) outgrew slot '{key}' ({cap} bytes)",
+                    rec.len()
+                );
+                cap
+            }
+            None => (rec.len() + SLOT_SLACK).div_ceil(SLOT_ALIGN) * SLOT_ALIGN,
+        };
+        rec.resize(cap, 0);
+        self.engine.write(key, &rec)?;
+        self.engine.flush(key)
+    }
+
+    fn decode(buf: &[u8]) -> Option<CkptState> {
+        if buf.len() < HEADER {
+            return None;
+        }
+        let word = |i: usize| u64::from_le_bytes(buf[i * 8..i * 8 + 8].try_into().unwrap());
+        if word(0) != MAGIC {
+            return None;
+        }
+        let epoch = word(1);
+        let plen = word(2) as usize;
+        let sum = word(3);
+        if plen > buf.len() - HEADER {
+            return None;
+        }
+        let payload = &buf[HEADER..HEADER + plen];
+        if fnv1a64(payload) != sum {
+            return None;
+        }
+        let json = Json::parse(std::str::from_utf8(payload).ok()?).ok()?;
+        let state = CkptState::from_json(&json).ok()?;
+        if state.epoch != epoch {
+            return None;
+        }
+        Some(state)
+    }
+
+    fn read_slot(&self, key: &str) -> Option<CkptState> {
+        let len = self.engine.len_of(key)?;
+        let mut buf = vec![0u8; len];
+        self.engine.read(key, &mut buf).ok()?;
+        Self::decode(&buf)
+    }
+
+    /// Newest valid committed epoch, or `None` for unjournaled
+    /// storage.  A slot that fails magic/length/checksum validation is
+    /// treated as absent — which is exactly how a torn commit rolls
+    /// back to the previous epoch.
+    pub fn load(&self) -> Option<CkptState> {
+        match (self.read_slot(SLOT_A), self.read_slot(SLOT_B)) {
+            (Some(a), Some(b)) => Some(if a.epoch >= b.epoch { a } else { b }),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Record (durably) that epoch `epoch`'s committed state is about
+    /// to be overwritten in place.  Called once per epoch, before the
+    /// first post-commit optimizer write-back.
+    pub fn mark_dirty(&self, epoch: u64) -> anyhow::Result<()> {
+        self.engine.write(DIRTY_KEY, &epoch.to_le_bytes())?;
+        self.engine.flush(DIRTY_KEY)
+    }
+
+    /// The last dirtied epoch, if any.  Resume refuses when this is
+    /// `>=` the loaded journal epoch: the state keys no longer match
+    /// the commit.
+    pub fn dirty_epoch(&self) -> Option<u64> {
+        if self.engine.len_of(DIRTY_KEY) != Some(8) {
+            return None;
+        }
+        let mut b = [0u8; 8];
+        self.engine.read(DIRTY_KEY, &mut b).ok()?;
+        Some(u64::from_le_bytes(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssd::{DirectEngine, FaultyEngine, OpMask, RetryEngine, RetryPolicy};
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("ma-jrnl-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn state(epoch: u64, steps: u64) -> CkptState {
+        CkptState {
+            epoch,
+            steps_done: steps,
+            applied_steps: steps.saturating_sub(1),
+            seed: 0xDEAD_BEEF_CAFE_F00D, // deliberately > 2^53
+            model: "smoke".into(),
+            dtype: "f32".into(),
+            corpus_rng: [u64::MAX, 1, 0x8000_0000_0000_0000, 42],
+            scale: 65536.0,
+            good_steps: 17,
+            overflows: 2,
+            growths: 1,
+            tile_bytes: 4 << 20,
+            tile_depth: 2,
+            prefetch_depth: 2,
+            keys: vec![("w0/master".into(), 4096), ("w0/fp16".into(), 2048)],
+            layout_digest: Some(0xFFFF_FFFF_FFFF_FFFE),
+        }
+    }
+
+    #[test]
+    fn state_json_roundtrip_preserves_full_u64_range() {
+        let s = state(3, 120);
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        let back = CkptState::from_json(&j).unwrap();
+        assert_eq!(back, s, "hex round-trip must be exact past 2^53");
+        // uncoalesced: digest absent
+        let s2 = CkptState { layout_digest: None, ..s };
+        let j2 = Json::parse(&s2.to_json().to_string()).unwrap();
+        assert_eq!(CkptState::from_json(&j2).unwrap().layout_digest, None);
+    }
+
+    #[test]
+    fn commit_then_load_returns_newest_epoch() {
+        let dir = tmp("roundtrip");
+        let eng = std::sync::Arc::new(DirectEngine::new(&dir, 2, 1 << 22, 1).unwrap());
+        let j = Journal::new(eng);
+        assert!(j.load().is_none(), "fresh storage has no journal");
+        j.commit(&state(1, 10)).unwrap();
+        assert_eq!(j.load().unwrap().epoch, 1);
+        j.commit(&state(2, 20)).unwrap();
+        let loaded = j.load().unwrap();
+        assert_eq!(loaded.epoch, 2);
+        assert_eq!(loaded, state(2, 20));
+        // both slots now populated; epoch 3 overwrites the older one
+        j.commit(&state(3, 30)).unwrap();
+        assert_eq!(j.load().unwrap().steps_done, 30);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_commit_rolls_back_to_previous_epoch() {
+        let dir = tmp("torn");
+        let eng = std::sync::Arc::new(DirectEngine::new(&dir, 2, 1 << 22, 1).unwrap());
+        let j = Journal::new(eng.clone());
+        j.commit(&state(1, 10)).unwrap();
+        j.commit(&state(2, 20)).unwrap();
+        // epoch 3 would land in slot B (odd): simulate the torn write
+        // by replacing the slot with garbage of the same stored length
+        let slot = Journal::slot_key(3);
+        let cap = eng.len_of(slot).unwrap();
+        eng.write(slot, &vec![0xA5u8; cap]).unwrap();
+        let loaded = j.load().unwrap();
+        assert_eq!(loaded.epoch, 2, "torn slot must not win");
+        assert_eq!(loaded, state(2, 20));
+        // a later successful commit of epoch 3 recovers the slot
+        j.commit(&state(3, 30)).unwrap();
+        assert_eq!(j.load().unwrap().epoch, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_payload_fails_checksum() {
+        let dir = tmp("sum");
+        let eng = std::sync::Arc::new(DirectEngine::new(&dir, 2, 1 << 22, 1).unwrap());
+        let j = Journal::new(eng.clone());
+        j.commit(&state(1, 10)).unwrap();
+        let slot = Journal::slot_key(1);
+        let cap = eng.len_of(slot).unwrap();
+        let mut buf = vec![0u8; cap];
+        eng.read(slot, &mut buf).unwrap();
+        buf[HEADER + 5] ^= 0x40; // one bit inside the payload
+        eng.write(slot, &buf).unwrap();
+        assert!(j.load().is_none(), "checksum must reject the flipped bit");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_commit_leaves_journal_unchanged() {
+        let dir = tmp("fail");
+        let inner = std::sync::Arc::new(DirectEngine::new(&dir, 2, 1 << 22, 1).unwrap());
+        let j_ok = Journal::new(inner.clone());
+        j_ok.commit(&state(1, 10)).unwrap();
+        // persistent write faults: the slot write itself dies, even
+        // through a retry layer
+        let faulty = std::sync::Arc::new(FaultyEngine::transient(
+            inner.clone(),
+            u32::MAX,
+            OpMask::DATA,
+        ));
+        let retrying =
+            std::sync::Arc::new(RetryEngine::new(faulty, RetryPolicy::attempts(2)));
+        let j_bad = Journal::new(retrying);
+        let err = j_bad.commit(&state(2, 20)).unwrap_err();
+        assert!(err.to_string().contains("injected"), "unexpected error: {err}");
+        // no partial commit: the journal still reads epoch 1, intact
+        assert_eq!(j_ok.load().unwrap(), state(1, 10));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dirty_marker_round_trips() {
+        let dir = tmp("dirty");
+        let eng = std::sync::Arc::new(DirectEngine::new(&dir, 2, 1 << 22, 1).unwrap());
+        let j = Journal::new(eng);
+        assert_eq!(j.dirty_epoch(), None);
+        j.mark_dirty(4).unwrap();
+        assert_eq!(j.dirty_epoch(), Some(4));
+        j.mark_dirty(5).unwrap();
+        assert_eq!(j.dirty_epoch(), Some(5));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn key_validation_names_the_divergence() {
+        let dir = tmp("keys");
+        let eng = DirectEngine::new(&dir, 2, 1 << 22, 1).unwrap();
+        eng.write("w0/master", &vec![0u8; 4096]).unwrap();
+        let mut s = state(1, 10);
+        s.keys = vec![("w0/master".into(), 4096)];
+        s.validate_keys(&eng).unwrap();
+        s.keys[0].1 = 4097;
+        let err = s.validate_keys(&eng).unwrap_err();
+        assert!(err.to_string().contains("4097"), "unexpected error: {err}");
+        s.keys = vec![("w1/master".into(), 8)];
+        let err = s.validate_keys(&eng).unwrap_err();
+        assert!(err.to_string().contains("missing"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -168,6 +168,18 @@ pub struct TrainSpec {
     /// path-resolution tax from the journal tax).  No effect with
     /// `direct_nvme`.
     pub fs_cached_fds: bool,
+    /// Commit a crash-consistent checkpoint epoch every this many
+    /// steps (`ckpt::Journal`): flush every on-SSD state/fp16 key,
+    /// persist resident tensors + RNG/scaler/step cursors, then
+    /// atomically advance the journal epoch.  `0` = off (no journal,
+    /// no resume).  The flushes ride the bytes the tiled write-back
+    /// already pushed — a checkpoint is a barrier, not a copy.
+    pub ckpt_interval_steps: usize,
+    /// Total attempts per NVMe op under the transient-fault retry
+    /// layer (`ssd::RetryEngine`); `<= 1` = no retry layer.  Retries
+    /// are metered in `IoSnapshot::retries` / `StepMetrics::io_retries`
+    /// and exhaustion still surfaces the error.
+    pub io_retry_attempts: usize,
     pub flags: MemAscendFlags,
     // optimizer hyper-parameters (must match artifacts' adam constants
     // when the HLO adam path is used — see manifest "adam")
@@ -200,6 +212,8 @@ impl Default for TrainSpec {
             act_host_budget: usize::MAX,
             pinned_budget_bytes: None,
             fs_cached_fds: false,
+            ckpt_interval_steps: 0,
+            io_retry_attempts: 3,
             flags: MemAscendFlags::memascend(),
             lr: 1.0e-3,
             beta1: 0.9,

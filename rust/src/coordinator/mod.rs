@@ -39,6 +39,20 @@ pub fn commands() -> Vec<Command> {
                 "governor",
                 "enable the pressure-adaptive pipeline governor (retunes tile size/depth and prefetch depth per step)",
             )
+            .opt(
+                "ckpt-interval",
+                "0",
+                "commit a crash-consistent checkpoint epoch every N steps (0 = off); a checkpoint is a flush barrier + journal record, not a copy — resume with --resume",
+            )
+            .opt(
+                "io-retry",
+                "3",
+                "attempts per NVMe op under the transient-fault retry layer (<=1 = no retries)",
+            )
+            .flag(
+                "resume",
+                "resume from the newest checkpoint epoch on --storage instead of re-initializing (requires a --ckpt-interval run and the original seed)",
+            )
             .opt("precision", "fp16", "mixed precision (fp16|bf16)")
             .opt("seed", "42", "init/data seed")
             .opt("artifacts", "artifacts", "AOT artifacts root")
@@ -101,6 +115,9 @@ pub fn train_spec_from_args(args: &Args, batch: usize, seq: usize) -> anyhow::Re
         optim_coalesce_bytes: args
             .get_usize("optim-coalesce-bytes", defaults.optim_coalesce_bytes)?,
         governor: args.get_bool("governor"),
+        ckpt_interval_steps: args
+            .get_usize("ckpt-interval", defaults.ckpt_interval_steps)?,
+        io_retry_attempts: args.get_usize("io-retry", defaults.io_retry_attempts)?,
         flags: parse_mode(args.get_or("mode", "memascend"))?,
         ..defaults
     })
@@ -109,7 +126,12 @@ pub fn train_spec_from_args(args: &Args, batch: usize, seq: usize) -> anyhow::Re
 pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let model = args.get_or("model", "smoke").to_string();
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts")).join(&model);
+    let resume = args.get_bool("resume");
     let storage = match args.get_or("storage", "") {
+        "" if resume => anyhow::bail!(
+            "--resume needs --storage pointing at the checkpointed run's \
+             directory (the default storage is a fresh per-process temp dir)"
+        ),
         "" => std::env::temp_dir().join(format!("memascend-{}", std::process::id())),
         s => PathBuf::from(s),
     };
@@ -131,13 +153,25 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
         },
     };
     eprintln!(
-        "training {model} [{}] for {} steps (ranks={} precision={:?})",
+        "{} {model} [{}] for {} steps (ranks={} precision={:?})",
+        if resume { "resuming" } else { "training" },
         spec.flags.label(),
         opts.steps,
         spec.ranks,
         spec.precision
     );
-    let mut trainer = Trainer::new(&artifacts, &storage, spec, &opts)?;
+    let mut trainer = if resume {
+        Trainer::resume(&artifacts, &storage, spec, &opts)?
+    } else {
+        Trainer::new(&artifacts, &storage, spec, &opts)?
+    };
+    if resume {
+        eprintln!(
+            "resumed at epoch {} (step {})",
+            trainer.journal_epoch(),
+            trainer.steps_done()
+        );
+    }
     let report = trainer.run(&opts)?;
     println!("=== run report ===");
     println!("label            {}", report.label);

@@ -10,9 +10,25 @@
 //!
 //! See DESIGN.md for the system inventory and the experiment index
 //! mapping every paper table/figure to a bench target.
+//!
+//! ## Checkpoint & resume
+//!
+//! Because the training state already lives on the SSD, a checkpoint
+//! is a *barrier*, not a copy: every `--ckpt-interval` steps the
+//! trainer flushes the state/fp16 keys the tiled write-back has been
+//! updating in place, persists the small host-resident tensors and
+//! RNG/scaler/step cursors, and atomically advances a dual-slot epoch
+//! journal ([`ckpt::Journal`]).  `memascend train --resume` (or
+//! [`train::Trainer::resume`]) replays the newest valid epoch and
+//! continues bit-identically; a torn commit rolls back to the previous
+//! epoch, and state dirtied after the last commit is a structured
+//! error, never silent divergence.  Transient NVMe faults are absorbed
+//! by a bounded-backoff retry layer ([`ssd::RetryEngine`],
+//! `--io-retry`), metered in `StepMetrics::io_retries`.
 
 pub mod accounting;
 pub mod bufpool;
+pub mod ckpt;
 pub mod collective;
 pub mod config;
 pub mod coordinator;

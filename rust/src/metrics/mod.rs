@@ -109,6 +109,22 @@ pub struct StepMetrics {
     /// non-zero count means the arena budget forced owned-vector
     /// degradation somewhere.
     pub host_copy_bytes: u64,
+    /// Seconds spent committing a checkpoint epoch after this step
+    /// (flush barriers + resident persistence + journal commit).
+    /// Accounted separately from `io_wait_secs`: checkpoint flushes
+    /// are a durability tax, not pipeline stall, and must not skew
+    /// the overlap metrics.  0 on steps with no checkpoint.
+    pub ckpt_secs: f64,
+    /// Transient-fault I/O retries absorbed by the retry layer during
+    /// this step (delta of `IoSnapshot::retries`).  0 without a
+    /// `RetryEngine` or on a fault-free step.
+    pub io_retries: u64,
+    /// Newest checkpoint epoch committed on this storage when the step
+    /// finished (after a checkpointed step, the epoch that step was
+    /// committed as).  0 = no commit yet; numbering continues across
+    /// resumes and storage reuse, so epochs are monotone per storage
+    /// root, not per process.
+    pub journal_epoch: u64,
 }
 
 impl StepMetrics {
@@ -240,6 +256,9 @@ mod tests {
             tile_depth: 0,
             prefetch_depth: 0,
             host_copy_bytes: 0,
+            ckpt_secs: 0.0,
+            io_retries: 0,
+            journal_epoch: 0,
         }
     }
 

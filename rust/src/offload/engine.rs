@@ -19,7 +19,10 @@ use crate::pinned::{
     AlignedAllocator, ArenaConfig, CachingAllocator, HostAllocator, MemoryTracker,
     Mode, PinnedArena,
 };
-use crate::ssd::{AsyncEngine, DirectEngine, FsEngine, IoExecutor, NvmeEngine};
+use crate::ssd::{
+    AsyncEngine, DirectEngine, FsEngine, IoExecutor, NvmeEngine, RetryEngine,
+    RetryPolicy,
+};
 use crate::util::stage::StageExecutor;
 
 pub struct OffloadEngine {
@@ -90,6 +93,17 @@ impl OffloadEngine {
                 512 << 10,
                 train.fs_cached_fds,
             )?)
+        };
+        // transient-fault retry sits directly above the storage engine
+        // and below the async queue, so queued submit closures and
+        // synchronous calls retry identically (label passes through)
+        let nvme: Arc<dyn NvmeEngine> = if train.io_retry_attempts > 1 {
+            Arc::new(RetryEngine::new(
+                nvme,
+                RetryPolicy::attempts(train.io_retry_attempts as u32),
+            ))
+        } else {
+            nvme
         };
         let checker = if train.flags.fused_overflow {
             Checker::Fused

@@ -41,6 +41,21 @@ impl LossScaler {
         self.scale
     }
 
+    /// Full dynamic state for checkpointing: (scale, good_steps,
+    /// overflows, growths).  Bounds/interval are config, not state.
+    pub fn snapshot(&self) -> (f64, usize, u64, u64) {
+        (self.scale, self.good_steps, self.overflows, self.growths)
+    }
+
+    /// Restore a [`LossScaler::snapshot`] onto a freshly-configured
+    /// scaler — resume continues the exact growth/backoff sequence.
+    pub fn restore(&mut self, snap: (f64, usize, u64, u64)) {
+        self.scale = snap.0.clamp(self.min_scale, self.max_scale);
+        self.good_steps = snap.1;
+        self.overflows = snap.2;
+        self.growths = snap.3;
+    }
+
     /// Feed the overflow verdict for this step. Returns true if the
     /// optimizer step should be SKIPPED.
     pub fn update(&mut self, overflowed: bool) -> bool {

@@ -429,7 +429,7 @@ mod tests {
         // return Err promptly; dropping mid-plan must not deadlock.
         let (engine, plan, dir) = seeded_engine("faulty");
         let faulty: Arc<dyn NvmeEngine> = Arc::new(FaultyEngine::new(
-            ArcEngine(engine),
+            engine,
             1024, // fail every op
             11,
         ));
@@ -451,8 +451,7 @@ mod tests {
     #[test]
     fn partial_faults_deliver_good_prefix_then_error() {
         let (engine, plan, dir) = seeded_engine("pf");
-        let faulty: Arc<dyn NvmeEngine> =
-            Arc::new(FaultyEngine::new(ArcEngine(engine), 200, 3));
+        let faulty: Arc<dyn NvmeEngine> = Arc::new(FaultyEngine::new(engine, 200, 3));
         let mut sw = Swapper::start(
             faulty,
             pool(2),
@@ -556,27 +555,4 @@ mod tests {
         assert_eq!(s.arena().tracker().current(Cat::SwapBuf), 0);
     }
 
-    /// `FaultyEngine` wraps a concrete engine by value; adapt an `Arc`.
-    struct ArcEngine(Arc<DirectEngine>);
-
-    impl NvmeEngine for ArcEngine {
-        fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
-            self.0.write(key, data)
-        }
-        fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
-            self.0.read(key, out)
-        }
-        fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
-            self.0.write_at(key, offset, data)
-        }
-        fn len_of(&self, key: &str) -> Option<usize> {
-            self.0.len_of(key)
-        }
-        fn stats(&self) -> crate::ssd::IoSnapshot {
-            self.0.stats()
-        }
-        fn label(&self) -> &'static str {
-            "arc-direct"
-        }
-    }
 }

@@ -218,6 +218,70 @@ pub struct CoalescedOptim {
     super_members: Vec<Range<usize>>,
 }
 
+/// Plan the coalesced layout for `groups` (a pure function of the
+/// member list), with the dtype sanity checks both constructors need.
+fn plan_for(groups: &[OptimState], target_bytes: usize) -> anyhow::Result<CoalescedLayout> {
+    anyhow::ensure!(!groups.is_empty(), "nothing to coalesce");
+    let dtype = groups[0].dtype;
+    anyhow::ensure!(
+        groups.iter().all(|g| g.dtype == dtype),
+        "mixed state dtypes cannot share a coalesced layout"
+    );
+    let members: Vec<(String, usize)> =
+        groups.iter().map(|g| (g.group.clone(), g.numel)).collect();
+    Ok(CoalescedLayout::plan(&members, dtype, target_bytes))
+}
+
+/// Validate the blob persisted under [`LAYOUT_KEY`] (and the target
+/// that produced it) against the freshly-planned `layout`; returns
+/// whether a persisted blob existed.  A run restarted against the same
+/// storage must address the same offsets — divergence is a structured
+/// error that names the knob actually responsible.
+fn check_persisted_layout(
+    engine: &dyn NvmeEngine,
+    layout: &CoalescedLayout,
+    target_bytes: usize,
+) -> anyhow::Result<bool> {
+    let Some(len) = engine.len_of(LAYOUT_KEY) else {
+        return Ok(false);
+    };
+    let mut stored = vec![0u8; len];
+    engine.read(LAYOUT_KEY, &mut stored)?;
+    let parsed = Json::parse(std::str::from_utf8(&stored)?)
+        .map_err(|e| anyhow::anyhow!("coalesce layout unreadable: {e:?}"))?;
+    let stored_target = parsed
+        .req("target_bytes")?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("coalesce layout: bad target_bytes"))?;
+    anyhow::ensure!(
+        stored_target == target_bytes,
+        "coalesce target changed ({stored_target} -> {target_bytes} state \
+         bytes); keep optim_coalesce_bytes stable for this storage, or \
+         clear '{LAYOUT_KEY}' to re-lay the super-groups"
+    );
+    let stored = CoalescedLayout::from_json(parsed.req("layout")?)?;
+    anyhow::ensure!(
+        &stored == layout,
+        "persisted coalesce layout diverged from the member inventory"
+    );
+    Ok(true)
+}
+
+/// Member-index range of each super-group (members are assigned in
+/// order, so each super-group owns a contiguous slice).
+fn member_ranges(layout: &CoalescedLayout) -> Vec<Range<usize>> {
+    let mut super_members = vec![0..0; layout.super_numels.len()];
+    for (mi, span) in layout.members.iter().enumerate() {
+        let r = &mut super_members[span.super_idx];
+        if r.start == r.end {
+            *r = mi..mi + 1;
+        } else {
+            r.end = mi + 1;
+        }
+    }
+    super_members
+}
+
 impl CoalescedOptim {
     /// Build the super-group streams from per-member states already
     /// initialized on `engine`: compute the layout (or verify the one
@@ -231,49 +295,15 @@ impl CoalescedOptim {
         groups: &[OptimState],
         target_bytes: usize,
     ) -> anyhow::Result<Self> {
-        anyhow::ensure!(!groups.is_empty(), "nothing to coalesce");
-        let dtype = groups[0].dtype;
-        anyhow::ensure!(
-            groups.iter().all(|g| g.dtype == dtype),
-            "mixed state dtypes cannot share a coalesced layout"
-        );
-        let members: Vec<(String, usize)> =
-            groups.iter().map(|g| (g.group.clone(), g.numel)).collect();
-        let layout = CoalescedLayout::plan(&members, dtype, target_bytes);
-        // persist the mapping (and the target that produced it) once;
-        // a pre-existing layout must agree bit for bit, so a run
-        // restarted against the same storage addresses the same
-        // offsets — divergence is a structured error that names the
-        // knob actually responsible
-        match engine.len_of(LAYOUT_KEY) {
-            Some(len) => {
-                let mut stored = vec![0u8; len];
-                engine.read(LAYOUT_KEY, &mut stored)?;
-                let parsed = Json::parse(std::str::from_utf8(&stored)?)
-                    .map_err(|e| anyhow::anyhow!("coalesce layout unreadable: {e:?}"))?;
-                let stored_target = parsed
-                    .req("target_bytes")?
-                    .as_usize()
-                    .ok_or_else(|| anyhow::anyhow!("coalesce layout: bad target_bytes"))?;
-                anyhow::ensure!(
-                    stored_target == target_bytes,
-                    "coalesce target changed ({stored_target} -> {target_bytes} state \
-                     bytes); keep optim_coalesce_bytes stable for this storage, or \
-                     clear '{LAYOUT_KEY}' to re-lay the super-groups"
-                );
-                let stored = CoalescedLayout::from_json(parsed.req("layout")?)?;
-                anyhow::ensure!(
-                    stored == layout,
-                    "persisted coalesce layout diverged from the member inventory"
-                );
-            }
-            None => {
-                let blob = Json::obj(vec![
-                    ("target_bytes", Json::from(target_bytes)),
-                    ("layout", layout.to_json()),
-                ]);
-                engine.write(LAYOUT_KEY, blob.to_string().as_bytes())?;
-            }
+        let layout = plan_for(groups, target_bytes)?;
+        let dtype = layout.dtype;
+        // persist the mapping (and the target that produced it) once
+        if !check_persisted_layout(engine, &layout, target_bytes)? {
+            let blob = Json::obj(vec![
+                ("target_bytes", Json::from(target_bytes)),
+                ("layout", layout.to_json()),
+            ]);
+            engine.write(LAYOUT_KEY, blob.to_string().as_bytes())?;
         }
         let es = dtype.bytes_per_elem();
         let supers: Vec<OptimState> = layout
@@ -296,15 +326,52 @@ impl CoalescedOptim {
                 engine.write_at(d, span.offset * es, &buf)?;
             }
         }
-        let mut super_members = vec![0..0; supers.len()];
-        for (mi, span) in layout.members.iter().enumerate() {
-            let r = &mut super_members[span.super_idx];
-            if r.start == r.end {
-                *r = mi..mi + 1;
-            } else {
-                r.end = mi + 1;
+        let super_members = member_ranges(&layout);
+        Ok(Self { layout, supers, super_members })
+    }
+
+    /// Reattach to super-group streams that already hold the *current*
+    /// optimizer state — the checkpoint-resume constructor.  Recomputes
+    /// the layout from the member inventory, requires the persisted
+    /// [`LAYOUT_KEY`] blob to exist and agree, and validates every
+    /// super-group stream's stored length; it never gathers from the
+    /// per-member streams, which go stale the moment the coalesced
+    /// streams are first stepped ([`Self::build`]'s gather here would
+    /// silently roll the run back to initialization).  No state bytes
+    /// move — resume costs metadata reads only.
+    pub fn resume(
+        engine: &dyn NvmeEngine,
+        groups: &[OptimState],
+        target_bytes: usize,
+    ) -> anyhow::Result<Self> {
+        let layout = plan_for(groups, target_bytes)?;
+        let dtype = layout.dtype;
+        anyhow::ensure!(
+            check_persisted_layout(engine, &layout, target_bytes)?,
+            "cannot resume a coalesced run: no layout persisted under '{LAYOUT_KEY}'"
+        );
+        let es = dtype.bytes_per_elem();
+        let supers: Vec<OptimState> = layout
+            .super_numels
+            .iter()
+            .enumerate()
+            .map(|(i, &numel)| OptimState { group: super_group_name(i), numel, dtype })
+            .collect();
+        for st in &supers {
+            let want = st.numel * es;
+            for k in state_keys(&st.group) {
+                match engine.len_of(&k) {
+                    Some(l) => anyhow::ensure!(
+                        l == want,
+                        "resume: super-group stream '{k}' is {l} bytes, expected {want}"
+                    ),
+                    None => anyhow::bail!(
+                        "resume: super-group stream '{k}' missing from storage"
+                    ),
+                }
             }
         }
+        let super_members = member_ranges(&layout);
         Ok(Self { layout, supers, super_members })
     }
 
@@ -1055,6 +1122,62 @@ mod tests {
         );
         std::fs::remove_dir_all(&dir).ok();
         std::fs::remove_dir_all(&dir2).ok();
+    }
+
+    #[test]
+    fn resume_reattaches_stepped_state_without_gathering() {
+        // the resume constructor must preserve the *stepped* super-group
+        // state: build()'s gather would silently roll the streams back
+        // to the (now stale) member-stream contents
+        let sizes = [300usize, 45, 1200, 7];
+        let (eng_a, dir_a) = engine("res-seq");
+        let (eng_c, dir_c) = engine("res-coal");
+        let hp = AdamParams { weight_decay: 0.01, ..Default::default() };
+        let mut rng = crate::util::rng::Xoshiro256::new(21);
+        let (states_a, _) = init_groups(&eng_a, &sizes, StateDtype::F32, &mut rng);
+        let mut rng = crate::util::rng::Xoshiro256::new(21);
+        let (states_c, _) = init_groups(&eng_c, &sizes, StateDtype::F32, &mut rng);
+        let eng_c: Arc<dyn NvmeEngine> = Arc::new(eng_c);
+        let aio = AsyncEngine::new(Arc::clone(&eng_c), 2);
+        let stage = StageExecutor::new(1);
+        let keys: Vec<String> = (0..sizes.len()).map(|g| format!("g{g}/fp16")).collect();
+        let co = CoalescedOptim::build(eng_c.as_ref(), &states_c, 4096).unwrap();
+        let step_both = |co: &CoalescedOptim, t: u64, rng: &mut crate::util::rng::Xoshiro256| {
+            let grads: Vec<Vec<f32>> = sizes
+                .iter()
+                .map(|n| (0..*n).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            for (g, st) in states_a.iter().enumerate() {
+                st.step(&eng_a, &grads[g], t, 1.0, &hp, 1, &keys[g]).unwrap();
+            }
+            co.step_tiled(&aio, &stage, &arena(), &grad_refs, &keys, t, 1.0, &hp, 1, 1024, 2)
+                .unwrap();
+        };
+        step_both(&co, 1, &mut rng);
+        step_both(&co, 2, &mut rng);
+        drop(co);
+        // "restart": reattach against the same storage and keep stepping
+        let co = CoalescedOptim::resume(eng_c.as_ref(), &states_c, 4096).unwrap();
+        step_both(&co, 3, &mut rng);
+        for (g, n) in sizes.iter().enumerate() {
+            for suffix in ["master", "adam_m", "adam_v"] {
+                let mut a = vec![0u8; n * 4];
+                let mut c = vec![0u8; n * 4];
+                eng_a.read(&format!("g{g}/{suffix}"), &mut a).unwrap();
+                co.read_member_state(eng_c.as_ref(), g, suffix, &mut c).unwrap();
+                assert_eq!(a, c, "resumed g{g}/{suffix} diverged");
+            }
+        }
+        // resume without a persisted layout is a structured error
+        let (eng_f, dir_f) = engine("res-fresh");
+        let mut rng = crate::util::rng::Xoshiro256::new(21);
+        let (states_f, _) = init_groups(&eng_f, &sizes, StateDtype::F32, &mut rng);
+        let err = CoalescedOptim::resume(&eng_f, &states_f, 4096).unwrap_err();
+        assert!(err.to_string().contains("no layout persisted"), "got: {err}");
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_c).ok();
+        std::fs::remove_dir_all(&dir_f).ok();
     }
 
     #[test]

@@ -20,17 +20,31 @@
 //! job per extent on the owning device's queue via [`io_scope`].
 //! Workers receive disjoint slices of the caller's buffer, so there is
 //! no locking on the data path and no per-call thread spawn.
+//!
+//! The tensor-location dictionary is **journaled** to a sidecar file
+//! (`dict.json`, written atomically via rename) whenever a *new*
+//! tensor is allocated — once per tensor, under the allocation lock,
+//! never on the per-transfer data path.  Reopening the engine on an
+//! existing root restores the dictionary and the per-device offset
+//! counters, which is what makes SSD-resident training state
+//! recoverable across a process restart ([`crate::ckpt`]).  `flush`
+//! is a real durability barrier here: `fdatasync` on every device
+//! file holding one of the key's extents.
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
 use std::os::unix::fs::FileExt;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
 use std::time::Instant;
 
 use super::queue::{io_scope, IoExecutor};
 use super::{IoSnapshot, IoStats, NvmeEngine};
+use crate::util::json::Json;
+
+/// Sidecar file the tensor-location dictionary is journaled to.
+pub const DICT_FILE: &str = "dict.json";
 
 /// LBA granularity: NVMe logical block = 4 KiB here.
 pub const LBA_SIZE: usize = 4096;
@@ -56,6 +70,7 @@ struct Device {
 
 pub struct DirectEngine {
     devices: Vec<Device>,
+    root: PathBuf,
     /// Tensor location dictionary: key -> stripes + logical length.
     dict: RwLock<HashMap<String, (Vec<Extent>, usize)>>,
     /// Round-robin start device for striping fairness.
@@ -94,13 +109,116 @@ impl DirectEngine {
                 })
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
-        Ok(Self {
+        let eng = Self {
             devices: devs,
+            root: root.to_path_buf(),
             dict: RwLock::new(HashMap::new()),
             next_start: AtomicU64::new(0),
             stats: IoStats::default(),
             alloc_lock: Mutex::new(()),
-        })
+        };
+        eng.load_dict()?;
+        Ok(eng)
+    }
+
+    /// Restore a journaled tensor-location dictionary (and the offset
+    /// counters) from a previous run, if one exists at this root.
+    fn load_dict(&self) -> anyhow::Result<()> {
+        let path = self.root.join(DICT_FILE);
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            return Ok(()); // fresh root
+        };
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("direct: corrupt {DICT_FILE}: {e}"))?;
+        let mut dict = HashMap::new();
+        for (key, entry) in j
+            .req("tensors")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("direct: {DICT_FILE}: tensors not an object"))?
+        {
+            let len = entry
+                .req("len")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("direct: {DICT_FILE}: bad len"))?;
+            let mut extents = Vec::new();
+            for e in entry.req("ext")?.as_arr().unwrap_or(&[]) {
+                let t = e
+                    .as_arr()
+                    .filter(|t| t.len() == 3)
+                    .ok_or_else(|| anyhow::anyhow!("direct: {DICT_FILE}: bad extent"))?;
+                let dev = t[0].as_usize().unwrap_or(usize::MAX);
+                anyhow::ensure!(
+                    dev < self.devices.len(),
+                    "direct: {DICT_FILE} references device {dev}, \
+                     but the engine was opened with {} devices",
+                    self.devices.len()
+                );
+                extents.push(Extent {
+                    dev,
+                    offset: t[1].as_u64().unwrap_or(0),
+                    len: t[2].as_usize().unwrap_or(0),
+                });
+            }
+            dict.insert(key.clone(), (extents, len));
+        }
+        if let Some(next) = j.get("next").and_then(|n| n.as_arr()) {
+            for (d, n) in self.devices.iter().zip(next) {
+                d.next_offset
+                    .store(n.as_u64().unwrap_or(0), Ordering::Relaxed);
+            }
+        }
+        // belt and braces: never allocate below a restored extent even
+        // if the counters in the journal lagged the tensor entries
+        for (ext, _) in dict.values() {
+            for e in ext {
+                let end = e.offset + (e.len.div_ceil(LBA_SIZE) * LBA_SIZE) as u64;
+                let d = &self.devices[e.dev];
+                d.next_offset.fetch_max(end, Ordering::Relaxed);
+            }
+        }
+        *self.dict.write().unwrap() = dict;
+        Ok(())
+    }
+
+    /// Journal the dictionary to the sidecar (atomic tmp+rename).
+    /// Called under the allocation lock — once per *new* tensor, never
+    /// on the transfer path.
+    fn persist_dict(&self) -> anyhow::Result<()> {
+        let dict = self.dict.read().unwrap();
+        let tensors = Json::Obj(
+            dict.iter()
+                .map(|(k, (ext, len))| {
+                    let ext_json: Vec<Json> = ext
+                        .iter()
+                        .map(|e| {
+                            Json::Arr(vec![
+                                Json::from(e.dev),
+                                Json::from(e.offset),
+                                Json::from(e.len),
+                            ])
+                        })
+                        .collect();
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("len", Json::from(*len)),
+                            ("ext", Json::Arr(ext_json)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        drop(dict);
+        let next: Vec<Json> = self
+            .devices
+            .iter()
+            .map(|d| Json::from(d.next_offset.load(Ordering::Relaxed)))
+            .collect();
+        let blob = Json::obj(vec![("next", Json::Arr(next)), ("tensors", tensors)]);
+        let tmp = self.root.join(format!("{DICT_FILE}.tmp"));
+        std::fs::write(&tmp, blob.to_string())?;
+        std::fs::rename(&tmp, self.root.join(DICT_FILE))?;
+        Ok(())
     }
 
     /// Allocate striped extents for a new tensor of `len` bytes:
@@ -142,6 +260,9 @@ impl DirectEngine {
             .write()
             .unwrap()
             .insert(key.to_string(), (extents.clone(), len));
+        // journal the updated dictionary while the allocation lock is
+        // still held — crash after this point loses no location state
+        self.persist_dict()?;
         Ok(extents)
     }
 
@@ -352,6 +473,21 @@ impl NvmeEngine for DirectEngine {
         Ok(())
     }
 
+    fn flush(&self, key: &str) -> anyhow::Result<()> {
+        // real durability barrier: fdatasync every device file holding
+        // one of the key's extents (absent key -> nothing to flush)
+        let Some((extents, _)) = self.lookup(key) else {
+            return Ok(());
+        };
+        let mut devs: Vec<usize> = extents.iter().map(|e| e.dev).collect();
+        devs.sort_unstable();
+        devs.dedup();
+        for d in devs {
+            self.devices[d].file.sync_data()?;
+        }
+        Ok(())
+    }
+
     fn reserve(&self, key: &str, len: usize) -> anyhow::Result<()> {
         // allocation without data movement: the location allocator
         // hands out the extents, the sparse device files read back
@@ -468,6 +604,70 @@ mod tests {
         assert_eq!(o4, data);
         std::fs::remove_dir_all(&d1).ok();
         std::fs::remove_dir_all(&d4).ok();
+    }
+
+    #[test]
+    fn reopen_restores_dictionary_and_data() {
+        let dir = std::env::temp_dir()
+            .join(format!("ma-direct-reopen-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let data: Vec<u8> = (0..90_000).map(|i| (i % 241) as u8).collect();
+        let e1_extents;
+        {
+            let eng = DirectEngine::new(&dir, 2, 1 << 26, 1).unwrap();
+            eng.write("persist/me", &data).unwrap();
+            eng.flush("persist/me").unwrap();
+            e1_extents = eng.lookup("persist/me").unwrap().0;
+        } // engine dropped: simulates process exit
+        let eng = DirectEngine::new(&dir, 2, 1 << 26, 1).unwrap();
+        assert_eq!(eng.len_of("persist/me"), Some(data.len()));
+        assert_eq!(
+            eng.lookup("persist/me").unwrap().0,
+            e1_extents,
+            "extents survive reopen bit-identically"
+        );
+        let mut out = vec![0u8; data.len()];
+        eng.read("persist/me", &mut out).unwrap();
+        assert_eq!(out, data);
+        // new allocations after reopen must not overlap restored extents
+        eng.write("fresh", &[7u8; 30_000]).unwrap();
+        let fresh = eng.lookup("fresh").unwrap().0;
+        for f in &fresh {
+            for e in &e1_extents {
+                if f.dev == e.dev {
+                    let f_end = f.offset + f.len as u64;
+                    let e_end = e.offset + e.len as u64;
+                    assert!(
+                        f_end <= e.offset || f.offset >= e_end,
+                        "fresh extent {f:?} overlaps restored {e:?}"
+                    );
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reopen_with_fewer_devices_is_rejected() {
+        let dir = std::env::temp_dir()
+            .join(format!("ma-direct-shrink-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        {
+            let eng = DirectEngine::new(&dir, 3, 1 << 22, 1).unwrap();
+            eng.write("t", &[1u8; 50_000]).unwrap();
+        }
+        let err = DirectEngine::new(&dir, 1, 1 << 22, 1).unwrap_err();
+        assert!(err.to_string().contains("references device"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flush_absent_key_is_noop() {
+        let (eng, dir) = mk("fl", 2, 1);
+        eng.flush("never/written").unwrap();
+        eng.write("t", &[5u8; 10_000]).unwrap();
+        eng.flush("t").unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

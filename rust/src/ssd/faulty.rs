@@ -1,84 +1,215 @@
 //! Fault-injecting engine wrapper — failure-injection testing.
 //!
-//! Wraps any `NvmeEngine` and fails a deterministic subset of
-//! operations (seeded), letting integration tests prove that I/O
+//! Wraps a shared `Arc<dyn NvmeEngine>` and fails a deterministic
+//! subset of operations, letting integration tests prove that I/O
 //! errors surface as `Err` through the swapper/optimizer/trainer
-//! instead of corrupting state or deadlocking the prefetch pipeline.
+//! instead of corrupting state or deadlocking the prefetch pipeline —
+//! and that the retry layer ([`crate::ssd::retry`]) absorbs transient
+//! faults without changing a byte.
+//!
+//! Three ingredients compose:
+//!
+//! - **Mode** ([`FaultMode`]): probabilistic (seeded, reproducible
+//!   fail rate per op) or transient (every op fails its first N
+//!   attempts, then succeeds — the shape bounded retry must absorb;
+//!   `N = u32::MAX` is a persistent fault).
+//! - **Mask** ([`OpMask`]): which op kinds inject.  *Every* kind is
+//!   maskable — including `flush` and `reserve` — so flush-barrier
+//!   error paths (`flush_groups`, `Trainer::drain`, the checkpoint
+//!   journal's epoch commit) and allocation error paths are
+//!   independently exercisable.  The default mask is the data ops
+//!   only (read/write/read_at/write_at), which keeps fault tests
+//!   aimed at the tile pipeline's data path unless they opt in.
+//! - **Metering**: `injected` counts the faults actually thrown.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::util::rng::SplitMix64;
 
 use super::{IoSnapshot, NvmeEngine};
 
-pub struct FaultyEngine<E> {
-    inner: E,
-    /// Probability of failing each op, in 1/1024 units.
-    fail_per_1024: u64,
-    seed: u64,
+/// Operation kinds the injector can target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Read,
+    Write,
+    ReadAt,
+    WriteAt,
+    Flush,
+    Reserve,
+}
+
+impl OpKind {
+    fn bit(self) -> u8 {
+        match self {
+            OpKind::Read => 1 << 0,
+            OpKind::Write => 1 << 1,
+            OpKind::ReadAt => 1 << 2,
+            OpKind::WriteAt => 1 << 3,
+            OpKind::Flush => 1 << 4,
+            OpKind::Reserve => 1 << 5,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            OpKind::Read => "read",
+            OpKind::Write => "write",
+            OpKind::ReadAt => "ranged-read",
+            OpKind::WriteAt => "ranged-write",
+            OpKind::Flush => "flush",
+            OpKind::Reserve => "reserve",
+        }
+    }
+}
+
+/// Per-op-kind injection mask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpMask(u8);
+
+impl OpMask {
+    /// Data transfers only (read/write/read_at/write_at) — the
+    /// historical behavior, and the default.
+    pub const DATA: OpMask = OpMask(0b0000_1111);
+    /// Every op kind, including `flush` and `reserve`.
+    pub const ALL: OpMask = OpMask(0b0011_1111);
+    /// No injection at all (useful as a base for `with`).
+    pub const NONE: OpMask = OpMask(0);
+    /// Flush barriers only.
+    pub const FLUSH: OpMask = OpMask(1 << 4);
+
+    pub const fn with(self, kind: OpKind) -> OpMask {
+        OpMask(self.0 | kind.bit())
+    }
+
+    pub const fn contains(self, kind: OpKind) -> bool {
+        self.0 & kind.bit() != 0
+    }
+}
+
+impl Default for OpMask {
+    fn default() -> Self {
+        OpMask::DATA
+    }
+}
+
+enum FaultMode {
+    /// Fail each masked op with probability `per_1024/1024`,
+    /// deterministic per (seed, op index).
+    Random { per_1024: u64, seed: u64 },
+    /// Fail the first `fail_first` attempts of each distinct masked op
+    /// — keyed by (kind, key, offset) — then succeed.  `u32::MAX`
+    /// never recovers (persistent fault).
+    Transient { fail_first: u32 },
+}
+
+pub struct FaultyEngine {
+    inner: Arc<dyn NvmeEngine>,
+    mode: FaultMode,
+    mask: OpMask,
     op_counter: AtomicU64,
+    /// Attempt counts for transient mode, per (kind, key, offset).
+    attempts: Mutex<HashMap<(OpKind, String, usize), u32>>,
     pub injected: AtomicU64,
 }
 
-impl<E: NvmeEngine> FaultyEngine<E> {
-    pub fn new(inner: E, fail_per_1024: u64, seed: u64) -> Self {
+impl FaultyEngine {
+    /// Probabilistic injector: each masked op fails with probability
+    /// `fail_per_1024 / 1024`, deterministically by `seed` (default
+    /// mask: data ops only).
+    pub fn new(inner: Arc<dyn NvmeEngine>, fail_per_1024: u64, seed: u64) -> Self {
         Self {
             inner,
-            fail_per_1024,
-            seed,
+            mode: FaultMode::Random { per_1024: fail_per_1024, seed },
+            mask: OpMask::DATA,
             op_counter: AtomicU64::new(0),
+            attempts: Mutex::new(HashMap::new()),
             injected: AtomicU64::new(0),
         }
     }
 
-    fn should_fail(&self) -> bool {
-        let op = self.op_counter.fetch_add(1, Ordering::Relaxed);
-        // deterministic per (seed, op index): reproducible failures
-        let mut rng = SplitMix64::new(self.seed ^ op.wrapping_mul(0x9E37_79B9));
-        let fail = rng.next_u64() % 1024 < self.fail_per_1024;
+    /// Transient injector: each distinct masked op — (kind, key,
+    /// offset) — fails its first `fail_first` attempts, then succeeds.
+    /// `u32::MAX` models a persistent fault.
+    pub fn transient(inner: Arc<dyn NvmeEngine>, fail_first: u32, mask: OpMask) -> Self {
+        Self {
+            inner,
+            mode: FaultMode::Transient { fail_first },
+            mask,
+            op_counter: AtomicU64::new(0),
+            attempts: Mutex::new(HashMap::new()),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Replace the op-kind mask (builder style).
+    pub fn with_mask(mut self, mask: OpMask) -> Self {
+        self.mask = mask;
+        self
+    }
+
+    fn should_fail(&self, kind: OpKind, key: &str, offset: usize) -> bool {
+        if !self.mask.contains(kind) {
+            return false;
+        }
+        let fail = match &self.mode {
+            FaultMode::Random { per_1024, seed } => {
+                let op = self.op_counter.fetch_add(1, Ordering::Relaxed);
+                // deterministic per (seed, op index): reproducible
+                let mut rng = SplitMix64::new(seed ^ op.wrapping_mul(0x9E37_79B9));
+                rng.next_u64() % 1024 < *per_1024
+            }
+            FaultMode::Transient { fail_first } => {
+                let mut at = self.attempts.lock().unwrap();
+                let n = at.entry((kind, key.to_string(), offset)).or_insert(0);
+                *n = n.saturating_add(1);
+                *n <= *fail_first
+            }
+        };
         if fail {
             self.injected.fetch_add(1, Ordering::Relaxed);
         }
         fail
     }
+
+    fn inject(&self, kind: OpKind, key: &str, offset: usize) -> anyhow::Result<()> {
+        if self.should_fail(kind, key, offset) {
+            anyhow::bail!("injected {} fault on '{key}'", kind.name());
+        }
+        Ok(())
+    }
 }
 
-impl<E: NvmeEngine> NvmeEngine for FaultyEngine<E> {
+impl NvmeEngine for FaultyEngine {
     fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
-        if self.should_fail() {
-            anyhow::bail!("injected write fault on '{key}'");
-        }
+        self.inject(OpKind::Write, key, 0)?;
         self.inner.write(key, data)
     }
 
     fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
-        if self.should_fail() {
-            anyhow::bail!("injected read fault on '{key}'");
-        }
+        self.inject(OpKind::Read, key, 0)?;
         self.inner.read(key, out)
     }
 
     fn read_at(&self, key: &str, offset: usize, out: &mut [u8]) -> anyhow::Result<()> {
-        if self.should_fail() {
-            anyhow::bail!("injected ranged-read fault on '{key}'");
-        }
+        self.inject(OpKind::ReadAt, key, offset)?;
         self.inner.read_at(key, offset, out)
     }
 
     fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
-        if self.should_fail() {
-            anyhow::bail!("injected ranged-write fault on '{key}'");
-        }
+        self.inject(OpKind::WriteAt, key, offset)?;
         self.inner.write_at(key, offset, data)
     }
 
     fn reserve(&self, key: &str, len: usize) -> anyhow::Result<()> {
-        // allocation, not a data transfer: forwarded without injection
-        // so fault tests target the tile pipeline's data path
+        self.inject(OpKind::Reserve, key, 0)?;
         self.inner.reserve(key, len)
     }
 
     fn flush(&self, key: &str) -> anyhow::Result<()> {
+        self.inject(OpKind::Flush, key, 0)?;
         self.inner.flush(key)
     }
 
@@ -100,11 +231,17 @@ mod tests {
     use super::*;
     use crate::ssd::DirectEngine;
 
-    fn mk(fail: u64) -> (FaultyEngine<DirectEngine>, std::path::PathBuf) {
+    fn direct(tag: &str) -> (Arc<dyn NvmeEngine>, std::path::PathBuf) {
         let dir = std::env::temp_dir()
-            .join(format!("ma-faulty-{fail}-{}", std::process::id()));
+            .join(format!("ma-faulty-{tag}-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let inner = DirectEngine::new(&dir, 1, 1 << 22, 1).unwrap();
+        let e: Arc<dyn NvmeEngine> =
+            Arc::new(DirectEngine::new(&dir, 1, 1 << 22, 1).unwrap());
+        (e, dir)
+    }
+
+    fn mk(fail: u64) -> (FaultyEngine, std::path::PathBuf) {
+        let (inner, dir) = direct(&format!("p{fail}"));
         (FaultyEngine::new(inner, fail, 7), dir)
     }
 
@@ -151,6 +288,60 @@ mod tests {
             if eng.read(&k, &mut out).is_ok() {
                 assert_eq!(out, want);
             }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn default_mask_spares_flush_and_reserve() {
+        let (inner, dir) = direct("mask-def");
+        let eng = FaultyEngine::new(inner, 1024, 3); // fail every data op
+        assert!(eng.write("k", &[1u8; 64]).is_err());
+        eng.reserve("r", 4096).unwrap();
+        eng.flush("r").unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flush_mask_injects_only_flush() {
+        let (inner, dir) = direct("mask-fl");
+        let eng = FaultyEngine::new(inner, 1024, 3).with_mask(OpMask::FLUSH);
+        eng.write("k", &[1u8; 64]).unwrap();
+        let err = eng.flush("k").unwrap_err();
+        assert!(err.to_string().contains("flush"), "{err}");
+        assert!(eng.injected.load(Ordering::Relaxed) > 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn transient_mode_fails_then_recovers_per_op() {
+        let (inner, dir) = direct("tr");
+        let eng = FaultyEngine::transient(inner, 2, OpMask::ALL);
+        // distinct (kind, key, offset) ops each get their own counter
+        assert!(eng.write("a", &[1u8; 32]).is_err());
+        assert!(eng.write("b", &[2u8; 32]).is_err());
+        assert!(eng.write("a", &[1u8; 32]).is_err());
+        eng.write("a", &[1u8; 32]).unwrap(); // third attempt succeeds
+        assert!(eng.write("b", &[2u8; 32]).is_err());
+        eng.write("b", &[2u8; 32]).unwrap();
+        // ranged ops key by offset: two tiles fail independently
+        eng.reserve("t", 8192).unwrap_err();
+        eng.reserve("t", 8192).unwrap_err();
+        eng.reserve("t", 8192).unwrap();
+        for off in [0usize, 4096] {
+            assert!(eng.write_at("t", off, &[3u8; 64]).is_err());
+            assert!(eng.write_at("t", off, &[3u8; 64]).is_err());
+            eng.write_at("t", off, &[3u8; 64]).unwrap();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn persistent_transient_never_recovers() {
+        let (inner, dir) = direct("pers");
+        let eng = FaultyEngine::transient(inner, u32::MAX, OpMask::ALL);
+        for _ in 0..20 {
+            assert!(eng.write("k", &[0u8; 16]).is_err());
         }
         std::fs::remove_dir_all(&dir).ok();
     }

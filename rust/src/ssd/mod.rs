@@ -24,18 +24,58 @@
 //! worker pools, plus [`queue::AsyncEngine`] — the `submit_read` /
 //! `submit_write` surface the swapper pipeline and the double-buffered
 //! optimizer swap are built from.
+//!
+//! ## Durability contract
+//!
+//! The write path is deliberately two-phase so the training loop pays
+//! no per-step durability tax:
+//!
+//! - `write`/`write_at` make data *visible* (a subsequent read on any
+//!   thread returns the new bytes) but not necessarily *durable*: the
+//!   tiled optimizer's ranged writes never fsync per tile.
+//! - [`NvmeEngine::flush`] is the explicit per-key durability barrier.
+//!   What it guarantees per engine:
+//!   - [`FsEngine`]: `fdatasync` on every RAID member file of the key —
+//!     after `flush(k)` returns, `k`'s bytes survive a crash.
+//!   - [`DirectEngine`]: `fdatasync` on every device file holding one
+//!     of `k`'s extents, after verifying the key's location-dictionary
+//!     entry is persisted (the dictionary itself is journaled to a
+//!     sidecar at allocation time, off the data path, so a reopened
+//!     engine can find every tensor again).
+//!   - [`queue::AsyncEngine`]: delegates to the wrapped engine, after
+//!     the caller has drained its in-flight submissions for the key.
+//!
+//!   The PR-3 caveat ("buffered ranged writes reach a defined durable
+//!   state only at drain") is thereby resolved into a contract: the
+//!   checkpoint path ([`crate::ckpt`]) issues per-key `flush` barriers
+//!   and then commits an epoch journal, so a crash rolls back to the
+//!   last committed epoch instead of losing the run.
+//!
+//! ## Transient-fault retry
+//!
+//! [`retry::RetryEngine`] wraps any engine with bounded,
+//! exponential-backoff retry ([`retry::RetryPolicy`]). Every submit
+//! path in [`queue`] runs through the wrapped engine, so async
+//! fetches/write-backs inherit the retry behavior with no extra
+//! plumbing. Retries are metered in [`IoSnapshot::retries`];
+//! exhaustion still surfaces the last `Err` to the caller.
+//! [`FaultyEngine`] provides the deterministic fault injection
+//! (probabilistic, transient fail-then-succeed, or per-op-kind masks)
+//! the retry and recovery tests are built on.
 
 pub mod device_model;
 pub mod faulty;
 pub mod direct;
 pub mod fs_engine;
 pub mod queue;
+pub mod retry;
 
 pub use device_model::DeviceModel;
-pub use faulty::FaultyEngine;
+pub use faulty::{FaultyEngine, OpKind, OpMask};
 pub use direct::DirectEngine;
 pub use fs_engine::FsEngine;
 pub use queue::{io_scope, AsyncEngine, IoExecutor, IoHandle, IoScope};
+pub use retry::{RetryEngine, RetryPolicy};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -189,6 +229,7 @@ impl IoStats {
             busy_ns,
             queue_busy_ns,
             queue_count,
+            retries: 0,
         }
     }
 }
@@ -208,6 +249,11 @@ pub struct IoSnapshot {
     pub queue_busy_ns: [u64; MAX_QUEUES],
     /// Queues that ever went busy (`<= MAX_QUEUES`).
     pub queue_count: usize,
+    /// Transient-fault retries performed by a [`RetryEngine`] layered
+    /// over this engine (0 when no retry layer is present).  A
+    /// non-zero count with a successful op means the backoff absorbed
+    /// a transient fault; exhausted retries still surface as `Err`.
+    pub retries: u64,
 }
 
 impl IoSnapshot {
@@ -296,13 +342,15 @@ pub trait NvmeEngine: Send + Sync {
     /// tiles.
     fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()>;
 
-    /// Make any buffered ranged writes to `key` durable (the fsync
-    /// analog).  Default is a no-op — correct for engines whose
-    /// writes are already synchronous or whose durability is out of
-    /// scope (the direct engine's raw device files).  `write_at` never
-    /// syncs per tile; callers that need a durability point (e.g. a
-    /// checkpoint path — the training loop does not, state is rebuilt
-    /// on restart) call this once per key.
+    /// Make `key`'s stored bytes durable (the fsync analog) — the
+    /// per-key barrier the checkpoint journal's epoch commit is built
+    /// on (see the module-level durability contract).  `write_at`
+    /// never syncs per tile; callers that need a durability point
+    /// (the [`crate::ckpt`] commit path, `Trainer::drain`) call this
+    /// once per key after their buffered/ranged writes.  Flushing an
+    /// absent key is a no-op, so barriers can sweep optional keys.
+    /// Default is a no-op — only correct for engines whose writes are
+    /// already durable on return; both real engines override it.
     fn flush(&self, _key: &str) -> anyhow::Result<()> {
         Ok(())
     }

@@ -44,6 +44,14 @@
 //! and inside the pinned budget, and the lease travels through the
 //! handle back to the caller (or drops, releasing its extent, if the
 //! pipeline is torn down mid-flight).
+//!
+//! Fault tolerance composes by layering, not by queue logic: every
+//! submit path closes over the wrapped [`NvmeEngine`] handed to
+//! [`AsyncEngine::new`] and calls its sync surface from the worker, so
+//! stacking a [`super::RetryEngine`] under the queue gives *every*
+//! async submission — whole-tensor and ranged alike — the same bounded
+//! retry/backoff semantics as direct sync calls, with no retry code in
+//! the workers themselves.
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;

@@ -1,0 +1,232 @@
+//! Bounded retry with exponential backoff for transient I/O faults.
+//!
+//! SSD-offloaded training pushes every optimizer byte through the
+//! engine each step, so a single transient EIO (link reset, thermal
+//! throttle hiccup, injected fault) would otherwise kill a multi-hour
+//! run.  [`RetryEngine`] wraps any [`NvmeEngine`] and retries each
+//! failing operation up to [`RetryPolicy::max_attempts`] times with
+//! exponential backoff; the async layer's submit paths
+//! ([`crate::ssd::queue::AsyncEngine`]) call through the wrapped
+//! engine, so swapper fetches, tiled write-backs, and flush barriers
+//! all inherit the retry behavior from this one seam.
+//!
+//! Retries are *metered*, not silent: every repeated attempt bumps the
+//! counter surfaced as [`IoSnapshot::retries`], which the trainer
+//! reports per step (`StepMetrics::io_retries`).  Exhaustion surfaces
+//! the last error unchanged — the retry layer narrows the failure
+//! window, it never converts an error into silence.  Permanent errors
+//! (missing key, out-of-bounds range) are retried too — the engine
+//! cannot distinguish fault classes portably — but the bounded policy
+//! caps the added latency at `max_attempts - 1` backoffs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::{IoSnapshot, NvmeEngine};
+
+/// Retry budget + backoff schedule.  Delay before attempt `k` (1-based
+/// retries) is `base_delay * 2^(k-1)`, capped at `max_delay`.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts per op (first try included).  `<= 1` disables
+    /// retry.
+    pub max_attempts: u32,
+    pub base_delay: Duration,
+    pub max_delay: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 3,
+            base_delay: Duration::from_micros(500),
+            max_delay: Duration::from_millis(50),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Policy for `attempts` total attempts with the default backoff.
+    pub fn attempts(attempts: u32) -> Self {
+        Self { max_attempts: attempts.max(1), ..Default::default() }
+    }
+
+    fn delay_for(&self, retry_idx: u32) -> Duration {
+        let factor = 1u32 << retry_idx.min(16);
+        (self.base_delay * factor).min(self.max_delay)
+    }
+}
+
+/// Run `op` under `policy`, charging each repeat to `retries`.
+/// Returns the first success or the last error once attempts are
+/// exhausted.
+pub fn with_retry<T>(
+    policy: &RetryPolicy,
+    retries: &AtomicU64,
+    mut op: impl FnMut() -> anyhow::Result<T>,
+) -> anyhow::Result<T> {
+    let attempts = policy.max_attempts.max(1);
+    let mut last = None;
+    for i in 0..attempts {
+        if i > 0 {
+            retries.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(policy.delay_for(i - 1));
+        }
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.expect("attempts >= 1"))
+}
+
+/// [`NvmeEngine`] decorator applying [`RetryPolicy`] to every
+/// operation.  Sits *below* [`crate::ssd::queue::AsyncEngine`] in the
+/// offload engine's stack, so synchronous calls and queued submit
+/// closures retry identically.
+pub struct RetryEngine {
+    inner: Arc<dyn NvmeEngine>,
+    policy: RetryPolicy,
+    retries: AtomicU64,
+}
+
+impl RetryEngine {
+    pub fn new(inner: Arc<dyn NvmeEngine>, policy: RetryPolicy) -> Self {
+        Self { inner, policy, retries: AtomicU64::new(0) }
+    }
+
+    /// Retries performed so far (also folded into
+    /// [`IoSnapshot::retries`]).
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+}
+
+impl NvmeEngine for RetryEngine {
+    fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
+        with_retry(&self.policy, &self.retries, || self.inner.write(key, data))
+    }
+
+    fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
+        with_retry(&self.policy, &self.retries, || self.inner.read(key, out))
+    }
+
+    fn read_at(&self, key: &str, offset: usize, out: &mut [u8]) -> anyhow::Result<()> {
+        with_retry(&self.policy, &self.retries, || {
+            self.inner.read_at(key, offset, out)
+        })
+    }
+
+    fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
+        with_retry(&self.policy, &self.retries, || {
+            self.inner.write_at(key, offset, data)
+        })
+    }
+
+    fn flush(&self, key: &str) -> anyhow::Result<()> {
+        with_retry(&self.policy, &self.retries, || self.inner.flush(key))
+    }
+
+    fn reserve(&self, key: &str, len: usize) -> anyhow::Result<()> {
+        with_retry(&self.policy, &self.retries, || self.inner.reserve(key, len))
+    }
+
+    fn len_of(&self, key: &str) -> Option<usize> {
+        self.inner.len_of(key)
+    }
+
+    fn stats(&self) -> IoSnapshot {
+        let mut s = self.inner.stats();
+        s.retries += self.retries();
+        s
+    }
+
+    fn label(&self) -> &'static str {
+        self.inner.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssd::faulty::{FaultyEngine, OpMask};
+    use crate::ssd::DirectEngine;
+
+    fn direct(tag: &str) -> (Arc<dyn NvmeEngine>, std::path::PathBuf) {
+        let dir =
+            std::env::temp_dir().join(format!("ma-retry-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let e: Arc<dyn NvmeEngine> =
+            Arc::new(DirectEngine::new(&dir, 1, 1 << 22, 1).unwrap());
+        (e, dir)
+    }
+
+    #[test]
+    fn transient_faults_absorbed_and_metered() {
+        let (inner, dir) = direct("tr");
+        // every op fails twice, then succeeds; 3 attempts cover it
+        let faulty = Arc::new(FaultyEngine::transient(inner, 2, OpMask::ALL));
+        let eng = RetryEngine::new(faulty.clone(), RetryPolicy::attempts(3));
+        eng.write("k", &[7u8; 256]).unwrap();
+        let mut out = [0u8; 256];
+        eng.read("k", &mut out).unwrap();
+        assert_eq!(out, [7u8; 256]);
+        eng.flush("k").unwrap();
+        // write: 2 retries, read: 2, flush: 2
+        assert_eq!(eng.retries(), 6);
+        assert_eq!(eng.stats().retries, 6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn exhaustion_surfaces_the_error() {
+        let (inner, dir) = direct("ex");
+        // fails 5 times per op; 3 attempts are not enough
+        let faulty = Arc::new(FaultyEngine::transient(inner, 5, OpMask::ALL));
+        let eng = RetryEngine::new(faulty, RetryPolicy::attempts(3));
+        let err = eng.write("k", &[1u8; 64]).unwrap_err();
+        assert!(err.to_string().contains("injected"), "{err}");
+        assert_eq!(eng.retries(), 2, "both retries charged");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn single_attempt_policy_never_retries() {
+        let (inner, dir) = direct("one");
+        let faulty = Arc::new(FaultyEngine::transient(inner, 1, OpMask::ALL));
+        let eng = RetryEngine::new(faulty, RetryPolicy::attempts(1));
+        assert!(eng.write("k", &[0u8; 16]).is_err());
+        assert_eq!(eng.retries(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fault_free_path_is_transparent() {
+        let (inner, dir) = direct("ok");
+        let eng = RetryEngine::new(inner, RetryPolicy::default());
+        eng.write("k", &[3u8; 128]).unwrap();
+        eng.reserve("r", 4096).unwrap();
+        eng.write_at("r", 512, &[9u8; 64]).unwrap();
+        let mut out = [0u8; 64];
+        eng.read_at("r", 512, &mut out).unwrap();
+        assert_eq!(out, [9u8; 64]);
+        assert_eq!(eng.retries(), 0);
+        assert_eq!(eng.len_of("k"), Some(128));
+        assert_eq!(eng.label(), "direct-nvme");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn backoff_schedule_is_capped() {
+        let p = RetryPolicy {
+            max_attempts: 10,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(4),
+        };
+        assert_eq!(p.delay_for(0), Duration::from_millis(1));
+        assert_eq!(p.delay_for(1), Duration::from_millis(2));
+        assert_eq!(p.delay_for(2), Duration::from_millis(4));
+        assert_eq!(p.delay_for(7), Duration::from_millis(4), "capped");
+    }
+}

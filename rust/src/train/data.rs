@@ -59,6 +59,18 @@ impl Corpus {
     pub fn vocab(&self) -> usize {
         self.vocab
     }
+
+    /// Data-loader cursor for checkpointing.  The phrase library is a
+    /// pure function of (vocab, seed), so the generator state is the
+    /// whole cursor: rebuild the corpus with the same seed, then
+    /// [`Corpus::set_rng_state`] to continue the exact batch sequence.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    pub fn set_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Xoshiro256::from_state(s);
+    }
 }
 
 #[cfg(test)]

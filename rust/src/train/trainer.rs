@@ -62,6 +62,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::ckpt::{self, CkptState, Journal};
 use crate::config::{ModelSpec, TrainSpec};
 use crate::metrics::{RunReport, StepMetrics};
 use crate::offload::SpillingActivationStore;
@@ -71,7 +72,7 @@ use crate::runtime::{Runtime, TensorBuf, ValueRef};
 use crate::tensors::TensorDesc;
 use crate::train::data::Corpus;
 use crate::train::governor::{GovernorConfig, GovernorSample, PipelineGovernor, PipelineTuning};
-use crate::train::weights::{fp16_key, init_weights, ModelState};
+use crate::train::weights::{fp16_key, init_weights, resume_weights, ModelState};
 
 #[derive(Debug, Clone)]
 pub struct TrainOpts {
@@ -99,6 +100,22 @@ pub struct Trainer {
     corpus: Corpus,
     hp: AdamParams,
     applied_steps: u64,
+    /// Steps completed on this storage, across resumes — `run` numbers
+    /// its steps and the checkpoint cadence from it.
+    steps_done: u64,
+    /// Weight-init / data seed this storage was created with; journaled
+    /// so resume can refuse a mismatched restart.
+    seed: u64,
+    /// Dual-slot epoch journal over the engine
+    /// ([`crate::ckpt::Journal`]).  Always constructed; commits only
+    /// happen at `TrainSpec::ckpt_interval_steps` cadence.
+    journal: Journal,
+    /// Newest epoch committed on this storage (0 = none).
+    last_epoch: u64,
+    /// Whether the on-SSD state has diverged from `last_epoch` — set by
+    /// the first optimizer write-back after a commit (recorded durably
+    /// via the journal's dirty marker before any key changes).
+    epoch_dirty: bool,
     /// Offloadable tensors in forward order (the swapper plan).
     fwd_plan: Vec<TensorDesc>,
     /// Block weight result order, resolved from the manifest once.
@@ -139,6 +156,19 @@ impl Trainer {
             _ => StateDtype::F32,
         };
         let state = init_weights(spec, engine.nvme.as_ref(), state_dtype, opts.seed)?;
+        // fresh initialization just overwrote whatever a previous run
+        // left on this storage — a stale journal here must not stay
+        // resumable.  Mark its epoch dirty, and keep numbering past it
+        // so this run's first commit beats the stale record in the
+        // dual-slot load.
+        let journal = Journal::new(engine.nvme.clone());
+        let last_epoch = match journal.load() {
+            Some(stale) => {
+                journal.mark_dirty(stale.epoch)?;
+                stale.epoch
+            }
+            None => 0,
+        };
         let flat = GradFlatBuffer::new(&state.inv, &engine.arena)?;
         let scaler = if train.precision.needs_overflow_check() {
             LossScaler::new(train.init_loss_scale, train.scale_growth_interval)
@@ -208,6 +238,198 @@ impl Trainer {
             corpus,
             hp,
             applied_steps: 0,
+            steps_done: 0,
+            seed: opts.seed,
+            journal,
+            last_epoch,
+            // stale epochs were dirtied above; fresh storage has
+            // nothing to invalidate
+            epoch_dirty: last_epoch > 0,
+            fwd_plan,
+            block_names,
+            scratch,
+            tuning,
+            governor,
+            coalesced,
+        })
+    }
+
+    /// Reopen a checkpointed run and continue bit-identically from its
+    /// newest committed epoch.
+    ///
+    /// The inverse of [`Self::new`] over storage that already holds the
+    /// training state: replays the journal instead of re-initializing
+    /// weights (no RNG consumed, no SSD writes, no DRAM re-staging of
+    /// optimizer state — the tensors stay on the SSD and only the small
+    /// resident norms read back), validates the epoch against the
+    /// storage inventory (every key length, the coalesce-layout digest,
+    /// model/seed/dtype), and restores the loss scaler, data-loader RNG
+    /// cursor, and step counters.  Structured errors — never silent
+    /// divergence — when the storage holds no journal, when state was
+    /// dirtied after the last commit (crash mid-epoch; only the epochs
+    /// the journal names are recoverable), or when the resume
+    /// configuration diverges from the journaled one.
+    pub fn resume(
+        artifacts_dir: &Path,
+        storage_dir: &Path,
+        train: TrainSpec,
+        opts: &TrainOpts,
+    ) -> anyhow::Result<Self> {
+        let rt = Arc::new(Runtime::load(artifacts_dir)?);
+        let spec = rt.manifest().model_spec()?;
+        anyhow::ensure!(
+            rt.manifest().config.seq == train.seq
+                && rt.manifest().config.batch == train.batch,
+            "artifacts were exported for batch={} seq={}; re-export or adjust",
+            rt.manifest().config.batch,
+            rt.manifest().config.seq
+        );
+        let engine = OffloadEngine::new(spec, &train, storage_dir)?;
+        let journal = Journal::new(engine.nvme.clone());
+        let ck = journal.load().ok_or_else(|| {
+            anyhow::anyhow!(
+                "no checkpoint journal on this storage — start the run with \
+                 --ckpt-interval > 0 (TrainSpec::ckpt_interval_steps) to make \
+                 it resumable"
+            )
+        })?;
+        if let Some(dirty) = journal.dirty_epoch() {
+            anyhow::ensure!(
+                dirty < ck.epoch,
+                "cannot resume: on-SSD state was modified after epoch {} was \
+                 committed (crash mid-epoch) — the checkpoint no longer \
+                 describes the stored bytes",
+                ck.epoch
+            );
+        }
+        anyhow::ensure!(
+            ck.model == spec.name,
+            "checkpoint was taken for model '{}', resume asked for '{}'",
+            ck.model,
+            spec.name
+        );
+        anyhow::ensure!(
+            ck.seed == opts.seed,
+            "checkpoint was seeded with {}, resume requested {} (pass the \
+             original seed)",
+            ck.seed,
+            opts.seed
+        );
+        let state_dtype = match train.optim_dtype {
+            crate::dtype::DType::BF16 => StateDtype::BF16,
+            _ => StateDtype::F32,
+        };
+        let dtype_label = match state_dtype {
+            StateDtype::BF16 => "bf16",
+            StateDtype::F32 => "f32",
+        };
+        anyhow::ensure!(
+            ck.dtype == dtype_label,
+            "checkpoint optimizer state is {}, resume requested {dtype_label}",
+            ck.dtype
+        );
+        ck.validate_keys(engine.nvme.as_ref())?;
+
+        // rebuild everything from metadata plus the resident blobs —
+        // init_weights is never called, so nothing on the SSD is
+        // rewritten and the weight-init RNG stream is irrelevant
+        let state = resume_weights(spec, engine.nvme.as_ref(), state_dtype)?;
+        let flat = GradFlatBuffer::new(&state.inv, &engine.arena)?;
+        let mut scaler = if train.precision.needs_overflow_check() {
+            LossScaler::new(train.init_loss_scale, train.scale_growth_interval)
+        } else {
+            LossScaler::disabled()
+        };
+        scaler.restore((ck.scale, ck.good_steps, ck.overflows, ck.growths));
+        let mut corpus = Corpus::new(spec.vocab, opts.seed ^ 0xC0FFEE);
+        corpus.set_rng_state(ck.corpus_rng);
+        let hp = AdamParams {
+            lr: train.lr,
+            beta1: train.beta1,
+            beta2: train.beta2,
+            eps: train.eps,
+            weight_decay: train.weight_decay,
+        };
+        let fwd_plan: Vec<TensorDesc> =
+            state.inv.iter().filter(|t| t.offloadable()).cloned().collect();
+        let block_names = rt.manifest().block_weight_names.clone();
+        let scratch = Arc::new(F32Scratch::with_meter(
+            engine.arena.clone(),
+            engine.copy_meter.clone(),
+        ));
+        let tiled = train.io_workers > 0 && train.optim_tile_bytes > 0;
+        // governed runs continue the tuning trajectory where the
+        // checkpoint left it (bit-identical either way — retunes only
+        // resize disjoint-range I/O windows; this just skips
+        // re-warming); static runs keep the spec's knobs
+        let tuning = if train.governor && tiled {
+            PipelineTuning {
+                optim_tile_bytes: ck.tile_bytes.max(1),
+                tile_depth: ck.tile_depth.max(1),
+                prefetch_depth: ck.prefetch_depth.max(1),
+            }
+        } else {
+            PipelineTuning {
+                optim_tile_bytes: train.optim_tile_bytes,
+                tile_depth: train.optim_tile_depth.max(1),
+                prefetch_depth: train.prefetch_depth.max(1),
+            }
+        };
+        let governor = (train.governor && tiled).then(|| {
+            let d = GovernorConfig::default();
+            let cfg = GovernorConfig {
+                min_tile_bytes: d.min_tile_bytes.min(tuning.optim_tile_bytes),
+                max_tile_bytes: d.max_tile_bytes.max(tuning.optim_tile_bytes),
+                max_tile_depth: d.max_tile_depth.max(tuning.tile_depth),
+                max_prefetch_depth: d.max_prefetch_depth.max(tuning.prefetch_depth),
+                ..d
+            };
+            PipelineGovernor::new(cfg, tuning)
+        });
+        let coalesce_cfg = tiled && train.optim_coalesce_bytes > 0;
+        anyhow::ensure!(
+            coalesce_cfg == ck.layout_digest.is_some(),
+            "checkpoint {} coalesced optimizer streams but this resume {} \
+             (keep optim_coalesce_bytes consistent across restarts)",
+            if ck.layout_digest.is_some() { "used" } else { "did not use" },
+            if coalesce_cfg { "does" } else { "does not" },
+        );
+        if let Some(want) = ck.layout_digest {
+            let got = ckpt::stored_digest(
+                engine.nvme.as_ref(),
+                crate::optimizer::coalesce::LAYOUT_KEY,
+            )?;
+            anyhow::ensure!(
+                got == Some(want),
+                "persisted coalesce-layout blob diverged from the journaled \
+                 digest — storage was re-laid since the checkpoint"
+            );
+        }
+        let coalesced = coalesce_cfg
+            .then(|| {
+                CoalescedOptim::resume(
+                    engine.nvme.as_ref(),
+                    &state.offloaded,
+                    train.optim_coalesce_bytes,
+                )
+            })
+            .transpose()?;
+        Ok(Self {
+            rt,
+            engine,
+            spec,
+            train,
+            state,
+            flat,
+            scaler,
+            corpus,
+            hp,
+            applied_steps: ck.applied_steps,
+            steps_done: ck.steps_done,
+            seed: ck.seed,
+            journal,
+            last_epoch: ck.epoch,
+            epoch_dirty: false,
             fwd_plan,
             block_names,
             scratch,
@@ -225,6 +447,16 @@ impl Trainer {
 
     pub fn runtime(&self) -> &Runtime {
         &self.rt
+    }
+
+    /// Steps completed on this storage, across resumes.
+    pub fn steps_done(&self) -> u64 {
+        self.steps_done
+    }
+
+    /// Newest committed journal epoch (0 = none yet).
+    pub fn journal_epoch(&self) -> u64 {
+        self.last_epoch
     }
 
     /// Borrow a resident tensor as a stage argument — no staging copy
@@ -386,6 +618,16 @@ impl Trainer {
         let mut optim_tiles = 0u64;
         let mut degraded_tiles = 0u64;
         if !skip {
+            // commits are in place: the first write-back after a
+            // commit invalidates that epoch.  Record the divergence
+            // durably *before* any state key changes, so a crash
+            // mid-epoch resumes with a structured error instead of
+            // silently continuing from torn state.  (Skipped overflow
+            // steps write nothing, so they never dirty an epoch.)
+            if self.last_epoch > 0 && !self.epoch_dirty {
+                self.journal.mark_dirty(self.last_epoch)?;
+                self.epoch_dirty = true;
+            }
             self.applied_steps += 1;
             let t = self.applied_steps;
             let unscale = (scale * ranks as f64) as f32;
@@ -506,7 +748,13 @@ impl Trainer {
             tile_depth: self.tuning.tile_depth,
             prefetch_depth: self.tuning.prefetch_depth,
             host_copy_bytes: self.engine.copy_meter.bytes() - copies_before,
+            // checkpoints run between steps ([`Self::run`] stamps the
+            // cost in after the commit); 0.0 = no commit after this step
+            ckpt_secs: 0.0,
+            io_retries: io_after.retries - io_before.retries,
+            journal_epoch: self.last_epoch,
         };
+        self.steps_done = step_idx;
         // close the feedback loop: the governor sees exactly what the
         // step report says, plus the arena's reserved/budget state
         if let Some(gov) = &mut self.governor {
@@ -585,6 +833,107 @@ impl Trainer {
         }
     }
 
+    /// Optimizer-state dtype label as journaled ("f32" | "bf16").
+    fn dtype_label(&self) -> &'static str {
+        match self.train.optim_dtype {
+            crate::dtype::DType::BF16 => "bf16",
+            _ => "f32",
+        }
+    }
+
+    /// Every on-SSD key one checkpoint epoch covers, with stored
+    /// lengths.  Called after the flush barriers, so a missing key is
+    /// a commit-time invariant violation, not a race.
+    fn ckpt_keys(&self) -> anyhow::Result<Vec<(String, usize)>> {
+        let mut keys: Vec<String> = Vec::new();
+        match &self.coalesced {
+            // coalesced runs: state lives in the super-group streams
+            // (member state streams are stale by design)
+            Some(co) => {
+                for st in &co.supers {
+                    keys.extend(crate::optimizer::states::state_keys(&st.group));
+                }
+                keys.push(crate::optimizer::coalesce::LAYOUT_KEY.to_string());
+            }
+            None => {
+                for st in &self.state.offloaded {
+                    keys.extend(crate::optimizer::states::state_keys(&st.group));
+                }
+            }
+        }
+        for st in &self.state.offloaded {
+            keys.push(fp16_key(&st.group));
+        }
+        let mut resident: Vec<&String> = self.state.resident.keys().collect();
+        resident.sort();
+        for name in resident {
+            keys.push(ckpt::resident_key(name));
+        }
+        keys.into_iter()
+            .map(|k| {
+                let len = self.engine.nvme.len_of(&k).ok_or_else(|| {
+                    anyhow::anyhow!("checkpoint key '{k}' missing at commit time")
+                })?;
+                Ok((k, len))
+            })
+            .collect()
+    }
+
+    /// Commit one checkpoint epoch: flush barriers over every state and
+    /// fp16 stream ([`Self::drain`]), persist the host-resident tensors
+    /// and cursors, then atomically advance the journal — the previous
+    /// epoch stays recoverable until the next optimizer write-back.
+    /// Returns the elapsed seconds; [`Self::run`] surfaces them as
+    /// [`StepMetrics::ckpt_secs`], a durability tax deliberately kept
+    /// out of `io_wait_secs`.
+    pub fn checkpoint(&mut self) -> anyhow::Result<f64> {
+        let t0 = Instant::now();
+        // 1. barrier: buffered ranged writes reach a defined durable
+        //    state on every stream the epoch will name
+        self.drain()?;
+        // 2. the only byte-moving part: resident tensors (norms) and
+        //    their Adam state, in sorted order for determinism
+        let mut names: Vec<&String> = self.state.resident.keys().collect();
+        names.sort();
+        for name in names {
+            let rt = &self.state.resident[name];
+            ckpt::write_resident(self.engine.nvme.as_ref(), name, &rt.data, &rt.m, &rt.v)?;
+        }
+        let layout_digest = match &self.coalesced {
+            Some(_) => {
+                let key = crate::optimizer::coalesce::LAYOUT_KEY;
+                self.engine.nvme.flush(key)?;
+                ckpt::stored_digest(self.engine.nvme.as_ref(), key)?
+            }
+            None => None,
+        };
+        // 3. atomic journal advance — data is durable first, so a
+        //    visible record always describes state that exists
+        let (scale, good_steps, overflows, growths) = self.scaler.snapshot();
+        let ck = CkptState {
+            epoch: self.last_epoch + 1,
+            steps_done: self.steps_done,
+            applied_steps: self.applied_steps,
+            seed: self.seed,
+            model: self.spec.name.to_string(),
+            dtype: self.dtype_label().to_string(),
+            corpus_rng: self.corpus.rng_state(),
+            scale,
+            good_steps,
+            overflows,
+            growths,
+            tile_bytes: self.tuning.optim_tile_bytes,
+            tile_depth: self.tuning.tile_depth,
+            prefetch_depth: self.tuning.prefetch_depth,
+            keys: self.ckpt_keys()?,
+            layout_digest,
+        };
+        self.journal.commit(&ck)?;
+        self.last_epoch = ck.epoch;
+        self.epoch_dirty = false;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
     /// Run `opts.steps` steps, returning the full report.
     pub fn run(&mut self, opts: &TrainOpts) -> anyhow::Result<RunReport> {
         let mut report = RunReport {
@@ -592,11 +941,31 @@ impl Trainer {
             model: self.spec.name.to_string(),
             ..Default::default()
         };
+        let interval = self.train.ckpt_interval_steps as u64;
         for i in 0..opts.steps {
-            let m = self.step(i as u64 + 1)?;
+            // number steps across resumes: a resumed run continues at
+            // `steps_done + 1`, not 1
+            let idx = self.steps_done + 1;
+            let mut m = self.step(idx)?;
+            if interval > 0 && idx % interval == 0 {
+                m.ckpt_secs = self
+                    .checkpoint()
+                    .map_err(|e| e.context(format!("checkpoint commit failed after step {idx}")))?;
+                m.journal_epoch = self.last_epoch;
+            }
             if opts.log_every > 0 && (i + 1) % opts.log_every == 0 {
+                let mut extra = String::new();
+                if m.io_retries > 0 {
+                    extra.push_str(&format!("  io-retries {}", m.io_retries));
+                }
+                if interval > 0 {
+                    extra.push_str(&format!("  epoch {}", m.journal_epoch));
+                    if m.ckpt_secs > 0.0 {
+                        extra.push_str(&format!("  ckpt {:.2}s", m.ckpt_secs));
+                    }
+                }
                 log::info!(
-                    "step {:>4}  loss {:.4}  scale {:>8}  {:.2}s ({} tok/s)",
+                    "step {:>4}  loss {:.4}  scale {:>8}  {:.2}s ({} tok/s){extra}",
                     m.step,
                     m.loss,
                     m.loss_scale,
@@ -604,7 +973,7 @@ impl Trainer {
                     (m.tokens as f64 / m.step_secs) as u64
                 );
                 eprintln!(
-                    "[{}] step {:>4}  loss {:.4}  scale {}  {:.2}s",
+                    "[{}] step {:>4}  loss {:.4}  scale {}  {:.2}s{extra}",
                     report.label, m.step, m.loss, m.loss_scale, m.step_secs
                 );
             }

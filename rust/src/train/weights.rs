@@ -98,6 +98,39 @@ pub fn init_weights(
     Ok(ModelState { offloaded, resident, inv })
 }
 
+/// Rebuild a [`ModelState`] over storage that already holds the
+/// weights — the checkpoint-resume path.  Writes nothing and consumes
+/// no RNG: offloaded handles are pure metadata over the SSD streams
+/// (the caller's journal check has already validated every stored key
+/// length), and resident tensors read back from the `ckpt/resident/*`
+/// blobs the last checkpoint persisted.  Peak DRAM cost is the norm
+/// tensors only — optimizer state never re-stages through host memory.
+pub fn resume_weights(
+    spec: &ModelSpec,
+    engine: &dyn NvmeEngine,
+    state_dtype: StateDtype,
+) -> anyhow::Result<ModelState> {
+    let inv = inventory(spec);
+    let mut offloaded = Vec::new();
+    let mut resident = HashMap::new();
+    for t in &inv {
+        if t.offloadable() {
+            offloaded.push(OptimState {
+                group: t.name.clone(),
+                numel: t.numel,
+                dtype: state_dtype,
+            });
+        } else {
+            let (data, m, v) = crate::ckpt::read_resident(engine, &t.name, t.numel)?;
+            resident.insert(
+                t.name.clone(),
+                ResidentTensor { desc: t.clone(), data, m, v },
+            );
+        }
+    }
+    Ok(ModelState { offloaded, resident, inv })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

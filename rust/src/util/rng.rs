@@ -36,6 +36,16 @@ impl Xoshiro256 {
         Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
     }
 
+    /// Raw generator state — checkpoint/resume support.  Restoring via
+    /// [`Xoshiro256::from_state`] continues the exact sequence.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = (self.s[0].wrapping_add(self.s[3]))

@@ -347,6 +347,132 @@ fn ssd_activation_spill_is_numerically_inert() {
 }
 
 #[test]
+fn checkpoint_resume_continues_bit_identically() {
+    require_artifacts!();
+    use memascend::ssd::{FaultyEngine, NvmeEngine, OpMask, RetryEngine, RetryPolicy};
+    use std::sync::Arc;
+    let mut spec = smoke_spec(MemAscendFlags::memascend());
+    spec.ckpt_interval_steps = 2;
+
+    // uninterrupted reference: 6 steps straight through
+    let dir_ref = storage("ck-ref");
+    let opts6 = TrainOpts { steps: 6, seed: 42, log_every: 0, loss_csv: None };
+    let mut t_ref = Trainer::new(&artifacts(), &dir_ref, spec.clone(), &opts6).unwrap();
+    let full = t_ref.run(&opts6).unwrap();
+
+    // interrupted run: 4 steps (epochs 1 and 2), with transient flush
+    // faults injected under the retry layer — the checkpoint barriers
+    // must absorb them without changing a byte
+    let dir = storage("ck-resume");
+    let opts4 = TrainOpts { steps: 4, seed: 42, log_every: 0, loss_csv: None };
+    let mut t1 = Trainer::new(&artifacts(), &dir, spec.clone(), &opts4).unwrap();
+    let faulty = Arc::new(FaultyEngine::transient(
+        t1.engine.nvme.clone(),
+        1,
+        OpMask::FLUSH,
+    ));
+    t1.engine.nvme = Arc::new(RetryEngine::new(faulty.clone(), RetryPolicy::attempts(3)));
+    let first = t1.run(&opts4).unwrap();
+    assert!(
+        faulty.injected.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "flush faults were never injected"
+    );
+    assert!(t1.engine.nvme.stats().retries > 0, "retries not metered");
+    assert_eq!(t1.journal_epoch(), 2);
+    drop(t1); // kill right after the epoch-2 commit
+
+    // restart from the journal and run the remaining 2 steps
+    let opts2 = TrainOpts { steps: 2, seed: 42, log_every: 0, loss_csv: None };
+    let mut t2 = Trainer::resume(&artifacts(), &dir, spec, &opts2).unwrap();
+    assert_eq!(t2.steps_done(), 4);
+    assert_eq!(t2.journal_epoch(), 2);
+    let rest = t2.run(&opts2).unwrap();
+
+    // bit-identical trajectory across the kill/restart boundary
+    assert_eq!(full.steps.len(), first.steps.len() + rest.steps.len());
+    for (a, b) in full.steps.iter().zip(first.steps.iter().chain(&rest.steps)) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}", a.step);
+        assert_eq!(a.loss_scale, b.loss_scale, "step {}", a.step);
+        assert_eq!(a.overflowed, b.overflowed, "step {}", a.step);
+    }
+    // and bit-identical on-SSD state at the end
+    for key in ["layers.0.wq/fp16", "layers.0.wq/master", "embed/adam_m"] {
+        let n = t_ref.engine.nvme.len_of(key).unwrap();
+        let mut a = vec![0u8; n];
+        let mut b = vec![0u8; n];
+        t_ref.engine.nvme.read(key, &mut a).unwrap();
+        t2.engine.nvme.read(key, &mut b).unwrap();
+        assert_eq!(a, b, "stored key {key} diverged after resume");
+    }
+    drop(t_ref);
+    drop(t2);
+    std::fs::remove_dir_all(&dir_ref).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_refuses_dirty_torn_or_mismatched_state() {
+    require_artifacts!();
+    use memascend::ssd::NvmeEngine;
+    let mut spec = smoke_spec(MemAscendFlags::memascend());
+    spec.ckpt_interval_steps = 2;
+
+    // 3 steps: epoch 1 commits after step 2, step 3 dirties it — a
+    // crash here must refuse resume with a structured error, never
+    // silently diverge
+    let dir = storage("ck-dirty");
+    let opts3 = TrainOpts { steps: 3, seed: 42, log_every: 0, loss_csv: None };
+    let mut t = Trainer::new(&artifacts(), &dir, spec.clone(), &opts3).unwrap();
+    t.run(&opts3).unwrap();
+    drop(t);
+    let err = Trainer::resume(&artifacts(), &dir, spec.clone(), &opts3).unwrap_err();
+    assert!(err.to_string().contains("cannot resume"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // 4 steps (epochs 1, 2), then tear the newest journal slot: the
+    // dual-slot load rolls back to epoch 1, whose state the in-place
+    // write-backs of steps 3-4 overwrote — resume must detect that via
+    // the dirty marker and refuse cleanly
+    let dir = storage("ck-torn");
+    let opts4 = TrainOpts { steps: 4, seed: 42, log_every: 0, loss_csv: None };
+    let mut t = Trainer::new(&artifacts(), &dir, spec.clone(), &opts4).unwrap();
+    t.run(&opts4).unwrap();
+    let nvme = t.engine.nvme.clone();
+    drop(t);
+    let slot = memascend::ckpt::journal::SLOT_A; // epoch 2 is even -> slot A
+    let len = nvme.len_of(slot).unwrap();
+    nvme.write(slot, &vec![0x5Au8; len]).unwrap();
+    nvme.flush(slot).unwrap();
+    drop(nvme);
+    let err = Trainer::resume(&artifacts(), &dir, spec.clone(), &opts4).unwrap_err();
+    assert!(err.to_string().contains("cannot resume"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // a clean 2-step run resumes — but only with the original seed
+    let dir = storage("ck-seed");
+    let opts2 = TrainOpts { steps: 2, seed: 42, log_every: 0, loss_csv: None };
+    let mut t = Trainer::new(&artifacts(), &dir, spec.clone(), &opts2).unwrap();
+    t.run(&opts2).unwrap();
+    drop(t);
+    let bad_seed = TrainOpts { steps: 1, seed: 43, log_every: 0, loss_csv: None };
+    let err = Trainer::resume(&artifacts(), &dir, spec.clone(), &bad_seed).unwrap_err();
+    assert!(err.to_string().contains("seeded with"), "{err}");
+    // and with no journal at all, the error says how to get one
+    let dir_none = storage("ck-none");
+    let opts0 = TrainOpts { steps: 1, seed: 42, log_every: 0, loss_csv: None };
+    let mut spec_none = spec.clone();
+    spec_none.ckpt_interval_steps = 0;
+    let mut t = Trainer::new(&artifacts(), &dir_none, spec_none.clone(), &opts0).unwrap();
+    t.run(&opts0).unwrap();
+    drop(t);
+    let err = Trainer::resume(&artifacts(), &dir_none, spec_none, &opts0).unwrap_err();
+    assert!(err.to_string().contains("no checkpoint journal"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir_none).ok();
+}
+
+#[test]
 fn partial_act_budget_splits_tiers_and_stays_inert() {
     require_artifacts!();
     let dir = storage("spill-split");

@@ -1,0 +1,307 @@
+//! Crash-recovery and fault-injection soak tests over the real engine
+//! stack — no AOT artifacts needed, so these run in the tier-1 CI
+//! scope (`cargo test -q`).
+//!
+//! Three contracts, end to end through `DirectEngine` + the async
+//! queue + the staged-tile optimizer:
+//!
+//! - **chaos soak**: transient NVMe faults under the bounded-backoff
+//!   retry layer are invisible to training state — a faulty run
+//!   finishes bit-identical to a fault-free run, with every absorbed
+//!   retry metered in `IoSnapshot::retries`;
+//! - **clean abort**: persistent faults exhaust the retry budget and
+//!   surface `Err` (no deadlock, no hang), and a journal commit that
+//!   failed leaves the previously committed epoch fully intact;
+//! - **kill-and-restart**: optimizer state flushed and journaled at
+//!   epoch N is bit-identically recoverable from a *reopened* storage
+//!   root, and the continuation matches an uninterrupted run.
+
+use std::sync::Arc;
+
+use memascend::ckpt::{CkptState, Journal};
+use memascend::optimizer::states::state_keys;
+use memascend::optimizer::{
+    flush_groups, step_groups_tiled, AdamParams, OptimState, StateDtype,
+};
+use memascend::pinned::{
+    AlignedAllocator, ArenaConfig, MemoryTracker, Mode, PinnedArena,
+};
+use memascend::ssd::{
+    AsyncEngine, DirectEngine, FaultyEngine, NvmeEngine, OpMask, RetryEngine,
+    RetryPolicy,
+};
+use memascend::util::rng::Xoshiro256;
+use memascend::util::stage::StageExecutor;
+
+/// Small tiles so even these modest groups run a multi-tile pipeline.
+const TILE_BYTES: usize = 4096;
+const DEPTH: usize = 2;
+
+fn arena() -> Arc<PinnedArena> {
+    let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
+    PinnedArena::new(Arc::new(alloc), ArenaConfig::default())
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("ma-rec-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn direct(dir: &std::path::Path) -> Arc<DirectEngine> {
+    Arc::new(DirectEngine::new(dir, 2, 1 << 22, 1).unwrap())
+}
+
+/// Deterministic per-step gradients, shared by every run in a test so
+/// interrupted and uninterrupted trajectories see the same data.
+fn grads_for(step: u64, sizes: &[usize]) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::new(0x5EED ^ step);
+    sizes
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+/// Initialize identical optimizer groups (`g0`, `g1`, ...) on `engine`.
+fn init_states(engine: &dyn NvmeEngine, sizes: &[usize]) -> Vec<OptimState> {
+    let mut rng = Xoshiro256::new(99);
+    sizes
+        .iter()
+        .enumerate()
+        .map(|(g, &n)| {
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            OptimState::init(engine, &format!("g{g}"), &vals, StateDtype::F32).unwrap()
+        })
+        .collect()
+}
+
+fn fp16_keys(states: &[OptimState]) -> Vec<String> {
+    states.iter().map(|s| format!("{}/fp16", s.group)).collect()
+}
+
+/// Run the staged-tile optimizer for the given 1-based step range.
+fn run_steps(
+    engine: Arc<dyn NvmeEngine>,
+    states: &[OptimState],
+    sizes: &[usize],
+    steps: std::ops::RangeInclusive<u64>,
+) -> anyhow::Result<()> {
+    let aio = AsyncEngine::new(engine, 2);
+    let stage = StageExecutor::new(2);
+    let arena = arena();
+    let hp = AdamParams { weight_decay: 0.01, ..Default::default() };
+    let keys = fp16_keys(states);
+    for t in steps {
+        let grads = grads_for(t, sizes);
+        let gr: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        step_groups_tiled(
+            &aio, &stage, &arena, states, &gr, &keys, t, 1.0, &hp, 1, TILE_BYTES,
+            DEPTH,
+        )?;
+    }
+    Ok(())
+}
+
+/// All four stored streams (master/m/v/fp16) of one group.
+fn group_bytes(engine: &dyn NvmeEngine, group: &str, numel: usize) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    for (key, width) in [
+        (format!("{group}/master"), 4usize),
+        (format!("{group}/adam_m"), 4),
+        (format!("{group}/adam_v"), 4),
+        (format!("{group}/fp16"), 2),
+    ] {
+        let mut buf = vec![0u8; numel * width];
+        engine.read(&key, &mut buf).unwrap();
+        out.push(buf);
+    }
+    out
+}
+
+/// Minimal journal record naming every key of `states`.
+fn ckpt_state(
+    epoch: u64,
+    steps_done: u64,
+    engine: &dyn NvmeEngine,
+    states: &[OptimState],
+) -> CkptState {
+    let mut keys = Vec::new();
+    for st in states {
+        for k in state_keys(&st.group) {
+            keys.push((k.clone(), engine.len_of(&k).unwrap()));
+        }
+        let fk = format!("{}/fp16", st.group);
+        let len = engine.len_of(&fk).unwrap();
+        keys.push((fk, len));
+    }
+    CkptState {
+        epoch,
+        steps_done,
+        applied_steps: steps_done,
+        seed: 99,
+        model: "recovery-test".into(),
+        dtype: "f32".into(),
+        corpus_rng: [1, 2, 3, 4],
+        scale: 1.0,
+        good_steps: 0,
+        overflows: 0,
+        growths: 0,
+        tile_bytes: TILE_BYTES,
+        tile_depth: DEPTH,
+        prefetch_depth: 1,
+        keys,
+        layout_digest: None,
+    }
+}
+
+#[test]
+fn chaos_transient_faults_finish_bit_identical() {
+    let sizes = [3000usize, 1500];
+    let dir_a = tmp("chaos-clean");
+    let dir_b = tmp("chaos-faulty");
+    let eng_a: Arc<dyn NvmeEngine> = direct(&dir_a);
+    // every distinct op on the faulty stack fails its first 2 attempts;
+    // a 4-attempt retry budget must absorb all of it
+    let faulty = Arc::new(FaultyEngine::transient(direct(&dir_b), 2, OpMask::ALL));
+    let eng_b: Arc<dyn NvmeEngine> =
+        Arc::new(RetryEngine::new(faulty.clone(), RetryPolicy::attempts(4)));
+
+    // initialization runs through the retry layer too
+    let st_a = init_states(eng_a.as_ref(), &sizes);
+    let st_b = init_states(eng_b.as_ref(), &sizes);
+    run_steps(eng_a.clone(), &st_a, &sizes, 1..=3).unwrap();
+    run_steps(eng_b.clone(), &st_b, &sizes, 1..=3).unwrap();
+    flush_groups(eng_a.as_ref(), &st_a, &fp16_keys(&st_a)).unwrap();
+    flush_groups(eng_b.as_ref(), &st_b, &fp16_keys(&st_b)).unwrap();
+
+    // faults were really injected, really absorbed, and metered
+    let injected = faulty.injected.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(injected > 0, "chaos run injected no faults");
+    assert!(
+        eng_b.stats().retries >= injected,
+        "retries {} < injected {injected}",
+        eng_b.stats().retries
+    );
+
+    // and not one byte of training state diverged
+    for (g, &n) in sizes.iter().enumerate() {
+        let a = group_bytes(eng_a.as_ref(), &format!("g{g}"), n);
+        let b = group_bytes(eng_b.as_ref(), &format!("g{g}"), n);
+        assert_eq!(a, b, "group g{g} diverged under transient faults");
+    }
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
+#[test]
+fn persistent_faults_abort_cleanly_without_partial_commit() {
+    let sizes = [2000usize];
+    let dir = tmp("persist");
+    let inner = direct(&dir);
+    let eng: Arc<dyn NvmeEngine> = inner.clone();
+    let states = init_states(eng.as_ref(), &sizes);
+    run_steps(eng.clone(), &states, &sizes, 1..=1).unwrap();
+    flush_groups(eng.as_ref(), &states, &fp16_keys(&states)).unwrap();
+    let journal = Journal::new(eng.clone());
+    journal.commit(&ckpt_state(1, 1, eng.as_ref(), &states)).unwrap();
+
+    // a persistent data fault exhausts the bounded retry budget and
+    // surfaces Err — the step returns (this test completing at all is
+    // the no-deadlock assertion)
+    let faulty: Arc<dyn NvmeEngine> = Arc::new(RetryEngine::new(
+        Arc::new(FaultyEngine::transient(inner.clone(), u32::MAX, OpMask::DATA)),
+        RetryPolicy::attempts(2),
+    ));
+    let err = run_steps(faulty.clone(), &states, &sizes, 2..=2).unwrap_err();
+    assert!(err.to_string().contains("injected"), "unexpected error: {err}");
+
+    // a journal commit through the dead stack fails without touching
+    // the committed epoch — no partial commit
+    let bad = Journal::new(faulty);
+    assert!(bad.commit(&ckpt_state(2, 2, eng.as_ref(), &states)).is_err());
+    let back = Journal::new(eng).load().expect("epoch 1 must survive");
+    assert_eq!(back.epoch, 1);
+    back.validate_keys(inner.as_ref()).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn kill_and_restart_from_reopened_storage_is_bit_identical() {
+    let sizes = [2500usize, 700];
+
+    // uninterrupted reference: 4 steps straight through
+    let dir_ref = tmp("kr-ref");
+    let eng_ref: Arc<dyn NvmeEngine> = direct(&dir_ref);
+    let st_ref = init_states(eng_ref.as_ref(), &sizes);
+    run_steps(eng_ref.clone(), &st_ref, &sizes, 1..=4).unwrap();
+    flush_groups(eng_ref.as_ref(), &st_ref, &fp16_keys(&st_ref)).unwrap();
+
+    // interrupted run: 2 steps, flush barriers, journal commit, then
+    // drop every handle — the moral equivalent of kill -9 right after
+    // the commit
+    let dir = tmp("kr-live");
+    {
+        let eng: Arc<dyn NvmeEngine> = direct(&dir);
+        let states = init_states(eng.as_ref(), &sizes);
+        run_steps(eng.clone(), &states, &sizes, 1..=2).unwrap();
+        flush_groups(eng.as_ref(), &states, &fp16_keys(&states)).unwrap();
+        let journal = Journal::new(eng.clone());
+        journal.commit(&ckpt_state(1, 2, eng.as_ref(), &states)).unwrap();
+    }
+
+    // restart: reopen the storage root cold, replay the journal,
+    // rebuild the optimizer handles from metadata alone (no gather, no
+    // re-init), and continue
+    let eng2: Arc<dyn NvmeEngine> = direct(&dir);
+    let journal = Journal::new(eng2.clone());
+    let ck = journal.load().expect("journal must survive the restart");
+    assert_eq!(ck.epoch, 1);
+    assert_eq!(ck.steps_done, 2);
+    ck.validate_keys(eng2.as_ref()).unwrap();
+    let resumed: Vec<OptimState> = sizes
+        .iter()
+        .enumerate()
+        .map(|(g, &n)| OptimState {
+            group: format!("g{g}"),
+            numel: n,
+            dtype: StateDtype::F32,
+        })
+        .collect();
+    run_steps(eng2.clone(), &resumed, &sizes, 3..=4).unwrap();
+    flush_groups(eng2.as_ref(), &resumed, &fp16_keys(&resumed)).unwrap();
+
+    for (g, &n) in sizes.iter().enumerate() {
+        let a = group_bytes(eng_ref.as_ref(), &format!("g{g}"), n);
+        let b = group_bytes(eng2.as_ref(), &format!("g{g}"), n);
+        assert_eq!(a, b, "group g{g}: kill-and-restart diverged");
+    }
+    std::fs::remove_dir_all(&dir_ref).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_commit_recovers_previous_epoch_on_restart() {
+    let sizes = [1200usize];
+    let dir = tmp("torn");
+    {
+        let eng: Arc<dyn NvmeEngine> = direct(&dir);
+        let states = init_states(eng.as_ref(), &sizes);
+        run_steps(eng.clone(), &states, &sizes, 1..=1).unwrap();
+        flush_groups(eng.as_ref(), &states, &fp16_keys(&states)).unwrap();
+        let journal = Journal::new(eng.clone());
+        journal.commit(&ckpt_state(1, 1, eng.as_ref(), &states)).unwrap();
+        journal.commit(&ckpt_state(2, 2, eng.as_ref(), &states)).unwrap();
+        // tear epoch 2's slot: same-length garbage, as a crash mid
+        // journal write would leave (epoch 2 is even -> slot A)
+        let slot = memascend::ckpt::journal::SLOT_A;
+        let len = eng.len_of(slot).unwrap();
+        eng.write(slot, &vec![0xA5u8; len]).unwrap();
+    }
+    // restart: the torn slot fails its checksum and the dual-slot load
+    // falls back to epoch 1 — whose keys still validate
+    let eng2: Arc<dyn NvmeEngine> = direct(&dir);
+    let ck = Journal::new(eng2.clone()).load().expect("previous epoch survives");
+    assert_eq!(ck.epoch, 1, "torn commit must roll back to epoch 1");
+    ck.validate_keys(eng2.as_ref()).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
