@@ -221,6 +221,8 @@ fn run_budget(tag: &str, governed: bool) -> (BudgetRun, Vec<u8>, Vec<u8>) {
         optim_tile_bytes: 512 << 10,
         tile_depth: 2,
         prefetch_depth: 4,
+        sched_lead_us: 200,
+        act_host_budget: usize::MAX,
     };
     let mut gov = PipelineGovernor::new(cfg, start);
     let mut tuning = gov.tuning();
@@ -271,6 +273,8 @@ fn run_budget(tag: &str, governed: bool) -> (BudgetRun, Vec<u8>, Vec<u8>) {
             tuning = gov.observe(&GovernorSample {
                 host_copy_bytes: host_copy,
                 degraded_tiles: stats.degraded_tiles,
+                prefetch_late: 0,
+                prefetch_hits: 0,
                 io_wait_secs: stats.wait_secs,
                 io_busy_secs: 0.0,
                 step_secs: 1.0,

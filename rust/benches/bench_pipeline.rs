@@ -25,7 +25,7 @@ use memascend::bufpool::{AdaptivePool, ParamBufferPool};
 use memascend::config::presets::SMOKE;
 use memascend::dtype::{f16_bytes_to_f32s, f32s_to_f16_bytes, DType};
 use memascend::metrics::StepMetrics;
-use memascend::offload::{F32Scratch, Swapper};
+use memascend::offload::{F32Scratch, FetchOpts, Swapper};
 use memascend::optimizer::{
     step_groups_pipelined, AdamParams, OptimState, StateDtype,
 };
@@ -93,6 +93,10 @@ fn metrics(io_secs: f64, io_wait_secs: f64, step_secs: f64) -> StepMetrics {
         ckpt_secs: 0.0,
         io_retries: 0,
         journal_epoch: 0,
+        fetch_submissions: 0,
+        prefetch_hits: 0,
+        prefetch_late: 0,
+        prefetch_fallbacks: 0,
     }
 }
 
@@ -171,6 +175,9 @@ fn swapper_experiment(table: &mut Table) -> (StepMetrics, f64) {
     let io_before = eng.stats();
     let t0 = Instant::now();
     let mut wait = 0.0;
+    let mut fetch_submissions = 0u64;
+    let mut prefetch_hits = 0u64;
+    let mut prefetch_late = 0u64;
     for _ in 0..passes {
         let mut sw = Swapper::start(
             eng.clone(),
@@ -180,7 +187,7 @@ fn swapper_experiment(table: &mut Table) -> (StepMetrics, f64) {
             f32_pool.clone(),
             plan.clone(),
             |t| format!("{}/fp16", t.name),
-            4,
+            FetchOpts::window(4),
         );
         for t in &plan {
             let f = sw.next().unwrap();
@@ -189,11 +196,22 @@ fn swapper_experiment(table: &mut Table) -> (StepMetrics, f64) {
             f32_pool.put_buf(f.data); // consumer recycles, like the trainer
         }
         wait += sw.wait_secs();
+        let swm = sw.metrics();
+        fetch_submissions += swm.fetch_submissions;
+        prefetch_hits += swm.prefetch_hits;
+        prefetch_late += swm.prefetch_late;
     }
     let async_wall = t0.elapsed().as_secs_f64();
     let async_io = io_busy_delta(eng.as_ref(), io_before);
-    let m_async = metrics(async_io, wait, async_wall);
+    let mut m_async = metrics(async_io, wait, async_wall);
+    m_async.fetch_submissions = fetch_submissions;
+    m_async.prefetch_hits = prefetch_hits;
+    m_async.prefetch_late = prefetch_late;
     print_queue_busy("swapper/pipelined", eng.as_ref(), io_before);
+    println!(
+        "  fetch submissions {} / prefetch hits {} / late {} over {passes} passes",
+        m_async.fetch_submissions, m_async.prefetch_hits, m_async.prefetch_late
+    );
 
     for (mode, m, wall) in
         [("sequential", &m_sync, sync_wall), ("pipelined", &m_async, async_wall)]

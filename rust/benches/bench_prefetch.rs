@@ -1,0 +1,285 @@
+//! Coalesced + profile-replay fetch path bench: does the read side
+//! really cut submissions, and does the recorded just-in-time schedule
+//! hold the pinned staging watermark at or below the greedy window's?
+//!
+//! Streams the full SMOKE offloadable plan through the swapper four
+//! ways over identical on-SSD bytes (per-tensor `{name}/fp16` keys AND
+//! the packed `optim/sg{i}/fp16` super-group streams, seeded with the
+//! same values):
+//!
+//! 1. **window** — per-tensor depth-window greedy fetch (the seed
+//!    path and the submission-count baseline);
+//! 2. **grouped** — coalesced ranged reads, still window-greedy (the
+//!    `Cat::SwapBuf` depth-window baseline for replay: same fetch
+//!    units, greedy discipline);
+//! 3. **record** — coalesced + profile store, first step: traces the
+//!    (key, offset, len, timing) schedule;
+//! 4. **replay** — same store, later steps: rate-matched just-in-time
+//!    issue against the recorded schedule, on a fresh arena so its
+//!    peak watermark is measured in replay mode alone.
+//!
+//! Gates (deterministic, they set the exit code):
+//!
+//! 1. ≥2× fewer read submissions/step on the replayed coalesced path
+//!    than the per-tensor window path;
+//! 2. byte-identical delivery across all four runs (checksum over the
+//!    exact f32 slices compute would upload, every pass);
+//! 3. `Cat::SwapBuf` peak in replay mode ≤ the grouped depth-window
+//!    baseline (just-in-time issue can only defer staging, never hold
+//!    more in flight than the greedy window);
+//! 4. every post-record pass actually replays (digest hit, no
+//!    fallback).
+//!
+//! Stall (`wait_secs`) and prefetch hit/late distributions are
+//! report-only — timing is nondeterministic on shared runners.  Emits
+//! `bench_out/BENCH_prefetch.json`.
+
+mod common;
+
+use std::sync::Arc;
+
+use memascend::bufpool::{AdaptivePool, ParamBufferPool};
+use memascend::config::presets::SMOKE;
+use memascend::dtype::{f32s_to_f16_bytes, DType};
+use memascend::offload::{F32Scratch, FetchGroups, FetchOpts, ProfileStore, Swapper};
+use memascend::optimizer::coalesce::fp16_stream_name;
+use memascend::optimizer::{CoalescedLayout, StateDtype};
+use memascend::pinned::{
+    AlignedAllocator, ArenaConfig, Cat, MemoryTracker, Mode, PinnedArena,
+};
+use memascend::ssd::{DirectEngine, IoExecutor, NvmeEngine};
+use memascend::tensors::{inventory, TensorDesc};
+use memascend::util::bench::Table;
+use memascend::util::json::Json;
+use memascend::util::stage::StageExecutor;
+
+/// Window depth shared by every run — only the fetch discipline varies.
+const DEPTH: usize = 4;
+/// Replay safety lead (µs) subtracted from each recorded deadline.
+const LEAD_US: u64 = 500;
+const PASSES: usize = 3;
+
+fn arena() -> Arc<PinnedArena> {
+    let alloc = AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()));
+    PinnedArena::new(Arc::new(alloc), ArenaConfig::default())
+}
+
+fn checksum(acc: u64, s: &[f32]) -> u64 {
+    s.iter().fold(acc, |h, x| {
+        h.wrapping_mul(0x100000001b3).wrapping_add(x.to_bits() as u64)
+    })
+}
+
+struct RunStats {
+    passes: usize,
+    /// Engine-side reads across all passes (must match submissions).
+    reads: u64,
+    submissions: u64,
+    hits: u64,
+    late: u64,
+    replays: u64,
+    fallbacks: u64,
+    /// Per-pass delivery checksum (asserted identical across passes).
+    sum: u64,
+    /// `Cat::SwapBuf` high-water mark on this run's private arena.
+    peak: u64,
+    wait_secs: f64,
+}
+
+/// Stream the plan `passes` times with a private scratch arena, so the
+/// `Cat::SwapBuf` watermark reflects this run's discipline alone.
+fn run_passes(
+    engine: &Arc<DirectEngine>,
+    plan: &[TensorDesc],
+    passes: usize,
+    groups: Option<&Arc<FetchGroups>>,
+    profile: Option<&Arc<ProfileStore>>,
+) -> RunStats {
+    let pool_arena = arena();
+    let pool: Arc<dyn ParamBufferPool> =
+        Arc::new(AdaptivePool::new(&SMOKE, DEPTH, DType::F16, &pool_arena).unwrap());
+    let scratch = Arc::new(F32Scratch::new(arena()));
+    let exec = Arc::new(IoExecutor::new(4));
+    let stage = Arc::new(StageExecutor::new(2));
+
+    let reads0 = engine.stats().reads;
+    let mut r = RunStats {
+        passes,
+        reads: 0,
+        submissions: 0,
+        hits: 0,
+        late: 0,
+        replays: 0,
+        fallbacks: 0,
+        sum: 0,
+        peak: 0,
+        wait_secs: 0.0,
+    };
+    for pass in 0..passes {
+        let mut opts = FetchOpts::window(DEPTH);
+        if let Some(g) = groups {
+            opts = opts.with_groups(Arc::clone(g));
+        }
+        if let Some(p) = profile {
+            opts = opts.with_profile(Arc::clone(p), LEAD_US);
+        }
+        let eng: Arc<dyn NvmeEngine> = Arc::clone(engine);
+        let mut sw = Swapper::start(
+            eng,
+            pool.clone(),
+            exec.clone(),
+            stage.clone(),
+            scratch.clone(),
+            plan.to_vec(),
+            |t| format!("{}/fp16", t.name),
+            opts,
+        );
+        let mut pass_sum = 0u64;
+        for want in plan {
+            let got = sw.next().unwrap();
+            assert_eq!(got.desc.name, want.name, "plan order violated");
+            pass_sum = checksum(pass_sum, got.data.as_f32());
+            scratch.put_buf(got.data);
+        }
+        if pass == 0 {
+            r.sum = pass_sum;
+        } else {
+            assert_eq!(r.sum, pass_sum, "delivery diverged between passes");
+        }
+        let m = sw.metrics();
+        r.submissions += m.fetch_submissions;
+        r.hits += m.prefetch_hits;
+        r.late += m.prefetch_late;
+        r.replays += u64::from(m.replayed);
+        r.fallbacks += u64::from(m.profile_fallback);
+        r.wait_secs += sw.wait_secs();
+    }
+    r.reads = engine.stats().reads - reads0;
+    r.peak = scratch.arena().tracker().peak(Cat::SwapBuf);
+    r
+}
+
+fn main() {
+    // seed: identical values on both the per-tensor fp16 keys and the
+    // packed super-group streams, so every run reads the same bytes
+    let dir = std::env::temp_dir().join(format!("ma-prefbench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let engine = Arc::new(DirectEngine::new(&dir, 2, 1 << 24, 2).unwrap());
+    let plan: Vec<TensorDesc> =
+        inventory(&SMOKE).into_iter().filter(|t| t.offloadable()).collect();
+    for (i, t) in plan.iter().enumerate() {
+        let vals = vec![i as f32 + 0.5; t.numel];
+        let mut bytes = vec![0u8; t.numel * 2];
+        f32s_to_f16_bytes(&vals, &mut bytes);
+        engine.write(&format!("{}/fp16", t.name), &bytes).unwrap();
+    }
+    let members: Vec<(String, usize)> =
+        plan.iter().map(|t| (t.name.clone(), t.numel)).collect();
+    let layout = CoalescedLayout::plan(&members, StateDtype::F32, 1 << 22);
+    let mut streams: Vec<Vec<u8>> =
+        layout.super_numels.iter().map(|&n| vec![0u8; n * 2]).collect();
+    for (i, t) in plan.iter().enumerate() {
+        let (sg, off, numel) = layout.span_of(&t.name).unwrap();
+        let vals = vec![i as f32 + 0.5; numel];
+        f32s_to_f16_bytes(&vals, &mut streams[sg][off * 2..(off + numel) * 2]);
+    }
+    for (sg, bytes) in streams.iter().enumerate() {
+        engine.write(&fp16_stream_name(sg), bytes).unwrap();
+    }
+    let groups = Arc::new(FetchGroups::from_layout(&layout));
+
+    let window = run_passes(&engine, &plan, PASSES, None, None);
+    let grouped = run_passes(&engine, &plan, PASSES, Some(&groups), None);
+    let store = Arc::new(ProfileStore::new());
+    let record = run_passes(&engine, &plan, 1, Some(&groups), Some(&store));
+    let replay = run_passes(&engine, &plan, PASSES, Some(&groups), Some(&store));
+    std::fs::remove_dir_all(&dir).ok();
+
+    let per_pass = |r: &RunStats| r.reads as f64 / r.passes as f64;
+    let cut = per_pass(&window) / per_pass(&replay);
+
+    let mut table = Table::new(vec![
+        "path",
+        "passes",
+        "reads/pass",
+        "hits",
+        "late",
+        "peak SwapBuf B",
+        "stall s",
+    ]);
+    for (name, r) in [
+        ("window (per-tensor)", &window),
+        ("grouped window", &grouped),
+        ("record", &record),
+        ("replay", &replay),
+    ] {
+        table.row(vec![
+            name.to_string(),
+            format!("{}", r.passes),
+            format!("{:.1}", per_pass(r)),
+            format!("{}", r.hits),
+            format!("{}", r.late),
+            format!("{}", r.peak),
+            format!("{:.4}", r.wait_secs),
+        ]);
+    }
+    common::emit("prefetch", "coalesced reads + profile replay vs depth window", &table);
+
+    let submission_cut = cut >= 2.0;
+    let identical = window.sum == grouped.sum
+        && window.sum == record.sum
+        && window.sum == replay.sum;
+    let peak_ok = replay.peak <= grouped.peak;
+    let replay_engaged = record.replays == 0
+        && record.fallbacks == 0
+        && replay.replays == replay.passes as u64
+        && replay.fallbacks == 0;
+    let accounting_ok =
+        window.reads == window.submissions && replay.reads == replay.submissions;
+
+    println!(
+        "{} tensors/pass: {:.1} reads/pass windowed vs {:.1} replayed ({cut:.1}x cut), \
+         replay peak {} B vs grouped-window {} B",
+        plan.len(),
+        per_pass(&window),
+        per_pass(&replay),
+        replay.peak,
+        grouped.peak,
+    );
+    println!("byte-identity across all paths: {identical}");
+    println!(
+        "replay engaged on every post-record pass: {replay_engaged} \
+         (hits {} / late {} over {} passes)",
+        replay.hits, replay.late, replay.passes,
+    );
+
+    std::fs::create_dir_all(common::OUT_DIR).ok();
+    let out = Json::obj(vec![
+        ("tensors_per_pass", Json::from(plan.len())),
+        ("window_reads_per_pass", Json::from(per_pass(&window))),
+        ("grouped_reads_per_pass", Json::from(per_pass(&grouped))),
+        ("replay_reads_per_pass", Json::from(per_pass(&replay))),
+        ("submission_cut", Json::from(cut)),
+        ("byte_identical", Json::from(identical)),
+        ("swapbuf_peak_window", Json::from(window.peak)),
+        ("swapbuf_peak_grouped_window", Json::from(grouped.peak)),
+        ("swapbuf_peak_replay", Json::from(replay.peak)),
+        ("replay_peak_ok", Json::from(peak_ok)),
+        ("replay_hits", Json::from(replay.hits)),
+        ("replay_late", Json::from(replay.late)),
+        ("lead_us", Json::from(LEAD_US)),
+        ("window_stall_secs", Json::from(window.wait_secs)),
+        ("replay_stall_secs", Json::from(replay.wait_secs)),
+    ]);
+    let path = format!("{}/BENCH_prefetch.json", common::OUT_DIR);
+    match std::fs::write(&path, out.to_string()) {
+        Ok(()) => println!("[json] {path}"),
+        Err(e) => eprintln!("warn: could not write {path}: {e}"),
+    }
+
+    let pass = submission_cut && identical && peak_ok && replay_engaged && accounting_ok;
+    println!("ACCEPTANCE: {}", if pass { "PASS" } else { "FAIL" });
+    if !pass {
+        std::process::exit(1);
+    }
+}

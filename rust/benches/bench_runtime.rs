@@ -30,7 +30,7 @@ use memascend::bufpool::{AdaptivePool, ParamBufferPool};
 use memascend::config::presets::SMOKE;
 use memascend::dtype::{f32s_to_f16_bytes, DType};
 use memascend::metrics::HostCopyMeter;
-use memascend::offload::{F32Scratch, Swapper};
+use memascend::offload::{F32Scratch, FetchOpts, Swapper};
 use memascend::pinned::{
     AlignedAllocator, ArenaConfig, MemoryTracker, Mode, PinnedArena,
 };
@@ -93,7 +93,7 @@ fn stream_pass(
             scratch.clone(),
             plan.to_vec(),
             |t| format!("{}/fp16", t.name),
-            4,
+            FetchOpts::window(4),
         );
         for t in plan {
             let f = sw.next().unwrap();

@@ -111,6 +111,12 @@ pub struct CkptState {
     pub tile_bytes: usize,
     pub tile_depth: usize,
     pub prefetch_depth: usize,
+    /// Replay-schedule lead-time (µs) in effect at commit; absent in
+    /// pre-prefetch records, which decode to the spec default.
+    pub sched_lead_us: u64,
+    /// Activation-store host budget in effect at commit (hex-encoded:
+    /// `usize::MAX` = unbudgeted exceeds the JSON f64 range).
+    pub act_host_budget: usize,
     /// Every on-SSD key this epoch is consistent over, with its stored
     /// length — resume validates each against `len_of`.
     pub keys: Vec<(String, usize)>,
@@ -118,6 +124,12 @@ pub struct CkptState {
     /// ([`crate::optimizer::coalesce::LAYOUT_KEY`]); `None` for
     /// uncoalesced runs.
     pub layout_digest: Option<u64>,
+    /// FNV-1a digest of the persisted step-profile blob
+    /// ([`crate::offload::prefetch::PROFILE_KEY`]); `None` when the
+    /// run keeps no recorded prefetch schedule.  Resume revalidates it
+    /// and *degrades* on mismatch (re-record) instead of erroring —
+    /// the profile is a performance hint, not state.
+    pub profile_digest: Option<u64>,
 }
 
 impl CkptState {
@@ -140,6 +152,8 @@ impl CkptState {
             ("tile_bytes", Json::from(self.tile_bytes)),
             ("tile_depth", Json::from(self.tile_depth)),
             ("prefetch_depth", Json::from(self.prefetch_depth)),
+            ("sched_lead_us", hex(self.sched_lead_us)),
+            ("act_host_budget", hex(self.act_host_budget as u64)),
             (
                 "keys",
                 Json::Arr(
@@ -157,6 +171,13 @@ impl CkptState {
             (
                 "layout_digest",
                 match self.layout_digest {
+                    Some(d) => hex(d),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "profile_digest",
+                match self.profile_digest {
                     Some(d) => hex(d),
                     None => Json::Null,
                 },
@@ -197,6 +218,20 @@ impl CkptState {
             None | Some(Json::Null) => None,
             Some(_) => Some(req_hex(j, "layout_digest")?),
         };
+        let profile_digest = match j.get("profile_digest") {
+            None | Some(Json::Null) => None,
+            Some(_) => Some(req_hex(j, "profile_digest")?),
+        };
+        // absent in records committed before the prefetch knobs
+        // existed: decode to the spec defaults
+        let sched_lead_us = match j.get("sched_lead_us") {
+            None | Some(Json::Null) => 2_000,
+            Some(_) => req_hex(j, "sched_lead_us")?,
+        };
+        let act_host_budget = match j.get("act_host_budget") {
+            None | Some(Json::Null) => usize::MAX,
+            Some(_) => req_hex(j, "act_host_budget")? as usize,
+        };
         Ok(Self {
             epoch: req_hex(j, "epoch")?,
             steps_done: req_hex(j, "steps_done")?,
@@ -223,8 +258,11 @@ impl CkptState {
             tile_bytes: req_usize(j, "tile_bytes")?,
             tile_depth: req_usize(j, "tile_depth")?,
             prefetch_depth: req_usize(j, "prefetch_depth")?,
+            sched_lead_us,
+            act_host_budget,
             keys,
             layout_digest,
+            profile_digest,
         })
     }
 
@@ -392,8 +430,11 @@ mod tests {
             tile_bytes: 4 << 20,
             tile_depth: 2,
             prefetch_depth: 2,
+            sched_lead_us: 1_500,
+            act_host_budget: usize::MAX - 1, // deliberately > 2^53
             keys: vec![("w0/master".into(), 4096), ("w0/fp16".into(), 2048)],
             layout_digest: Some(0xFFFF_FFFF_FFFF_FFFE),
+            profile_digest: Some(0x0123_4567_89AB_CDEF),
         }
     }
 
@@ -403,10 +444,12 @@ mod tests {
         let j = Json::parse(&s.to_json().to_string()).unwrap();
         let back = CkptState::from_json(&j).unwrap();
         assert_eq!(back, s, "hex round-trip must be exact past 2^53");
-        // uncoalesced: digest absent
-        let s2 = CkptState { layout_digest: None, ..s };
+        // uncoalesced / unprofiled: digests absent
+        let s2 = CkptState { layout_digest: None, profile_digest: None, ..s };
         let j2 = Json::parse(&s2.to_json().to_string()).unwrap();
-        assert_eq!(CkptState::from_json(&j2).unwrap().layout_digest, None);
+        let back2 = CkptState::from_json(&j2).unwrap();
+        assert_eq!(back2.layout_digest, None);
+        assert_eq!(back2.profile_digest, None);
     }
 
     #[test]

@@ -146,11 +146,32 @@ pub struct TrainSpec {
     /// `optim_tile_bytes > 0`).  `0` = off (per-tensor groups, today's
     /// layout).  Bit-identical either way.
     pub optim_coalesce_bytes: usize,
+    /// Coalesce the *weight fetch* path too: mirror each fp16 weight
+    /// into packed per-super-group read streams
+    /// (`CoalescedOptim::enable_fp16_streams`) and let the swapper
+    /// gather a whole super-group of tensors with one ranged read,
+    /// delivering per-member lease views off a single upconvert.
+    /// Requires `optim_coalesce_bytes > 0` (the streams live on the
+    /// coalesced layout); ignored otherwise.  Bit-identical either
+    /// way — only the submission count changes.
+    pub fetch_coalesce: bool,
+    /// Record the first step's fetch timing profile and replay later
+    /// steps against a rate-matched just-in-time issue schedule
+    /// (`offload::ProfileStore`), instead of the fixed depth window.
+    /// The profile persists on-engine (`swap/profile`) and across
+    /// checkpoint resume; a plan-digest mismatch degrades to the depth
+    /// window and re-records (`StepMetrics::prefetch_fallbacks`).
+    pub prefetch_profile: bool,
+    /// Safety lead subtracted from each replayed fetch deadline, in
+    /// microseconds.  The governor retunes it between
+    /// `min_lead_us`/`max_lead_us` when enabled; static otherwise.
+    pub prefetch_lead_us: u64,
     /// Enable the pressure-adaptive pipeline governor
     /// (`train::PipelineGovernor`): retunes `optim_tile_bytes`,
-    /// `optim_tile_depth`, and `prefetch_depth` each step from
-    /// observed arena pressure (`host_copy_bytes`, `degraded_tiles`)
-    /// and stall/busy ratios.  `false` = the static knobs above are
+    /// `optim_tile_depth`, `prefetch_depth`, the replay schedule's
+    /// lead-time, and `act_host_budget` each step from observed arena
+    /// pressure (`host_copy_bytes`, `degraded_tiles`), prefetch
+    /// hit/late counts, and stall/busy ratios.  `false` = the static knobs above are
     /// used verbatim forever — today's behavior, byte for byte (the
     /// paper-parity figure specs keep it off).
     pub governor: bool,
@@ -207,6 +228,9 @@ impl Default for TrainSpec {
             optim_tile_bytes: 4 << 20,
             optim_tile_depth: 2,
             optim_coalesce_bytes: 0,
+            fetch_coalesce: false,
+            prefetch_profile: false,
+            prefetch_lead_us: 2_000,
             governor: false,
             offloaded_gc: true,
             act_host_budget: usize::MAX,

@@ -36,8 +36,21 @@ pub fn commands() -> Vec<Command> {
                 "coalesce per-tensor optimizer groups into super-groups of this many state bytes (0 = off)",
             )
             .flag(
+                "fetch-coalesce",
+                "coalesce the weight fetch path over packed fp16 super-group streams: one ranged read per super-group instead of per-tensor reads (needs --optim-coalesce-bytes > 0)",
+            )
+            .flag(
+                "prefetch-profile",
+                "record the first step's fetch timing profile and replay later steps on a rate-matched just-in-time schedule (persists across checkpoint resume)",
+            )
+            .opt(
+                "prefetch-lead-us",
+                "2000",
+                "safety lead subtracted from each replayed fetch deadline, in microseconds",
+            )
+            .flag(
                 "governor",
-                "enable the pressure-adaptive pipeline governor (retunes tile size/depth and prefetch depth per step)",
+                "enable the pressure-adaptive pipeline governor (retunes tile size/depth, prefetch depth, schedule lead-time, and the activation host budget per step)",
             )
             .opt(
                 "ckpt-interval",
@@ -114,6 +127,11 @@ pub fn train_spec_from_args(args: &Args, batch: usize, seq: usize) -> anyhow::Re
             .get_usize("optim-tile-depth", defaults.optim_tile_depth)?,
         optim_coalesce_bytes: args
             .get_usize("optim-coalesce-bytes", defaults.optim_coalesce_bytes)?,
+        fetch_coalesce: args.get_bool("fetch-coalesce"),
+        prefetch_profile: args.get_bool("prefetch-profile"),
+        prefetch_lead_us: args
+            .get_usize("prefetch-lead-us", defaults.prefetch_lead_us as usize)?
+            as u64,
         governor: args.get_bool("governor"),
         ckpt_interval_steps: args
             .get_usize("ckpt-interval", defaults.ckpt_interval_steps)?,

@@ -125,6 +125,23 @@ pub struct StepMetrics {
     /// resumes and storage reuse, so epochs are monotone per storage
     /// root, not per process.
     pub journal_epoch: u64,
+    /// Weight-fetch submissions the swapper issued this step (forward
+    /// + backward).  With coalesced fetch groups one ranged read
+    /// covers a whole super-group of tensors, so this is the counter
+    /// `bench_prefetch` gates its ≥2× submission cut on.
+    pub fetch_submissions: u64,
+    /// Fetch units already upconverted when compute asked for them
+    /// this step (`SwapMetrics::prefetch_hits`, forward + backward).
+    pub prefetch_hits: u64,
+    /// Fetch units compute had to block on this step
+    /// (`SwapMetrics::prefetch_late`) — fed to the governor, which
+    /// answers by growing the replay schedule's lead-time.
+    pub prefetch_late: u64,
+    /// Swapper passes this step that wanted to replay a recorded
+    /// profile but fell back to the depth-window schedule (plan digest
+    /// mismatch after a plan change or profile loss).  Structured
+    /// fallback signal, not an error: the pass re-records.
+    pub prefetch_fallbacks: u64,
 }
 
 impl StepMetrics {
@@ -259,6 +276,10 @@ mod tests {
             ckpt_secs: 0.0,
             io_retries: 0,
             journal_epoch: 0,
+            fetch_submissions: 0,
+            prefetch_hits: 0,
+            prefetch_late: 0,
+            prefetch_fallbacks: 0,
         }
     }
 

@@ -9,18 +9,22 @@
 //!   pinned host slots up to a byte budget, SSD spill beyond it
 //!   (`host_budget = ∞` is the fully-host degenerate case — the old
 //!   separate non-spilling store is gone)
+//! - [`prefetch`] — coalesced fetch groups over the optimizer layout
+//!   plus the recorded step-profile store the swapper replays
 //! - [`engine`] — assembles allocator + pool + NVMe engine + checker
 //!   from `MemAscendFlags` (the ablation axis every bench sweeps)
 
 pub mod engine;
 pub mod gradbuf;
 pub mod partition;
+pub mod prefetch;
 pub mod scaler;
 pub mod spill;
 pub mod swapper;
 
 pub use engine::OffloadEngine;
 pub use gradbuf::GradFlatBuffer;
+pub use prefetch::{FetchGroups, ProfileStore, StepProfile};
 pub use scaler::LossScaler;
 pub use spill::SpillingActivationStore;
-pub use swapper::{F32Scratch, Fetched, Swapper};
+pub use swapper::{F32Scratch, FetchOpts, Fetched, SwapMetrics, Swapper};

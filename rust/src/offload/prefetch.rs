@@ -1,0 +1,398 @@
+//! Fetch coalescing groups and the recorded step-profile store — the
+//! data plane behind the swapper's predictive prefetcher.
+//!
+//! Two independent pieces live here, both consumed by
+//! [`crate::offload::Swapper`] through
+//! [`crate::offload::swapper::FetchOpts`]:
+//!
+//! - [`FetchGroups`] projects the optimizer's [`CoalescedLayout`] onto
+//!   the *read* path: consecutive plan tensors that share a super-group
+//!   collapse into one ranged read of that super-group's packed fp16
+//!   stream (`optim/sg{i}/fp16`, maintained by
+//!   [`crate::optimizer::CoalescedOptim`]'s write-back scatter).  Many
+//!   small `{name}/fp16` submissions become one `read_at` per group —
+//!   the read-side twin of the coalesced state scatter.
+//!
+//! - [`ProfileStore`] holds recorded [`StepProfile`]s keyed by a
+//!   [`plan_digest`] of the fetch-unit sequence `(key, offset, len)`.
+//!   The swapper records one profile per distinct plan (forward and
+//!   backward differ) on its first window-greedy pass, then replays
+//!   later steps against a rate-matched just-in-time schedule.  A
+//!   digest miss — new, renamed, or reordered keys — simply means "no
+//!   profile": the swapper degrades to the depth-window path and
+//!   re-records, never stalling.
+//!
+//! The store persists on-engine under [`PROFILE_KEY`] as a
+//! fixed-capacity, checksummed slot (engines reject size changes, the
+//! same constraint the checkpoint journal works under), and the
+//! checkpoint journal fingerprints the slot so
+//! [`crate::train::Trainer::resume`] can tell a profile recorded by
+//! *this* run's plan from a stale or foreign blob.  Validation failure
+//! degrades to an empty store — record mode — by design.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::ckpt::fnv1a64;
+use crate::optimizer::coalesce::fp16_stream_name;
+use crate::optimizer::CoalescedLayout;
+use crate::ssd::NvmeEngine;
+use crate::util::json::Json;
+
+/// Engine key the profile store persists under.
+pub const PROFILE_KEY: &str = "swap/profile";
+
+/// Slot header: magic (8) + payload len (8) + payload checksum (8).
+const MAGIC: &[u8; 8] = b"MASWPRF1";
+const HEADER: usize = 24;
+/// Slot capacity granularity and headroom for profile growth (new
+/// digests appear only when the plan changes, so growth is rare).
+const SLOT_ALIGN: usize = 4096;
+const SLOT_SLACK: usize = 4096;
+
+/// Read-path projection of the optimizer's coalesced layout: member
+/// name → `(super-group, element offset, element count)` plus the
+/// packed fp16 stream key of each super-group.
+#[derive(Debug, Clone)]
+pub struct FetchGroups {
+    spans: HashMap<String, (usize, usize, usize)>,
+    streams: Vec<String>,
+    super_numels: Vec<usize>,
+}
+
+impl FetchGroups {
+    /// Build from the persisted/planned layout.  Only meaningful once
+    /// [`crate::optimizer::CoalescedOptim::enable_fp16_streams`] has
+    /// populated the packed streams the spans point into.
+    pub fn from_layout(layout: &CoalescedLayout) -> Self {
+        let spans = layout
+            .members
+            .iter()
+            .map(|m| (m.name.clone(), (m.super_idx, m.offset, m.numel)))
+            .collect();
+        let streams = (0..layout.super_numels.len()).map(fp16_stream_name).collect();
+        Self { spans, streams, super_numels: layout.super_numels.clone() }
+    }
+
+    /// `(super-group, element offset, element count)` of a member, or
+    /// `None` if the tensor is not coalesced (fetched per-tensor).
+    pub fn span_of(&self, name: &str) -> Option<(usize, usize, usize)> {
+        self.spans.get(name).copied()
+    }
+
+    /// Packed fp16 stream key of super-group `idx`.
+    pub fn stream_key(&self, idx: usize) -> &str {
+        &self.streams[idx]
+    }
+
+    /// Element count of super-group `idx`'s stream.
+    pub fn stream_numel(&self, idx: usize) -> usize {
+        self.super_numels[idx]
+    }
+
+    /// Number of super-groups.
+    pub fn groups(&self) -> usize {
+        self.streams.len()
+    }
+}
+
+/// One fetch unit's recorded timings, both measured from the step's
+/// first fetch submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProfileUnit {
+    /// µs at which compute *asked* for this unit (the swapper's
+    /// `next()` entry) — the deadline a replayed fetch must beat.
+    pub consume_us: u64,
+    /// µs the fetch itself took (submission → upconverted delivery),
+    /// subtracted from the deadline to find the latest safe issue time.
+    pub fetch_us: u64,
+}
+
+/// A full step's fetch trace for one plan (one digest).
+#[derive(Debug, Clone, Default)]
+pub struct StepProfile {
+    pub units: Vec<ProfileUnit>,
+}
+
+/// Digest of a fetch-unit sequence `(key, byte offset, byte len)` —
+/// the identity a recorded profile is valid for.  Any plan change
+/// (tensor added/renamed/reordered, layout re-planned) changes the
+/// digest and invalidates the profile.
+pub fn plan_digest<'a>(units: impl Iterator<Item = (&'a str, usize, usize)>) -> u64 {
+    let mut buf = Vec::new();
+    for (key, off, len) in units {
+        buf.extend_from_slice(key.as_bytes());
+        buf.push(0xff);
+        buf.extend_from_slice(&(off as u64).to_le_bytes());
+        buf.extend_from_slice(&(len as u64).to_le_bytes());
+    }
+    fnv1a64(&buf)
+}
+
+/// Shared store of recorded step profiles, keyed by [`plan_digest`].
+/// Clone-shared via `Arc` between the trainer (persistence) and the
+/// per-step swappers (record/replay).
+#[derive(Debug, Default)]
+pub struct ProfileStore {
+    profiles: Mutex<HashMap<u64, Arc<StepProfile>>>,
+    dirty: AtomicBool,
+}
+
+impl ProfileStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The profile recorded for `digest`, if any.
+    pub fn get(&self, digest: u64) -> Option<Arc<StepProfile>> {
+        self.profiles.lock().unwrap().get(&digest).cloned()
+    }
+
+    /// Commit a freshly recorded profile (replaces any prior one for
+    /// the same plan) and mark the store dirty for persistence.
+    pub fn record(&self, digest: u64, profile: StepProfile) {
+        self.profiles.lock().unwrap().insert(digest, Arc::new(profile));
+        self.dirty.store(true, Ordering::Release);
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether profiles were recorded since the last [`Self::persist`].
+    pub fn dirty(&self) -> bool {
+        self.dirty.load(Ordering::Acquire)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let profiles = self.profiles.lock().unwrap();
+        let mut entries: Vec<(u64, Arc<StepProfile>)> =
+            profiles.iter().map(|(d, p)| (*d, Arc::clone(p))).collect();
+        entries.sort_by_key(|(d, _)| *d);
+        Json::Arr(
+            entries
+                .iter()
+                .map(|(digest, p)| {
+                    Json::obj(vec![
+                        // u64 digests can exceed 2^53: hex strings.
+                        ("digest", Json::from(format!("{digest:016x}"))),
+                        (
+                            "units",
+                            Json::Arr(
+                                p.units
+                                    .iter()
+                                    .map(|u| {
+                                        Json::obj(vec![
+                                            ("consume_us", Json::from(u.consume_us)),
+                                            ("fetch_us", Json::from(u.fetch_us)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("profile store: expected array"))?;
+        let mut profiles = HashMap::new();
+        for entry in arr {
+            let digest_s = entry
+                .req("digest")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("profile store: digest must be a hex string"))?;
+            let digest = u64::from_str_radix(digest_s, 16)
+                .map_err(|e| anyhow::anyhow!("profile store: bad digest '{digest_s}': {e}"))?;
+            let units = entry
+                .req("units")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("profile store: units must be an array"))?
+                .iter()
+                .map(|u| {
+                    let consume_us = u
+                        .req("consume_us")?
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("profile store: bad consume_us"))?;
+                    let fetch_us = u
+                        .req("fetch_us")?
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("profile store: bad fetch_us"))?;
+                    Ok(ProfileUnit { consume_us, fetch_us })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            profiles.insert(digest, Arc::new(StepProfile { units }));
+        }
+        Ok(Self { profiles: Mutex::new(profiles), dirty: AtomicBool::new(false) })
+    }
+
+    /// Persist the store into its fixed-capacity on-engine slot and
+    /// clear the dirty flag.  The slot is sized with headroom on first
+    /// write; if the serialized store ever outgrows it (many distinct
+    /// plans on one storage root) the error is structured and the
+    /// caller may treat persistence as best-effort — the in-memory
+    /// store keeps working.
+    pub fn persist(&self, engine: &dyn NvmeEngine) -> anyhow::Result<()> {
+        let payload = self.to_json().to_string().into_bytes();
+        let need = HEADER + payload.len();
+        let cap = match engine.len_of(PROFILE_KEY) {
+            Some(cap) => {
+                anyhow::ensure!(
+                    cap >= need,
+                    "profile store outgrew its {cap}-byte slot (need {need})"
+                );
+                cap
+            }
+            None => {
+                let cap = (need + SLOT_SLACK).div_ceil(SLOT_ALIGN) * SLOT_ALIGN;
+                engine.reserve(PROFILE_KEY, cap)?;
+                cap
+            }
+        };
+        let mut buf = vec![0u8; cap];
+        buf[..8].copy_from_slice(MAGIC);
+        buf[8..16].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        buf[16..24].copy_from_slice(&fnv1a64(&payload).to_le_bytes());
+        buf[HEADER..HEADER + payload.len()].copy_from_slice(&payload);
+        engine.write(PROFILE_KEY, &buf)?;
+        engine.flush(PROFILE_KEY)?;
+        self.dirty.store(false, Ordering::Release);
+        Ok(())
+    }
+
+    /// Load a persisted store.  `Ok(None)` if no slot exists; any
+    /// corruption (magic, checksum, parse) is a structured error the
+    /// caller should degrade on, not crash on.
+    pub fn load(engine: &dyn NvmeEngine) -> anyhow::Result<Option<Self>> {
+        let Some(cap) = engine.len_of(PROFILE_KEY) else {
+            return Ok(None);
+        };
+        anyhow::ensure!(cap >= HEADER, "profile slot truncated ({cap} B)");
+        let mut buf = vec![0u8; cap];
+        engine.read(PROFILE_KEY, &mut buf)?;
+        anyhow::ensure!(&buf[..8] == MAGIC, "profile slot: bad magic");
+        let len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+        anyhow::ensure!(HEADER + len <= cap, "profile slot: payload overruns capacity");
+        let want = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+        let payload = &buf[HEADER..HEADER + len];
+        anyhow::ensure!(fnv1a64(payload) == want, "profile slot: checksum mismatch");
+        let text = std::str::from_utf8(payload)?;
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("profile slot: {e:?}"))?;
+        Ok(Some(Self::from_json(&j)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::states::StateDtype;
+    use crate::ssd::DirectEngine;
+
+    fn store_with(entries: &[(u64, &[(u64, u64)])]) -> ProfileStore {
+        let s = ProfileStore::new();
+        for (digest, units) in entries {
+            s.record(
+                *digest,
+                StepProfile {
+                    units: units
+                        .iter()
+                        .map(|&(consume_us, fetch_us)| ProfileUnit { consume_us, fetch_us })
+                        .collect(),
+                },
+            );
+        }
+        s
+    }
+
+    fn engine(tag: &str) -> (DirectEngine, std::path::PathBuf) {
+        let dir = std::env::temp_dir()
+            .join(format!("ma-prefetch-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        (DirectEngine::new(&dir, 1, 1 << 22, 1).unwrap(), dir)
+    }
+
+    #[test]
+    fn fetch_groups_project_the_layout() {
+        let sizes = [100usize, 50, 700, 30];
+        let items: Vec<(String, usize)> =
+            sizes.iter().enumerate().map(|(i, &n)| (format!("t{i}"), n)).collect();
+        let layout = CoalescedLayout::plan(&items, StateDtype::F32, 1024);
+        let g = FetchGroups::from_layout(&layout);
+        assert_eq!(g.groups(), layout.super_numels.len());
+        for m in &layout.members {
+            let (sg, off, numel) = g.span_of(&m.name).unwrap();
+            assert_eq!((sg, off, numel), (m.super_idx, m.offset, m.numel));
+            assert_eq!(g.stream_key(sg), fp16_stream_name(sg));
+            assert!(off + numel <= g.stream_numel(sg));
+        }
+        assert!(g.span_of("not-a-member").is_none());
+    }
+
+    #[test]
+    fn plan_digest_separates_key_offset_and_order_changes() {
+        let base = || vec![("a", 0usize, 64usize), ("b", 64, 32)];
+        let d = |v: &[(&str, usize, usize)]| plan_digest(v.iter().copied());
+        let orig = d(&base());
+        assert_eq!(orig, d(&base()), "digest must be deterministic");
+        assert_ne!(orig, d(&[("a", 0, 64), ("c", 64, 32)]), "key change");
+        assert_ne!(orig, d(&[("a", 0, 64), ("b", 96, 32)]), "offset change");
+        assert_ne!(orig, d(&[("b", 64, 32), ("a", 0, 64)]), "order change");
+        assert_ne!(orig, d(&[("a", 0, 64)]), "length change");
+    }
+
+    #[test]
+    fn persist_load_round_trips_and_clears_dirty() {
+        let (eng, dir) = engine("roundtrip");
+        let s = store_with(&[
+            (0xdead_beef_dead_beef, &[(1500, 300), (2800, 450)]),
+            (42, &[(10, 5)]),
+        ]);
+        assert!(s.dirty());
+        s.persist(&eng).unwrap();
+        assert!(!s.dirty());
+
+        let back = ProfileStore::load(&eng).unwrap().expect("slot exists");
+        assert_eq!(back.len(), 2);
+        let p = back.get(0xdead_beef_dead_beef).unwrap();
+        assert_eq!(
+            p.units,
+            vec![
+                ProfileUnit { consume_us: 1500, fetch_us: 300 },
+                ProfileUnit { consume_us: 2800, fetch_us: 450 },
+            ]
+        );
+        assert_eq!(back.get(42).unwrap().units.len(), 1);
+        assert!(back.get(7).is_none());
+
+        // Re-persisting into the existing slot (same capacity) works.
+        back.record(7, StepProfile { units: vec![ProfileUnit { consume_us: 9, fetch_us: 1 }] });
+        back.persist(&eng).unwrap();
+        assert_eq!(ProfileStore::load(&eng).unwrap().unwrap().len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_slot_loads_none_and_corruption_is_structured() {
+        let (eng, dir) = engine("corrupt");
+        assert!(ProfileStore::load(&eng).unwrap().is_none());
+
+        let s = store_with(&[(1, &[(100, 20)])]);
+        s.persist(&eng).unwrap();
+        // Flip a payload byte: checksum must catch it.
+        let cap = eng.len_of(PROFILE_KEY).unwrap();
+        let mut buf = vec![0u8; cap];
+        eng.read(PROFILE_KEY, &mut buf).unwrap();
+        buf[HEADER + 2] ^= 0x40;
+        eng.write(PROFILE_KEY, &buf).unwrap();
+        let err = ProfileStore::load(&eng).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "got: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

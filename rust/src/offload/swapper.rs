@@ -1,61 +1,82 @@
-//! Parameter swapper: the SSD→host→"GPU" prefetch pipeline (§IV-A),
-//! rebuilt as a windowed async pipeline over the multi-queue layer,
-//! with the f16→f32 upconvert split onto the compute-side stage pool.
+//! Parameter swapper: the SSD→host→"GPU" prefetch pipeline (§IV-A) —
+//! a windowed async pipeline over the multi-queue layer that now
+//! *coalesces* reads along the optimizer's super-group layout and
+//! *replays* a recorded step profile instead of prefetching blindly.
 //!
-//! The seed swapper was one worker thread fetching one tensor at a
-//! time — the compute thread could overlap with at most a single
-//! in-flight transfer.  Now the swapper keeps a *window* of `depth`
-//! fetches in flight on the shared [`IoExecutor`] and reorders
-//! completions back into plan order; each fetch is itself two chained
-//! stages, so a queue worker is back on the device as soon as the
-//! bytes are staged instead of decoding them first (the PR-1 ROADMAP
-//! item, resolved):
+//! ## Fetch units
 //!
-//! ```text
-//!        plan (layer-order tensor schedule)
-//!          │ submit (window: `depth` in flight)
-//!          ▼
-//!  [ IoExecutor submission queue ] ──► worker: lease pool buffer
-//!          │   out-of-order execution          read fp16 from NVMe
-//!          ▼                                   chain ↓
-//!  [ StageExecutor (compute pool) ] ──► worker: upconvert → pinned
-//!          │                                    SwapBuf lease, freeze;
-//!          ▼                                    release pool buffer
-//!  [ per-fetch completion handles ]
-//!          │ FIFO wait  (in-order delivery)
-//!          ▼
-//!  compute thread: `next()` → Fetched { desc, data: TensorBuf }
-//!          │ TensorBuf::as_value() uploads the lease bytes verbatim
-//!          ▼
-//!  [ PJRT `Runtime::run` ] — zero fp32 host-to-host copies; dropping
-//!          the view recycles the lease extent in the arena
-//! ```
+//! The plan (layer-order tensor schedule) is compiled into **fetch
+//! units** before anything is submitted:
 //!
-//! Delivery is **lease-backed**: the f16→f32 upconvert decodes
-//! straight into a pinned [`PinnedArena`] lease, which freezes into a
-//! shared read-only [`TensorBuf`] view — the very bytes
-//! `Runtime::run` uploads.  Only when the arena refuses the lease
-//! (budget pressure, Virtual mode) does the fetch degrade to an owned
-//! scratch vector, charging the staged bytes to the shared
-//! [`HostCopyMeter`] (surfaced as `StepMetrics::host_copy_bytes`);
-//! data is bit-identical either way.
+//! - Without [`FetchOpts::groups`], every tensor is its own unit: one
+//!   `{name}/fp16` read, one upconvert — the historical path.
+//! - With groups (a [`crate::offload::FetchGroups`] projection of the
+//!   coalesced optimizer layout), consecutive plan tensors that live
+//!   in the same super-group collapse into **one ranged `read_at`** of
+//!   the packed `optim/sg{i}/fp16` stream.  The unit upconverts the
+//!   whole range into one pinned `Cat::SwapBuf` lease and delivers
+//!   each member as a [`TensorBuf`] *view* off that shared lease —
+//!   many small submissions become one, mirroring the write-side
+//!   scatter's ≥2× submission cut.  A tensor whose key is sharded or
+//!   absent from the layout falls back to a single-tensor unit; data
+//!   is bit-identical either way.
 //!
-//! Backpressure is two-layer, as before: the parameter pool bounds
-//! bytes staged in pinned memory (workers block in `acquire`), and the
-//! window bounds ready-but-unconsumed tensors.  A staged buffer now
-//! crosses the queue→stage boundary, but stage workers never block on
-//! the pool, so every held buffer is always on a path to release — a
-//! full pool can stall queue workers in `acquire`, never deadlock
-//! them.
+//! Each unit is two chained stages, as before: an [`IoExecutor`]
+//! worker stages the fp16 bytes (back on the device queue the moment
+//! they land), then a [`StageExecutor`] worker decodes f16→f32 off the
+//! I/O path.  Completions reorder back into plan order through the
+//! FIFO window; a group's trailing members are served from a ready
+//! queue with zero additional waits.
+//!
+//! ## Recorded-schedule contract (record → replay → fall back)
+//!
+//! With [`FetchOpts::profile`] set, the swapper keys the compiled unit
+//! sequence `(key, offset, len)` by [`crate::offload::prefetch::plan_digest`]
+//! and consults the shared [`ProfileStore`]:
+//!
+//! - **Record** (digest unknown): run the depth-window greedy path and
+//!   trace, per unit, when compute asked for it (`consume_us`) and how
+//!   long its fetch took (`fetch_us`).  The trace commits to the store
+//!   only when the *entire* plan delivers — a faulted step never
+//!   poisons the store.
+//! - **Replay** (digest known): submit unit `i` no earlier than
+//!   `consume_us − fetch_us − lead_us`, rate-matched to the observed
+//!   consumption pace (SSDTrain's discipline).  Fetches land just
+//!   before consumption instead of window-greedily, so the pinned
+//!   `Cat::SwapBuf` watermark stays at or below the depth-window
+//!   baseline while late arrivals stay rare.  At least one unit is
+//!   always in flight and the window depth still caps the schedule, so
+//!   a pathological profile degrades to the windowed path, never a
+//!   stall-spiral.
+//! - **Fall back** (store has profiles, none for this digest — new,
+//!   renamed, or reordered keys): run the depth-window path, flag
+//!   [`SwapMetrics::profile_fallback`], and re-record so the next step
+//!   replays again.
+//!
+//! [`SwapMetrics`] reports submissions, per-unit prefetch hit/late
+//! counts, and the mode taken; the trainer feeds them to the
+//! [`crate::train::PipelineGovernor`], which arbitrates schedule
+//! lead-time against arena pressure.
+//!
+//! Delivery remains **lease-backed**: upconverts decode straight into
+//! pinned [`PinnedArena`] leases frozen into shared read-only
+//! [`TensorBuf`] views — the very bytes `Runtime::run` uploads.  Only
+//! when the arena refuses a lease does a unit degrade to owned scratch
+//! vectors, charging the staged bytes to the shared [`HostCopyMeter`];
+//! dropping a view recycles its extent.  Backpressure is unchanged:
+//! the parameter pool bounds single-unit staging, the arena bounds
+//! group staging, and the window bounds ready-but-unconsumed units.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::bufpool::{ParamBufferPool, PoolBuf};
 use crate::dtype::f16_bytes_to_f32s;
 use crate::metrics::HostCopyMeter;
-use crate::pinned::{Cat, PinnedArena};
+use crate::offload::prefetch::{plan_digest, FetchGroups, ProfileStore, ProfileUnit, StepProfile};
+use crate::pinned::{Cat, Lease, PinnedArena};
 use crate::runtime::{F32Staging, TensorBuf};
 use crate::ssd::{IoExecutor, IoHandle, NvmeEngine};
 use crate::tensors::TensorDesc;
@@ -135,6 +156,61 @@ pub struct Fetched {
     pub data: TensorBuf,
 }
 
+/// How a [`Swapper`] fetches: window depth, optional coalescing
+/// groups, optional recorded-profile replay.
+#[derive(Clone)]
+pub struct FetchOpts {
+    /// Pipeline window: max fetch units in flight ahead of compute.
+    pub depth: usize,
+    /// Coalesce consecutive same-super-group tensors into ranged reads
+    /// of the packed fp16 streams.
+    pub groups: Option<Arc<FetchGroups>>,
+    /// Record/replay step profiles through this shared store.
+    pub profile: Option<Arc<ProfileStore>>,
+    /// Safety margin subtracted from each replayed unit's deadline
+    /// (its fetch is issued `fetch_us + lead_us` before consumption).
+    pub lead_us: u64,
+}
+
+impl FetchOpts {
+    /// The classic depth-window greedy prefetcher, no coalescing, no
+    /// profile.
+    pub fn window(depth: usize) -> Self {
+        Self { depth, groups: None, profile: None, lead_us: 0 }
+    }
+
+    pub fn with_groups(mut self, groups: Arc<FetchGroups>) -> Self {
+        self.groups = Some(groups);
+        self
+    }
+
+    pub fn with_profile(mut self, store: Arc<ProfileStore>, lead_us: u64) -> Self {
+        self.profile = Some(store);
+        self.lead_us = lead_us;
+        self
+    }
+}
+
+/// Per-plan fetch accounting, snapshotted by the trainer into
+/// [`crate::metrics::StepMetrics`] and the governor's samples.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SwapMetrics {
+    /// NVMe read submissions issued (one per fetch unit) — the number
+    /// coalescing drives down.
+    pub fetch_submissions: u64,
+    /// Units already upconverted when compute asked for them.
+    pub prefetch_hits: u64,
+    /// Units compute had to block on — the replayer's grow signal for
+    /// schedule lead-time.
+    pub prefetch_late: u64,
+    /// Replay was requested and the store had profiles, but none for
+    /// this plan's digest (new/reordered keys): the swapper ran the
+    /// depth-window path and re-recorded.
+    pub profile_fallback: bool,
+    /// This plan ran against a recorded just-in-time schedule.
+    pub replayed: bool,
+}
+
 /// Everything a fetch job needs; shared by value-cloned `Arc`.
 struct FetchCtx {
     engine: Arc<dyn NvmeEngine>,
@@ -146,25 +222,107 @@ struct FetchCtx {
     key_of: Box<dyn Fn(&TensorDesc) -> String + Send + Sync>,
 }
 
+/// One compiled fetch unit: a lone tensor, or a contiguous run of
+/// same-super-group tensors read as one range of the packed stream.
+enum Unit {
+    Single(TensorDesc),
+    Group(GroupUnit),
+}
+
+struct GroupUnit {
+    /// Packed fp16 stream key (`optim/sg{i}/fp16`).
+    stream: String,
+    /// First element covered in the stream.
+    start: usize,
+    /// Elements covered.
+    len: usize,
+    /// Members in delivery order; offsets are elements relative to
+    /// `start`.
+    members: Vec<(TensorDesc, usize)>,
+}
+
+enum UnitHandle {
+    Single(IoHandle<Fetched>),
+    Group(IoHandle<Vec<Fetched>>),
+}
+
+struct InflightUnit {
+    handle: UnitHandle,
+    /// Nanoseconds the fetch took (submission → upconverted), written
+    /// by the stage worker right before completion.
+    fetch_ns: Arc<AtomicU64>,
+}
+
+impl InflightUnit {
+    fn is_ready(&self) -> bool {
+        match &self.handle {
+            UnitHandle::Single(h) => h.is_ready(),
+            UnitHandle::Group(h) => h.is_ready(),
+        }
+    }
+}
+
+/// Replay state: per-unit latest-safe issue times from the recorded
+/// profile, rate-matched to the pace compute actually consumes at.
+struct Schedule {
+    profile: Arc<StepProfile>,
+    /// `consume_us − fetch_us − lead_us` per unit, unscaled.
+    issue_us: Vec<u64>,
+    /// Observed-vs-recorded pace ratio, updated at every delivery and
+    /// clamped so a bad profile can only mistime fetches, not stall
+    /// the pipeline.
+    rate: f64,
+    consumed: usize,
+}
+
+impl Schedule {
+    fn new(profile: Arc<StepProfile>, lead_us: u64) -> Self {
+        let issue_us = profile
+            .units
+            .iter()
+            .map(|u| u.consume_us.saturating_sub(u.fetch_us.saturating_add(lead_us)))
+            .collect();
+        Self { profile, issue_us, rate: 1.0, consumed: 0 }
+    }
+}
+
+/// The step's fetch trace being recorded (committed only on full
+/// delivery).
+struct Trace {
+    units: Vec<ProfileUnit>,
+}
+
 pub struct Swapper {
     ctx: Arc<FetchCtx>,
-    /// FIFO reorder window: front = next tensor in plan order.
-    inflight: VecDeque<IoHandle<Fetched>>,
-    /// Plan suffix not yet submitted.
-    pending: std::vec::IntoIter<TensorDesc>,
+    /// Trailing members of an already-delivered group unit, served
+    /// ahead of the window with zero waits.
+    ready: VecDeque<Fetched>,
+    /// FIFO reorder window: front = next unit in plan order.
+    inflight: VecDeque<InflightUnit>,
+    /// Unit suffix not yet submitted.
+    pending: VecDeque<Unit>,
     depth: usize,
     /// Nanoseconds `next()` spent blocked on completions — the I/O
     /// the pipeline could *not* hide behind compute.
     wait_ns: u64,
+    /// Tensors not yet delivered.
+    remaining: usize,
+    unit_total: usize,
+    submitted: usize,
+    t0: Instant,
+    sched: Option<Schedule>,
+    trace: Option<Trace>,
+    store: Option<Arc<ProfileStore>>,
+    digest: u64,
+    metrics: SwapMetrics,
 }
 
 impl Swapper {
     /// Start prefetching `plan` in order on `exec`, chaining each
-    /// fetch's f16→f32 upconvert onto `stage` (the compute-side pool).
+    /// unit's f16→f32 upconvert onto `stage` (the compute-side pool).
     /// `key_of` maps a tensor to its SSD key (rank shards use
-    /// partition keys). `depth` is the pipeline window: fetches kept
-    /// in flight ahead of compute, on top of the pool's own in-flight
-    /// bound.
+    /// partition keys); `opts` selects window depth, coalescing, and
+    /// profile replay (see the module docs for the mode contract).
     #[allow(clippy::too_many_arguments)]
     pub fn start(
         engine: Arc<dyn NvmeEngine>,
@@ -174,7 +332,7 @@ impl Swapper {
         scratch: Arc<F32Scratch>,
         plan: Vec<TensorDesc>,
         key_of: impl Fn(&TensorDesc) -> String + Send + Sync + 'static,
-        depth: usize,
+        opts: FetchOpts,
     ) -> Self {
         let ctx = Arc::new(FetchCtx {
             engine,
@@ -184,43 +342,165 @@ impl Swapper {
             scratch,
             key_of: Box::new(key_of),
         });
+        let tensor_total = plan.len();
+        let units = build_units(&ctx, plan, opts.groups.as_deref());
+
+        let mut metrics = SwapMetrics::default();
+        let mut digest = 0u64;
+        let (sched, trace) = match &opts.profile {
+            None => (None, None),
+            Some(store) => {
+                let id: Vec<(String, usize, usize)> = units
+                    .iter()
+                    .map(|u| match u {
+                        Unit::Single(t) => ((ctx.key_of)(t), 0, t.numel * 2),
+                        Unit::Group(g) => (g.stream.clone(), g.start * 2, g.len * 2),
+                    })
+                    .collect();
+                digest = plan_digest(id.iter().map(|(k, o, l)| (k.as_str(), *o, *l)));
+                match store.get(digest) {
+                    Some(p) if p.units.len() == units.len() => {
+                        metrics.replayed = true;
+                        (Some(Schedule::new(p, opts.lead_us)), None)
+                    }
+                    _ => {
+                        metrics.profile_fallback = !store.is_empty();
+                        (None, Some(Trace { units: Vec::with_capacity(units.len()) }))
+                    }
+                }
+            }
+        };
+
         let mut sw = Self {
             ctx,
+            ready: VecDeque::new(),
             inflight: VecDeque::new(),
-            pending: plan.into_iter(),
-            depth: depth.max(1),
+            unit_total: units.len(),
+            pending: units,
+            depth: opts.depth.max(1),
             wait_ns: 0,
+            remaining: tensor_total,
+            submitted: 0,
+            t0: Instant::now(),
+            sched,
+            trace,
+            store: opts.profile,
+            digest,
+            metrics,
         };
         sw.fill_window();
         sw
     }
 
+    /// µs since the plan started (the clock profiles are recorded and
+    /// replayed against).
+    fn elapsed_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    /// Submit due units, up to `depth` in flight.  Window/record mode
+    /// is greedy; replay mode holds each unit until its rate-scaled
+    /// issue time, while always keeping at least one in flight.
     fn fill_window(&mut self) {
-        while self.inflight.len() < self.depth {
-            let Some(t) = self.pending.next() else { break };
-            self.inflight.push_back(submit_fetch(&self.ctx, t));
+        while self.inflight.len() < self.depth && !self.pending.is_empty() {
+            if let Some(s) = &self.sched {
+                let due = (s.issue_us[self.submitted] as f64 * s.rate) as u64;
+                if !self.inflight.is_empty() && self.elapsed_us() < due {
+                    break;
+                }
+            }
+            let unit = self.pending.pop_front().expect("checked non-empty");
+            self.submit(unit);
         }
+    }
+
+    fn submit(&mut self, unit: Unit) {
+        let fetch_ns = Arc::new(AtomicU64::new(0));
+        self.metrics.fetch_submissions += 1;
+        self.submitted += 1;
+        let handle = match unit {
+            Unit::Single(t) => {
+                UnitHandle::Single(submit_fetch(&self.ctx, t, Arc::clone(&fetch_ns)))
+            }
+            Unit::Group(g) => {
+                UnitHandle::Group(submit_group(&self.ctx, g, Arc::clone(&fetch_ns)))
+            }
+        };
+        self.inflight.push_back(InflightUnit { handle, fetch_ns });
     }
 
     /// Blocking receive of the next tensor in plan order.  Completions
     /// arrive out of order on the executor; delivery is serialized by
-    /// waiting the window FIFO.
+    /// waiting the window FIFO, and a group unit's trailing members
+    /// are handed out without further waits.
     pub fn next(&mut self) -> anyhow::Result<Fetched> {
-        let handle = self
+        if let Some(f) = self.ready.pop_front() {
+            self.remaining -= 1;
+            return Ok(f);
+        }
+        let asked_us = self.elapsed_us();
+        let unit = self
             .inflight
             .pop_front()
             .ok_or_else(|| anyhow::anyhow!("swapper: plan exhausted"))?;
-        // keep `depth` fetches in flight while we wait on this one
+        if unit.is_ready() {
+            self.metrics.prefetch_hits += 1;
+        } else {
+            self.metrics.prefetch_late += 1;
+        }
+        if let Some(s) = &mut self.sched {
+            // rate-match: scale the remaining schedule by how fast
+            // compute is actually consuming vs the recording
+            let rec = s.profile.units[s.consumed].consume_us;
+            if rec > 0 && asked_us > 0 {
+                s.rate = (asked_us as f64 / rec as f64).clamp(0.25, 4.0);
+            }
+            s.consumed += 1;
+        }
+        // keep the window full (or the schedule on pace) while we wait
         self.fill_window();
         let t0 = Instant::now();
-        let fetched = handle.wait();
+        let result = match unit.handle {
+            UnitHandle::Single(h) => h.wait().map(|f| vec![f]),
+            UnitHandle::Group(h) => h.wait(),
+        };
         self.wait_ns += t0.elapsed().as_nanos() as u64;
-        fetched
+        let items = match result {
+            Ok(items) => items,
+            Err(e) => {
+                // a faulted unit poisons this step's trace: a profile
+                // recorded across a fault must never reach the store
+                self.trace = None;
+                return Err(e);
+            }
+        };
+        if let Some(tr) = &mut self.trace {
+            tr.units.push(ProfileUnit {
+                consume_us: asked_us,
+                fetch_us: unit.fetch_ns.load(Ordering::Acquire) / 1_000,
+            });
+            if tr.units.len() == self.unit_total {
+                if let Some(store) = &self.store {
+                    store.record(
+                        self.digest,
+                        StepProfile { units: std::mem::take(&mut tr.units) },
+                    );
+                }
+                self.trace = None;
+            }
+        }
+        let mut it = items.into_iter();
+        let first = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("swapper: fetch unit delivered no tensors"))?;
+        self.ready.extend(it);
+        self.remaining -= 1;
+        Ok(first)
     }
 
-    /// Tensors not yet delivered (in flight + unsubmitted).
+    /// Tensors not yet delivered (in flight + unsubmitted + ready).
     pub fn remaining(&self) -> usize {
-        self.inflight.len() + self.pending.len()
+        self.remaining
     }
 
     /// Seconds the consumer spent stalled in [`Self::next`] — compare
@@ -228,16 +508,89 @@ impl Swapper {
     pub fn wait_secs(&self) -> f64 {
         self.wait_ns as f64 / 1e9
     }
+
+    /// Fetch accounting so far (final after the last delivery).
+    pub fn metrics(&self) -> SwapMetrics {
+        self.metrics
+    }
 }
 
 // Dropping a `Swapper` mid-plan is safe without joining anything:
 // in-flight jobs own `Arc`s to everything they touch, release their
 // pool buffers themselves, and complete into slots nobody reads.
 
-fn submit_fetch(ctx: &Arc<FetchCtx>, t: TensorDesc) -> IoHandle<Fetched> {
+/// Compile the plan into fetch units: consecutive tensors sharing a
+/// super-group (and using the canonical `{name}/fp16` key — sharded
+/// key schemes must not read the shared stream) merge into one ranged
+/// unit; everything else stays per-tensor.
+fn build_units(
+    ctx: &FetchCtx,
+    plan: Vec<TensorDesc>,
+    groups: Option<&FetchGroups>,
+) -> VecDeque<Unit> {
+    let Some(groups) = groups else {
+        return plan.into_iter().map(Unit::Single).collect();
+    };
+    struct Open {
+        sg: usize,
+        lo: usize,
+        hi: usize,
+        /// Members with *absolute* stream offsets until sealed.
+        members: Vec<(TensorDesc, usize)>,
+    }
+    fn seal(o: Open, groups: &FetchGroups) -> Unit {
+        let start = o.lo;
+        Unit::Group(GroupUnit {
+            stream: groups.stream_key(o.sg).to_string(),
+            start,
+            len: o.hi - o.lo,
+            members: o.members.into_iter().map(|(t, off)| (t, off - start)).collect(),
+        })
+    }
+    let mut units = VecDeque::new();
+    let mut open: Option<Open> = None;
+    for t in plan {
+        let span = groups
+            .span_of(&t.name)
+            .filter(|&(_, _, numel)| numel == t.numel)
+            .filter(|_| (ctx.key_of)(&t) == format!("{}/fp16", t.name));
+        match span {
+            None => {
+                if let Some(o) = open.take() {
+                    units.push_back(seal(o, groups));
+                }
+                units.push_back(Unit::Single(t));
+            }
+            Some((sg, off, numel)) => match &mut open {
+                Some(o) if o.sg == sg => {
+                    o.lo = o.lo.min(off);
+                    o.hi = o.hi.max(off + numel);
+                    o.members.push((t, off));
+                }
+                _ => {
+                    if let Some(o) = open.take() {
+                        units.push_back(seal(o, groups));
+                    }
+                    open = Some(Open { sg, lo: off, hi: off + numel, members: vec![(t, off)] });
+                }
+            },
+        }
+    }
+    if let Some(o) = open.take() {
+        units.push_back(seal(o, groups));
+    }
+    units
+}
+
+fn submit_fetch(
+    ctx: &Arc<FetchCtx>,
+    t: TensorDesc,
+    fetch_ns: Arc<AtomicU64>,
+) -> IoHandle<Fetched> {
     let (completer, handle) = IoHandle::pair();
     let job_ctx = Arc::clone(ctx);
     ctx.exec.submit(move || {
+        let t_job = Instant::now();
         // stage 1 (NVMe queue): lease pinned staging + device read;
         // the queue worker is free again the moment the bytes landed
         let (buf, n) = match stage_read(&job_ctx, &t) {
@@ -248,11 +601,39 @@ fn submit_fetch(ctx: &Arc<FetchCtx>, t: TensorDesc) -> IoHandle<Fetched> {
             }
         };
         // stage 2 (compute pool): decode off the I/O path, so this
-        // upconvert overlaps the next tensor's device read
+        // upconvert overlaps the next unit's device read
         let conv_ctx = Arc::clone(&job_ctx);
         job_ctx.stage.submit(move || {
             let result =
                 upconvert(&conv_ctx, buf, n).map(|data| Fetched { desc: t, data });
+            fetch_ns.store(t_job.elapsed().as_nanos() as u64, Ordering::Release);
+            completer.complete(result);
+        });
+    });
+    handle
+}
+
+fn submit_group(
+    ctx: &Arc<FetchCtx>,
+    g: GroupUnit,
+    fetch_ns: Arc<AtomicU64>,
+) -> IoHandle<Vec<Fetched>> {
+    let (completer, handle) = IoHandle::pair();
+    let job_ctx = Arc::clone(ctx);
+    ctx.exec.submit(move || {
+        let t_job = Instant::now();
+        // stage 1: one ranged read covers every member's fp16 bytes
+        let staged = match stage_group_read(&job_ctx, &g) {
+            Ok(staged) => staged,
+            Err(e) => {
+                completer.complete(Err(e));
+                return;
+            }
+        };
+        let conv_ctx = Arc::clone(&job_ctx);
+        job_ctx.stage.submit(move || {
+            let result = upconvert_group(&conv_ctx, &g, staged);
+            fetch_ns.store(t_job.elapsed().as_nanos() as u64, Ordering::Release);
             completer.complete(result);
         });
     });
@@ -301,6 +682,78 @@ fn upconvert(ctx: &FetchCtx, buf: PoolBuf, n: usize) -> anyhow::Result<TensorBuf
     Ok(dst.freeze())
 }
 
+/// A group unit's fp16 staging: pinned when the arena grants it, heap
+/// otherwise.  Staging-only bytes (not the fp32 boundary path), so the
+/// heap fallback is not metered — exactly like the single path's pool
+/// staging.
+enum GroupStaging {
+    Lease(Lease),
+    Owned(Vec<u8>),
+}
+
+impl GroupStaging {
+    fn as_mut_slice(&mut self) -> &mut [u8] {
+        match self {
+            GroupStaging::Lease(l) => l.as_mut_slice(),
+            GroupStaging::Owned(v) => v,
+        }
+    }
+
+    fn bytes(&self) -> &[u8] {
+        match self {
+            GroupStaging::Lease(l) => l.as_slice(),
+            GroupStaging::Owned(v) => v,
+        }
+    }
+}
+
+/// Group stage 1: one ranged read of the packed stream covering every
+/// member.
+fn stage_group_read(ctx: &FetchCtx, g: &GroupUnit) -> anyhow::Result<GroupStaging> {
+    let byte_len = g.len * 2;
+    let mut staged = match ctx.scratch.arena().lease(byte_len, Cat::SwapBuf) {
+        Ok(l) if !l.is_virtual() => GroupStaging::Lease(l),
+        _ => GroupStaging::Owned(vec![0u8; byte_len]),
+    };
+    ctx.engine.read_at(&g.stream, g.start * 2, staged.as_mut_slice())?;
+    Ok(staged)
+}
+
+/// Group stage 2: upconvert the whole range into one shared f32 lease
+/// and deliver each member as a view off it — one decode, zero copies.
+/// A refused lease degrades member-by-member through the scratch's
+/// shared staging policy (metered owned vectors); data is bit-identical
+/// either way.
+fn upconvert_group(
+    ctx: &FetchCtx,
+    g: &GroupUnit,
+    staged: GroupStaging,
+) -> anyhow::Result<Vec<Fetched>> {
+    let src = staged.bytes();
+    match ctx.scratch.arena().lease(g.len * 4, Cat::SwapBuf) {
+        Ok(mut l) if !l.is_virtual() => {
+            f16_bytes_to_f32s(&src[..g.len * 2], l.as_f32_mut());
+            let shared = l.into_shared();
+            g.members
+                .iter()
+                .map(|(t, off)| {
+                    TensorBuf::view(&shared, *off, t.numel)
+                        .map(|data| Fetched { desc: t.clone(), data })
+                })
+                .collect()
+        }
+        _ => g
+            .members
+            .iter()
+            .map(|(t, off)| {
+                let mut dst = ctx.scratch.take_staging(t.numel);
+                f16_bytes_to_f32s(&src[off * 2..(off + t.numel) * 2], dst.as_mut_slice());
+                Ok(Fetched { desc: t.clone(), data: dst.freeze() })
+            })
+            .collect(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -308,8 +761,11 @@ mod tests {
     use crate::bufpool::AdaptivePool;
     use crate::config::presets::SMOKE;
     use crate::dtype::f32s_to_f16_bytes;
+    use crate::optimizer::coalesce::fp16_stream_name;
+    use crate::optimizer::states::StateDtype;
+    use crate::optimizer::CoalescedLayout;
     use crate::pinned::Mode;
-    use crate::ssd::{DirectEngine, FaultyEngine};
+    use crate::ssd::{DirectEngine, FaultyEngine, OpKind, OpMask};
     use crate::tensors::inventory;
 
     fn scratch() -> Arc<F32Scratch> {
@@ -339,11 +795,42 @@ mod tests {
         (engine, plan, dir)
     }
 
+    /// Pack the per-tensor fp16 values into super-group streams per a
+    /// freshly planned layout, returning the read-side groups.
+    fn seeded_groups(engine: &DirectEngine, plan: &[TensorDesc]) -> Arc<FetchGroups> {
+        let members: Vec<(String, usize)> =
+            plan.iter().map(|t| (t.name.clone(), t.numel)).collect();
+        let layout = CoalescedLayout::plan(&members, StateDtype::F32, 1 << 22);
+        let mut streams: Vec<Vec<u8>> =
+            layout.super_numels.iter().map(|&n| vec![0u8; n * 2]).collect();
+        for (i, t) in plan.iter().enumerate() {
+            let (sg, off, numel) = layout.span_of(&t.name).unwrap();
+            let vals = vec![i as f32 + 0.5; numel];
+            f32s_to_f16_bytes(&vals, &mut streams[sg][off * 2..(off + numel) * 2]);
+        }
+        for (sg, bytes) in streams.iter().enumerate() {
+            engine.write(&fp16_stream_name(sg), bytes).unwrap();
+        }
+        Arc::new(FetchGroups::from_layout(&layout))
+    }
+
     fn pool(depth: usize) -> Arc<dyn ParamBufferPool> {
         Arc::new(
             AdaptivePool::new(&SMOKE, depth, crate::dtype::DType::F16, &test_arena(Mode::Real))
                 .unwrap(),
         )
+    }
+
+    fn drain_and_check(sw: &mut Swapper, plan: &[TensorDesc], label: &str) {
+        for (i, want) in plan.iter().enumerate() {
+            let got = sw.next().unwrap();
+            assert_eq!(got.desc.name, want.name, "{label}: order violated");
+            assert!(
+                got.data.as_f32().iter().all(|&x| x == i as f32 + 0.5),
+                "{label}: tensor {i} corrupted"
+            );
+        }
+        assert_eq!(sw.remaining(), 0, "{label}: remaining after drain");
     }
 
     #[test]
@@ -357,7 +844,7 @@ mod tests {
             scratch(),
             plan.clone(),
             |t| format!("{}/fp16", t.name),
-            2,
+            FetchOpts::window(2),
         );
         for (i, want) in plan.iter().enumerate() {
             let got = sw.next().unwrap();
@@ -366,6 +853,7 @@ mod tests {
             assert!(got.data.as_f32().iter().all(|&x| x == i as f32 + 0.5));
         }
         assert_eq!(sw.remaining(), 0);
+        assert_eq!(sw.metrics().fetch_submissions, plan.len() as u64);
         assert!(sw.next().is_err(), "exhausted plan must error");
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -384,16 +872,9 @@ mod tests {
                 scratch(),
                 plan.clone(),
                 |t| format!("{}/fp16", t.name),
-                depth,
+                FetchOpts::window(depth),
             );
-            for (i, want) in plan.iter().enumerate() {
-                let got = sw.next().unwrap();
-                assert_eq!(got.desc.name, want.name, "depth {depth}: order violated");
-                assert!(
-                    got.data.as_f32().iter().all(|&x| x == i as f32 + 0.5),
-                    "depth {depth}: tensor {i} corrupted"
-                );
-            }
+            drain_and_check(&mut sw, &plan, &format!("depth {depth}"));
         }
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -417,7 +898,7 @@ mod tests {
             scratch(),
             plan,
             |t| format!("{}/fp16", t.name),
-            1,
+            FetchOpts::window(1),
         );
         assert!(sw.next().is_err());
         std::fs::remove_dir_all(&dir).ok();
@@ -441,7 +922,7 @@ mod tests {
             scratch(),
             plan,
             |t| format!("{}/fp16", t.name),
-            4,
+            FetchOpts::window(4),
         );
         assert!(sw.next().is_err());
         drop(sw); // window still has in-flight fetches
@@ -460,7 +941,7 @@ mod tests {
             scratch(),
             plan.clone(),
             |t| format!("{}/fp16", t.name),
-            3,
+            FetchOpts::window(3),
         );
         // in-order delivery means results match the plan prefix until
         // the first injected fault; data before it must be correct
@@ -488,7 +969,7 @@ mod tests {
             Arc::clone(&s),
             plan.clone(),
             |t| format!("{}/fp16", t.name),
-            2,
+            FetchOpts::window(2),
         );
         for _ in 0..plan.len() {
             let got = sw.next().unwrap();
@@ -522,7 +1003,7 @@ mod tests {
             Arc::clone(&s),
             plan.clone(),
             |t| format!("{}/fp16", t.name),
-            2,
+            FetchOpts::window(2),
         );
         let mut expect_bytes = 0u64;
         for (i, t) in plan.iter().enumerate() {
@@ -555,4 +1036,199 @@ mod tests {
         assert_eq!(s.arena().tracker().current(Cat::SwapBuf), 0);
     }
 
+    #[test]
+    fn coalesced_groups_cut_submissions_and_stay_bit_identical() {
+        let (engine, plan, dir) = seeded_engine("coal");
+        let groups = seeded_groups(&engine, &plan);
+
+        let before = engine.stats();
+        let mut sw = Swapper::start(
+            engine.clone(),
+            pool(4),
+            Arc::new(IoExecutor::new(2)),
+            stage(),
+            scratch(),
+            plan.clone(),
+            |t| format!("{}/fp16", t.name),
+            FetchOpts::window(4).with_groups(Arc::clone(&groups)),
+        );
+        for (i, want) in plan.iter().enumerate() {
+            let got = sw.next().unwrap();
+            assert_eq!(got.desc.name, want.name, "order violated");
+            assert!(got.data.is_view(), "group member not lease-backed");
+            assert!(
+                got.data.as_f32().iter().all(|&x| x == i as f32 + 0.5),
+                "tensor {i} corrupted on the coalesced path"
+            );
+        }
+        let reads = engine.stats().reads - before.reads;
+        let m = sw.metrics();
+        assert_eq!(m.fetch_submissions, reads, "submission accounting diverged");
+        assert!(
+            m.fetch_submissions * 2 <= plan.len() as u64,
+            "coalescing submitted {} reads for {} tensors (expected ≥2× cut)",
+            m.fetch_submissions,
+            plan.len()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn profile_records_then_replays_byte_identically() {
+        let (engine, plan, dir) = seeded_engine("prof");
+        let store = Arc::new(ProfileStore::new());
+        let opts = || FetchOpts::window(2).with_profile(Arc::clone(&store), 500);
+
+        // step 1: store empty → record mode (no fallback flag)
+        let mut sw = Swapper::start(
+            engine.clone(),
+            pool(2),
+            Arc::new(IoExecutor::new(2)),
+            stage(),
+            scratch(),
+            plan.clone(),
+            |t| format!("{}/fp16", t.name),
+            opts(),
+        );
+        drain_and_check(&mut sw, &plan, "record step");
+        let m1 = sw.metrics();
+        assert!(!m1.replayed && !m1.profile_fallback);
+        assert_eq!(store.len(), 1, "full delivery must commit exactly one profile");
+
+        // step 2: digest hits → replay, identical delivery, every unit
+        // accounted as hit or late
+        let mut sw = Swapper::start(
+            engine.clone(),
+            pool(2),
+            Arc::new(IoExecutor::new(2)),
+            stage(),
+            scratch(),
+            plan.clone(),
+            |t| format!("{}/fp16", t.name),
+            opts(),
+        );
+        drain_and_check(&mut sw, &plan, "replay step");
+        let m2 = sw.metrics();
+        assert!(m2.replayed, "recorded digest must replay");
+        assert!(!m2.profile_fallback);
+        assert_eq!(m2.prefetch_hits + m2.prefetch_late, m2.fetch_submissions);
+        assert_eq!(store.len(), 1, "replay must not re-record");
+
+        // "restart": persist, reload, and replay from the loaded store
+        store.persist(engine.as_ref()).unwrap();
+        let reloaded = Arc::new(ProfileStore::load(engine.as_ref()).unwrap().unwrap());
+        let mut sw = Swapper::start(
+            engine,
+            pool(2),
+            Arc::new(IoExecutor::new(2)),
+            stage(),
+            scratch(),
+            plan.clone(),
+            |t| format!("{}/fp16", t.name),
+            FetchOpts::window(2).with_profile(reloaded, 500),
+        );
+        drain_and_check(&mut sw, &plan, "post-restart replay");
+        assert!(sw.metrics().replayed, "persisted profile must replay after reload");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn profile_mismatch_falls_back_to_window_and_rerecords() {
+        let (engine, plan, dir) = seeded_engine("mismatch");
+        let store = Arc::new(ProfileStore::new());
+        let fwd = plan.clone();
+        let mut bwd = plan.clone();
+        bwd.reverse();
+
+        let mut sw = Swapper::start(
+            engine.clone(),
+            pool(2),
+            Arc::new(IoExecutor::new(2)),
+            stage(),
+            scratch(),
+            fwd.clone(),
+            |t| format!("{}/fp16", t.name),
+            FetchOpts::window(2).with_profile(Arc::clone(&store), 500),
+        );
+        for want in &fwd {
+            assert_eq!(sw.next().unwrap().desc.name, want.name);
+        }
+        assert_eq!(store.len(), 1);
+
+        // reordered plan: digest misses → structured fallback + re-record
+        let mut sw = Swapper::start(
+            engine,
+            pool(2),
+            Arc::new(IoExecutor::new(2)),
+            stage(),
+            scratch(),
+            bwd.clone(),
+            |t| format!("{}/fp16", t.name),
+            FetchOpts::window(2).with_profile(Arc::clone(&store), 500),
+        );
+        for want in &bwd {
+            assert_eq!(sw.next().unwrap().desc.name, want.name);
+        }
+        let m = sw.metrics();
+        assert!(m.profile_fallback, "digest miss must flag the fallback");
+        assert!(!m.replayed);
+        assert_eq!(store.len(), 2, "the reordered plan must record its own profile");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn faulted_ranged_reads_surface_and_never_commit_a_profile() {
+        let (engine, plan, dir) = seeded_engine("rfault");
+        let groups = seeded_groups(&engine, &plan);
+        let store = Arc::new(ProfileStore::new());
+
+        // only ranged reads fail: exactly the coalesced group path
+        let faulty: Arc<dyn NvmeEngine> = Arc::new(
+            FaultyEngine::new(engine.clone(), 1024, 7)
+                .with_mask(OpMask::NONE.with(OpKind::ReadAt)),
+        );
+        let mut sw = Swapper::start(
+            faulty,
+            pool(2),
+            Arc::new(IoExecutor::new(2)),
+            stage(),
+            scratch(),
+            plan.clone(),
+            |t| format!("{}/fp16", t.name),
+            FetchOpts::window(2)
+                .with_groups(Arc::clone(&groups))
+                .with_profile(Arc::clone(&store), 500),
+        );
+        let mut saw_err = false;
+        for _ in 0..plan.len() {
+            if sw.next().is_err() {
+                saw_err = true;
+                break;
+            }
+        }
+        assert!(saw_err, "injected ranged-read faults never surfaced");
+        drop(sw);
+        assert!(store.is_empty(), "a faulted step must not commit a profile");
+
+        // the schedule stays consistent: a clean pass on the same store
+        // records normally and the next one replays
+        for expect_replay in [false, true] {
+            let mut sw = Swapper::start(
+                engine.clone(),
+                pool(2),
+                Arc::new(IoExecutor::new(2)),
+                stage(),
+                scratch(),
+                plan.clone(),
+                |t| format!("{}/fp16", t.name),
+                FetchOpts::window(2)
+                    .with_groups(Arc::clone(&groups))
+                    .with_profile(Arc::clone(&store), 500),
+            );
+            drain_and_check(&mut sw, &plan, "post-fault pass");
+            assert_eq!(sw.metrics().replayed, expect_replay);
+        }
+        assert_eq!(store.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

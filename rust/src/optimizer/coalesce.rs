@@ -64,6 +64,16 @@ pub fn super_group_name(idx: usize) -> String {
     format!("optim/sg{idx}")
 }
 
+/// Key of one super-group's *packed fp16 stream*: every member's fp16
+/// compute weights concatenated at the layout's element offsets (×2
+/// bytes).  Maintained by the write-back scatter when
+/// [`CoalescedOptim::enable_fp16_streams`] is on, and read back as one
+/// ranged submission per super-group by the swapper's coalesced fetch
+/// path — the read-side twin of the coalesced state streams.
+pub fn fp16_stream_name(idx: usize) -> String {
+    format!("{}/fp16", super_group_name(idx))
+}
+
 /// One member tensor's place in the coalesced layout.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MemberSpan {
@@ -216,6 +226,10 @@ pub struct CoalescedOptim {
     /// Member-index range of each super-group (members are assigned in
     /// order, so each super-group owns a contiguous slice).
     super_members: Vec<Range<usize>>,
+    /// Whether the packed per-super fp16 streams
+    /// ([`fp16_stream_name`]) are maintained alongside the per-member
+    /// scatter (the swapper's coalesced read path depends on them).
+    fp16_streams: bool,
 }
 
 /// Plan the coalesced layout for `groups` (a pure function of the
@@ -327,7 +341,7 @@ impl CoalescedOptim {
             }
         }
         let super_members = member_ranges(&layout);
-        Ok(Self { layout, supers, super_members })
+        Ok(Self { layout, supers, super_members, fp16_streams: false })
     }
 
     /// Reattach to super-group streams that already hold the *current*
@@ -372,7 +386,44 @@ impl CoalescedOptim {
             }
         }
         let super_members = member_ranges(&layout);
-        Ok(Self { layout, supers, super_members })
+        Ok(Self { layout, supers, super_members, fp16_streams: false })
+    }
+
+    /// Turn on the packed per-super fp16 streams: reserve
+    /// [`fp16_stream_name`] per super-group and gather every member's
+    /// `{name}/fp16` bytes into it at the layout offsets.  The member
+    /// keys are authoritative here — on a fresh build they were just
+    /// initialized, on a resume they are exactly what the checkpoint
+    /// validated — so the gather is correct in both lifecycles (the
+    /// streams themselves are *derived* state, re-derivable at any
+    /// time, and deliberately kept out of the checkpoint key set).
+    /// From then on every tile write-back mirrors its fp16 window into
+    /// the stream, keeping it bit-identical to the member keys.
+    pub fn enable_fp16_streams(
+        &mut self,
+        engine: &dyn NvmeEngine,
+        fp16_keys: &[String],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            fp16_keys.len() == self.layout.members.len(),
+            "members/keys length mismatch"
+        );
+        for (i, &numel) in self.layout.super_numels.iter().enumerate() {
+            engine.reserve(&fp16_stream_name(i), numel * 2)?;
+        }
+        for (span, key) in self.layout.members.iter().zip(fp16_keys) {
+            let mut buf = vec![0u8; span.numel * 2];
+            engine.read(key, &mut buf)?;
+            engine.write_at(&fp16_stream_name(span.super_idx), span.offset * 2, &buf)?;
+        }
+        self.fp16_streams = true;
+        Ok(())
+    }
+
+    /// Whether [`Self::enable_fp16_streams`] has run (the swapper's
+    /// coalesced fetch path requires it).
+    pub fn fp16_streams_enabled(&self) -> bool {
+        self.fp16_streams
     }
 
     /// Member overlaps of the tile `[start, start+cnt)` of super-group
@@ -425,9 +476,12 @@ impl CoalescedOptim {
             fp16_keys.len() == self.layout.members.len(),
             "members/keys length mismatch"
         );
-        for st in &self.supers {
+        for (i, st) in self.supers.iter().enumerate() {
             for k in state_keys(&st.group) {
                 engine.flush(&k)?;
+            }
+            if self.fp16_streams {
+                engine.flush(&fp16_stream_name(i))?;
             }
         }
         for k in fp16_keys {
@@ -656,6 +710,10 @@ impl CoalescedOptim {
         let [k_p, k_m, k_v] = state_keys(&self.supers[g].group);
         let dtype = self.layout.dtype;
         let off = start * dtype.bytes_per_elem();
+        // the packed stream mirror is one more ranged view write off
+        // the same shared fp16 lease: the tile is contiguous in
+        // super-group coordinates, so the whole window lands at once
+        let stream = self.fp16_streams.then(|| (fp16_stream_name(g), start * 2, cnt * 2));
         stage.submit(move || {
             master_to_fp16(dtype, p.as_slice(), fp16.as_mut_slice());
             let shared = fp16.into_shared();
@@ -673,6 +731,15 @@ impl CoalescedOptim {
                     dst_off,
                     Arc::clone(&shared),
                     src_off,
+                    len,
+                ));
+            }
+            if let Some((key, dst_off, len)) = stream {
+                wb.views.push(aio.submit_write_at_lease_view(
+                    key,
+                    dst_off,
+                    Arc::clone(&shared),
+                    0,
                     len,
                 ));
             }
@@ -770,6 +837,9 @@ impl CoalescedOptim {
                 &fp16[(s - start) * 2..(e - start) * 2],
             )?;
         }
+        if self.fp16_streams {
+            engine.write_at(&fp16_stream_name(g), start * 2, &fp16)?;
+        }
         Ok(())
     }
 
@@ -804,6 +874,9 @@ impl CoalescedOptim {
                 (s - span.offset) * 2,
                 &fp16[(s - start) * 2..(e - start) * 2],
             )?;
+        }
+        if self.fp16_streams {
+            engine.write_at(&fp16_stream_name(g), start * 2, &fp16)?;
         }
         Ok(())
     }
@@ -1238,6 +1311,71 @@ mod tests {
         }
         std::fs::remove_dir_all(&dir_a).ok();
         std::fs::remove_dir_all(&dir_c).ok();
+    }
+
+    #[test]
+    fn fp16_streams_mirror_member_keys_bit_for_bit() {
+        // the packed per-super fp16 streams must equal the member keys
+        // laid out at the layout offsets after the initial gather and
+        // after every step — on the async write-back path *and* the
+        // budget-degraded sync path
+        let sizes = [130usize, 7, 950, 64, 33];
+        let (eng, dir) = engine("fp16s");
+        let hp = AdamParams::default();
+        let mut rng = crate::util::rng::Xoshiro256::new(17);
+        let (states, _) = init_groups(&eng, &sizes, StateDtype::F32, &mut rng);
+        let eng: Arc<dyn NvmeEngine> = Arc::new(eng);
+        let aio = AsyncEngine::new(Arc::clone(&eng), 2);
+        let stage = StageExecutor::new(1);
+        let keys: Vec<String> = (0..sizes.len()).map(|g| format!("g{g}/fp16")).collect();
+        let mut co = CoalescedOptim::build(eng.as_ref(), &states, 2048).unwrap();
+        assert!(!co.fp16_streams_enabled());
+        co.enable_fp16_streams(eng.as_ref(), &keys).unwrap();
+        assert!(co.fp16_streams_enabled());
+        let check = |co: &CoalescedOptim, ctx: &str| {
+            for (i, &numel) in co.layout.super_numels.iter().enumerate() {
+                let key = fp16_stream_name(i);
+                assert_eq!(eng.len_of(&key), Some(numel * 2), "{ctx}: stream {key}");
+                let mut stream = vec![0u8; numel * 2];
+                eng.read(&key, &mut stream).unwrap();
+                for span in co.layout.members.iter().filter(|m| m.super_idx == i) {
+                    let mut member = vec![0u8; span.numel * 2];
+                    eng.read(&format!("{}/fp16", span.name), &mut member).unwrap();
+                    assert_eq!(
+                        &stream[span.offset * 2..(span.offset + span.numel) * 2],
+                        &member[..],
+                        "{ctx}: stream {key} diverged from '{}'",
+                        span.name
+                    );
+                }
+            }
+        };
+        check(&co, "after gather");
+        let starved = PinnedArena::new(
+            Arc::new(crate::pinned::AlignedAllocator::new(
+                Mode::Real,
+                Arc::new(crate::pinned::MemoryTracker::new()),
+            )),
+            crate::pinned::ArenaConfig { budget_bytes: Some(512), ..Default::default() },
+        );
+        for t in 1..=2u64 {
+            let grads: Vec<Vec<f32>> = sizes
+                .iter()
+                .map(|n| (0..*n).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            // t=1: pinned async write-back; t=2: every tile degraded
+            let ar = if t == 1 { arena() } else { Arc::clone(&starved) };
+            let stats = co
+                .step_tiled(&aio, &stage, &ar, &grad_refs, &keys, t, 1.0, &hp, 1, 1024, 2)
+                .unwrap();
+            if t == 2 {
+                assert_eq!(stats.degraded_tiles, stats.tiles);
+            }
+            check(&co, if t == 1 { "after async step" } else { "after degraded step" });
+        }
+        co.flush(eng.as_ref(), &keys).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -411,6 +411,25 @@ impl AsyncEngine {
         handle
     }
 
+    /// Async ranged read: fill `buf` from byte `offset` of `key`'s
+    /// value.  The owned-buffer twin of [`Self::submit_read_at_lease`]
+    /// for callers staging outside the pinned arena (budget-degraded
+    /// fetches, scratch reads).
+    pub fn submit_read_at(
+        &self,
+        key: String,
+        offset: usize,
+        mut buf: Vec<u8>,
+    ) -> IoHandle<Vec<u8>> {
+        let (completer, handle) = IoHandle::pair();
+        let eng = Arc::clone(&self.inner);
+        self.exec.submit(move || {
+            let res = eng.read_at(&key, offset, &mut buf);
+            completer.complete(res.map(move |()| buf));
+        });
+        handle
+    }
+
     /// Async write of `data` under `key`; the buffer comes back for
     /// reuse once the write is durable in the engine.
     pub fn submit_write(&self, key: String, data: Vec<u8>) -> IoHandle<Vec<u8>> {

@@ -3,49 +3,65 @@
 //!
 //! PR 3 and PR 4 built the *mechanisms* — budget-enforced pinned
 //! leases, a tile-granular optimizer pipeline, zero-copy delivery
-//! views — but left every knob static: `optim_tile_bytes`, the tile
-//! pipeline depth, and the swapper's `prefetch_depth` are fixed at
-//! construction.  Under a tight `pinned_budget_bytes` the arena then
-//! silently degrades the hot paths (`StepMetrics::host_copy_bytes > 0`
-//! on the boundary, `degraded_tiles > 0` in the optimizer) instead of
-//! the pipeline adapting; on an idle device the windows stay shallow
-//! and leave bandwidth on the table.  SSDTrain's rate-matched
-//! transfers and 10Cache's pressure-driven placement both argue the
-//! same point: the window sizes should be *outputs* of observed
-//! pressure, not inputs.
+//! views — but left every knob static.  Under a tight
+//! `pinned_budget_bytes` the arena then silently degrades the hot
+//! paths (`StepMetrics::host_copy_bytes > 0` on the boundary,
+//! `degraded_tiles > 0` in the optimizer) instead of the pipeline
+//! adapting; on an idle device the windows stay shallow and leave
+//! bandwidth on the table.  SSDTrain's rate-matched transfers and
+//! 10Cache's pressure-driven placement both argue the same point: the
+//! window sizes should be *outputs* of observed pressure, not inputs.
 //!
-//! [`PipelineGovernor`] closes the loop.  Once per step the trainer
-//! feeds it a [`GovernorSample`] — the arena's reserved/budget state
+//! [`PipelineGovernor`] closes the loop over **five knobs**: the
+//! optimizer tile size and pipeline depth, the swapper's prefetch
+//! window, the replayed prefetch schedule's lead-time
+//! (`sched_lead_us`), and the activation store's host byte budget
+//! (`act_host_budget`).  Once per step the trainer feeds it a
+//! [`GovernorSample`] — the arena's reserved/budget state
 //! ([`crate::pinned::PinnedArena::stats`]), the boundary copy meter,
-//! the optimizer's degraded-tile count, and the step's stall/busy
-//! decomposition (`io_wait_secs` vs the engine's union-of-busy
-//! `io_secs`) — and gets back a clamped [`PipelineTuning`]:
+//! the optimizer's degraded-tile count, the swapper's prefetch
+//! hit/late counts, and the step's stall/busy decomposition
+//! (`io_wait_secs` vs the engine's union-of-busy `io_secs`) — and gets
+//! back a clamped [`PipelineTuning`]:
 //!
 //! - **Pressure ⇒ shrink, immediately.**  `degraded_tiles > 0` means
 //!   the optimizer window no longer fits the budget: halve the tile
 //!   size, then step the tile depth down.  `host_copy_bytes > 0` means
 //!   delivery staging is being refused: shallow the prefetch window
-//!   first (fewer concurrent delivery views), then shrink the
-//!   optimizer window too.  Every shrink is strictly monotone, so
+//!   first (fewer concurrent delivery views), then pull the replay
+//!   schedule's lead-time in (later fetches hold staging leases for
+//!   less wall time).  Past those, the activation host budget halves
+//!   toward its floor — trading spill I/O for pinned headroom — before
+//!   the governor gives up.  Every shrink is strictly monotone, so
 //!   under persistent pressure the tuning reaches the configured
 //!   minima in a *bounded* number of steps — convergence is a
 //!   structural property, not a hope (tested).
 //! - **Idle + stalls ⇒ grow, carefully.**  With zero pressure, stalls
 //!   above [`GovernorConfig::grow_stall_frac`] and the queues not
 //!   saturated, the governor deepens one knob per
-//!   [`GovernorConfig::grow_cooldown_steps`], and only when the
-//!   projected extra window demand fits the arena's remaining budget
-//!   headroom.  Knobs that previously *caused* pressure are remembered
-//!   as ceilings and not re-approached until a long pressure-free
-//!   stretch ([`GovernorConfig::reprobe_after`]) clears them —
-//!   hysteresis against shrink/grow ping-pong.
+//!   [`GovernorConfig::grow_cooldown_steps`] (round-robin over tile
+//!   depth, tile bytes, prefetch depth, and the activation budget),
+//!   and only when the projected extra pinned demand fits the arena's
+//!   remaining budget headroom.  Knobs that previously *caused*
+//!   pressure are remembered as ceilings and not re-approached until a
+//!   long pressure-free stretch ([`GovernorConfig::reprobe_after`])
+//!   clears them — hysteresis against shrink/grow ping-pong.
+//! - **Late prefetches ⇒ more lead, targeted.**  The recorded-schedule
+//!   replayer (see `offload/swapper.rs`) reports per-unit hit/late
+//!   counts.  `prefetch_late > 0` without pressure means the schedule
+//!   is cutting deadlines too fine: the lead-time doubles (under the
+//!   same grow cooldown) up to [`GovernorConfig::max_lead_us`].  This
+//!   is the arbitration the replay contract needs — arena pressure
+//!   pulls lead-time *down* (shrink chain), late arrivals push it
+//!   *up*, and the depth window bounds the damage of either extreme.
 //!
-//! Every retune is bit-identity-safe by construction: tile size,
-//! depth, and prefetch window only reorder I/O over disjoint ranges
-//! (the drivers' invariant), so the governor can never change a
-//! trajectory — only its speed and memory footprint.  `governor:
-//! false` in [`crate::config::TrainSpec`] pins the initial tuning
-//! forever: exactly today's static behavior, byte for byte.
+//! Every retune is bit-identity-safe by construction: all five knobs
+//! only reorder I/O over disjoint ranges or move activation bytes
+//! between host and SSD tiers (the drivers' invariant), so the
+//! governor can never change a trajectory — only its speed and memory
+//! footprint.  `governor: false` in [`crate::config::TrainSpec`] pins
+//! the initial tuning forever: exactly today's static behavior, byte
+//! for byte.
 
 /// Clamp bounds and control-law constants of the governor.
 #[derive(Debug, Clone)]
@@ -56,6 +72,14 @@ pub struct GovernorConfig {
     pub max_tile_depth: usize,
     pub min_prefetch_depth: usize,
     pub max_prefetch_depth: usize,
+    /// Bounds for the replayed prefetch schedule's lead-time.
+    pub min_lead_us: u64,
+    pub max_lead_us: u64,
+    /// Bounds for the activation store's host byte budget.  The
+    /// trainer derives these from the configured `act_host_budget`
+    /// (floor = an eighth of it), so an ungoverned run is unchanged.
+    pub min_act_budget: usize,
+    pub max_act_budget: usize,
     /// Grow only when the step stalled on I/O for more than this
     /// fraction of its wall time.
     pub grow_stall_frac: f64,
@@ -78,6 +102,10 @@ impl Default for GovernorConfig {
             max_tile_depth: 8,
             min_prefetch_depth: 1,
             max_prefetch_depth: 8,
+            min_lead_us: 200,
+            max_lead_us: 200_000,
+            min_act_budget: 0,
+            max_act_budget: usize::MAX,
             grow_stall_frac: 0.05,
             busy_saturation_frac: 0.90,
             grow_cooldown_steps: 2,
@@ -86,7 +114,7 @@ impl Default for GovernorConfig {
     }
 }
 
-/// The three pipeline window knobs the governor owns.
+/// The five pipeline knobs the governor owns.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PipelineTuning {
     /// Optimizer tile size in state bytes (`step_groups_tiled` /
@@ -96,8 +124,14 @@ pub struct PipelineTuning {
     /// flight (the dynamic replacement for the old
     /// `TILE_PIPELINE_DEPTH` constant).
     pub tile_depth: usize,
-    /// Swapper fetches kept in flight ahead of compute.
+    /// Swapper fetch units kept in flight ahead of compute.
     pub prefetch_depth: usize,
+    /// Safety lead subtracted from each replayed fetch deadline (µs);
+    /// ignored by the depth-window path.
+    pub sched_lead_us: u64,
+    /// Host byte budget of the spilling activation store; bytes beyond
+    /// it spill to SSD.
+    pub act_host_budget: usize,
 }
 
 impl PipelineTuning {
@@ -119,6 +153,13 @@ pub struct GovernorSample {
     /// Optimizer tiles degraded to the synchronous unpinned path this
     /// step (`PipelineStats::degraded_tiles`).
     pub degraded_tiles: u64,
+    /// Fetch units compute blocked on this step
+    /// (`SwapMetrics::prefetch_late`) — the replay schedule's
+    /// lead-time grow signal.
+    pub prefetch_late: u64,
+    /// Fetch units already upconverted when compute asked
+    /// (`SwapMetrics::prefetch_hits`).
+    pub prefetch_hits: u64,
     /// Foreground I/O stall attributed to this step.
     pub io_wait_secs: f64,
     /// Engine-busy union for the step (`IoSnapshot::busy_ns` delta).
@@ -169,7 +210,7 @@ pub struct PipelineGovernor {
     ceiling: Option<PipelineTuning>,
     pressure_free_steps: u64,
     steps_since_grow: u64,
-    /// Round-robin cursor over the three knobs for grow actions.
+    /// Round-robin cursor over the growable knobs.
     grow_cursor: usize,
     stats: GovernorStats,
 }
@@ -186,6 +227,10 @@ impl PipelineGovernor {
             prefetch_depth: initial
                 .prefetch_depth
                 .clamp(cfg.min_prefetch_depth, cfg.max_prefetch_depth),
+            sched_lead_us: initial.sched_lead_us.clamp(cfg.min_lead_us, cfg.max_lead_us),
+            act_host_budget: initial
+                .act_host_budget
+                .clamp(cfg.min_act_budget, cfg.max_act_budget),
         };
         Self {
             cfg,
@@ -213,6 +258,8 @@ impl PipelineGovernor {
         self.tuning.optim_tile_bytes == self.cfg.min_tile_bytes
             && self.tuning.tile_depth == self.cfg.min_tile_depth
             && self.tuning.prefetch_depth == self.cfg.min_prefetch_depth
+            && self.tuning.sched_lead_us == self.cfg.min_lead_us
+            && self.tuning.act_host_budget == self.cfg.min_act_budget
     }
 
     /// Feed one step's observations; returns the tuning for the next
@@ -233,7 +280,22 @@ impl PipelineGovernor {
             // activations late in a curriculum)
             self.ceiling = None;
         }
-        if s.stall_frac() > self.cfg.grow_stall_frac
+        if s.prefetch_late > 0
+            && self.steps_since_grow >= self.cfg.grow_cooldown_steps
+            && self.tuning.sched_lead_us < self.cfg.max_lead_us
+        {
+            // the replay schedule cut a deadline too fine: issue
+            // earlier.  Targeted, not round-robin — a late fetch names
+            // its own cure.
+            self.tuning.sched_lead_us = self
+                .tuning
+                .sched_lead_us
+                .max(1)
+                .saturating_mul(2)
+                .min(self.cfg.max_lead_us);
+            self.stats.grows += 1;
+            self.steps_since_grow = 0;
+        } else if s.stall_frac() > self.cfg.grow_stall_frac
             && s.busy_frac() < self.cfg.busy_saturation_frac
             && self.steps_since_grow >= self.cfg.grow_cooldown_steps
         {
@@ -249,6 +311,12 @@ impl PipelineGovernor {
         {
             // delivery staging refused: fewer concurrent views first
             self.tuning.prefetch_depth -= 1;
+        } else if s.host_copy_bytes > 0 && self.tuning.sched_lead_us > self.cfg.min_lead_us
+        {
+            // then fetch later: replayed units hold staging leases for
+            // less wall time
+            self.tuning.sched_lead_us =
+                (self.tuning.sched_lead_us / 2).max(self.cfg.min_lead_us);
         } else if self.tuning.optim_tile_bytes > self.cfg.min_tile_bytes {
             self.tuning.optim_tile_bytes =
                 (self.tuning.optim_tile_bytes / 2).max(self.cfg.min_tile_bytes);
@@ -256,6 +324,14 @@ impl PipelineGovernor {
             self.tuning.tile_depth -= 1;
         } else if self.tuning.prefetch_depth > self.cfg.min_prefetch_depth {
             self.tuning.prefetch_depth -= 1;
+        } else if self.tuning.sched_lead_us > self.cfg.min_lead_us {
+            self.tuning.sched_lead_us =
+                (self.tuning.sched_lead_us / 2).max(self.cfg.min_lead_us);
+        } else if self.tuning.act_host_budget > self.cfg.min_act_budget {
+            // last resort: trade activation spill I/O for pinned
+            // headroom
+            self.tuning.act_host_budget =
+                (self.tuning.act_host_budget / 2).max(self.cfg.min_act_budget);
         }
         if self.tuning != before {
             self.stats.shrinks += 1;
@@ -266,6 +342,8 @@ impl PipelineGovernor {
                     optim_tile_bytes: c.optim_tile_bytes.min(before.optim_tile_bytes),
                     tile_depth: c.tile_depth.min(before.tile_depth),
                     prefetch_depth: c.prefetch_depth.min(before.prefetch_depth),
+                    sched_lead_us: c.sched_lead_us.min(before.sched_lead_us),
+                    act_host_budget: c.act_host_budget.min(before.act_host_budget),
                 },
             });
         }
@@ -274,8 +352,9 @@ impl PipelineGovernor {
         // degrading gracefully, which is the designed floor behavior
     }
 
-    /// One grow action per call, round-robin over the knobs, ceilinged
-    /// and budget-headroom-checked.
+    /// One grow action per call, round-robin over the growable knobs
+    /// (lead-time grows only via its targeted late-arrival rule),
+    /// ceilinged and budget-headroom-checked.
     fn grow(&mut self, s: &GovernorSample) {
         let ceiling = self.ceiling;
         let cfg = &self.cfg;
@@ -283,14 +362,8 @@ impl PipelineGovernor {
             (Some(b), r) => b.saturating_sub(r),
             (None, _) => usize::MAX,
         };
-        let fits = |t: &PipelineTuning, cur: &PipelineTuning| -> bool {
-            let extra = t
-                .optim_window_bytes()
-                .saturating_sub(cur.optim_window_bytes());
-            extra <= headroom
-        };
-        for _ in 0..3 {
-            let knob = self.grow_cursor % 3;
+        for _ in 0..4 {
+            let knob = self.grow_cursor % 4;
             self.grow_cursor += 1;
             let mut next = self.tuning;
             let below_ceiling = |get: fn(&PipelineTuning) -> usize, v: usize| match ceiling
@@ -310,13 +383,29 @@ impl PipelineGovernor {
                     next.optim_tile_bytes > self.tuning.optim_tile_bytes
                         && below_ceiling(|c| c.optim_tile_bytes, next.optim_tile_bytes)
                 }
-                _ => {
+                2 => {
                     next.prefetch_depth += 1;
                     next.prefetch_depth <= cfg.max_prefetch_depth
                         && below_ceiling(|c| c.prefetch_depth, next.prefetch_depth)
                 }
+                _ => {
+                    next.act_host_budget = next
+                        .act_host_budget
+                        .saturating_mul(2)
+                        .min(cfg.max_act_budget);
+                    next.act_host_budget > self.tuning.act_host_budget
+                        && below_ceiling(|c| c.act_host_budget, next.act_host_budget)
+                }
             };
-            if allowed && fits(&next, &self.tuning) {
+            // projected extra pinned demand: the optimizer window delta
+            // plus any activation-budget delta must fit the headroom
+            let extra = next
+                .optim_window_bytes()
+                .saturating_sub(self.tuning.optim_window_bytes())
+                .saturating_add(
+                    next.act_host_budget.saturating_sub(self.tuning.act_host_budget),
+                );
+            if allowed && extra <= headroom {
                 self.tuning = next;
                 self.stats.grows += 1;
                 self.steps_since_grow = 0;
@@ -335,6 +424,10 @@ mod tests {
             optim_tile_bytes: tile,
             tile_depth: depth,
             prefetch_depth: prefetch,
+            // the defaults' minima, so the legacy three-knob tests keep
+            // their exact expectations
+            sched_lead_us: 200,
+            act_host_budget: 0,
         }
     }
 
@@ -342,6 +435,8 @@ mod tests {
         GovernorSample {
             host_copy_bytes: host_copy,
             degraded_tiles: degraded,
+            prefetch_late: 0,
+            prefetch_hits: 0,
             io_wait_secs: 0.2,
             io_busy_secs: 0.4,
             step_secs: 1.0,
@@ -404,6 +499,22 @@ mod tests {
     }
 
     #[test]
+    fn host_copy_pressure_pulls_lead_time_in_after_prefetch() {
+        let cfg = GovernorConfig::default();
+        let mut gov = PipelineGovernor::new(
+            cfg.clone(),
+            PipelineTuning { sched_lead_us: 8_000, ..tuning(4 << 20, 2, 1) },
+        );
+        // prefetch already at its floor: boundary pressure must halve
+        // the schedule lead before touching the optimizer window
+        gov.observe(&pressured(1024, 0));
+        let t = gov.tuning();
+        assert_eq!(t.sched_lead_us, 4_000, "lead-time must halve");
+        assert_eq!(t.optim_tile_bytes, 4 << 20, "tile untouched");
+        assert_eq!(t.prefetch_depth, 1);
+    }
+
+    #[test]
     fn degraded_tiles_shrink_the_tile_window_first() {
         let mut gov =
             PipelineGovernor::new(GovernorConfig::default(), tuning(4 << 20, 2, 6));
@@ -411,6 +522,32 @@ mod tests {
         let t = gov.tuning();
         assert_eq!(t.optim_tile_bytes, 2 << 20, "tile must halve");
         assert_eq!(t.prefetch_depth, 6, "prefetch untouched on optimizer pressure");
+    }
+
+    #[test]
+    fn persistent_pressure_halves_the_activation_budget_last() {
+        let cfg = GovernorConfig {
+            min_act_budget: 1 << 20,
+            max_act_budget: 16 << 20,
+            ..Default::default()
+        };
+        let mut gov = PipelineGovernor::new(
+            cfg.clone(),
+            PipelineTuning {
+                act_host_budget: 16 << 20,
+                ..tuning(cfg.min_tile_bytes, 1, 1)
+            },
+        );
+        // window knobs already at their floors: only the activation
+        // budget is left to give, one halving per pressured step
+        for expect in [8 << 20, 4 << 20, 2 << 20, 1 << 20] {
+            gov.observe(&pressured(0, 1));
+            assert_eq!(gov.tuning().act_host_budget, expect);
+        }
+        assert!(gov.at_floor());
+        let t = gov.tuning();
+        gov.observe(&pressured(0, 1));
+        assert_eq!(gov.tuning(), t, "floor must absorb further pressure");
     }
 
     #[test]
@@ -433,12 +570,70 @@ mod tests {
             gov.observe(&stalled());
         }
         let t = gov.tuning();
-        // everything grew to its max, and never beyond
+        // everything grew to its max, and never beyond (the activation
+        // budget starts — and stays — at zero: doubling nothing)
         assert_eq!(t.optim_tile_bytes, cfg.max_tile_bytes);
         assert_eq!(t.tile_depth, cfg.max_tile_depth);
         assert_eq!(t.prefetch_depth, cfg.max_prefetch_depth);
+        assert_eq!(t.act_host_budget, 0);
         // cooldown bounds the grow rate
         assert!(gov.stats().grows <= 500 / cfg.grow_cooldown_steps + 3);
+    }
+
+    #[test]
+    fn late_prefetches_double_the_schedule_lead_under_cooldown() {
+        let cfg = GovernorConfig::default();
+        let mut gov = PipelineGovernor::new(
+            cfg.clone(),
+            PipelineTuning { sched_lead_us: 1_000, ..tuning(4 << 20, 2, 4) },
+        );
+        let late = GovernorSample { prefetch_late: 3, prefetch_hits: 9, ..calm() };
+        for _ in 0..200 {
+            gov.observe(&late);
+        }
+        let t = gov.tuning();
+        assert_eq!(t.sched_lead_us, cfg.max_lead_us, "lead must ride up to its cap");
+        // targeted growth: the window knobs stay put (no stall signal)
+        assert_eq!(t.optim_tile_bytes, 4 << 20);
+        assert_eq!(t.tile_depth, 2);
+        assert_eq!(t.prefetch_depth, 4);
+        // cooldown applies to lead growth like any other grow action
+        assert!(gov.stats().grows <= 200 / cfg.grow_cooldown_steps + 1);
+    }
+
+    #[test]
+    fn activation_budget_grows_in_rotation_and_respects_headroom() {
+        let cfg = GovernorConfig {
+            min_act_budget: 1 << 20,
+            max_act_budget: 8 << 20,
+            ..Default::default()
+        };
+        let mut gov = PipelineGovernor::new(
+            cfg.clone(),
+            PipelineTuning { act_host_budget: 1 << 20, ..tuning(4 << 20, 2, 4) },
+        );
+        for _ in 0..300 {
+            gov.observe(&stalled());
+        }
+        assert_eq!(
+            gov.tuning().act_host_budget,
+            8 << 20,
+            "unconstrained stalls must grow the activation budget to its cap"
+        );
+
+        // zero headroom: the activation budget must not grow — its
+        // doubling is pinned demand like any window knob's
+        let mut gov = PipelineGovernor::new(
+            cfg.clone(),
+            PipelineTuning { act_host_budget: 1 << 20, ..tuning(4 << 20, 2, 4) },
+        );
+        let mut s = stalled();
+        s.arena_budget = Some(100 << 20);
+        s.arena_reserved = 100 << 20;
+        for _ in 0..50 {
+            gov.observe(&s);
+        }
+        assert_eq!(gov.tuning().act_host_budget, 1 << 20, "act grew with zero headroom");
     }
 
     #[test]
@@ -504,6 +699,13 @@ mod tests {
         assert_eq!(t.optim_tile_bytes, cfg.min_tile_bytes);
         assert_eq!(t.tile_depth, cfg.min_tile_depth);
         assert_eq!(t.prefetch_depth, cfg.max_prefetch_depth);
+        // the new knobs clamp too
+        let t2 = PipelineGovernor::new(
+            cfg.clone(),
+            PipelineTuning { sched_lead_us: 1, ..tuning(4 << 20, 2, 2) },
+        )
+        .tuning();
+        assert_eq!(t2.sched_lead_us, cfg.min_lead_us);
     }
 
     /// The integration shape of the convergence claim: a real tiled
@@ -593,6 +795,8 @@ mod tests {
             gov.observe(&GovernorSample {
                 host_copy_bytes: host_copy,
                 degraded_tiles: stats.degraded_tiles,
+                prefetch_late: 0,
+                prefetch_hits: 0,
                 io_wait_secs: stats.wait_secs,
                 io_busy_secs: 0.0,
                 step_secs: 1.0,

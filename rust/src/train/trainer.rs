@@ -25,15 +25,27 @@
 //!    ranged submission instead of a per-tensor burst.  All paths are
 //!    bit-identical.
 //!
-//! The pipeline's window knobs — optimizer tile size, tile depth, and
-//! the swapper's prefetch depth — live in a [`PipelineTuning`]: the
+//! The pipeline's knobs — optimizer tile size, tile depth, the
+//! swapper's prefetch depth, the replay schedule's lead-time, and the
+//! activation store's host budget — live in a [`PipelineTuning`]: the
 //! spec's static values by default, retuned after every step by the
 //! pressure-adaptive [`PipelineGovernor`] when `TrainSpec::governor`
 //! is on (shrink on `host_copy_bytes`/`degraded_tiles` pressure, grow
-//! on stalls with idle queues and budget headroom — see
-//! [`super::governor`]).  Since every retune only resizes disjoint-
-//! range I/O windows, governed and static runs are bit-identical in
-//! results; only speed and pinned footprint differ.
+//! on stalls with idle queues and budget headroom, lead-time up on
+//! `prefetch_late` — see [`super::governor`]).  Since every retune
+//! only resizes disjoint-range I/O windows or moves activation bytes
+//! between host and SSD tiers, governed and static runs are
+//! bit-identical in results; only speed and pinned footprint differ.
+//!
+//! With `TrainSpec::fetch_coalesce` (on top of coalesced optimizer
+//! streams) the swapper gathers each super-group of fp16 weights with
+//! one ranged read over the packed `optim/sg{i}/fp16` streams instead
+//! of 7 per-tensor reads, and with `TrainSpec::prefetch_profile` it
+//! records the first pass's fetch timings per plan shape and replays
+//! later passes on a rate-matched just-in-time schedule
+//! ([`crate::offload::prefetch`]); the profile persists with each
+//! checkpoint epoch and is digest-revalidated on resume, degrading to
+//! the depth window (and re-recording) on mismatch.
 //!
 //! Weight fetches ride the swapper's windowed pipeline and arrive as
 //! **lease-backed views** ([`TensorBuf`]): the f16→f32 decode lands in
@@ -66,7 +78,10 @@ use crate::ckpt::{self, CkptState, Journal};
 use crate::config::{ModelSpec, TrainSpec};
 use crate::metrics::{RunReport, StepMetrics};
 use crate::offload::SpillingActivationStore;
-use crate::offload::{F32Scratch, GradFlatBuffer, LossScaler, OffloadEngine, Swapper};
+use crate::offload::{
+    F32Scratch, FetchGroups, FetchOpts, GradFlatBuffer, LossScaler, OffloadEngine,
+    ProfileStore, Swapper,
+};
 use crate::optimizer::{AdamParams, CoalescedOptim, StateDtype};
 use crate::runtime::{Runtime, TensorBuf, ValueRef};
 use crate::tensors::TensorDesc;
@@ -132,6 +147,41 @@ pub struct Trainer {
     /// (`TrainSpec::optim_coalesce_bytes`); `None` = per-tensor
     /// groups, today's layout.
     coalesced: Option<CoalescedOptim>,
+    /// Coalesced *fetch* groups over the packed fp16 read streams
+    /// (`TrainSpec::fetch_coalesce`): the swapper gathers each
+    /// super-group with one ranged read instead of 7 per-tensor reads.
+    fetch_groups: Option<Arc<FetchGroups>>,
+    /// Recorded step-profile store (`TrainSpec::prefetch_profile`):
+    /// the swapper records the first pass per plan shape and replays
+    /// later passes on a rate-matched just-in-time schedule.  Shared
+    /// with every swapper; persisted at checkpoint commits.
+    profile: Option<Arc<ProfileStore>>,
+}
+
+/// Governor bounds that admit the starting tuning, so enabling the
+/// governor never silently rewrites a configured knob — adaptation
+/// starts exactly where the static configuration would have run.  The
+/// activation-budget bounds derive from the spec (floor = an eighth of
+/// the configured budget); an unbudgeted store pins `min == max ==
+/// usize::MAX`, leaving that knob dormant.
+fn governor_config(train: &TrainSpec, start: PipelineTuning) -> GovernorConfig {
+    let d = GovernorConfig::default();
+    let (min_act, max_act) = if train.act_host_budget == usize::MAX {
+        (usize::MAX, usize::MAX)
+    } else {
+        (train.act_host_budget / 8, train.act_host_budget)
+    };
+    GovernorConfig {
+        min_tile_bytes: d.min_tile_bytes.min(start.optim_tile_bytes),
+        max_tile_bytes: d.max_tile_bytes.max(start.optim_tile_bytes),
+        max_tile_depth: d.max_tile_depth.max(start.tile_depth),
+        max_prefetch_depth: d.max_prefetch_depth.max(start.prefetch_depth),
+        min_lead_us: d.min_lead_us.min(start.sched_lead_us),
+        max_lead_us: d.max_lead_us.max(start.sched_lead_us),
+        min_act_budget: min_act.min(start.act_host_budget),
+        max_act_budget: max_act.max(start.act_host_budget),
+        ..d
+    }
 }
 
 impl Trainer {
@@ -198,27 +248,16 @@ impl Trainer {
             optim_tile_bytes: train.optim_tile_bytes,
             tile_depth: train.optim_tile_depth.max(1),
             prefetch_depth: train.prefetch_depth.max(1),
+            sched_lead_us: train.prefetch_lead_us,
+            act_host_budget: train.act_host_budget,
         };
-        let governor = (train.governor && tiled).then(|| {
-            // widen the default bounds to include the spec's starting
-            // point, so enabling the governor never silently rewrites
-            // a configured knob — adaptation starts exactly where the
-            // static configuration would have run
-            let d = GovernorConfig::default();
-            let cfg = GovernorConfig {
-                min_tile_bytes: d.min_tile_bytes.min(tuning.optim_tile_bytes),
-                max_tile_bytes: d.max_tile_bytes.max(tuning.optim_tile_bytes),
-                max_tile_depth: d.max_tile_depth.max(tuning.tile_depth),
-                max_prefetch_depth: d.max_prefetch_depth.max(tuning.prefetch_depth),
-                ..d
-            };
-            PipelineGovernor::new(cfg, tuning)
-        });
+        let governor = (train.governor && tiled)
+            .then(|| PipelineGovernor::new(governor_config(&train, tuning), tuning));
         debug_assert!(
             governor.as_ref().map_or(tuning, |g| g.tuning()) == tuning,
             "governor bounds must admit the spec's starting point"
         );
-        let coalesced = (tiled && train.optim_coalesce_bytes > 0)
+        let mut coalesced = (tiled && train.optim_coalesce_bytes > 0)
             .then(|| {
                 CoalescedOptim::build(
                     engine.nvme.as_ref(),
@@ -227,6 +266,18 @@ impl Trainer {
                 )
             })
             .transpose()?;
+        let fetch_groups = match (&mut coalesced, train.fetch_coalesce) {
+            (Some(co), true) => {
+                // mirror the member fp16 keys into packed read streams
+                // and hand the swapper the layout to gather over
+                let keys: Vec<String> =
+                    state.offloaded.iter().map(|st| fp16_key(&st.group)).collect();
+                co.enable_fp16_streams(engine.nvme.as_ref(), &keys)?;
+                Some(Arc::new(FetchGroups::from_layout(&co.layout)))
+            }
+            _ => None,
+        };
+        let profile = train.prefetch_profile.then(|| Arc::new(ProfileStore::new()));
         Ok(Self {
             rt,
             engine,
@@ -251,6 +302,8 @@ impl Trainer {
             tuning,
             governor,
             coalesced,
+            fetch_groups,
+            profile,
         })
     }
 
@@ -367,25 +420,20 @@ impl Trainer {
                 optim_tile_bytes: ck.tile_bytes.max(1),
                 tile_depth: ck.tile_depth.max(1),
                 prefetch_depth: ck.prefetch_depth.max(1),
+                sched_lead_us: ck.sched_lead_us,
+                act_host_budget: ck.act_host_budget,
             }
         } else {
             PipelineTuning {
                 optim_tile_bytes: train.optim_tile_bytes,
                 tile_depth: train.optim_tile_depth.max(1),
                 prefetch_depth: train.prefetch_depth.max(1),
+                sched_lead_us: train.prefetch_lead_us,
+                act_host_budget: train.act_host_budget,
             }
         };
-        let governor = (train.governor && tiled).then(|| {
-            let d = GovernorConfig::default();
-            let cfg = GovernorConfig {
-                min_tile_bytes: d.min_tile_bytes.min(tuning.optim_tile_bytes),
-                max_tile_bytes: d.max_tile_bytes.max(tuning.optim_tile_bytes),
-                max_tile_depth: d.max_tile_depth.max(tuning.tile_depth),
-                max_prefetch_depth: d.max_prefetch_depth.max(tuning.prefetch_depth),
-                ..d
-            };
-            PipelineGovernor::new(cfg, tuning)
-        });
+        let governor = (train.governor && tiled)
+            .then(|| PipelineGovernor::new(governor_config(&train, tuning), tuning));
         let coalesce_cfg = tiled && train.optim_coalesce_bytes > 0;
         anyhow::ensure!(
             coalesce_cfg == ck.layout_digest.is_some(),
@@ -405,7 +453,7 @@ impl Trainer {
                  digest — storage was re-laid since the checkpoint"
             );
         }
-        let coalesced = coalesce_cfg
+        let mut coalesced = coalesce_cfg
             .then(|| {
                 CoalescedOptim::resume(
                     engine.nvme.as_ref(),
@@ -414,6 +462,42 @@ impl Trainer {
                 )
             })
             .transpose()?;
+        let fetch_groups = match (&mut coalesced, train.fetch_coalesce) {
+            (Some(co), true) => {
+                // the packed read streams are derived state: re-gather
+                // them from the (just-validated) member fp16 keys
+                let keys: Vec<String> =
+                    state.offloaded.iter().map(|st| fp16_key(&st.group)).collect();
+                co.enable_fp16_streams(engine.nvme.as_ref(), &keys)?;
+                Some(Arc::new(FetchGroups::from_layout(&co.layout)))
+            }
+            _ => None,
+        };
+        // the recorded step profile is a performance hint, not state:
+        // a journaled digest that no longer matches the stored blob
+        // degrades to an empty store (the first pass re-records) —
+        // never a resume error
+        let profile = if train.prefetch_profile {
+            let store = match ck.profile_digest {
+                Some(want) => {
+                    let key = crate::offload::prefetch::PROFILE_KEY;
+                    if ckpt::stored_digest(engine.nvme.as_ref(), key)? == Some(want) {
+                        ProfileStore::load(engine.nvme.as_ref())?.unwrap_or_default()
+                    } else {
+                        eprintln!(
+                            "[resume] step-profile blob diverged from the journaled \
+                             digest; re-recording (prefetch falls back to the depth \
+                             window until then)"
+                        );
+                        ProfileStore::new()
+                    }
+                }
+                None => ProfileStore::new(),
+            };
+            Some(Arc::new(store))
+        } else {
+            None
+        };
         Ok(Self {
             rt,
             engine,
@@ -436,6 +520,8 @@ impl Trainer {
             tuning,
             governor,
             coalesced,
+            fetch_groups,
+            profile,
         })
     }
 
@@ -465,6 +551,20 @@ impl Trainer {
         self.state.resident[name].value()
     }
 
+    /// Fetch options for one swapper pass, from the governed tuning:
+    /// window depth always, plus coalesced groups and profile replay
+    /// when configured.
+    fn fetch_opts(&self) -> FetchOpts {
+        let mut opts = FetchOpts::window(self.tuning.prefetch_depth);
+        if let Some(g) = &self.fetch_groups {
+            opts = opts.with_groups(Arc::clone(g));
+        }
+        if let Some(p) = &self.profile {
+            opts = opts.with_profile(Arc::clone(p), self.tuning.sched_lead_us);
+        }
+        opts
+    }
+
     /// One full training step over all (simulated) ranks.
     pub fn step(&mut self, step_idx: u64) -> anyhow::Result<StepMetrics> {
         let t_step = Instant::now();
@@ -473,6 +573,10 @@ impl Trainer {
         let scale = self.scaler.scale();
         let mut loss_sum = 0.0f64;
         let mut io_wait_secs = 0.0f64;
+        let mut fetch_submissions = 0u64;
+        let mut prefetch_hits = 0u64;
+        let mut prefetch_late = 0u64;
+        let mut prefetch_fallbacks = 0u64;
         let ranks = self.train.ranks.max(1);
         let l = self.spec.layers;
         let (b, s, h) = (self.train.batch, self.train.seq, self.spec.hidden);
@@ -489,7 +593,7 @@ impl Trainer {
                 self.scratch.clone(),
                 self.fwd_plan.clone(),
                 |t| fp16_key(&t.name),
-                self.tuning.prefetch_depth,
+                self.fetch_opts(),
             );
             let table = sw.next()?; // embed — a lease-backed view
             let args = [ValueRef::I32(&tokens), table.data.as_value()];
@@ -499,7 +603,7 @@ impl Trainer {
             let mut ckpts = SpillingActivationStore::new(
                 l,
                 b * s * h,
-                self.train.act_host_budget,
+                self.tuning.act_host_budget,
                 self.engine.arena.clone(),
                 self.engine.async_io(),
                 self.engine.copy_meter.clone(),
@@ -543,6 +647,11 @@ impl Trainer {
             self.scratch.put(d_final_norm);
             self.scratch.put(d_head);
             io_wait_secs += sw.wait_secs();
+            let swm = sw.metrics();
+            fetch_submissions += swm.fetch_submissions;
+            prefetch_hits += swm.prefetch_hits;
+            prefetch_late += swm.prefetch_late;
+            prefetch_fallbacks += u64::from(swm.profile_fallback);
             drop(sw);
 
             // ---- backward: blocks in reverse, weights re-streamed ----
@@ -561,7 +670,7 @@ impl Trainer {
                 self.scratch.clone(),
                 bwd_plan,
                 |t| fp16_key(&t.name),
-                self.tuning.prefetch_depth,
+                self.fetch_opts(),
             );
             for layer in (0..l).rev() {
                 let mut ws: HashMap<String, TensorBuf> = HashMap::new();
@@ -593,6 +702,11 @@ impl Trainer {
                 }
             }
             io_wait_secs += swb.wait_secs();
+            let swm = swb.metrics();
+            fetch_submissions += swm.fetch_submissions;
+            prefetch_hits += swm.prefetch_hits;
+            prefetch_late += swm.prefetch_late;
+            prefetch_fallbacks += u64::from(swm.profile_fallback);
             drop(swb);
             // spill-fetch stalls the prefetch could not hide (the rest
             // of the spill I/O ran on the queue behind compute)
@@ -753,6 +867,10 @@ impl Trainer {
             ckpt_secs: 0.0,
             io_retries: io_after.retries - io_before.retries,
             journal_epoch: self.last_epoch,
+            fetch_submissions,
+            prefetch_hits,
+            prefetch_late,
+            prefetch_fallbacks,
         };
         self.steps_done = step_idx;
         // close the feedback loop: the governor sees exactly what the
@@ -762,6 +880,8 @@ impl Trainer {
             self.tuning = gov.observe(&GovernorSample {
                 host_copy_bytes: m.host_copy_bytes,
                 degraded_tiles: m.degraded_tiles,
+                prefetch_late: m.prefetch_late,
+                prefetch_hits: m.prefetch_hits,
                 io_wait_secs: m.io_wait_secs,
                 io_busy_secs: m.io_secs,
                 step_secs: m.step_secs,
@@ -907,6 +1027,20 @@ impl Trainer {
             }
             None => None,
         };
+        // the recorded step profiles ride the epoch too, so a resumed
+        // run replays its warmed schedule instead of re-recording
+        let profile_digest = match &self.profile {
+            Some(store) => {
+                if store.dirty() {
+                    store.persist(self.engine.nvme.as_ref())?;
+                }
+                ckpt::stored_digest(
+                    self.engine.nvme.as_ref(),
+                    crate::offload::prefetch::PROFILE_KEY,
+                )?
+            }
+            None => None,
+        };
         // 3. atomic journal advance — data is durable first, so a
         //    visible record always describes state that exists
         let (scale, good_steps, overflows, growths) = self.scaler.snapshot();
@@ -925,8 +1059,11 @@ impl Trainer {
             tile_bytes: self.tuning.optim_tile_bytes,
             tile_depth: self.tuning.tile_depth,
             prefetch_depth: self.tuning.prefetch_depth,
+            sched_lead_us: self.tuning.sched_lead_us,
+            act_host_budget: self.tuning.act_host_budget,
             keys: self.ckpt_keys()?,
             layout_digest,
+            profile_digest,
         };
         self.journal.commit(&ck)?;
         self.last_epoch = ck.epoch;

@@ -149,8 +149,11 @@ fn ckpt_state(
         tile_bytes: TILE_BYTES,
         tile_depth: DEPTH,
         prefetch_depth: 1,
+        sched_lead_us: 2_000,
+        act_host_budget: usize::MAX,
         keys,
         layout_digest: None,
+        profile_digest: None,
     }
 }
 
