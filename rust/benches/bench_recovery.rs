@@ -20,6 +20,14 @@
 //! 3. **Torn-commit rollback (CI-gated)** — tear the newest journal
 //!    slot with same-length garbage; a cold reload must fall back to
 //!    the previous epoch and its key set must still validate.
+//! 4. **Shadow-paged crash points (CI-gated)** — the full epoch cycle
+//!    over a [`memascend::ckpt::ShadowEngine`]: commit every k steps
+//!    with the flush → slot → flip sequence, then (a) rot the newest
+//!    slot after the final commit — recovery must walk back one epoch
+//!    and rerun bit-identically — and (b) kill between the slot write
+//!    and the flip — the slot record must resume bit-identically.
+//!    Reports the space cost of shadow paging: the peak bytes of live
+//!    shadow extents (`shadow_overhead_peak_bytes`), sampled per step.
 //!
 //! Emits `bench_out/BENCH_recovery.json`.
 
@@ -28,7 +36,7 @@ mod common;
 use std::sync::Arc;
 use std::time::Instant;
 
-use memascend::ckpt::{CkptState, Journal};
+use memascend::ckpt::{CkptState, Journal, ShadowEngine};
 use memascend::optimizer::states::state_keys;
 use memascend::optimizer::{
     flush_groups, step_groups_tiled, AdamParams, OptimState, StateDtype,
@@ -120,17 +128,18 @@ fn one_step(
     .unwrap();
 }
 
-/// Journal record naming every stored key of `states`.
-fn ckpt_state(epoch: u64, steps_done: u64, engine: &dyn NvmeEngine, states: &[OptimState]) -> CkptState {
+/// Every logical key one epoch of `states` covers.
+fn all_keys(states: &[OptimState]) -> Vec<String> {
     let mut keys = Vec::new();
     for st in states {
-        for k in state_keys(&st.group) {
-            keys.push((k.clone(), engine.len_of(&k).unwrap()));
-        }
-        let fk = format!("{}/fp16", st.group);
-        let len = engine.len_of(&fk).unwrap();
-        keys.push((fk, len));
+        keys.extend(state_keys(&st.group));
+        keys.push(format!("{}/fp16", st.group));
     }
+    keys
+}
+
+/// Journal record with the given key triples.
+fn ckpt_with_keys(epoch: u64, steps_done: u64, keys: Vec<(String, usize, u8)>) -> CkptState {
     CkptState {
         epoch,
         steps_done,
@@ -151,6 +160,49 @@ fn ckpt_state(epoch: u64, steps_done: u64, engine: &dyn NvmeEngine, states: &[Op
         keys,
         layout_digest: None,
         profile_digest: None,
+    }
+}
+
+/// Record over a raw (un-shadowed) engine — everything at extent 0.
+fn ckpt_state(
+    epoch: u64,
+    steps_done: u64,
+    engine: &dyn NvmeEngine,
+    states: &[OptimState],
+) -> CkptState {
+    let keys = all_keys(states)
+        .into_iter()
+        .map(|k| {
+            let len = engine.len_of(&k).unwrap();
+            (k, len, 0u8)
+        })
+        .collect();
+    ckpt_with_keys(epoch, steps_done, keys)
+}
+
+/// The trainer's commit sequence over a shadow-paged stack: flush the
+/// newest extents, write the slot record carrying the extent map, then
+/// flip (`flip_after: false` = crash between slot write and flip).
+fn commit_epoch(
+    journal: &Journal,
+    shadow: &Arc<ShadowEngine>,
+    states: &[OptimState],
+    epoch: u64,
+    steps_done: u64,
+    flip_after: bool,
+) {
+    flush_groups(shadow.as_ref(), states, &fp16_keys(states)).unwrap();
+    let keys = all_keys(states)
+        .into_iter()
+        .map(|k| {
+            let ext = shadow.newest_ext(&k);
+            let len = shadow.len_of(&k).unwrap();
+            (k, len, ext)
+        })
+        .collect();
+    journal.commit(&ckpt_with_keys(epoch, steps_done, keys)).unwrap();
+    if flip_after {
+        shadow.flip();
     }
 }
 
@@ -317,6 +369,139 @@ fn run_torn() -> bool {
     ok
 }
 
+struct ShadowCrashResult {
+    walkback_identical: bool,
+    preflip_identical: bool,
+    walkback_epoch: u64,
+    overhead_peak_bytes: u64,
+    /// Total bytes of the committed streams, for the overhead ratio.
+    live_bytes: u64,
+}
+
+/// Experiment 4: shadow-paged epoch cycle with crash points between
+/// epochs and between slot write and flip, plus the peak space cost.
+fn run_shadow_crash() -> ShadowCrashResult {
+    // uninterrupted reference
+    let dir_ref = tmp("sh-ref");
+    let eng_ref: Arc<dyn NvmeEngine> = direct(&dir_ref);
+    let st_ref = init_states(eng_ref.as_ref());
+    {
+        let aio = AsyncEngine::new(eng_ref.clone(), 2);
+        let stage = StageExecutor::new(2);
+        let arena = arena();
+        for t in 1..=STEPS {
+            one_step(&aio, &stage, &arena, &st_ref, t);
+        }
+    }
+    flush_groups(eng_ref.as_ref(), &st_ref, &fp16_keys(&st_ref)).unwrap();
+    let ref_bytes = all_bytes(eng_ref.as_ref());
+    let live_bytes: u64 = ref_bytes.iter().map(|b| b.len() as u64).sum();
+
+    // crash point (a): full run with a commit/flip every CKPT_EVERY
+    // steps, newest slot rots after the final commit — walk back one
+    // epoch and rerun the lost window
+    let dir = tmp("sh-live");
+    let mut overhead_peak = 0u64;
+    let mut epochs = 0u64;
+    {
+        let shadow = Arc::new(ShadowEngine::new(direct(&dir)));
+        let states = init_states(shadow.as_ref());
+        shadow.register(all_keys(&states));
+        let journal = Journal::new(shadow.clone());
+        let eng: Arc<dyn NvmeEngine> = shadow.clone();
+        let aio = AsyncEngine::new(eng, 2);
+        let stage = StageExecutor::new(2);
+        let arena = arena();
+        for t in 1..=STEPS {
+            one_step(&aio, &stage, &arena, &states, t);
+            shadow.advance();
+            overhead_peak = overhead_peak.max(shadow.shadow_overhead_bytes());
+            if t % CKPT_EVERY == 0 {
+                epochs += 1;
+                commit_epoch(&journal, &shadow, &states, epochs, t, true);
+            }
+        }
+        // rot the newest slot (final epoch is even -> slot A)
+        let slot = if epochs % 2 == 0 {
+            memascend::ckpt::journal::SLOT_A
+        } else {
+            memascend::ckpt::journal::SLOT_B
+        };
+        let len = shadow.len_of(slot).unwrap();
+        let mut buf = vec![0u8; len];
+        shadow.read(slot, &mut buf).unwrap();
+        buf[40] ^= 0xFF;
+        shadow.write(slot, &buf).unwrap();
+    }
+    let shadow2 = Arc::new(ShadowEngine::new(direct(&dir)));
+    let candidates = Journal::new(shadow2.clone()).load_all();
+    let ck = candidates.into_iter().next().expect("previous epoch survives");
+    let walkback_epoch = ck.epoch;
+    ck.validate_keys(shadow2.inner().as_ref()).unwrap();
+    shadow2.install(ck.extent_map());
+    let resumed: Vec<OptimState> = SIZES
+        .iter()
+        .enumerate()
+        .map(|(g, &n)| OptimState {
+            group: format!("g{g}"),
+            numel: n,
+            dtype: StateDtype::F32,
+        })
+        .collect();
+    {
+        let eng: Arc<dyn NvmeEngine> = shadow2.clone();
+        let aio = AsyncEngine::new(eng, 2);
+        let stage = StageExecutor::new(2);
+        let arena = arena();
+        for t in (ck.steps_done + 1)..=STEPS {
+            one_step(&aio, &stage, &arena, &resumed, t);
+            shadow2.advance();
+        }
+    }
+    flush_groups(shadow2.as_ref(), &resumed, &fp16_keys(&resumed)).unwrap();
+    let walkback_identical = ref_bytes == all_bytes(shadow2.as_ref());
+
+    // crash point (b): slot written, flip never happens — the durable
+    // record must resume the just-committed state bit-identically
+    let dir_b = tmp("sh-preflip");
+    {
+        let shadow = Arc::new(ShadowEngine::new(direct(&dir_b)));
+        let states = init_states(shadow.as_ref());
+        shadow.register(all_keys(&states));
+        let journal = Journal::new(shadow.clone());
+        let eng: Arc<dyn NvmeEngine> = shadow.clone();
+        let aio = AsyncEngine::new(eng, 2);
+        let stage = StageExecutor::new(2);
+        let arena = arena();
+        for t in 1..=STEPS {
+            one_step(&aio, &stage, &arena, &states, t);
+            shadow.advance();
+            if t % CKPT_EVERY == 0 {
+                // the final commit loses its flip (kill -9 in the gap)
+                let flip = t != STEPS;
+                commit_epoch(&journal, &shadow, &states, t / CKPT_EVERY, t, flip);
+            }
+        }
+    }
+    let shadow3 = Arc::new(ShadowEngine::new(direct(&dir_b)));
+    let ck = Journal::new(shadow3.clone()).load().expect("final epoch is durable");
+    ck.validate_keys(shadow3.inner().as_ref()).unwrap();
+    shadow3.install(ck.extent_map());
+    let preflip_identical =
+        ck.steps_done == STEPS && ref_bytes == all_bytes(shadow3.as_ref());
+
+    std::fs::remove_dir_all(&dir_ref).ok();
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+    ShadowCrashResult {
+        walkback_identical,
+        preflip_identical,
+        walkback_epoch,
+        overhead_peak_bytes: overhead_peak,
+        live_bytes,
+    }
+}
+
 fn main() {
     // ---- experiment 1: cadence overhead (report-only) ----
     let off = run_cadence("cad-off", 0);
@@ -352,9 +537,12 @@ fn main() {
         &t1,
     );
 
-    // ---- experiments 2 and 3: recovery + torn commit (CI-gated) ----
+    // ---- experiments 2-4: recovery + torn commit + shadow crash
+    // points (CI-gated) ----
     let rec = run_recovery();
     let torn_ok = run_torn();
+    let sh = run_shadow_crash();
+    let overhead_pct = sh.overhead_peak_bytes as f64 / sh.live_bytes.max(1) as f64 * 100.0;
     let mut t2 = Table::new(vec![
         "check",
         "result",
@@ -373,9 +561,24 @@ fn main() {
         torn_ok.to_string(),
         "newest slot torn -> previous epoch loads and validates".into(),
     ]);
+    t2.row(vec![
+        "between-epoch walk-back bit-identity".into(),
+        sh.walkback_identical.to_string(),
+        format!("newest slot rotted -> recovered epoch {}", sh.walkback_epoch),
+    ]);
+    t2.row(vec![
+        "pre-flip crash bit-identity".into(),
+        sh.preflip_identical.to_string(),
+        "slot written, flip lost -> newest record resumes".into(),
+    ]);
+    t2.row(vec![
+        "shadow space overhead".into(),
+        format!("{} B", sh.overhead_peak_bytes),
+        format!("peak live shadow extents = {overhead_pct:.0}% of stream bytes"),
+    ]);
     common::emit(
         "bench_recovery_crash",
-        "crash recovery under transient faults (CI-gated)",
+        "crash recovery under transient faults + shadow-paged crash points (CI-gated)",
         &t2,
     );
 
@@ -392,6 +595,10 @@ fn main() {
         ("retries_absorbed", Json::from(rec.retries)),
         ("recovery_bit_identical", Json::from(rec.identical)),
         ("torn_commit_rolls_back", Json::from(torn_ok)),
+        ("walkback_bit_identical", Json::from(sh.walkback_identical)),
+        ("preflip_bit_identical", Json::from(sh.preflip_identical)),
+        ("shadow_overhead_peak_bytes", Json::from(sh.overhead_peak_bytes)),
+        ("shadow_overhead_pct_of_stream_bytes", Json::from(overhead_pct)),
     ]);
     let path = format!("{}/BENCH_recovery.json", common::OUT_DIR);
     match std::fs::write(&path, out.to_string()) {
@@ -408,7 +615,21 @@ fn main() {
         rec.identical, rec.injected, rec.retries
     );
     println!("torn-commit rollback: {torn_ok}");
-    let pass = rec.identical && rec.injected > 0 && torn_ok;
+    println!(
+        "shadow walk-back bit-identical: {} (recovered epoch {})",
+        sh.walkback_identical, sh.walkback_epoch
+    );
+    println!("pre-flip crash bit-identical: {}", sh.preflip_identical);
+    println!(
+        "shadow space overhead: peak {} bytes ({overhead_pct:.0}% of stream bytes)",
+        sh.overhead_peak_bytes
+    );
+    let pass = rec.identical
+        && rec.injected > 0
+        && torn_ok
+        && sh.walkback_identical
+        && sh.preflip_identical
+        && sh.overhead_peak_bytes > 0;
     println!("ACCEPTANCE: {}", if pass { "PASS" } else { "FAIL" });
     if !pass {
         std::process::exit(1);

@@ -18,27 +18,28 @@
 //! the JSON payload that can exceed 2^53 (RNG state, seeds, digests)
 //! are hex strings, since the JSON number type is an `f64`.
 //!
-//! The **dirty marker** ([`DIRTY_KEY`]) records the epoch whose on-SSD
-//! state the trainer is about to overwrite in place: it is written and
-//! flushed once per epoch, before the first post-commit optimizer
-//! write-back.  Live state keys *are* the checkpoint (a commit is a
-//! barrier, not a copy), so once they are dirtied the committed epoch
-//! is no longer bit-recoverable — resume checks
-//! `dirty_epoch >= journal epoch` and fails with a structured error
-//! instead of silently continuing from divergent state.
+//! Each record's key list carries the **per-key extent map** of the
+//! shadow-paged state layer ([`crate::ckpt::shadow`]): `(key, len,
+//! ext)` triples naming which of a key's two physical extents the
+//! epoch owns.  Post-commit write-backs land in the *other* extent,
+//! so every valid record in either slot describes extents no later
+//! window has touched — [`Journal::load_all`] returns them all
+//! (newest first) and resume walks back until one validates.  The old
+//! dirty-marker refusal contract is gone; its only survivor is
+//! [`Journal::invalidate`], which a fresh run uses to retire stale
+//! records before re-initializing weights under the same keys.
 
 use std::sync::Arc;
 
 use crate::ssd::NvmeEngine;
 use crate::util::json::Json;
 
+use super::shadow::phys_key;
+
 /// Slot key for even-numbered epochs.
 pub const SLOT_A: &str = "ckpt/journal/a";
 /// Slot key for odd-numbered epochs.
 pub const SLOT_B: &str = "ckpt/journal/b";
-/// Dirty marker: the epoch whose committed state has since been
-/// overwritten in place (8 bytes, little-endian).
-pub const DIRTY_KEY: &str = "ckpt/journal/dirty";
 
 /// Record magic ("MACKPTJ1" as little-endian bytes).
 const MAGIC: u64 = u64::from_le_bytes(*b"MACKPTJ1");
@@ -117,9 +118,14 @@ pub struct CkptState {
     /// Activation-store host budget in effect at commit (hex-encoded:
     /// `usize::MAX` = unbudgeted exceeds the JSON f64 range).
     pub act_host_budget: usize,
-    /// Every on-SSD key this epoch is consistent over, with its stored
-    /// length — resume validates each against `len_of`.
-    pub keys: Vec<(String, usize)>,
+    /// Every on-SSD key this epoch is consistent over: `(logical key,
+    /// stored length, owning extent)`.  The extent (0 or 1) names
+    /// which physical copy of a shadow-paged key holds this epoch's
+    /// bytes ([`crate::ckpt::shadow::phys_key`]); resume validates
+    /// each resolved key against `len_of` and installs the map into
+    /// the shadow layer.  Records from pre-shadow epochs decode with
+    /// extent 0 throughout.
+    pub keys: Vec<(String, usize, u8)>,
     /// FNV-1a digest of the persisted coalesce-layout blob
     /// ([`crate::optimizer::coalesce::LAYOUT_KEY`]); `None` for
     /// uncoalesced runs.
@@ -159,10 +165,11 @@ impl CkptState {
                 Json::Arr(
                     self.keys
                         .iter()
-                        .map(|(k, l)| {
+                        .map(|(k, l, ext)| {
                             Json::obj(vec![
                                 ("key", Json::from(k.clone())),
                                 ("len", Json::from(*l)),
+                                ("ext", Json::from(*ext as usize)),
                             ])
                         })
                         .collect(),
@@ -211,7 +218,16 @@ impl CkptState {
                     .ok_or_else(|| anyhow::anyhow!("journal: bad key name"))?
                     .to_string();
                 let l = req_usize(e, "len")?;
-                Ok((k, l))
+                // pre-shadow records have no extent field: extent 0
+                let ext = match e.get("ext") {
+                    None | Some(Json::Null) => 0u8,
+                    Some(_) => {
+                        let v = req_usize(e, "ext")?;
+                        anyhow::ensure!(v <= 1, "journal: extent {v} out of range");
+                        v as u8
+                    }
+                };
+                Ok((k, l, ext))
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
         let layout_digest = match j.get("layout_digest") {
@@ -268,24 +284,33 @@ impl CkptState {
 
     /// Validate every journaled key against the engine's current
     /// inventory — the first line of defence against resuming over
-    /// foreign or truncated storage.
+    /// foreign or truncated storage.  Keys resolve through the
+    /// record's extent map, so this works on the raw (un-shadowed)
+    /// engine; a failure sends resume walking back one epoch.
     pub fn validate_keys(&self, engine: &dyn NvmeEngine) -> anyhow::Result<()> {
-        for (key, len) in &self.keys {
-            match engine.len_of(key) {
+        for (key, len, ext) in &self.keys {
+            let phys = phys_key(key, *ext);
+            match engine.len_of(&phys) {
                 Some(stored) => anyhow::ensure!(
                     stored == *len,
-                    "checkpoint epoch {} expects '{key}' at {len} bytes, storage \
+                    "checkpoint epoch {} expects '{phys}' at {len} bytes, storage \
                      has {stored}",
                     self.epoch
                 ),
                 None => anyhow::bail!(
-                    "checkpoint epoch {} references '{key}' which is missing from \
+                    "checkpoint epoch {} references '{phys}' which is missing from \
                      storage",
                     self.epoch
                 ),
             }
         }
         Ok(())
+    }
+
+    /// The record's `(logical key, extent)` map, ready for
+    /// [`crate::ckpt::shadow::ShadowEngine::install`].
+    pub fn extent_map(&self) -> Vec<(String, u8)> {
+        self.keys.iter().map(|(k, _, ext)| (k.clone(), *ext)).collect()
     }
 }
 
@@ -376,30 +401,35 @@ impl Journal {
     /// treated as absent — which is exactly how a torn commit rolls
     /// back to the previous epoch.
     pub fn load(&self) -> Option<CkptState> {
-        match (self.read_slot(SLOT_A), self.read_slot(SLOT_B)) {
-            (Some(a), Some(b)) => Some(if a.epoch >= b.epoch { a } else { b }),
-            (a, b) => a.or(b),
-        }
+        self.load_all().into_iter().next()
     }
 
-    /// Record (durably) that epoch `epoch`'s committed state is about
-    /// to be overwritten in place.  Called once per epoch, before the
-    /// first post-commit optimizer write-back.
-    pub fn mark_dirty(&self, epoch: u64) -> anyhow::Result<()> {
-        self.engine.write(DIRTY_KEY, &epoch.to_le_bytes())?;
-        self.engine.flush(DIRTY_KEY)
+    /// Every valid committed epoch, newest first (at most two: one per
+    /// slot).  Resume walks this list — a candidate whose extents fail
+    /// validation (bit-rot, foreign storage) falls back to the next.
+    pub fn load_all(&self) -> Vec<CkptState> {
+        let mut out: Vec<CkptState> = [self.read_slot(SLOT_A), self.read_slot(SLOT_B)]
+            .into_iter()
+            .flatten()
+            .collect();
+        out.sort_by(|a, b| b.epoch.cmp(&a.epoch));
+        out
     }
 
-    /// The last dirtied epoch, if any.  Resume refuses when this is
-    /// `>=` the loaded journal epoch: the state keys no longer match
-    /// the commit.
-    pub fn dirty_epoch(&self) -> Option<u64> {
-        if self.engine.len_of(DIRTY_KEY) != Some(8) {
-            return None;
+    /// Durably retire every committed record: both slots are
+    /// zero-overwritten (at their stored capacity) and flushed.  A
+    /// fresh run calls this *before* re-initializing weights under the
+    /// same keys — otherwise a stale record over freshly-written
+    /// extent-0 data could validate by length alone and resume into
+    /// silently divergent state.
+    pub fn invalidate(&self) -> anyhow::Result<()> {
+        for slot in [SLOT_A, SLOT_B] {
+            if let Some(cap) = self.engine.len_of(slot) {
+                self.engine.write(slot, &vec![0u8; cap])?;
+                self.engine.flush(slot)?;
+            }
         }
-        let mut b = [0u8; 8];
-        self.engine.read(DIRTY_KEY, &mut b).ok()?;
-        Some(u64::from_le_bytes(b))
+        Ok(())
     }
 }
 
@@ -432,7 +462,7 @@ mod tests {
             prefetch_depth: 2,
             sched_lead_us: 1_500,
             act_host_budget: usize::MAX - 1, // deliberately > 2^53
-            keys: vec![("w0/master".into(), 4096), ("w0/fp16".into(), 2048)],
+            keys: vec![("w0/master".into(), 4096, 0), ("w0/fp16".into(), 2048, 1)],
             layout_digest: Some(0xFFFF_FFFF_FFFF_FFFE),
             profile_digest: Some(0x0123_4567_89AB_CDEF),
         }
@@ -531,32 +561,111 @@ mod tests {
     }
 
     #[test]
-    fn dirty_marker_round_trips() {
-        let dir = tmp("dirty");
+    fn invalidate_retires_both_slots() {
+        let dir = tmp("inval");
         let eng = std::sync::Arc::new(DirectEngine::new(&dir, 2, 1 << 22, 1).unwrap());
-        let j = Journal::new(eng);
-        assert_eq!(j.dirty_epoch(), None);
-        j.mark_dirty(4).unwrap();
-        assert_eq!(j.dirty_epoch(), Some(4));
-        j.mark_dirty(5).unwrap();
-        assert_eq!(j.dirty_epoch(), Some(5));
+        let j = Journal::new(eng.clone());
+        j.invalidate().unwrap(); // no slots yet: a no-op
+        j.commit(&state(1, 10)).unwrap();
+        j.commit(&state(2, 20)).unwrap();
+        assert_eq!(j.load_all().len(), 2);
+        j.invalidate().unwrap();
+        assert!(j.load().is_none(), "invalidated journal must read empty");
+        // slot capacity survives, so re-committing after a fresh init
+        // reuses the extents
+        j.commit(&state(1, 5)).unwrap();
+        assert_eq!(j.load().unwrap().steps_done, 5);
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
-    fn key_validation_names_the_divergence() {
+    fn load_all_returns_epochs_newest_first() {
+        let dir = tmp("all");
+        let eng = std::sync::Arc::new(DirectEngine::new(&dir, 2, 1 << 22, 1).unwrap());
+        let j = Journal::new(eng.clone());
+        j.commit(&state(1, 10)).unwrap();
+        j.commit(&state(2, 20)).unwrap();
+        let all = j.load_all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].epoch, 2);
+        assert_eq!(all[1].epoch, 1);
+        // torn newest slot: load_all degrades to the single survivor
+        let slot = Journal::slot_key(2);
+        let cap = eng.len_of(slot).unwrap();
+        eng.write(slot, &vec![0x5Au8; cap]).unwrap();
+        let all = j.load_all();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].epoch, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn key_validation_resolves_extents_and_names_the_divergence() {
         let dir = tmp("keys");
         let eng = DirectEngine::new(&dir, 2, 1 << 22, 1).unwrap();
         eng.write("w0/master", &vec![0u8; 4096]).unwrap();
         let mut s = state(1, 10);
-        s.keys = vec![("w0/master".into(), 4096)];
+        s.keys = vec![("w0/master".into(), 4096, 0)];
         s.validate_keys(&eng).unwrap();
         s.keys[0].1 = 4097;
         let err = s.validate_keys(&eng).unwrap_err();
         assert!(err.to_string().contains("4097"), "unexpected error: {err}");
-        s.keys = vec![("w1/master".into(), 8)];
+        s.keys = vec![("w1/master".into(), 8, 0)];
         let err = s.validate_keys(&eng).unwrap_err();
         assert!(err.to_string().contains("missing"), "unexpected error: {err}");
+        // extent-1 keys validate against the shadow extent, not the
+        // bare key
+        s.keys = vec![("w0/master".into(), 4096, 1)];
+        let err = s.validate_keys(&eng).unwrap_err();
+        assert!(err.to_string().contains("@s1"), "unexpected error: {err}");
+        eng.write("w0/master@s1", &vec![0u8; 4096]).unwrap();
+        s.validate_keys(&eng).unwrap();
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prop_corrupted_records_never_decode_and_never_panic() {
+        use crate::prop_assert;
+        use crate::util::proptest::{check, Config};
+        check("journal-fuzz", Config { cases: 48, ..Default::default() }, |rng, _| {
+            let dir = tmp(&format!("fuzz-{}", rng.next_u64()));
+            let eng =
+                std::sync::Arc::new(DirectEngine::new(&dir, 2, 1 << 22, 1).unwrap());
+            let j = Journal::new(eng.clone());
+            let s1 = state(1, 10);
+            let s2 = state(2, 20);
+            j.commit(&s1).unwrap();
+            j.commit(&s2).unwrap();
+            // corrupt one slot: random byte flips, or a zero tail (the
+            // fixed-length analog of a truncated record)
+            let victim = if rng.next_u64() % 2 == 0 { SLOT_A } else { SLOT_B };
+            let cap = eng.len_of(victim).unwrap();
+            let mut buf = vec![0u8; cap];
+            eng.read(victim, &mut buf).unwrap();
+            if rng.next_u64() % 3 == 0 {
+                let keep = rng.range(0, cap);
+                for b in &mut buf[keep..] {
+                    *b = 0;
+                }
+            } else {
+                for _ in 0..rng.range(1, 64) {
+                    let i = rng.range(0, cap - 1);
+                    buf[i] ^= (rng.next_u64() % 255 + 1) as u8;
+                }
+            }
+            eng.write(victim, &buf).unwrap();
+            // must never panic; anything returned must be one of the
+            // exact committed records (mutations confined to the zero
+            // padding legitimately leave a record valid)
+            for got in j.load_all() {
+                prop_assert!(
+                    got == s1 || got == s2,
+                    "decoded a record that was never committed: epoch {}",
+                    got.epoch
+                );
+            }
+            std::fs::remove_dir_all(&dir).ok();
+            Ok(())
+        });
     }
 }

@@ -1,41 +1,91 @@
-//! Checkpoint & resume: crash-consistent epochs over the live SSD
-//! key set.
+//! Checkpoint & resume: shadow-paged, crash-consistent epochs over
+//! the live SSD key set.
 //!
 //! MemAscend's training state already lives on the SSD — fp32 masters,
 //! Adam moments, fp16 compute weights, the coalesced layout — kept
 //! current by the tiled/coalesced write-back every step.  A checkpoint
 //! therefore does not *copy* anything: it is a **barrier plus a
-//! journal record**.  The trainer
+//! journal record over shadow-paged extents**.  Every checkpointed key
+//! resolves through [`shadow::ShadowEngine`] to one of two physical
+//! extents; the window after a commit writes the extent the committed
+//! epoch does *not* own.  The trainer's commit path is
 //!
-//! 1. drains and [`crate::ssd::NvmeEngine::flush`]es every state/fp16
-//!    key (the per-key durability barriers of the ssd layer),
-//! 2. persists the host-resident remainder — norm tensors
-//!    ([`write_resident`]) — under `ckpt/resident/*` keys,
-//! 3. atomically commits a [`journal::CkptState`] record naming the
-//!    step, every key + length, the data-loader RNG cursor, the loss
-//!    scaler, and the layout digest, via the dual-slot
-//!    [`journal::Journal`].
+//! 1. drain and [`crate::ssd::NvmeEngine::flush`] every state/fp16
+//!    key (the flush routes to the freshly-written shadow extent),
+//! 2. persist the host-resident remainder — norm tensors
+//!    ([`write_resident`], checksummed) — under `ckpt/resident/*`,
+//!    also shadow-paged,
+//! 3. atomically commit a [`journal::CkptState`] record naming the
+//!    step, every `(key, len, extent)` triple, the data-loader RNG
+//!    cursor, the loss scaler, and the layout digest, via the
+//!    dual-slot [`journal::Journal`],
+//! 4. flip the in-memory extent map ([`shadow::ShadowEngine::flip`])
+//!    so the next window targets the now-reusable older extents.
 //!
-//! [`crate::train::Trainer::resume`] replays the newest valid epoch:
-//! it validates the journal against the storage inventory (key
-//! lengths, layout digest, seed, dtype, model), rebuilds the optimizer
-//! handles from metadata alone — no DRAM re-staging of state, the
-//! tensors stay on the SSD — reads back the small resident tensors,
-//! restores the RNG/scaler/step cursors, and continues bit-identically
-//! with the run the checkpoint interrupted.
-//!
-//! Because commits are in place, a committed epoch stays recoverable
-//! only until the next optimizer write-back dirties the keys; the
-//! journal's dirty marker turns a mid-epoch crash into a structured
-//! "cannot resume" error rather than silent divergence, and a torn
-//! commit simply loses the newest epoch (the dual-slot load falls back
-//! to the previous one).
+//! **What an epoch owns:** the extents its journal record names — a
+//! closed, immutable set; nothing the next window does touches them.
+//! **When extents are reusable:** an extent not named by either
+//! slot's record is dead and becomes the next window's shadow at the
+//! flip.  **Why dirty-marker refusal is gone:** post-commit writes
+//! can no longer destroy a committed epoch, so a crash at *any*
+//! instant — mid-step, mid-commit flush, after the slot write but
+//! before the flip, between epochs — leaves at least one journal slot
+//! whose extents are bit-intact.  [`crate::train::Trainer::resume`]
+//! walks the valid records newest-first, validates each candidate's
+//! extents and resident checksums, and recovers the first that holds
+//! up; only config mismatch (seed/model/dtype/layout) still refuses.
 
 pub mod journal;
+pub mod shadow;
 
 pub use journal::{fnv1a64, CkptState, Journal};
+pub use shadow::{phys_key, ShadowEngine, SHADOW_SUFFIX};
 
 use crate::ssd::NvmeEngine;
+
+/// Structured failure reading a resident-tensor blob back at resume.
+/// Carries the key so the trainer's walk-back loop can report which
+/// tensor sent it to the previous epoch.
+#[derive(Debug)]
+pub struct ResidentError {
+    pub key: String,
+    pub kind: ResidentErrorKind,
+}
+
+#[derive(Debug)]
+pub enum ResidentErrorKind {
+    /// No blob stored under the key at all.
+    Missing,
+    /// Blob present but not the expected byte count (foreign storage
+    /// or a different model spec).
+    Length { stored: usize, expected: usize },
+    /// Payload bytes fail the stored FNV-1a checksum: bit-rot or a
+    /// short/torn write.
+    Checksum { stored: u64, computed: u64 },
+}
+
+impl std::fmt::Display for ResidentError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.kind {
+            ResidentErrorKind::Missing => {
+                write!(f, "checkpoint has no resident tensor '{}'", self.key)
+            }
+            ResidentErrorKind::Length { stored, expected } => write!(
+                f,
+                "resident tensor '{}': stored {stored} bytes, expected {expected}",
+                self.key
+            ),
+            ResidentErrorKind::Checksum { stored, computed } => write!(
+                f,
+                "resident tensor '{}': checksum mismatch (stored {stored:016x}, \
+                 computed {computed:016x})",
+                self.key
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ResidentError {}
 
 /// Engine key a host-resident tensor checkpoints under.
 pub fn resident_key(name: &str) -> String {
@@ -43,10 +93,13 @@ pub fn resident_key(name: &str) -> String {
 }
 
 /// Persist one resident (host-only) tensor's full optimizer state —
-/// parameters, Adam m, Adam v — as one little-endian f32 blob, flushed
-/// through the engine's durability barrier.  Resident tensors are the
-/// only training state not already on the SSD, so this is the only
-/// byte-moving part of a checkpoint.
+/// parameters, Adam m, Adam v — as one little-endian f32 blob behind
+/// an 8-byte FNV-1a payload checksum, flushed through the engine's
+/// durability barrier.  Resident tensors are the only training state
+/// not already on the SSD, so this is the only byte-moving part of a
+/// checkpoint; the checksum turns bit-rot or a short read into a
+/// structured [`ResidentError`] at resume instead of silent
+/// divergence.
 pub fn write_resident(
     engine: &dyn NvmeEngine,
     name: &str,
@@ -58,36 +111,49 @@ pub fn write_resident(
         data.len() == m.len() && data.len() == v.len(),
         "resident tensor '{name}': data/m/v length mismatch"
     );
-    let mut buf = Vec::with_capacity(data.len() * 12);
+    let mut payload = Vec::with_capacity(data.len() * 12);
     for part in [data, m, v] {
         for &x in part {
-            buf.extend_from_slice(&x.to_le_bytes());
+            payload.extend_from_slice(&x.to_le_bytes());
         }
     }
+    let mut buf = Vec::with_capacity(8 + payload.len());
+    buf.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    buf.extend_from_slice(&payload);
     let key = resident_key(name);
     engine.write(&key, &buf)?;
     engine.flush(&key)
 }
 
-/// Read back a [`write_resident`] blob: `(data, m, v)`, each `numel`
-/// f32s.  Length divergence is a structured error (foreign storage or
-/// a different model spec), never a partial read.
+/// Read back and verify a [`write_resident`] blob: `(data, m, v)`,
+/// each `numel` f32s.  Absence, length divergence, and checksum
+/// failure all surface as a typed [`ResidentError`] (downcastable
+/// from the `anyhow::Error`) so the resume walk-back can fall to the
+/// prior epoch — never a partial or silently-corrupt read.
 pub fn read_resident(
     engine: &dyn NvmeEngine,
     name: &str,
     numel: usize,
 ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
     let key = resident_key(name);
-    let want = numel * 12;
+    let fail = |kind| -> anyhow::Error {
+        ResidentError { key: resident_key(name), kind }.into()
+    };
+    let want = 8 + numel * 12;
     let stored = engine
         .len_of(&key)
-        .ok_or_else(|| anyhow::anyhow!("checkpoint has no resident tensor '{key}'"))?;
-    anyhow::ensure!(
-        stored == want,
-        "resident tensor '{key}': stored {stored} bytes, expected {want}"
-    );
+        .ok_or_else(|| fail(ResidentErrorKind::Missing))?;
+    if stored != want {
+        return Err(fail(ResidentErrorKind::Length { stored, expected: want }));
+    }
     let mut buf = vec![0u8; want];
     engine.read(&key, &mut buf)?;
+    let sum = u64::from_le_bytes(buf[..8].try_into().unwrap());
+    let payload = &buf[8..];
+    let computed = fnv1a64(payload);
+    if computed != sum {
+        return Err(fail(ResidentErrorKind::Checksum { stored: sum, computed }));
+    }
     let decode = |chunk: &[u8]| -> Vec<f32> {
         chunk
             .chunks_exact(4)
@@ -95,9 +161,9 @@ pub fn read_resident(
             .collect()
     };
     Ok((
-        decode(&buf[..numel * 4]),
-        decode(&buf[numel * 4..numel * 8]),
-        decode(&buf[numel * 8..]),
+        decode(&payload[..numel * 4]),
+        decode(&payload[numel * 4..numel * 8]),
+        decode(&payload[numel * 8..]),
     ))
 }
 
@@ -150,11 +216,39 @@ mod tests {
         let eng = DirectEngine::new(&dir, 2, 1 << 22, 1).unwrap();
         let err = read_resident(&eng, "absent", 8).unwrap_err();
         assert!(err.to_string().contains("no resident tensor"));
+        assert!(matches!(
+            err.downcast_ref::<ResidentError>(),
+            Some(ResidentError { kind: ResidentErrorKind::Missing, .. })
+        ));
         write_resident(&eng, "t", &[1.0; 8], &[0.0; 8], &[0.0; 8]).unwrap();
+        // 8-byte checksum header + 9 * 12 payload bytes
         let err = read_resident(&eng, "t", 9).unwrap_err();
-        assert!(err.to_string().contains("expected 108"), "got: {err}");
+        assert!(err.to_string().contains("expected 116"), "got: {err}");
+        assert!(matches!(
+            err.downcast_ref::<ResidentError>(),
+            Some(ResidentError { kind: ResidentErrorKind::Length { .. }, .. })
+        ));
         let err = write_resident(&eng, "t", &[1.0; 8], &[0.0; 7], &[0.0; 8]).unwrap_err();
         assert!(err.to_string().contains("length mismatch"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resident_read_detects_bit_rot() {
+        let dir = tmp("resident-rot");
+        let eng = DirectEngine::new(&dir, 2, 1 << 22, 1).unwrap();
+        write_resident(&eng, "t", &[1.0; 16], &[2.0; 16], &[3.0; 16]).unwrap();
+        let key = resident_key("t");
+        let len = eng.len_of(&key).unwrap();
+        let mut buf = vec![0u8; len];
+        eng.read(&key, &mut buf).unwrap();
+        buf[8 + 21] ^= 0x04; // one payload bit
+        eng.write(&key, &buf).unwrap();
+        let err = read_resident(&eng, "t", 16).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "got: {err}");
+        let rot = err.downcast_ref::<ResidentError>().unwrap();
+        assert!(matches!(rot.kind, ResidentErrorKind::Checksum { .. }));
+        assert_eq!(rot.key, key);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,429 @@
+//! Shadow-paged extents: the epoch-mapped key layer that makes every
+//! journaled epoch restorable.
+//!
+//! Each *registered* logical key (the optimizer streams — fp32
+//! masters, Adam moments, fp16 compute weights, packed super-group
+//! streams, resident blobs) resolves to one of two physical extents:
+//!
+//! * extent 0 — the bare key (`optim/sg0/master`),
+//! * extent 1 — the key with [`SHADOW_SUFFIX`] (`optim/sg0/master@s1`).
+//!
+//! The committed epoch owns one extent per key (the journal record
+//! carries the per-key map); the *other* extent is the shadow the next
+//! epoch's write-backs land in.  Commit therefore never overwrites
+//! committed bytes — it flushes the shadow extents, writes the journal
+//! slot, and **flips** the in-memory map.  A crash at any instant
+//! leaves the newest durable journal record pointing at extents the
+//! interrupted window never touched, so resume is recovery, not
+//! refusal (the old dirty-marker contract is gone).
+//!
+//! Routing rules (see [`ShadowEngine`]'s `NvmeEngine` impl):
+//!
+//! * reads go to the key's **read extent**;
+//! * writes (`write`/`write_at`) go to the **write extent** and mark
+//!   the key dirty; an absent write extent is materialized (reserved
+//!   at the read extent's length) on first ranged write;
+//! * `reserve` targets the write extent without dirtying;
+//! * `flush` targets the **newest** extent (write if dirty, else
+//!   read) — the one a subsequent commit will name;
+//! * unregistered keys (journal slots, layout/profile blobs, member
+//!   state streams kept out of the checkpoint set) pass through
+//!   untouched.
+//!
+//! Within a window the first applied step reads epoch N's extent and
+//! writes the shadow; [`ShadowEngine::advance`] then folds the read
+//! side onto the shadow (dirty keys only), so later steps of the same
+//! window run in place *on the shadow* while the committed extent
+//! stays bit-intact until the flip.  Skipped (overflow) steps dirty
+//! nothing, so `advance` is a no-op for them by construction.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::ssd::{IoSnapshot, NvmeEngine};
+
+/// Suffix naming a key's second physical extent.
+pub const SHADOW_SUFFIX: &str = "@s1";
+
+/// Physical engine key of logical `key`'s extent `ext` (0 or 1).
+pub fn phys_key(key: &str, ext: u8) -> String {
+    if ext == 0 {
+        key.to_string()
+    } else {
+        format!("{key}{SHADOW_SUFFIX}")
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct KeyState {
+    /// Extent reads resolve to (the committed / advanced side).
+    read: u8,
+    /// Extent writes resolve to.
+    write: u8,
+    /// Whether the write extent holds bytes newer than `read`'s.
+    dirty: bool,
+}
+
+impl KeyState {
+    fn newest(&self) -> u8 {
+        if self.dirty {
+            self.write
+        } else {
+            self.read
+        }
+    }
+}
+
+/// Engine decorator implementing the per-key extent map.  Sits
+/// directly above the retry/storage stack and below the async queue,
+/// so the swapper, prefetcher, and tiled optimizer all read *logical*
+/// keys and never see a flip.
+pub struct ShadowEngine {
+    inner: Arc<dyn NvmeEngine>,
+    map: RwLock<HashMap<String, KeyState>>,
+    /// Serializes write-extent materialization (concurrent tile writes
+    /// to one freshly-flipped key must reserve its extent exactly
+    /// once).
+    materialize: Mutex<()>,
+}
+
+impl ShadowEngine {
+    pub fn new(inner: Arc<dyn NvmeEngine>) -> Self {
+        Self { inner, map: RwLock::new(HashMap::new()), materialize: Mutex::new(()) }
+    }
+
+    /// The wrapped engine (journal slots and layout blobs are reached
+    /// through the shadow layer too — they pass through unregistered).
+    pub fn inner(&self) -> &Arc<dyn NvmeEngine> {
+        &self.inner
+    }
+
+    /// Register `keys` for shadow paging on a fresh run: both sides
+    /// point at extent 0, so the first window is pass-through
+    /// equivalent and the first commit maps every key to extent 0.
+    /// Already-registered keys are left untouched.
+    pub fn register<I, S>(&self, keys: I)
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut map = self.map.write().unwrap();
+        for k in keys {
+            map.entry(k.into())
+                .or_insert(KeyState { read: 0, write: 0, dirty: false });
+        }
+    }
+
+    /// Install the committed per-key map a journal record carries:
+    /// reads resolve to the committed extent, writes to the other one.
+    /// Replaces any prior registration (resume walks epochs; each
+    /// candidate re-installs).
+    pub fn install<I, S>(&self, committed: I)
+    where
+        I: IntoIterator<Item = (S, u8)>,
+        S: Into<String>,
+    {
+        let mut map = self.map.write().unwrap();
+        for (k, ext) in committed {
+            let ext = ext & 1;
+            map.insert(k.into(), KeyState { read: ext, write: 1 - ext, dirty: false });
+        }
+    }
+
+    pub fn is_registered(&self, key: &str) -> bool {
+        self.map.read().unwrap().contains_key(key)
+    }
+
+    /// Extent a commit of the current state would record for `key`
+    /// (0 for unregistered keys, which live outside the map).
+    pub fn newest_ext(&self, key: &str) -> u8 {
+        self.map.read().unwrap().get(key).map_or(0, |s| s.newest())
+    }
+
+    /// Fold the read side of every dirty key onto its freshly-written
+    /// extent.  Called after each *applied* optimizer step: the next
+    /// step of the same window then reads what this one wrote, while
+    /// the committed extent stays untouched.  Keys nothing wrote
+    /// (skipped steps, resident blobs between commits) keep reading
+    /// the committed side.  Callers must have drained in-flight I/O.
+    pub fn advance(&self) {
+        let mut map = self.map.write().unwrap();
+        for st in map.values_mut() {
+            if st.dirty {
+                st.read = st.write;
+                st.dirty = false;
+            }
+        }
+    }
+
+    /// Commit-time flip: every key's read side moves to its newest
+    /// extent and the *other* extent becomes the next window's shadow.
+    /// Pure in-memory state — the journal record written just before
+    /// is the durable authority, so a crash between slot write and
+    /// flip loses nothing.
+    pub fn flip(&self) {
+        let mut map = self.map.write().unwrap();
+        for st in map.values_mut() {
+            let n = st.newest();
+            st.read = n;
+            st.write = 1 - n;
+            st.dirty = false;
+        }
+    }
+
+    /// Bytes currently duplicated across extent pairs: for every
+    /// registered key whose shadow extent (`@s1`) has been
+    /// materialized alongside extent 0, both copies are live on the
+    /// SSD.  This is the space cost of shadow paging —
+    /// `bench_recovery` reports its peak.
+    pub fn shadow_overhead_bytes(&self) -> u64 {
+        let map = self.map.read().unwrap();
+        let mut total = 0u64;
+        for key in map.keys() {
+            if self.inner.len_of(&phys_key(key, 0)).is_some() {
+                if let Some(l) = self.inner.len_of(&phys_key(key, 1)) {
+                    total += l as u64;
+                }
+            }
+        }
+        total
+    }
+
+    /// Resolve `key` for a read-side op.
+    fn read_key(&self, key: &str) -> String {
+        let ext = self.map.read().unwrap().get(key).map_or(0, |s| s.read);
+        phys_key(key, ext)
+    }
+
+    /// Resolve `key` for a write-side op, marking it dirty when
+    /// `dirties` and the key is registered.
+    fn write_key(&self, key: &str, dirties: bool) -> String {
+        let mut map = self.map.write().unwrap();
+        match map.get_mut(key) {
+            Some(st) => {
+                if dirties {
+                    st.dirty = true;
+                }
+                phys_key(key, st.write)
+            }
+            None => key.to_string(),
+        }
+    }
+
+    /// Ensure the physical write extent exists before a ranged write
+    /// lands in it: a freshly-flipped shadow extent has no storage
+    /// yet, so reserve it at the peer extent's length.
+    fn ensure_extent(&self, key: &str, phys: &str) -> anyhow::Result<()> {
+        if self.inner.len_of(phys).is_none() {
+            let _guard = self.materialize.lock().unwrap();
+            if self.inner.len_of(phys).is_none() {
+                let peer = {
+                    let map = self.map.read().unwrap();
+                    let st = map.get(key).copied();
+                    st.map(|s| phys_key(key, 1 - s.write))
+                };
+                if let Some(peer) = peer {
+                    if let Some(len) = self.inner.len_of(&peer) {
+                        self.inner.reserve(phys, len)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl NvmeEngine for ShadowEngine {
+    fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
+        let phys = self.write_key(key, true);
+        self.inner.write(&phys, data)
+    }
+
+    fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
+        self.inner.read(&self.read_key(key), out)
+    }
+
+    fn read_at(&self, key: &str, offset: usize, out: &mut [u8]) -> anyhow::Result<()> {
+        self.inner.read_at(&self.read_key(key), offset, out)
+    }
+
+    fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
+        let phys = self.write_key(key, true);
+        self.ensure_extent(key, &phys)?;
+        self.inner.write_at(&phys, offset, data)
+    }
+
+    fn flush(&self, key: &str) -> anyhow::Result<()> {
+        let ext = self.map.read().unwrap().get(key).map_or(0, |s| s.newest());
+        self.inner.flush(&phys_key(key, ext))
+    }
+
+    fn reserve(&self, key: &str, len: usize) -> anyhow::Result<()> {
+        let phys = self.write_key(key, false);
+        self.inner.reserve(&phys, len)
+    }
+
+    fn len_of(&self, key: &str) -> Option<usize> {
+        match self.map.read().unwrap().get(key) {
+            Some(st) => self
+                .inner
+                .len_of(&phys_key(key, st.newest()))
+                .or_else(|| self.inner.len_of(&phys_key(key, 1 - st.newest()))),
+            None => self.inner.len_of(key),
+        }
+    }
+
+    fn stats(&self) -> IoSnapshot {
+        self.inner.stats()
+    }
+
+    fn label(&self) -> &'static str {
+        self.inner.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssd::DirectEngine;
+
+    fn direct(tag: &str) -> (Arc<dyn NvmeEngine>, std::path::PathBuf) {
+        let dir = std::env::temp_dir()
+            .join(format!("ma-shadow-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        (Arc::new(DirectEngine::new(&dir, 2, 1 << 22, 1).unwrap()), dir)
+    }
+
+    fn read_all(eng: &dyn NvmeEngine, key: &str) -> Vec<u8> {
+        let len = eng.len_of(key).unwrap();
+        let mut buf = vec![0u8; len];
+        eng.read(key, &mut buf).unwrap();
+        buf
+    }
+
+    #[test]
+    fn unregistered_keys_pass_through() {
+        let (inner, dir) = direct("pass");
+        let sh = ShadowEngine::new(inner.clone());
+        sh.write("plain", &[7u8; 64]).unwrap();
+        assert_eq!(inner.len_of("plain"), Some(64));
+        assert_eq!(inner.len_of(&phys_key("plain", 1)), None);
+        assert_eq!(read_all(&sh, "plain"), vec![7u8; 64]);
+        assert_eq!(sh.newest_ext("plain"), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fresh_registration_is_extent_zero_until_flip() {
+        let (inner, dir) = direct("fresh");
+        let sh = ShadowEngine::new(inner.clone());
+        sh.register(["k"]);
+        sh.write("k", &[1u8; 32]).unwrap();
+        // fresh run: both sides extent 0, write lands on the bare key
+        assert_eq!(inner.len_of("k"), Some(32));
+        assert_eq!(sh.newest_ext("k"), 0);
+        sh.flip(); // commit epoch 1 at extent 0
+        // next window's writes land in the shadow; reads still see
+        // epoch 1 until advance
+        sh.write("k", &[2u8; 32]).unwrap();
+        assert_eq!(read_all(&sh, "k"), vec![1u8; 32]);
+        assert_eq!(read_all(inner.as_ref(), &phys_key("k", 1)), vec![2u8; 32]);
+        assert_eq!(sh.newest_ext("k"), 1);
+        sh.advance();
+        assert_eq!(read_all(&sh, "k"), vec![2u8; 32]);
+        // epoch 1's extent is bit-intact the whole window
+        assert_eq!(read_all(inner.as_ref(), "k"), vec![1u8; 32]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ranged_write_materializes_the_shadow_extent() {
+        let (inner, dir) = direct("ranged");
+        let sh = ShadowEngine::new(inner.clone());
+        sh.register(["k"]);
+        sh.write("k", &[9u8; 4096]).unwrap();
+        sh.flip();
+        // no reserve call: the first tile write must materialize @s1
+        sh.write_at("k", 1024, &[5u8; 512]).unwrap();
+        assert_eq!(inner.len_of(&phys_key("k", 1)), Some(4096));
+        sh.advance();
+        let buf = read_all(&sh, "k");
+        assert_eq!(&buf[1024..1536], &[5u8; 512][..]);
+        // unwritten shadow bytes read back as reserve zeros, the
+        // committed extent still has the epoch-1 bytes
+        assert_eq!(buf[0], 0);
+        assert_eq!(read_all(inner.as_ref(), "k"), vec![9u8; 4096]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flip_alternates_extents_and_skipped_windows_hold_position() {
+        let (inner, dir) = direct("alt");
+        let sh = ShadowEngine::new(inner.clone());
+        sh.register(["k"]);
+        sh.write("k", &[1u8; 16]).unwrap();
+        sh.flip(); // epoch 1 @ ext 0
+        sh.write("k", &[2u8; 16]).unwrap();
+        sh.advance();
+        sh.flip(); // epoch 2 @ ext 1
+        assert_eq!(sh.newest_ext("k"), 1);
+        // a window with no writes (all steps skipped): commit maps the
+        // same extent again
+        sh.flip();
+        assert_eq!(sh.newest_ext("k"), 1);
+        sh.write("k", &[3u8; 16]).unwrap();
+        sh.advance();
+        sh.flip(); // epoch 3 back @ ext 0
+        assert_eq!(sh.newest_ext("k"), 0);
+        assert_eq!(read_all(inner.as_ref(), "k"), vec![3u8; 16]);
+        assert_eq!(read_all(inner.as_ref(), &phys_key("k", 1)), vec![2u8; 16]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn install_routes_reads_to_committed_extent() {
+        let (inner, dir) = direct("install");
+        inner.write(&phys_key("k", 1), &[4u8; 8]).unwrap();
+        inner.write("k", &[9u8; 8]).unwrap();
+        let sh = ShadowEngine::new(inner.clone());
+        sh.install([("k", 1u8)]);
+        assert_eq!(read_all(&sh, "k"), vec![4u8; 8]);
+        // next window overwrites the stale extent 0
+        sh.write("k", &[6u8; 8]).unwrap();
+        assert_eq!(read_all(inner.as_ref(), "k"), vec![6u8; 8]);
+        assert_eq!(read_all(inner.as_ref(), &phys_key("k", 1)), vec![4u8; 8]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn overhead_counts_only_materialized_pairs() {
+        let (inner, dir) = direct("cost");
+        let sh = ShadowEngine::new(inner);
+        sh.register(["a", "b"]);
+        sh.write("a", &[1u8; 100]).unwrap();
+        sh.write("b", &[1u8; 50]).unwrap();
+        assert_eq!(sh.shadow_overhead_bytes(), 0, "no shadow extents yet");
+        sh.flip();
+        sh.write("a", &[2u8; 100]).unwrap();
+        assert_eq!(sh.shadow_overhead_bytes(), 100, "only 'a' duplicated");
+        sh.write("b", &[2u8; 50]).unwrap();
+        assert_eq!(sh.shadow_overhead_bytes(), 150);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reserve_targets_write_extent_without_dirtying() {
+        let (inner, dir) = direct("rsv");
+        let sh = ShadowEngine::new(inner.clone());
+        sh.register(["k"]);
+        sh.write("k", &[1u8; 64]).unwrap();
+        sh.flip();
+        sh.reserve("k", 64).unwrap();
+        // reserve alone must not move the commit map off epoch 1
+        assert_eq!(sh.newest_ext("k"), 0);
+        assert_eq!(inner.len_of(&phys_key("k", 1)), Some(64));
+        sh.write_at("k", 0, &[2u8; 8]).unwrap();
+        assert_eq!(sh.newest_ext("k"), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

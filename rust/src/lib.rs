@@ -11,20 +11,32 @@
 //! See DESIGN.md for the system inventory and the experiment index
 //! mapping every paper table/figure to a bench target.
 //!
-//! ## Checkpoint & resume
+//! ## Checkpoint & resume: shadow-paged epochs
 //!
 //! Because the training state already lives on the SSD, a checkpoint
-//! is a *barrier*, not a copy: every `--ckpt-interval` steps the
-//! trainer flushes the state/fp16 keys the tiled write-back has been
-//! updating in place, persists the small host-resident tensors and
-//! RNG/scaler/step cursors, and atomically advances a dual-slot epoch
-//! journal ([`ckpt::Journal`]).  `memascend train --resume` (or
-//! [`train::Trainer::resume`]) replays the newest valid epoch and
-//! continues bit-identically; a torn commit rolls back to the previous
-//! epoch, and state dirtied after the last commit is a structured
-//! error, never silent divergence.  Transient NVMe faults are absorbed
-//! by a bounded-backoff retry layer ([`ssd::RetryEngine`],
-//! `--io-retry`), metered in `StepMetrics::io_retries`.
+//! is a *barrier*, not a copy — and with shadow paging
+//! ([`ckpt::ShadowEngine`]) it is also never an overwrite.  Every
+//! checkpointed stream resolves to one of two physical extents; the
+//! window after a commit writes the *other* extent, so the committed
+//! epoch's bytes stay bit-intact no matter where the next window
+//! crashes.  Every `--ckpt-interval` steps the trainer flushes the
+//! shadow extents, persists the small host-resident tensors
+//! (checksummed blobs) and RNG/scaler/step cursors, atomically
+//! advances a dual-slot epoch journal ([`ckpt::Journal`]) whose record
+//! carries the per-key extent map, and flips the routing.
+//!
+//! `memascend train --resume` (or [`train::Trainer::resume`]) walks
+//! the journaled epochs newest-first and recovers the first that fully
+//! verifies (key lengths at the journaled extents, resident-blob
+//! checksums, layout digest), continuing bit-identically.  A torn
+//! slot, bit-rot, or a crash at *any* phase — mid window, mid commit
+//! flush, between slot write and flip, between epochs — lands on an
+//! older intact epoch instead of an error; only configuration
+//! mismatches (model/seed/dtype/coalesce mode) refuse.  Transient NVMe
+//! faults are absorbed by a bounded-backoff retry layer with jittered
+//! delays ([`ssd::RetryEngine`], `--io-retry`), metered in
+//! `StepMetrics::io_retries`; a retry budget that runs dry surfaces
+//! the typed [`ssd::RetryExhausted`] error and is metered separately.
 
 pub mod accounting;
 pub mod bufpool;

@@ -19,6 +19,7 @@ use crate::pinned::{
     AlignedAllocator, ArenaConfig, CachingAllocator, HostAllocator, MemoryTracker,
     Mode, PinnedArena,
 };
+use crate::ckpt::ShadowEngine;
 use crate::ssd::{
     AsyncEngine, DirectEngine, FsEngine, IoExecutor, NvmeEngine, RetryEngine,
     RetryPolicy,
@@ -31,6 +32,11 @@ pub struct OffloadEngine {
     pub arena: Arc<PinnedArena>,
     pub pool: Arc<dyn ParamBufferPool>,
     pub nvme: Arc<dyn NvmeEngine>,
+    /// Typed handle on the shadow-paging layer `nvme` points at: the
+    /// trainer registers/advances/flips the per-key extent map here
+    /// while every I/O consumer keeps reading logical keys through
+    /// `nvme`.
+    pub shadow: Arc<ShadowEngine>,
     /// Shared async submission queue: swapper fetch window, activation
     /// spill, and the optimizer swap ride this one executor (the
     /// engines keep their own per-device queues underneath).
@@ -73,11 +79,13 @@ impl OffloadEngine {
         } else {
             Arc::new(MonolithicPool::new(spec, train.prefetch_depth, dtype, &arena)?)
         };
-        // capacity: fp16 + fp32 master + m + v + slack, per device
+        // capacity: fp16 + fp32 master + m + v + slack, per device —
+        // doubled, because shadow paging keeps two physical extents
+        // per checkpointed stream (epoch N plus the N+1 shadow)
         let cap_bytes = (spec.param_count() as u64)
-            .saturating_mul(16)
+            .saturating_mul(32)
             .max(1 << 24)
-            + (64 << 20);
+            + (128 << 20);
         let devices = 2;
         let nvme: Arc<dyn NvmeEngine> = if train.flags.direct_nvme {
             Arc::new(DirectEngine::new(
@@ -105,6 +113,11 @@ impl OffloadEngine {
         } else {
             nvme
         };
+        // shadow paging tops the stack: logical checkpoint keys route
+        // to per-epoch physical extents; everything unregistered
+        // passes through (label/stats delegate)
+        let shadow = Arc::new(ShadowEngine::new(nvme));
+        let nvme: Arc<dyn NvmeEngine> = shadow.clone();
         let checker = if train.flags.fused_overflow {
             Checker::Fused
         } else {
@@ -118,6 +131,7 @@ impl OffloadEngine {
             arena,
             pool,
             nvme,
+            shadow,
             ioq,
             stage,
             checker,

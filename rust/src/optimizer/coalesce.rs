@@ -393,12 +393,13 @@ impl CoalescedOptim {
     /// [`fp16_stream_name`] per super-group and gather every member's
     /// `{name}/fp16` bytes into it at the layout offsets.  The member
     /// keys are authoritative here — on a fresh build they were just
-    /// initialized, on a resume they are exactly what the checkpoint
-    /// validated — so the gather is correct in both lifecycles (the
-    /// streams themselves are *derived* state, re-derivable at any
-    /// time, and deliberately kept out of the checkpoint key set).
-    /// From then on every tile write-back mirrors its fp16 window into
-    /// the stream, keeping it bit-identical to the member keys.
+    /// initialized — so the gather is the correct way to *create* the
+    /// streams.  Once created they join the checkpoint key set
+    /// (shadow-paged like the state streams), and a resumed run
+    /// reattaches with [`Self::attach_fp16_streams`] instead of
+    /// re-gathering.  From then on every tile write-back mirrors its
+    /// fp16 window into the stream, keeping it bit-identical to the
+    /// member keys.
     pub fn enable_fp16_streams(
         &mut self,
         engine: &dyn NvmeEngine,
@@ -420,8 +421,40 @@ impl CoalescedOptim {
         Ok(())
     }
 
-    /// Whether [`Self::enable_fp16_streams`] has run (the swapper's
-    /// coalesced fetch path requires it).
+    /// Reattach to packed fp16 streams that already hold the current
+    /// weights — the checkpoint-resume twin of
+    /// [`Self::enable_fp16_streams`].  The streams are part of the
+    /// journaled key set (shadow-paged like the state streams), so at
+    /// resume they already carry the committed epoch's bytes: this
+    /// validates every stream's stored length and enables the
+    /// coalesced fetch path *without* re-gathering.  A re-gather here
+    /// would be wrong twice over — it would roll packed weights back
+    /// to whatever the member keys hold, and under shadow paging its
+    /// writes would land in the next epoch's write extent, invisible
+    /// to reads until a step advances the map.
+    pub fn attach_fp16_streams(&mut self, engine: &dyn NvmeEngine) -> anyhow::Result<()> {
+        for (i, &numel) in self.layout.super_numels.iter().enumerate() {
+            let key = fp16_stream_name(i);
+            let want = numel * 2;
+            match engine.len_of(&key) {
+                Some(stored) => anyhow::ensure!(
+                    stored == want,
+                    "packed fp16 stream '{key}' stored {stored} bytes, expected \
+                     {want} — storage was re-laid since the checkpoint"
+                ),
+                None => anyhow::bail!(
+                    "packed fp16 stream '{key}' missing at resume — the \
+                     checkpoint was taken without fetch coalescing"
+                ),
+            }
+        }
+        self.fp16_streams = true;
+        Ok(())
+    }
+
+    /// Whether [`Self::enable_fp16_streams`] or
+    /// [`Self::attach_fp16_streams`] has run (the swapper's coalesced
+    /// fetch path requires it).
     pub fn fp16_streams_enabled(&self) -> bool {
         self.fp16_streams
     }

@@ -53,7 +53,7 @@ impl OpKind {
         }
     }
 
-    fn name(self) -> &'static str {
+    pub fn name(self) -> &'static str {
         match self {
             OpKind::Read => "read",
             OpKind::Write => "write",

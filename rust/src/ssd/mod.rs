@@ -75,7 +75,7 @@ pub use faulty::{FaultyEngine, OpKind, OpMask};
 pub use direct::DirectEngine;
 pub use fs_engine::FsEngine;
 pub use queue::{io_scope, AsyncEngine, IoExecutor, IoHandle, IoScope};
-pub use retry::{RetryEngine, RetryPolicy};
+pub use retry::{RetryEngine, RetryExhausted, RetryPolicy};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -230,6 +230,7 @@ impl IoStats {
             queue_busy_ns,
             queue_count,
             retries: 0,
+            retry_exhaustions: 0,
         }
     }
 }
@@ -254,6 +255,10 @@ pub struct IoSnapshot {
     /// non-zero count with a successful op means the backoff absorbed
     /// a transient fault; exhausted retries still surface as `Err`.
     pub retries: u64,
+    /// Ops whose whole retry budget failed ([`retry::RetryExhausted`]
+    /// surfaced to the caller) — metered apart from [`Self::retries`]
+    /// so absorbed blips and terminal failures never blur together.
+    pub retry_exhaustions: u64,
 }
 
 impl IoSnapshot {

@@ -12,21 +12,31 @@
 //!
 //! Retries are *metered*, not silent: every repeated attempt bumps the
 //! counter surfaced as [`IoSnapshot::retries`], which the trainer
-//! reports per step (`StepMetrics::io_retries`).  Exhaustion surfaces
-//! the last error unchanged — the retry layer narrows the failure
-//! window, it never converts an error into silence.  Permanent errors
-//! (missing key, out-of-bounds range) are retried too — the engine
-//! cannot distinguish fault classes portably — but the bounded policy
-//! caps the added latency at `max_attempts - 1` backoffs.
+//! reports per step (`StepMetrics::io_retries`).  Exhaustion is a
+//! *distinct* failure class: [`RetryEngine`] wraps the last error in
+//! [`RetryExhausted`] — carrying the op kind, the key, and the
+//! attempt count — and charges [`IoSnapshot::retry_exhaustions`]
+//! separately from transient retries, so dashboards can tell "the
+//! backoff absorbed a blip" from "an op died for good".  Permanent
+//! errors (missing key, out-of-bounds range) are retried too — the
+//! engine cannot distinguish fault classes portably — but the bounded
+//! policy caps the added latency at `max_attempts - 1` backoffs.
+//!
+//! Backoff delays carry deterministic pseudo-random **jitter**
+//! ([`RetryPolicy::jitter_pct`]) so many queue workers retrying the
+//! same thermal hiccup don't re-converge on the device in lockstep.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use super::faulty::OpKind;
 use super::{IoSnapshot, NvmeEngine};
 
 /// Retry budget + backoff schedule.  Delay before attempt `k` (1-based
-/// retries) is `base_delay * 2^(k-1)`, capped at `max_delay`.
+/// retries) is `base_delay * 2^(k-1)`, capped at `max_delay`, plus up
+/// to `jitter_pct` percent of that value (deterministic per-attempt
+/// hash, so tests stay reproducible).
 #[derive(Debug, Clone, Copy)]
 pub struct RetryPolicy {
     /// Total attempts per op (first try included).  `<= 1` disables
@@ -34,6 +44,9 @@ pub struct RetryPolicy {
     pub max_attempts: u32,
     pub base_delay: Duration,
     pub max_delay: Duration,
+    /// Jitter ceiling as a percentage of the capped backoff delay
+    /// (0 = the old fully-deterministic schedule).
+    pub jitter_pct: u32,
 }
 
 impl Default for RetryPolicy {
@@ -42,6 +55,7 @@ impl Default for RetryPolicy {
             max_attempts: 3,
             base_delay: Duration::from_micros(500),
             max_delay: Duration::from_millis(50),
+            jitter_pct: 25,
         }
     }
 }
@@ -56,11 +70,55 @@ impl RetryPolicy {
         let factor = 1u32 << retry_idx.min(16);
         (self.base_delay * factor).min(self.max_delay)
     }
+
+    /// `delay_for` plus the salted jitter share: `salt` is hashed
+    /// (splitmix-style) to a fraction of [0, 1) scaling `jitter_pct`
+    /// percent of the base delay.
+    fn delay_with_jitter(&self, retry_idx: u32, salt: u64) -> Duration {
+        let base = self.delay_for(retry_idx);
+        if self.jitter_pct == 0 {
+            return base;
+        }
+        let mut z = salt.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        let frac = (z >> 11) as f64 / (1u64 << 53) as f64;
+        base + base.mul_f64(frac * self.jitter_pct as f64 / 100.0)
+    }
 }
+
+/// Terminal retry failure: `policy.max_attempts` tries of one
+/// operation all failed.  Carries what died (op kind + key + attempt
+/// count) and the final underlying error's message, so exhaustion can
+/// be routed and alerted distinctly from absorbed transient faults.
+#[derive(Debug)]
+pub struct RetryExhausted {
+    pub op: OpKind,
+    pub key: String,
+    pub attempts: u32,
+    /// Display of the last underlying error.
+    pub last: String,
+}
+
+impl std::fmt::Display for RetryExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "retry exhausted after {} attempts: {} on '{}': {}",
+            self.attempts,
+            self.op.name(),
+            self.key,
+            self.last
+        )
+    }
+}
+
+impl std::error::Error for RetryExhausted {}
 
 /// Run `op` under `policy`, charging each repeat to `retries`.
 /// Returns the first success or the last error once attempts are
-/// exhausted.
+/// exhausted.  Free-function form for callers outside an engine stack
+/// (no op-kind context, so no [`RetryExhausted`] wrapping).
 pub fn with_retry<T>(
     policy: &RetryPolicy,
     retries: &AtomicU64,
@@ -89,11 +147,20 @@ pub struct RetryEngine {
     inner: Arc<dyn NvmeEngine>,
     policy: RetryPolicy,
     retries: AtomicU64,
+    exhaustions: AtomicU64,
+    /// Monotone salt feeding the per-attempt jitter hash.
+    salt: AtomicU64,
 }
 
 impl RetryEngine {
     pub fn new(inner: Arc<dyn NvmeEngine>, policy: RetryPolicy) -> Self {
-        Self { inner, policy, retries: AtomicU64::new(0) }
+        Self {
+            inner,
+            policy,
+            retries: AtomicU64::new(0),
+            exhaustions: AtomicU64::new(0),
+            salt: AtomicU64::new(0),
+        }
     }
 
     /// Retries performed so far (also folded into
@@ -101,35 +168,69 @@ impl RetryEngine {
     pub fn retries(&self) -> u64 {
         self.retries.load(Ordering::Relaxed)
     }
+
+    /// Ops whose whole retry budget failed (also folded into
+    /// [`IoSnapshot::retry_exhaustions`]).
+    pub fn exhaustions(&self) -> u64 {
+        self.exhaustions.load(Ordering::Relaxed)
+    }
+
+    /// The engine-op retry loop: jittered backoff between attempts,
+    /// [`RetryExhausted`] (op kind + key + attempt count) once the
+    /// budget is gone.
+    fn run<T>(
+        &self,
+        op: OpKind,
+        key: &str,
+        mut f: impl FnMut() -> anyhow::Result<T>,
+    ) -> anyhow::Result<T> {
+        let attempts = self.policy.max_attempts.max(1);
+        let mut last = None;
+        for i in 0..attempts {
+            if i > 0 {
+                self.retries.fetch_add(1, Ordering::Relaxed);
+                let salt = self.salt.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.policy.delay_with_jitter(i - 1, salt));
+            }
+            match f() {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+        }
+        self.exhaustions.fetch_add(1, Ordering::Relaxed);
+        Err(RetryExhausted {
+            op,
+            key: key.to_string(),
+            attempts,
+            last: last.expect("attempts >= 1").to_string(),
+        }
+        .into())
+    }
 }
 
 impl NvmeEngine for RetryEngine {
     fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
-        with_retry(&self.policy, &self.retries, || self.inner.write(key, data))
+        self.run(OpKind::Write, key, || self.inner.write(key, data))
     }
 
     fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
-        with_retry(&self.policy, &self.retries, || self.inner.read(key, out))
+        self.run(OpKind::Read, key, || self.inner.read(key, out))
     }
 
     fn read_at(&self, key: &str, offset: usize, out: &mut [u8]) -> anyhow::Result<()> {
-        with_retry(&self.policy, &self.retries, || {
-            self.inner.read_at(key, offset, out)
-        })
+        self.run(OpKind::ReadAt, key, || self.inner.read_at(key, offset, out))
     }
 
     fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
-        with_retry(&self.policy, &self.retries, || {
-            self.inner.write_at(key, offset, data)
-        })
+        self.run(OpKind::WriteAt, key, || self.inner.write_at(key, offset, data))
     }
 
     fn flush(&self, key: &str) -> anyhow::Result<()> {
-        with_retry(&self.policy, &self.retries, || self.inner.flush(key))
+        self.run(OpKind::Flush, key, || self.inner.flush(key))
     }
 
     fn reserve(&self, key: &str, len: usize) -> anyhow::Result<()> {
-        with_retry(&self.policy, &self.retries, || self.inner.reserve(key, len))
+        self.run(OpKind::Reserve, key, || self.inner.reserve(key, len))
     }
 
     fn len_of(&self, key: &str) -> Option<usize> {
@@ -139,6 +240,7 @@ impl NvmeEngine for RetryEngine {
     fn stats(&self) -> IoSnapshot {
         let mut s = self.inner.stats();
         s.retries += self.retries();
+        s.retry_exhaustions += self.exhaustions();
         s
     }
 
@@ -180,14 +282,26 @@ mod tests {
     }
 
     #[test]
-    fn exhaustion_surfaces_the_error() {
+    fn exhaustion_surfaces_typed_error_and_is_metered() {
         let (inner, dir) = direct("ex");
         // fails 5 times per op; 3 attempts are not enough
         let faulty = Arc::new(FaultyEngine::transient(inner, 5, OpMask::ALL));
         let eng = RetryEngine::new(faulty, RetryPolicy::attempts(3));
         let err = eng.write("k", &[1u8; 64]).unwrap_err();
+        // the underlying error's message survives inside the wrapper
         assert!(err.to_string().contains("injected"), "{err}");
+        assert!(err.to_string().contains("retry exhausted"), "{err}");
+        let ex = err.downcast_ref::<RetryExhausted>().expect("typed exhaustion");
+        assert_eq!(ex.op, OpKind::Write);
+        assert_eq!(ex.key, "k");
+        assert_eq!(ex.attempts, 3);
         assert_eq!(eng.retries(), 2, "both retries charged");
+        assert_eq!(eng.exhaustions(), 1, "one op died for good");
+        assert_eq!(eng.stats().retry_exhaustions, 1);
+        // a later absorbed fault must not bump exhaustions again
+        let mut out = [0u8; 64];
+        assert!(eng.read("k", &mut out).is_err()); // 5-fail budget continues
+        assert_eq!(eng.exhaustions(), 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -223,10 +337,36 @@ mod tests {
             max_attempts: 10,
             base_delay: Duration::from_millis(1),
             max_delay: Duration::from_millis(4),
+            jitter_pct: 0,
         };
         assert_eq!(p.delay_for(0), Duration::from_millis(1));
         assert_eq!(p.delay_for(1), Duration::from_millis(2));
         assert_eq!(p.delay_for(2), Duration::from_millis(4));
         assert_eq!(p.delay_for(7), Duration::from_millis(4), "capped");
+        // zero jitter: the jittered schedule is the plain one
+        assert_eq!(p.delay_with_jitter(2, 123), Duration::from_millis(4));
+    }
+
+    #[test]
+    fn jitter_stays_within_the_configured_share() {
+        let p = RetryPolicy {
+            max_attempts: 10,
+            base_delay: Duration::from_millis(2),
+            max_delay: Duration::from_millis(64),
+            jitter_pct: 50,
+        };
+        let mut seen_spread = false;
+        let mut first = None;
+        for salt in 0..64u64 {
+            let d = p.delay_with_jitter(1, salt); // base 4ms
+            assert!(d >= Duration::from_millis(4), "jitter only adds: {d:?}");
+            assert!(d <= Duration::from_millis(6), "<= base + 50%: {d:?}");
+            match first {
+                None => first = Some(d),
+                Some(f) if f != d => seen_spread = true,
+                _ => {}
+            }
+        }
+        assert!(seen_spread, "64 salts must not all hash to one delay");
     }
 }

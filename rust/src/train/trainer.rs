@@ -125,12 +125,12 @@ pub struct Trainer {
     /// ([`crate::ckpt::Journal`]).  Always constructed; commits only
     /// happen at `TrainSpec::ckpt_interval_steps` cadence.
     journal: Journal,
-    /// Newest epoch committed on this storage (0 = none).
+    /// Newest epoch committed on this storage (0 = none).  Post-commit
+    /// optimizer write-backs land on the *other* physical extent of
+    /// each shadow-paged key ([`crate::ckpt::ShadowEngine`]), so this
+    /// epoch's bytes stay recoverable no matter where the next window
+    /// crashes.
     last_epoch: u64,
-    /// Whether the on-SSD state has diverged from `last_epoch` — set by
-    /// the first optimizer write-back after a commit (recorded durably
-    /// via the journal's dirty marker before any key changes).
-    epoch_dirty: bool,
     /// Offloadable tensors in forward order (the swapper plan).
     fwd_plan: Vec<TensorDesc>,
     /// Block weight result order, resolved from the manifest once.
@@ -205,20 +205,15 @@ impl Trainer {
             crate::dtype::DType::BF16 => StateDtype::BF16,
             _ => StateDtype::F32,
         };
-        let state = init_weights(spec, engine.nvme.as_ref(), state_dtype, opts.seed)?;
-        // fresh initialization just overwrote whatever a previous run
-        // left on this storage — a stale journal here must not stay
-        // resumable.  Mark its epoch dirty, and keep numbering past it
-        // so this run's first commit beats the stale record in the
-        // dual-slot load.
+        // a fresh initialization is about to overwrite whatever a
+        // previous run left on this storage — retire any stale journal
+        // records *first*.  A stale record over freshly-initialized
+        // extents could validate by key lengths alone and resume into
+        // silently divergent state; zeroing both slots turns a crash
+        // mid-init into a structured "no checkpoint journal" error.
         let journal = Journal::new(engine.nvme.clone());
-        let last_epoch = match journal.load() {
-            Some(stale) => {
-                journal.mark_dirty(stale.epoch)?;
-                stale.epoch
-            }
-            None => 0,
-        };
+        journal.invalidate()?;
+        let state = init_weights(spec, engine.nvme.as_ref(), state_dtype, opts.seed)?;
         let flat = GradFlatBuffer::new(&state.inv, &engine.arena)?;
         let scaler = if train.precision.needs_overflow_check() {
             LossScaler::new(train.init_loss_scale, train.scale_growth_interval)
@@ -278,7 +273,7 @@ impl Trainer {
             _ => None,
         };
         let profile = train.prefetch_profile.then(|| Arc::new(ProfileStore::new()));
-        Ok(Self {
+        let trainer = Self {
             rt,
             engine,
             spec,
@@ -292,10 +287,7 @@ impl Trainer {
             steps_done: 0,
             seed: opts.seed,
             journal,
-            last_epoch,
-            // stale epochs were dirtied above; fresh storage has
-            // nothing to invalidate
-            epoch_dirty: last_epoch > 0,
+            last_epoch: 0,
             fwd_plan,
             block_names,
             scratch,
@@ -304,7 +296,12 @@ impl Trainer {
             coalesced,
             fetch_groups,
             profile,
-        })
+        };
+        // shadow-page every checkpointed stream: until the first commit
+        // flips, registered keys resolve to extent 0 (the bytes
+        // init_weights just wrote), so this is a pure pass-through
+        trainer.engine.shadow.register(trainer.shadow_key_set());
+        Ok(trainer)
     }
 
     /// Reopen a checkpointed run and continue bit-identically from its
@@ -314,14 +311,21 @@ impl Trainer {
     /// training state: replays the journal instead of re-initializing
     /// weights (no RNG consumed, no SSD writes, no DRAM re-staging of
     /// optimizer state — the tensors stay on the SSD and only the small
-    /// resident norms read back), validates the epoch against the
-    /// storage inventory (every key length, the coalesce-layout digest,
-    /// model/seed/dtype), and restores the loss scaler, data-loader RNG
-    /// cursor, and step counters.  Structured errors — never silent
-    /// divergence — when the storage holds no journal, when state was
-    /// dirtied after the last commit (crash mid-epoch; only the epochs
-    /// the journal names are recoverable), or when the resume
-    /// configuration diverges from the journaled one.
+    /// resident norms read back), and restores the loss scaler,
+    /// data-loader RNG cursor, and step counters.
+    ///
+    /// Recovery walks the journal newest-first: each candidate epoch is
+    /// validated against the storage inventory (every key length at the
+    /// journaled extent, every resident-blob checksum, the
+    /// coalesce-layout digest), its extent map is installed on the
+    /// shadow layer, and the first epoch that fully verifies wins.  A
+    /// damaged newest epoch (torn slot, bit-rot, crash mid-commit) is
+    /// reported and skipped — shadow paging guarantees the previous
+    /// epoch's extents were never overwritten, so walking back always
+    /// lands on intact bytes.  Hard errors remain for operator
+    /// mistakes: no journal at all, or a resume configuration
+    /// (model/seed/dtype/coalesce mode) that diverges from the
+    /// journaled one.
     pub fn resume(
         artifacts_dir: &Path,
         storage_dir: &Path,
@@ -339,34 +343,12 @@ impl Trainer {
         );
         let engine = OffloadEngine::new(spec, &train, storage_dir)?;
         let journal = Journal::new(engine.nvme.clone());
-        let ck = journal.load().ok_or_else(|| {
-            anyhow::anyhow!(
-                "no checkpoint journal on this storage — start the run with \
-                 --ckpt-interval > 0 (TrainSpec::ckpt_interval_steps) to make \
-                 it resumable"
-            )
-        })?;
-        if let Some(dirty) = journal.dirty_epoch() {
-            anyhow::ensure!(
-                dirty < ck.epoch,
-                "cannot resume: on-SSD state was modified after epoch {} was \
-                 committed (crash mid-epoch) — the checkpoint no longer \
-                 describes the stored bytes",
-                ck.epoch
-            );
-        }
+        let candidates = journal.load_all();
         anyhow::ensure!(
-            ck.model == spec.name,
-            "checkpoint was taken for model '{}', resume asked for '{}'",
-            ck.model,
-            spec.name
-        );
-        anyhow::ensure!(
-            ck.seed == opts.seed,
-            "checkpoint was seeded with {}, resume requested {} (pass the \
-             original seed)",
-            ck.seed,
-            opts.seed
+            !candidates.is_empty(),
+            "no checkpoint journal on this storage — start the run with \
+             --ckpt-interval > 0 (TrainSpec::ckpt_interval_steps) to make \
+             it resumable"
         );
         let state_dtype = match train.optim_dtype {
             crate::dtype::DType::BF16 => StateDtype::BF16,
@@ -376,17 +358,86 @@ impl Trainer {
             StateDtype::BF16 => "bf16",
             StateDtype::F32 => "f32",
         };
-        anyhow::ensure!(
-            ck.dtype == dtype_label,
-            "checkpoint optimizer state is {}, resume requested {dtype_label}",
-            ck.dtype
-        );
-        ck.validate_keys(engine.nvme.as_ref())?;
+        let tiled = train.io_workers > 0 && train.optim_tile_bytes > 0;
+        let coalesce_cfg = tiled && train.optim_coalesce_bytes > 0;
 
-        // rebuild everything from metadata plus the resident blobs —
-        // init_weights is never called, so nothing on the SSD is
-        // rewritten and the weight-init RNG stream is irrelevant
-        let state = resume_weights(spec, engine.nvme.as_ref(), state_dtype)?;
+        // walk the journaled epochs newest-first and take the first one
+        // that fully verifies; shadow paging kept every older epoch's
+        // extents intact, so walking back always lands on real bytes
+        let mut chosen = None;
+        let mut last_err: Option<anyhow::Error> = None;
+        for ck in candidates {
+            // configuration mismatches are operator errors, not storage
+            // damage — never walk past them to an older epoch
+            anyhow::ensure!(
+                ck.model == spec.name,
+                "checkpoint was taken for model '{}', resume asked for '{}'",
+                ck.model,
+                spec.name
+            );
+            anyhow::ensure!(
+                ck.seed == opts.seed,
+                "checkpoint was seeded with {}, resume requested {} (pass the \
+                 original seed)",
+                ck.seed,
+                opts.seed
+            );
+            anyhow::ensure!(
+                ck.dtype == dtype_label,
+                "checkpoint optimizer state is {}, resume requested {dtype_label}",
+                ck.dtype
+            );
+            anyhow::ensure!(
+                coalesce_cfg == ck.layout_digest.is_some(),
+                "checkpoint {} coalesced optimizer streams but this resume {} \
+                 (keep optim_coalesce_bytes consistent across restarts)",
+                if ck.layout_digest.is_some() { "used" } else { "did not use" },
+                if coalesce_cfg { "does" } else { "does not" },
+            );
+            let attempt = (|| -> anyhow::Result<ModelState> {
+                ck.validate_keys(engine.nvme.as_ref())?;
+                if let Some(want) = ck.layout_digest {
+                    let got = ckpt::stored_digest(
+                        engine.nvme.as_ref(),
+                        crate::optimizer::coalesce::LAYOUT_KEY,
+                    )?;
+                    anyhow::ensure!(
+                        got == Some(want),
+                        "persisted coalesce-layout blob diverged from the \
+                         journaled digest — storage was re-laid since the \
+                         checkpoint"
+                    );
+                }
+                // route every logical key to the physical extent this
+                // epoch committed, then rebuild from metadata plus the
+                // (checksummed) resident blobs — init_weights is never
+                // called, so nothing on the SSD is rewritten
+                engine.shadow.install(ck.extent_map());
+                resume_weights(spec, engine.nvme.as_ref(), state_dtype)
+            })();
+            match attempt {
+                Ok(state) => {
+                    chosen = Some((ck, state));
+                    break;
+                }
+                Err(e) => {
+                    eprintln!(
+                        "[resume] epoch {} is not recoverable ({e:#}); \
+                         walking back",
+                        ck.epoch
+                    );
+                    last_err = Some(e);
+                }
+            }
+        }
+        let (ck, state) = match chosen {
+            Some(found) => found,
+            None => {
+                return Err(last_err
+                    .expect("candidates were non-empty")
+                    .context("no journaled epoch is recoverable"))
+            }
+        };
         let flat = GradFlatBuffer::new(&state.inv, &engine.arena)?;
         let mut scaler = if train.precision.needs_overflow_check() {
             LossScaler::new(train.init_loss_scale, train.scale_growth_interval)
@@ -410,7 +461,6 @@ impl Trainer {
             engine.arena.clone(),
             engine.copy_meter.clone(),
         ));
-        let tiled = train.io_workers > 0 && train.optim_tile_bytes > 0;
         // governed runs continue the tuning trajectory where the
         // checkpoint left it (bit-identical either way — retunes only
         // resize disjoint-range I/O windows; this just skips
@@ -434,25 +484,6 @@ impl Trainer {
         };
         let governor = (train.governor && tiled)
             .then(|| PipelineGovernor::new(governor_config(&train, tuning), tuning));
-        let coalesce_cfg = tiled && train.optim_coalesce_bytes > 0;
-        anyhow::ensure!(
-            coalesce_cfg == ck.layout_digest.is_some(),
-            "checkpoint {} coalesced optimizer streams but this resume {} \
-             (keep optim_coalesce_bytes consistent across restarts)",
-            if ck.layout_digest.is_some() { "used" } else { "did not use" },
-            if coalesce_cfg { "does" } else { "does not" },
-        );
-        if let Some(want) = ck.layout_digest {
-            let got = ckpt::stored_digest(
-                engine.nvme.as_ref(),
-                crate::optimizer::coalesce::LAYOUT_KEY,
-            )?;
-            anyhow::ensure!(
-                got == Some(want),
-                "persisted coalesce-layout blob diverged from the journaled \
-                 digest — storage was re-laid since the checkpoint"
-            );
-        }
         let mut coalesced = coalesce_cfg
             .then(|| {
                 CoalescedOptim::resume(
@@ -464,11 +495,11 @@ impl Trainer {
             .transpose()?;
         let fetch_groups = match (&mut coalesced, train.fetch_coalesce) {
             (Some(co), true) => {
-                // the packed read streams are derived state: re-gather
-                // them from the (just-validated) member fp16 keys
-                let keys: Vec<String> =
-                    state.offloaded.iter().map(|st| fp16_key(&st.group)).collect();
-                co.enable_fp16_streams(engine.nvme.as_ref(), &keys)?;
+                // the packed read streams are checkpointed state now
+                // (shadow-paged like every other stream): reattach to
+                // the committed extents instead of re-gathering, which
+                // would write into the epoch's invisible shadow extent
+                co.attach_fp16_streams(engine.nvme.as_ref())?;
                 Some(Arc::new(FetchGroups::from_layout(&co.layout)))
             }
             _ => None,
@@ -513,7 +544,6 @@ impl Trainer {
             seed: ck.seed,
             journal,
             last_epoch: ck.epoch,
-            epoch_dirty: false,
             fwd_plan,
             block_names,
             scratch,
@@ -732,16 +762,6 @@ impl Trainer {
         let mut optim_tiles = 0u64;
         let mut degraded_tiles = 0u64;
         if !skip {
-            // commits are in place: the first write-back after a
-            // commit invalidates that epoch.  Record the divergence
-            // durably *before* any state key changes, so a crash
-            // mid-epoch resumes with a structured error instead of
-            // silently continuing from torn state.  (Skipped overflow
-            // steps write nothing, so they never dirty an epoch.)
-            if self.last_epoch > 0 && !self.epoch_dirty {
-                self.journal.mark_dirty(self.last_epoch)?;
-                self.epoch_dirty = true;
-            }
             self.applied_steps += 1;
             let t = self.applied_steps;
             let unscale = (scale * ranks as f64) as f32;
@@ -834,6 +854,12 @@ impl Trainer {
                     1,
                 );
             }
+            // the first applied step after a commit wrote every state
+            // key's update to its *shadow* extent (the committed epoch
+            // stayed untouched); fold the map forward so the next step
+            // reads back what this one wrote.  Skipped overflow steps
+            // write nothing, so nothing is dirty and this is a no-op.
+            self.engine.shadow.advance();
         }
         let optim_secs = t_opt.elapsed().as_secs_f64();
         self.flat.zero();
@@ -961,10 +987,14 @@ impl Trainer {
         }
     }
 
-    /// Every on-SSD key one checkpoint epoch covers, with stored
-    /// lengths.  Called after the flush barriers, so a missing key is
-    /// a commit-time invariant violation, not a race.
-    fn ckpt_keys(&self) -> anyhow::Result<Vec<(String, usize)>> {
+    /// Every logical stream one checkpoint epoch shadow-pages: the
+    /// optimizer state streams (super-group or per-tensor), the packed
+    /// fp16 read streams when fetch coalescing mirrors them, every
+    /// per-tensor fp16 compute copy, and the resident-tensor blobs in
+    /// sorted order.  The coalesce-layout blob is deliberately *not*
+    /// here — it is immutable once laid, so one physical extent serves
+    /// every epoch.
+    fn shadow_key_set(&self) -> Vec<String> {
         let mut keys: Vec<String> = Vec::new();
         match &self.coalesced {
             // coalesced runs: state lives in the super-group streams
@@ -973,7 +1003,11 @@ impl Trainer {
                 for st in &co.supers {
                     keys.extend(crate::optimizer::states::state_keys(&st.group));
                 }
-                keys.push(crate::optimizer::coalesce::LAYOUT_KEY.to_string());
+                if co.fp16_streams_enabled() {
+                    for i in 0..co.supers.len() {
+                        keys.push(crate::optimizer::coalesce::fp16_stream_name(i));
+                    }
+                }
             }
             None => {
                 for st in &self.state.offloaded {
@@ -989,35 +1023,61 @@ impl Trainer {
         for name in resident {
             keys.push(ckpt::resident_key(name));
         }
+        keys
+    }
+
+    /// Every on-SSD key one checkpoint epoch covers, with stored
+    /// lengths and the physical extent holding this epoch's bytes.
+    /// Called after the flush barriers, so a missing key is a
+    /// commit-time invariant violation, not a race.
+    fn ckpt_keys(&self) -> anyhow::Result<Vec<(String, usize, u8)>> {
+        let mut keys = self.shadow_key_set();
+        if self.coalesced.is_some() {
+            keys.push(crate::optimizer::coalesce::LAYOUT_KEY.to_string());
+        }
         keys.into_iter()
             .map(|k| {
-                let len = self.engine.nvme.len_of(&k).ok_or_else(|| {
-                    anyhow::anyhow!("checkpoint key '{k}' missing at commit time")
-                })?;
-                Ok((k, len))
+                // resolve length on the *physical* extent the record
+                // will name, so the journaled (len, ext) pair always
+                // describes the same bytes
+                let ext = self.engine.shadow.newest_ext(&k);
+                let len = self
+                    .engine
+                    .shadow
+                    .inner()
+                    .len_of(&ckpt::phys_key(&k, ext))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("checkpoint key '{k}' missing at commit time")
+                    })?;
+                Ok((k, len, ext))
             })
             .collect()
     }
 
     /// Commit one checkpoint epoch: flush barriers over every state and
     /// fp16 stream ([`Self::drain`]), persist the host-resident tensors
-    /// and cursors, then atomically advance the journal — the previous
-    /// epoch stays recoverable until the next optimizer write-back.
+    /// and cursors, atomically advance the journal, then flip the
+    /// shadow map so the next window's write-backs target the *other*
+    /// physical extent of every stream — the epoch just committed (and
+    /// the one before it) stay recoverable through any later crash.
     /// Returns the elapsed seconds; [`Self::run`] surfaces them as
     /// [`StepMetrics::ckpt_secs`], a durability tax deliberately kept
     /// out of `io_wait_secs`.
     pub fn checkpoint(&mut self) -> anyhow::Result<f64> {
         let t0 = Instant::now();
         // 1. barrier: buffered ranged writes reach a defined durable
-        //    state on every stream the epoch will name
+        //    state on every stream the epoch will name (flush routes to
+        //    each key's newest extent — the one the record will carry)
         self.drain()?;
         // 2. the only byte-moving part: resident tensors (norms) and
-        //    their Adam state, in sorted order for determinism
+        //    their Adam state, checksummed, in sorted order for
+        //    determinism; flushed so the slot write never races them
         let mut names: Vec<&String> = self.state.resident.keys().collect();
         names.sort();
         for name in names {
             let rt = &self.state.resident[name];
             ckpt::write_resident(self.engine.nvme.as_ref(), name, &rt.data, &rt.m, &rt.v)?;
+            self.engine.nvme.flush(&ckpt::resident_key(name))?;
         }
         let layout_digest = match &self.coalesced {
             Some(_) => {
@@ -1067,7 +1127,12 @@ impl Trainer {
         };
         self.journal.commit(&ck)?;
         self.last_epoch = ck.epoch;
-        self.epoch_dirty = false;
+        // 4. flip: route the next window's write-backs to the other
+        //    physical extent of every stream.  In-memory only — if we
+        //    crash before any flipped write lands, the slot record just
+        //    written is the durable authority and resume re-derives the
+        //    same routing from its extent map.
+        self.engine.shadow.flip();
         Ok(t0.elapsed().as_secs_f64())
     }
 

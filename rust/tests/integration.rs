@@ -469,30 +469,46 @@ fn coalesced_prefetch_profile_resumes_and_degrades_gracefully() {
 }
 
 #[test]
-fn resume_refuses_dirty_torn_or_mismatched_state() {
+fn resume_recovers_crashes_and_refuses_mismatched_config() {
     require_artifacts!();
     use memascend::ssd::NvmeEngine;
     let mut spec = smoke_spec(MemAscendFlags::memascend());
     spec.ckpt_interval_steps = 2;
 
-    // 3 steps: epoch 1 commits after step 2, step 3 dirties it — a
-    // crash here must refuse resume with a structured error, never
-    // silently diverge
+    // uninterrupted reference for both recovery legs below
+    let dir_ref = storage("ck-rec-ref");
+    let opts4 = TrainOpts { steps: 4, seed: 42, log_every: 0, loss_csv: None };
+    let mut t_ref = Trainer::new(&artifacts(), &dir_ref, spec.clone(), &opts4).unwrap();
+    let full = t_ref.run(&opts4).unwrap();
+    drop(t_ref);
+
+    // crash mid-epoch: epoch 1 commits after step 2, step 3's
+    // write-backs land in the shadow extents, then the process dies.
+    // Resume recovers epoch 1 — its extents were never overwritten —
+    // and rerunning steps 3-4 is bit-identical to the reference
     let dir = storage("ck-dirty");
     let opts3 = TrainOpts { steps: 3, seed: 42, log_every: 0, loss_csv: None };
     let mut t = Trainer::new(&artifacts(), &dir, spec.clone(), &opts3).unwrap();
     t.run(&opts3).unwrap();
     drop(t);
-    let err = Trainer::resume(&artifacts(), &dir, spec.clone(), &opts3).unwrap_err();
-    assert!(err.to_string().contains("cannot resume"), "{err}");
+    let opts2 = TrainOpts { steps: 2, seed: 42, log_every: 0, loss_csv: None };
+    let mut t = Trainer::resume(&artifacts(), &dir, spec.clone(), &opts2).unwrap();
+    assert_eq!(t.steps_done(), 2, "mid-epoch crash rewinds to epoch 1");
+    assert_eq!(t.journal_epoch(), 1);
+    let rest = t.run(&opts2).unwrap();
+    for (a, b) in full.steps[2..].iter().zip(&rest.steps) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}", a.step);
+    }
+    drop(t);
     std::fs::remove_dir_all(&dir).ok();
 
     // 4 steps (epochs 1, 2), then tear the newest journal slot: the
-    // dual-slot load rolls back to epoch 1, whose state the in-place
-    // write-backs of steps 3-4 overwrote — resume must detect that via
-    // the dirty marker and refuse cleanly
+    // dual-slot load drops epoch 2 and the walk-back lands on epoch 1,
+    // whose extents the steps-3-4 window never touched — resume
+    // *recovers* (the old dirty-marker refusal is gone) and the rerun
+    // is bit-identical
     let dir = storage("ck-torn");
-    let opts4 = TrainOpts { steps: 4, seed: 42, log_every: 0, loss_csv: None };
     let mut t = Trainer::new(&artifacts(), &dir, spec.clone(), &opts4).unwrap();
     t.run(&opts4).unwrap();
     let nvme = t.engine.nvme.clone();
@@ -502,9 +518,17 @@ fn resume_refuses_dirty_torn_or_mismatched_state() {
     nvme.write(slot, &vec![0x5Au8; len]).unwrap();
     nvme.flush(slot).unwrap();
     drop(nvme);
-    let err = Trainer::resume(&artifacts(), &dir, spec.clone(), &opts4).unwrap_err();
-    assert!(err.to_string().contains("cannot resume"), "{err}");
+    let mut t = Trainer::resume(&artifacts(), &dir, spec.clone(), &opts2).unwrap();
+    assert_eq!(t.steps_done(), 2, "torn epoch 2 walks back to epoch 1");
+    assert_eq!(t.journal_epoch(), 1);
+    let rest = t.run(&opts2).unwrap();
+    for (a, b) in full.steps[2..].iter().zip(&rest.steps) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}", a.step);
+    }
+    drop(t);
     std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir_ref).ok();
 
     // a clean 2-step run resumes — but only with the original seed
     let dir = storage("ck-seed");

@@ -2,23 +2,29 @@
 //! stack — no AOT artifacts needed, so these run in the tier-1 CI
 //! scope (`cargo test -q`).
 //!
-//! Three contracts, end to end through `DirectEngine` + the async
-//! queue + the staged-tile optimizer:
+//! Contracts, end to end through `DirectEngine` + the async queue +
+//! the staged-tile optimizer + the shadow-paging layer:
 //!
 //! - **chaos soak**: transient NVMe faults under the bounded-backoff
 //!   retry layer are invisible to training state — a faulty run
 //!   finishes bit-identical to a fault-free run, with every absorbed
-//!   retry metered in `IoSnapshot::retries`;
+//!   retry metered in `IoSnapshot::retries`.  The seeded variant reads
+//!   `MEMASCEND_CHAOS_SEED` so CI can soak a matrix of fault patterns;
 //! - **clean abort**: persistent faults exhaust the retry budget and
-//!   surface `Err` (no deadlock, no hang), and a journal commit that
-//!   failed leaves the previously committed epoch fully intact;
-//! - **kill-and-restart**: optimizer state flushed and journaled at
-//!   epoch N is bit-identically recoverable from a *reopened* storage
-//!   root, and the continuation matches an uninterrupted run.
+//!   surface the typed `RetryExhausted` error (no deadlock, no hang),
+//!   and a commit that failed mid-flush leaves the previously
+//!   committed epoch fully intact;
+//! - **kill-and-restart at every phase**: a crash between epochs, mid
+//!   optimizer window, after the journal slot write but before the
+//!   in-memory flip, or mid commit flush always recovers the newest
+//!   *valid* epoch, and the continuation is bit-identical to an
+//!   uninterrupted run — shadow paging routes post-commit write-backs
+//!   to the other physical extent, so committed bytes are never
+//!   overwritten.
 
 use std::sync::Arc;
 
-use memascend::ckpt::{CkptState, Journal};
+use memascend::ckpt::{CkptState, Journal, ShadowEngine};
 use memascend::optimizer::states::state_keys;
 use memascend::optimizer::{
     flush_groups, step_groups_tiled, AdamParams, OptimState, StateDtype,
@@ -79,6 +85,30 @@ fn fp16_keys(states: &[OptimState]) -> Vec<String> {
     states.iter().map(|s| format!("{}/fp16", s.group)).collect()
 }
 
+/// Every logical key a checkpoint epoch of `states` covers.
+fn all_keys(states: &[OptimState]) -> Vec<String> {
+    let mut keys = Vec::new();
+    for st in states {
+        keys.extend(state_keys(&st.group));
+        keys.push(format!("{}/fp16", st.group));
+    }
+    keys
+}
+
+/// Rebuild the optimizer handles from metadata alone (no gather, no
+/// re-init) — what a resumed trainer does.
+fn reopen_states(sizes: &[usize]) -> Vec<OptimState> {
+    sizes
+        .iter()
+        .enumerate()
+        .map(|(g, &n)| OptimState {
+            group: format!("g{g}"),
+            numel: n,
+            dtype: StateDtype::F32,
+        })
+        .collect()
+}
+
 /// Run the staged-tile optimizer for the given 1-based step range.
 fn run_steps(
     engine: Arc<dyn NvmeEngine>,
@@ -102,6 +132,23 @@ fn run_steps(
     Ok(())
 }
 
+/// Trainer-shaped window steps over a shadow-paged stack: each applied
+/// step folds the extent map forward (`advance`) so the next step
+/// reads back what this one wrote.
+fn run_steps_shadow(
+    shadow: &Arc<ShadowEngine>,
+    states: &[OptimState],
+    sizes: &[usize],
+    steps: std::ops::RangeInclusive<u64>,
+) -> anyhow::Result<()> {
+    for t in steps {
+        let eng: Arc<dyn NvmeEngine> = shadow.clone();
+        run_steps(eng, states, sizes, t..=t)?;
+        shadow.advance();
+    }
+    Ok(())
+}
+
 /// All four stored streams (master/m/v/fp16) of one group.
 fn group_bytes(engine: &dyn NvmeEngine, group: &str, numel: usize) -> Vec<Vec<u8>> {
     let mut out = Vec::new();
@@ -118,22 +165,9 @@ fn group_bytes(engine: &dyn NvmeEngine, group: &str, numel: usize) -> Vec<Vec<u8
     out
 }
 
-/// Minimal journal record naming every key of `states`.
-fn ckpt_state(
-    epoch: u64,
-    steps_done: u64,
-    engine: &dyn NvmeEngine,
-    states: &[OptimState],
-) -> CkptState {
-    let mut keys = Vec::new();
-    for st in states {
-        for k in state_keys(&st.group) {
-            keys.push((k.clone(), engine.len_of(&k).unwrap()));
-        }
-        let fk = format!("{}/fp16", st.group);
-        let len = engine.len_of(&fk).unwrap();
-        keys.push((fk, len));
-    }
+/// Journal record with the given key triples and the cursors every
+/// test here shares.
+fn base_ckpt(epoch: u64, steps_done: u64, keys: Vec<(String, usize, u8)>) -> CkptState {
     CkptState {
         epoch,
         steps_done,
@@ -155,6 +189,52 @@ fn ckpt_state(
         layout_digest: None,
         profile_digest: None,
     }
+}
+
+/// Minimal journal record naming every key of `states` on a raw
+/// (un-shadowed) engine — everything lives at extent 0.
+fn ckpt_state(
+    epoch: u64,
+    steps_done: u64,
+    engine: &dyn NvmeEngine,
+    states: &[OptimState],
+) -> CkptState {
+    let keys = all_keys(states)
+        .into_iter()
+        .map(|k| {
+            let len = engine.len_of(&k).unwrap();
+            (k, len, 0u8)
+        })
+        .collect();
+    base_ckpt(epoch, steps_done, keys)
+}
+
+/// The trainer's commit sequence over a shadow-paged stack: flush each
+/// stream's newest extent, write the slot record carrying the extent
+/// map, then flip the in-memory routing.  `flip_after: false` models a
+/// crash between the (durable) slot write and the (in-memory) flip.
+fn commit_epoch(
+    journal: &Journal,
+    shadow: &Arc<ShadowEngine>,
+    states: &[OptimState],
+    epoch: u64,
+    steps_done: u64,
+    flip_after: bool,
+) -> anyhow::Result<()> {
+    flush_groups(shadow.as_ref(), states, &fp16_keys(states))?;
+    let keys = all_keys(states)
+        .into_iter()
+        .map(|k| {
+            let ext = shadow.newest_ext(&k);
+            let len = shadow.len_of(&k).unwrap();
+            (k, len, ext)
+        })
+        .collect();
+    journal.commit(&base_ckpt(epoch, steps_done, keys))?;
+    if flip_after {
+        shadow.flip();
+    }
+    Ok(())
 }
 
 #[test]
@@ -196,6 +276,59 @@ fn chaos_transient_faults_finish_bit_identical() {
     std::fs::remove_dir_all(&dir_b).ok();
 }
 
+/// Seeded probabilistic chaos soak over the full shadow-paged stack,
+/// including two commit/flip cycles.  `MEMASCEND_CHAOS_SEED` selects
+/// the fault pattern (CI runs a matrix of seeds); any seed must finish
+/// bit-identical to the fault-free run.
+#[test]
+fn chaos_soak_seeded_random_faults_finish_bit_identical() {
+    let seed: u64 = std::env::var("MEMASCEND_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let sizes = [2200usize, 900];
+
+    let dir_a = tmp(&format!("soak-clean-{seed}"));
+    let eng_a: Arc<dyn NvmeEngine> = direct(&dir_a);
+    let st_a = init_states(eng_a.as_ref(), &sizes);
+    run_steps(eng_a.clone(), &st_a, &sizes, 1..=3).unwrap();
+    flush_groups(eng_a.as_ref(), &st_a, &fp16_keys(&st_a)).unwrap();
+
+    // ~9% of every op kind fails, deterministically by seed; an
+    // 8-attempt budget makes exhaustion astronomically unlikely
+    let dir_b = tmp(&format!("soak-faulty-{seed}"));
+    let faulty = Arc::new(
+        FaultyEngine::new(direct(&dir_b), 96, seed).with_mask(OpMask::ALL),
+    );
+    let retry: Arc<dyn NvmeEngine> =
+        Arc::new(RetryEngine::new(faulty.clone(), RetryPolicy::attempts(8)));
+    let shadow = Arc::new(ShadowEngine::new(retry.clone()));
+    let st_b = init_states(shadow.as_ref(), &sizes);
+    shadow.register(all_keys(&st_b));
+    let journal = Journal::new(shadow.clone());
+    run_steps_shadow(&shadow, &st_b, &sizes, 1..=1).unwrap();
+    commit_epoch(&journal, &shadow, &st_b, 1, 1, true).unwrap();
+    run_steps_shadow(&shadow, &st_b, &sizes, 2..=3).unwrap();
+    commit_epoch(&journal, &shadow, &st_b, 2, 3, true).unwrap();
+
+    let injected = faulty.injected.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(injected > 0, "seed {seed} injected no faults");
+    assert!(
+        retry.stats().retries >= injected,
+        "retries {} < injected {injected}",
+        retry.stats().retries
+    );
+    assert_eq!(retry.stats().retry_exhaustions, 0);
+
+    for (g, &n) in sizes.iter().enumerate() {
+        let a = group_bytes(eng_a.as_ref(), &format!("g{g}"), n);
+        let b = group_bytes(shadow.as_ref(), &format!("g{g}"), n);
+        assert_eq!(a, b, "seed {seed}: group g{g} diverged under chaos");
+    }
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
 #[test]
 fn persistent_faults_abort_cleanly_without_partial_commit() {
     let sizes = [2000usize];
@@ -209,14 +342,22 @@ fn persistent_faults_abort_cleanly_without_partial_commit() {
     journal.commit(&ckpt_state(1, 1, eng.as_ref(), &states)).unwrap();
 
     // a persistent data fault exhausts the bounded retry budget and
-    // surfaces Err — the step returns (this test completing at all is
-    // the no-deadlock assertion)
+    // surfaces the typed error — the step returns (this test completing
+    // at all is the no-deadlock assertion)
     let faulty: Arc<dyn NvmeEngine> = Arc::new(RetryEngine::new(
         Arc::new(FaultyEngine::transient(inner.clone(), u32::MAX, OpMask::DATA)),
         RetryPolicy::attempts(2),
     ));
     let err = run_steps(faulty.clone(), &states, &sizes, 2..=2).unwrap_err();
     assert!(err.to_string().contains("injected"), "unexpected error: {err}");
+    assert!(
+        err.to_string().contains("retry exhausted"),
+        "exhaustion must surface the typed error, got: {err}"
+    );
+    assert!(
+        faulty.stats().retry_exhaustions > 0,
+        "exhaustions must be metered separately"
+    );
 
     // a journal commit through the dead stack fails without touching
     // the committed epoch — no partial commit
@@ -261,15 +402,7 @@ fn kill_and_restart_from_reopened_storage_is_bit_identical() {
     assert_eq!(ck.epoch, 1);
     assert_eq!(ck.steps_done, 2);
     ck.validate_keys(eng2.as_ref()).unwrap();
-    let resumed: Vec<OptimState> = sizes
-        .iter()
-        .enumerate()
-        .map(|(g, &n)| OptimState {
-            group: format!("g{g}"),
-            numel: n,
-            dtype: StateDtype::F32,
-        })
-        .collect();
+    let resumed = reopen_states(&sizes);
     run_steps(eng2.clone(), &resumed, &sizes, 3..=4).unwrap();
     flush_groups(eng2.as_ref(), &resumed, &fp16_keys(&resumed)).unwrap();
 
@@ -306,5 +439,194 @@ fn torn_commit_recovers_previous_epoch_on_restart() {
     let ck = Journal::new(eng2.clone()).load().expect("previous epoch survives");
     assert_eq!(ck.epoch, 1, "torn commit must roll back to epoch 1");
     ck.validate_keys(eng2.as_ref()).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// THE tentpole property: a crash *between* epochs — after epoch 2's
+/// commit the newest slot rots — walks resume back to epoch 1, whose
+/// extents the post-commit window never overwrote, and rerunning from
+/// there is bit-identical to an uninterrupted run.
+#[test]
+fn between_epoch_crash_walks_back_and_continues_bit_identical() {
+    let sizes = [2500usize, 700];
+
+    // uninterrupted reference: 4 steps straight through
+    let dir_ref = tmp("wb-ref");
+    let eng_ref: Arc<dyn NvmeEngine> = direct(&dir_ref);
+    let st_ref = init_states(eng_ref.as_ref(), &sizes);
+    run_steps(eng_ref.clone(), &st_ref, &sizes, 1..=4).unwrap();
+    flush_groups(eng_ref.as_ref(), &st_ref, &fp16_keys(&st_ref)).unwrap();
+
+    let dir = tmp("wb-live");
+    {
+        let shadow = Arc::new(ShadowEngine::new(direct(&dir)));
+        let states = init_states(shadow.as_ref(), &sizes);
+        shadow.register(all_keys(&states));
+        let journal = Journal::new(shadow.clone());
+        run_steps_shadow(&shadow, &states, &sizes, 1..=2).unwrap();
+        commit_epoch(&journal, &shadow, &states, 1, 2, true).unwrap();
+        run_steps_shadow(&shadow, &states, &sizes, 3..=4).unwrap();
+        commit_epoch(&journal, &shadow, &states, 2, 4, true).unwrap();
+        // bit-rot epoch 2's slot after the commit (even epoch -> slot
+        // A): the newest record no longer checksums
+        let slot = memascend::ckpt::journal::SLOT_A;
+        let len = shadow.len_of(slot).unwrap();
+        let mut buf = vec![0u8; len];
+        shadow.read(slot, &mut buf).unwrap();
+        buf[40] ^= 0xFF;
+        shadow.write(slot, &buf).unwrap();
+    }
+
+    // restart: epoch 2 drops out of the candidate walk; epoch 1's
+    // extent map installs and its bytes — extent 0, untouched by the
+    // post-commit window that wrote extent 1 — validate
+    let shadow2 = Arc::new(ShadowEngine::new(direct(&dir)));
+    let candidates = Journal::new(shadow2.clone()).load_all();
+    assert_eq!(candidates.len(), 1, "torn newest epoch must drop out");
+    let ck = candidates.into_iter().next().unwrap();
+    assert_eq!(ck.epoch, 1, "walk-back must land on epoch 1");
+    ck.validate_keys(shadow2.inner().as_ref()).unwrap();
+    shadow2.install(ck.extent_map());
+
+    let resumed = reopen_states(&sizes);
+    run_steps_shadow(&shadow2, &resumed, &sizes, 3..=4).unwrap();
+    flush_groups(shadow2.as_ref(), &resumed, &fp16_keys(&resumed)).unwrap();
+    for (g, &n) in sizes.iter().enumerate() {
+        let a = group_bytes(eng_ref.as_ref(), &format!("g{g}"), n);
+        let b = group_bytes(shadow2.as_ref(), &format!("g{g}"), n);
+        assert_eq!(a, b, "group g{g}: between-epoch crash recovery diverged");
+    }
+    std::fs::remove_dir_all(&dir_ref).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Crash after the journal slot write but before the in-memory flip:
+/// the slot record is the durable authority, so reopening resumes the
+/// just-committed epoch bit-identically — the flip loses nothing.
+#[test]
+fn crash_after_slot_write_before_flip_resumes_newest_epoch() {
+    let sizes = [1800usize];
+
+    let dir_ref = tmp("flip-ref");
+    let eng_ref: Arc<dyn NvmeEngine> = direct(&dir_ref);
+    let st_ref = init_states(eng_ref.as_ref(), &sizes);
+    run_steps(eng_ref.clone(), &st_ref, &sizes, 1..=4).unwrap();
+    flush_groups(eng_ref.as_ref(), &st_ref, &fp16_keys(&st_ref)).unwrap();
+
+    let dir = tmp("flip-live");
+    {
+        let shadow = Arc::new(ShadowEngine::new(direct(&dir)));
+        let states = init_states(shadow.as_ref(), &sizes);
+        shadow.register(all_keys(&states));
+        let journal = Journal::new(shadow.clone());
+        run_steps_shadow(&shadow, &states, &sizes, 1..=2).unwrap();
+        commit_epoch(&journal, &shadow, &states, 1, 2, true).unwrap();
+        run_steps_shadow(&shadow, &states, &sizes, 3..=4).unwrap();
+        // slot written, flip never happens — kill -9 in the gap
+        commit_epoch(&journal, &shadow, &states, 2, 4, false).unwrap();
+    }
+
+    let shadow2 = Arc::new(ShadowEngine::new(direct(&dir)));
+    let ck = Journal::new(shadow2.clone()).load().expect("epoch 2 is durable");
+    assert_eq!(ck.epoch, 2);
+    ck.validate_keys(shadow2.inner().as_ref()).unwrap();
+    shadow2.install(ck.extent_map());
+    for (g, &n) in sizes.iter().enumerate() {
+        let a = group_bytes(eng_ref.as_ref(), &format!("g{g}"), n);
+        let b = group_bytes(shadow2.as_ref(), &format!("g{g}"), n);
+        assert_eq!(a, b, "group g{g}: pre-flip crash recovery diverged");
+    }
+    std::fs::remove_dir_all(&dir_ref).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Crash mid optimizer window: steps ran past the last commit but no
+/// new epoch was journaled.  The committed epoch's extents were never
+/// written (the window targeted the shadow extents), so recovery
+/// rewinds to it and the rerun is bit-identical.
+#[test]
+fn mid_window_crash_recovers_last_committed_epoch() {
+    let sizes = [1200usize, 600];
+
+    let dir_ref = tmp("mw-ref");
+    let eng_ref: Arc<dyn NvmeEngine> = direct(&dir_ref);
+    let st_ref = init_states(eng_ref.as_ref(), &sizes);
+    run_steps(eng_ref.clone(), &st_ref, &sizes, 1..=4).unwrap();
+    flush_groups(eng_ref.as_ref(), &st_ref, &fp16_keys(&st_ref)).unwrap();
+
+    let dir = tmp("mw-live");
+    {
+        let shadow = Arc::new(ShadowEngine::new(direct(&dir)));
+        let states = init_states(shadow.as_ref(), &sizes);
+        shadow.register(all_keys(&states));
+        let journal = Journal::new(shadow.clone());
+        run_steps_shadow(&shadow, &states, &sizes, 1..=2).unwrap();
+        commit_epoch(&journal, &shadow, &states, 1, 2, true).unwrap();
+        // one step into the next window, then die — no flush, no commit
+        run_steps_shadow(&shadow, &states, &sizes, 3..=3).unwrap();
+    }
+
+    let shadow2 = Arc::new(ShadowEngine::new(direct(&dir)));
+    let ck = Journal::new(shadow2.clone()).load().expect("epoch 1 survives");
+    assert_eq!(ck.epoch, 1);
+    ck.validate_keys(shadow2.inner().as_ref()).unwrap();
+    shadow2.install(ck.extent_map());
+    let resumed = reopen_states(&sizes);
+    run_steps_shadow(&shadow2, &resumed, &sizes, 3..=4).unwrap();
+    flush_groups(shadow2.as_ref(), &resumed, &fp16_keys(&resumed)).unwrap();
+    for (g, &n) in sizes.iter().enumerate() {
+        let a = group_bytes(eng_ref.as_ref(), &format!("g{g}"), n);
+        let b = group_bytes(shadow2.as_ref(), &format!("g{g}"), n);
+        assert_eq!(a, b, "group g{g}: mid-window crash recovery diverged");
+    }
+    std::fs::remove_dir_all(&dir_ref).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Commit aborted mid-flush by a persistent fault: the flush barrier
+/// fails before the slot write, the typed exhaustion error surfaces,
+/// and the previously committed epoch stays fully recoverable.
+#[test]
+fn mid_commit_flush_fault_aborts_and_previous_epoch_survives() {
+    let sizes = [1000usize];
+    let dir = tmp("mcf");
+    let inner = direct(&dir);
+    let shadow = Arc::new(ShadowEngine::new(inner.clone()));
+    let states = init_states(shadow.as_ref(), &sizes);
+    shadow.register(all_keys(&states));
+    let journal = Journal::new(shadow.clone());
+    run_steps_shadow(&shadow, &states, &sizes, 1..=2).unwrap();
+    commit_epoch(&journal, &shadow, &states, 1, 2, true).unwrap();
+    run_steps_shadow(&shadow, &states, &sizes, 3..=4).unwrap();
+
+    // a commit stack whose flush barrier is persistently dead, routed
+    // to the same extents the live shadow map points at
+    let dead: Arc<dyn NvmeEngine> = Arc::new(RetryEngine::new(
+        Arc::new(FaultyEngine::transient(inner.clone(), u32::MAX, OpMask::FLUSH)),
+        RetryPolicy::attempts(2),
+    ));
+    let shadow_bad = Arc::new(ShadowEngine::new(dead.clone()));
+    shadow_bad.install(
+        all_keys(&states)
+            .into_iter()
+            .map(|k| {
+                let ext = shadow.newest_ext(&k);
+                (k, ext)
+            })
+            .collect::<Vec<_>>(),
+    );
+    let journal_bad = Journal::new(shadow_bad.clone());
+    let err =
+        commit_epoch(&journal_bad, &shadow_bad, &states, 2, 4, true).unwrap_err();
+    assert!(
+        err.to_string().contains("retry exhausted"),
+        "mid-commit flush fault must surface exhaustion, got: {err}"
+    );
+    assert!(dead.stats().retry_exhaustions > 0);
+
+    // epoch 1 is untouched and fully recoverable
+    let ck = Journal::new(shadow.clone()).load().expect("epoch 1 survives");
+    assert_eq!(ck.epoch, 1);
+    ck.validate_keys(inner.as_ref()).unwrap();
     std::fs::remove_dir_all(&dir).ok();
 }
