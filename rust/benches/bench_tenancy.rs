@@ -1,0 +1,423 @@
+//! Multi-job tenancy bench: three CI-gated bars over the shared
+//! substrate (one device, one submission queue, one pinned arena), all
+//! at the optimizer level so the full bench runs on plain CI runners
+//! (no AOT artifacts needed):
+//!
+//! 1. **Solo-vs-shared byte identity (CI-gated)** — each of three jobs
+//!    runs the same deterministic step sequence once alone on its own
+//!    stack and once as a co-tenant ([`memascend::jobs::ScopedEngine`]
+//!    key prefixes, namespaced arena, weighted lanes, concurrent
+//!    threads under a [`memascend::jobs::JobRegistry`]).  Every stored
+//!    stream (master/m/v/fp16) must be byte-identical between the two
+//!    runs, and the per-namespace charged bytes must sum to the shared
+//!    arena's global ledger exactly.
+//! 2. **Weighted-fair service share (CI-gated)** — a single-worker
+//!    executor with a held-back backlog: two jobs at weights 3:1
+//!    enqueue equal-cost tasks while the worker is blocked, then the
+//!    DWRR drain order is recorded.  In the contended prefix the
+//!    served-task ratio must track the weight ratio within 20%
+//!    (deterministic: all arrivals precede the first dispatch), and
+//!    every task must complete (work conservation).
+//! 3. **Fault isolation (CI-gated)** — two co-tenants; one gets a
+//!    persistent injected NVMe fault under the bounded retry layer.
+//!    Only that job may fail: the registry must report it `Failed`
+//!    with exactly one `JobFailed` event, while the clean co-tenant
+//!    finishes and stays byte-identical to its solo reference.
+//!
+//! Emits `bench_out/BENCH_tenancy.json`.
+
+mod common;
+
+use std::sync::{mpsc, Arc, Mutex};
+
+use memascend::jobs::{JobRegistry, JobState, ScopedEngine};
+use memascend::metrics::StepMetrics;
+use memascend::optimizer::{step_groups_tiled, AdamParams, OptimState, StateDtype};
+use memascend::pinned::{
+    AlignedAllocator, ArenaConfig, MemoryTracker, Mode, PinnedArena, MAX_NAMESPACES,
+};
+use memascend::ssd::{
+    AsyncEngine, DirectEngine, FaultyEngine, IoExecutor, IoSnapshot, JobId,
+    NvmeEngine, OpMask, RetryEngine, RetryPolicy,
+};
+use memascend::util::bench::Table;
+use memascend::util::events::{EventKind, EventSink, MemorySink};
+use memascend::util::json::Json;
+use memascend::util::rng::Xoshiro256;
+use memascend::util::stage::StageExecutor;
+
+const SIZES: [usize; 3] = [150_000, 90_000, 45_000];
+const TILE_BYTES: usize = 64 << 10;
+const DEPTH: usize = 2;
+const STEPS: u64 = 6;
+/// Co-tenants in the identity experiment (device lanes 1..=TENANTS).
+const TENANTS: u16 = 3;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("ma-bten-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn arena() -> Arc<PinnedArena> {
+    PinnedArena::new(
+        Arc::new(AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()))),
+        ArenaConfig::default(),
+    )
+}
+
+fn direct(dir: &std::path::Path) -> Arc<DirectEngine> {
+    Arc::new(DirectEngine::new(dir, 2, 1 << 27, 1).unwrap())
+}
+
+/// Deterministic per-job, per-step gradients: a job's data stream is
+/// identical whether it runs solo or co-tenant.
+fn grads_for(job: u16, step: u64) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::new(((job as u64) << 32) ^ step ^ 0xB0B);
+    SIZES
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+fn init_states(engine: &dyn NvmeEngine, job: u16) -> Vec<OptimState> {
+    let mut rng = Xoshiro256::new(1000 + job as u64);
+    SIZES
+        .iter()
+        .enumerate()
+        .map(|(g, &n)| {
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            OptimState::init(engine, &format!("g{g}"), &vals, StateDtype::F32).unwrap()
+        })
+        .collect()
+}
+
+fn fp16_keys(states: &[OptimState]) -> Vec<String> {
+    states.iter().map(|s| format!("{}/fp16", s.group)).collect()
+}
+
+fn one_step(
+    aio: &AsyncEngine,
+    stage: &StageExecutor,
+    arena: &Arc<PinnedArena>,
+    states: &[OptimState],
+    t: u64,
+    job: u16,
+) -> anyhow::Result<()> {
+    let hp = AdamParams { weight_decay: 0.01, ..Default::default() };
+    let grads = grads_for(job, t);
+    let gr: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    step_groups_tiled(
+        aio,
+        stage,
+        arena,
+        states,
+        &gr,
+        &fp16_keys(states),
+        t,
+        1.0,
+        &hp,
+        1,
+        TILE_BYTES,
+        DEPTH,
+    )?;
+    Ok(())
+}
+
+/// All stored streams of every group, read through `engine` — through
+/// a job's [`ScopedEngine`] these are its private key-prefixed copies.
+fn all_bytes(engine: &dyn NvmeEngine) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    for (g, &n) in SIZES.iter().enumerate() {
+        for (key, width) in [
+            (format!("g{g}/master"), 4usize),
+            (format!("g{g}/adam_m"), 4),
+            (format!("g{g}/adam_v"), 4),
+            (format!("g{g}/fp16"), 2),
+        ] {
+            let mut buf = vec![0u8; n * width];
+            engine.read(&key, &mut buf).unwrap();
+            out.push(buf);
+        }
+    }
+    out
+}
+
+/// One job alone on its own full stack: the byte-identity reference.
+fn run_solo(job: u16) -> Vec<Vec<u8>> {
+    let dir = tmp(&format!("solo{job}"));
+    let eng: Arc<dyn NvmeEngine> = direct(&dir);
+    let states = init_states(eng.as_ref(), job);
+    let aio = AsyncEngine::new(eng.clone(), 2);
+    let stage = StageExecutor::new(2);
+    let arena = arena();
+    for t in 1..=STEPS {
+        one_step(&aio, &stage, &arena, &states, t, job).unwrap();
+    }
+    let bytes = all_bytes(eng.as_ref());
+    std::fs::remove_dir_all(&dir).ok();
+    bytes
+}
+
+struct SharedRun {
+    per_job_bytes: Vec<Vec<Vec<u8>>>,
+    all_finished: bool,
+    ns_sum_matches_ledger: bool,
+}
+
+/// All jobs concurrently on ONE device + executor + arena, each through
+/// its scoped view, step loops driven by the registry's threads.
+fn run_shared() -> SharedRun {
+    let dir = tmp("shared");
+    let base: Arc<dyn NvmeEngine> = direct(&dir);
+    let ioq = Arc::new(IoExecutor::new(2));
+    let shared_arena = arena();
+    let stage = Arc::new(StageExecutor::new(2));
+    let sink = MemorySink::new();
+    let reg = JobRegistry::new(sink.clone() as Arc<dyn EventSink>);
+    for j in 1..=TENANTS {
+        let job = JobId(j);
+        // distinct weights: shares differ, bytes must not
+        ioq.set_weight(job, j as u32);
+        let scoped: Arc<dyn NvmeEngine> = Arc::new(ScopedEngine::new(base.clone(), job));
+        let states = init_states(scoped.as_ref(), j);
+        let aio = AsyncEngine::with_executor(scoped, ioq.clone()).for_job(job);
+        let ns = shared_arena.namespace(job.lane() as u32);
+        let stage = stage.clone();
+        reg.spawn(&format!("tenant{j}"), job, STEPS, move |t| {
+            one_step(&aio, &stage, &ns, &states, t + 1, j)?;
+            Ok(StepMetrics { step: t + 1, ..Default::default() })
+        });
+    }
+    reg.join_all();
+    let all_finished =
+        (1..=TENANTS).all(|j| reg.state(JobId(j)) == Some(JobState::Finished));
+    let per_job_bytes = (1..=TENANTS)
+        .map(|j| {
+            let scoped = ScopedEngine::new(base.clone(), JobId(j));
+            all_bytes(&scoped)
+        })
+        .collect();
+    let ns_sum: usize = (0..MAX_NAMESPACES)
+        .map(|ns| shared_arena.ns_stats(ns).charged)
+        .sum();
+    let ns_sum_matches_ledger = ns_sum == shared_arena.stats().reserved_bytes;
+    std::fs::remove_dir_all(&dir).ok();
+    SharedRun { per_job_bytes, all_finished, ns_sum_matches_ledger }
+}
+
+struct FairResult {
+    served_heavy: usize,
+    served_light: usize,
+    ratio: f64,
+    conserved: bool,
+    snap: IoSnapshot,
+}
+
+/// Deterministic DWRR drain: enqueue the whole contended backlog while
+/// a single worker is parked on a blocker task, then record the order.
+fn run_fairshare() -> FairResult {
+    const PER_JOB: usize = 40;
+    const COST: u64 = 32 * 1024; // half a quantum unit
+    let exec = Arc::new(IoExecutor::new(1));
+    let (heavy, light) = (JobId(1), JobId(2));
+    exec.set_weight(heavy, 3);
+    exec.set_weight(light, 1);
+    let (started_tx, started_rx) = mpsc::channel();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    exec.submit(move || {
+        started_tx.send(()).unwrap();
+        release_rx.recv().unwrap();
+    });
+    started_rx.recv().unwrap(); // the worker is parked; arrivals below all precede dispatch
+    let order: Arc<Mutex<Vec<u16>>> = Arc::new(Mutex::new(Vec::new()));
+    let (done_tx, done_rx) = mpsc::channel();
+    for _ in 0..PER_JOB {
+        for job in [heavy, light] {
+            let order = order.clone();
+            let done = done_tx.clone();
+            exec.submit_for(job, COST, move || {
+                order.lock().unwrap().push(job.0);
+                done.send(()).unwrap();
+            });
+        }
+    }
+    release_tx.send(()).unwrap();
+    for _ in 0..PER_JOB * 2 {
+        done_rx.recv().unwrap();
+    }
+    let order = order.lock().unwrap().clone();
+    // contended prefix: both lanes still backlogged for the first
+    // PER_JOB dispatches (5 full DWRR rounds at these costs/weights)
+    let served_heavy = order[..PER_JOB].iter().filter(|&&j| j == heavy.0).count();
+    let served_light = PER_JOB - served_heavy;
+    let ratio = served_heavy as f64 / served_light.max(1) as f64;
+    let mut snap = IoSnapshot::default();
+    exec.fill_job_lanes(&mut snap);
+    let conserved = order.len() == PER_JOB * 2
+        && snap.job_ops[heavy.lane()] == PER_JOB as u64
+        && snap.job_ops[light.lane()] == PER_JOB as u64;
+    FairResult { served_heavy, served_light, ratio, conserved, snap }
+}
+
+struct IsoResult {
+    clean_finished: bool,
+    faulted_failed: bool,
+    one_failure_event_on_faulted_job: bool,
+    co_tenant_identical: bool,
+}
+
+/// One clean tenant + one tenant whose every data op fails persistently
+/// under the bounded retry layer; only the faulted job may abort.
+fn run_isolation(clean_solo_ref: &[Vec<u8>]) -> IsoResult {
+    let dir = tmp("iso");
+    let base: Arc<dyn NvmeEngine> = direct(&dir);
+    let ioq = Arc::new(IoExecutor::new(2));
+    let shared_arena = arena();
+    let stage = Arc::new(StageExecutor::new(2));
+    let sink = MemorySink::new();
+    let reg = JobRegistry::new(sink.clone() as Arc<dyn EventSink>);
+    {
+        let job = JobId(1);
+        let scoped: Arc<dyn NvmeEngine> = Arc::new(ScopedEngine::new(base.clone(), job));
+        let states = init_states(scoped.as_ref(), 1);
+        let aio = AsyncEngine::with_executor(scoped, ioq.clone()).for_job(job);
+        let ns = shared_arena.namespace(job.lane() as u32);
+        let stage = stage.clone();
+        reg.spawn("clean", job, STEPS, move |t| {
+            one_step(&aio, &stage, &ns, &states, t + 1, 1)?;
+            Ok(StepMetrics { step: t + 1, ..Default::default() })
+        });
+    }
+    {
+        let job = JobId(2);
+        let scoped: Arc<dyn NvmeEngine> = Arc::new(ScopedEngine::new(base.clone(), job));
+        let faulty: Arc<dyn NvmeEngine> =
+            Arc::new(FaultyEngine::transient(scoped, u32::MAX, OpMask::DATA));
+        let retried: Arc<dyn NvmeEngine> =
+            Arc::new(RetryEngine::new(faulty, RetryPolicy::attempts(3)));
+        reg.spawn("faulted", job, STEPS, move |_| {
+            // the job's first unit of work: initialize its states
+            // through its (broken) storage view — retry exhausts, the
+            // error fails this job and nothing else
+            let mut rng = Xoshiro256::new(7);
+            let vals: Vec<f32> = (0..1024).map(|_| rng.normal() as f32).collect();
+            OptimState::init(retried.as_ref(), "g0", &vals, StateDtype::F32)?;
+            Ok(StepMetrics::default())
+        });
+    }
+    reg.join_all();
+    let failures: Vec<_> = sink
+        .events()
+        .into_iter()
+        .filter(|e| e.kind == EventKind::JobFailed)
+        .collect();
+    let scoped1 = ScopedEngine::new(base.clone(), JobId(1));
+    let out = IsoResult {
+        clean_finished: reg.state(JobId(1)) == Some(JobState::Finished),
+        faulted_failed: reg.state(JobId(2)) == Some(JobState::Failed),
+        one_failure_event_on_faulted_job: failures.len() == 1
+            && failures[0].job == JobId(2),
+        co_tenant_identical: all_bytes(&scoped1) == clean_solo_ref,
+    };
+    std::fs::remove_dir_all(&dir).ok();
+    out
+}
+
+fn main() {
+    // --- experiment 1: solo references, then the shared co-tenant run
+    let solo: Vec<Vec<Vec<u8>>> = (1..=TENANTS).map(run_solo).collect();
+    let shared = run_shared();
+    let identical: Vec<bool> = solo
+        .iter()
+        .zip(&shared.per_job_bytes)
+        .map(|(a, b)| a == b)
+        .collect();
+    let mut t = Table::new(vec!["job", "weight", "solo==shared", "state finished"]);
+    for j in 0..TENANTS as usize {
+        t.row(vec![
+            format!("tenant{}", j + 1),
+            (j + 1).to_string(),
+            identical[j].to_string(),
+            shared.all_finished.to_string(),
+        ]);
+    }
+    common::emit("bench_tenancy_identity", "co-tenant byte identity (CI-gated)", &t);
+
+    // --- experiment 2: weighted-fair drain order
+    let fair = run_fairshare();
+    let mut t2 = Table::new(vec!["lane", "weight", "served in contended prefix", "bytes total"]);
+    t2.row(vec![
+        "heavy".into(),
+        "3".into(),
+        fair.served_heavy.to_string(),
+        fair.snap.job_bytes[JobId(1).lane()].to_string(),
+    ]);
+    t2.row(vec![
+        "light".into(),
+        "1".into(),
+        fair.served_light.to_string(),
+        fair.snap.job_bytes[JobId(2).lane()].to_string(),
+    ]);
+    common::emit("bench_tenancy_fairshare", "DWRR service shares (CI-gated)", &t2);
+
+    // --- experiment 3: fault isolation
+    let iso = run_isolation(&solo[0]);
+
+    std::fs::create_dir_all(common::OUT_DIR).ok();
+    let out = Json::obj(vec![
+        ("tenants", Json::from(TENANTS as u64)),
+        ("steps", Json::from(STEPS)),
+        (
+            "identity_per_job",
+            Json::Arr(identical.iter().map(|&b| Json::from(b)).collect()),
+        ),
+        ("all_jobs_finished", Json::from(shared.all_finished)),
+        ("ns_charges_sum_to_ledger", Json::from(shared.ns_sum_matches_ledger)),
+        ("fair_weight_ratio", Json::from(3.0)),
+        ("fair_served_ratio", Json::from(fair.ratio)),
+        ("fair_work_conserving", Json::from(fair.conserved)),
+        ("isolation_clean_finished", Json::from(iso.clean_finished)),
+        ("isolation_faulted_failed", Json::from(iso.faulted_failed)),
+        (
+            "isolation_single_failure_event",
+            Json::from(iso.one_failure_event_on_faulted_job),
+        ),
+        ("isolation_co_tenant_identical", Json::from(iso.co_tenant_identical)),
+    ]);
+    let path = format!("{}/BENCH_tenancy.json", common::OUT_DIR);
+    match std::fs::write(&path, out.to_string()) {
+        Ok(()) => println!("[json] {path}"),
+        Err(e) => eprintln!("warn: could not write {path}: {e}"),
+    }
+
+    println!(
+        "byte identity solo vs shared: {identical:?}; ns charges sum to ledger: {}",
+        shared.ns_sum_matches_ledger
+    );
+    println!(
+        "weighted-fair contended share: {}:{} (ratio {:.2}, target 3.00 +/- 20%); conserved: {}",
+        fair.served_heavy, fair.served_light, fair.ratio, fair.conserved
+    );
+    println!(
+        "fault isolation: clean finished {} / faulted failed {} / single event {} / co-tenant identical {}",
+        iso.clean_finished, iso.faulted_failed, iso.one_failure_event_on_faulted_job,
+        iso.co_tenant_identical
+    );
+
+    // CI gates
+    assert!(identical.iter().all(|&b| b), "solo-vs-shared byte identity violated");
+    assert!(shared.all_finished, "a co-tenant did not finish");
+    assert!(shared.ns_sum_matches_ledger, "namespace charges diverged from the ledger");
+    assert!(
+        (fair.ratio - 3.0).abs() / 3.0 <= 0.20,
+        "served ratio {:.2} off the 3:1 weights by more than 20%",
+        fair.ratio
+    );
+    assert!(fair.conserved, "DWRR dropped or duplicated work");
+    assert!(iso.clean_finished, "clean co-tenant was dragged down");
+    assert!(iso.faulted_failed, "persistently faulted job did not fail");
+    assert!(iso.one_failure_event_on_faulted_job, "failure events misattributed");
+    assert!(iso.co_tenant_identical, "co-tenant bytes diverged under a neighbor's fault");
+    println!("ACCEPTANCE: PASS");
+}

@@ -1,5 +1,9 @@
 //! Shared bench scaffolding: paper-vs-measured table output + CSV dump.
 
+// each bench binary compiles its own copy; not every bench uses
+// every helper
+#![allow(dead_code)]
+
 use memascend::util::bench::Table;
 
 pub const OUT_DIR: &str = "bench_out";

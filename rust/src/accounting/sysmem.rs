@@ -82,6 +82,13 @@ pub fn peak_sysmem(
     train: &TrainSpec,
     _hw: &HardwareSpec,
 ) -> SysMemBreakdown {
+    let (tracker, arena) = replay_arena(train);
+    replay_into(&arena, &tracker, spec, train)
+}
+
+/// Build the Virtual-mode replay arena (policy allocator selected by
+/// the flags) shared by one or more namespaced replays.
+pub fn replay_arena(train: &TrainSpec) -> (Arc<MemoryTracker>, Arc<PinnedArena>) {
     let tracker = Arc::new(MemoryTracker::new());
     let memascend_alloc = train.flags.alignment_free;
     let alloc: Arc<dyn HostAllocator> = if memascend_alloc {
@@ -92,7 +99,20 @@ pub fn peak_sysmem(
         Arc::new(a) as Arc<dyn HostAllocator>
     };
     // unbudgeted: this is the measurement of what a run *would* need
-    let arena = PinnedArena::new(alloc, ArenaConfig::default());
+    (tracker.clone(), PinnedArena::new(alloc, ArenaConfig::default()))
+}
+
+/// Replay one job's iteration leases through `arena` — pass the root
+/// arena for the classic single-job model, or a
+/// [`PinnedArena::namespace`] view to simulate one tenant of a shared
+/// arena (its charged bytes are then attributed to that namespace,
+/// and per-namespace mirrors keep summing to the ledger bit for bit).
+pub fn replay_into(
+    arena: &Arc<PinnedArena>,
+    tracker: &Arc<MemoryTracker>,
+    spec: &ModelSpec,
+    train: &TrainSpec,
+) -> SysMemBreakdown {
     let uncapped = |r: Result<crate::pinned::Lease, crate::pinned::ArenaError>| {
         r.expect("unbudgeted arena cannot refuse")
     };
@@ -114,12 +134,12 @@ pub fn peak_sysmem(
     let dtype = train.precision.compute_dtype();
     let pool: Box<dyn ParamBufferPool> = if train.flags.adaptive_pool {
         Box::new(
-            AdaptivePool::new(spec, train.prefetch_depth, dtype, &arena)
+            AdaptivePool::new(spec, train.prefetch_depth, dtype, arena)
                 .expect("unbudgeted arena cannot refuse"),
         )
     } else {
         Box::new(
-            MonolithicPool::new(spec, train.prefetch_depth, dtype, &arena)
+            MonolithicPool::new(spec, train.prefetch_depth, dtype, arena)
                 .expect("unbudgeted arena cannot refuse"),
         )
     };
@@ -398,6 +418,45 @@ mod tests {
                 "PoolStats.pool_bytes diverged from arena ParamPool demand"
             );
         }
+    }
+
+    #[test]
+    fn two_namespaced_replays_sum_to_the_shared_ledger_bit_for_bit() {
+        // tenancy version of the watermark invariant: two jobs replay
+        // their iterations through namespaced views of ONE shared
+        // arena; every byte each job pins is attributed to its
+        // namespace, and the per-namespace charges always sum to the
+        // global ledger exactly — nothing double-counted, nothing lost
+        let mut t = spec_fig8();
+        t.flags = MemAscendFlags::memascend();
+        let (tracker, arena) = replay_arena(&t);
+        let j1 = arena.namespace(1);
+        let j2 = arena.namespace(2);
+        let check_sum = |arena: &std::sync::Arc<crate::pinned::PinnedArena>, when: &str| {
+            let total: usize = (0..crate::pinned::MAX_NAMESPACES)
+                .map(|ns| arena.ns_stats(ns).charged)
+                .sum();
+            assert_eq!(
+                total,
+                arena.stats().reserved_bytes,
+                "namespace charges diverged from the ledger {when}"
+            );
+        };
+        let b1 = replay_into(&j1, &tracker, &QWEN25_7B, &t);
+        check_sum(&arena, "after job 1's replay");
+        let b2 = replay_into(&j2, &tracker, &QWEN25_7B, &t);
+        check_sum(&arena, "after job 2's replay");
+        // both tenants' demand is attributed, host namespace untouched.
+        // j1 pins every segment fresh; j2 replays the same shapes and
+        // recycles j1's released extents — the *charge* stays with the
+        // pinning namespace (ns 1), while j2's live demand is metered
+        // under its own (requested/leases)
+        let (ns1, ns2) = (arena.ns_stats(1), arena.ns_stats(2));
+        assert!(ns1.charged_peak > 0, "job 1 pinned nothing?");
+        assert!(ns2.requested_peak > 0 && ns2.leases > 0, "job 2 unmetered");
+        assert!(ns2.recycled > 0, "job 2 should recycle job 1's extents");
+        assert_eq!(arena.ns_stats(0).charged, 0, "no bytes may leak to the host ns");
+        assert!(b1.peak_total > 0 && b2.peak_total > 0);
     }
 
     #[test]

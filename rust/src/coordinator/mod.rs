@@ -4,13 +4,19 @@
 //! flags, build specs, run, render tables.  `main.rs` dispatches here.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::accounting::{self, sysmem};
 use crate::config::{HardwareSpec, MemAscendFlags, ModelSpec, Precision, TrainSpec};
+use crate::jobs::{FleetConfig, FleetGovernor, JobCtx, JobRegistry, JobState};
+use crate::offload::{JobFault, OffloadEngine};
+use crate::ssd::{JobId, MAX_JOB_LANES};
 use crate::train::{TrainOpts, Trainer};
 use crate::util::bench::Table;
 use crate::util::cli::{Args, Command};
+use crate::util::events::{EventSink, StderrSink};
 use crate::util::human;
+use crate::util::json::Json;
 
 pub fn commands() -> Vec<Command> {
     vec![
@@ -72,6 +78,39 @@ pub fn commands() -> Vec<Command> {
             .opt("storage", "", "SSD-sim directory (default: temp)")
             .opt("loss-csv", "", "write the loss curve CSV here")
             .opt("log-every", "10", "progress cadence"),
+        Command::new("multitrain", "run N co-tenant fine-tuning jobs on one shared offload stack")
+            .opt(
+                "jobs",
+                "",
+                "job-spec JSON path: {\"jobs\":[{\"name\",\"weight\",\"steps\",\"seed\",\"fault\"},..]} \
+                 or a bare array; empty = two unit-weight jobs",
+            )
+            .opt("model", "smoke", "artifact config (smoke|tiny25m|tiny100m)")
+            .opt("steps", "20", "default steps per job (a job spec entry overrides)")
+            .opt("mode", "memascend", "memascend|zero-infinity")
+            .opt("ranks", "1", "simulated data-parallel ranks (per job)")
+            .opt("precision", "fp16", "mixed precision (fp16|bf16)")
+            .opt("optim", "f32", "optimizer state dtype (f32|bf16)")
+            .opt(
+                "optim-tile-bytes",
+                "4194304",
+                "optimizer tile size in state bytes (0 = whole-group swap)",
+            )
+            .opt(
+                "optim-tile-depth",
+                "2",
+                "tile-pipeline window: fetch/write-back generations in flight",
+            )
+            .flag(
+                "governor",
+                "per-job pipeline governors (the fleet governor overlays its caps either way)",
+            )
+            .opt("ckpt-interval", "0", "per-job checkpoint cadence in steps (0 = off)")
+            .opt("io-retry", "3", "attempts per NVMe op under the retry layer (<=1 = no retries)")
+            .opt("seed", "42", "base seed (job i defaults to seed + i)")
+            .opt("artifacts", "artifacts", "AOT artifacts root")
+            .opt("storage", "", "shared SSD-sim directory (default: temp)")
+            .opt("log-every", "10", "per-job progress cadence (0 = quiet)"),
         Command::new("report-memory", "full-scale peak system-memory breakdown")
             .opt("model", "qwen2.5-7b", "model preset")
             .opt("ctx", "4096", "context length")
@@ -198,6 +237,179 @@ pub fn cmd_train(args: &Args) -> anyhow::Result<()> {
     println!("peak sysmem      {}", human::bytes(report.peak_sysmem_bytes));
     println!("io bytes/step    {}", human::bytes(report.io_bytes_per_step));
     println!("--- memory ledger ---\n{}", trainer.engine.tracker.report());
+    Ok(())
+}
+
+/// One tenant of a `multitrain` run, as parsed from the `--jobs` spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub name: String,
+    /// Weighted-fair scheduling weight and fair-share quota weight.
+    pub weight: u32,
+    pub steps: u64,
+    pub seed: u64,
+    /// Optional per-job NVMe fault injection (chaos drills).
+    pub fault: Option<JobFault>,
+}
+
+/// Parse a `--jobs` spec: `{"jobs": [ {..}, .. ]}` or a bare array.
+/// Per entry: `name` (default `job<i>`), `weight` (default 1),
+/// `steps` (default `default_steps`), `seed` (default `base_seed + i`),
+/// `fault` (`"none"` | `"persistent"` | `"probabilistic"`, with
+/// `fault_per_1024` / `fault_seed` refining the probabilistic case).
+pub fn parse_job_specs(
+    src: &str,
+    default_steps: u64,
+    base_seed: u64,
+) -> anyhow::Result<Vec<JobSpec>> {
+    let root = Json::parse(src).map_err(|e| anyhow::anyhow!("--jobs spec: {e}"))?;
+    let arr = root
+        .get("jobs")
+        .unwrap_or(&root)
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("--jobs spec: expected an array or {{\"jobs\": [..]}}"))?;
+    anyhow::ensure!(!arr.is_empty(), "--jobs spec: no jobs listed");
+    anyhow::ensure!(
+        arr.len() < MAX_JOB_LANES,
+        "--jobs spec: {} jobs, but only {} tenant lanes (lane 0 is the host)",
+        arr.len(),
+        MAX_JOB_LANES - 1
+    );
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, o) in arr.iter().enumerate() {
+        let seed = o.get("seed").and_then(Json::as_u64).unwrap_or(base_seed + i as u64);
+        let fault = match o.get("fault").and_then(Json::as_str).unwrap_or("none") {
+            "none" => None,
+            "persistent" => Some(JobFault::Persistent),
+            "probabilistic" | "transient" => Some(JobFault::Probabilistic {
+                per_1024: o.get("fault_per_1024").and_then(Json::as_u64).unwrap_or(8),
+                seed: o.get("fault_seed").and_then(Json::as_u64).unwrap_or(seed),
+            }),
+            other => anyhow::bail!(
+                "--jobs spec: unknown fault '{other}' (none|persistent|probabilistic)"
+            ),
+        };
+        out.push(JobSpec {
+            name: o
+                .get("name")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("job{}", i + 1)),
+            weight: o.get("weight").and_then(Json::as_u64).unwrap_or(1).max(1) as u32,
+            steps: o.get("steps").and_then(Json::as_u64).unwrap_or(default_steps),
+            seed,
+            fault,
+        });
+    }
+    Ok(out)
+}
+
+pub fn cmd_multitrain(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "smoke").to_string();
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts")).join(&model);
+    let storage = match args.get_or("storage", "") {
+        "" => std::env::temp_dir().join(format!("memascend-mt-{}", std::process::id())),
+        s => PathBuf::from(s),
+    };
+    std::fs::create_dir_all(&storage)?;
+    let manifest = crate::runtime::Manifest::load(&artifacts.join("manifest.json"))?;
+    let mut train = train_spec_from_args(args, manifest.config.batch, manifest.config.seq)?;
+    if train.precision == Precision::MixedBF16 {
+        train.init_loss_scale = 1.0;
+    }
+    let default_steps = args.get_usize("steps", 20)? as u64;
+    let base_seed = args.get_usize("seed", 42)? as u64;
+    let log_every = args.get_usize("log-every", 10)? as u64;
+    let jobs = match args.get_or("jobs", "") {
+        "" => parse_job_specs(r#"[{}, {}]"#, default_steps, base_seed)?,
+        p => parse_job_specs(
+            &std::fs::read_to_string(p)
+                .map_err(|e| anyhow::anyhow!("--jobs {p}: {e}"))?,
+            default_steps,
+            base_seed,
+        )?,
+    };
+    let rt = Trainer::load_runtime(&artifacts, &train)?;
+    let spec = rt.manifest().model_spec()?;
+    // one shared substrate: arena + device + submission queue + stage
+    let engine = OffloadEngine::new_shared(spec, &train, &storage, jobs.len())?;
+    let sink: Arc<dyn EventSink> = Arc::new(StderrSink);
+    let fleet = FleetGovernor::new(engine.arena.clone(), engine.ioq.clone(), FleetConfig::default());
+    let registry = JobRegistry::new(sink.clone());
+    eprintln!(
+        "multitrain {model} [{}]: {} jobs on one engine (weights {:?})",
+        train.flags.label(),
+        jobs.len(),
+        jobs.iter().map(|j| j.weight).collect::<Vec<_>>()
+    );
+    let interval = train.ckpt_interval_steps as u64;
+    for (i, js) in jobs.iter().enumerate() {
+        let job = JobId((i + 1) as u16);
+        fleet.register(job, js.weight);
+        let view = engine.job_view(spec, &train, job, js.fault)?;
+        let opts = TrainOpts {
+            steps: js.steps as usize,
+            seed: js.seed,
+            log_every: 0,
+            loss_csv: None,
+        };
+        let ctx = JobCtx::new(job, sink.clone()).with_fleet(fleet.clone());
+        let (rt, train, name) = (rt.clone(), train.clone(), js.name.clone());
+        // the trainer is built lazily on the job's own thread, so a
+        // tenant whose storage is broken (e.g. an injected persistent
+        // fault) fails *its* job at step 0 instead of aborting the fleet
+        let mut view = Some(view);
+        let mut tr: Option<Trainer> = None;
+        registry.spawn(&js.name, job, js.steps, move |_| {
+            if tr.is_none() {
+                let v = view.take().expect("trainer already failed to build");
+                tr = Some(Trainer::with_engine(rt.clone(), v, train.clone(), &opts, ctx.clone())?);
+            }
+            let t = tr.as_mut().expect("just built");
+            let idx = t.steps_done() + 1;
+            let mut m = t.step(idx)?;
+            if interval > 0 && idx % interval == 0 {
+                m.ckpt_secs = t
+                    .checkpoint()
+                    .map_err(|e| e.context(format!("checkpoint commit failed after step {idx}")))?;
+            }
+            if log_every > 0 && idx % log_every == 0 {
+                eprintln!("[{name}] step {idx:>4}  loss {:.4}  {:.2}s", m.loss, m.step_secs);
+            }
+            Ok(m)
+        });
+    }
+    registry.join_all();
+    let mut snap = engine.base.stats();
+    engine.ioq.fill_job_lanes(&mut snap);
+    let mut t = Table::new(vec![
+        "job", "weight", "state", "steps", "mean loss", "io share", "io busy",
+    ]);
+    let mut failed_unexpectedly = Vec::new();
+    for (i, js) in jobs.iter().enumerate() {
+        let job = JobId((i + 1) as u16);
+        let state = registry.state(job).unwrap_or(JobState::Stopped);
+        let rollup = registry.rollup(job).unwrap_or_default();
+        if state == JobState::Failed && js.fault.is_none() {
+            failed_unexpectedly.push(js.name.clone());
+        }
+        t.row(vec![
+            js.name.clone(),
+            js.weight.to_string(),
+            format!("{state:?}"),
+            rollup.steps.to_string(),
+            format!("{:.4}", rollup.mean_loss()),
+            format!("{:.2}", snap.job_share(job)),
+            human::secs(snap.job_busy_secs(job)),
+        ]);
+    }
+    println!("=== multitrain report ===");
+    println!("{}", t.render());
+    println!("--- shared memory ledger ---\n{}", engine.tracker.report());
+    anyhow::ensure!(
+        failed_unexpectedly.is_empty(),
+        "jobs failed without injected faults: {failed_unexpectedly:?}"
+    );
     Ok(())
 }
 
@@ -367,6 +579,7 @@ pub fn dispatch(cmd: &str, argv: &[String]) -> anyhow::Result<()> {
             let args = spec.parse(argv)?;
             match cmd {
                 "train" => cmd_train(&args),
+                "multitrain" => cmd_multitrain(&args),
                 "report-memory" => cmd_report_memory(&args),
                 "inventory" => cmd_inventory(&args),
                 "perf-model" => cmd_perf_model(&args),
@@ -387,6 +600,56 @@ mod tests {
         assert_eq!(parse_mode("memascend").unwrap(), MemAscendFlags::memascend());
         assert_eq!(parse_mode("zi").unwrap(), MemAscendFlags::baseline());
         assert!(parse_mode("fast").is_err());
+    }
+
+    #[test]
+    fn job_spec_parsing_defaults_and_faults() {
+        let js = parse_job_specs(
+            r#"{"jobs": [
+                {"name": "big", "weight": 3, "steps": 12},
+                {"seed": 7, "fault": "persistent"},
+                {"fault": "probabilistic", "fault_per_1024": 16}
+            ]}"#,
+            20,
+            100,
+        )
+        .unwrap();
+        assert_eq!(js.len(), 3);
+        assert_eq!(js[0].name, "big");
+        assert_eq!((js[0].weight, js[0].steps, js[0].seed), (3, 12, 100));
+        assert!(js[0].fault.is_none());
+        assert_eq!(js[1].name, "job2");
+        assert_eq!(js[1].seed, 7);
+        assert!(matches!(js[1].fault, Some(JobFault::Persistent)));
+        assert!(matches!(
+            js[2].fault,
+            Some(JobFault::Probabilistic { per_1024: 16, seed: 102 })
+        ));
+        // bare-array form, all defaults
+        let js = parse_job_specs("[{}, {}]", 5, 1).unwrap();
+        assert_eq!(js[1], JobSpec {
+            name: "job2".into(),
+            weight: 1,
+            steps: 5,
+            seed: 2,
+            fault: None,
+        });
+        // rejects: garbage, empty, too many lanes, unknown fault kinds
+        assert!(parse_job_specs("{", 1, 1).is_err());
+        assert!(parse_job_specs("[]", 1, 1).is_err());
+        assert!(parse_job_specs(&format!("[{}]", vec!["{}"; 99].join(",")), 1, 1).is_err());
+        assert!(parse_job_specs(r#"[{"fault": "meteor"}]"#, 1, 1).is_err());
+    }
+
+    #[test]
+    fn multitrain_command_is_registered() {
+        let cmds = commands();
+        let spec = cmds.iter().find(|c| c.name == "multitrain").unwrap();
+        let args = spec
+            .parse(&["--steps".to_string(), "3".to_string()])
+            .unwrap();
+        assert_eq!(args.get_usize("steps", 0).unwrap(), 3);
+        assert_eq!(args.get_or("jobs", "x"), "");
     }
 
     #[test]

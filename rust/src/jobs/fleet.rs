@@ -1,0 +1,294 @@
+//! The fleet governor: cross-job arbitration over shared resources.
+//!
+//! Each trainer already has a [`PipelineGovernor`] tuning its own
+//! windows against *global* pressure signals — but a per-job governor
+//! cannot tell "I am the problem" from "my co-tenant is".  Left alone,
+//! N per-job governors all see the same saturated arena and all shrink
+//! (convoy collapse), or the greediest keeps growing while the others
+//! starve.  The [`FleetGovernor`] sits above them:
+//!
+//! - **Registration** splits the arena budget into weighted fair-share
+//!   namespace quotas (minus a shared-headroom slice any job may
+//!   borrow) and programs the job's weight into the NVMe scheduler.
+//! - **Pressure arbitration**: each job reports its
+//!   [`GovernorSample`] once per step.  When global arena pressure
+//!   crosses the threshold, the governor throttles the *heaviest*
+//!   tenant only — capping its pipeline windows via [`FleetCaps`] and
+//!   revoking its right to new headroom borrows — instead of letting
+//!   every job shrink.
+//! - **Recovery**: a throttled job that stays calm for
+//!   [`FleetConfig::calm_steps`] reports gets its caps doubled back
+//!   toward unlimited, then fully released (borrow right restored).
+//!
+//! Caps are an overlay ([`PipelineGovernor::set_caps`]): the per-job
+//! governor's converged state is never corrupted, so releasing a cap
+//! restores the tuning the job had earned.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::pinned::PinnedArena;
+use crate::ssd::{IoExecutor, JobId};
+use crate::train::{FleetCaps, GovernorSample};
+
+/// Fleet arbitration knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    /// Fraction of the arena budget kept as borrowable shared headroom
+    /// (the rest splits into weighted fair-share quotas).
+    pub headroom_frac: f64,
+    /// Global reserved/budget fraction above which the heaviest tenant
+    /// is throttled.
+    pub pressure_frac: f64,
+    /// Calm (unpressured) reports before a throttled job's caps relax
+    /// one notch.
+    pub calm_steps: u32,
+    /// Depth cap applied on the first throttle notch (halved on each
+    /// further pressure event, floored at 1).
+    pub first_notch_depth: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            headroom_frac: 0.25,
+            pressure_frac: 0.85,
+            calm_steps: 4,
+            first_notch_depth: 8,
+        }
+    }
+}
+
+struct JobEntry {
+    weight: u32,
+    caps: FleetCaps,
+    throttled: bool,
+    calm: u32,
+}
+
+/// Arbitrates per-job [`FleetCaps`] and arena quotas over one shared
+/// [`PinnedArena`] + [`IoExecutor`] pair.
+pub struct FleetGovernor {
+    arena: Arc<PinnedArena>,
+    exec: Arc<IoExecutor>,
+    cfg: FleetConfig,
+    jobs: Mutex<HashMap<JobId, JobEntry>>,
+}
+
+impl FleetGovernor {
+    pub fn new(arena: Arc<PinnedArena>, exec: Arc<IoExecutor>, cfg: FleetConfig) -> Arc<Self> {
+        Arc::new(Self {
+            arena,
+            exec,
+            cfg,
+            jobs: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Admit a job with a scheduling/memory weight.  Reprograms the
+    /// NVMe scheduler lane weight and re-splits the arena budget into
+    /// fair-share quotas across every registered job (no-op on an
+    /// unbudgeted arena — nothing to ration).
+    pub fn register(&self, job: JobId, weight: u32) {
+        let weight = weight.max(1);
+        self.exec.set_weight(job, weight);
+        let mut jobs = self.jobs.lock().unwrap();
+        jobs.insert(
+            job,
+            JobEntry {
+                weight,
+                caps: FleetCaps::unlimited(),
+                throttled: false,
+                calm: 0,
+            },
+        );
+        self.resplit(&jobs);
+    }
+
+    /// Remove a job (its quota share redistributes to the others).
+    pub fn deregister(&self, job: JobId) {
+        let mut jobs = self.jobs.lock().unwrap();
+        if jobs.remove(&job).is_some() {
+            self.arena.set_ns_quota(job.lane(), None);
+            self.arena.set_ns_revoked(job.lane(), false);
+            self.resplit(&jobs);
+        }
+    }
+
+    fn resplit(&self, jobs: &HashMap<JobId, JobEntry>) {
+        let Some(budget) = self.arena.budget_bytes() else {
+            return;
+        };
+        let headroom = (budget as f64 * self.cfg.headroom_frac) as usize;
+        self.arena.set_shared_headroom(headroom);
+        let pool = budget - headroom;
+        let total_w: u64 = jobs.values().map(|e| u64::from(e.weight)).sum();
+        if total_w == 0 {
+            return;
+        }
+        for (job, e) in jobs {
+            let share = (pool as u128 * u128::from(e.weight) / u128::from(total_w)) as usize;
+            self.arena.set_ns_quota(job.lane(), Some(share));
+        }
+    }
+
+    /// Per-step report from one job's trainer.  Returns the caps the
+    /// job must overlay on its governor (`None` = unlimited).
+    pub fn report(&self, job: JobId, sample: &GovernorSample) -> Option<FleetCaps> {
+        let pressured = sample
+            .arena_budget
+            .is_some_and(|b| sample.arena_reserved as f64 > self.cfg.pressure_frac * b as f64);
+        let mut jobs = self.jobs.lock().unwrap();
+        if pressured {
+            // Throttle the heaviest tenant only — by charged arena
+            // attribution — so co-tenants keep their earned windows.
+            let heaviest = jobs
+                .keys()
+                .copied()
+                .max_by_key(|j| self.arena.ns_stats(j.lane()).charged)
+                .unwrap_or(job);
+            if let Some(e) = jobs.get_mut(&heaviest) {
+                if e.throttled {
+                    e.caps.max_tile_depth = (e.caps.max_tile_depth / 2).max(1);
+                    e.caps.max_prefetch_depth = (e.caps.max_prefetch_depth / 2).max(1);
+                } else {
+                    e.throttled = true;
+                    e.caps = FleetCaps {
+                        max_tile_depth: self.cfg.first_notch_depth,
+                        max_prefetch_depth: self.cfg.first_notch_depth,
+                        max_act_budget: usize::MAX,
+                    };
+                }
+                e.calm = 0;
+                self.arena.set_ns_revoked(heaviest.lane(), true);
+            }
+        } else if let Some(e) = jobs.get_mut(&job) {
+            if e.throttled {
+                e.calm += 1;
+                if e.calm >= self.cfg.calm_steps {
+                    e.calm = 0;
+                    let relaxed = e.caps.max_tile_depth.saturating_mul(2);
+                    if relaxed >= self.cfg.first_notch_depth {
+                        e.throttled = false;
+                        e.caps = FleetCaps::unlimited();
+                        self.arena.set_ns_revoked(job.lane(), false);
+                    } else {
+                        e.caps.max_tile_depth = relaxed;
+                        e.caps.max_prefetch_depth =
+                            e.caps.max_prefetch_depth.saturating_mul(2);
+                    }
+                }
+            }
+        }
+        let e = jobs.get(&job)?;
+        e.throttled.then_some(e.caps)
+    }
+
+    /// Current caps for a job without reporting a sample.
+    pub fn caps(&self, job: JobId) -> Option<FleetCaps> {
+        let jobs = self.jobs.lock().unwrap();
+        let e = jobs.get(&job)?;
+        e.throttled.then_some(e.caps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pinned::{AlignedAllocator, ArenaConfig, Cat, MemoryTracker, Mode};
+
+    fn arena(budget: Option<usize>) -> Arc<PinnedArena> {
+        let tracker = Arc::new(MemoryTracker::new());
+        let alloc = AlignedAllocator::new(Mode::Virtual, tracker);
+        PinnedArena::new(
+            Arc::new(alloc),
+            ArenaConfig { budget_bytes: budget, ..Default::default() },
+        )
+    }
+
+    fn rig(budget: usize) -> (Arc<PinnedArena>, Arc<IoExecutor>) {
+        (arena(Some(budget)), Arc::new(IoExecutor::new(1)))
+    }
+
+    fn sample(reserved: usize, budget: Option<usize>) -> GovernorSample {
+        GovernorSample {
+            arena_reserved: reserved,
+            arena_budget: budget,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn registration_splits_budget_by_weight_minus_headroom() {
+        let budget = 1 << 20;
+        let (arena, exec) = rig(budget);
+        let fleet = FleetGovernor::new(Arc::clone(&arena), exec, FleetConfig::default());
+        fleet.register(JobId(1), 3);
+        fleet.register(JobId(2), 1);
+        let pool = budget - (budget as f64 * 0.25) as usize;
+        assert_eq!(arena.ns_stats(1).quota, Some(pool * 3 / 4));
+        assert_eq!(arena.ns_stats(2).quota, Some(pool / 4));
+        // host namespace keeps its unlimited default
+        assert_eq!(arena.ns_stats(0).quota, None);
+    }
+
+    #[test]
+    fn pressure_throttles_only_the_heaviest_tenant() {
+        let budget = 1 << 20;
+        let (arena, exec) = rig(budget);
+        let fleet = FleetGovernor::new(Arc::clone(&arena), exec, FleetConfig::default());
+        fleet.register(JobId(1), 1);
+        fleet.register(JobId(2), 1);
+        // make j1 the heavy tenant by holding a live lease in ns 1
+        let j1_arena = arena.namespace(1);
+        let _lease = j1_arena.lease(512 * 1024, Cat::Other).unwrap();
+        let hot = sample((0.9 * budget as f64) as usize, Some(budget));
+        // j2 reports pressure: the *heaviest* (j1) gets capped, not j2
+        assert_eq!(fleet.report(JobId(2), &hot), None);
+        let caps = fleet.caps(JobId(1)).expect("heaviest job must be capped");
+        assert_eq!(caps.max_tile_depth, 8);
+        assert!(arena.ns_stats(1).revoked, "throttled job loses borrow right");
+        assert!(!arena.ns_stats(2).revoked);
+        // repeated pressure halves the notch, floored at 1
+        for _ in 0..5 {
+            fleet.report(JobId(2), &hot);
+        }
+        assert_eq!(fleet.caps(JobId(1)).unwrap().max_tile_depth, 1);
+    }
+
+    #[test]
+    fn calm_streak_relaxes_back_to_unlimited() {
+        let budget = 1 << 20;
+        let (arena, exec) = rig(budget);
+        let cfg = FleetConfig {
+            calm_steps: 2,
+            ..Default::default()
+        };
+        let fleet = FleetGovernor::new(Arc::clone(&arena), exec, cfg);
+        fleet.register(JobId(1), 1);
+        let hot = sample((0.9 * budget as f64) as usize, Some(budget));
+        let cool = sample(0, Some(budget));
+        assert!(fleet.report(JobId(1), &hot).is_some());
+        assert!(arena.ns_stats(1).revoked);
+        // one calm report is not enough; the second relaxes fully
+        // (8 * 2 >= first_notch_depth releases the throttle)
+        assert!(fleet.report(JobId(1), &cool).is_some());
+        assert_eq!(fleet.report(JobId(1), &cool), None);
+        assert!(!arena.ns_stats(1).revoked, "borrow right restored");
+        assert_eq!(fleet.caps(JobId(1)), None);
+    }
+
+    #[test]
+    fn unbudgeted_arena_registers_without_quotas() {
+        let arena = arena(None);
+        let fleet = FleetGovernor::new(
+            Arc::clone(&arena),
+            Arc::new(IoExecutor::new(1)),
+            FleetConfig::default(),
+        );
+        fleet.register(JobId(1), 2);
+        assert_eq!(arena.ns_stats(1).quota, None);
+        // and pressure can never trigger (no budget in the sample)
+        assert_eq!(fleet.report(JobId(1), &sample(usize::MAX >> 1, None)), None);
+    }
+}

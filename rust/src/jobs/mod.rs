@@ -1,0 +1,74 @@
+//! Multi-job tenancy: N fine-tuning jobs sharing one offload stack.
+//!
+//! The single-trainer stack owns three scarce resources — the pinned
+//! arena, the NVMe engine, and the I/O submission queue.  This module
+//! makes all three multi-tenant without changing their solo-run
+//! behavior by one byte.  The tenancy contract has four clauses:
+//!
+//! 1. **Fair share.**  Each job leases pinned memory through a
+//!    namespaced arena view ([`crate::pinned::PinnedArena::namespace`])
+//!    holding a weighted fair-share byte quota, and its NVMe
+//!    submissions ride a deficit-weighted-round-robin scheduler
+//!    ([`crate::ssd::DwrrQueue`]) under the same weight — sustained
+//!    device time converges to the weight ratio.
+//! 2. **Borrowable headroom.**  A slice of the arena budget is held
+//!    back as shared headroom any job may borrow past its quota when
+//!    co-tenants are idle — work-conserving, like the scheduler.
+//! 3. **Revocation degrades, never aborts.**  Under global pressure
+//!    the [`FleetGovernor`] revokes the heaviest job's right to *new*
+//!    borrows and caps its pipeline windows ([`FleetCaps`] overlay on
+//!    its [`crate::train::PipelineGovernor`]).  A refused lease
+//!    surfaces as the same `BudgetExceeded` error the budget always
+//!    produced, so every existing degradation path (smaller tiles,
+//!    synchronous fallback) applies; in-flight borrows drain
+//!    naturally.  No co-tenant is ever aborted to reclaim memory.
+//! 4. **Fault isolation.**  Each job sees the shared SSD through a
+//!    key-prefixed [`ScopedEngine`] view (no key collisions) and runs
+//!    under the [`JobRegistry`], which converts a job's error into a
+//!    `Failed` state plus a [`crate::util::events::EventKind::JobFailed`]
+//!    event — its siblings keep their engines, leases, and schedules.
+//!
+//! [`JobCtx`] is the identity a trainer carries through all of this:
+//! which job it is, where its diagnostics go, and (optionally) which
+//! fleet governor arbitrates its windows.
+
+pub mod fleet;
+pub mod registry;
+pub mod scoped;
+
+pub use fleet::{FleetConfig, FleetGovernor};
+pub use registry::{JobRegistry, JobRollup, JobState};
+pub use scoped::ScopedEngine;
+
+use std::sync::Arc;
+
+use crate::util::events::{EventSink, JobId, StderrSink};
+
+/// A trainer's tenancy identity: job id, event sink, and (for
+/// fleet-managed jobs) the governor arbitrating its pipeline caps.
+/// `JobCtx::default()` is the host identity — solo trainers behave
+/// exactly as before tenancy existed.
+#[derive(Clone)]
+pub struct JobCtx {
+    pub job: JobId,
+    pub events: Arc<dyn EventSink>,
+    pub fleet: Option<Arc<FleetGovernor>>,
+}
+
+impl Default for JobCtx {
+    fn default() -> Self {
+        Self { job: JobId::HOST, events: Arc::new(StderrSink), fleet: None }
+    }
+}
+
+impl JobCtx {
+    /// Identity for tenant `job`, reporting to `events`, unmanaged.
+    pub fn new(job: JobId, events: Arc<dyn EventSink>) -> Self {
+        Self { job, events, fleet: None }
+    }
+
+    pub fn with_fleet(mut self, fleet: Arc<FleetGovernor>) -> Self {
+        self.fleet = Some(fleet);
+        self
+    }
+}

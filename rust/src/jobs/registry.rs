@@ -1,0 +1,311 @@
+//! The job control plane: lifecycle, rollups, and fault isolation.
+//!
+//! A [`JobRegistry`] runs each tenant's step loop on its own thread
+//! and owns the only mutable lifecycle state
+//! ([`JobState`]: running → paused/resumed → stopped/failed/finished).
+//! The isolation contract is structural: a job body's error marks
+//! *that job* `Failed` and emits [`EventKind::JobFailed`] — the
+//! registry never propagates the panic/err to siblings, and co-tenant
+//! threads keep stepping.  Per-job [`JobRollup`]s aggregate the
+//! [`StepMetrics`] stream so a fleet operator can read progress
+//! without touching trainer internals.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::metrics::StepMetrics;
+use crate::util::events::{Event, EventKind, EventSink, JobId};
+
+/// Lifecycle of a registry-managed job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Running,
+    Paused,
+    /// Stopped by request; the step loop exited at the next boundary.
+    Stopped,
+    /// The job body returned an error; co-tenants are unaffected.
+    Failed,
+    /// All requested steps completed.
+    Finished,
+}
+
+impl JobState {
+    fn name(self) -> &'static str {
+        match self {
+            JobState::Running => "running",
+            JobState::Paused => "paused",
+            JobState::Stopped => "stopped",
+            JobState::Failed => "failed",
+            JobState::Finished => "finished",
+        }
+    }
+}
+
+/// Aggregate progress of one job, updated after every successful step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JobRollup {
+    pub steps: u64,
+    pub loss_sum: f64,
+    pub last_loss: f64,
+    pub io_wait_secs: f64,
+    pub step_secs: f64,
+}
+
+impl JobRollup {
+    pub fn mean_loss(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.loss_sum / self.steps as f64
+    }
+}
+
+struct JobShared {
+    state: Mutex<JobState>,
+    cv: Condvar,
+    rollup: Mutex<JobRollup>,
+}
+
+struct JobHandle {
+    name: String,
+    shared: Arc<JobShared>,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// Spawns, observes, and controls a fleet of step loops.
+pub struct JobRegistry {
+    jobs: Mutex<HashMap<JobId, JobHandle>>,
+    events: Arc<dyn EventSink>,
+}
+
+impl JobRegistry {
+    pub fn new(events: Arc<dyn EventSink>) -> Self {
+        Self { jobs: Mutex::new(HashMap::new()), events }
+    }
+
+    /// Run `body(step)` for `steps` iterations on a dedicated thread.
+    /// The body is the whole per-step unit of work (typically
+    /// `Trainer::step` plus logging); its `Err` fails only this job.
+    pub fn spawn<F>(&self, name: &str, job: JobId, steps: u64, mut body: F)
+    where
+        F: FnMut(u64) -> anyhow::Result<StepMetrics> + Send + 'static,
+    {
+        let shared = Arc::new(JobShared {
+            state: Mutex::new(JobState::Running),
+            cv: Condvar::new(),
+            rollup: Mutex::new(JobRollup::default()),
+        });
+        let worker_shared = Arc::clone(&shared);
+        let events = Arc::clone(&self.events);
+        let thread = std::thread::Builder::new()
+            .name(format!("ma-job-{}", job.0))
+            .spawn(move || {
+                for step in 0..steps {
+                    {
+                        let mut st = worker_shared.state.lock().unwrap();
+                        while *st == JobState::Paused {
+                            st = worker_shared.cv.wait(st).unwrap();
+                        }
+                        if *st != JobState::Running {
+                            return;
+                        }
+                    }
+                    match body(step) {
+                        Ok(m) => {
+                            let mut r = worker_shared.rollup.lock().unwrap();
+                            r.steps += 1;
+                            r.loss_sum += m.loss;
+                            r.last_loss = m.loss;
+                            r.io_wait_secs += m.io_wait_secs;
+                            r.step_secs += m.step_secs;
+                        }
+                        Err(e) => {
+                            *worker_shared.state.lock().unwrap() = JobState::Failed;
+                            worker_shared.cv.notify_all();
+                            events.emit(Event {
+                                job,
+                                kind: EventKind::JobFailed,
+                                detail: format!("step {step}: {e:#}"),
+                            });
+                            return;
+                        }
+                    }
+                }
+                let mut st = worker_shared.state.lock().unwrap();
+                if *st == JobState::Running {
+                    *st = JobState::Finished;
+                }
+            })
+            .expect("spawn job thread");
+        self.jobs.lock().unwrap().insert(
+            job,
+            JobHandle { name: name.to_string(), shared, thread: Some(thread) },
+        );
+    }
+
+    fn transition(&self, job: JobId, from: &[JobState], to: JobState) -> bool {
+        let jobs = self.jobs.lock().unwrap();
+        let Some(h) = jobs.get(&job) else { return false };
+        let mut st = h.shared.state.lock().unwrap();
+        if !from.contains(&st) {
+            return false;
+        }
+        *st = to;
+        h.shared.cv.notify_all();
+        drop(st);
+        self.events.emit(Event {
+            job,
+            kind: EventKind::JobStateChanged { state: to.name() },
+            detail: h.name.clone(),
+        });
+        true
+    }
+
+    /// Hold the job at its next step boundary (in-flight step finishes).
+    pub fn pause(&self, job: JobId) -> bool {
+        self.transition(job, &[JobState::Running], JobState::Paused)
+    }
+
+    pub fn resume(&self, job: JobId) -> bool {
+        self.transition(job, &[JobState::Paused], JobState::Running)
+    }
+
+    /// Stop at the next step boundary.  Also wakes a paused job so it
+    /// can observe the stop.
+    pub fn stop(&self, job: JobId) -> bool {
+        self.transition(job, &[JobState::Running, JobState::Paused], JobState::Stopped)
+    }
+
+    pub fn state(&self, job: JobId) -> Option<JobState> {
+        let jobs = self.jobs.lock().unwrap();
+        jobs.get(&job).map(|h| *h.shared.state.lock().unwrap())
+    }
+
+    pub fn rollup(&self, job: JobId) -> Option<JobRollup> {
+        let jobs = self.jobs.lock().unwrap();
+        jobs.get(&job).map(|h| *h.shared.rollup.lock().unwrap())
+    }
+
+    pub fn name(&self, job: JobId) -> Option<String> {
+        self.jobs.lock().unwrap().get(&job).map(|h| h.name.clone())
+    }
+
+    /// Block until the job's thread exits (its state is terminal
+    /// afterwards).  Idempotent.
+    pub fn join(&self, job: JobId) {
+        let thread = {
+            let mut jobs = self.jobs.lock().unwrap();
+            jobs.get_mut(&job).and_then(|h| h.thread.take())
+        };
+        if let Some(t) = thread {
+            let _ = t.join();
+        }
+    }
+
+    /// Join every spawned job.
+    pub fn join_all(&self) {
+        let ids: Vec<JobId> = self.jobs.lock().unwrap().keys().copied().collect();
+        for job in ids {
+            self.join(job);
+        }
+    }
+
+    /// Jobs in registration order is not guaranteed; sorted by id.
+    pub fn job_ids(&self) -> Vec<JobId> {
+        let mut ids: Vec<JobId> = self.jobs.lock().unwrap().keys().copied().collect();
+        ids.sort();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::events::MemorySink;
+
+    #[test]
+    fn one_job_failing_never_touches_its_co_tenant() {
+        let sink = MemorySink::new();
+        let reg = JobRegistry::new(sink.clone() as Arc<dyn EventSink>);
+        reg.spawn("flaky", JobId(1), 8, |step| {
+            if step == 3 {
+                anyhow::bail!("injected persistent I/O fault");
+            }
+            Ok(StepMetrics { step, loss: 1.0, ..Default::default() })
+        });
+        reg.spawn("steady", JobId(2), 8, |step| {
+            Ok(StepMetrics { step, loss: 0.5, ..Default::default() })
+        });
+        reg.join_all();
+        assert_eq!(reg.state(JobId(1)), Some(JobState::Failed));
+        assert_eq!(reg.state(JobId(2)), Some(JobState::Finished));
+        // the co-tenant completed every step despite j1's abort
+        let r2 = reg.rollup(JobId(2)).unwrap();
+        assert_eq!(r2.steps, 8);
+        assert!((r2.mean_loss() - 0.5).abs() < 1e-12);
+        // j1 stopped exactly at the failing step, and said so
+        assert_eq!(reg.rollup(JobId(1)).unwrap().steps, 3);
+        let failures = sink.for_job(JobId(1));
+        assert!(failures
+            .iter()
+            .any(|e| e.kind == EventKind::JobFailed && e.detail.contains("step 3")));
+        assert!(sink
+            .for_job(JobId(2))
+            .iter()
+            .all(|e| e.kind != EventKind::JobFailed));
+    }
+
+    #[test]
+    fn pause_holds_the_step_loop_and_resume_releases_it() {
+        let sink = MemorySink::new();
+        let reg = JobRegistry::new(sink.clone() as Arc<dyn EventSink>);
+        reg.spawn("pausable", JobId(1), u64::MAX, |step| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            Ok(StepMetrics { step, ..Default::default() })
+        });
+        // let it take a few steps, then pause
+        while reg.rollup(JobId(1)).unwrap().steps < 3 {
+            std::thread::yield_now();
+        }
+        assert!(reg.pause(JobId(1)));
+        // at most the in-flight step can land after the pause
+        let s1 = reg.rollup(JobId(1)).unwrap().steps;
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let s2 = reg.rollup(JobId(1)).unwrap().steps;
+        assert!(s2 <= s1 + 1, "paused job kept stepping: {s1} -> {s2}");
+        assert_eq!(reg.state(JobId(1)), Some(JobState::Paused));
+        // resume makes progress again, stop terminates from paused too
+        assert!(reg.resume(JobId(1)));
+        while reg.rollup(JobId(1)).unwrap().steps <= s2 {
+            std::thread::yield_now();
+        }
+        assert!(reg.pause(JobId(1)));
+        assert!(reg.stop(JobId(1)));
+        reg.join(JobId(1));
+        assert_eq!(reg.state(JobId(1)), Some(JobState::Stopped));
+        // lifecycle transitions were all announced
+        let states: Vec<&'static str> = sink
+            .for_job(JobId(1))
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::JobStateChanged { state } => Some(state),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(states, vec!["paused", "running", "paused", "stopped"]);
+    }
+
+    #[test]
+    fn invalid_transitions_are_rejected() {
+        let reg = JobRegistry::new(Arc::new(crate::util::events::StderrSink));
+        reg.spawn("quick", JobId(1), 1, |step| {
+            Ok(StepMetrics { step, ..Default::default() })
+        });
+        reg.join(JobId(1));
+        assert_eq!(reg.state(JobId(1)), Some(JobState::Finished));
+        assert!(!reg.pause(JobId(1)), "cannot pause a finished job");
+        assert!(!reg.stop(JobId(1)), "cannot stop a finished job");
+        assert!(!reg.resume(JobId(42)), "unknown job");
+    }
+}

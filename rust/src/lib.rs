@@ -37,6 +37,35 @@
 //! delays ([`ssd::RetryEngine`], `--io-retry`), metered in
 //! `StepMetrics::io_retries`; a retry budget that runs dry surfaces
 //! the typed [`ssd::RetryExhausted`] error and is metered separately.
+//!
+//! ## Architecture: shared substrate, per-job views
+//!
+//! The crate is layered so every scarce resource has exactly one owner
+//! and everything above it holds a *view*:
+//!
+//! - **Host memory** — [`pinned::PinnedArena`]: one budget-enforced
+//!   lease tier over the allocator policies of §III-B.  Tenancy view:
+//!   [`pinned::PinnedArena::namespace`] — same arena, per-namespace
+//!   quota + charged-byte attribution ([`pinned::NsStats`]), refusals
+//!   surfacing as ordinary `BudgetExceeded`.
+//! - **SSD** — [`ssd::NvmeEngine`] implementations (direct I/O, fs,
+//!   retry, fault-injection) under the shadow-paging checkpoint layer.
+//!   Tenancy view: [`jobs::ScopedEngine`] key-prefixes a job's streams
+//!   onto the shared device.
+//! - **I/O submission** — [`ssd::IoExecutor`]: the async queue all
+//!   engines submit through, scheduled deficit-weighted-round-robin
+//!   ([`ssd::DwrrQueue`]) with per-job lanes metered in
+//!   [`ssd::IoSnapshot`].
+//! - **Pipeline control** — each trainer's [`train::PipelineGovernor`]
+//!   tunes its own windows; the [`jobs::FleetGovernor`] arbitrates
+//!   *across* trainers with [`train::FleetCaps`] overlays and quota
+//!   splits; the [`jobs::JobRegistry`] owns lifecycle + fault
+//!   isolation.  Diagnostics flow through [`util::events`] tagged with
+//!   a [`util::events::JobId`].
+//!
+//! A solo run is the degenerate case throughout: host namespace 0, no
+//! quota, unit weight, host job id — bit-identical to the
+//! pre-tenancy stack.
 
 pub mod accounting;
 pub mod bufpool;
@@ -45,6 +74,7 @@ pub mod collective;
 pub mod config;
 pub mod coordinator;
 pub mod dtype;
+pub mod jobs;
 pub mod metrics;
 pub mod optimizer;
 pub mod overflow;

@@ -63,7 +63,7 @@ impl CsvLog {
 }
 
 /// Per-step training record.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct StepMetrics {
     pub step: u64,
     pub loss: f64,

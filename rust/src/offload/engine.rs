@@ -20,11 +20,22 @@ use crate::pinned::{
     Mode, PinnedArena,
 };
 use crate::ckpt::ShadowEngine;
+use crate::jobs::ScopedEngine;
 use crate::ssd::{
-    AsyncEngine, DirectEngine, FsEngine, IoExecutor, NvmeEngine, RetryEngine,
-    RetryPolicy,
+    AsyncEngine, DirectEngine, FaultyEngine, FsEngine, IoExecutor, JobId, NvmeEngine,
+    OpMask, RetryEngine, RetryPolicy,
 };
 use crate::util::stage::StageExecutor;
+
+/// Fault-injection mode for a tenant's engine view ([`OffloadEngine::
+/// job_view`]): probabilistic faults sit *below* the retry layer (they
+/// are absorbed like real transient faults), persistent ones exhaust
+/// it and abort only that job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobFault {
+    Probabilistic { per_1024: u64, seed: u64 },
+    Persistent,
+}
 
 pub struct OffloadEngine {
     pub tracker: Arc<MemoryTracker>,
@@ -37,6 +48,12 @@ pub struct OffloadEngine {
     /// while every I/O consumer keeps reading logical keys through
     /// `nvme`.
     pub shadow: Arc<ShadowEngine>,
+    /// The raw storage engine (pre-retry, pre-shadow) — the substrate
+    /// tenant views stack their own retry/fault/shadow layers over.
+    pub base: Arc<dyn NvmeEngine>,
+    /// Which tenant this engine (view) belongs to.  `JobId::HOST` for
+    /// the root engine built by [`Self::new`]/[`Self::new_shared`].
+    pub job: JobId,
     /// Shared async submission queue: swapper fetch window, activation
     /// spill, and the optimizer swap ride this one executor (the
     /// engines keep their own per-device queues underneath).
@@ -60,6 +77,19 @@ impl OffloadEngine {
         train: &TrainSpec,
         storage_dir: &Path,
     ) -> anyhow::Result<Self> {
+        Self::new_shared(spec, train, storage_dir, 1)
+    }
+
+    /// [`Self::new`] scaled for `tenants` co-resident jobs: device
+    /// capacity multiplies so every tenant's key-prefixed streams fit,
+    /// while arena budget stays as configured (tenancy *shares* the
+    /// pinned budget — that is the point).
+    pub fn new_shared(
+        spec: &ModelSpec,
+        train: &TrainSpec,
+        storage_dir: &Path,
+        tenants: usize,
+    ) -> anyhow::Result<Self> {
         let tracker = Arc::new(MemoryTracker::new());
         let alloc: Arc<dyn HostAllocator> = if train.flags.alignment_free {
             Arc::new(AlignedAllocator::new(Mode::Real, tracker.clone()))
@@ -82,12 +112,13 @@ impl OffloadEngine {
         // capacity: fp16 + fp32 master + m + v + slack, per device —
         // doubled, because shadow paging keeps two physical extents
         // per checkpointed stream (epoch N plus the N+1 shadow)
-        let cap_bytes = (spec.param_count() as u64)
+        let cap_bytes = ((spec.param_count() as u64)
             .saturating_mul(32)
             .max(1 << 24)
-            + (128 << 20);
+            + (128 << 20))
+            .saturating_mul(tenants.max(1) as u64);
         let devices = 2;
-        let nvme: Arc<dyn NvmeEngine> = if train.flags.direct_nvme {
+        let base: Arc<dyn NvmeEngine> = if train.flags.direct_nvme {
             Arc::new(DirectEngine::new(
                 &storage_dir.join("direct"),
                 devices,
@@ -107,11 +138,11 @@ impl OffloadEngine {
         // synchronous calls retry identically (label passes through)
         let nvme: Arc<dyn NvmeEngine> = if train.io_retry_attempts > 1 {
             Arc::new(RetryEngine::new(
-                nvme,
+                base.clone(),
                 RetryPolicy::attempts(train.io_retry_attempts as u32),
             ))
         } else {
-            nvme
+            base.clone()
         };
         // shadow paging tops the stack: logical checkpoint keys route
         // to per-epoch physical extents; everything unregistered
@@ -132,6 +163,8 @@ impl OffloadEngine {
             pool,
             nvme,
             shadow,
+            base,
+            job: JobId::HOST,
             ioq,
             stage,
             checker,
@@ -140,10 +173,73 @@ impl OffloadEngine {
         })
     }
 
+    /// A tenant's view of this engine: same tracker, submission queue,
+    /// stage pool, and raw storage — but a namespaced arena (quota'd
+    /// leases, attributed bytes), its own buffer pool leased from that
+    /// namespace, a key-prefixed [`ScopedEngine`] over the shared
+    /// device with optional per-job fault injection, and a private
+    /// shadow-paging layer (each job checkpoints independently).
+    ///
+    /// Layer order per job: `Shadow(Retry?(Faulty?(Scoped(base))))` —
+    /// retry sits *above* injection so probabilistic faults are
+    /// absorbed exactly like real transient faults, while persistent
+    /// ones exhaust the budget and abort only this job.
+    pub fn job_view(
+        &self,
+        spec: &ModelSpec,
+        train: &TrainSpec,
+        job: JobId,
+        fault: Option<JobFault>,
+    ) -> anyhow::Result<OffloadEngine> {
+        let arena = self.arena.namespace(job.lane() as u32);
+        let dtype = train.precision.compute_dtype();
+        let pool: Arc<dyn ParamBufferPool> = if train.flags.adaptive_pool {
+            Arc::new(AdaptivePool::new(spec, train.prefetch_depth, dtype, &arena)?)
+        } else {
+            Arc::new(MonolithicPool::new(spec, train.prefetch_depth, dtype, &arena)?)
+        };
+        let scoped: Arc<dyn NvmeEngine> =
+            Arc::new(ScopedEngine::new(self.base.clone(), job));
+        let faulted: Arc<dyn NvmeEngine> = match fault {
+            None => scoped,
+            Some(JobFault::Probabilistic { per_1024, seed }) => {
+                Arc::new(FaultyEngine::new(scoped, per_1024, seed))
+            }
+            Some(JobFault::Persistent) => {
+                Arc::new(FaultyEngine::transient(scoped, u32::MAX, OpMask::DATA))
+            }
+        };
+        let retried: Arc<dyn NvmeEngine> = if train.io_retry_attempts > 1 {
+            Arc::new(RetryEngine::new(
+                faulted,
+                RetryPolicy::attempts(train.io_retry_attempts as u32),
+            ))
+        } else {
+            faulted
+        };
+        let shadow = Arc::new(ShadowEngine::new(retried));
+        let nvme: Arc<dyn NvmeEngine> = shadow.clone();
+        Ok(OffloadEngine {
+            tracker: self.tracker.clone(),
+            arena,
+            pool,
+            nvme,
+            shadow,
+            base: self.base.clone(),
+            job,
+            ioq: self.ioq.clone(),
+            stage: self.stage.clone(),
+            checker: self.checker,
+            threads: self.threads,
+            copy_meter: HostCopyMeter::new(),
+        })
+    }
+
     /// Async surface over the configured NVMe engine, sharing the
-    /// engine-wide submission queue.
+    /// engine-wide submission queue.  Submissions carry this engine
+    /// view's job id into the weighted-fair scheduler.
     pub fn async_io(&self) -> AsyncEngine {
-        AsyncEngine::with_executor(self.nvme.clone(), self.ioq.clone())
+        AsyncEngine::with_executor(self.nvme.clone(), self.ioq.clone()).for_job(self.job)
     }
 
     /// Run the configured overflow check over a flat fp32 buffer.
@@ -219,6 +315,36 @@ mod tests {
         .unwrap();
         assert_eq!(cfd.nvme.label(), "fs-raid0-cachedfd");
         std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn job_views_share_substrate_but_isolate_keys_and_faults() {
+        let train = TrainSpec::default();
+        let dir = storage("jv");
+        let eng = OffloadEngine::new_shared(&SMOKE, &train, &dir, 3).unwrap();
+        let j1 = eng.job_view(&SMOKE, &train, crate::ssd::JobId(1), None).unwrap();
+        let j2 = eng
+            .job_view(&SMOKE, &train, crate::ssd::JobId(2), Some(JobFault::Persistent))
+            .unwrap();
+        // shared substrate: one queue, one stage pool, one ledger
+        assert!(Arc::ptr_eq(&eng.ioq, &j1.ioq));
+        assert!(Arc::ptr_eq(&eng.tracker, &j2.tracker));
+        // same logical key, no collision across views
+        eng.nvme.write("probe", &[0u8; 8]).unwrap();
+        j1.nvme.write("probe", &[1u8; 8]).unwrap();
+        let mut out = [9u8; 8];
+        eng.nvme.read("probe", &mut out).unwrap();
+        assert_eq!(out, [0u8; 8]);
+        j1.nvme.read("probe", &mut out).unwrap();
+        assert_eq!(out, [1u8; 8]);
+        // a persistent fault aborts only j2's I/O; co-tenants unaffected
+        assert!(j2.nvme.write("probe", &[2u8; 8]).is_err());
+        j1.nvme.read("probe", &mut out).unwrap();
+        assert_eq!(out, [1u8; 8]);
+        // arena namespaces attribute to the shared ledger
+        let ns1 = eng.arena.ns_stats(1);
+        assert!(ns1.charged > 0, "j1's pool bytes must be attributed to ns 1");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -22,7 +22,7 @@ pub mod scaler;
 pub mod spill;
 pub mod swapper;
 
-pub use engine::OffloadEngine;
+pub use engine::{JobFault, OffloadEngine};
 pub use gradbuf::GradFlatBuffer;
 pub use prefetch::{FetchGroups, ProfileStore, StepProfile};
 pub use scaler::LossScaler;

@@ -78,7 +78,7 @@ use crate::metrics::HostCopyMeter;
 use crate::offload::prefetch::{plan_digest, FetchGroups, ProfileStore, ProfileUnit, StepProfile};
 use crate::pinned::{Cat, Lease, PinnedArena};
 use crate::runtime::{F32Staging, TensorBuf};
-use crate::ssd::{IoExecutor, IoHandle, NvmeEngine};
+use crate::ssd::{IoExecutor, IoHandle, JobId, NvmeEngine};
 use crate::tensors::TensorDesc;
 use crate::util::stage::StageExecutor;
 
@@ -170,13 +170,16 @@ pub struct FetchOpts {
     /// Safety margin subtracted from each replayed unit's deadline
     /// (its fetch is issued `fetch_us + lead_us` before consumption).
     pub lead_us: u64,
+    /// Tenant whose scheduler lane the fetch submissions ride
+    /// (weighted-fair dispatch + per-job accounting).
+    pub job: JobId,
 }
 
 impl FetchOpts {
     /// The classic depth-window greedy prefetcher, no coalescing, no
     /// profile.
     pub fn window(depth: usize) -> Self {
-        Self { depth, groups: None, profile: None, lead_us: 0 }
+        Self { depth, groups: None, profile: None, lead_us: 0, job: JobId::HOST }
     }
 
     pub fn with_groups(mut self, groups: Arc<FetchGroups>) -> Self {
@@ -187,6 +190,11 @@ impl FetchOpts {
     pub fn with_profile(mut self, store: Arc<ProfileStore>, lead_us: u64) -> Self {
         self.profile = Some(store);
         self.lead_us = lead_us;
+        self
+    }
+
+    pub fn for_job(mut self, job: JobId) -> Self {
+        self.job = job;
         self
     }
 }
@@ -220,6 +228,8 @@ struct FetchCtx {
     stage: Arc<StageExecutor>,
     scratch: Arc<F32Scratch>,
     key_of: Box<dyn Fn(&TensorDesc) -> String + Send + Sync>,
+    /// Scheduler lane for every fetch submission.
+    job: JobId,
 }
 
 /// One compiled fetch unit: a lone tensor, or a contiguous run of
@@ -341,6 +351,7 @@ impl Swapper {
             stage,
             scratch,
             key_of: Box::new(key_of),
+            job: opts.job,
         });
         let tensor_total = plan.len();
         let units = build_units(&ctx, plan, opts.groups.as_deref());
@@ -589,7 +600,8 @@ fn submit_fetch(
 ) -> IoHandle<Fetched> {
     let (completer, handle) = IoHandle::pair();
     let job_ctx = Arc::clone(ctx);
-    ctx.exec.submit(move || {
+    let cost = t.bytes(crate::dtype::DType::F16) as u64;
+    ctx.exec.submit_for(ctx.job, cost, move || {
         let t_job = Instant::now();
         // stage 1 (NVMe queue): lease pinned staging + device read;
         // the queue worker is free again the moment the bytes landed
@@ -620,7 +632,8 @@ fn submit_group(
 ) -> IoHandle<Vec<Fetched>> {
     let (completer, handle) = IoHandle::pair();
     let job_ctx = Arc::clone(ctx);
-    ctx.exec.submit(move || {
+    let cost = (g.len * 2) as u64;
+    ctx.exec.submit_for(ctx.job, cost, move || {
         let t_job = Instant::now();
         // stage 1: one ranged read covers every member's fp16 bytes
         let staged = match stage_group_read(&job_ctx, &g) {

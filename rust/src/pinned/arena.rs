@@ -65,12 +65,20 @@ use std::fmt;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::util::events::MAX_JOB_LANES;
+
 use super::{Cat, HostAllocator, HostRegion, MemoryTracker};
 
 /// Carve granularity: every lease offset and padded length is a
 /// multiple of this, so leases inherit the segment base's DMA
 /// alignment (and f32 alignment) for free.
 pub const LEASE_ALIGN: usize = 4096;
+
+/// Job-scoped namespaces one arena can carry (aligned with the I/O
+/// layer's per-job lanes so `JobId::lane` indexes both).  Namespace 0
+/// is the host default: no quota, the identity of every pre-tenancy
+/// code path.
+pub const MAX_NAMESPACES: usize = MAX_JOB_LANES;
 
 const N_CATS: usize = Cat::ALL.len();
 
@@ -168,16 +176,24 @@ struct Segment {
     /// size-class buckets).
     free: BTreeMap<usize, usize>,
     live: usize,
+    /// Namespace whose lease pinned this segment — its reserved bytes
+    /// stay attributed here until trim (free extents are shared across
+    /// the whole category, so recycling by another namespace does not
+    /// move the charge).
+    ns: usize,
 }
 
 // SAFETY: `base` points into `region`'s uniquely-owned allocation and
 // is only dereferenced through non-overlapping leases.
 unsafe impl Send for Segment {}
 
+/// Pooled scratch, each entry tagged with the namespace whose `put_*`
+/// charged it (the reserved-byte attribution follows the putter until
+/// a take or eviction un-charges it, mirroring segment attribution).
 #[derive(Default)]
 struct VecPool {
-    f32s: Vec<Vec<f32>>,
-    bytes: Vec<Vec<u8>>,
+    f32s: Vec<(Vec<f32>, usize)>,
+    bytes: Vec<(Vec<u8>, usize)>,
     pooled_bytes: usize,
 }
 
@@ -359,6 +375,101 @@ fn take_fit(shard: &mut CatShard, padded: usize) -> Option<(usize, usize)> {
     Some((seg_idx, eoff))
 }
 
+/// Quota/borrow state of one namespace (admission control).  `used`
+/// is the live *padded* lease demand admitted against the quota; it
+/// falls on every release, unlike the reserved-byte attribution in
+/// [`NsCounters`] which mirrors the global cache-retaining ledger.
+#[derive(Default)]
+struct NsQuota {
+    /// Fair-share byte cap on live leased demand (`None` = unlimited —
+    /// the host default, and bit-for-bit the pre-tenancy behavior).
+    quota: Option<usize>,
+    used: usize,
+    /// Bytes currently taken from the shared headroom pool beyond the
+    /// quota.  Repaid automatically as `used` falls back under quota.
+    borrowed: usize,
+    /// Revoked namespaces may not take *new* headroom; existing
+    /// borrows drain as leases release (a revocation never aborts
+    /// in-flight work — refusal degrades like any `BudgetExceeded`).
+    revoked: bool,
+}
+
+/// The shared borrowable headroom pool namespaces may burst into.
+#[derive(Default)]
+struct Headroom {
+    total: usize,
+    borrowed: usize,
+}
+
+/// Per-namespace mirror of the global service counters, all atomic
+/// (updated next to their global twins, same quantities), so a noisy
+/// or leaky tenant is identifiable without locks.
+#[derive(Default)]
+struct NsCounters {
+    /// Reserved-byte attribution: fresh-segment reserves + pooled
+    /// scratch charged by this namespace, minus trims/evictions of
+    /// state it pinned.  Summed over namespaces this equals
+    /// [`ArenaStats::reserved_bytes`] bit-for-bit.
+    charged: AtomicUsize,
+    charged_peak: AtomicUsize,
+    requested: AtomicUsize,
+    requested_peak: AtomicUsize,
+    leases: AtomicU64,
+    releases: AtomicU64,
+    recycled: AtomicU64,
+    recycle_misses: AtomicU64,
+    fresh_segments: AtomicU64,
+}
+
+/// Snapshot of one namespace: admission state + service counters
+/// ([`PinnedArena::ns_stats`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NsStats {
+    pub quota: Option<usize>,
+    /// Live padded lease demand admitted against the quota.
+    pub used: usize,
+    pub borrowed: usize,
+    pub revoked: bool,
+    /// Reserved-byte attribution (see [`ArenaStats::reserved_bytes`]:
+    /// the per-namespace shares sum to it exactly).
+    pub charged: usize,
+    pub charged_peak: usize,
+    pub requested: usize,
+    pub requested_peak: usize,
+    pub leases: u64,
+    pub releases: u64,
+    pub recycled: u64,
+    pub recycle_misses: u64,
+    pub fresh_segments: u64,
+}
+
+impl NsStats {
+    /// 1 − live-need / charged attribution (a per-tenant
+    /// [`ArenaStats::fragmentation`]).
+    pub fn fragmentation(&self) -> f64 {
+        if self.charged == 0 {
+            return 0.0;
+        }
+        1.0 - self.requested as f64 / self.charged as f64
+    }
+
+    /// Fraction of this namespace's leases served from the free list.
+    pub fn recycle_hit_rate(&self) -> f64 {
+        let total = self.recycled + self.recycle_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.recycled as f64 / total as f64
+    }
+}
+
+/// Why a namespace refused a lease (mapped to
+/// [`ArenaError::BudgetExceeded`] at the public surface).
+struct NsRefusal {
+    used: usize,
+    allowed: usize,
+}
+
 struct Inner {
     alloc: Arc<dyn HostAllocator>,
     tracker: Arc<MemoryTracker>,
@@ -375,6 +486,11 @@ struct Inner {
     recycle_misses: AtomicU64,
     fresh_segments: AtomicU64,
     shards: [Mutex<CatShard>; N_CATS],
+    /// Per-namespace admission state (lock order: ns_quota before
+    /// headroom; never held across a shard lock acquisition).
+    ns_quota: [Mutex<NsQuota>; MAX_NAMESPACES],
+    headroom: Mutex<Headroom>,
+    ns_counters: [NsCounters; MAX_NAMESPACES],
 }
 
 impl Inner {
@@ -403,19 +519,104 @@ impl Inner {
         }
     }
 
-    fn note_lease(&self, shard: &mut CatShard, bytes: usize) {
+    fn note_lease(&self, shard: &mut CatShard, bytes: usize, ns: usize) {
         shard.touched = true;
         self.leases.fetch_add(1, Ordering::Relaxed);
         let now = self.requested.fetch_add(bytes, Ordering::Relaxed) + bytes;
         self.peak_requested.fetch_max(now, Ordering::Relaxed);
         shard.wm.requested += bytes;
         shard.wm.requested_peak = shard.wm.requested_peak.max(shard.wm.requested);
+        let nc = &self.ns_counters[ns];
+        nc.leases.fetch_add(1, Ordering::Relaxed);
+        let now = nc.requested.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        nc.requested_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Attribute `bytes` of fresh reserve to namespace `ns` (the
+    /// per-namespace twin of the global `reserved` bookkeeping).
+    fn ns_charge(&self, ns: usize, bytes: usize) {
+        let nc = &self.ns_counters[ns];
+        let now = nc.charged.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        nc.charged_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn ns_uncharge(&self, ns: usize, bytes: usize) {
+        self.ns_counters[ns].charged.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// Admit `padded` bytes of new lease demand against namespace
+    /// `ns`'s quota, borrowing from the shared headroom pool when the
+    /// quota alone does not cover it.  `Err` carries the refusal
+    /// context; quota-less namespaces (the host default) always admit.
+    fn ns_admit(&self, ns: usize, padded: usize) -> Result<(), NsRefusal> {
+        let mut q = self.ns_quota[ns].lock().unwrap();
+        let new_used = q.used + padded;
+        if let Some(quota) = q.quota {
+            let need = new_used.saturating_sub(quota);
+            if need > q.borrowed {
+                let delta = need - q.borrowed;
+                let granted = !q.revoked && {
+                    let mut h = self.headroom.lock().unwrap();
+                    if h.borrowed + delta <= h.total {
+                        h.borrowed += delta;
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if !granted {
+                    let avail = if q.revoked {
+                        0
+                    } else {
+                        let h = self.headroom.lock().unwrap();
+                        h.total.saturating_sub(h.borrowed)
+                    };
+                    return Err(NsRefusal {
+                        used: q.used,
+                        allowed: quota + q.borrowed + avail,
+                    });
+                }
+                q.borrowed = need;
+            }
+        }
+        q.used = new_used;
+        Ok(())
+    }
+
+    /// Return `padded` bytes of lease demand to namespace `ns`,
+    /// repaying any headroom borrow the lower demand no longer needs.
+    fn ns_release_demand(&self, ns: usize, padded: usize) {
+        let mut q = self.ns_quota[ns].lock().unwrap();
+        q.used = q.used.saturating_sub(padded);
+        repay_excess_borrow(&mut q, &self.headroom);
+    }
+}
+
+/// Repay whatever part of `q.borrowed` the current demand no longer
+/// justifies (all of it when the quota was lifted).
+fn repay_excess_borrow(q: &mut NsQuota, headroom: &Mutex<Headroom>) {
+    let need = match q.quota {
+        Some(quota) => q.used.saturating_sub(quota),
+        None => 0,
+    };
+    if q.borrowed > need {
+        let repay = q.borrowed - need;
+        q.borrowed = need;
+        let mut h = headroom.lock().unwrap();
+        h.borrowed = h.borrowed.saturating_sub(repay);
     }
 }
 
 /// The budget-enforced lease layer. Cheap to share as `Arc<PinnedArena>`.
+///
+/// A `PinnedArena` value is a *namespace view*: all views made by
+/// [`PinnedArena::namespace`] share one `Inner` (one budget, one free
+/// list, one ledger), but leases and pooled scratch taken through a
+/// view are admitted against — and attributed to — that view's
+/// namespace.  The root view is namespace 0 (no quota).
 pub struct PinnedArena {
     inner: Arc<Inner>,
+    ns: usize,
 }
 
 /// RAII view of an (offset, len) span inside one arena segment.
@@ -423,6 +624,7 @@ pub struct PinnedArena {
 pub struct Lease {
     inner: Arc<Inner>,
     cat: Cat,
+    ns: usize,
     seg: usize,
     offset: usize,
     padded: usize,
@@ -557,6 +759,10 @@ impl Drop for Lease {
         drop(shard);
         self.inner.requested.fetch_sub(self.requested, Ordering::Relaxed);
         self.inner.releases.fetch_add(1, Ordering::Relaxed);
+        let nc = &self.inner.ns_counters[self.ns];
+        nc.requested.fetch_sub(self.requested, Ordering::Relaxed);
+        nc.releases.fetch_add(1, Ordering::Relaxed);
+        self.inner.ns_release_demand(self.ns, self.padded);
     }
 }
 
@@ -578,16 +784,120 @@ impl PinnedArena {
                 recycle_misses: AtomicU64::new(0),
                 fresh_segments: AtomicU64::new(0),
                 shards: std::array::from_fn(|i| Mutex::new(CatShard::new(Cat::ALL[i]))),
+                ns_quota: Default::default(),
+                headroom: Mutex::new(Headroom::default()),
+                ns_counters: Default::default(),
             }),
+            ns: 0,
         })
+    }
+
+    // ---- namespaces ----------------------------------------------------
+
+    /// A view of this arena scoped to namespace `ns` (clamped to
+    /// [`MAX_NAMESPACES`]`- 1`).  Views share everything — budget, free
+    /// lists, pools, ledger — but leases and scratch taken through a
+    /// view are admitted against the namespace's quota and attributed
+    /// to it in [`Self::ns_stats`].
+    pub fn namespace(self: &Arc<Self>, ns: u32) -> Arc<PinnedArena> {
+        Arc::new(PinnedArena {
+            inner: Arc::clone(&self.inner),
+            ns: (ns as usize).min(MAX_NAMESPACES - 1),
+        })
+    }
+
+    /// The namespace this view admits against (0 = host default).
+    pub fn ns(&self) -> usize {
+        self.ns
+    }
+
+    /// Set (or lift, with `None`) a namespace's fair-share quota on
+    /// live padded lease bytes.  Lowering a quota never aborts live
+    /// leases; demand above the new quota is treated as a headroom
+    /// borrow (repaid as leases release) and new demand is refused
+    /// until the namespace drains back under its share.
+    pub fn set_ns_quota(&self, ns: usize, quota: Option<usize>) {
+        let ns = ns.min(MAX_NAMESPACES - 1);
+        let mut q = self.inner.ns_quota[ns].lock().unwrap();
+        q.quota = quota;
+        // raising/lifting the quota may free borrows; lowering it does
+        // NOT retroactively borrow (live demand above quota is simply
+        // already admitted — only new demand needs headroom)
+        repay_excess_borrow(&mut q, &self.inner.headroom);
+    }
+
+    /// Size the shared borrowable headroom pool.  Shrinking below the
+    /// currently-borrowed amount blocks *new* borrows until existing
+    /// ones drain; nothing is revoked retroactively.
+    pub fn set_shared_headroom(&self, bytes: usize) {
+        self.inner.headroom.lock().unwrap().total = bytes;
+    }
+
+    /// Revoke (or restore) a namespace's access to shared headroom.
+    /// Existing borrows drain as leases release; only *new* borrows are
+    /// refused — revocation degrades a tenant, never aborts it.
+    pub fn set_ns_revoked(&self, ns: usize, revoked: bool) {
+        let ns = ns.min(MAX_NAMESPACES - 1);
+        self.inner.ns_quota[ns].lock().unwrap().revoked = revoked;
+    }
+
+    /// Snapshot one namespace's admission state and service counters.
+    pub fn ns_stats(&self, ns: usize) -> NsStats {
+        let ns = ns.min(MAX_NAMESPACES - 1);
+        let inner = &self.inner;
+        let (quota, used, borrowed, revoked) = {
+            let q = inner.ns_quota[ns].lock().unwrap();
+            (q.quota, q.used, q.borrowed, q.revoked)
+        };
+        let nc = &inner.ns_counters[ns];
+        NsStats {
+            quota,
+            used,
+            borrowed,
+            revoked,
+            charged: nc.charged.load(Ordering::Relaxed),
+            charged_peak: nc.charged_peak.load(Ordering::Relaxed),
+            requested: nc.requested.load(Ordering::Relaxed),
+            requested_peak: nc.requested_peak.load(Ordering::Relaxed),
+            leases: nc.leases.load(Ordering::Relaxed),
+            releases: nc.releases.load(Ordering::Relaxed),
+            recycled: nc.recycled.load(Ordering::Relaxed),
+            recycle_misses: nc.recycle_misses.load(Ordering::Relaxed),
+            fresh_segments: nc.fresh_segments.load(Ordering::Relaxed),
+        }
     }
 
     /// Lease `bytes` under `cat`.  Served from the category's bucketed
     /// free list when an extent fits, else from a fresh exactly-sized
     /// segment — which is where the budget is enforced (atomic CAS
     /// reservation; only the category's own shard lock is held).
+    ///
+    /// Under a namespaced view the request is first admitted against
+    /// the namespace's quota (+ borrowable headroom); a quota refusal
+    /// surfaces as the same [`ArenaError::BudgetExceeded`] every caller
+    /// already degrades on, with the namespace's own used/allowed
+    /// figures in the `in_use`/`budget` slots.
     pub fn lease(&self, bytes: usize, cat: Cat) -> Result<Lease, ArenaError> {
         let padded = pad(bytes);
+        if let Err(r) = self.inner.ns_admit(self.ns, padded) {
+            return Err(ArenaError::BudgetExceeded {
+                cat,
+                requested: bytes,
+                would_reserve: padded,
+                in_use: r.used,
+                budget: r.allowed,
+            });
+        }
+        let out = self.lease_admitted(bytes, padded, cat);
+        if out.is_err() {
+            // global-budget refusal: hand the admitted demand back
+            self.inner.ns_release_demand(self.ns, padded);
+        }
+        out
+    }
+
+    /// The pre-tenancy lease body; namespace demand is already admitted.
+    fn lease_admitted(&self, bytes: usize, padded: usize, cat: Cat) -> Result<Lease, ArenaError> {
         let inner = &self.inner;
 
         // fast path: bucketed recycle inside this category's shard
@@ -596,10 +906,12 @@ impl PinnedArena {
             if let Some((seg, offset)) = take_fit(&mut shard, padded) {
                 let base = shard.segments[seg].as_ref().unwrap().base;
                 inner.recycled.fetch_add(1, Ordering::Relaxed);
-                inner.note_lease(&mut shard, bytes);
+                inner.ns_counters[self.ns].recycled.fetch_add(1, Ordering::Relaxed);
+                inner.note_lease(&mut shard, bytes, self.ns);
                 return Ok(Lease {
                     inner: Arc::clone(inner),
                     cat,
+                    ns: self.ns,
                     seg,
                     offset,
                     padded,
@@ -611,6 +923,7 @@ impl PinnedArena {
 
         // miss: fresh segment, exactly sized to this request
         inner.recycle_misses.fetch_add(1, Ordering::Relaxed);
+        inner.ns_counters[self.ns].recycle_misses.fetch_add(1, Ordering::Relaxed);
         let would_reserve = inner.alloc.reserve_size(padded);
         if let Some(budget) = inner.cfg.budget_bytes {
             // a request that can never fit must not wipe warm caches
@@ -655,9 +968,12 @@ impl PinnedArena {
         }
         let base = region.raw_base();
         inner.fresh_segments.fetch_add(1, Ordering::Relaxed);
+        inner.ns_counters[self.ns].fresh_segments.fetch_add(1, Ordering::Relaxed);
+        inner.ns_charge(self.ns, actual);
 
         let mut shard = inner.shard(cat).lock().unwrap();
-        let seg = Segment { region, base, len: padded, free: BTreeMap::new(), live: 1 };
+        let seg =
+            Segment { region, base, len: padded, free: BTreeMap::new(), live: 1, ns: self.ns };
         let si = match shard.segments.iter().position(|s| s.is_none()) {
             Some(i) => i,
             None => {
@@ -668,10 +984,11 @@ impl PinnedArena {
         shard.segments[si] = Some(seg);
         shard.wm.charged += padded;
         shard.wm.charged_peak = shard.wm.charged_peak.max(shard.wm.charged);
-        inner.note_lease(&mut shard, bytes);
+        inner.note_lease(&mut shard, bytes, self.ns);
         Ok(Lease {
             inner: Arc::clone(inner),
             cat,
+            ns: self.ns,
             seg: si,
             offset: 0,
             padded,
@@ -699,17 +1016,20 @@ impl PinnedArena {
         let taken = {
             let pool = &mut shard.pool;
             let mut best: Option<(usize, usize)> = None; // (index, capacity)
-            for (i, v) in pool.f32s.iter().enumerate() {
+            for (i, (v, _)) in pool.f32s.iter().enumerate() {
                 let c = v.capacity();
                 if c >= n && best.is_none_or(|(_, bc)| c < bc) {
                     best = Some((i, c));
                 }
             }
-            best.map(|(i, c)| (pool.f32s.swap_remove(i), c * 4))
+            best.map(|(i, c)| {
+                let (v, ns) = pool.f32s.swap_remove(i);
+                (v, c * 4, ns)
+            })
         };
         match taken {
-            Some((mut v, bytes)) => {
-                uncharge_pooled(inner, &mut shard, bytes);
+            Some((mut v, bytes, ns)) => {
+                uncharge_pooled(inner, &mut shard, bytes, ns);
                 drop(shard);
                 v.clear();
                 v.resize(n, 0.0);
@@ -735,8 +1055,8 @@ impl PinnedArena {
         if !pool_admits(inner, &shard, bytes) || !inner.try_reserve(bytes) {
             return; // bounds or budget: the vector is simply dropped
         }
-        shard.pool.f32s.push(v);
-        charge_pooled(inner, &mut shard, bytes);
+        shard.pool.f32s.push((v, self.ns));
+        charge_pooled(inner, &mut shard, bytes, self.ns);
     }
 
     /// [`Self::take_f32`] for byte buffers.
@@ -746,17 +1066,20 @@ impl PinnedArena {
         let taken = {
             let pool = &mut shard.pool;
             let mut best: Option<(usize, usize)> = None;
-            for (i, v) in pool.bytes.iter().enumerate() {
+            for (i, (v, _)) in pool.bytes.iter().enumerate() {
                 let c = v.capacity();
                 if c >= n && best.is_none_or(|(_, bc)| c < bc) {
                     best = Some((i, c));
                 }
             }
-            best.map(|(i, c)| (pool.bytes.swap_remove(i), c))
+            best.map(|(i, c)| {
+                let (v, ns) = pool.bytes.swap_remove(i);
+                (v, c, ns)
+            })
         };
         match taken {
-            Some((mut v, bytes)) => {
-                uncharge_pooled(inner, &mut shard, bytes);
+            Some((mut v, bytes, ns)) => {
+                uncharge_pooled(inner, &mut shard, bytes, ns);
                 drop(shard);
                 v.clear();
                 v.resize(n, 0);
@@ -780,8 +1103,8 @@ impl PinnedArena {
         if !pool_admits(inner, &shard, bytes) || !inner.try_reserve(bytes) {
             return;
         }
-        shard.pool.bytes.push(v);
-        charge_pooled(inner, &mut shard, bytes);
+        shard.pool.bytes.push((v, self.ns));
+        charge_pooled(inner, &mut shard, bytes, self.ns);
     }
 
     /// Idle f32 vectors pooled under `cat` (test/introspection hook).
@@ -844,20 +1167,22 @@ fn pool_admits(inner: &Inner, shard: &CatShard, bytes: usize) -> bool {
 }
 
 /// Book a freshly-pooled vector (budget already reserved by the
-/// caller's `try_reserve`).
-fn charge_pooled(inner: &Inner, shard: &mut CatShard, bytes: usize) {
+/// caller's `try_reserve`) and attribute it to namespace `ns`.
+fn charge_pooled(inner: &Inner, shard: &mut CatShard, bytes: usize, ns: usize) {
     shard.touched = true;
     shard.pool.pooled_bytes += bytes;
     shard.wm.charged += bytes;
     shard.wm.charged_peak = shard.wm.charged_peak.max(shard.wm.charged);
     inner.tracker.alloc(shard.cat, bytes as u64);
+    inner.ns_charge(ns, bytes);
 }
 
-fn uncharge_pooled(inner: &Inner, shard: &mut CatShard, bytes: usize) {
+fn uncharge_pooled(inner: &Inner, shard: &mut CatShard, bytes: usize, ns: usize) {
     shard.pool.pooled_bytes -= bytes;
     shard.wm.charged -= bytes;
     inner.tracker.free(shard.cat, bytes as u64);
     inner.reserved.fetch_sub(bytes, Ordering::Relaxed);
+    inner.ns_uncharge(ns, bytes);
 }
 
 /// Free idle capacity until `reserved <= target`, stopping as soon as
@@ -892,6 +1217,7 @@ fn trim_until(inner: &Inner, target: usize) {
                     bucket_remove(&mut shard, l, i, o);
                 }
                 inner.reserved.fetch_sub(seg.region.bytes_reserved, Ordering::Relaxed);
+                inner.ns_uncharge(seg.ns, seg.region.bytes_reserved);
                 shard.wm.charged -= seg.len;
                 // seg drops here: the region's release hook un-charges
                 // the ledger
@@ -915,36 +1241,36 @@ fn trim_until(inner: &Inner, target: usize) {
                     .f32s
                     .iter()
                     .enumerate()
-                    .max_by_key(|(_, v)| v.capacity())
-                    .map(|(i, v)| (i, v.capacity() * 4));
+                    .max_by_key(|(_, (v, _))| v.capacity())
+                    .map(|(i, (v, ns))| (i, v.capacity() * 4, *ns));
                 let b = pool
                     .bytes
                     .iter()
                     .enumerate()
-                    .max_by_key(|(_, v)| v.capacity())
-                    .map(|(i, v)| (i, v.capacity()));
+                    .max_by_key(|(_, (v, _))| v.capacity())
+                    .map(|(i, (v, ns))| (i, v.capacity(), *ns));
                 match (f, b) {
-                    (Some((i, fb)), Some((j, bb))) => {
+                    (Some((i, fb, fns)), Some((j, bb, bns))) => {
                         if fb >= bb {
                             pool.f32s.swap_remove(i);
-                            fb
+                            (fb, fns)
                         } else {
                             pool.bytes.swap_remove(j);
-                            bb
+                            (bb, bns)
                         }
                     }
-                    (Some((i, fb)), None) => {
+                    (Some((i, fb, fns)), None) => {
                         pool.f32s.swap_remove(i);
-                        fb
+                        (fb, fns)
                     }
-                    (None, Some((j, bb))) => {
+                    (None, Some((j, bb, bns))) => {
                         pool.bytes.swap_remove(j);
-                        bb
+                        (bb, bns)
                     }
                     (None, None) => break,
                 }
             };
-            uncharge_pooled(inner, &mut shard, freed);
+            uncharge_pooled(inner, &mut shard, freed.0, freed.1);
         }
     }
 }
@@ -1327,6 +1653,97 @@ mod tests {
         // and the freed extent recycles without a fresh pin
         let _l2 = a.lease(4096 * 4, Cat::SwapBuf).unwrap();
         assert_eq!(a.stats().fresh_segments, 1);
+    }
+
+    /// Satellite: per-namespace reserved-byte attribution must mirror
+    /// the global ledger exactly — Σ over namespaces of `charged` ==
+    /// `ArenaStats::reserved_bytes`, bit-for-bit, through leases,
+    /// cross-namespace recycling, pooled scratch, and trim.
+    #[test]
+    fn namespace_charges_sum_to_global_ledger_bit_for_bit() {
+        let a = arena(Mode::Virtual, None);
+        let j1 = a.namespace(1);
+        let j2 = a.namespace(2);
+        let check_sum = |tag: &str| {
+            let sum: usize = (0..MAX_NAMESPACES).map(|n| a.ns_stats(n).charged).sum();
+            assert_eq!(
+                sum,
+                a.stats().reserved_bytes,
+                "{tag}: ns attribution drifted from the global ledger"
+            );
+        };
+        let l1 = j1.lease(100_000, Cat::GradFlat).unwrap();
+        let l2 = j2.lease(50_000, Cat::GradFlat).unwrap();
+        let l0 = a.lease(10_000, Cat::OptimBuf).unwrap();
+        check_sum("after leases");
+        assert_eq!(a.ns_stats(1).leases, 1);
+        assert_eq!(a.ns_stats(2).leases, 1);
+        // pooled scratch is charged to its putter...
+        j1.put_f32(vec![0f32; 4096], Cat::SwapBuf);
+        j2.put_bytes(vec![0u8; 8192], Cat::SwapBuf);
+        check_sum("after pool puts");
+        let j1_charged = a.ns_stats(1).charged;
+        // ...and un-charged from the *tagged* namespace even when a
+        // different tenant takes it
+        let v = j2.take_f32(4096, Cat::SwapBuf);
+        assert_eq!(a.ns_stats(1).charged, j1_charged - 4096 * 4);
+        check_sum("after cross-ns take");
+        drop(v);
+        // cross-namespace extent recycling: the reserve charge stays
+        // with the namespace whose lease pinned the segment
+        drop(l1);
+        let j1_charged = a.ns_stats(1).charged;
+        let l3 = j2.lease(60_000, Cat::GradFlat).unwrap();
+        assert_eq!(a.ns_stats(2).recycled, 1, "must carve j1's freed segment");
+        assert_eq!(a.ns_stats(1).charged, j1_charged, "charge moved with recycling");
+        check_sum("after cross-ns recycle");
+        drop(l2);
+        drop(l3);
+        drop(l0);
+        a.trim();
+        check_sum("after trim");
+        assert_eq!(a.stats().reserved_bytes, 0);
+        for n in 0..MAX_NAMESPACES {
+            assert_eq!(a.ns_stats(n).charged, 0, "ns {n} kept charge after full trim");
+        }
+    }
+
+    #[test]
+    fn quota_refusal_borrow_and_revocation_degrade_without_abort() {
+        const P: usize = 4096;
+        let a = arena(Mode::Virtual, None);
+        let j1 = a.namespace(1);
+        a.set_ns_quota(1, Some(64 * P));
+        a.set_shared_headroom(32 * P);
+        // within quota: admitted
+        let l1 = j1.lease(60 * P, Cat::ActCkpt).unwrap();
+        // beyond quota: bursts into shared headroom
+        let l2 = j1.lease(20 * P, Cat::ActCkpt).unwrap();
+        assert_eq!(a.ns_stats(1).borrowed, 16 * P);
+        // beyond quota + remaining headroom: the structured refusal
+        // carries the namespace's own used/allowed figures
+        match j1.lease(40 * P, Cat::ActCkpt).unwrap_err() {
+            ArenaError::BudgetExceeded { in_use, budget, .. } => {
+                assert_eq!(in_use, 80 * P);
+                assert_eq!(budget, (64 + 16 + 16) * P);
+            }
+        }
+        // the refusal degrades j1 only: the host namespace is untouched
+        let _h = a.lease(100 * P, Cat::ActCkpt).unwrap();
+        // scratch is transient compute memory — not quota-admitted
+        j1.put_f32(vec![0f32; 2048], Cat::SwapBuf);
+        assert_eq!(a.pooled_f32(Cat::SwapBuf), 1);
+        // revocation blocks NEW borrows only; nothing aborts
+        a.set_ns_revoked(1, true);
+        assert!(j1.lease(20 * P, Cat::ActCkpt).is_err());
+        assert_eq!(l1.bytes_requested(), 60 * P, "live lease survived revocation");
+        // borrows drain as leases release
+        drop(l2);
+        assert_eq!(a.ns_stats(1).borrowed, 0);
+        // back under quota, new leases admit even while revoked
+        let _l3 = j1.lease(4 * P, Cat::ActCkpt).unwrap();
+        a.set_ns_revoked(1, false);
+        assert!(!a.ns_stats(1).revoked);
     }
 
     #[test]

@@ -31,7 +31,10 @@ pub mod caching;
 pub mod tracker;
 
 pub use aligned::AlignedAllocator;
-pub use arena::{ArenaConfig, ArenaError, ArenaStats, CatWatermark, Lease, PinnedArena};
+pub use arena::{
+    ArenaConfig, ArenaError, ArenaStats, CatWatermark, Lease, NsStats, PinnedArena,
+    MAX_NAMESPACES,
+};
 pub use caching::CachingAllocator;
 pub use tracker::{Cat, MemoryTracker};
 

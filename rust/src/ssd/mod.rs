@@ -69,6 +69,7 @@ pub mod direct;
 pub mod fs_engine;
 pub mod queue;
 pub mod retry;
+pub mod sched;
 
 pub use device_model::DeviceModel;
 pub use faulty::{FaultyEngine, OpKind, OpMask};
@@ -76,6 +77,9 @@ pub use direct::DirectEngine;
 pub use fs_engine::FsEngine;
 pub use queue::{io_scope, AsyncEngine, IoExecutor, IoHandle, IoScope};
 pub use retry::{RetryEngine, RetryExhausted, RetryPolicy};
+pub use sched::DwrrQueue;
+
+pub use crate::util::events::{JobId, MAX_JOB_LANES};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -231,6 +235,10 @@ impl IoStats {
             queue_count,
             retries: 0,
             retry_exhaustions: 0,
+            // per-job lanes are queue-service accounting: the shared
+            // IoExecutor overlays them (AsyncEngine::stats), the same
+            // way RetryEngine overlays the retry counters
+            ..Default::default()
         }
     }
 }
@@ -259,6 +267,18 @@ pub struct IoSnapshot {
     /// surfaced to the caller) — metered apart from [`Self::retries`]
     /// so absorbed blips and terminal failures never blur together.
     pub retry_exhaustions: u64,
+    /// Per-job queue service: tasks dispatched on each job lane by the
+    /// shared [`IoExecutor`] (0 when no executor overlays this
+    /// snapshot; see [`AsyncEngine::stats`]).  Lane assignment is
+    /// [`JobId::lane`]; [`JobId::HOST`] is lane 0.
+    pub job_ops: [u64; MAX_JOB_LANES],
+    /// Per-job scheduled cost (bytes for transfers, 1 per control op)
+    /// dispatched on each lane — the weighted-fair scheduler's
+    /// currency, so lane ratios here are what the weights shape.
+    pub job_bytes: [u64; MAX_JOB_LANES],
+    /// Per-job wall-clock worker occupancy (queue service time): how
+    /// long the pool's workers spent executing each job's submissions.
+    pub job_busy_ns: [u64; MAX_JOB_LANES],
 }
 
 impl IoSnapshot {
@@ -299,6 +319,22 @@ impl IoSnapshot {
     /// the same bytes but very different submission counts.
     pub fn ops(&self) -> u64 {
         self.reads + self.writes
+    }
+
+    /// One job's queue service time in seconds (0 for unused lanes).
+    pub fn job_busy_secs(&self, job: JobId) -> f64 {
+        self.job_busy_ns[job.lane()] as f64 / 1e9
+    }
+
+    /// One job's share of total scheduled cost across all lanes
+    /// (0.0 when nothing was dispatched) — the quantity the DWRR
+    /// weights shape, and what `bench_tenancy` gates on.
+    pub fn job_share(&self, job: JobId) -> f64 {
+        let total: u64 = self.job_bytes.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.job_bytes[job.lane()] as f64 / total as f64
     }
 }
 

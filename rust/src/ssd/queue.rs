@@ -53,34 +53,53 @@
 //! retry/backoff semantics as direct sync calls, with no retry code in
 //! the workers themselves.
 
-use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::pinned::Lease;
+use crate::util::events::{JobId, MAX_JOB_LANES};
 
+use super::sched::DwrrQueue;
 use super::NvmeEngine;
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
 struct Sq {
-    tasks: VecDeque<Task>,
+    tasks: DwrrQueue<Task>,
     shutdown: bool,
+}
+
+/// Per-job-lane service accounting, charged by the workers as tasks
+/// execute (ops dispatched, cost bytes, wall-clock busy time).
+#[derive(Default)]
+struct LaneStats {
+    ops: AtomicU64,
+    bytes: AtomicU64,
+    busy_ns: AtomicU64,
 }
 
 struct QueueShared {
     sq: Mutex<Sq>,
     cv: Condvar,
+    lanes: [LaneStats; MAX_JOB_LANES],
 }
 
-/// Persistent worker pool draining one FIFO submission queue.
+/// Persistent worker pool draining one weighted-fair submission queue.
 ///
 /// Workers live for the executor's lifetime; `Drop` drains the queue
 /// and joins them.  Jobs run out of order across workers — ordering,
 /// when needed, is the caller's business (see the swapper's reorder
 /// window).
+///
+/// Submissions carry a [`JobId`] lane and a byte cost; dispatch is
+/// deficit-weighted round robin ([`DwrrQueue`]) across lanes, FIFO
+/// within a lane.  Pre-tenancy call sites go through [`Self::submit`],
+/// which tags [`JobId::HOST`] — with a single lane active the policy
+/// degenerates to exactly the old FIFO.
 pub struct IoExecutor {
     shared: Arc<QueueShared>,
     workers: Vec<JoinHandle<()>>,
@@ -98,8 +117,9 @@ impl IoExecutor {
     pub fn with_thread_prefix(workers: usize, prefix: &str) -> Self {
         let workers = workers.max(1);
         let shared = Arc::new(QueueShared {
-            sq: Mutex::new(Sq { tasks: VecDeque::new(), shutdown: false }),
+            sq: Mutex::new(Sq { tasks: DwrrQueue::new(), shutdown: false }),
             cv: Condvar::new(),
+            lanes: Default::default(),
         });
         let handles = (0..workers)
             .map(|i| {
@@ -117,14 +137,37 @@ impl IoExecutor {
         self.workers.len()
     }
 
-    /// Enqueue an owned job; returns immediately.
+    /// Enqueue an owned job on the host lane; returns immediately.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
-        self.push(Box::new(job));
+        self.submit_for(JobId::HOST, 1, job);
     }
 
-    fn push(&self, task: Task) {
+    /// Enqueue an owned job on `job`'s lane with a byte `cost` (the
+    /// weighted-fair scheduling currency; use the transfer size, or 1
+    /// for control work).
+    pub fn submit_for<F: FnOnce() + Send + 'static>(&self, job: JobId, cost: u64, f: F) {
+        self.push(job.lane(), cost, Box::new(f));
+    }
+
+    /// Set a job's scheduling weight (clamped to ≥ 1; default 1).
+    pub fn set_weight(&self, job: JobId, weight: u32) {
+        self.shared.sq.lock().unwrap().tasks.set_weight(job.lane(), weight);
+    }
+
+    /// Overlay this executor's per-job service counters onto `snap`.
+    /// Lane totals accumulate across the executor's lifetime, summed
+    /// over every engine submitting through it.
+    pub fn fill_job_lanes(&self, snap: &mut super::IoSnapshot) {
+        for (i, lane) in self.shared.lanes.iter().enumerate() {
+            snap.job_ops[i] = lane.ops.load(Ordering::Relaxed);
+            snap.job_bytes[i] = lane.bytes.load(Ordering::Relaxed);
+            snap.job_busy_ns[i] = lane.busy_ns.load(Ordering::Relaxed);
+        }
+    }
+
+    fn push(&self, lane: usize, cost: u64, task: Task) {
         let mut sq = self.shared.sq.lock().unwrap();
-        sq.tasks.push_back(task);
+        sq.tasks.push(lane, cost, task);
         drop(sq);
         self.shared.cv.notify_one();
     }
@@ -152,10 +195,10 @@ impl Drop for IoExecutor {
 
 fn worker_loop(shared: Arc<QueueShared>) {
     loop {
-        let task = {
+        let (lane, cost, task) = {
             let mut sq = shared.sq.lock().unwrap();
             loop {
-                if let Some(t) = sq.tasks.pop_front() {
+                if let Some(t) = sq.tasks.pop() {
                     break t;
                 }
                 if sq.shutdown {
@@ -168,7 +211,14 @@ fn worker_loop(shared: Arc<QueueShared>) {
         // never pop and their waiters would hang.  The panic is
         // contained here; an abandoned Completer (its Drop runs during
         // the unwind) surfaces as an error at the handle.
+        let t0 = Instant::now();
         let _ = std::panic::catch_unwind(AssertUnwindSafe(task));
+        let stats = &shared.lanes[lane.min(MAX_JOB_LANES - 1)];
+        stats.ops.fetch_add(1, Ordering::Relaxed);
+        stats.bytes.fetch_add(cost, Ordering::Relaxed);
+        stats
+            .busy_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
 }
 
@@ -326,7 +376,7 @@ impl<'scope> IoScope<'scope> {
                 Box<dyn FnOnce() + Send + 'static>,
             >(wrapped)
         };
-        exec.push(wrapped);
+        exec.push(JobId::HOST.lane(), 1, wrapped);
     }
 
     fn wait_all(&self) {
@@ -374,21 +424,37 @@ where
 /// shared executor and return [`IoHandle`]s; the sync [`NvmeEngine`]
 /// methods delegate straight to the wrapped engine, so existing
 /// callers keep working.
+///
+/// Every submission is tagged with the engine's [`JobId`] (default
+/// [`JobId::HOST`]; see [`Self::for_job`]) and the transfer's byte
+/// size, which together drive the executor's weighted-fair dispatch
+/// and per-job service accounting.
 #[derive(Clone)]
 pub struct AsyncEngine {
     inner: Arc<dyn NvmeEngine>,
     exec: Arc<IoExecutor>,
+    job: JobId,
 }
 
 impl AsyncEngine {
     pub fn new(inner: Arc<dyn NvmeEngine>, workers: usize) -> Self {
-        Self { inner, exec: Arc::new(IoExecutor::new(workers)) }
+        Self { inner, exec: Arc::new(IoExecutor::new(workers)), job: JobId::HOST }
     }
 
     /// Share an existing executor (one queue layer per process, not
     /// one per call site).
     pub fn with_executor(inner: Arc<dyn NvmeEngine>, exec: Arc<IoExecutor>) -> Self {
-        Self { inner, exec }
+        Self { inner, exec, job: JobId::HOST }
+    }
+
+    /// Tag every submission from this handle with `job`'s lane.
+    pub fn for_job(mut self, job: JobId) -> Self {
+        self.job = job;
+        self
+    }
+
+    pub fn job(&self) -> JobId {
+        self.job
     }
 
     pub fn engine(&self) -> &Arc<dyn NvmeEngine> {
@@ -404,7 +470,7 @@ impl AsyncEngine {
     pub fn submit_read(&self, key: String, mut buf: Vec<u8>) -> IoHandle<Vec<u8>> {
         let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
-        self.exec.submit(move || {
+        self.exec.submit_for(self.job, buf.len() as u64, move || {
             let res = eng.read(&key, &mut buf);
             completer.complete(res.map(move |()| buf));
         });
@@ -423,7 +489,7 @@ impl AsyncEngine {
     ) -> IoHandle<Vec<u8>> {
         let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
-        self.exec.submit(move || {
+        self.exec.submit_for(self.job, buf.len() as u64, move || {
             let res = eng.read_at(&key, offset, &mut buf);
             completer.complete(res.map(move |()| buf));
         });
@@ -435,7 +501,7 @@ impl AsyncEngine {
     pub fn submit_write(&self, key: String, data: Vec<u8>) -> IoHandle<Vec<u8>> {
         let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
-        self.exec.submit(move || {
+        self.exec.submit_for(self.job, data.len() as u64, move || {
             let res = eng.write(&key, &data);
             completer.complete(res.map(move |()| data));
         });
@@ -447,7 +513,7 @@ impl AsyncEngine {
     pub fn submit_read_f32(&self, key: String, mut buf: Vec<f32>) -> IoHandle<Vec<f32>> {
         let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
-        self.exec.submit(move || {
+        self.exec.submit_for(self.job, (buf.len() * 4) as u64, move || {
             let res = eng.read(&key, crate::dtype::f32s_as_bytes_mut(&mut buf));
             completer.complete(res.map(move |()| buf));
         });
@@ -458,7 +524,7 @@ impl AsyncEngine {
     pub fn submit_write_f32(&self, key: String, data: Vec<f32>) -> IoHandle<Vec<f32>> {
         let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
-        self.exec.submit(move || {
+        self.exec.submit_for(self.job, (data.len() * 4) as u64, move || {
             let res = eng.write(&key, crate::dtype::f32s_as_bytes(&data));
             completer.complete(res.map(move |()| data));
         });
@@ -476,7 +542,8 @@ impl AsyncEngine {
     ) -> IoHandle<Lease> {
         let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
-        self.exec.submit(move || {
+        let cost = buf.as_slice().len() as u64;
+        self.exec.submit_for(self.job, cost, move || {
             let res = eng.read_at(&key, offset, buf.as_mut_slice());
             completer.complete(res.map(move |()| buf));
         });
@@ -500,7 +567,7 @@ impl AsyncEngine {
     ) -> IoHandle<Arc<Lease>> {
         let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
-        self.exec.submit(move || {
+        self.exec.submit_for(self.job, len as u64, move || {
             let res = if src_off + len <= buf.as_slice().len() {
                 eng.write_at(&key, offset, &buf.as_slice()[src_off..src_off + len])
             } else {
@@ -524,7 +591,8 @@ impl AsyncEngine {
     ) -> IoHandle<Lease> {
         let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
-        self.exec.submit(move || {
+        let cost = buf.as_slice().len() as u64;
+        self.exec.submit_for(self.job, cost, move || {
             let res = eng.write_at(&key, offset, buf.as_slice());
             completer.complete(res.map(move |()| buf));
         });
@@ -562,7 +630,11 @@ impl NvmeEngine for AsyncEngine {
     }
 
     fn stats(&self) -> super::IoSnapshot {
-        self.inner.stats()
+        // overlay the executor's per-job service lanes: the wrapped
+        // engine meters transfers, the executor meters queue service
+        let mut s = self.inner.stats();
+        self.exec.fill_job_lanes(&mut s);
+        s
     }
 
     fn label(&self) -> &'static str {
@@ -815,6 +887,35 @@ mod tests {
             .wait()
             .is_err());
         assert_eq!(arena.stats().requested_bytes, 0, "leases leaked");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn per_job_lanes_meter_service_and_single_lane_stays_fifo() {
+        let dir = std::env::temp_dir().join(format!("ma-aioj-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let inner: Arc<dyn NvmeEngine> =
+            Arc::new(DirectEngine::new(&dir, 1, 1 << 22, 1).unwrap());
+        let exec = Arc::new(IoExecutor::new(2));
+        let host = AsyncEngine::with_executor(Arc::clone(&inner), Arc::clone(&exec));
+        let j3 = host.clone().for_job(JobId(3));
+
+        let mut handles = Vec::new();
+        for i in 0..4usize {
+            handles.push(host.submit_write(format!("h{i}"), vec![1u8; 1000]));
+            handles.push(j3.submit_write(format!("t{i}"), vec![2u8; 3000]));
+        }
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let snap = host.stats();
+        assert_eq!(snap.job_ops[JobId::HOST.lane()], 4);
+        assert_eq!(snap.job_bytes[JobId::HOST.lane()], 4 * 1000);
+        assert_eq!(snap.job_ops[JobId(3).lane()], 4);
+        assert_eq!(snap.job_bytes[JobId(3).lane()], 4 * 3000);
+        assert!(snap.job_busy_ns[JobId(3).lane()] > 0, "service time not metered");
+        // untouched lanes stay zero
+        assert_eq!(snap.job_ops[1], 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,342 @@
+//! Deficit-weighted-round-robin submission scheduling.
+//!
+//! Under multi-job tenancy every [`super::queue::IoExecutor`]
+//! submission carries a job lane and a byte cost; this module holds the
+//! pure scheduling structure that replaces the old FIFO: a classic
+//! **deficit round robin** (Shreedhar & Varghese) with per-flow
+//! weights.
+//!
+//! - Each flow (job lane) keeps a FIFO of `(cost, item)` — order
+//!   *within* a job is unchanged, which is what the swapper's reorder
+//!   window and the optimizer's flush barriers rely on.
+//! - An active ring visits backlogged flows round-robin.  On each
+//!   fresh visit a flow earns `weight × QUANTUM_UNIT` deficit; it may
+//!   dispatch head-of-line items while its deficit covers their cost,
+//!   then the ring rotates.  Over any backlogged interval, served
+//!   bytes converge to the weight ratio regardless of item sizes or
+//!   arrival order.
+//! - **Work conserving:** `pop` returns an item whenever any flow has
+//!   one queued — an oversized head never idles the queue, because
+//!   each rotation grows that flow's deficit until it covers the cost.
+//! - A flow that drains leaves the ring and forfeits its leftover
+//!   deficit (standard DRR: an idle job cannot bank priority).
+//!
+//! Costs are bytes for data transfers and `1` for control work
+//! (flushes, metadata); a zero cost is clamped to one so control-only
+//! floods still rotate fairly.
+
+use std::collections::VecDeque;
+
+/// Deficit earned per fresh ring visit, per unit of weight.  64 KiB —
+/// comparable to one tile-sized transfer, so small-weight flows still
+/// make progress every few rotations.
+pub const QUANTUM_UNIT: u64 = 64 * 1024;
+
+struct Flow<T> {
+    q: VecDeque<(u64, T)>,
+    weight: u32,
+    deficit: u64,
+    in_ring: bool,
+    /// A fresh ring visit (first look since the flow entered the ring
+    /// or since the ring last rotated past it) earns a quantum.
+    fresh: bool,
+}
+
+impl<T> Flow<T> {
+    fn new() -> Self {
+        Self { q: VecDeque::new(), weight: 1, deficit: 0, in_ring: false, fresh: true }
+    }
+
+    fn quantum(&self) -> u64 {
+        u64::from(self.weight.max(1)) * QUANTUM_UNIT
+    }
+}
+
+/// Weighted-fair multi-flow queue.  Flows are dense `usize` lanes
+/// (see [`crate::util::events::JobId::lane`]); unknown lanes are
+/// created on first touch with weight 1, so the single-job case is
+/// plain FIFO with zero configuration.
+pub struct DwrrQueue<T> {
+    flows: Vec<Flow<T>>,
+    ring: VecDeque<usize>,
+    len: usize,
+}
+
+impl<T> Default for DwrrQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> DwrrQueue<T> {
+    pub fn new() -> Self {
+        Self { flows: Vec::new(), ring: VecDeque::new(), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Queued items on one lane.
+    pub fn lane_len(&self, lane: usize) -> usize {
+        self.flows.get(lane).map_or(0, |f| f.q.len())
+    }
+
+    fn ensure(&mut self, lane: usize) {
+        while self.flows.len() <= lane {
+            self.flows.push(Flow::new());
+        }
+    }
+
+    /// Set a lane's scheduling weight (clamped to ≥ 1).  Takes effect
+    /// on the lane's next fresh ring visit.
+    pub fn set_weight(&mut self, lane: usize, weight: u32) {
+        self.ensure(lane);
+        self.flows[lane].weight = weight.max(1);
+    }
+
+    pub fn weight(&self, lane: usize) -> u32 {
+        self.flows.get(lane).map_or(1, |f| f.weight)
+    }
+
+    /// Enqueue `item` on `lane` with a byte `cost` (clamped to ≥ 1).
+    pub fn push(&mut self, lane: usize, cost: u64, item: T) {
+        self.ensure(lane);
+        let flow = &mut self.flows[lane];
+        flow.q.push_back((cost.max(1), item));
+        self.len += 1;
+        if !flow.in_ring {
+            flow.in_ring = true;
+            flow.fresh = true;
+            flow.deficit = 0;
+            self.ring.push_back(lane);
+        }
+    }
+
+    /// Dispatch the next item under the weighted-fair policy; returns
+    /// `(lane, cost, item)`.  `Some` whenever `len() > 0` (work
+    /// conservation); `None` only on an empty queue.
+    pub fn pop(&mut self) -> Option<(usize, u64, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            let lane = *self.ring.front().expect("non-empty queue has a ring");
+            let flow = &mut self.flows[lane];
+            if flow.fresh {
+                flow.deficit = flow.deficit.saturating_add(flow.quantum());
+                flow.fresh = false;
+            }
+            let head_cost = flow.q.front().map(|(c, _)| *c).expect("ringed flow has work");
+            if head_cost <= flow.deficit {
+                flow.deficit -= head_cost;
+                let (cost, item) = flow.q.pop_front().expect("checked above");
+                self.len -= 1;
+                if flow.q.is_empty() {
+                    // drained flows forfeit leftover deficit and leave
+                    // the ring — idle jobs cannot bank priority
+                    flow.deficit = 0;
+                    flow.in_ring = false;
+                    self.ring.pop_front();
+                }
+                return Some((lane, cost, item));
+            }
+            // deficit doesn't cover the head: rotate.  The flow earns
+            // another quantum on its next visit, so any finite cost is
+            // eventually covered and `pop` terminates.
+            flow.fresh = true;
+            let lane = self.ring.pop_front().expect("checked above");
+            self.ring.push_back(lane);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::{check, Config};
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn single_lane_is_fifo() {
+        let mut q = DwrrQueue::new();
+        for i in 0..100u32 {
+            q.push(0, 1 + (i as u64 % 7) * 4096, i);
+        }
+        for i in 0..100u32 {
+            let (lane, _, item) = q.pop().unwrap();
+            assert_eq!((lane, item), (0, i));
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn order_within_each_lane_is_preserved() {
+        let mut q = DwrrQueue::new();
+        for i in 0..40u32 {
+            q.push((i % 3) as usize, 8192, i);
+        }
+        let mut last = [None::<u32>; 3];
+        while let Some((lane, _, item)) = q.pop() {
+            if let Some(prev) = last[lane] {
+                assert!(item > prev, "lane {lane} reordered: {prev} then {item}");
+            }
+            last[lane] = Some(item);
+        }
+    }
+
+    #[test]
+    fn oversized_head_dispatches_instead_of_idling() {
+        let mut q = DwrrQueue::new();
+        // cost far beyond one quantum: deficit must accumulate across
+        // rotations rather than wedge the queue
+        q.push(0, 400 * QUANTUM_UNIT, "huge");
+        q.push(1, 1, "tiny");
+        let mut seen = Vec::new();
+        while let Some((_, _, item)) = q.pop() {
+            seen.push(item);
+        }
+        assert_eq!(seen.len(), 2);
+        assert!(seen.contains(&"huge") && seen.contains(&"tiny"));
+    }
+
+    #[test]
+    fn idle_lane_does_not_bank_deficit() {
+        let mut q = DwrrQueue::new();
+        q.set_weight(0, 8);
+        // lane 0 drains completely (forfeiting its deficit), then both
+        // lanes get equal-cost backlogs: lane 0's advantage must come
+        // only from its weight, not from banked idle time
+        q.push(0, 1, 0u32);
+        assert!(q.pop().is_some());
+        for i in 0..32 {
+            q.push(0, QUANTUM_UNIT, i);
+            q.push(1, QUANTUM_UNIT, 100 + i);
+        }
+        let mut served = [0u64; 2];
+        for _ in 0..18 {
+            let (lane, cost, _) = q.pop().unwrap();
+            served[lane] += cost;
+        }
+        // weight 8:1 over 18 equal-cost items -> lane 0 gets 16, lane 1
+        // gets 2 (one quantum each per rotation)
+        assert!(served[0] >= 14 * QUANTUM_UNIT, "lane0 served {}", served[0]);
+        assert!(served[1] >= QUANTUM_UNIT, "lane1 starved");
+    }
+
+    /// Satellite: work conservation — `pop` yields an item whenever
+    /// any lane has queued submissions, across random interleavings of
+    /// pushes and pops on random lanes/weights/costs.
+    #[test]
+    fn prop_work_conservation() {
+        check("dwrr-work-conservation", Config::default(), |rng, size| {
+            let lanes = 1 + rng.below(8);
+            let mut q = DwrrQueue::new();
+            for l in 0..lanes {
+                q.set_weight(l, 1 + rng.below(16) as u32);
+            }
+            let mut pushed = 0u64;
+            let mut popped = 0u64;
+            let ops = size.max(16);
+            for _ in 0..ops {
+                if rng.below(2) == 0 {
+                    let lane = rng.below(lanes);
+                    let cost = rng.below(256 * 1024) as u64; // 0 gets clamped
+                    q.push(lane, cost, pushed);
+                    pushed += 1;
+                } else {
+                    let backlog = q.len();
+                    match q.pop() {
+                        Some(_) => {
+                            prop_assert!(backlog > 0, "pop produced from empty queue");
+                            popped += 1;
+                        }
+                        None => {
+                            prop_assert!(
+                                backlog == 0,
+                                "queue idled with {backlog} queued submissions"
+                            );
+                        }
+                    }
+                }
+                prop_assert!(
+                    q.len() as u64 == pushed - popped,
+                    "len {} != pushed {pushed} - popped {popped}",
+                    q.len()
+                );
+            }
+            // drain: every queued item must come out, exactly once
+            while q.pop().is_some() {
+                popped += 1;
+            }
+            prop_assert!(popped == pushed, "drained {popped} of {pushed}");
+            Ok(())
+        });
+    }
+
+    /// Satellite: proportional share convergence — over a continuously
+    /// backlogged interval, each lane's served bytes track its weight
+    /// fraction, across random weight vectors and arrival patterns.
+    #[test]
+    fn prop_proportional_share_convergence() {
+        check(
+            "dwrr-proportional-share",
+            Config { cases: 48, ..Default::default() },
+            |rng, _size| {
+                let lanes = 2 + rng.below(5);
+                let weights: Vec<u32> =
+                    (0..lanes).map(|_| 1 + rng.below(8) as u32).collect();
+                let wsum: u64 = weights.iter().map(|&w| u64::from(w)).sum();
+                let mut q = DwrrQueue::new();
+                for (l, &w) in weights.iter().enumerate() {
+                    q.set_weight(l, w);
+                }
+                // every lane gets a backlog far deeper than the service
+                // interval, with randomized item sizes and interleaved
+                // arrival order
+                let backlog_bytes: u64 = 64 << 20;
+                let serve_bytes: u64 = 16 << 20;
+                let mut remaining: Vec<u64> = vec![backlog_bytes; lanes];
+                let mut order: Vec<usize> = (0..lanes).collect();
+                for i in (1..order.len()).rev() {
+                    order.swap(i, rng.below(i + 1));
+                }
+                for &l in &order {
+                    while remaining[l] > 0 {
+                        let cost =
+                            (1 + rng.below(128 * 1024) as u64).min(remaining[l]);
+                        remaining[l] -= cost;
+                        q.push(l, cost, ());
+                    }
+                }
+                let mut served = vec![0u64; lanes];
+                let mut total = 0u64;
+                while total < serve_bytes {
+                    let (lane, cost, ()) = q.pop().expect("deep backlog");
+                    served[lane] += cost;
+                    total += cost;
+                }
+                // no lane ran dry (served ≤ total « backlog), so the
+                // whole interval was continuously backlogged
+                for (l, &got) in served.iter().enumerate() {
+                    prop_assert!(got < backlog_bytes, "lane {l} ran dry mid-interval");
+                    let want = total as f64 * f64::from(weights[l]) / wsum as f64;
+                    let err = (got as f64 - want).abs() / want;
+                    prop_assert!(
+                        err < 0.10,
+                        "lane {l} (w={}) served {got} of {total}, want ~{want:.0} \
+                         ({:.1}% off; weights {weights:?})",
+                        weights[l],
+                        err * 100.0
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+}

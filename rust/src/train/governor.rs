@@ -143,6 +143,41 @@ impl PipelineTuning {
     }
 }
 
+/// Per-job ceilings a fleet-level arbiter may impose on top of one
+/// job's governor (see `jobs::FleetGovernor`).  Caps overlay the
+/// governor's own tuning at read time — they never mutate its internal
+/// state, so lifting a cap restores exactly the windows the job's own
+/// control law had converged to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetCaps {
+    pub max_tile_depth: usize,
+    pub max_prefetch_depth: usize,
+    pub max_act_budget: usize,
+}
+
+impl FleetCaps {
+    /// No ceiling on any knob (the identity overlay).
+    pub fn unlimited() -> Self {
+        Self {
+            max_tile_depth: usize::MAX,
+            max_prefetch_depth: usize::MAX,
+            max_act_budget: usize::MAX,
+        }
+    }
+
+    /// Apply these ceilings to a tuning.  Depth caps keep a floor of 1
+    /// — a fleet can throttle a job to serial progress but never wedge
+    /// it entirely.
+    pub fn clamp(&self, t: PipelineTuning) -> PipelineTuning {
+        PipelineTuning {
+            tile_depth: t.tile_depth.min(self.max_tile_depth.max(1)),
+            prefetch_depth: t.prefetch_depth.min(self.max_prefetch_depth.max(1)),
+            act_host_budget: t.act_host_budget.min(self.max_act_budget),
+            ..t
+        }
+    }
+}
+
 /// One step's observations, as the trainer sees them.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct GovernorSample {
@@ -208,6 +243,9 @@ pub struct PipelineGovernor {
     /// Knob values that caused pressure — growth stays strictly below
     /// them until [`GovernorConfig::reprobe_after`] clears them.
     ceiling: Option<PipelineTuning>,
+    /// Fleet-imposed ceilings, overlaid at read time (never folded
+    /// into `tuning` — see [`FleetCaps`]).
+    caps: Option<FleetCaps>,
     pressure_free_steps: u64,
     steps_since_grow: u64,
     /// Round-robin cursor over the growable knobs.
@@ -236,6 +274,7 @@ impl PipelineGovernor {
             cfg,
             tuning,
             ceiling: None,
+            caps: None,
             pressure_free_steps: 0,
             steps_since_grow: 0,
             grow_cursor: 0,
@@ -243,9 +282,21 @@ impl PipelineGovernor {
         }
     }
 
-    /// The tuning the next step should run with.
+    /// The tuning the next step should run with (fleet caps applied).
     pub fn tuning(&self) -> PipelineTuning {
-        self.tuning
+        self.capped()
+    }
+
+    /// Overlay (or lift, with `None`) fleet-imposed ceilings.
+    pub fn set_caps(&mut self, caps: Option<FleetCaps>) {
+        self.caps = caps;
+    }
+
+    fn capped(&self) -> PipelineTuning {
+        match self.caps {
+            Some(c) => c.clamp(self.tuning),
+            None => self.tuning,
+        }
     }
 
     pub fn stats(&self) -> GovernorStats {
@@ -270,7 +321,7 @@ impl PipelineGovernor {
         if s.pressured() {
             self.pressure_free_steps = 0;
             self.shrink(s);
-            return self.tuning;
+            return self.capped();
         }
         self.pressure_free_steps += 1;
         if self.pressure_free_steps >= self.cfg.reprobe_after {
@@ -301,7 +352,7 @@ impl PipelineGovernor {
         {
             self.grow(s);
         }
-        self.tuning
+        self.capped()
     }
 
     /// Strictly-monotone shrink, targeted at the pressured component.
@@ -689,6 +740,34 @@ mod tests {
             gov.observe(&stalled());
         }
         assert!(gov.tuning().optim_tile_bytes >= 4 << 20, "ceiling never cleared");
+    }
+
+    #[test]
+    fn fleet_caps_overlay_without_corrupting_internal_state() {
+        let mut gov =
+            PipelineGovernor::new(GovernorConfig::default(), tuning(4 << 20, 6, 6));
+        let full = gov.tuning();
+        gov.set_caps(Some(FleetCaps {
+            max_tile_depth: 2,
+            max_prefetch_depth: 1,
+            max_act_budget: 0,
+        }));
+        let t = gov.observe(&calm());
+        assert_eq!(t.tile_depth, 2);
+        assert_eq!(t.prefetch_depth, 1);
+        // lifting the caps restores the governor's own tuning exactly —
+        // the overlay never folded into internal state
+        gov.set_caps(None);
+        assert_eq!(gov.tuning(), full);
+        // depth caps floor at 1: a fleet can throttle a job to serial
+        // progress but never wedge it
+        gov.set_caps(Some(FleetCaps {
+            max_tile_depth: 0,
+            max_prefetch_depth: 0,
+            max_act_budget: usize::MAX,
+        }));
+        assert_eq!(gov.tuning().tile_depth, 1);
+        assert_eq!(gov.tuning().prefetch_depth, 1);
     }
 
     #[test]

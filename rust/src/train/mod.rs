@@ -28,6 +28,8 @@ pub mod trainer;
 pub mod weights;
 
 pub use data::Corpus;
-pub use governor::{GovernorConfig, GovernorSample, GovernorStats, PipelineGovernor, PipelineTuning};
+pub use governor::{
+    FleetCaps, GovernorConfig, GovernorSample, GovernorStats, PipelineGovernor, PipelineTuning,
+};
 pub use trainer::{TrainOpts, Trainer};
 pub use weights::init_weights;

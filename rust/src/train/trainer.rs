@@ -76,7 +76,9 @@ use std::time::Instant;
 
 use crate::ckpt::{self, CkptState, Journal};
 use crate::config::{ModelSpec, TrainSpec};
+use crate::jobs::JobCtx;
 use crate::metrics::{RunReport, StepMetrics};
+use crate::util::events::{Event, EventKind};
 use crate::offload::SpillingActivationStore;
 use crate::offload::{
     F32Scratch, FetchGroups, FetchOpts, GradFlatBuffer, LossScaler, OffloadEngine,
@@ -156,6 +158,11 @@ pub struct Trainer {
     /// later passes on a rate-matched just-in-time schedule.  Shared
     /// with every swapper; persisted at checkpoint commits.
     profile: Option<Arc<ProfileStore>>,
+    /// Tenancy identity: job id (tags every scheduler submission),
+    /// structured event sink, and the optional fleet governor whose
+    /// caps overlay this trainer's tuning.  `JobCtx::default()` — the
+    /// host identity — for solo runs.
+    ctx: JobCtx,
 }
 
 /// Governor bounds that admit the starting tuning, so enabling the
@@ -185,14 +192,10 @@ fn governor_config(train: &TrainSpec, start: PipelineTuning) -> GovernorConfig {
 }
 
 impl Trainer {
-    pub fn new(
-        artifacts_dir: &Path,
-        storage_dir: &Path,
-        train: TrainSpec,
-        opts: &TrainOpts,
-    ) -> anyhow::Result<Self> {
+    /// Load the PJRT runtime and check it matches the train shape —
+    /// shared by every constructor (solo and tenant).
+    pub fn load_runtime(artifacts_dir: &Path, train: &TrainSpec) -> anyhow::Result<Arc<Runtime>> {
         let rt = Arc::new(Runtime::load(artifacts_dir)?);
-        let spec = rt.manifest().model_spec()?;
         anyhow::ensure!(
             rt.manifest().config.seq == train.seq
                 && rt.manifest().config.batch == train.batch,
@@ -200,7 +203,33 @@ impl Trainer {
             rt.manifest().config.batch,
             rt.manifest().config.seq
         );
+        Ok(rt)
+    }
+
+    pub fn new(
+        artifacts_dir: &Path,
+        storage_dir: &Path,
+        train: TrainSpec,
+        opts: &TrainOpts,
+    ) -> anyhow::Result<Self> {
+        let rt = Self::load_runtime(artifacts_dir, &train)?;
+        let spec = rt.manifest().model_spec()?;
         let engine = OffloadEngine::new(spec, &train, storage_dir)?;
+        Self::with_engine(rt, engine, train, opts, JobCtx::default())
+    }
+
+    /// [`Self::new`] over a pre-built engine (view) — the multi-tenant
+    /// entry point: pass an [`OffloadEngine::job_view`] and the job's
+    /// [`JobCtx`] to run this trainer as one tenant of a shared stack.
+    /// `Trainer::new` is exactly `with_engine(root engine, host ctx)`.
+    pub fn with_engine(
+        rt: Arc<Runtime>,
+        engine: OffloadEngine,
+        train: TrainSpec,
+        opts: &TrainOpts,
+        ctx: JobCtx,
+    ) -> anyhow::Result<Self> {
+        let spec = rt.manifest().model_spec()?;
         let state_dtype = match train.optim_dtype {
             crate::dtype::DType::BF16 => StateDtype::BF16,
             _ => StateDtype::F32,
@@ -296,6 +325,7 @@ impl Trainer {
             coalesced,
             fetch_groups,
             profile,
+            ctx,
         };
         // shadow-page every checkpointed stream: until the first commit
         // flips, registered keys resolve to extent 0 (the bytes
@@ -332,16 +362,25 @@ impl Trainer {
         train: TrainSpec,
         opts: &TrainOpts,
     ) -> anyhow::Result<Self> {
-        let rt = Arc::new(Runtime::load(artifacts_dir)?);
+        let rt = Self::load_runtime(artifacts_dir, &train)?;
         let spec = rt.manifest().model_spec()?;
-        anyhow::ensure!(
-            rt.manifest().config.seq == train.seq
-                && rt.manifest().config.batch == train.batch,
-            "artifacts were exported for batch={} seq={}; re-export or adjust",
-            rt.manifest().config.batch,
-            rt.manifest().config.seq
-        );
         let engine = OffloadEngine::new(spec, &train, storage_dir)?;
+        Self::resume_with_engine(rt, engine, train, opts, JobCtx::default())
+    }
+
+    /// [`Self::resume`] over a pre-built engine (view): a tenant
+    /// recovers from *its own* shadow-paged epochs on the shared
+    /// device (keys are job-prefixed, so journals never collide).
+    /// Skipped-epoch and profile-divergence diagnostics go to the
+    /// ctx's event sink, attributed to its job.
+    pub fn resume_with_engine(
+        rt: Arc<Runtime>,
+        engine: OffloadEngine,
+        train: TrainSpec,
+        opts: &TrainOpts,
+        ctx: JobCtx,
+    ) -> anyhow::Result<Self> {
+        let spec = rt.manifest().model_spec()?;
         let journal = Journal::new(engine.nvme.clone());
         let candidates = journal.load_all();
         anyhow::ensure!(
@@ -421,11 +460,11 @@ impl Trainer {
                     break;
                 }
                 Err(e) => {
-                    eprintln!(
-                        "[resume] epoch {} is not recoverable ({e:#}); \
-                         walking back",
-                        ck.epoch
-                    );
+                    ctx.events.emit(Event {
+                        job: ctx.job,
+                        kind: EventKind::ResumeEpochSkipped { epoch: ck.epoch },
+                        detail: format!("{e:#}"),
+                    });
                     last_err = Some(e);
                 }
             }
@@ -515,11 +554,11 @@ impl Trainer {
                     if ckpt::stored_digest(engine.nvme.as_ref(), key)? == Some(want) {
                         ProfileStore::load(engine.nvme.as_ref())?.unwrap_or_default()
                     } else {
-                        eprintln!(
-                            "[resume] step-profile blob diverged from the journaled \
-                             digest; re-recording (prefetch falls back to the depth \
-                             window until then)"
-                        );
+                        ctx.events.emit(Event {
+                            job: ctx.job,
+                            kind: EventKind::ResumeProfileDiverged,
+                            detail: String::new(),
+                        });
                         ProfileStore::new()
                     }
                 }
@@ -552,6 +591,7 @@ impl Trainer {
             coalesced,
             fetch_groups,
             profile,
+            ctx,
         })
     }
 
@@ -585,7 +625,7 @@ impl Trainer {
     /// window depth always, plus coalesced groups and profile replay
     /// when configured.
     fn fetch_opts(&self) -> FetchOpts {
-        let mut opts = FetchOpts::window(self.tuning.prefetch_depth);
+        let mut opts = FetchOpts::window(self.tuning.prefetch_depth).for_job(self.ctx.job);
         if let Some(g) = &self.fetch_groups {
             opts = opts.with_groups(Arc::clone(g));
         }
@@ -901,19 +941,45 @@ impl Trainer {
         self.steps_done = step_idx;
         // close the feedback loop: the governor sees exactly what the
         // step report says, plus the arena's reserved/budget state
+        let arena_stats = self.engine.arena.stats();
+        let sample = GovernorSample {
+            host_copy_bytes: m.host_copy_bytes,
+            degraded_tiles: m.degraded_tiles,
+            prefetch_late: m.prefetch_late,
+            prefetch_hits: m.prefetch_hits,
+            io_wait_secs: m.io_wait_secs,
+            io_busy_secs: m.io_secs,
+            step_secs: m.step_secs,
+            arena_reserved: arena_stats.reserved_bytes,
+            arena_budget: self.engine.arena.budget_bytes(),
+        };
         if let Some(gov) = &mut self.governor {
-            let arena_stats = self.engine.arena.stats();
-            self.tuning = gov.observe(&GovernorSample {
-                host_copy_bytes: m.host_copy_bytes,
-                degraded_tiles: m.degraded_tiles,
-                prefetch_late: m.prefetch_late,
-                prefetch_hits: m.prefetch_hits,
-                io_wait_secs: m.io_wait_secs,
-                io_busy_secs: m.io_secs,
-                step_secs: m.step_secs,
-                arena_reserved: arena_stats.reserved_bytes,
-                arena_budget: self.engine.arena.budget_bytes(),
-            });
+            self.tuning = gov.observe(&sample);
+        }
+        // fleet arbitration rides the same sample: caps overlay the
+        // governed tuning (read-time clamp — lifted caps restore the
+        // converged state exactly); static runs clamp the spec's knobs
+        if let Some(fleet) = self.ctx.fleet.clone() {
+            let caps = fleet.report(self.ctx.job, &sample);
+            match &mut self.governor {
+                Some(gov) => {
+                    gov.set_caps(caps);
+                    self.tuning = gov.tuning();
+                }
+                None => {
+                    let base = PipelineTuning {
+                        optim_tile_bytes: self.train.optim_tile_bytes,
+                        tile_depth: self.train.optim_tile_depth.max(1),
+                        prefetch_depth: self.train.prefetch_depth.max(1),
+                        sched_lead_us: self.train.prefetch_lead_us,
+                        act_host_budget: self.train.act_host_budget,
+                    };
+                    self.tuning = match caps {
+                        Some(c) => c.clamp(base),
+                        None => base,
+                    };
+                }
+            }
         }
         Ok(m)
     }

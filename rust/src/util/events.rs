@@ -1,0 +1,190 @@
+//! Structured, job-attributable diagnostic events.
+//!
+//! The single-trainer stack reported rare conditions (skipped resume
+//! epochs, profile-digest divergence) with bare `eprintln!`.  Under
+//! multi-job tenancy those lines are useless — nothing says *which*
+//! job walked back an epoch — and tests cannot assert on them.  This
+//! module replaces them with a tiny event bus:
+//!
+//! - [`JobId`] names a tenant.  `JobId::HOST` (0) is the implicit
+//!   single-job default; every pre-tenancy call site maps to it, so
+//!   solo runs behave exactly as before.
+//! - [`Event`] is one diagnostic occurrence: the owning job, a typed
+//!   [`EventKind`], and a human-readable detail string.
+//! - [`EventSink`] is where events go.  [`StderrSink`] preserves the
+//!   historical `eprintln!` text (prefixed with the job for non-host
+//!   tenants); [`MemorySink`] records events for test assertions.
+//!
+//! The sink is deliberately synchronous and allocation-light: events
+//! fire on resume/error paths, not per step.
+
+use std::sync::{Arc, Mutex};
+
+/// Maximum number of per-job accounting lanes carried by fixed-size
+/// snapshot arrays ([`crate::ssd::IoSnapshot`]).  Jobs with an id at
+/// or above this share the last lane; scheduling weights and arena
+/// namespaces are likewise clamped.
+pub const MAX_JOB_LANES: usize = 8;
+
+/// A tenant identifier.  `0` is the host/default job — the identity
+/// of every pre-tenancy code path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u16);
+
+impl JobId {
+    /// The implicit single-job default: solo trainers, direct engine
+    /// users, and every call site that predates tenancy.
+    pub const HOST: JobId = JobId(0);
+
+    /// The accounting/scheduling lane for this job.  Ids beyond
+    /// [`MAX_JOB_LANES`] fold into the last lane.
+    pub fn lane(self) -> usize {
+        (self.0 as usize).min(MAX_JOB_LANES - 1)
+    }
+}
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "j{}", self.0)
+    }
+}
+
+/// What happened.  Typed so tests match on structure, not strings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EventKind {
+    /// `Trainer::resume` found a journaled epoch that failed
+    /// verification and walked back past it.
+    ResumeEpochSkipped { epoch: u64 },
+    /// The persisted step-profile blob diverged from its journaled
+    /// digest; prefetch falls back to the depth window until a fresh
+    /// profile records.
+    ResumeProfileDiverged,
+    /// A registry-managed job terminated with an error.
+    JobFailed,
+    /// A registry-managed job changed lifecycle state
+    /// (paused/resumed/stopped).
+    JobStateChanged { state: &'static str },
+}
+
+/// One diagnostic occurrence, attributable to a job.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub job: JobId,
+    pub kind: EventKind,
+    /// Free-form detail (error chains, epoch context).
+    pub detail: String,
+}
+
+/// Destination for [`Event`]s.  Shared between the registry and every
+/// trainer, so implementations must be `Send + Sync`.
+pub trait EventSink: Send + Sync {
+    fn emit(&self, ev: Event);
+}
+
+/// Default sink: formats events the way the historical `eprintln!`
+/// diagnostics did, with a `[jN]` prefix for non-host jobs.
+pub struct StderrSink;
+
+impl EventSink for StderrSink {
+    fn emit(&self, ev: Event) {
+        let who = if ev.job == JobId::HOST {
+            String::new()
+        } else {
+            format!("[{}] ", ev.job)
+        };
+        match &ev.kind {
+            EventKind::ResumeEpochSkipped { epoch } => {
+                eprintln!(
+                    "{who}[resume] epoch {epoch} is not recoverable ({}); walking back",
+                    ev.detail
+                );
+            }
+            EventKind::ResumeProfileDiverged => {
+                eprintln!(
+                    "{who}[resume] step-profile blob diverged from the journaled \
+                     digest; re-recording (prefetch falls back to the depth \
+                     window until then)"
+                );
+            }
+            EventKind::JobFailed => {
+                eprintln!("{who}[jobs] job failed: {}", ev.detail);
+            }
+            EventKind::JobStateChanged { state } => {
+                eprintln!("{who}[jobs] state -> {state}");
+            }
+        }
+    }
+}
+
+/// Test sink: records every event for later assertion.
+#[derive(Default)]
+pub struct MemorySink {
+    events: Mutex<Vec<Event>>,
+}
+
+impl MemorySink {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Snapshot of everything emitted so far.
+    pub fn events(&self) -> Vec<Event> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Events attributed to one job.
+    pub fn for_job(&self, job: JobId) -> Vec<Event> {
+        self.events
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|e| e.job == job)
+            .cloned()
+            .collect()
+    }
+}
+
+impl EventSink for MemorySink {
+    fn emit(&self, ev: Event) {
+        self.events.lock().unwrap().push(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_sink_records_and_filters_by_job() {
+        let sink = MemorySink::new();
+        sink.emit(Event {
+            job: JobId(1),
+            kind: EventKind::ResumeEpochSkipped { epoch: 7 },
+            detail: "bad checksum".into(),
+        });
+        sink.emit(Event {
+            job: JobId(2),
+            kind: EventKind::ResumeProfileDiverged,
+            detail: String::new(),
+        });
+        assert_eq!(sink.events().len(), 2);
+        let j1 = sink.for_job(JobId(1));
+        assert_eq!(j1.len(), 1);
+        assert_eq!(j1[0].kind, EventKind::ResumeEpochSkipped { epoch: 7 });
+        assert!(sink.for_job(JobId(3)).is_empty());
+    }
+
+    #[test]
+    fn lanes_clamp_to_the_fixed_array() {
+        assert_eq!(JobId::HOST.lane(), 0);
+        assert_eq!(JobId(3).lane(), 3);
+        assert_eq!(JobId(7).lane(), 7);
+        assert_eq!(JobId(8).lane(), MAX_JOB_LANES - 1);
+        assert_eq!(JobId(u16::MAX).lane(), MAX_JOB_LANES - 1);
+    }
+
+    #[test]
+    fn display_is_compact() {
+        assert_eq!(JobId(4).to_string(), "j4");
+    }
+}

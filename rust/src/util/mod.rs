@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod events;
 pub mod human;
 pub mod json;
 pub mod logger;

@@ -1,0 +1,275 @@
+//! Multi-job tenancy chaos soak: co-tenant trainers on one shared
+//! substrate (device + submission queue + arena) with per-job fault
+//! injection, at the optimizer level so the suite runs everywhere (no
+//! AOT artifacts needed).
+//!
+//! `MEMASCEND_TENANCY_SEED` reseeds the probabilistic fault pattern —
+//! CI sweeps several seeds; every pattern must be absorbed (transient)
+//! or contained (persistent) without touching the co-tenant, whose
+//! stored streams must stay bit-identical to a solo run.
+
+use std::sync::{Arc, Mutex};
+
+use memascend::jobs::{JobRegistry, JobState, ScopedEngine};
+use memascend::metrics::StepMetrics;
+use memascend::optimizer::{step_groups_tiled, AdamParams, OptimState, StateDtype};
+use memascend::pinned::{
+    AlignedAllocator, ArenaConfig, MemoryTracker, Mode, PinnedArena, MAX_NAMESPACES,
+};
+use memascend::ssd::{
+    AsyncEngine, FaultyEngine, FsEngine, IoExecutor, JobId, NvmeEngine, OpMask,
+    RetryEngine, RetryPolicy,
+};
+use memascend::util::events::{EventKind, EventSink, MemorySink};
+use memascend::util::rng::Xoshiro256;
+use memascend::util::stage::StageExecutor;
+
+const SIZES: [usize; 2] = [60_000, 30_000];
+const TILE_BYTES: usize = 64 << 10;
+const STEPS: u64 = 4;
+
+fn chaos_seed() -> u64 {
+    std::env::var("MEMASCEND_TENANCY_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ma-tenancy-{tag}-{}-{}",
+        chaos_seed(),
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn arena() -> Arc<PinnedArena> {
+    PinnedArena::new(
+        Arc::new(AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()))),
+        ArenaConfig::default(),
+    )
+}
+
+fn fs_engine(dir: &std::path::Path) -> Arc<dyn NvmeEngine> {
+    Arc::new(FsEngine::new(dir, 1, 512 << 10).unwrap())
+}
+
+fn grads_for(job: u16, step: u64) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::new(((job as u64) << 32) ^ step ^ 0x7E4A);
+    SIZES
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+fn init_states(engine: &dyn NvmeEngine, job: u16) -> Vec<OptimState> {
+    let mut rng = Xoshiro256::new(500 + job as u64);
+    SIZES
+        .iter()
+        .enumerate()
+        .map(|(g, &n)| {
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            OptimState::init(engine, &format!("g{g}"), &vals, StateDtype::F32).unwrap()
+        })
+        .collect()
+}
+
+fn fp16_keys(states: &[OptimState]) -> Vec<String> {
+    states.iter().map(|s| format!("{}/fp16", s.group)).collect()
+}
+
+fn one_step(
+    aio: &AsyncEngine,
+    stage: &StageExecutor,
+    arena: &Arc<PinnedArena>,
+    states: &[OptimState],
+    t: u64,
+    job: u16,
+) -> anyhow::Result<()> {
+    let hp = AdamParams { weight_decay: 0.01, ..Default::default() };
+    let grads = grads_for(job, t);
+    let gr: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    step_groups_tiled(
+        aio,
+        stage,
+        arena,
+        states,
+        &gr,
+        &fp16_keys(states),
+        t,
+        1.0,
+        &hp,
+        1,
+        TILE_BYTES,
+        2,
+    )?;
+    Ok(())
+}
+
+fn all_bytes(engine: &dyn NvmeEngine) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    for (g, &n) in SIZES.iter().enumerate() {
+        for (key, width) in [
+            (format!("g{g}/master"), 4usize),
+            (format!("g{g}/adam_m"), 4),
+            (format!("g{g}/adam_v"), 4),
+            (format!("g{g}/fp16"), 2),
+        ] {
+            let mut buf = vec![0u8; n * width];
+            engine.read(&key, &mut buf).unwrap();
+            out.push(buf);
+        }
+    }
+    out
+}
+
+/// Solo reference: the job alone on its own clean stack.
+fn run_solo(tag: &str, job: u16) -> Vec<Vec<u8>> {
+    let dir = tmp(&format!("solo-{tag}{job}"));
+    let eng = fs_engine(&dir);
+    let states = init_states(eng.as_ref(), job);
+    let aio = AsyncEngine::new(eng.clone(), 2);
+    let stage = StageExecutor::new(2);
+    let arena = arena();
+    for t in 1..=STEPS {
+        one_step(&aio, &stage, &arena, &states, t, job).unwrap();
+    }
+    let bytes = all_bytes(eng.as_ref());
+    std::fs::remove_dir_all(&dir).ok();
+    bytes
+}
+
+/// Spawn one clean tenant running the full step sequence through its
+/// scoped view of the shared substrate.
+fn spawn_clean_tenant(
+    reg: &JobRegistry,
+    base: &Arc<dyn NvmeEngine>,
+    ioq: &Arc<IoExecutor>,
+    shared_arena: &Arc<PinnedArena>,
+    stage: &Arc<StageExecutor>,
+    job: u16,
+) {
+    let id = JobId(job);
+    let scoped: Arc<dyn NvmeEngine> = Arc::new(ScopedEngine::new(base.clone(), id));
+    let states = init_states(scoped.as_ref(), job);
+    let aio = AsyncEngine::with_executor(scoped, ioq.clone()).for_job(id);
+    let ns = shared_arena.namespace(id.lane() as u32);
+    let stage = stage.clone();
+    reg.spawn(&format!("tenant{job}"), id, STEPS, move |t| {
+        one_step(&aio, &stage, &ns, &states, t + 1, job)?;
+        Ok(StepMetrics { step: t + 1, ..Default::default() })
+    });
+}
+
+#[test]
+fn probabilistic_faults_on_one_tenant_are_absorbed_and_contained() {
+    // tenant 1 clean, tenant 2 under seeded probabilistic NVMe faults
+    // absorbed by the bounded retry layer: BOTH must finish and BOTH
+    // must be bit-identical to their solo runs
+    let solo1 = run_solo("chaos", 1);
+    let solo2 = run_solo("chaos", 2);
+    let dir = tmp("chaos");
+    let base = fs_engine(&dir);
+    let ioq = Arc::new(IoExecutor::new(2));
+    let shared_arena = arena();
+    let stage = Arc::new(StageExecutor::new(2));
+    let sink = MemorySink::new();
+    let reg = JobRegistry::new(sink.clone() as Arc<dyn EventSink>);
+    spawn_clean_tenant(&reg, &base, &ioq, &shared_arena, &stage, 1);
+    let retry_probe = {
+        let id = JobId(2);
+        let scoped: Arc<dyn NvmeEngine> = Arc::new(ScopedEngine::new(base.clone(), id));
+        // states are written through the CLEAN scoped view, faults are
+        // injected under the step loop only — mirrors a device that
+        // starts hiccuping mid-run
+        let states = init_states(scoped.as_ref(), 2);
+        let faulty: Arc<dyn NvmeEngine> =
+            Arc::new(FaultyEngine::new(scoped, 48, chaos_seed()));
+        let retry = Arc::new(RetryEngine::new(faulty, RetryPolicy::attempts(6)));
+        let nvme: Arc<dyn NvmeEngine> = retry.clone();
+        let aio = AsyncEngine::with_executor(nvme, ioq.clone()).for_job(id);
+        let ns = shared_arena.namespace(id.lane() as u32);
+        let stage = stage.clone();
+        reg.spawn("chaos-tenant", id, STEPS, move |t| {
+            one_step(&aio, &stage, &ns, &states, t + 1, 2)?;
+            Ok(StepMetrics { step: t + 1, ..Default::default() })
+        });
+        retry
+    };
+    reg.join_all();
+
+    assert_eq!(reg.state(JobId(1)), Some(JobState::Finished));
+    assert_eq!(reg.state(JobId(2)), Some(JobState::Finished), "chaos not absorbed");
+    assert!(
+        !sink.events().iter().any(|e| e.kind == EventKind::JobFailed),
+        "no job may fail under absorbed transient faults"
+    );
+    let scoped1 = ScopedEngine::new(base.clone(), JobId(1));
+    let scoped2 = ScopedEngine::new(base.clone(), JobId(2));
+    assert_eq!(all_bytes(&scoped1), solo1, "clean tenant diverged");
+    assert_eq!(all_bytes(&scoped2), solo2, "chaos tenant diverged after retries");
+    assert!(
+        retry_probe.retries() > 0,
+        "fault pattern injected nothing — the soak exercised no chaos"
+    );
+    let ns_sum: usize = (0..MAX_NAMESPACES)
+        .map(|ns| shared_arena.ns_stats(ns).charged)
+        .sum();
+    assert_eq!(ns_sum, shared_arena.stats().reserved_bytes);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn persistent_fault_aborts_only_its_own_job() {
+    let solo1 = run_solo("persist", 1);
+    let dir = tmp("persist");
+    let base = fs_engine(&dir);
+    let ioq = Arc::new(IoExecutor::new(2));
+    let shared_arena = arena();
+    let stage = Arc::new(StageExecutor::new(2));
+    let sink = MemorySink::new();
+    let reg = JobRegistry::new(sink.clone() as Arc<dyn EventSink>);
+    spawn_clean_tenant(&reg, &base, &ioq, &shared_arena, &stage, 1);
+    {
+        let id = JobId(2);
+        let scoped: Arc<dyn NvmeEngine> = Arc::new(ScopedEngine::new(base.clone(), id));
+        let faulty: Arc<dyn NvmeEngine> =
+            Arc::new(FaultyEngine::transient(scoped, u32::MAX, OpMask::DATA));
+        let retried: Arc<dyn NvmeEngine> =
+            Arc::new(RetryEngine::new(faulty, RetryPolicy::attempts(3)));
+        let first_error = Arc::new(Mutex::new(String::new()));
+        let probe = first_error.clone();
+        reg.spawn("broken-tenant", id, STEPS, move |_| {
+            let mut rng = Xoshiro256::new(9);
+            let vals: Vec<f32> = (0..2048).map(|_| rng.normal() as f32).collect();
+            let res = OptimState::init(retried.as_ref(), "g0", &vals, StateDtype::F32);
+            if let Err(e) = &res {
+                *probe.lock().unwrap() = format!("{e:#}");
+            }
+            res.map(|_| StepMetrics::default())
+        });
+        reg.join_all();
+        assert_eq!(reg.state(JobId(1)), Some(JobState::Finished), "co-tenant dragged down");
+        assert_eq!(reg.state(JobId(2)), Some(JobState::Failed));
+        assert!(
+            !first_error.lock().unwrap().is_empty(),
+            "persistent fault produced no error"
+        );
+    }
+    let failures: Vec<_> = sink
+        .events()
+        .into_iter()
+        .filter(|e| e.kind == EventKind::JobFailed)
+        .collect();
+    assert_eq!(failures.len(), 1, "exactly one job may fail");
+    assert_eq!(failures[0].job, JobId(2), "failure attributed to the wrong job");
+    let scoped1 = ScopedEngine::new(base.clone(), JobId(1));
+    assert_eq!(
+        all_bytes(&scoped1),
+        solo1,
+        "co-tenant bytes diverged under a neighbor's persistent fault"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
