@@ -1,0 +1,16 @@
+# Repo-level entry points.
+#
+# `make artifacts` exports the AOT HLO artifacts + manifest that the
+# PJRT-backed runtime loads (python + jax required; the stages land in
+# artifacts/<config>/ — see python/compile/aot.py for the contract).
+
+.PHONY: artifacts test bench
+
+artifacts:
+	cd python && python -m compile.aot --config smoke --out-dir ../artifacts
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && cargo build --release --benches

@@ -1,0 +1,400 @@
+//! I/O integrity and straggler-tolerance bench: three CI-gated bars
+//! over the robustness stack (checksummed streams, bounded retry,
+//! per-op deadlines with hedged reads), all at the optimizer level so
+//! the full bench runs on plain CI runners:
+//!
+//! 1. **Corruption detection and healing (CI-gated)** — the same
+//!    deterministic step sequence runs once on a clean engine and once
+//!    over `Retry(Integrity(Faulty))` with seeded read-side bit flips
+//!    (~10% of whole-key reads corrupt one bit in flight — of stream
+//!    bytes or of the sidecar sums the verify path fetches).  Every
+//!    injected flip must be detected by the checksum layer and healed
+//!    by a re-read: the final training state must be bit-identical to
+//!    the clean run, with zero retry exhaustions.  A second engine
+//!    with *write-side* flips (durable rot) must refuse the rotten
+//!    bytes with the typed `integrity mismatch` after exhausting the
+//!    retry budget — training never sees corrupt data on either path.
+//! 2. **Hedged reads under latency spikes (CI-gated)** — a straggler
+//!    device (seeded ~16% of data ops stall ~50 ms) serves the same
+//!    serial read sequence unhedged and hedged (10 ms per-op
+//!    deadline).  The hedged pass must record timeouts and fired
+//!    hedges and finish faster than the unhedged baseline.
+//! 3. **Clean-path checksum overhead (reported)** — the step sequence
+//!    timed over a clean engine with and without the integrity layer;
+//!    the delta is the price of verify-on-read + sum-on-write.  Gated
+//!    only on transparency: both runs must produce identical bytes
+//!    (integrity off ≡ integrity on, data-wise).
+//!
+//! Emits `bench_out/BENCH_integrity.json`.
+
+mod common;
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use memascend::optimizer::{step_groups_tiled, AdamParams, OptimState, StateDtype};
+use memascend::pinned::{AlignedAllocator, ArenaConfig, MemoryTracker, Mode, PinnedArena};
+use memascend::ssd::{
+    AsyncEngine, DirectEngine, FaultyEngine, IntegrityEngine, NvmeEngine, OpKind,
+    OpMask, RetryEngine, RetryPolicy,
+};
+use memascend::util::bench::Table;
+use memascend::util::json::Json;
+use memascend::util::rng::Xoshiro256;
+use memascend::util::stage::StageExecutor;
+
+/// Every stream stays under one integrity block (256 KiB), so each
+/// key's sidecar is a single sum and *any* in-flight flip — of data or
+/// of a fetched sidecar — lands in the verified span.  That turns
+/// "every injected bit-flip detected" into a countable gate:
+/// `integrity_failures >= corrupted`.
+const SIZES: [usize; 3] = [60_000, 30_000, 14_000];
+const TILE_BYTES: usize = 32 << 10;
+const DEPTH: usize = 2;
+const STEPS: u64 = 4;
+const SEED: u64 = 7;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("ma-bint-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn arena() -> Arc<PinnedArena> {
+    PinnedArena::new(
+        Arc::new(AlignedAllocator::new(Mode::Real, Arc::new(MemoryTracker::new()))),
+        ArenaConfig::default(),
+    )
+}
+
+fn direct(dir: &std::path::Path) -> Arc<DirectEngine> {
+    Arc::new(DirectEngine::new(dir, 2, 1 << 27, 1).unwrap())
+}
+
+/// Deterministic per-step gradients: the clean and chaotic runs see
+/// the same data stream.
+fn grads_for(step: u64) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::new(step ^ 0xB0B);
+    SIZES
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+fn init_states(engine: &dyn NvmeEngine) -> Vec<OptimState> {
+    let mut rng = Xoshiro256::new(1009);
+    SIZES
+        .iter()
+        .enumerate()
+        .map(|(g, &n)| {
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            OptimState::init(engine, &format!("g{g}"), &vals, StateDtype::F32).unwrap()
+        })
+        .collect()
+}
+
+fn fp16_keys(states: &[OptimState]) -> Vec<String> {
+    states.iter().map(|s| format!("{}/fp16", s.group)).collect()
+}
+
+/// All stored streams of every group, read through `engine` — through
+/// the verified stack this re-checks (and, under transient flips,
+/// heals) every byte it returns.
+fn all_bytes(engine: &dyn NvmeEngine) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    for (g, &n) in SIZES.iter().enumerate() {
+        for (key, width) in [
+            (format!("g{g}/master"), 4usize),
+            (format!("g{g}/adam_m"), 4),
+            (format!("g{g}/adam_v"), 4),
+            (format!("g{g}/fp16"), 2),
+        ] {
+            let mut buf = vec![0u8; n * width];
+            engine.read(&key, &mut buf).unwrap();
+            out.push(buf);
+        }
+    }
+    out
+}
+
+/// Init + `STEPS` optimizer steps over `eng`; returns the timed step
+/// loop duration and the final stored bytes.
+fn run_pipeline(eng: Arc<dyn NvmeEngine>) -> (Duration, Vec<Vec<u8>>) {
+    let hp = AdamParams { weight_decay: 0.01, ..Default::default() };
+    let states = init_states(eng.as_ref());
+    let aio = AsyncEngine::new(eng.clone(), 2);
+    let stage = StageExecutor::new(2);
+    let arena = arena();
+    let t0 = Instant::now();
+    for t in 1..=STEPS {
+        let grads = grads_for(t);
+        let gr: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        step_groups_tiled(
+            &aio,
+            &stage,
+            &arena,
+            &states,
+            &gr,
+            &fp16_keys(&states),
+            t,
+            1.0,
+            &hp,
+            1,
+            TILE_BYTES,
+            DEPTH,
+        )
+        .unwrap();
+    }
+    let dt = t0.elapsed();
+    let bytes = all_bytes(eng.as_ref());
+    (dt, bytes)
+}
+
+struct CorruptionResult {
+    corrupted: u64,
+    integrity_failures: u64,
+    retries: u64,
+    retry_exhaustions: u64,
+    identical: bool,
+    rot_typed_abort: bool,
+    rot_exhaustions: u64,
+}
+
+/// Experiment 1: transient read flips heal to bit-identity; durable
+/// write rot aborts typed.
+fn run_corruption(clean: &[Vec<u8>]) -> CorruptionResult {
+    let dir = tmp("chaos");
+    // ~10% of whole-key reads corrupt one bit in the out buffer.
+    // Ranged reads are spared: the sum-maintenance path re-reads
+    // partially-covered edge blocks through this engine, and a flip
+    // there would *durably* rot the sidecar — that contract is the
+    // write-side half below.
+    let faulty = Arc::new(
+        FaultyEngine::new(direct(&dir), 0, SEED)
+            .with_bit_flips(100, SEED)
+            .with_flip_mask(OpMask::NONE.with(OpKind::Read)),
+    );
+    let integrity = Arc::new(IntegrityEngine::new(faulty.clone()));
+    let eng: Arc<dyn NvmeEngine> =
+        Arc::new(RetryEngine::new(integrity, RetryPolicy::attempts(12)));
+    let (_, bytes) = run_pipeline(eng.clone());
+    let snap = eng.stats();
+    let corrupted = faulty.corrupted.load(Ordering::Relaxed);
+    let identical = bytes == clean;
+    std::fs::remove_dir_all(&dir).ok();
+
+    // durable rot: every write flips one bit after the sums were
+    // computed, so stored data and stored sums can never agree; the
+    // verified read must exhaust its budget and refuse the bytes typed
+    let dir2 = tmp("rot");
+    let rotter = Arc::new(
+        FaultyEngine::new(direct(&dir2), 0, SEED)
+            .with_bit_flips(1024, SEED)
+            .with_flip_mask(OpMask::NONE.with(OpKind::Write)),
+    );
+    let verified: Arc<dyn NvmeEngine> = Arc::new(RetryEngine::new(
+        Arc::new(IntegrityEngine::new(rotter.clone())),
+        RetryPolicy::attempts(3),
+    ));
+    verified.write("rotten", &[0x5Au8; 4096]).unwrap();
+    let mut out = vec![0u8; 4096];
+    let rot_typed_abort = match verified.read("rotten", &mut out) {
+        Ok(()) => false,
+        Err(e) => {
+            let msg = e.to_string();
+            msg.contains("integrity mismatch") && msg.contains("retry exhausted")
+        }
+    };
+    let rot_exhaustions = verified.stats().retry_exhaustions;
+    std::fs::remove_dir_all(&dir2).ok();
+
+    CorruptionResult {
+        corrupted,
+        integrity_failures: snap.integrity_failures,
+        retries: snap.retries,
+        retry_exhaustions: snap.retry_exhaustions,
+        identical,
+        rot_typed_abort,
+        rot_exhaustions,
+    }
+}
+
+const READ_KEYS: usize = 96;
+const KEY_BYTES: usize = 128 << 10;
+
+struct StragglerResult {
+    secs: f64,
+    hedges: u64,
+    timeouts: u64,
+}
+
+/// One serial read pass over a straggler device (seeded latency
+/// spikes), hedged or not.  Serial submit-then-wait keeps the second
+/// queue worker free, so a fired hedge runs immediately instead of
+/// queuing behind a backlog — the shape a deadline is meant for.
+fn run_straggler(base: Arc<DirectEngine>, hedged: bool) -> StragglerResult {
+    let faulty = Arc::new(FaultyEngine::new(base, 0, SEED).with_latency(
+        160,
+        Duration::from_millis(50),
+        Duration::from_millis(5),
+        SEED,
+    ));
+    let deadline = hedged.then(|| Duration::from_millis(10));
+    let aio = AsyncEngine::new(faulty, 2).with_deadline(deadline);
+    let t0 = Instant::now();
+    for i in 0..READ_KEYS {
+        let got = aio
+            .submit_read(format!("k{i}"), vec![0u8; KEY_BYTES])
+            .wait()
+            .unwrap();
+        assert!(
+            got.iter().all(|&b| b == (i % 251) as u8),
+            "k{i} returned wrong bytes (hedged={hedged})"
+        );
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let health = aio.executor().health();
+    let out = StragglerResult { secs, hedges: health.hedges(), timeouts: health.timeouts() };
+    // let stale spiked primaries drain before the engine (and its temp
+    // dir) goes away under them
+    std::thread::sleep(Duration::from_millis(120));
+    out
+}
+
+fn main() {
+    // --- experiment 1: corruption detection and healing
+    let dir_clean = tmp("clean");
+    let (clean_secs, clean_bytes) = run_pipeline(direct(&dir_clean) as Arc<dyn NvmeEngine>);
+    std::fs::remove_dir_all(&dir_clean).ok();
+    let cor = run_corruption(&clean_bytes);
+    let mut t1 = Table::new(vec!["metric", "value"]);
+    t1.row(vec!["bit flips injected (read path)".into(), cor.corrupted.to_string()]);
+    t1.row(vec!["integrity failures detected".into(), cor.integrity_failures.to_string()]);
+    t1.row(vec!["retries (healing re-reads)".into(), cor.retries.to_string()]);
+    t1.row(vec!["retry exhaustions".into(), cor.retry_exhaustions.to_string()]);
+    t1.row(vec!["final state bit-identical".into(), cor.identical.to_string()]);
+    t1.row(vec!["durable rot -> typed abort".into(), cor.rot_typed_abort.to_string()]);
+    common::emit(
+        "bench_integrity_corruption",
+        "flip detection + healing (CI-gated)",
+        &t1,
+    );
+
+    // --- experiment 2: hedged reads under latency spikes
+    let dir_io = tmp("spikes");
+    let base = direct(&dir_io);
+    for i in 0..READ_KEYS {
+        base.write(&format!("k{i}"), &vec![(i % 251) as u8; KEY_BYTES]).unwrap();
+    }
+    let unhedged = run_straggler(base.clone(), false);
+    let hedged = run_straggler(base.clone(), true);
+    std::fs::remove_dir_all(&dir_io).ok();
+    let mut t2 = Table::new(vec!["pass", "wall s", "hedges", "timeouts"]);
+    t2.row(vec![
+        "unhedged".into(),
+        format!("{:.3}", unhedged.secs),
+        unhedged.hedges.to_string(),
+        unhedged.timeouts.to_string(),
+    ]);
+    t2.row(vec![
+        "hedged (10 ms deadline)".into(),
+        format!("{:.3}", hedged.secs),
+        hedged.hedges.to_string(),
+        hedged.timeouts.to_string(),
+    ]);
+    common::emit(
+        "bench_integrity_straggler",
+        "hedged reads vs latency spikes (CI-gated)",
+        &t2,
+    );
+
+    // --- experiment 3: clean-path checksum overhead
+    let dir_ver = tmp("verified");
+    let (verified_secs, verified_bytes) = run_pipeline(Arc::new(IntegrityEngine::new(
+        direct(&dir_ver) as Arc<dyn NvmeEngine>,
+    )));
+    std::fs::remove_dir_all(&dir_ver).ok();
+    let transparent = verified_bytes == clean_bytes;
+    let clean_s = clean_secs.as_secs_f64();
+    let overhead_pct = if clean_s > 0.0 {
+        (verified_secs.as_secs_f64() / clean_s - 1.0) * 100.0
+    } else {
+        0.0
+    };
+    let mut t3 = Table::new(vec!["pass", "step-loop s", "bytes identical"]);
+    t3.row(vec!["integrity off".into(), format!("{clean_s:.3}"), "-".into()]);
+    t3.row(vec![
+        "integrity on".into(),
+        format!("{:.3}", verified_secs.as_secs_f64()),
+        transparent.to_string(),
+    ]);
+    common::emit(
+        "bench_integrity_overhead",
+        "clean-path checksum overhead (reported)",
+        &t3,
+    );
+
+    std::fs::create_dir_all(common::OUT_DIR).ok();
+    let out = Json::obj(vec![
+        ("steps", Json::from(STEPS)),
+        ("flips_injected", Json::from(cor.corrupted)),
+        ("integrity_failures", Json::from(cor.integrity_failures)),
+        ("healing_retries", Json::from(cor.retries)),
+        ("retry_exhaustions", Json::from(cor.retry_exhaustions)),
+        ("chaos_bit_identical", Json::from(cor.identical)),
+        ("durable_rot_typed_abort", Json::from(cor.rot_typed_abort)),
+        ("unhedged_secs", Json::from(unhedged.secs)),
+        ("hedged_secs", Json::from(hedged.secs)),
+        ("hedges", Json::from(hedged.hedges)),
+        ("timeouts", Json::from(hedged.timeouts)),
+        ("clean_secs", Json::from(clean_s)),
+        ("verified_secs", Json::from(verified_secs.as_secs_f64())),
+        ("checksum_overhead_pct", Json::from(overhead_pct)),
+        ("integrity_transparent", Json::from(transparent)),
+    ]);
+    let path = format!("{}/BENCH_integrity.json", common::OUT_DIR);
+    match std::fs::write(&path, out.to_string()) {
+        Ok(()) => println!("[json] {path}"),
+        Err(e) => eprintln!("warn: could not write {path}: {e}"),
+    }
+
+    println!(
+        "corruption: {} flips -> {} detected, {} retries, {} exhaustions, identical {}",
+        cor.corrupted, cor.integrity_failures, cor.retries, cor.retry_exhaustions,
+        cor.identical
+    );
+    println!(
+        "straggler: unhedged {:.3}s vs hedged {:.3}s ({} hedges, {} timeouts)",
+        unhedged.secs, hedged.secs, hedged.hedges, hedged.timeouts
+    );
+    println!(
+        "overhead: integrity off {clean_s:.3}s vs on {:.3}s ({overhead_pct:+.1}%), transparent {transparent}",
+        verified_secs.as_secs_f64()
+    );
+
+    // CI gates
+    assert!(cor.corrupted > 0, "chaos engine injected no flips");
+    assert!(
+        cor.integrity_failures >= cor.corrupted,
+        "{} of {} flips detected — a flip slipped past the checksum layer",
+        cor.integrity_failures,
+        cor.corrupted
+    );
+    assert!(cor.retries >= cor.integrity_failures, "detected flips were not re-read");
+    assert_eq!(cor.retry_exhaustions, 0, "transient flips must heal within budget");
+    assert!(cor.identical, "training state diverged under read-side bit flips");
+    assert!(cor.rot_typed_abort, "durable rot not refused with the typed mismatch");
+    assert!(cor.rot_exhaustions > 0, "durable rot never exhausted the retry budget");
+    assert_eq!(unhedged.hedges, 0, "hedges fired without a deadline");
+    assert!(hedged.hedges > 0, "no hedge fired under latency spikes");
+    assert!(hedged.timeouts > 0, "no deadline timeout recorded under spikes");
+    assert!(
+        hedged.secs < unhedged.secs,
+        "hedging did not beat the straggler baseline: {:.3}s vs {:.3}s",
+        hedged.secs,
+        unhedged.secs
+    );
+    assert!(transparent, "integrity layer changed stored bytes");
+    println!("ACCEPTANCE: PASS");
+}

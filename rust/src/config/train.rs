@@ -201,6 +201,24 @@ pub struct TrainSpec {
     /// are metered in `IoSnapshot::retries` / `StepMetrics::io_retries`
     /// and exhaustion still surfaces the error.
     pub io_retry_attempts: usize,
+    /// Per-op I/O deadline in milliseconds.  Non-zero arms hedged
+    /// reads on the async queue (`AsyncEngine::with_deadline`): an
+    /// owned-buffer read whose primary submission stalls past the
+    /// health tracker's hedge delay (rolling p99, capped by this
+    /// deadline) is recorded as a timeout and re-submitted; first
+    /// completion wins.  `0` = off (no hedging, today's behavior).
+    pub io_deadline_ms: u64,
+    /// Verify every read against per-block FNV-1a checksums
+    /// (`ssd::IntegrityEngine`): writes maintain a `sums/{key}`
+    /// sidecar, reads verify it, mismatches surface as typed
+    /// `IntegrityError`s the retry layer re-reads through.  `false` =
+    /// no integrity layer — byte-identical to the pre-integrity stack.
+    pub verify_reads: bool,
+    /// Walk persisted keys between steps, re-reading (and thereby
+    /// verifying, when `verify_reads` is on) a couple per step so cold
+    /// rot is found before a restore needs the bytes.  Metered in
+    /// `StepMetrics::scrubbed_bytes` / `scrub_failures`.
+    pub scrub: bool,
     pub flags: MemAscendFlags,
     // optimizer hyper-parameters (must match artifacts' adam constants
     // when the HLO adam path is used — see manifest "adam")
@@ -238,6 +256,9 @@ impl Default for TrainSpec {
             fs_cached_fds: false,
             ckpt_interval_steps: 0,
             io_retry_attempts: 3,
+            io_deadline_ms: 0,
+            verify_reads: false,
+            scrub: false,
             flags: MemAscendFlags::memascend(),
             lr: 1.0e-3,
             beta1: 0.9,

@@ -68,6 +68,19 @@ pub fn commands() -> Vec<Command> {
                 "3",
                 "attempts per NVMe op under the transient-fault retry layer (<=1 = no retries)",
             )
+            .opt(
+                "io-deadline-ms",
+                "0",
+                "per-op I/O deadline in ms: a read outliving the health tracker's hedge delay is re-submitted and the first completion wins (0 = off)",
+            )
+            .flag(
+                "verify-reads",
+                "checksum every stream per 256 KiB block on write and verify on read (detected corruption retries under --io-retry)",
+            )
+            .flag(
+                "scrub",
+                "idle-time integrity scrub: re-read and re-verify a couple of streams between steps (needs --verify-reads)",
+            )
             .flag(
                 "resume",
                 "resume from the newest checkpoint epoch on --storage instead of re-initializing (requires a --ckpt-interval run and the original seed)",
@@ -107,6 +120,21 @@ pub fn commands() -> Vec<Command> {
             )
             .opt("ckpt-interval", "0", "per-job checkpoint cadence in steps (0 = off)")
             .opt("io-retry", "3", "attempts per NVMe op under the retry layer (<=1 = no retries)")
+            .opt(
+                "io-deadline-ms",
+                "0",
+                "per-op I/O deadline in ms for hedged reads (0 = off)",
+            )
+            .flag(
+                "verify-reads",
+                "per-block checksums on every job's streams, verified on read",
+            )
+            .flag("scrub", "per-job idle-time integrity scrub (needs --verify-reads)")
+            .opt(
+                "events-jsonl",
+                "",
+                "append structured events (job failures, device health, integrity violations) as JSON lines to this file instead of stderr",
+            )
             .opt("seed", "42", "base seed (job i defaults to seed + i)")
             .opt("artifacts", "artifacts", "AOT artifacts root")
             .opt("storage", "", "shared SSD-sim directory (default: temp)")
@@ -175,6 +203,10 @@ pub fn train_spec_from_args(args: &Args, batch: usize, seq: usize) -> anyhow::Re
         ckpt_interval_steps: args
             .get_usize("ckpt-interval", defaults.ckpt_interval_steps)?,
         io_retry_attempts: args.get_usize("io-retry", defaults.io_retry_attempts)?,
+        io_deadline_ms: args.get_usize("io-deadline-ms", defaults.io_deadline_ms as usize)?
+            as u64,
+        verify_reads: args.get_bool("verify-reads"),
+        scrub: args.get_bool("scrub"),
         flags: parse_mode(args.get_or("mode", "memascend"))?,
         ..defaults
     })
@@ -333,7 +365,11 @@ pub fn cmd_multitrain(args: &Args) -> anyhow::Result<()> {
     let spec = rt.manifest().model_spec()?;
     // one shared substrate: arena + device + submission queue + stage
     let engine = OffloadEngine::new_shared(spec, &train, &storage, jobs.len())?;
-    let sink: Arc<dyn EventSink> = Arc::new(StderrSink);
+    let sink: Arc<dyn EventSink> = match args.get_or("events-jsonl", "") {
+        "" => Arc::new(StderrSink),
+        p => crate::util::events::FileSink::create(p)
+            .map_err(|e| anyhow::anyhow!("--events-jsonl {p}: {e}"))?,
+    };
     let fleet = FleetGovernor::new(engine.arena.clone(), engine.ioq.clone(), FleetConfig::default());
     let registry = JobRegistry::new(sink.clone());
     eprintln!(

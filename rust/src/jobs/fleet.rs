@@ -134,10 +134,16 @@ impl FleetGovernor {
 
     /// Per-step report from one job's trainer.  Returns the caps the
     /// job must overlay on its governor (`None` = unlimited).
+    ///
+    /// A quarantined device ([`GovernorSample::device_degraded`]) is
+    /// fleet-level pressure too: the shared queue is sick, so the
+    /// heaviest tenant's windows shrink rather than every job piling
+    /// deeper submissions onto a struggling device.
     pub fn report(&self, job: JobId, sample: &GovernorSample) -> Option<FleetCaps> {
-        let pressured = sample
-            .arena_budget
-            .is_some_and(|b| sample.arena_reserved as f64 > self.cfg.pressure_frac * b as f64);
+        let pressured = sample.device_degraded
+            || sample.arena_budget.is_some_and(|b| {
+                sample.arena_reserved as f64 > self.cfg.pressure_frac * b as f64
+            });
         let mut jobs = self.jobs.lock().unwrap();
         if pressured {
             // Throttle the heaviest tenant only — by charged arena
@@ -276,6 +282,22 @@ mod tests {
         assert_eq!(fleet.report(JobId(1), &cool), None);
         assert!(!arena.ns_stats(1).revoked, "borrow right restored");
         assert_eq!(fleet.caps(JobId(1)), None);
+    }
+
+    #[test]
+    fn degraded_device_throttles_the_heaviest_tenant() {
+        let budget = 1 << 20;
+        let (arena, exec) = rig(budget);
+        let fleet = FleetGovernor::new(Arc::clone(&arena), exec, FleetConfig::default());
+        fleet.register(JobId(1), 1);
+        fleet.register(JobId(2), 1);
+        let j1_arena = arena.namespace(1);
+        let _lease = j1_arena.lease(512 * 1024, Cat::Other).unwrap();
+        // arena is calm; the device is not
+        let sick = GovernorSample { device_degraded: true, ..Default::default() };
+        assert_eq!(fleet.report(JobId(2), &sick), None);
+        let caps = fleet.caps(JobId(1)).expect("heaviest tenant capped");
+        assert_eq!(caps.max_tile_depth, 8);
     }
 
     #[test]

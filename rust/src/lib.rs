@@ -66,6 +66,42 @@
 //! A solo run is the degenerate case throughout: host namespace 0, no
 //! quota, unit weight, host job id — bit-identical to the
 //! pre-tenancy stack.
+//!
+//! ## Robustness layers: integrity, deadlines, device health
+//!
+//! Training state that lives on a commodity SSD for hours inherits the
+//! device's failure modes, so the engine stack carries an end-to-end
+//! robustness tier (opt-in, off by default — disabled it is
+//! byte-identical to the plain stack):
+//!
+//! - **Checksummed streams** — [`ssd::IntegrityEngine`]
+//!   (`--verify-reads`): per-256-KiB-block FNV-1a sums in a `sums/`
+//!   sidecar, verified on every read.  A mismatch is the typed
+//!   [`ssd::IntegrityError`], which the [`ssd::RetryEngine`] above
+//!   treats like any transient fault: in-flight flips heal by re-read,
+//!   durable rot exhausts the budget and aborts typed — training never
+//!   consumes corrupt bytes.  An idle-time scrubber (`--scrub`) walks
+//!   the checkpointed keys between steps, metered in
+//!   `StepMetrics::scrubbed_bytes`.
+//! - **Op deadlines and hedged reads** — every submission through the
+//!   [`ssd::IoExecutor`] feeds a [`ssd::HealthTracker`] (service-
+//!   latency EWMA/p99, error and timeout meters).  With
+//!   `--io-deadline-ms` set, a blocked read that outlives
+//!   [`ssd::HealthTracker::hedge_delay`] records a timeout and races a
+//!   re-submission — first completion wins, stragglers stop stalling
+//!   the pipeline.
+//! - **Device-health quarantine** — sustained error/timeout bursts trip
+//!   the tracker into a degraded state (emitting `DeviceDegraded`
+//!   events); the [`train::PipelineGovernor`] and
+//!   [`jobs::FleetGovernor`] treat a degraded device as backpressure
+//!   and shrink in-flight windows until a clean streak recovers it.
+//!
+//! The decorator order is fixed:
+//! `Shadow(Retry(Integrity(Faulty?(Scoped(base)))))` — integrity sits
+//! below retry so mismatches are retryable, above the (test-only)
+//! fault injector so injected corruption is caught, and above the job
+//! scope so each tenant's sidecars ride its own key prefix; see
+//! [`ssd`]'s module docs for the full contract.
 
 pub mod accounting;
 pub mod bufpool;

@@ -142,6 +142,24 @@ pub struct StepMetrics {
     /// mismatch after a plan change or profile loss).  Structured
     /// fallback signal, not an error: the pass re-records.
     pub prefetch_fallbacks: u64,
+    /// Hedged backup reads the async layer fired this step (delta of
+    /// `HealthTracker::hedges`).  0 with `io_deadline_ms` off or when
+    /// every primary read beat its deadline.
+    pub io_hedges: u64,
+    /// Primary reads that blew their per-op deadline this step (delta
+    /// of `HealthTracker::timeouts`); every timeout also fires a hedge.
+    pub io_timeouts: u64,
+    /// Checksum mismatches the integrity layer detected this step
+    /// (delta of `IoSnapshot::integrity_failures`).  Transient
+    /// corruption heals through the retry layer and still counts here.
+    pub integrity_failures: u64,
+    /// Bytes re-read and re-verified by the idle-time scrub walk after
+    /// this step (delta of `IoSnapshot::scrubbed_bytes`).  0 with
+    /// `--scrub` off.
+    pub scrubbed_bytes: u64,
+    /// Scrub passes whose re-verify found durable rot this step (delta
+    /// of `IoSnapshot::scrub_failures`).
+    pub scrub_failures: u64,
 }
 
 impl StepMetrics {
@@ -280,6 +298,11 @@ mod tests {
             prefetch_hits: 0,
             prefetch_late: 0,
             prefetch_fallbacks: 0,
+            io_hedges: 0,
+            io_timeouts: 0,
+            integrity_failures: 0,
+            scrubbed_bytes: 0,
+            scrub_failures: 0,
         }
     }
 

@@ -22,8 +22,8 @@ use crate::pinned::{
 use crate::ckpt::ShadowEngine;
 use crate::jobs::ScopedEngine;
 use crate::ssd::{
-    AsyncEngine, DirectEngine, FaultyEngine, FsEngine, IoExecutor, JobId, NvmeEngine,
-    OpMask, RetryEngine, RetryPolicy,
+    AsyncEngine, DirectEngine, FaultyEngine, FsEngine, IntegrityEngine, IoExecutor,
+    JobId, NvmeEngine, OpMask, RetryEngine, RetryPolicy,
 };
 use crate::util::stage::StageExecutor;
 
@@ -51,9 +51,17 @@ pub struct OffloadEngine {
     /// The raw storage engine (pre-retry, pre-shadow) — the substrate
     /// tenant views stack their own retry/fault/shadow layers over.
     pub base: Arc<dyn NvmeEngine>,
+    /// Typed handle on this view's checksum layer when
+    /// `TrainSpec::verify_reads` is on (`None` otherwise): the trainer
+    /// drives the between-steps scrubber and reads the meters here
+    /// while every I/O consumer keeps going through `nvme`.
+    pub integrity: Option<Arc<IntegrityEngine>>,
     /// Which tenant this engine (view) belongs to.  `JobId::HOST` for
     /// the root engine built by [`Self::new`]/[`Self::new_shared`].
     pub job: JobId,
+    /// Per-op deadline from `TrainSpec::io_deadline_ms` (`None` = 0 =
+    /// off); [`Self::async_io`] arms hedged reads with it.
+    pub deadline: Option<std::time::Duration>,
     /// Shared async submission queue: swapper fetch window, activation
     /// spill, and the optimizer swap ride this one executor (the
     /// engines keep their own per-device queues underneath).
@@ -133,16 +141,28 @@ impl OffloadEngine {
                 train.fs_cached_fds,
             )?)
         };
-        // transient-fault retry sits directly above the storage engine
-        // and below the async queue, so queued submit closures and
-        // synchronous calls retry identically (label passes through)
+        // checksums sit directly above the storage engine so anything
+        // the device (or an injected fault) corrupts is caught on read
+        let integrity = if train.verify_reads {
+            Some(Arc::new(IntegrityEngine::new(base.clone())))
+        } else {
+            None
+        };
+        let verified: Arc<dyn NvmeEngine> = match &integrity {
+            Some(i) => i.clone(),
+            None => base.clone(),
+        };
+        // transient-fault retry sits above the checksum layer and below
+        // the async queue, so queued submit closures and synchronous
+        // calls retry identically (label passes through) and a checksum
+        // mismatch is retried as a re-read before it aborts anything
         let nvme: Arc<dyn NvmeEngine> = if train.io_retry_attempts > 1 {
             Arc::new(RetryEngine::new(
-                base.clone(),
+                verified,
                 RetryPolicy::attempts(train.io_retry_attempts as u32),
             ))
         } else {
-            base.clone()
+            verified
         };
         // shadow paging tops the stack: logical checkpoint keys route
         // to per-epoch physical extents; everything unregistered
@@ -164,7 +184,10 @@ impl OffloadEngine {
             nvme,
             shadow,
             base,
+            integrity,
             job: JobId::HOST,
+            deadline: (train.io_deadline_ms > 0)
+                .then(|| std::time::Duration::from_millis(train.io_deadline_ms)),
             ioq,
             stage,
             checker,
@@ -180,10 +203,14 @@ impl OffloadEngine {
     /// device with optional per-job fault injection, and a private
     /// shadow-paging layer (each job checkpoints independently).
     ///
-    /// Layer order per job: `Shadow(Retry?(Faulty?(Scoped(base))))` —
-    /// retry sits *above* injection so probabilistic faults are
-    /// absorbed exactly like real transient faults, while persistent
-    /// ones exhaust the budget and abort only this job.
+    /// Layer order per job:
+    /// `Shadow(Retry?(Integrity?(Faulty?(Scoped(base)))))` — retry
+    /// sits *above* injection so probabilistic faults are absorbed
+    /// exactly like real transient faults, while persistent ones
+    /// exhaust the budget and abort only this job; the checksum layer
+    /// (`TrainSpec::verify_reads`) sits above injection too, so
+    /// injected bit-flips are caught, and above the key scoping, so
+    /// each tenant's `sums/` sidecars ride its own prefix.
     pub fn job_view(
         &self,
         spec: &ModelSpec,
@@ -209,13 +236,25 @@ impl OffloadEngine {
                 Arc::new(FaultyEngine::transient(scoped, u32::MAX, OpMask::DATA))
             }
         };
-        let retried: Arc<dyn NvmeEngine> = if train.io_retry_attempts > 1 {
-            Arc::new(RetryEngine::new(
-                faulted,
-                RetryPolicy::attempts(train.io_retry_attempts as u32),
-            ))
+        let integrity = if train.verify_reads {
+            Some(Arc::new(IntegrityEngine::new(faulted.clone()).for_job(job)))
         } else {
-            faulted
+            None
+        };
+        let verified: Arc<dyn NvmeEngine> = match &integrity {
+            Some(i) => i.clone(),
+            None => faulted,
+        };
+        let retried: Arc<dyn NvmeEngine> = if train.io_retry_attempts > 1 {
+            Arc::new(
+                RetryEngine::new(
+                    verified,
+                    RetryPolicy::attempts(train.io_retry_attempts as u32),
+                )
+                .for_job(job),
+            )
+        } else {
+            verified
         };
         let shadow = Arc::new(ShadowEngine::new(retried));
         let nvme: Arc<dyn NvmeEngine> = shadow.clone();
@@ -226,7 +265,10 @@ impl OffloadEngine {
             nvme,
             shadow,
             base: self.base.clone(),
+            integrity,
             job,
+            deadline: (train.io_deadline_ms > 0)
+                .then(|| std::time::Duration::from_millis(train.io_deadline_ms)),
             ioq: self.ioq.clone(),
             stage: self.stage.clone(),
             checker: self.checker,
@@ -237,9 +279,12 @@ impl OffloadEngine {
 
     /// Async surface over the configured NVMe engine, sharing the
     /// engine-wide submission queue.  Submissions carry this engine
-    /// view's job id into the weighted-fair scheduler.
+    /// view's job id into the weighted-fair scheduler; a configured
+    /// `TrainSpec::io_deadline_ms` arms hedged reads.
     pub fn async_io(&self) -> AsyncEngine {
-        AsyncEngine::with_executor(self.nvme.clone(), self.ioq.clone()).for_job(self.job)
+        AsyncEngine::with_executor(self.nvme.clone(), self.ioq.clone())
+            .for_job(self.job)
+            .with_deadline(self.deadline)
     }
 
     /// Run the configured overflow check over a flat fp32 buffer.
@@ -344,6 +389,46 @@ mod tests {
         // arena namespaces attribute to the shared ledger
         let ns1 = eng.arena.ns_stats(1);
         assert!(ns1.charged > 0, "j1's pool bytes must be attributed to ns 1");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn verify_reads_layers_checksums_under_retry_and_over_scoping() {
+        let train = TrainSpec { verify_reads: true, ..Default::default() };
+        let dir = storage("vr");
+        let eng = OffloadEngine::new_shared(&SMOKE, &train, &dir, 2).unwrap();
+        let integ = eng.integrity.as_ref().expect("verify_reads builds the layer");
+        // writes through the stack maintain sidecar sums on the base
+        eng.nvme.write("probe", &[5u8; 4096]).unwrap();
+        let mut out = [0u8; 4096];
+        eng.nvme.read("probe", &mut out).unwrap();
+        assert_eq!(out, [5u8; 4096]);
+        assert!(
+            eng.base.len_of(&crate::ssd::integrity::sums_key("probe")).is_some(),
+            "sidecar must land on the base engine"
+        );
+        assert_eq!(integ.failures(), 0);
+        // label still passes through the whole stack
+        assert_eq!(eng.nvme.label(), "direct-nvme");
+        // a tenant view gets its own layer, sidecars under its prefix
+        let j1 = eng.job_view(&SMOKE, &train, crate::ssd::JobId(1), None).unwrap();
+        assert!(j1.integrity.is_some());
+        j1.nvme.write("probe", &[9u8; 512]).unwrap();
+        j1.nvme.read("probe", &mut out[..512]).unwrap();
+        assert!(out[..512].iter().all(|&b| b == 9));
+        // a flip on the base (under the checksums) is detected and
+        // metered once the retry budget exhausts
+        let scoped_probe = "j1.probe";
+        let mut raw = vec![0u8; 512];
+        eng.base.read(scoped_probe, &mut raw).unwrap();
+        raw[17] ^= 0x10;
+        eng.base.write(scoped_probe, &raw).unwrap();
+        let err = j1.nvme.read("probe", &mut out[..512]).unwrap_err();
+        assert!(
+            err.to_string().contains("integrity mismatch"),
+            "unexpected error: {err}"
+        );
+        assert!(j1.nvme.stats().integrity_failures > 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

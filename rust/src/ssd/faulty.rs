@@ -20,11 +20,29 @@
 //!   independently exercisable.  The default mask is the data ops
 //!   only (read/write/read_at/write_at), which keeps fault tests
 //!   aimed at the tile pipeline's data path unless they opt in.
-//! - **Metering**: `injected` counts the faults actually thrown.
+//! - **Metering**: `injected` counts the faults actually thrown,
+//!   `delayed` the latency spikes served, `corrupted` the bits
+//!   flipped.
+//!
+//! Two further injections compose orthogonally with the mode, each
+//! drawing from its own deterministic op-index stream so enabling one
+//! never perturbs another's fault pattern:
+//!
+//! - **Latency** ([`FaultyEngine::with_latency`]): a seeded subset of
+//!   masked ops sleeps a fixed delay plus seeded jitter before
+//!   touching the device — the straggler/stall shape the hedged-read
+//!   path ([`crate::ssd::HealthTracker`]) must cut short.
+//! - **Bit flips** ([`FaultyEngine::with_bit_flips`]): a seeded subset
+//!   of masked data ops has one bit flipped — in the returned buffer
+//!   for reads (transient misread: a re-read heals), in the bytes
+//!   handed down for writes (durable rot: only a rewrite heals) — the
+//!   corruption the integrity layer
+//!   ([`crate::ssd::IntegrityEngine`]) must detect, every time.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::util::rng::SplitMix64;
 
@@ -105,6 +123,20 @@ enum FaultMode {
     Transient { fail_first: u32 },
 }
 
+/// Seeded latency-spike injection (see [`FaultyEngine::with_latency`]).
+struct Latency {
+    per_1024: u64,
+    delay: Duration,
+    jitter: Duration,
+    seed: u64,
+}
+
+/// Seeded bit-flip injection (see [`FaultyEngine::with_bit_flips`]).
+struct BitFlips {
+    per_1024: u64,
+    seed: u64,
+}
+
 pub struct FaultyEngine {
     inner: Arc<dyn NvmeEngine>,
     mode: FaultMode,
@@ -112,7 +144,21 @@ pub struct FaultyEngine {
     op_counter: AtomicU64,
     /// Attempt counts for transient mode, per (kind, key, offset).
     attempts: Mutex<HashMap<(OpKind, String, usize), u32>>,
+    latency: Option<Latency>,
+    /// Separate op-index stream for latency decisions, so composing
+    /// latency with a mode never changes the mode's fault pattern.
+    lat_counter: AtomicU64,
+    /// Mask override for latency injection (`None` = engine mask).
+    lat_mask: Option<OpMask>,
+    flips: Option<BitFlips>,
+    flip_counter: AtomicU64,
+    /// Mask override for bit-flip injection (`None` = engine mask).
+    flip_mask: Option<OpMask>,
     pub injected: AtomicU64,
+    /// Latency spikes actually served.
+    pub delayed: AtomicU64,
+    /// Bits actually flipped.
+    pub corrupted: AtomicU64,
 }
 
 impl FaultyEngine {
@@ -120,13 +166,25 @@ impl FaultyEngine {
     /// `fail_per_1024 / 1024`, deterministically by `seed` (default
     /// mask: data ops only).
     pub fn new(inner: Arc<dyn NvmeEngine>, fail_per_1024: u64, seed: u64) -> Self {
+        Self::build(inner, FaultMode::Random { per_1024: fail_per_1024, seed }, OpMask::DATA)
+    }
+
+    fn build(inner: Arc<dyn NvmeEngine>, mode: FaultMode, mask: OpMask) -> Self {
         Self {
             inner,
-            mode: FaultMode::Random { per_1024: fail_per_1024, seed },
-            mask: OpMask::DATA,
+            mode,
+            mask,
             op_counter: AtomicU64::new(0),
             attempts: Mutex::new(HashMap::new()),
+            latency: None,
+            lat_counter: AtomicU64::new(0),
+            lat_mask: None,
+            flips: None,
+            flip_counter: AtomicU64::new(0),
+            flip_mask: None,
             injected: AtomicU64::new(0),
+            delayed: AtomicU64::new(0),
+            corrupted: AtomicU64::new(0),
         }
     }
 
@@ -134,19 +192,54 @@ impl FaultyEngine {
     /// offset) — fails its first `fail_first` attempts, then succeeds.
     /// `u32::MAX` models a persistent fault.
     pub fn transient(inner: Arc<dyn NvmeEngine>, fail_first: u32, mask: OpMask) -> Self {
-        Self {
-            inner,
-            mode: FaultMode::Transient { fail_first },
-            mask,
-            op_counter: AtomicU64::new(0),
-            attempts: Mutex::new(HashMap::new()),
-            injected: AtomicU64::new(0),
-        }
+        Self::build(inner, FaultMode::Transient { fail_first }, mask)
     }
 
     /// Replace the op-kind mask (builder style).
     pub fn with_mask(mut self, mask: OpMask) -> Self {
         self.mask = mask;
+        self
+    }
+
+    /// Add latency-spike injection: each masked op, with probability
+    /// `per_1024 / 1024` (deterministic by `seed`), sleeps `delay`
+    /// plus a seeded jitter uniform in `[0, jitter)` before reaching
+    /// the device.  `per_1024 = 1024` stalls every masked op; a large
+    /// `delay` models a hung submission.  Composes with either fault
+    /// mode without changing its pattern.
+    pub fn with_latency(
+        mut self,
+        per_1024: u64,
+        delay: Duration,
+        jitter: Duration,
+        seed: u64,
+    ) -> Self {
+        self.latency = Some(Latency { per_1024, delay, jitter, seed });
+        self
+    }
+
+    /// Add bit-flip corruption: each masked *data* op, with
+    /// probability `per_1024 / 1024` (deterministic by `seed`), has
+    /// one seeded-position bit flipped — in the out buffer for reads
+    /// (transient: re-read heals), in the written bytes for writes
+    /// (durable: re-read keeps failing).  Composes with either fault
+    /// mode without changing its pattern.
+    pub fn with_bit_flips(mut self, per_1024: u64, seed: u64) -> Self {
+        self.flips = Some(BitFlips { per_1024, seed });
+        self
+    }
+
+    /// Gate latency injection by its own mask instead of the engine
+    /// mask — lets spikes target ops the error mode spares.
+    pub fn with_latency_mask(mut self, mask: OpMask) -> Self {
+        self.lat_mask = Some(mask);
+        self
+    }
+
+    /// Gate bit-flip injection by its own mask instead of the engine
+    /// mask — lets corruption target ops the error mode spares.
+    pub fn with_flip_mask(mut self, mask: OpMask) -> Self {
+        self.flip_mask = Some(mask);
         self
     }
 
@@ -180,35 +273,100 @@ impl FaultyEngine {
         }
         Ok(())
     }
+
+    /// Serve a latency spike for this op if the seeded draw says so.
+    fn maybe_delay(&self, kind: OpKind) {
+        let Some(lat) = &self.latency else { return };
+        if !self.lat_mask.unwrap_or(self.mask).contains(kind) {
+            return;
+        }
+        let op = self.lat_counter.fetch_add(1, Ordering::Relaxed);
+        let mut rng =
+            SplitMix64::new(lat.seed ^ op.wrapping_mul(0x9E37_79B9) ^ 0x5105_5105);
+        if rng.next_u64() % 1024 < lat.per_1024 {
+            let jitter_ns = lat.jitter.as_nanos() as u64;
+            let jitter = if jitter_ns == 0 { 0 } else { rng.next_u64() % jitter_ns };
+            self.delayed.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(lat.delay + Duration::from_nanos(jitter));
+        }
+    }
+
+    /// Seeded bit position to flip for this data op, if any.
+    fn flip_bit(&self, kind: OpKind, len: usize) -> Option<usize> {
+        let fl = self.flips.as_ref()?;
+        if !self.flip_mask.unwrap_or(self.mask).contains(kind) || len == 0 {
+            return None;
+        }
+        let op = self.flip_counter.fetch_add(1, Ordering::Relaxed);
+        let mut rng =
+            SplitMix64::new(fl.seed ^ op.wrapping_mul(0x9E37_79B9) ^ 0xF11B_F11B);
+        if rng.next_u64() % 1024 < fl.per_1024 {
+            self.corrupted.fetch_add(1, Ordering::Relaxed);
+            Some((rng.next_u64() % (len as u64 * 8)) as usize)
+        } else {
+            None
+        }
+    }
+
+    fn maybe_flip_out(&self, kind: OpKind, out: &mut [u8]) {
+        if let Some(bit) = self.flip_bit(kind, out.len()) {
+            out[bit / 8] ^= 1 << (bit % 8);
+        }
+    }
+
+    /// Corrupted copy of `data` for the write path, if this op flips.
+    fn maybe_flip_copy(&self, kind: OpKind, data: &[u8]) -> Option<Vec<u8>> {
+        self.flip_bit(kind, data.len()).map(|bit| {
+            let mut v = data.to_vec();
+            v[bit / 8] ^= 1 << (bit % 8);
+            v
+        })
+    }
 }
 
 impl NvmeEngine for FaultyEngine {
     fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
+        self.maybe_delay(OpKind::Write);
         self.inject(OpKind::Write, key, 0)?;
-        self.inner.write(key, data)
+        match self.maybe_flip_copy(OpKind::Write, data) {
+            Some(corrupt) => self.inner.write(key, &corrupt),
+            None => self.inner.write(key, data),
+        }
     }
 
     fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
+        self.maybe_delay(OpKind::Read);
         self.inject(OpKind::Read, key, 0)?;
-        self.inner.read(key, out)
+        self.inner.read(key, out)?;
+        self.maybe_flip_out(OpKind::Read, out);
+        Ok(())
     }
 
     fn read_at(&self, key: &str, offset: usize, out: &mut [u8]) -> anyhow::Result<()> {
+        self.maybe_delay(OpKind::ReadAt);
         self.inject(OpKind::ReadAt, key, offset)?;
-        self.inner.read_at(key, offset, out)
+        self.inner.read_at(key, offset, out)?;
+        self.maybe_flip_out(OpKind::ReadAt, out);
+        Ok(())
     }
 
     fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
+        self.maybe_delay(OpKind::WriteAt);
         self.inject(OpKind::WriteAt, key, offset)?;
-        self.inner.write_at(key, offset, data)
+        match self.maybe_flip_copy(OpKind::WriteAt, data) {
+            Some(corrupt) => self.inner.write_at(key, offset, &corrupt),
+            None => self.inner.write_at(key, offset, data),
+        }
     }
 
     fn reserve(&self, key: &str, len: usize) -> anyhow::Result<()> {
+        self.maybe_delay(OpKind::Reserve);
         self.inject(OpKind::Reserve, key, 0)?;
         self.inner.reserve(key, len)
     }
 
     fn flush(&self, key: &str) -> anyhow::Result<()> {
+        self.maybe_delay(OpKind::Flush);
         self.inject(OpKind::Flush, key, 0)?;
         self.inner.flush(key)
     }
@@ -343,6 +501,121 @@ mod tests {
         for _ in 0..20 {
             assert!(eng.write("k", &[0u8; 16]).is_err());
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latency_spikes_are_masked_metered_and_deterministic() {
+        let (inner, dir) = direct("lat");
+        // every data op spikes 5 ms; flush/reserve spared by the mask
+        let eng = FaultyEngine::new(inner, 0, 1).with_latency(
+            1024,
+            Duration::from_millis(5),
+            Duration::ZERO,
+            9,
+        );
+        let t0 = std::time::Instant::now();
+        for i in 0..3 {
+            eng.write(&format!("k{i}"), &[0u8; 64]).unwrap();
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(15), "spikes not served");
+        assert_eq!(eng.delayed.load(Ordering::Relaxed), 3);
+        let t1 = std::time::Instant::now();
+        eng.flush("k0").unwrap();
+        assert!(t1.elapsed() < Duration::from_millis(5), "mask ignored");
+        assert_eq!(eng.delayed.load(Ordering::Relaxed), 3);
+        // probabilistic spikes reproduce per seed
+        let (i2, dir2) = direct("lat2");
+        let mk = |inner: Arc<dyn NvmeEngine>| {
+            FaultyEngine::new(inner, 0, 1).with_latency(
+                512,
+                Duration::from_micros(10),
+                Duration::from_micros(10),
+                77,
+            )
+        };
+        let a = mk(i2.clone());
+        let b = mk(i2);
+        for i in 0..40 {
+            a.write(&format!("a{i}"), &[0u8; 8]).unwrap();
+            b.write(&format!("b{i}"), &[0u8; 8]).unwrap();
+        }
+        assert_eq!(
+            a.delayed.load(Ordering::Relaxed),
+            b.delayed.load(Ordering::Relaxed)
+        );
+        assert!(a.delayed.load(Ordering::Relaxed) > 0);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
+    }
+
+    #[test]
+    fn latency_composes_with_transient_mode_without_changing_its_pattern() {
+        let (inner, dir) = direct("lat-tr");
+        let eng = FaultyEngine::transient(inner, 2, OpMask::DATA).with_latency(
+            1024,
+            Duration::from_millis(1),
+            Duration::ZERO,
+            5,
+        );
+        // the transient fail-twice-then-succeed shape is untouched,
+        // and the spikes fire on faulted and clean attempts alike
+        assert!(eng.write("a", &[1u8; 32]).is_err());
+        assert!(eng.write("a", &[1u8; 32]).is_err());
+        eng.write("a", &[1u8; 32]).unwrap();
+        assert_eq!(eng.injected.load(Ordering::Relaxed), 2);
+        assert_eq!(eng.delayed.load(Ordering::Relaxed), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_side_flips_are_transient_write_side_flips_are_durable() {
+        let (inner, dir) = direct("flip");
+        let want = vec![0xA5u8; 1024];
+        inner.write("clean", &want).unwrap();
+        let eng = FaultyEngine::new(inner.clone(), 0, 1).with_bit_flips(1024, 13);
+        // read-side: the out buffer corrupts, the durable bytes don't
+        let mut out = vec![0u8; want.len()];
+        eng.read("clean", &mut out).unwrap();
+        let diff: u32 =
+            out.iter().zip(&want).map(|(a, b)| (a ^ b).count_ones()).sum();
+        assert_eq!(diff, 1, "exactly one bit flips per corrupted op");
+        let mut out2 = vec![0u8; want.len()];
+        inner.read("clean", &mut out2).unwrap();
+        assert_eq!(out2, want, "durable bytes must be untouched by read flips");
+        // write-side: the durable bytes corrupt by exactly one bit
+        eng.write("rot", &want).unwrap();
+        let mut rot = vec![0u8; want.len()];
+        inner.read("rot", &mut rot).unwrap();
+        let diff: u32 =
+            rot.iter().zip(&want).map(|(a, b)| (a ^ b).count_ones()).sum();
+        assert_eq!(diff, 1);
+        assert_eq!(eng.corrupted.load(Ordering::Relaxed), 2);
+        // same seed, same positions
+        let eng2 = FaultyEngine::new(inner.clone(), 0, 1).with_bit_flips(1024, 13);
+        let mut out3 = vec![0u8; want.len()];
+        eng2.read("clean", &mut out3).unwrap();
+        assert_eq!(out3, out);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bit_flips_compose_with_persistent_mode() {
+        let (inner, dir) = direct("flip-pers");
+        inner.write("k", &[7u8; 256]).unwrap();
+        // persistent write faults + read-side corruption coexist:
+        // writes always error, reads succeed but corrupt
+        let eng = FaultyEngine::transient(
+            inner,
+            u32::MAX,
+            OpMask::NONE.with(OpKind::Write).with(OpKind::WriteAt),
+        )
+        .with_bit_flips(1024, 3)
+        .with_flip_mask(OpMask::NONE.with(OpKind::Read).with(OpKind::ReadAt));
+        let mut out = vec![0u8; 256];
+        eng.read("k", &mut out).unwrap();
+        assert_ne!(out, vec![7u8; 256], "read must corrupt");
+        assert!(eng.write("k", &[7u8; 256]).is_err(), "write must keep failing");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,340 @@
+//! Device-health tracking: latency EWMA + rolling p99, error/timeout
+//! accounting, and a quarantine state machine.
+//!
+//! One [`HealthTracker`] rides each [`crate::ssd::IoExecutor`] (the
+//! shared submission pool fronting the device queues).  The async
+//! engine records every op's service latency and outcome here; when
+//! per-op deadlines are enabled (`TrainSpec::io_deadline_ms`), the
+//! waiter uses [`HealthTracker::hedge_delay`] to decide when a stalled
+//! read should be hedged with a re-submission on the same queue.
+//!
+//! The quarantine state machine is rate-driven: once the bad-op
+//! fraction (errors + timeouts) over the rolling window crosses
+//! [`HealthConfig::degrade_frac`], the device is marked degraded and a
+//! typed [`EventKind::DeviceDegraded`] event is emitted; the fleet and
+//! pipeline governors read [`HealthTracker::is_degraded`] and shrink
+//! depth/prefetch against it.  A streak of
+//! [`HealthConfig::cooldown_ops`] clean ops re-probes the device back
+//! to healthy and emits [`EventKind::DeviceRecovered`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::events::{Event, EventKind, EventSink, JobId};
+
+/// Latency samples needed before the hedge delay trusts the rolling
+/// percentile instead of falling back to the full deadline.
+const MIN_SAMPLES: usize = 16;
+
+#[derive(Debug, Clone, Copy)]
+pub struct HealthConfig {
+    /// Rolling latency samples kept for the p99 estimate, and the
+    /// op-count span of the bad-rate window.
+    pub window: usize,
+    /// Ops observed before the quarantine check can trigger.
+    pub min_ops: u64,
+    /// Bad-op fraction (errors + timeouts over the window) at which
+    /// the device quarantines.
+    pub degrade_frac: f64,
+    /// Consecutive clean ops while quarantined before the device
+    /// re-probes back to healthy.
+    pub cooldown_ops: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self { window: 128, min_ops: 16, degrade_frac: 0.25, cooldown_ops: 64 }
+    }
+}
+
+#[derive(Debug)]
+enum State {
+    Healthy,
+    Quarantined { clean: u64 },
+}
+
+#[derive(Debug)]
+struct Inner {
+    /// Ring of recent service latencies (ns) for the p99 estimate.
+    ring: Vec<u64>,
+    cursor: usize,
+    window_ops: u64,
+    window_bad: u64,
+    state: State,
+}
+
+/// Per-device health: EWMA/p99 latency, error/timeout/hedge meters,
+/// and the quarantine state machine (see module docs).
+pub struct HealthTracker {
+    cfg: HealthConfig,
+    /// EWMA of service latency in ns (alpha = 1/8; 0 = no samples).
+    ewma_ns: AtomicU64,
+    ops: AtomicU64,
+    errors: AtomicU64,
+    timeouts: AtomicU64,
+    hedges: AtomicU64,
+    degraded: AtomicBool,
+    inner: Mutex<Inner>,
+    sink: Mutex<Option<Arc<dyn EventSink>>>,
+}
+
+impl HealthTracker {
+    pub fn new(cfg: HealthConfig) -> Self {
+        Self {
+            cfg,
+            ewma_ns: AtomicU64::new(0),
+            ops: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
+            inner: Mutex::new(Inner {
+                ring: Vec::new(),
+                cursor: 0,
+                window_ops: 0,
+                window_bad: 0,
+                state: State::Healthy,
+            }),
+            sink: Mutex::new(None),
+        }
+    }
+
+    /// Route quarantine transitions ([`EventKind::DeviceDegraded`] /
+    /// [`EventKind::DeviceRecovered`]) to `sink`.
+    pub fn set_sink(&self, sink: Arc<dyn EventSink>) {
+        *self.sink.lock().unwrap() = Some(sink);
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Ops whose primary submission outlived its hedge deadline.
+    pub fn timeouts(&self) -> u64 {
+        self.timeouts.load(Ordering::Relaxed)
+    }
+
+    /// Hedged re-submissions issued.
+    pub fn hedges(&self) -> u64 {
+        self.hedges.load(Ordering::Relaxed)
+    }
+
+    pub fn ewma_ns(&self) -> u64 {
+        self.ewma_ns.load(Ordering::Relaxed)
+    }
+
+    /// Cheap flag for the governors: true while quarantined.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Rolling p99 of service latency in ns (0 with no samples).
+    pub fn p99_ns(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        percentile(&inner.ring, 99)
+    }
+
+    /// How long a waiter should give the primary submission before
+    /// hedging: `min(deadline, max(4×EWMA, p99))` once enough samples
+    /// exist, else the full deadline.  Never below `deadline / 8`, so
+    /// a microsecond-scale p99 can't turn routine queue waits into a
+    /// hedge storm.
+    pub fn hedge_delay(&self, deadline: Duration) -> Duration {
+        let inner = self.inner.lock().unwrap();
+        if inner.ring.len() < MIN_SAMPLES {
+            return deadline;
+        }
+        let p99 = percentile(&inner.ring, 99);
+        let guess = p99.max(self.ewma_ns().saturating_mul(4));
+        let floor = deadline / 8;
+        Duration::from_nanos(guess).clamp(floor, deadline)
+    }
+
+    /// Record one completed op's service latency and outcome.
+    pub fn record(&self, latency: Duration, ok: bool) {
+        let ns = latency.as_nanos() as u64;
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let prev = self.ewma_ns.load(Ordering::Relaxed);
+        let next = if prev == 0 { ns } else { prev - prev / 8 + ns / 8 };
+        self.ewma_ns.store(next, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        let cursor = inner.cursor;
+        if inner.ring.len() < self.cfg.window {
+            inner.ring.push(ns);
+        } else {
+            inner.ring[cursor] = ns;
+        }
+        inner.cursor = (cursor + 1) % self.cfg.window;
+        self.observe_outcome(&mut inner, ok);
+    }
+
+    /// Record a primary submission outliving its hedge deadline (the
+    /// op itself is still recorded when it eventually completes).
+    pub fn record_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        self.observe_outcome(&mut inner, false);
+    }
+
+    /// Record a hedged re-submission being issued.
+    pub fn record_hedge(&self) {
+        self.hedges.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn observe_outcome(&self, inner: &mut Inner, ok: bool) {
+        match inner.state {
+            State::Healthy => {
+                inner.window_ops += 1;
+                if !ok {
+                    inner.window_bad += 1;
+                }
+                let rate = inner.window_bad as f64 / inner.window_ops as f64;
+                if inner.window_ops >= self.cfg.min_ops && rate >= self.cfg.degrade_frac {
+                    inner.state = State::Quarantined { clean: 0 };
+                    self.degraded.store(true, Ordering::Relaxed);
+                    self.emit(EventKind::DeviceDegraded {
+                        errors: self.errors(),
+                        timeouts: self.timeouts(),
+                    });
+                    inner.window_ops = 0;
+                    inner.window_bad = 0;
+                } else if inner.window_ops >= self.cfg.window as u64 {
+                    // decay the window so old trouble ages out
+                    inner.window_ops /= 2;
+                    inner.window_bad /= 2;
+                }
+            }
+            State::Quarantined { ref mut clean } => {
+                if ok {
+                    *clean += 1;
+                    if *clean >= self.cfg.cooldown_ops {
+                        inner.state = State::Healthy;
+                        self.degraded.store(false, Ordering::Relaxed);
+                        self.emit(EventKind::DeviceRecovered);
+                    }
+                } else {
+                    *clean = 0;
+                }
+            }
+        }
+    }
+
+    fn emit(&self, kind: EventKind) {
+        let sink = self.sink.lock().unwrap().clone();
+        if let Some(sink) = sink {
+            let detail = format!(
+                "ops {} errors {} timeouts {} ewma {}us",
+                self.ops(),
+                self.errors(),
+                self.timeouts(),
+                self.ewma_ns() / 1000
+            );
+            sink.emit(Event { job: JobId::HOST, kind, detail });
+        }
+    }
+}
+
+impl Default for HealthTracker {
+    fn default() -> Self {
+        Self::new(HealthConfig::default())
+    }
+}
+
+fn percentile(samples: &[u64], pct: usize) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    sorted[(sorted.len() * pct / 100).min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::events::MemorySink;
+
+    #[test]
+    fn ewma_and_p99_track_service_latency() {
+        let h = HealthTracker::default();
+        for _ in 0..100 {
+            h.record(Duration::from_micros(100), true);
+        }
+        for _ in 0..2 {
+            h.record(Duration::from_millis(50), true);
+        }
+        let ewma = h.ewma_ns();
+        assert!(ewma > 100_000, "ewma {ewma} ignored the spikes");
+        assert!(ewma < 50_000_000, "ewma {ewma} forgot the baseline");
+        assert_eq!(h.p99_ns(), 50_000_000);
+        assert_eq!(h.ops(), 102);
+    }
+
+    #[test]
+    fn hedge_delay_clamps_between_floor_and_deadline() {
+        let h = HealthTracker::default();
+        let d = Duration::from_millis(80);
+        // no samples yet: wait the whole deadline
+        assert_eq!(h.hedge_delay(d), d);
+        for _ in 0..64 {
+            h.record(Duration::from_micros(50), true);
+        }
+        // p99 far below the floor: clamp up to deadline/8
+        assert_eq!(h.hedge_delay(d), d / 8);
+        for _ in 0..64 {
+            h.record(Duration::from_secs(1), true);
+        }
+        // p99 far above the deadline: clamp down
+        assert_eq!(h.hedge_delay(d), d);
+    }
+
+    #[test]
+    fn error_burst_quarantines_and_clean_streak_recovers() {
+        let sink = MemorySink::new();
+        let h = HealthTracker::new(HealthConfig {
+            min_ops: 8,
+            cooldown_ops: 8,
+            ..Default::default()
+        });
+        h.set_sink(sink.clone());
+        assert!(!h.is_degraded());
+        for _ in 0..4 {
+            h.record(Duration::from_micros(10), true);
+        }
+        for _ in 0..4 {
+            h.record(Duration::from_micros(10), false);
+        }
+        assert!(h.is_degraded(), "50% bad over min_ops must quarantine");
+        assert_eq!(h.errors(), 4);
+        // a clean streak with one blip in the middle restarts cooldown
+        for i in 0..12 {
+            h.record(Duration::from_micros(10), i != 3);
+        }
+        assert!(!h.is_degraded(), "clean streak must re-probe healthy");
+        let evs = sink.events();
+        assert!(matches!(evs[0].kind, EventKind::DeviceDegraded { errors: 4, .. }));
+        assert!(matches!(evs[1].kind, EventKind::DeviceRecovered));
+        assert_eq!(evs.len(), 2);
+    }
+
+    #[test]
+    fn timeouts_count_toward_quarantine() {
+        let h = HealthTracker::new(HealthConfig { min_ops: 8, ..Default::default() });
+        for _ in 0..6 {
+            h.record(Duration::from_micros(10), true);
+        }
+        for _ in 0..2 {
+            h.record_timeout();
+        }
+        assert!(h.is_degraded());
+        assert_eq!(h.timeouts(), 2);
+    }
+}

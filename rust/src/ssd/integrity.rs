@@ -1,0 +1,621 @@
+//! Checksummed-stream integrity: per-block FNV-1a sums in a sidecar
+//! key, verified on every read.
+//!
+//! [`IntegrityEngine`] is an [`NvmeEngine`] decorator.  Its position in
+//! the stack is a contract, not a convenience (see the [`crate::ssd`]
+//! module docs for the full ordering):
+//!
+//! - **below [`crate::ssd::RetryEngine`]** — a detected mismatch
+//!   surfaces as an ordinary retryable error, so transient corruption
+//!   (a bad DMA, a misread) heals by re-read while durable rot
+//!   exhausts the budget and aborts with the typed error intact;
+//! - **above any fault injection** ([`crate::ssd::FaultyEngine`]) —
+//!   injected bit flips are *caught*, which is what makes every chaos
+//!   path testable;
+//! - **above [`crate::jobs::ScopedEngine`]** — the sidecar key rides
+//!   the same job prefix as its data key, so tenants' sums are
+//!   isolated exactly like their streams;
+//! - **below [`crate::ckpt::ShadowEngine`]** — both physical extents
+//!   of every shadow-paged stream carry their own sums, so a committed
+//!   epoch stays verifiable while the live extent churns.
+//!
+//! Sums cover fixed [`BLOCK_BYTES`] blocks and live under
+//! `sums/{key}` ([`sums_key`]); sidecar keys themselves pass through
+//! unchecksummed (no recursion).  Keys written before the layer was
+//! enabled have no sidecar and read back unverified, so turning
+//! `--verify-reads` on over an existing store is safe.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use super::{IoSnapshot, NvmeEngine};
+use crate::util::events::{Event, EventKind, EventSink, JobId};
+
+/// Fixed checksum granule: one FNV-1a sum per 256 KiB of stored data
+/// (the tail block of a key may be shorter).
+pub const BLOCK_BYTES: usize = 256 << 10;
+
+/// Sidecar key prefix; `sums_key("k")` = `"sums/k"`.
+pub const SUMS_PREFIX: &str = "sums/";
+
+/// Key-hash stripes for the per-key read/write locks that keep a
+/// block's data and its sum atomic with respect to each other.
+const LOCK_STRIPES: usize = 64;
+
+/// 64-bit FNV-1a over `data` — cheap, dependency-free, and plenty to
+/// make a single flipped bit detectable with certainty.
+pub fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Sidecar key holding `key`'s per-block sums.
+pub fn sums_key(key: &str) -> String {
+    format!("{SUMS_PREFIX}{key}")
+}
+
+fn is_sidecar(key: &str) -> bool {
+    key.starts_with(SUMS_PREFIX)
+}
+
+fn encode_sums(sums: &[u64]) -> Vec<u8> {
+    let mut raw = Vec::with_capacity(sums.len() * 8);
+    for s in sums {
+        raw.extend_from_slice(&s.to_le_bytes());
+    }
+    raw
+}
+
+fn decode_sums(raw: &[u8]) -> Vec<u64> {
+    raw.chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Typed checksum-mismatch error: `key`'s block `block` read back with
+/// sum `got` where the sidecar says `expected`.  Surfaced through
+/// `anyhow`, so callers can `downcast_ref::<IntegrityError>()`; the
+/// retry layer treats it like any other fault (re-read).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IntegrityError {
+    pub key: String,
+    pub block: usize,
+    pub expected: u64,
+    pub got: u64,
+}
+
+impl fmt::Display for IntegrityError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "integrity mismatch on '{}' block {}: expected {:016x}, got {:016x}",
+            self.key, self.block, self.expected, self.got
+        )
+    }
+}
+
+impl std::error::Error for IntegrityError {}
+
+/// Checksumming [`NvmeEngine`] decorator (see module docs for the
+/// stack-position contract).  Every write path maintains the sidecar;
+/// every read path verifies the blocks it touched and surfaces
+/// [`IntegrityError`] on mismatch, metered in
+/// [`IoSnapshot::integrity_failures`].
+pub struct IntegrityEngine {
+    inner: Arc<dyn NvmeEngine>,
+    /// Striped per-key locks: writers hold the write side across
+    /// data-write + sum-update so a concurrent read can never pair new
+    /// bytes with an old sum; readers hold the read side, so reads
+    /// stay concurrent with each other.
+    locks: Vec<RwLock<()>>,
+    job: JobId,
+    failures: AtomicU64,
+    scrubbed_bytes: AtomicU64,
+    scrub_failures: AtomicU64,
+    sink: Mutex<Option<Arc<dyn EventSink>>>,
+}
+
+impl IntegrityEngine {
+    pub fn new(inner: Arc<dyn NvmeEngine>) -> Self {
+        Self {
+            inner,
+            locks: (0..LOCK_STRIPES).map(|_| RwLock::new(())).collect(),
+            job: JobId::HOST,
+            failures: AtomicU64::new(0),
+            scrubbed_bytes: AtomicU64::new(0),
+            scrub_failures: AtomicU64::new(0),
+            sink: Mutex::new(None),
+        }
+    }
+
+    /// Tag emitted [`EventKind::IntegrityViolation`] events with `job`.
+    pub fn for_job(mut self, job: JobId) -> Self {
+        self.job = job;
+        self
+    }
+
+    /// Route violation events (one per detected mismatch) to `sink`.
+    pub fn set_sink(&self, sink: Arc<dyn EventSink>) {
+        *self.sink.lock().unwrap() = Some(sink);
+    }
+
+    /// Detected mismatches so far.
+    pub fn failures(&self) -> u64 {
+        self.failures.load(Ordering::Relaxed)
+    }
+
+    /// Bytes verified by scrub passes so far.
+    pub fn scrubbed_bytes(&self) -> u64 {
+        self.scrubbed_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Scrubbed keys that failed verification so far.
+    pub fn scrub_failures(&self) -> u64 {
+        self.scrub_failures.load(Ordering::Relaxed)
+    }
+
+    /// Verify every block of `key` by reading it back through the
+    /// verify path; returns the bytes scrubbed (0 for an absent key).
+    /// Failures are metered in [`IoSnapshot::scrub_failures`] and the
+    /// mismatch is surfaced.
+    pub fn scrub(&self, key: &str) -> anyhow::Result<u64> {
+        let Some(len) = self.inner.len_of(key) else {
+            return Ok(0);
+        };
+        let mut buf = vec![0u8; len];
+        match self.read(key, &mut buf) {
+            Ok(()) => {
+                self.scrubbed_bytes.fetch_add(len as u64, Ordering::Relaxed);
+                Ok(len as u64)
+            }
+            Err(e) => {
+                self.scrub_failures.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Charge a scrub performed *through the stack above* (the trainer
+    /// walks logical keys through the shadow layer; verification still
+    /// happens here, but the byte accounting is the caller's).
+    pub fn note_scrub(&self, bytes: u64, ok: bool) {
+        if ok {
+            self.scrubbed_bytes.fetch_add(bytes, Ordering::Relaxed);
+        } else {
+            self.scrub_failures.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn stripe(&self, key: &str) -> &RwLock<()> {
+        &self.locks[(fnv1a(key.as_bytes()) as usize) % LOCK_STRIPES]
+    }
+
+    fn read_sums(&self, key: &str) -> anyhow::Result<Option<Vec<u64>>> {
+        let sk = sums_key(key);
+        let Some(len) = self.inner.len_of(&sk) else {
+            return Ok(None);
+        };
+        let mut raw = vec![0u8; len];
+        self.inner.read(&sk, &mut raw)?;
+        Ok(Some(decode_sums(&raw)))
+    }
+
+    fn emit_violation(&self, err: &IntegrityError) {
+        let sink = self.sink.lock().unwrap().clone();
+        if let Some(sink) = sink {
+            sink.emit(Event {
+                job: self.job,
+                kind: EventKind::IntegrityViolation {
+                    key: err.key.clone(),
+                    block: err.block,
+                },
+                detail: format!("expected {:016x}, got {:016x}", err.expected, err.got),
+            });
+        }
+    }
+
+    /// Verify `data` (which starts at block `first_block`'s boundary)
+    /// against the sidecar sums.
+    fn verify_span(
+        &self,
+        key: &str,
+        first_block: usize,
+        data: &[u8],
+        sums: &[u64],
+    ) -> anyhow::Result<()> {
+        for (i, chunk) in data.chunks(BLOCK_BYTES).enumerate() {
+            let block = first_block + i;
+            let expected = *sums.get(block).ok_or_else(|| {
+                anyhow::anyhow!("integrity sidecar for '{key}' truncated at block {block}")
+            })?;
+            let got = fnv1a(chunk);
+            if got != expected {
+                let err = IntegrityError { key: key.to_string(), block, expected, got };
+                self.failures.fetch_add(1, Ordering::Relaxed);
+                self.emit_violation(&err);
+                return Err(err.into());
+            }
+        }
+        Ok(())
+    }
+}
+
+impl NvmeEngine for IntegrityEngine {
+    fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
+        if is_sidecar(key) {
+            return self.inner.write(key, data);
+        }
+        let _g = self.stripe(key).write().unwrap();
+        self.inner.write(key, data)?;
+        let sums: Vec<u64> = data.chunks(BLOCK_BYTES).map(fnv1a).collect();
+        self.inner.write(&sums_key(key), &encode_sums(&sums))
+    }
+
+    fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
+        if is_sidecar(key) {
+            return self.inner.read(key, out);
+        }
+        let _g = self.stripe(key).read().unwrap();
+        self.inner.read(key, out)?;
+        if let Some(sums) = self.read_sums(key)? {
+            self.verify_span(key, 0, out, &sums)?;
+        }
+        Ok(())
+    }
+
+    fn read_at(&self, key: &str, offset: usize, out: &mut [u8]) -> anyhow::Result<()> {
+        if is_sidecar(key) || out.is_empty() {
+            return self.inner.read_at(key, offset, out);
+        }
+        let _g = self.stripe(key).read().unwrap();
+        let Some(sums) = self.read_sums(key)? else {
+            return self.inner.read_at(key, offset, out);
+        };
+        let stored = self
+            .inner
+            .len_of(key)
+            .ok_or_else(|| anyhow::anyhow!("integrity: no tensor '{key}'"))?;
+        anyhow::ensure!(
+            offset + out.len() <= stored,
+            "integrity: ranged read past '{key}' ({offset}+{} > {stored})",
+            out.len()
+        );
+        // widen to block boundaries so whole blocks can be verified
+        let first = offset / BLOCK_BYTES;
+        let base = first * BLOCK_BYTES;
+        let end = ((offset + out.len()).div_ceil(BLOCK_BYTES) * BLOCK_BYTES).min(stored);
+        let mut tmp = vec![0u8; end - base];
+        self.inner.read_at(key, base, &mut tmp)?;
+        self.verify_span(key, first, &tmp, &sums)?;
+        out.copy_from_slice(&tmp[offset - base..offset - base + out.len()]);
+        Ok(())
+    }
+
+    fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
+        if is_sidecar(key) || data.is_empty() {
+            return self.inner.write_at(key, offset, data);
+        }
+        let _g = self.stripe(key).write().unwrap();
+        self.inner.write_at(key, offset, data)?;
+        let sk = sums_key(key);
+        let Some(side_len) = self.inner.len_of(&sk) else {
+            // legacy key written before the layer was enabled: stays
+            // unchecked rather than gaining a partial sidecar
+            return Ok(());
+        };
+        let stored = self
+            .inner
+            .len_of(key)
+            .ok_or_else(|| anyhow::anyhow!("integrity: no tensor '{key}'"))?;
+        let first = offset / BLOCK_BYTES;
+        let last = (offset + data.len() - 1) / BLOCK_BYTES;
+        for b in first..=last {
+            let bstart = b * BLOCK_BYTES;
+            let bend = (bstart + BLOCK_BYTES).min(stored);
+            // a fully-covered block sums straight from `data`; a
+            // partially-covered edge block re-reads the merged bytes
+            // (safe: we hold the key's write lock)
+            let sum = if offset <= bstart && offset + data.len() >= bend {
+                fnv1a(&data[bstart - offset..bend - offset])
+            } else {
+                let mut blk = vec![0u8; bend - bstart];
+                self.inner.read_at(key, bstart, &mut blk)?;
+                fnv1a(&blk)
+            };
+            anyhow::ensure!(
+                (b + 1) * 8 <= side_len,
+                "integrity sidecar for '{key}' shorter than block {b}"
+            );
+            self.inner.write_at(&sk, b * 8, &sum.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    fn flush(&self, key: &str) -> anyhow::Result<()> {
+        self.inner.flush(key)?;
+        if !is_sidecar(key) {
+            // flushing an absent sidecar is a no-op by contract
+            self.inner.flush(&sums_key(key))?;
+        }
+        Ok(())
+    }
+
+    fn reserve(&self, key: &str, len: usize) -> anyhow::Result<()> {
+        if is_sidecar(key) {
+            return self.inner.reserve(key, len);
+        }
+        let _g = self.stripe(key).write().unwrap();
+        let fresh = self.inner.len_of(key).is_none();
+        self.inner.reserve(key, len)?;
+        if fresh {
+            // fresh reservations are all-zero by contract
+            let zeros = vec![0u8; BLOCK_BYTES.min(len)];
+            let nblocks = len.div_ceil(BLOCK_BYTES);
+            let mut sums = vec![fnv1a(&zeros[..BLOCK_BYTES.min(len)]); nblocks];
+            if nblocks > 0 {
+                let tail = len - (nblocks - 1) * BLOCK_BYTES;
+                sums[nblocks - 1] = fnv1a(&zeros[..tail]);
+            }
+            self.inner.write(&sums_key(key), &encode_sums(&sums))?;
+        }
+        Ok(())
+    }
+
+    fn len_of(&self, key: &str) -> Option<usize> {
+        self.inner.len_of(key)
+    }
+
+    fn stats(&self) -> IoSnapshot {
+        let mut s = self.inner.stats();
+        s.integrity_failures += self.failures();
+        s.scrubbed_bytes += self.scrubbed_bytes();
+        s.scrub_failures += self.scrub_failures();
+        s
+    }
+
+    fn label(&self) -> &'static str {
+        self.inner.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::ssd::{DirectEngine, RetryEngine, RetryPolicy};
+    use crate::util::events::MemorySink;
+    use crate::util::proptest::{check, Config};
+    use crate::util::rng::Xoshiro256;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("ma-integ-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn direct(dir: &std::path::Path) -> Arc<DirectEngine> {
+        Arc::new(DirectEngine::new(dir, 2, 1 << 24, 1).unwrap())
+    }
+
+    #[test]
+    fn roundtrip_maintains_sums_and_label_passes_through() {
+        let dir = tmpdir("rt");
+        let base = direct(&dir);
+        let eng = IntegrityEngine::new(base.clone());
+        assert_eq!(eng.label(), base.label());
+        let n = BLOCK_BYTES + 12_345;
+        let data: Vec<u8> = (0..n).map(|i| (i % 251) as u8).collect();
+        eng.write("w", &data).unwrap();
+        // the sidecar exists below, one u64 per block
+        assert_eq!(base.len_of(&sums_key("w")), Some(2 * 8));
+        let mut out = vec![0u8; n];
+        eng.read("w", &mut out).unwrap();
+        assert_eq!(out, data);
+        // ranged reads verify the blocks they touch
+        for (off, len) in [(0usize, 1usize), (BLOCK_BYTES - 3, 7), (n - 9, 9)] {
+            let mut out = vec![0u8; len];
+            eng.read_at("w", off, &mut out).unwrap();
+            assert_eq!(out, &data[off..off + len]);
+        }
+        assert_eq!(eng.failures(), 0);
+        assert_eq!(eng.scrub("w").unwrap(), n as u64);
+        assert_eq!(eng.scrubbed_bytes(), n as u64);
+        assert_eq!(eng.scrub("absent").unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reserve_then_tile_writes_keep_sums_exact() {
+        let dir = tmpdir("tile");
+        let base = direct(&dir);
+        let eng = IntegrityEngine::new(base);
+        let n = 2 * BLOCK_BYTES + 999;
+        eng.reserve("t", n).unwrap();
+        eng.reserve("t", n).unwrap(); // idempotent
+        let mut all = vec![0u8; n];
+        eng.read("t", &mut all).unwrap(); // fresh zeros verify
+        assert!(all.iter().all(|&b| b == 0));
+        // unaligned tile writes spanning block edges
+        let want: Vec<u8> = (0..n).map(|i| (i * 7 % 253) as u8).collect();
+        let tile = 100_003usize;
+        let mut off = 0;
+        while off < n {
+            let len = tile.min(n - off);
+            eng.write_at("t", off, &want[off..off + len]).unwrap();
+            off += len;
+        }
+        eng.flush("t").unwrap();
+        let mut out = vec![0u8; n];
+        eng.read("t", &mut out).unwrap();
+        assert_eq!(out, want);
+        assert_eq!(eng.failures(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn any_single_bit_flip_is_detected_and_clean_replays_never_flag() {
+        let dir = tmpdir("prop");
+        // persisted stream families the trainer actually writes
+        let families = ["master/w0", "optim/sg0/fp16", "adam_m/g1", "journal/slot0"];
+        check("integrity-bitflip", Config { cases: 16, ..Default::default() }, |rng, size| {
+            let case = dir.join(format!("c{}", rng.next_u64()));
+            std::fs::create_dir_all(&case).map_err(|e| e.to_string())?;
+            let base = direct(&case);
+            let eng = IntegrityEngine::new(base.clone());
+            let key = families[rng.below(families.len())];
+            let n = rng.range(1, (size.max(2) * 128).min(3 * BLOCK_BYTES));
+            let data: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            eng.write(key, &data).map_err(|e| e.to_string())?;
+            // clean replay: no false positive
+            let mut out = vec![0u8; n];
+            eng.read(key, &mut out).map_err(|e| e.to_string())?;
+            prop_assert!(out == data, "clean read diverged");
+            prop_assert!(eng.failures() == 0, "false positive on clean replay");
+            // flip one random bit *below* the integrity layer
+            let byte = rng.below(n);
+            let bit = rng.below(8) as u8;
+            base.write_at(key, byte, &[data[byte] ^ (1 << bit)])
+                .map_err(|e| e.to_string())?;
+            let err = match eng.read(key, &mut out) {
+                Ok(()) => return Err("bit flip not detected".into()),
+                Err(e) => e,
+            };
+            let ie = err
+                .downcast_ref::<IntegrityError>()
+                .ok_or("mismatch was not a typed IntegrityError")?;
+            prop_assert!(ie.key == key, "wrong key in error");
+            prop_assert!(ie.block == byte / BLOCK_BYTES, "wrong block in error");
+            // a ranged read over the flipped byte detects it too
+            let mut one = [0u8; 1];
+            prop_assert!(
+                eng.read_at(key, byte, &mut one).is_err(),
+                "ranged read missed the flip"
+            );
+            // healing the bit heals the read: detection has no memory
+            base.write_at(key, byte, &[data[byte]]).map_err(|e| e.to_string())?;
+            eng.read(key, &mut out).map_err(|e| e.to_string())?;
+            prop_assert!(out == data, "healed read diverged");
+            std::fs::remove_dir_all(&case).ok();
+            Ok(())
+        });
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Inner engine that corrupts the first `n` reads in the out
+    /// buffer — transient misreads, durable bytes intact.
+    struct MisreadEngine {
+        inner: Arc<dyn NvmeEngine>,
+        left: AtomicU64,
+    }
+
+    impl NvmeEngine for MisreadEngine {
+        fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
+            self.inner.write(key, data)
+        }
+        fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
+            self.inner.read(key, out)?;
+            if !is_sidecar(key)
+                && self
+                    .left
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+                    .is_ok()
+            {
+                out[0] ^= 0x80;
+            }
+            Ok(())
+        }
+        fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
+            self.inner.write_at(key, offset, data)
+        }
+        fn len_of(&self, key: &str) -> Option<usize> {
+            self.inner.len_of(key)
+        }
+        fn stats(&self) -> IoSnapshot {
+            self.inner.stats()
+        }
+        fn label(&self) -> &'static str {
+            self.inner.label()
+        }
+    }
+
+    #[test]
+    fn transient_misreads_heal_by_retry_durable_rot_exhausts_typed() {
+        let dir = tmpdir("retry");
+        let base = direct(&dir);
+        let misread =
+            Arc::new(MisreadEngine { inner: base.clone(), left: AtomicU64::new(2) });
+        let integ = Arc::new(IntegrityEngine::new(misread));
+        let eng = RetryEngine::new(integ.clone(), RetryPolicy::attempts(4));
+        let data: Vec<u8> = (0..9000).map(|i| (i % 201) as u8).collect();
+        eng.write("k", &data).unwrap();
+        // two transient misreads absorbed; bytes come back clean
+        let mut out = vec![0u8; data.len()];
+        eng.read("k", &mut out).unwrap();
+        assert_eq!(out, data);
+        assert!(eng.retries() >= 2, "retries not metered: {}", eng.retries());
+        assert_eq!(integ.failures(), 2);
+        // durable rot: every re-read fails, budget exhausts, and the
+        // typed mismatch is preserved in the exhaustion error text
+        base.write_at("k", 17, &[data[17] ^ 1]).unwrap();
+        let err = eng.read("k", &mut out).unwrap_err();
+        let ex = err.downcast_ref::<crate::ssd::RetryExhausted>().expect("typed exhaustion");
+        assert!(ex.last.contains("integrity mismatch"), "lost cause: {}", ex.last);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn violations_are_metered_and_emitted_as_events() {
+        let dir = tmpdir("ev");
+        let base = direct(&dir);
+        let eng = IntegrityEngine::new(base.clone()).for_job(JobId(3));
+        let sink = MemorySink::new();
+        eng.set_sink(sink.clone());
+        eng.write("k", &[7u8; 4096]).unwrap();
+        base.write_at("k", 100, &[0x55]).unwrap();
+        let mut out = vec![0u8; 4096];
+        assert!(eng.read("k", &mut out).is_err());
+        assert!(eng.scrub("k").is_err());
+        assert_eq!(eng.failures(), 2);
+        assert_eq!(eng.scrub_failures(), 1);
+        let evs = sink.for_job(JobId(3));
+        assert_eq!(evs.len(), 2);
+        assert!(matches!(
+            &evs[0].kind,
+            EventKind::IntegrityViolation { key, block: 0 } if key == "k"
+        ));
+        let s = eng.stats();
+        assert_eq!(s.integrity_failures, 2);
+        assert_eq!(s.scrub_failures, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_disjoint_tiles_do_not_interfere() {
+        let dir = tmpdir("conc");
+        let eng = Arc::new(IntegrityEngine::new(direct(&dir)));
+        let n = 4 * BLOCK_BYTES;
+        eng.reserve("t", n).unwrap();
+        let mut rng = Xoshiro256::new(0xC0FFEE);
+        let want: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let eng = Arc::clone(&eng);
+                let want = &want;
+                s.spawn(move || {
+                    let off = t * BLOCK_BYTES;
+                    eng.write_at("t", off, &want[off..off + BLOCK_BYTES]).unwrap();
+                });
+            }
+        });
+        let mut out = vec![0u8; n];
+        eng.read("t", &mut out).unwrap();
+        assert_eq!(out, want);
+        assert_eq!(eng.failures(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -51,22 +51,66 @@
 //!   and then commits an epoch journal, so a crash rolls back to the
 //!   last committed epoch instead of losing the run.
 //!
-//! ## Transient-fault retry
+//! ## The robustness decorator stack
 //!
-//! [`retry::RetryEngine`] wraps any engine with bounded,
-//! exponential-backoff retry ([`retry::RetryPolicy`]). Every submit
-//! path in [`queue`] runs through the wrapped engine, so async
-//! fetches/write-backs inherit the retry behavior with no extra
-//! plumbing. Retries are metered in [`IoSnapshot::retries`];
-//! exhaustion still surfaces the last `Err` to the caller.
-//! [`FaultyEngine`] provides the deterministic fault injection
-//! (probabilistic, transient fail-then-succeed, or per-op-kind masks)
-//! the retry and recovery tests are built on.
+//! Every layer above the base engines is an [`NvmeEngine`] decorator,
+//! and the *order* they compose in is a contract, not a convenience.
+//! The full per-job stack the offload engine assembles is
+//!
+//! ```text
+//! Shadow( Retry( Integrity( Faulty?( Scoped( base )))))
+//! ```
+//!
+//! - [`integrity::IntegrityEngine`] checksums every write (FNV-1a per
+//!   256 KiB block, sidecar `sums/{key}`) and verifies every read,
+//!   surfacing mismatches as typed [`integrity::IntegrityError`]s and
+//!   metering them in [`IoSnapshot::integrity_failures`].
+//! - [`retry::RetryEngine`] wraps any engine with bounded,
+//!   exponential-backoff retry ([`retry::RetryPolicy`]), metered in
+//!   [`IoSnapshot::retries`] / [`IoSnapshot::retry_exhaustions`] and
+//!   attributed per tenant via [`IoSnapshot::job_retries`].
+//! - [`FaultyEngine`] provides the deterministic fault injection the
+//!   retry/recovery/chaos tests are built on: probabilistic or
+//!   transient errors, latency spikes, and bit-flip corruption, each
+//!   gated by per-op-kind masks.
+//! - `ScopedEngine` (in [`crate::jobs`]) prefixes keys with a job
+//!   namespace; `ShadowEngine` (in [`crate::ckpt`]) multiplexes keys
+//!   across checkpoint shadow extents.
+//!
+//! Why this order and no other:
+//!
+//! - **Integrity sits *below* Retry** so a checksum mismatch is
+//!   retryable: a transient misread heals on re-read, while durable
+//!   rot exhausts the budget and surfaces a typed
+//!   [`retry::RetryExhausted`] whose last-error text preserves the
+//!   `IntegrityError` — the caller aborts rather than training on
+//!   corrupt bytes.
+//! - **Integrity sits *above* Faulty** so injected write-path
+//!   corruption lands *under* the checksums and is caught, which is
+//!   exactly what the chaos tests assert.
+//! - **Integrity sits *above* Scoped** so the `sums/{key}` sidecar
+//!   rides the same job prefix as its data and tenants can't collide.
+//! - **Shadow sits on top** so each physical shadow extent carries its
+//!   own sums; a rolled-back epoch verifies against the sums written
+//!   with it.
+//!
+//! [`queue::AsyncEngine`] fronts the whole stack with the shared
+//! submission pool; every async fetch/write-back therefore inherits
+//! verification and retry with no extra plumbing.  Its
+//! [`queue::IoExecutor`] carries a [`health::HealthTracker`] — latency
+//! EWMA/p99, error and timeout meters, and a quarantine state machine
+//! that emits typed `DeviceDegraded`/`DeviceRecovered` events for the
+//! governors.  With a per-op deadline configured
+//! (`TrainSpec::io_deadline_ms`), stalled owned-buffer reads are
+//! *hedged*: re-submitted on the same queue after the rolling p99,
+//! first completion wins.
 
 pub mod device_model;
 pub mod faulty;
 pub mod direct;
 pub mod fs_engine;
+pub mod health;
+pub mod integrity;
 pub mod queue;
 pub mod retry;
 pub mod sched;
@@ -75,6 +119,8 @@ pub use device_model::DeviceModel;
 pub use faulty::{FaultyEngine, OpKind, OpMask};
 pub use direct::DirectEngine;
 pub use fs_engine::FsEngine;
+pub use health::{HealthConfig, HealthTracker};
+pub use integrity::{IntegrityEngine, IntegrityError, BLOCK_BYTES};
 pub use queue::{io_scope, AsyncEngine, IoExecutor, IoHandle, IoScope};
 pub use retry::{RetryEngine, RetryExhausted, RetryPolicy};
 pub use sched::DwrrQueue;
@@ -279,6 +325,22 @@ pub struct IoSnapshot {
     /// Per-job wall-clock worker occupancy (queue service time): how
     /// long the pool's workers spent executing each job's submissions.
     pub job_busy_ns: [u64; MAX_JOB_LANES],
+    /// Per-job retry counts: the [`RetryEngine`] lane view set by
+    /// [`RetryEngine::for_job`], so fault absorption attributes to
+    /// tenants the same way ops/bytes do.
+    pub job_retries: [u64; MAX_JOB_LANES],
+    /// Per-job retry exhaustions (terminal failures per tenant).
+    pub job_retry_exhaustions: [u64; MAX_JOB_LANES],
+    /// Checksum mismatches detected by an [`IntegrityEngine`] layered
+    /// over this engine (0 without one).  Each is also surfaced as a
+    /// typed [`IntegrityError`] to the caller and, when a sink is
+    /// wired, an `IntegrityViolation` event.
+    pub integrity_failures: u64,
+    /// Bytes verified by the background scrubber between steps.
+    pub scrubbed_bytes: u64,
+    /// Scrub passes that failed verification (each also counts in
+    /// [`Self::integrity_failures`]).
+    pub scrub_failures: u64,
 }
 
 impl IoSnapshot {

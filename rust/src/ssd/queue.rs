@@ -52,17 +52,38 @@
 //! async submission — whole-tensor and ranged alike — the same bounded
 //! retry/backoff semantics as direct sync calls, with no retry code in
 //! the workers themselves.
+//!
+//! ## Health tracking and hedged reads
+//!
+//! The executor carries one [`HealthTracker`]: every submission's
+//! *service* latency (time inside the engine call, excluding queue
+//! wait — deep prefetch queues must not look like a sick device) and
+//! outcome are recorded from the worker, feeding the EWMA/p99 and the
+//! quarantine state machine the governors read.
+//!
+//! With a per-op deadline configured ([`AsyncEngine::with_deadline`]),
+//! owned-buffer reads become *hedged*: if the primary submission has
+//! not completed by the time a blocked waiter has given it
+//! [`HealthTracker::hedge_delay`], the waiter records a timeout and
+//! re-submits the same read on the same queue into a fresh buffer —
+//! first completion wins, the loser's result is dropped.  The hedge
+//! clock starts when the caller blocks in [`IoHandle::wait`], so
+//! prefetched handles that are already resolved by wait time never
+//! hedge.  Lease-backed reads are *not* hedged (two submissions
+//! filling one pinned lease concurrently would be a data race); they
+//! still feed the health tracker.
 
 use std::marker::PhantomData;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::pinned::Lease;
 use crate::util::events::{JobId, MAX_JOB_LANES};
 
+use super::health::HealthTracker;
 use super::sched::DwrrQueue;
 use super::NvmeEngine;
 
@@ -103,6 +124,9 @@ struct QueueShared {
 pub struct IoExecutor {
     shared: Arc<QueueShared>,
     workers: Vec<JoinHandle<()>>,
+    /// Device-health view over everything submitted through this pool
+    /// (latency EWMA/p99, error/timeout meters, quarantine machine).
+    health: Arc<HealthTracker>,
 }
 
 impl IoExecutor {
@@ -130,7 +154,13 @@ impl IoExecutor {
                     .expect("spawn pool worker")
             })
             .collect();
-        Self { shared, workers: handles }
+        Self { shared, workers: handles, health: Arc::new(HealthTracker::default()) }
+    }
+
+    /// The device-health tracker fed by every engine call submitted
+    /// through this executor.
+    pub fn health(&self) -> &Arc<HealthTracker> {
+        &self.health
     }
 
     pub fn worker_count(&self) -> usize {
@@ -296,23 +326,71 @@ impl<T> Completion<T> {
     pub fn is_ready(&self) -> bool {
         !matches!(*self.cell.slot.lock().unwrap(), Slot::Pending)
     }
+
+    /// Block until the slot resolves or `dur` elapses; `true` when
+    /// resolved (the value stays in the slot for a later [`Self::wait`]).
+    pub fn wait_ready_for(&self, dur: Duration) -> bool {
+        let deadline = Instant::now() + dur;
+        let mut slot = self.cell.slot.lock().unwrap();
+        while matches!(*slot, Slot::Pending) {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (s, _) = self.cell.cv.wait_timeout(slot, deadline - now).unwrap();
+            slot = s;
+        }
+        true
+    }
+}
+
+/// The hedge arm of an [`IoHandle`]: if the primary submission is
+/// still pending `after` into a blocking wait, the waiter records a
+/// timeout and fires the re-submission.
+struct Hedge {
+    after: Duration,
+    health: Arc<HealthTracker>,
+    fire: Box<dyn FnOnce() + Send>,
 }
 
 /// Handle to one in-flight async I/O; resolves to the operation's
 /// buffer so callers can recycle allocations.
 pub struct IoHandle<T> {
     completion: Completion<anyhow::Result<T>>,
+    hedge: Option<Hedge>,
 }
 
 impl<T> IoHandle<T> {
     /// Create an unresolved handle plus its fulfilling side.
     pub fn pair() -> (Completer<anyhow::Result<T>>, IoHandle<T>) {
         let (completer, completion) = completion_pair();
-        (completer, IoHandle { completion })
+        (completer, IoHandle { completion, hedge: None })
     }
 
-    /// Block until the request completes.
-    pub fn wait(self) -> anyhow::Result<T> {
+    /// Arm this handle to hedge: a blocking [`Self::wait`] that is
+    /// still pending `after` in fires `fire` (once) and keeps waiting
+    /// for whichever submission completes first.
+    fn with_hedge(
+        mut self,
+        after: Duration,
+        health: Arc<HealthTracker>,
+        fire: Box<dyn FnOnce() + Send>,
+    ) -> Self {
+        self.hedge = Some(Hedge { after, health, fire });
+        self
+    }
+
+    /// Block until the request completes.  On a hedged handle, a
+    /// primary submission outliving its hedge delay is recorded as a
+    /// timeout and raced against a re-submission (first wins).
+    pub fn wait(mut self) -> anyhow::Result<T> {
+        if let Some(h) = self.hedge.take() {
+            if !self.completion.wait_ready_for(h.after) {
+                h.health.record_timeout();
+                h.health.record_hedge();
+                (h.fire)();
+            }
+        }
         self.completion.wait()?
     }
 
@@ -434,22 +512,38 @@ pub struct AsyncEngine {
     inner: Arc<dyn NvmeEngine>,
     exec: Arc<IoExecutor>,
     job: JobId,
+    /// Per-op deadline; `Some` arms hedged reads (see module docs).
+    deadline: Option<Duration>,
 }
 
 impl AsyncEngine {
     pub fn new(inner: Arc<dyn NvmeEngine>, workers: usize) -> Self {
-        Self { inner, exec: Arc::new(IoExecutor::new(workers)), job: JobId::HOST }
+        Self {
+            inner,
+            exec: Arc::new(IoExecutor::new(workers)),
+            job: JobId::HOST,
+            deadline: None,
+        }
     }
 
     /// Share an existing executor (one queue layer per process, not
     /// one per call site).
     pub fn with_executor(inner: Arc<dyn NvmeEngine>, exec: Arc<IoExecutor>) -> Self {
-        Self { inner, exec, job: JobId::HOST }
+        Self { inner, exec, job: JobId::HOST, deadline: None }
     }
 
     /// Tag every submission from this handle with `job`'s lane.
     pub fn for_job(mut self, job: JobId) -> Self {
         self.job = job;
+        self
+    }
+
+    /// Arm per-op deadlines: owned-buffer reads whose primary
+    /// submission stalls past [`HealthTracker::hedge_delay`] of
+    /// `deadline` are hedged with a re-submission on the same queue
+    /// (first completion wins).  `None` disables hedging (default).
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> Self {
+        self.deadline = deadline;
         self
     }
 
@@ -465,35 +559,108 @@ impl AsyncEngine {
         &self.exec
     }
 
-    /// Async read of `key` into `buf` (must match the stored length);
-    /// the filled buffer comes back through the handle.
-    pub fn submit_read(&self, key: String, mut buf: Vec<u8>) -> IoHandle<Vec<u8>> {
+    /// Submit an owned-buffer read with optional hedging.  `primary`
+    /// consumes the caller's buffer; `backup` must produce the same
+    /// bytes into a fresh buffer and is submitted only if the primary
+    /// outlives the hedge delay of a blocking wait.  First completion
+    /// wins the shared completer; the loser's result is dropped.
+    fn submit_hedged<T, P, B>(&self, cost: u64, primary: P, backup: B) -> IoHandle<T>
+    where
+        T: Send + 'static,
+        P: FnOnce() -> anyhow::Result<T> + Send + 'static,
+        B: FnOnce() -> anyhow::Result<T> + Send + 'static,
+    {
         let (completer, handle) = IoHandle::pair();
+        let health = Arc::clone(self.exec.health());
+        let Some(deadline) = self.deadline else {
+            // unhedged: the completer rides the closure directly, so a
+            // panicking engine still surfaces as Abandoned at the handle
+            self.exec.submit_for(self.job, cost, move || {
+                let t0 = Instant::now();
+                let res = primary();
+                health.record(t0.elapsed(), res.is_ok());
+                completer.complete(res);
+            });
+            return handle;
+        };
+        // hedged: both submissions share one take-once completer slot.
+        // Panics are converted to errors here (instead of riding the
+        // worker's catch_unwind into an Abandoned slot) because the
+        // completer must survive in the shared slot for whichever arm
+        // finishes first.
+        let slot = Arc::new(Mutex::new(Some(completer)));
+        let after = health.hedge_delay(deadline);
+        let fire = {
+            let slot = Arc::clone(&slot);
+            let health = Arc::clone(&health);
+            let exec = Arc::clone(&self.exec);
+            let job = self.job;
+            Box::new(move || {
+                exec.submit_for(job, cost, move || {
+                    let t0 = Instant::now();
+                    let res = run_caught(backup);
+                    health.record(t0.elapsed(), res.is_ok());
+                    if let Some(c) = slot.lock().unwrap().take() {
+                        c.complete(res);
+                    }
+                });
+            })
+        };
+        {
+            let slot = Arc::clone(&slot);
+            let health = Arc::clone(&health);
+            self.exec.submit_for(self.job, cost, move || {
+                let t0 = Instant::now();
+                let res = run_caught(primary);
+                health.record(t0.elapsed(), res.is_ok());
+                if let Some(c) = slot.lock().unwrap().take() {
+                    c.complete(res);
+                }
+            });
+        }
+        handle.with_hedge(after, health, fire)
+    }
+
+    /// Async read of `key` into `buf` (must match the stored length);
+    /// the filled buffer comes back through the handle.  Hedged under
+    /// a deadline ([`Self::with_deadline`]).
+    pub fn submit_read(&self, key: String, mut buf: Vec<u8>) -> IoHandle<Vec<u8>> {
         let eng = Arc::clone(&self.inner);
-        self.exec.submit_for(self.job, buf.len() as u64, move || {
-            let res = eng.read(&key, &mut buf);
-            completer.complete(res.map(move |()| buf));
-        });
-        handle
+        let eng2 = Arc::clone(&self.inner);
+        let key2 = key.clone();
+        let len = buf.len();
+        self.submit_hedged(
+            len as u64,
+            move || eng.read(&key, &mut buf).map(move |()| buf),
+            move || {
+                let mut b = vec![0u8; len];
+                eng2.read(&key2, &mut b).map(move |()| b)
+            },
+        )
     }
 
     /// Async ranged read: fill `buf` from byte `offset` of `key`'s
     /// value.  The owned-buffer twin of [`Self::submit_read_at_lease`]
     /// for callers staging outside the pinned arena (budget-degraded
-    /// fetches, scratch reads).
+    /// fetches, scratch reads).  Hedged under a deadline.
     pub fn submit_read_at(
         &self,
         key: String,
         offset: usize,
         mut buf: Vec<u8>,
     ) -> IoHandle<Vec<u8>> {
-        let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
-        self.exec.submit_for(self.job, buf.len() as u64, move || {
-            let res = eng.read_at(&key, offset, &mut buf);
-            completer.complete(res.map(move |()| buf));
-        });
-        handle
+        let eng2 = Arc::clone(&self.inner);
+        let key2 = key.clone();
+        let len = buf.len();
+        self.submit_hedged(
+            len as u64,
+            move || eng.read_at(&key, offset, &mut buf).map(move |()| buf),
+            move || {
+                let mut b = vec![0u8; len];
+                eng2.read_at(&key2, offset, &mut b).map(move |()| b)
+            },
+        )
     }
 
     /// Async write of `data` under `key`; the buffer comes back for
@@ -501,31 +668,47 @@ impl AsyncEngine {
     pub fn submit_write(&self, key: String, data: Vec<u8>) -> IoHandle<Vec<u8>> {
         let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
+        let health = Arc::clone(self.exec.health());
         self.exec.submit_for(self.job, data.len() as u64, move || {
+            let t0 = Instant::now();
             let res = eng.write(&key, &data);
+            health.record(t0.elapsed(), res.is_ok());
             completer.complete(res.map(move |()| data));
         });
         handle
     }
 
     /// [`Self::submit_read`] for f32 tensors (no copy: the engine
-    /// reads straight into the vector's bytes).
+    /// reads straight into the vector's bytes).  Hedged under a
+    /// deadline.
     pub fn submit_read_f32(&self, key: String, mut buf: Vec<f32>) -> IoHandle<Vec<f32>> {
-        let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
-        self.exec.submit_for(self.job, (buf.len() * 4) as u64, move || {
-            let res = eng.read(&key, crate::dtype::f32s_as_bytes_mut(&mut buf));
-            completer.complete(res.map(move |()| buf));
-        });
-        handle
+        let eng2 = Arc::clone(&self.inner);
+        let key2 = key.clone();
+        let len = buf.len();
+        self.submit_hedged(
+            (len * 4) as u64,
+            move || {
+                eng.read(&key, crate::dtype::f32s_as_bytes_mut(&mut buf))
+                    .map(move |()| buf)
+            },
+            move || {
+                let mut b = vec![0f32; len];
+                eng2.read(&key2, crate::dtype::f32s_as_bytes_mut(&mut b))
+                    .map(move |()| b)
+            },
+        )
     }
 
     /// [`Self::submit_write`] for f32 tensors.
     pub fn submit_write_f32(&self, key: String, data: Vec<f32>) -> IoHandle<Vec<f32>> {
         let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
+        let health = Arc::clone(self.exec.health());
         self.exec.submit_for(self.job, (data.len() * 4) as u64, move || {
+            let t0 = Instant::now();
             let res = eng.write(&key, crate::dtype::f32s_as_bytes(&data));
+            health.record(t0.elapsed(), res.is_ok());
             completer.complete(res.map(move |()| data));
         });
         handle
@@ -534,6 +717,8 @@ impl AsyncEngine {
     /// Async ranged read of one tile: fill the pinned lease from byte
     /// `offset` of `key`'s value.  The lease comes back through the
     /// handle; dropped handles drop the lease, releasing its extent.
+    /// Never hedged — two submissions filling one lease would race —
+    /// but still health-recorded.
     pub fn submit_read_at_lease(
         &self,
         key: String,
@@ -542,9 +727,12 @@ impl AsyncEngine {
     ) -> IoHandle<Lease> {
         let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
+        let health = Arc::clone(self.exec.health());
         let cost = buf.as_slice().len() as u64;
         self.exec.submit_for(self.job, cost, move || {
+            let t0 = Instant::now();
             let res = eng.read_at(&key, offset, buf.as_mut_slice());
+            health.record(t0.elapsed(), res.is_ok());
             completer.complete(res.map(move |()| buf));
         });
         handle
@@ -567,7 +755,9 @@ impl AsyncEngine {
     ) -> IoHandle<Arc<Lease>> {
         let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
+        let health = Arc::clone(self.exec.health());
         self.exec.submit_for(self.job, len as u64, move || {
+            let t0 = Instant::now();
             let res = if src_off + len <= buf.as_slice().len() {
                 eng.write_at(&key, offset, &buf.as_slice()[src_off..src_off + len])
             } else {
@@ -576,6 +766,7 @@ impl AsyncEngine {
                     buf.as_slice().len()
                 ))
             };
+            health.record(t0.elapsed(), res.is_ok());
             completer.complete(res.map(move |()| buf));
         });
         handle
@@ -591,12 +782,25 @@ impl AsyncEngine {
     ) -> IoHandle<Lease> {
         let (completer, handle) = IoHandle::pair();
         let eng = Arc::clone(&self.inner);
+        let health = Arc::clone(self.exec.health());
         let cost = buf.as_slice().len() as u64;
         self.exec.submit_for(self.job, cost, move || {
+            let t0 = Instant::now();
             let res = eng.write_at(&key, offset, buf.as_slice());
+            health.record(t0.elapsed(), res.is_ok());
             completer.complete(res.map(move |()| buf));
         });
         handle
+    }
+}
+
+/// Run `op`, converting a panic into an `Err` (hedged arms keep the
+/// shared completer alive, so the Abandoned-on-unwind path cannot be
+/// relied on there).
+fn run_caught<T>(op: impl FnOnce() -> anyhow::Result<T>) -> anyhow::Result<T> {
+    match std::panic::catch_unwind(AssertUnwindSafe(op)) {
+        Ok(res) => res,
+        Err(_) => Err(anyhow::anyhow!("i/o job panicked")),
     }
 }
 
@@ -928,6 +1132,101 @@ mod tests {
         let aio = AsyncEngine::new(inner, 2);
         let h = aio.submit_read("missing".into(), vec![0u8; 16]);
         assert!(h.wait().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Decorator that stalls the first `stalls` reads for `stall` each
+    /// (a straggler device), passing everything else straight through.
+    struct StallReads {
+        inner: Arc<dyn NvmeEngine>,
+        stalls: AtomicU64,
+        stall: Duration,
+    }
+
+    impl NvmeEngine for StallReads {
+        fn write(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
+            self.inner.write(key, data)
+        }
+        fn read(&self, key: &str, out: &mut [u8]) -> anyhow::Result<()> {
+            let stall_this = self
+                .stalls
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    v.checked_sub(1)
+                })
+                .is_ok();
+            if stall_this {
+                std::thread::sleep(self.stall);
+            }
+            self.inner.read(key, out)
+        }
+        fn write_at(&self, key: &str, offset: usize, data: &[u8]) -> anyhow::Result<()> {
+            self.inner.write_at(key, offset, data)
+        }
+        fn len_of(&self, key: &str) -> Option<usize> {
+            self.inner.len_of(key)
+        }
+        fn stats(&self) -> crate::ssd::IoSnapshot {
+            self.inner.stats()
+        }
+        fn label(&self) -> &'static str {
+            self.inner.label()
+        }
+    }
+
+    #[test]
+    fn stalled_primary_read_is_hedged_and_first_completion_wins() {
+        let dir = std::env::temp_dir().join(format!("ma-hedge-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base: Arc<dyn NvmeEngine> =
+            Arc::new(DirectEngine::new(&dir, 1, 1 << 22, 1).unwrap());
+        let stalled: Arc<dyn NvmeEngine> = Arc::new(StallReads {
+            inner: base,
+            stalls: AtomicU64::new(1),
+            stall: Duration::from_millis(400),
+        });
+        // 2 workers: the hedge must run while the primary is stuck
+        let aio = AsyncEngine::new(stalled, 2)
+            .with_deadline(Some(Duration::from_millis(25)));
+        aio.write("k", &[42u8; 8192]).unwrap();
+        let t0 = Instant::now();
+        let got = aio.submit_read("k".into(), vec![0u8; 8192]).wait().unwrap();
+        let waited = t0.elapsed();
+        assert!(got.iter().all(|&b| b == 42), "hedged read returned wrong bytes");
+        assert!(
+            waited < Duration::from_millis(300),
+            "hedge did not cut the stall: waited {waited:?}"
+        );
+        let health = aio.executor().health();
+        assert_eq!(health.hedges(), 1, "exactly one hedge fired");
+        assert_eq!(health.timeouts(), 1, "the stall was recorded as a timeout");
+        // the stalled primary still completes and is recorded; give it
+        // time so the temp dir is not yanked from under it
+        std::thread::sleep(Duration::from_millis(450));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fast_or_prefetched_reads_never_hedge() {
+        let dir = std::env::temp_dir().join(format!("ma-nohedge-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let inner: Arc<dyn NvmeEngine> =
+            Arc::new(DirectEngine::new(&dir, 1, 1 << 22, 1).unwrap());
+        let aio = AsyncEngine::new(inner, 2)
+            .with_deadline(Some(Duration::from_millis(1)));
+        aio.write("k", &[7u8; 1024]).unwrap();
+        // prefetch shape: the handle resolves long before the wait, so
+        // even a 1 ms deadline must not hedge (the clock starts at wait)
+        let h = aio.submit_read("k".into(), vec![0u8; 1024]);
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(h.is_ready());
+        let got = h.wait().unwrap();
+        assert!(got.iter().all(|&b| b == 7));
+        let health = aio.executor().health();
+        assert_eq!(health.hedges(), 0);
+        assert_eq!(health.timeouts(), 0);
+        assert!(health.ops() >= 2, "writes and reads both feed health");
+        // an error from a hedged submission surfaces as an error
+        assert!(aio.submit_read("missing".into(), vec![0u8; 8]).wait().is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -32,6 +32,7 @@ use std::time::Duration;
 
 use super::faulty::OpKind;
 use super::{IoSnapshot, NvmeEngine};
+use crate::util::events::JobId;
 
 /// Retry budget + backoff schedule.  Delay before attempt `k` (1-based
 /// retries) is `base_delay * 2^(k-1)`, capped at `max_delay`, plus up
@@ -150,6 +151,11 @@ pub struct RetryEngine {
     exhaustions: AtomicU64,
     /// Monotone salt feeding the per-attempt jitter hash.
     salt: AtomicU64,
+    /// Tenant whose lane the retry/exhaustion counters charge in
+    /// [`IoSnapshot::job_retries`] / [`IoSnapshot::job_retry_exhaustions`]
+    /// — per-job views set this so fault absorption attributes to
+    /// tenants the way ops/bytes already do.
+    job: JobId,
 }
 
 impl RetryEngine {
@@ -160,7 +166,14 @@ impl RetryEngine {
             retries: AtomicU64::new(0),
             exhaustions: AtomicU64::new(0),
             salt: AtomicU64::new(0),
+            job: JobId::HOST,
         }
+    }
+
+    /// Attribute this engine's retry counters to `job`'s snapshot lane.
+    pub fn for_job(mut self, job: JobId) -> Self {
+        self.job = job;
+        self
     }
 
     /// Retries performed so far (also folded into
@@ -241,6 +254,8 @@ impl NvmeEngine for RetryEngine {
         let mut s = self.inner.stats();
         s.retries += self.retries();
         s.retry_exhaustions += self.exhaustions();
+        s.job_retries[self.job.lane()] += self.retries();
+        s.job_retry_exhaustions[self.job.lane()] += self.exhaustions();
         s
     }
 
@@ -302,6 +317,21 @@ mod tests {
         let mut out = [0u8; 64];
         assert!(eng.read("k", &mut out).is_err()); // 5-fail budget continues
         assert_eq!(eng.exhaustions(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retries_attribute_to_the_owning_job_lane() {
+        let (inner, dir) = direct("lane");
+        let faulty = Arc::new(FaultyEngine::transient(inner, 2, OpMask::ALL));
+        let eng =
+            RetryEngine::new(faulty, RetryPolicy::attempts(3)).for_job(JobId(3));
+        eng.write("k", &[9u8; 128]).unwrap();
+        let s = eng.stats();
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.job_retries[JobId(3).lane()], 2);
+        assert_eq!(s.job_retries[JobId::HOST.lane()], 0);
+        assert_eq!(s.job_retry_exhaustions[JobId(3).lane()], 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -204,11 +204,16 @@ pub struct GovernorSample {
     pub arena_reserved: usize,
     /// Arena budget, if one is configured.
     pub arena_budget: Option<usize>,
+    /// The storage device is quarantined
+    /// (`ssd::HealthTracker::is_degraded`): error/timeout rate crossed
+    /// the threshold.  Treated as pressure — depth and prefetch shrink
+    /// against a sick device rather than piling deeper queues onto it.
+    pub device_degraded: bool,
 }
 
 impl GovernorSample {
     fn pressured(&self) -> bool {
-        self.host_copy_bytes > 0 || self.degraded_tiles > 0
+        self.host_copy_bytes > 0 || self.degraded_tiles > 0 || self.device_degraded
     }
 
     fn stall_frac(&self) -> f64 {
@@ -493,6 +498,7 @@ mod tests {
             step_secs: 1.0,
             arena_reserved: 0,
             arena_budget: None,
+            device_degraded: false,
         }
     }
 
@@ -512,6 +518,26 @@ mod tests {
             step_secs: 1.0,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn device_quarantine_counts_as_pressure_and_shrinks_the_pipeline() {
+        let mut gov =
+            PipelineGovernor::new(GovernorConfig::default(), tuning(4 << 20, 2, 6));
+        gov.observe(&GovernorSample {
+            device_degraded: true,
+            step_secs: 1.0,
+            ..Default::default()
+        });
+        let t = gov.tuning();
+        assert!(
+            t.optim_tile_bytes < 4 << 20,
+            "a quarantined device must shrink the pipeline, got {t:?}"
+        );
+        // recovery: calm steps stop the shrinking
+        let shrunk = gov.tuning();
+        gov.observe(&calm());
+        assert_eq!(gov.tuning(), shrunk);
     }
 
     #[test]

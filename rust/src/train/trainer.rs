@@ -163,6 +163,12 @@ pub struct Trainer {
     /// caps overlay this trainer's tuning.  `JobCtx::default()` — the
     /// host identity — for solo runs.
     ctx: JobCtx,
+    /// Round-robin cursor into [`Self::shadow_key_set`] for the
+    /// idle-time scrub walk (`TrainSpec::scrub`): each inter-step gap
+    /// re-reads and re-verifies a couple of streams, so silent rot
+    /// surfaces within one pass over the key set instead of at the
+    /// next (possibly much later) fetch.
+    scrub_cursor: usize,
 }
 
 /// Governor bounds that admit the starting tuning, so enabling the
@@ -326,12 +332,26 @@ impl Trainer {
             fetch_groups,
             profile,
             ctx,
+            scrub_cursor: 0,
         };
         // shadow-page every checkpointed stream: until the first commit
         // flips, registered keys resolve to extent 0 (the bytes
         // init_weights just wrote), so this is a pure pass-through
         trainer.engine.shadow.register(trainer.shadow_key_set());
+        trainer.wire_robustness_sinks();
         Ok(trainer)
+    }
+
+    /// Route the engine's health and integrity diagnostics to this
+    /// trainer's event sink: quarantine transitions from the shared
+    /// executor's [`crate::ssd::HealthTracker`] and checksum-mismatch
+    /// events from the [`crate::ssd::IntegrityEngine`] layer (when
+    /// `TrainSpec::verify_reads` built one).
+    fn wire_robustness_sinks(&self) {
+        self.engine.ioq.health().set_sink(self.ctx.events.clone());
+        if let Some(integrity) = &self.engine.integrity {
+            integrity.set_sink(self.ctx.events.clone());
+        }
     }
 
     /// Reopen a checkpointed run and continue bit-identically from its
@@ -568,7 +588,7 @@ impl Trainer {
         } else {
             None
         };
-        Ok(Self {
+        let trainer = Self {
             rt,
             engine,
             spec,
@@ -592,7 +612,10 @@ impl Trainer {
             fetch_groups,
             profile,
             ctx,
-        })
+            scrub_cursor: 0,
+        };
+        trainer.wire_robustness_sinks();
+        Ok(trainer)
     }
 
     /// The pipeline window knobs the next step will run with (the
@@ -640,6 +663,9 @@ impl Trainer {
         let t_step = Instant::now();
         let io_before = self.engine.nvme.stats();
         let copies_before = self.engine.copy_meter.bytes();
+        let health = Arc::clone(self.engine.ioq.health());
+        let hedges_before = health.hedges();
+        let timeouts_before = health.timeouts();
         let scale = self.scaler.scale();
         let mut loss_sum = 0.0f64;
         let mut io_wait_secs = 0.0f64;
@@ -937,6 +963,13 @@ impl Trainer {
             prefetch_hits,
             prefetch_late,
             prefetch_fallbacks,
+            io_hedges: health.hedges() - hedges_before,
+            io_timeouts: health.timeouts() - timeouts_before,
+            integrity_failures: io_after.integrity_failures - io_before.integrity_failures,
+            // scrub runs between steps ([`Self::run`]), so a step's
+            // delta covers the walk that preceded it
+            scrubbed_bytes: io_after.scrubbed_bytes - io_before.scrubbed_bytes,
+            scrub_failures: io_after.scrub_failures - io_before.scrub_failures,
         };
         self.steps_done = step_idx;
         // close the feedback loop: the governor sees exactly what the
@@ -952,6 +985,7 @@ impl Trainer {
             step_secs: m.step_secs,
             arena_reserved: arena_stats.reserved_bytes,
             arena_budget: self.engine.arena.budget_bytes(),
+            device_degraded: health.is_degraded(),
         };
         if let Some(gov) = &mut self.governor {
             self.tuning = gov.observe(&sample);
@@ -1043,6 +1077,40 @@ impl Trainer {
                 &keys,
             ),
         }
+    }
+
+    /// One idle-time scrub increment (`TrainSpec::scrub`): re-read a
+    /// couple of this trainer's streams through the full stack so the
+    /// integrity layer re-verifies their checksums, advancing a
+    /// round-robin cursor over [`Self::shadow_key_set`].  Reads route
+    /// through the shadow layer (each key's *live* extent) and heal
+    /// transient corruption via the retry layer like any foreground
+    /// fetch; durable rot is counted ([`StepMetrics::scrub_failures`])
+    /// and reported through the integrity layer's event sink rather
+    /// than aborting training — the stream may never be fetched again
+    /// (or may be overwritten first), so the operator decides.
+    fn scrub_tick(&mut self) -> anyhow::Result<()> {
+        const KEYS_PER_TICK: usize = 2;
+        let Some(integrity) = self.engine.integrity.clone() else {
+            return Ok(());
+        };
+        let keys = self.shadow_key_set();
+        if keys.is_empty() {
+            return Ok(());
+        }
+        for _ in 0..KEYS_PER_TICK.min(keys.len()) {
+            let key = &keys[self.scrub_cursor % keys.len()];
+            self.scrub_cursor = (self.scrub_cursor + 1) % keys.len();
+            // a key can be registered but not yet written (e.g. a
+            // stream that only materializes on the first applied step)
+            let Some(len) = self.engine.nvme.len_of(key) else {
+                continue;
+            };
+            let mut buf = vec![0u8; len];
+            let ok = self.engine.nvme.read(key, &mut buf).is_ok();
+            integrity.note_scrub(len as u64, ok);
+        }
+        Ok(())
     }
 
     /// Optimizer-state dtype label as journaled ("f32" | "bf16").
@@ -1220,6 +1288,11 @@ impl Trainer {
                     .checkpoint()
                     .map_err(|e| e.context(format!("checkpoint commit failed after step {idx}")))?;
                 m.journal_epoch = self.last_epoch;
+            }
+            // idle-time integrity scrub between steps; the bytes it
+            // verifies land in the *next* step's scrub deltas
+            if self.train.scrub {
+                self.scrub_tick()?;
             }
             if opts.log_every > 0 && (i + 1) % opts.log_every == 0 {
                 let mut extra = String::new();

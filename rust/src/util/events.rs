@@ -64,6 +64,34 @@ pub enum EventKind {
     /// A registry-managed job changed lifecycle state
     /// (paused/resumed/stopped).
     JobStateChanged { state: &'static str },
+    /// A storage device's bad-op rate (errors + timeouts) crossed the
+    /// quarantine threshold ([`crate::ssd::HealthTracker`]); the fleet
+    /// and pipeline governors shrink depth/prefetch against it until
+    /// [`EventKind::DeviceRecovered`].
+    DeviceDegraded { errors: u64, timeouts: u64 },
+    /// A quarantined device's clean-op cooldown completed; normal
+    /// depth/prefetch resumes.
+    DeviceRecovered,
+    /// A checksummed stream read back with a block whose sum diverged
+    /// from its sidecar ([`crate::ssd::IntegrityError`]); the retry
+    /// layer re-reads, so one event per *detection*, not per abort.
+    IntegrityViolation { key: String, block: usize },
+}
+
+impl EventKind {
+    /// Stable machine-readable name (the `kind` field of the
+    /// [`FileSink`] JSON-lines format).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::ResumeEpochSkipped { .. } => "resume_epoch_skipped",
+            EventKind::ResumeProfileDiverged => "resume_profile_diverged",
+            EventKind::JobFailed => "job_failed",
+            EventKind::JobStateChanged { .. } => "job_state_changed",
+            EventKind::DeviceDegraded { .. } => "device_degraded",
+            EventKind::DeviceRecovered => "device_recovered",
+            EventKind::IntegrityViolation { .. } => "integrity_violation",
+        }
+    }
 }
 
 /// One diagnostic occurrence, attributable to a job.
@@ -112,6 +140,83 @@ impl EventSink for StderrSink {
             EventKind::JobStateChanged { state } => {
                 eprintln!("{who}[jobs] state -> {state}");
             }
+            EventKind::DeviceDegraded { errors, timeouts } => {
+                eprintln!(
+                    "{who}[health] device degraded ({errors} errors, {timeouts} \
+                     timeouts): {} — quarantining until a clean cooldown",
+                    ev.detail
+                );
+            }
+            EventKind::DeviceRecovered => {
+                eprintln!("{who}[health] device recovered: {}", ev.detail);
+            }
+            EventKind::IntegrityViolation { key, block } => {
+                eprintln!(
+                    "{who}[integrity] checksum mismatch on '{key}' block {block} ({})",
+                    ev.detail
+                );
+            }
+        }
+    }
+}
+
+/// JSON-lines sink: one event per line, flushed per event, so chaos
+/// soaks and `multitrain` runs leave a machine-readable stream that
+/// survives a crash mid-run.  Line shape:
+/// `{"job": N, "kind": "...", <kind fields...>, "detail": "..."}`.
+pub struct FileSink {
+    file: Mutex<std::fs::File>,
+}
+
+impl FileSink {
+    /// Create (truncate) the stream at `path`, creating parent
+    /// directories as needed.
+    pub fn create(path: &str) -> anyhow::Result<Arc<Self>> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file = std::fs::File::create(path)?;
+        Ok(Arc::new(Self { file: Mutex::new(file) }))
+    }
+}
+
+impl EventSink for FileSink {
+    fn emit(&self, ev: Event) {
+        use crate::util::json::Json;
+        use std::io::Write;
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("job", Json::from(ev.job.0 as u64)),
+            ("kind", Json::from(ev.kind.name())),
+        ];
+        match &ev.kind {
+            EventKind::ResumeEpochSkipped { epoch } => {
+                fields.push(("epoch", Json::from(*epoch)));
+            }
+            EventKind::JobStateChanged { state } => {
+                fields.push(("state", Json::from(*state)));
+            }
+            EventKind::DeviceDegraded { errors, timeouts } => {
+                fields.push(("errors", Json::from(*errors)));
+                fields.push(("timeouts", Json::from(*timeouts)));
+            }
+            EventKind::IntegrityViolation { key, block } => {
+                fields.push(("key", Json::from(key.clone())));
+                fields.push(("block", Json::from(*block)));
+            }
+            EventKind::ResumeProfileDiverged
+            | EventKind::JobFailed
+            | EventKind::DeviceRecovered => {}
+        }
+        fields.push(("detail", Json::from(ev.detail.clone())));
+        let line = Json::obj(fields).to_string();
+        let mut f = self.file.lock().unwrap();
+        // an event stream that loses lines on crash is useless to the
+        // chaos soaks, so flush per event (events fire on rare paths,
+        // not per step)
+        if writeln!(f, "{line}").is_ok() {
+            let _ = f.flush();
         }
     }
 }
@@ -186,5 +291,35 @@ mod tests {
     #[test]
     fn display_is_compact() {
         assert_eq!(JobId(4).to_string(), "j4");
+    }
+
+    #[test]
+    fn file_sink_writes_one_flushed_json_line_per_event() {
+        use crate::util::json::Json;
+        let path = std::env::temp_dir()
+            .join(format!("ma-events-{}.jsonl", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let sink = FileSink::create(&path).unwrap();
+        sink.emit(Event {
+            job: JobId(2),
+            kind: EventKind::IntegrityViolation { key: "master/w0".into(), block: 3 },
+            detail: "expected 0badc0de".into(),
+        });
+        sink.emit(Event {
+            job: JobId::HOST,
+            kind: EventKind::DeviceDegraded { errors: 5, timeouts: 2 },
+            detail: String::new(),
+        });
+        // flushed per event: readable without dropping the sink
+        let raw = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = raw.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let ev0 = Json::parse(lines[0]).unwrap();
+        assert_eq!(ev0.get("kind").unwrap().as_str(), Some("integrity_violation"));
+        assert_eq!(ev0.get("key").unwrap().as_str(), Some("master/w0"));
+        let ev1 = Json::parse(lines[1]).unwrap();
+        assert_eq!(ev1.get("kind").unwrap().as_str(), Some("device_degraded"));
+        drop(sink);
+        std::fs::remove_file(&path).ok();
     }
 }

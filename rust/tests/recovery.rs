@@ -9,7 +9,11 @@
 //!   retry layer are invisible to training state — a faulty run
 //!   finishes bit-identical to a fault-free run, with every absorbed
 //!   retry metered in `IoSnapshot::retries`.  The seeded variant reads
-//!   `MEMASCEND_CHAOS_SEED` so CI can soak a matrix of fault patterns;
+//!   `MEMASCEND_CHAOS_SEED` so CI can soak a matrix of fault patterns,
+//!   and `MEMASCEND_CHAOS_MODE` selects the injection shape: `bit-flip`
+//!   (read-side corruption the integrity layer must detect and the
+//!   retry layer heal; durable write-side rot must abort typed) or
+//!   `latency-spike` (seeded stalls that must never change a byte);
 //! - **clean abort**: persistent faults exhaust the retry budget and
 //!   surface the typed `RetryExhausted` error (no deadlock, no hang),
 //!   and a commit that failed mid-flush leaves the previously
@@ -33,8 +37,8 @@ use memascend::pinned::{
     AlignedAllocator, ArenaConfig, MemoryTracker, Mode, PinnedArena,
 };
 use memascend::ssd::{
-    AsyncEngine, DirectEngine, FaultyEngine, NvmeEngine, OpMask, RetryEngine,
-    RetryPolicy,
+    AsyncEngine, DirectEngine, FaultyEngine, IntegrityEngine, NvmeEngine, OpKind,
+    OpMask, RetryEngine, RetryPolicy,
 };
 use memascend::util::rng::Xoshiro256;
 use memascend::util::stage::StageExecutor;
@@ -324,6 +328,136 @@ fn chaos_soak_seeded_random_faults_finish_bit_identical() {
         let a = group_bytes(eng_a.as_ref(), &format!("g{g}"), n);
         let b = group_bytes(shadow.as_ref(), &format!("g{g}"), n);
         assert_eq!(a, b, "seed {seed}: group g{g} diverged under chaos");
+    }
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
+/// Seeded corruption/straggler chaos soak.  `MEMASCEND_CHAOS_MODE`
+/// selects the injection shape (CI runs a seed × mode matrix):
+///
+/// - `bit-flip` (default): read-side flips under
+///   `Retry(Integrity(Faulty))` are detected by the checksum layer and
+///   healed by a re-read — the run finishes bit-identical with every
+///   detection metered; a durable write-side flip exhausts the retry
+///   budget and aborts with the typed mismatch, never serving corrupt
+///   bytes;
+/// - `latency-spike`: seeded stalls slow ops down but never change a
+///   byte.
+#[test]
+fn chaos_soak_corruption_and_straggler_modes() {
+    let seed: u64 = std::env::var("MEMASCEND_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let mode =
+        std::env::var("MEMASCEND_CHAOS_MODE").unwrap_or_else(|_| "bit-flip".into());
+    let sizes = [1800usize, 700];
+
+    // fault-free reference trajectory
+    let dir_a = tmp(&format!("cmode-clean-{mode}-{seed}"));
+    let eng_a: Arc<dyn NvmeEngine> = direct(&dir_a);
+    let st_a = init_states(eng_a.as_ref(), &sizes);
+    run_steps(eng_a.clone(), &st_a, &sizes, 1..=3).unwrap();
+    flush_groups(eng_a.as_ref(), &st_a, &fp16_keys(&st_a)).unwrap();
+
+    let dir_b = tmp(&format!("cmode-faulty-{mode}-{seed}"));
+    let eng_b: Arc<dyn NvmeEngine> = match mode.as_str() {
+        "bit-flip" => {
+            // ~20% of whole-key reads corrupt one bit in the out buffer
+            // (writes and ranged reads stay clean): every flip is a
+            // transient misread — of stream bytes or of the sidecar
+            // sums the verify path fetches — that the integrity layer
+            // must catch and the retry layer must heal.  Ranged reads
+            // are spared because the sum-maintenance path re-reads
+            // partially-covered edge blocks through this engine; a flip
+            // there would *durably* rot the sidecar, which is the
+            // write-side contract tested separately below.
+            let faulty = Arc::new(
+                FaultyEngine::new(direct(&dir_b), 0, seed)
+                    .with_bit_flips(200, seed)
+                    .with_flip_mask(OpMask::NONE.with(OpKind::Read)),
+            );
+            // a generous budget: at a 20% flip rate a whole-key read
+            // (data + sums fetch) fails ~1 attempt in 3
+            let integrity = Arc::new(IntegrityEngine::new(faulty.clone()));
+            let eng: Arc<dyn NvmeEngine> =
+                Arc::new(RetryEngine::new(integrity, RetryPolicy::attempts(12)));
+            let st_b = init_states(eng.as_ref(), &sizes);
+            run_steps(eng.clone(), &st_b, &sizes, 1..=3).unwrap();
+            flush_groups(eng.as_ref(), &st_b, &fp16_keys(&st_b)).unwrap();
+            let corrupted =
+                faulty.corrupted.load(std::sync::atomic::Ordering::Relaxed);
+            assert!(corrupted > 0, "seed {seed} flipped no bits");
+            let snap = eng.stats();
+            assert!(
+                snap.integrity_failures >= corrupted,
+                "seed {seed}: {} of {corrupted} flips detected — a flip \
+                 slipped past the checksum layer",
+                snap.integrity_failures
+            );
+            assert!(snap.retries >= snap.integrity_failures);
+            assert_eq!(snap.retry_exhaustions, 0, "transient flips must heal");
+            eng
+        }
+        "latency-spike" => {
+            // ~6% of data ops stall 2ms (+ seeded jitter): stragglers
+            // slow the pipeline but must never change a byte
+            let faulty = Arc::new(FaultyEngine::new(direct(&dir_b), 0, seed).with_latency(
+                64,
+                std::time::Duration::from_millis(2),
+                std::time::Duration::from_millis(1),
+                seed,
+            ));
+            let eng: Arc<dyn NvmeEngine> = faulty.clone();
+            let st_b = init_states(eng.as_ref(), &sizes);
+            run_steps(eng.clone(), &st_b, &sizes, 1..=3).unwrap();
+            flush_groups(eng.as_ref(), &st_b, &fp16_keys(&st_b)).unwrap();
+            assert!(
+                faulty.delayed.load(std::sync::atomic::Ordering::Relaxed) > 0,
+                "seed {seed} served no latency spikes"
+            );
+            eng
+        }
+        other => panic!("unknown MEMASCEND_CHAOS_MODE '{other}'"),
+    };
+
+    // not one byte of training state diverged under either shape
+    // (bit-flip reads here go back through the verified stack, so
+    // lingering read flips are healed, not compared)
+    for (g, &n) in sizes.iter().enumerate() {
+        let a = group_bytes(eng_a.as_ref(), &format!("g{g}"), n);
+        let b = group_bytes(eng_b.as_ref(), &format!("g{g}"), n);
+        assert_eq!(a, b, "seed {seed} mode {mode}: group g{g} diverged");
+    }
+
+    // durable rot half of the bit-flip contract: a write-side flip rots
+    // the stored bytes; the verified read must refuse them typed after
+    // exhausting the retry budget — training never sees corrupt data
+    if mode == "bit-flip" {
+        let dir_c = tmp(&format!("cmode-rot-{seed}"));
+        let rotter = Arc::new(
+            FaultyEngine::new(direct(&dir_c), 0, seed)
+                .with_bit_flips(1024, seed)
+                .with_flip_mask(OpMask::NONE.with(OpKind::Write)),
+        );
+        let verified: Arc<dyn NvmeEngine> = Arc::new(RetryEngine::new(
+            Arc::new(IntegrityEngine::new(rotter.clone())),
+            RetryPolicy::attempts(3),
+        ));
+        verified.write("rotten", &[0x5Au8; 4096]).unwrap();
+        let mut out = vec![0u8; 4096];
+        let err = verified.read("rotten", &mut out).unwrap_err();
+        assert!(
+            err.to_string().contains("integrity mismatch"),
+            "durable rot must surface the typed mismatch, got: {err}"
+        );
+        assert!(
+            err.to_string().contains("retry exhausted"),
+            "durable rot must exhaust the retry budget, got: {err}"
+        );
+        assert!(verified.stats().retry_exhaustions > 0);
+        std::fs::remove_dir_all(&dir_c).ok();
     }
     std::fs::remove_dir_all(&dir_a).ok();
     std::fs::remove_dir_all(&dir_b).ok();
